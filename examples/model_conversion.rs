@@ -1,0 +1,73 @@
+//! Model conversion walkthrough (paper §4.6 + Figure 4b).
+//!
+//! Trains a spatial model, "converts" it (the conversion is the
+//! identity on parameters — the JPEG formulation consumes spatial
+//! weights directly), then sweeps the ReLU spatial-frequency budget
+//! phi = 1..15 for both ASM and APX, printing the accuracy curves the
+//! paper plots in Figure 4b.
+//!
+//! Run: `cargo run --release --example model_conversion [steps]`
+
+use std::sync::Arc;
+
+use jpegdomain::coordinator::training::{TrainConfig, TrainDomain, Trainer};
+use jpegdomain::data::{Dataset, Split, SynthKind};
+use jpegdomain::jpeg_domain::relu::Method;
+use jpegdomain::jpeg_domain::{encode_tensor, qvec_flat};
+use jpegdomain::runtime::session::accuracy;
+use jpegdomain::runtime::{Engine, Session};
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200);
+    let engine = Arc::new(Engine::new(std::path::Path::new("artifacts"))?);
+    let session = Session::new(engine, "mnist")?;
+    let data = Dataset::synthetic(SynthKind::Mnist, 1200, 400, 42);
+
+    println!("training a spatial model for {steps} steps ...");
+    let cfg = TrainConfig {
+        domain: TrainDomain::Spatial,
+        steps,
+        eval_batches: 8,
+        ..Default::default()
+    };
+    let (state, report) = Trainer::new(&session, &data, cfg).run()?;
+    println!("spatial test accuracy: {:.4}", report.test_accuracy);
+
+    // "conversion": the JPEG network consumes the same ParamSet
+    let params = state.params;
+    let q = qvec_flat();
+    let batch = session.engine.manifest.train_batch;
+    let nb = 8;
+
+    println!("\nphi | ASM acc | APX acc      (paper Figure 4b)");
+    for nf in 1..=15 {
+        let (mut a_asm, mut a_apx) = (0.0f32, 0.0f32);
+        for b in 0..nb {
+            let idx: Vec<usize> = (b * batch..(b + 1) * batch).collect();
+            let (x, y) = data.pixel_batch(&idx, Split::Test);
+            let coeffs = encode_tensor(&x, &q);
+            a_asm += accuracy(
+                &session.forward_jpeg(&params, &coeffs, &q, nf, Method::Asm)?,
+                &y,
+            );
+            a_apx += accuracy(
+                &session.forward_jpeg(&params, &coeffs, &q, nf, Method::Apx)?,
+                &y,
+            );
+        }
+        println!(
+            "{nf:>3} | {:.4}  | {:.4}",
+            a_asm / nb as f32,
+            a_apx / nb as f32
+        );
+    }
+    println!(
+        "\nexact check: phi=15 JPEG accuracy must equal spatial accuracy {:.4}",
+        report.test_accuracy
+    );
+    println!("model_conversion OK");
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Perf probe: per-stage timing of both serving pipelines (release).
+//! Used by the EXPERIMENTS.md §Perf iteration log.
+//!
+//! Run: `cargo run --release --example perf_probe`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use jpegdomain::coordinator::router::{Route, Router};
+use jpegdomain::data::{Dataset, Split, SynthKind};
+use jpegdomain::jpeg_domain::relu::Method;
+use jpegdomain::params::ParamSet;
+use jpegdomain::runtime::{Engine, Session};
+
+fn time_us(iters: usize, mut f: impl FnMut()) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() * 1e6 / iters as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let engine = Arc::new(Engine::new(std::path::Path::new("artifacts"))?);
+    for config in ["mnist", "cifar10"] {
+        let session = Session::new(engine.clone(), config)?;
+        let params = ParamSet::init(&session.cfg, 0);
+        let kind = SynthKind::parse(config).unwrap();
+        let data = Dataset::synthetic(kind, 2, 40, 3);
+        let files = data.jpeg_bytes(Split::Test, 95);
+        let batch = 40;
+
+        // rust-side prepare per route
+        let sp_router = Router::new(Route::Spatial);
+        let jp_router = Router::new(Route::Jpeg);
+        let prep_sp = time_us(5, || {
+            for (b, _) in &files {
+                std::hint::black_box(sp_router.prepare(b).unwrap());
+            }
+        }) / batch as f64;
+        let prep_jp = time_us(5, || {
+            for (b, _) in &files {
+                std::hint::black_box(jp_router.prepare(b).unwrap());
+            }
+        }) / batch as f64;
+
+        // batch forwards (inputs prepared once)
+        let sp_inputs: Vec<_> = files
+            .iter()
+            .map(|(b, _)| sp_router.prepare(b).unwrap().input)
+            .collect();
+        let x = Router::stack(&sp_inputs);
+        let jp_prepared: Vec<_> = files
+            .iter()
+            .map(|(b, _)| jp_router.prepare(b).unwrap())
+            .collect();
+        let qvec = jp_prepared[0].qvec;
+        let coeffs =
+            Router::stack(&jp_prepared.iter().map(|p| p.input.clone()).collect::<Vec<_>>());
+
+        // warm
+        session.forward_spatial(&params, &x)?;
+        session.forward_jpeg_fused(&params, &coeffs, &qvec)?;
+        session.forward_jpeg(&params, &coeffs, &qvec, 15, Method::Asm)?;
+
+        let f_sp = time_us(20, || {
+            std::hint::black_box(session.forward_spatial(&params, &x).unwrap());
+        });
+        let f_fused = time_us(20, || {
+            std::hint::black_box(
+                session.forward_jpeg_fused(&params, &coeffs, &qvec).unwrap(),
+            );
+        });
+        let f_domain = time_us(5, || {
+            std::hint::black_box(
+                session
+                    .forward_jpeg(&params, &coeffs, &qvec, 15, Method::Asm)
+                    .unwrap(),
+            );
+        });
+
+
+        // batch-1 scaling probe: overhead vs compute
+        let x1 = jpegdomain::tensor::Tensor::from_vec(
+            &x.shape().iter().cloned().map(|d| d).collect::<Vec<_>>()[..].to_vec(),
+            x.data().to_vec(),
+        );
+        let _ = x1;
+        let sp1: Vec<_> = sp_inputs[..1].to_vec();
+        let xb1 = Router::stack(&sp1);
+        session.forward_spatial(&params, &xb1)?;
+        let f_sp1 = time_us(20, || {
+            std::hint::black_box(session.forward_spatial(&params, &xb1).unwrap());
+        });
+        println!("forward b1: spatial {f_sp1:.0} us (b40/40 = {:.0} us)", f_sp / 40.0);
+        println!("\n== {config} (batch {batch}) ==");
+        println!("prepare/img:   spatial {prep_sp:.1} us | jpeg {prep_jp:.1} us | delta {:.1} us", prep_sp - prep_jp);
+        println!("forward/batch: spatial {f_sp:.0} us | jpeg-fused {f_fused:.0} us | jpeg-domain {f_domain:.0} us");
+        println!(
+            "end-to-end/img: spatial {:.1} us | jpeg-fused {:.1} us",
+            prep_sp + f_sp / batch as f64,
+            prep_jp + f_fused / batch as f64
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Quickstart: the whole stack in one page.
+//!
+//! 1. load the AOT artifacts (run `make artifacts` once first)
+//! 2. generate a synthetic image, JPEG-encode it with the rust codec
+//! 3. run BOTH pipelines on the same file:
+//!      spatial = full decompression -> pixel network
+//!      jpeg    = entropy decode only -> JPEG-transform-domain network
+//! 4. verify the paper's central claim: identical outputs (phi = 15)
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::sync::Arc;
+
+use jpegdomain::coordinator::router::{Route, Router};
+use jpegdomain::data::{Dataset, Split, SynthKind};
+use jpegdomain::jpeg_domain::relu::Method;
+use jpegdomain::params::ParamSet;
+use jpegdomain::runtime::{Engine, Session};
+
+fn main() -> anyhow::Result<()> {
+    let engine = Arc::new(Engine::new(std::path::Path::new("artifacts"))?);
+    println!("PJRT platform: {}", engine.platform());
+    let session = Session::new(engine, "mnist")?;
+    let params = ParamSet::init(&session.cfg, 0);
+    println!(
+        "model: {} tensors, {} scalars",
+        params.len(),
+        params.num_scalars()
+    );
+
+    // one synthetic glyph, JPEG-encoded by our own codec
+    let data = Dataset::synthetic(SynthKind::Mnist, 1, 1, 7);
+    let (jpeg_bytes, label) = data.jpeg_bytes(Split::Test, 95).remove(0);
+    println!("input: {} JPEG bytes, true label {label}", jpeg_bytes.len());
+
+    // spatial route: pay full decompression
+    let sp = Router::new(Route::Spatial).prepare(&jpeg_bytes)?;
+    let x = Router::stack(&[sp.input]);
+    let logits_spatial = session.forward_spatial(&params, &x)?;
+
+    // jpeg route: stop at the transform domain (paper's contribution)
+    let jp = Router::new(Route::Jpeg).prepare(&jpeg_bytes)?;
+    let coeffs = Router::stack(&[jp.input]);
+    let logits_jpeg = session.forward_jpeg(&params, &coeffs, &jp.qvec, 15, Method::Asm)?;
+
+    let diff = logits_spatial.max_abs_diff(&logits_jpeg);
+    println!("spatial logits: {:?}", &logits_spatial.data()[..4]);
+    println!("jpeg    logits: {:?}", &logits_jpeg.data()[..4]);
+    println!("max |spatial - jpeg| = {diff:.2e}  (paper Table 1: float-error scale)");
+    assert!(diff < 1e-2, "pipelines diverged");
+
+    // the approximate regime: fewer spatial frequencies, ASM vs APX
+    for nf in [2usize, 6, 10] {
+        let asm = session.forward_jpeg(&params, &coeffs, &jp.qvec, nf, Method::Asm)?;
+        let apx = session.forward_jpeg(&params, &coeffs, &jp.qvec, nf, Method::Apx)?;
+        println!(
+            "phi={nf:>2}: |ASM-exact| {:.4}   |APX-exact| {:.4}",
+            asm.max_abs_diff(&logits_spatial),
+            apx.max_abs_diff(&logits_spatial)
+        );
+    }
+    println!("quickstart OK");
+    Ok(())
+}

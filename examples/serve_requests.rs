@@ -1,0 +1,72 @@
+//! Serving demo: batched JPEG classification over both pipelines.
+//!
+//! Starts the coordinator's serving loop (dynamic batcher + router +
+//! PJRT worker), pumps a stream of JPEG files from concurrent client
+//! threads, and prints the latency/throughput metrics — the live
+//! version of the Figure-5 inference comparison.
+//!
+//! Run: `cargo run --release --example serve_requests [n_requests]`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use jpegdomain::coordinator::router::Route;
+use jpegdomain::coordinator::server::{Server, ServerConfig};
+use jpegdomain::coordinator::BatcherConfig;
+use jpegdomain::data::{Dataset, Split, SynthKind};
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400);
+    let data = Dataset::synthetic(SynthKind::Mnist, 2, n, 9);
+    let files = Arc::new(data.jpeg_bytes(Split::Test, 95));
+    println!("serving {n} requests per route, 4 client threads, batch<=40/5ms");
+
+    for route in [Route::Spatial, Route::Jpeg] {
+        let server = Arc::new(Server::start_default(
+            "artifacts".into(),
+            "mnist".into(),
+            None,
+            0,
+            ServerConfig {
+                route,
+                batcher: BatcherConfig {
+                    max_batch: 40,
+                    max_wait: Duration::from_millis(5),
+                },
+                ..Default::default()
+            },
+        ));
+        // concurrent clients
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let server = server.clone();
+                let files = files.clone();
+                std::thread::spawn(move || {
+                    let mut ok = 0usize;
+                    for i in (t..files.len()).step_by(4) {
+                        if server.infer(files[i].0.clone()).is_ok() {
+                            ok += 1;
+                        }
+                    }
+                    ok
+                })
+            })
+            .collect();
+        let mut served = 0;
+        for h in handles {
+            served += h.join().expect("client thread");
+        }
+        let snap = server.metrics.snapshot();
+        println!("\nroute {route:?}: served {served}/{n}");
+        println!("  {snap}");
+        match Arc::try_unwrap(server) {
+            Ok(s) => s.shutdown(),
+            Err(_) => unreachable!("clients joined"),
+        }
+    }
+    println!("\nserve_requests OK");
+    Ok(())
+}

@@ -1,0 +1,294 @@
+"""AOT compiler: lower every L2 entry point to HLO text + manifest.json.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the rust `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/gen_hlo.py.
+
+Interface conventions for the rust runtime (runtime/manifest.rs):
+  * every input/output is a dense array; scalars are shape (1,) f32
+  * labels are int32 (N,)
+  * all graphs are lowered with return_tuple=True -> rust unwraps a tuple
+  * parameter leaves appear in `param_specs` order (sorted by name)
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import jpeg_ops as jo
+from . import model as M
+from . import train as T
+
+FWD_BATCHES = (1, 8, 40)
+TRAIN_BATCH = 40
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # CRITICAL: the default printer elides constants bigger than a few
+    # hundred elements as `{...}`, which the HLO text parser then reads as
+    # zeros/garbage — our graphs embed 64x64 DCT matrices as constants.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # xla_extension 0.5.1's text parser predates source_end_line metadata
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _param_structs(cfg):
+    return [_spec(s.shape) for s in M.param_specs(cfg)]
+
+
+def _io_entry(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _param_io(cfg, prefix="param"):
+    return [_io_entry(f"{prefix}:{s.name}", s.shape)
+            for s in M.param_specs(cfg)]
+
+
+class Builder:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.artifacts = []
+
+    def lower(self, name, kind, cfg, batch, fn, arg_structs, inputs, outputs):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*arg_structs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        self.artifacts.append({
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "kind": kind,
+            "config": cfg.name,
+            "batch": batch,
+            "inputs": inputs,
+            "outputs": outputs,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        })
+        print(f"  lowered {name}: {len(text)/1e6:.2f} MB in {time.time()-t0:.1f}s",
+              flush=True)
+
+
+def build_config(b: Builder, cfg: M.ModelConfig, *, fwd_batches=FWD_BATCHES,
+                 with_exploded: bool = False):
+    c, s = cfg.in_channels, cfg.image_size
+    bh = s // 8
+    nparam = len(M.param_specs(cfg))
+
+    # ---- forward graphs -------------------------------------------------
+    for batch in fwd_batches:
+        def sp_fwd(x, *leaves):
+            params = M.unflatten_params(cfg, leaves)
+            logits, _ = M.spatial_forward(cfg, params, x, training=False)
+            return (logits,)
+
+        b.lower(
+            f"spatial_fwd_{cfg.name}_b{batch}", "spatial_fwd", cfg, batch,
+            sp_fwd, [_spec((batch, c, s, s))] + _param_structs(cfg),
+            [_io_entry("x", (batch, c, s, s))] + _param_io(cfg),
+            [_io_entry("logits", (batch, cfg.num_classes))])
+
+        for method in ("asm", "apx"):
+            if method == "apx" and batch != TRAIN_BATCH:
+                continue
+
+            def jp_fwd(coeffs, qvec, mask, *leaves, _m=method):
+                params = M.unflatten_params(cfg, leaves)
+                logits, _ = M.jpeg_forward(
+                    cfg, params, coeffs, qvec, mask, training=False, method=_m)
+                return (logits,)
+
+            b.lower(
+                f"jpeg_fwd_{method}_{cfg.name}_b{batch}", f"jpeg_fwd_{method}",
+                cfg, batch, jp_fwd,
+                [_spec((batch, c, bh, bh, 64)), _spec((64,)), _spec((64,))]
+                + _param_structs(cfg),
+                [_io_entry("coeffs", (batch, c, bh, bh, 64)),
+                 _io_entry("qvec", (64,)), _io_entry("freq_mask", (64,))]
+                + _param_io(cfg),
+                [_io_entry("logits", (batch, cfg.num_classes))])
+
+    # ---- train graphs ----------------------------------------------------
+    batch = TRAIN_BATCH
+    param_out_io = _param_io(cfg) + [
+        _io_entry(f"vel:{s_.name}", s_.shape) for s_ in M.param_specs(cfg)]
+
+    def sp_train(x, y, lr, *leaves):
+        params = M.unflatten_params(cfg, leaves[:nparam])
+        vel = M.unflatten_params(cfg, leaves[nparam:])
+        loss, p2, v2 = T.spatial_train_step(cfg, params, vel, x, y, lr[0])
+        return tuple([loss.reshape(1)] + M.flatten_params(cfg, p2)
+                     + M.flatten_params(cfg, v2))
+
+    b.lower(
+        f"spatial_train_{cfg.name}_b{batch}", "spatial_train", cfg, batch,
+        sp_train,
+        [_spec((batch, c, s, s)), _spec((batch,), jnp.int32), _spec((1,))]
+        + _param_structs(cfg) * 2,
+        [_io_entry("x", (batch, c, s, s)), _io_entry("y", (batch,), "i32"),
+         _io_entry("lr", (1,))] + _param_io(cfg)
+        + [_io_entry(f"vel:{s_.name}", s_.shape) for s_ in M.param_specs(cfg)],
+        [_io_entry("loss", (1,))] + param_out_io)
+
+    for method in ("asm", "apx"):
+        def jp_train(coeffs, qvec, mask, y, lr, *leaves, _m=method):
+            params = M.unflatten_params(cfg, leaves[:nparam])
+            vel = M.unflatten_params(cfg, leaves[nparam:])
+            loss, p2, v2 = T.jpeg_train_step(
+                cfg, params, vel, coeffs, qvec, mask, y, lr[0], method=_m)
+            return tuple([loss.reshape(1)] + M.flatten_params(cfg, p2)
+                         + M.flatten_params(cfg, v2))
+
+        b.lower(
+            f"jpeg_train_{method}_{cfg.name}_b{batch}", f"jpeg_train_{method}",
+            cfg, batch, jp_train,
+            [_spec((batch, c, bh, bh, 64)), _spec((64,)), _spec((64,)),
+             _spec((batch,), jnp.int32), _spec((1,))] + _param_structs(cfg) * 2,
+            [_io_entry("coeffs", (batch, c, bh, bh, 64)),
+             _io_entry("qvec", (64,)), _io_entry("freq_mask", (64,)),
+             _io_entry("y", (batch,), "i32"), _io_entry("lr", (1,))]
+            + _param_io(cfg)
+            + [_io_entry(f"vel:{s_.name}", s_.shape) for s_ in M.param_specs(cfg)],
+            [_io_entry("loss", (1,))] + param_out_io)
+
+    # ---- fused inference fast path (paper's precompute, fixed point) -----
+    for batch in fwd_batches:
+
+        def jp_fused(coeffs, qvec, *leaves):
+            params = M.unflatten_params(cfg, leaves)
+            return (M.jpeg_forward_fused(cfg, params, coeffs, qvec),)
+
+        b.lower(
+            f"jpeg_fwd_fused_{cfg.name}_b{batch}", "jpeg_fwd_fused", cfg,
+            batch, jp_fused,
+            [_spec((batch, c, bh, bh, 64)), _spec((64,))] + _param_structs(cfg),
+            [_io_entry("coeffs", (batch, c, bh, bh, 64)),
+             _io_entry("qvec", (64,))] + _param_io(cfg),
+            [_io_entry("logits", (batch, cfg.num_classes))])
+
+    # ---- exploded-map precompute + inference (ablation path) -------------
+    # NOTE: jit drops unused arguments from the lowered signature, so
+    # these graphs take exactly the leaves they consume: explode takes
+    # only the conv weights; the exploded forward takes the maps plus
+    # the non-conv (BN + fc) leaves.
+    if with_exploded:
+        conv_names = [n for n, _ in M.CONV_LAYOUT]
+        conv_specs = {s.name: s for s in M.param_specs(cfg) if s.name in conv_names}
+        other_specs = [s for s in M.param_specs(cfg) if s.name not in conv_names]
+        from . import layers as L
+
+        xi_shapes = {}
+        params0 = M.init_params(cfg, 0)
+        q0 = jnp.asarray(jo.QTABLE_FLAT)
+        xis0 = M.explode_all(cfg, params0, q0)
+        for n in conv_names:
+            xi_shapes[n] = tuple(int(d) for d in xis0[n].shape)
+
+        def explode_fn(qvec, *conv_leaves):
+            w = dict(zip(conv_names, conv_leaves))
+            xis = {n: L.explode_conv(w[n], qvec, stride=s)
+                   for n, s in M.CONV_LAYOUT}
+            return tuple(xis[n] for n in conv_names)
+
+        b.lower(
+            f"explode_{cfg.name}", "explode", cfg, 0, explode_fn,
+            [_spec((64,))] + [_spec(conv_specs[n].shape) for n in conv_names],
+            [_io_entry("qvec", (64,))]
+            + [_io_entry(f"param:{n}", conv_specs[n].shape) for n in conv_names],
+            [_io_entry(f"xi:{n}", xi_shapes[n]) for n in conv_names])
+
+        batch = TRAIN_BATCH
+
+        def jp_fwd_x(coeffs, qvec, mask, *leaves):
+            xis = {n: x for n, x in zip(conv_names, leaves[:len(conv_names)])}
+            params = {s.name: leaf for s, leaf
+                      in zip(other_specs, leaves[len(conv_names):])}
+            logits = M.jpeg_forward_exploded(
+                cfg, params, xis, coeffs, qvec, mask, method="asm")
+            return (logits,)
+
+        b.lower(
+            f"jpeg_fwd_exploded_{cfg.name}_b{batch}", "jpeg_fwd_exploded",
+            cfg, batch, jp_fwd_x,
+            [_spec((batch, c, bh, bh, 64)), _spec((64,)), _spec((64,))]
+            + [_spec(xi_shapes[n]) for n in conv_names]
+            + [_spec(s.shape) for s in other_specs],
+            [_io_entry("coeffs", (batch, c, bh, bh, 64)),
+             _io_entry("qvec", (64,)), _io_entry("freq_mask", (64,))]
+            + [_io_entry(f"xi:{n}", xi_shapes[n]) for n in conv_names]
+            + [_io_entry(f"param:{s.name}", s.shape) for s in other_specs],
+            [_io_entry("logits", (batch, cfg.num_classes))])
+
+
+def write_manifest(b: Builder):
+    configs = {}
+    for name, cfg in M.CONFIGS.items():
+        configs[name] = {
+            "in_channels": cfg.in_channels,
+            "num_classes": cfg.num_classes,
+            "widths": list(cfg.widths),
+            "image_size": cfg.image_size,
+            "params": [{
+                "name": s.name, "shape": list(s.shape), "init": s.init,
+                "fan_in": s.fan_in, "trainable": s.trainable,
+            } for s in M.param_specs(cfg)],
+        }
+    manifest = {
+        "version": 1,
+        "configs": configs,
+        "artifacts": b.artifacts,
+        "zigzag": jo.ZIGZAG.tolist(),
+        "band": jo.BAND.tolist(),
+        "qtable_flat": jo.QTABLE_FLAT.tolist(),
+        "annex_k_luma": jo.ANNEX_K_LUMA.tolist(),
+        "annex_k_chroma": jo.ANNEX_K_CHROMA.tolist(),
+        "train_batch": TRAIN_BATCH,
+        "fwd_batches": list(FWD_BATCHES),
+    }
+    path = os.path.join(b.out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {path} ({len(b.artifacts)} artifacts)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="mnist,cifar10,cifar100")
+    ap.add_argument("--exploded-config", default="mnist",
+                    help="config that also gets the exploded-map artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    b = Builder(args.out)
+    for name in args.configs.split(","):
+        cfg = M.CONFIGS[name]
+        print(f"config {name}:", flush=True)
+        build_config(b, cfg, with_exploded=(name == args.exploded_config))
+    write_manifest(b)
+
+
+if __name__ == "__main__":
+    main()

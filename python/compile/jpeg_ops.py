@@ -1,0 +1,183 @@
+"""Multilinear JPEG machinery (paper §3).
+
+Implements the linear maps that make up the JPEG transform J = S∘Z∘D∘B
+(block split, orthonormal 8x8 DCT, zigzag, quantization divide) and their
+inverses, as plain numpy constants + jnp ops.  These constants are folded
+into the Pallas kernels and the lowered HLO artifacts.
+
+Conventions (DESIGN.md §6):
+  * orthonormal 2-D DCT:  Y = A @ x_flat  with A @ A.T = I; Y[(0,0)] = 8*mean
+  * the "JPEG transform domain" value is  y_k = (Z A x)_k / q_k  (after
+    step 4 of the encoder, BEFORE rounding)
+  * coefficient layout: (..., Bh, Bw, 64)  with the 64-axis in zigzag order
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+BLK = 8
+NCOEF = BLK * BLK  # 64
+NUM_BANDS = 2 * BLK - 1  # 15 spatial-frequency bands of an 8x8 DCT
+
+# ---------------------------------------------------------------------------
+# Zigzag (paper eq. 6): ZIGZAG[k] = raster index (8*alpha+beta) of the k-th
+# zigzag-ordered coefficient.
+# ---------------------------------------------------------------------------
+ZIGZAG = np.array([
+    0, 1, 8, 16, 9, 2, 3, 10,
+    17, 24, 32, 25, 18, 11, 4, 5,
+    12, 19, 26, 33, 40, 48, 41, 34,
+    27, 20, 13, 6, 7, 14, 21, 28,
+    35, 42, 49, 56, 57, 50, 43, 36,
+    29, 22, 15, 23, 30, 37, 44, 51,
+    58, 59, 52, 45, 38, 31, 39, 46,
+    53, 60, 61, 54, 47, 55, 62, 63], dtype=np.int64)
+
+#: inverse permutation: UNZIGZAG[raster] = zigzag position
+UNZIGZAG = np.argsort(ZIGZAG)
+
+#: spatial-frequency band (alpha+beta) of each zigzag-ordered coefficient
+BAND = np.array([(z // BLK) + (z % BLK) for z in ZIGZAG], dtype=np.int64)
+
+
+def dct_matrix_1d(n: int = BLK) -> np.ndarray:
+    """Orthonormal 1-D DCT-II matrix D with Y = D @ x,  D @ D.T = I."""
+    k = np.arange(n)[:, None].astype(np.float64)
+    t = np.arange(n)[None, :].astype(np.float64)
+    d = np.cos((2 * t + 1) * k * np.pi / (2 * n))
+    d *= np.sqrt(2.0 / n)
+    d[0, :] = np.sqrt(1.0 / n)
+    return d
+
+
+def dct_matrix_2d() -> np.ndarray:
+    """(64, 64) orthonormal 2-D DCT on flattened 8x8 blocks (paper eq. 5).
+
+    A[(8a+b), (8m+n)] = D[a,m] * D[b,n];  Y_flat = A @ x_flat.
+    """
+    d = dct_matrix_1d()
+    return np.kron(d, d)
+
+
+#: (64,64) zigzag-ordered forward DCT:  y_zz = ZA @ x_flat (paper's Z∘D)
+ZA = dct_matrix_2d()[ZIGZAG, :]
+
+
+def band_mask(num_freqs: int) -> np.ndarray:
+    """0/1 vector over zigzag coefficients keeping the lowest `num_freqs`
+    spatial-frequency bands (paper §4.2: all phi with band(phi) < k).
+
+    num_freqs ranges 1..15; 15 keeps all 64 coefficients (exact ReLU).
+    """
+    if not 1 <= num_freqs <= NUM_BANDS:
+        raise ValueError(f"num_freqs must be in 1..{NUM_BANDS}")
+    return (BAND < num_freqs).astype(np.float32)
+
+
+def dec_matrix(qvec: np.ndarray) -> np.ndarray:
+    """(64,64) row-vector decode map: x_flat = f_zz @ dec  (dequant+unzigzag
+    +IDCT).  dec[k, p] = ZA[k, p] * q_k."""
+    return (ZA * np.asarray(qvec, dtype=np.float64)[:, None]).astype(np.float32)
+
+
+def enc_matrix(qvec: np.ndarray) -> np.ndarray:
+    """(64,64) row-vector encode map: f_zz = x_flat @ enc (DCT+zigzag+quant).
+    enc[p, k] = ZA[k, p] / q_k;  dec @ enc = I."""
+    return (ZA / np.asarray(qvec, dtype=np.float64)[:, None]).T.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Quantization tables (paper eq. 7 / 9)
+# ---------------------------------------------------------------------------
+#: flat table — the paper's "losslessly JPEG compressed" setting
+QTABLE_FLAT = np.ones(NCOEF, dtype=np.float32)
+
+#: Annex K.1 luminance table (raster order)
+ANNEX_K_LUMA = np.array([
+    16, 11, 10, 16, 24, 40, 51, 61,
+    12, 12, 14, 19, 26, 58, 60, 55,
+    14, 13, 16, 24, 40, 57, 69, 56,
+    14, 17, 22, 29, 51, 87, 80, 62,
+    18, 22, 37, 56, 68, 109, 103, 77,
+    24, 35, 55, 64, 81, 104, 113, 92,
+    49, 64, 78, 87, 103, 121, 120, 101,
+    72, 92, 95, 98, 112, 100, 103, 99], dtype=np.float64)
+
+#: Annex K.2 chrominance table (raster order)
+ANNEX_K_CHROMA = np.array([
+    17, 18, 24, 47, 99, 99, 99, 99,
+    18, 21, 26, 66, 99, 99, 99, 99,
+    24, 26, 56, 99, 99, 99, 99, 99,
+    47, 66, 99, 99, 99, 99, 99, 99,
+    99, 99, 99, 99, 99, 99, 99, 99,
+    99, 99, 99, 99, 99, 99, 99, 99,
+    99, 99, 99, 99, 99, 99, 99, 99,
+    99, 99, 99, 99, 99, 99, 99, 99], dtype=np.float64)
+
+
+def quality_scale(base_raster: np.ndarray, quality: int) -> np.ndarray:
+    """libjpeg-style quality scaling; returns a zigzag-ordered f32 table."""
+    if not 1 <= quality <= 100:
+        raise ValueError("quality in 1..100")
+    scale = 5000.0 / quality if quality < 50 else 200.0 - 2.0 * quality
+    q = np.floor((base_raster * scale + 50.0) / 100.0)
+    q = np.clip(q, 1.0, 255.0)
+    return q[ZIGZAG].astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Block split / merge (paper's B tensor, eq. 4) and encode/decode
+# ---------------------------------------------------------------------------
+def blockify(x: jnp.ndarray) -> jnp.ndarray:
+    """(N, C, H, W) -> (N, C, H/8, W/8, 64) flattened raster blocks."""
+    n, c, h, w = x.shape
+    assert h % BLK == 0 and w % BLK == 0, (h, w)
+    x = x.reshape(n, c, h // BLK, BLK, w // BLK, BLK)
+    x = x.transpose(0, 1, 2, 4, 3, 5)
+    return x.reshape(n, c, h // BLK, w // BLK, NCOEF)
+
+
+def unblockify(b: jnp.ndarray) -> jnp.ndarray:
+    """(N, C, Bh, Bw, 64) -> (N, C, 8*Bh, 8*Bw)."""
+    n, c, bh, bw, _ = b.shape
+    x = b.reshape(n, c, bh, bw, BLK, BLK)
+    x = x.transpose(0, 1, 2, 4, 3, 5)
+    return x.reshape(n, c, bh * BLK, bw * BLK)
+
+
+def encode(x: jnp.ndarray, qvec: jnp.ndarray) -> jnp.ndarray:
+    """Image (N,C,H,W) -> JPEG-domain coefficients (N,C,Bh,Bw,64).
+
+    y = (Z A x) / q per block; no rounding (paper's transform domain).
+    """
+    blocks = blockify(x)
+    za = jnp.asarray(ZA, dtype=x.dtype)
+    return (blocks @ za.T) / qvec
+
+
+def decode(coeffs: jnp.ndarray, qvec: jnp.ndarray) -> jnp.ndarray:
+    """JPEG-domain coefficients -> image (exact inverse of `encode`)."""
+    za = jnp.asarray(ZA, dtype=coeffs.dtype)
+    blocks = (coeffs * qvec) @ za
+    return unblockify(blocks)
+
+
+# ---------------------------------------------------------------------------
+# Harmonic mixing tensor (paper eq. 17 / 20), materialized form.
+#
+# H[k', k, p] with p the flat spatial pixel: applying a spatial mask G to a
+# zigzag DCT block F is  F'_{k'} = sum_{k,p} H[k',k,p] F_k G_p.
+# The kernels use the factored (3-matmul) form; this materialization exists
+# for tests and for the paper-faithful einsum ablation.
+# ---------------------------------------------------------------------------
+def harmonic_mixing_tensor(qvec: np.ndarray) -> np.ndarray:
+    """(64, 64, 64) tensor: out_zz[k'] = sum_{k,p} H[k',k,p] f_zz[k] mask[p].
+
+    Includes (de)quantization, i.e. the paper's eq. 20 form.
+    """
+    dec = ZA.T * qvec[None, :]            # x_p = sum_k dec[p,k] f_k
+    enc = ZA / qvec[:, None]              # f'_{k'} = sum_p enc[k',p] x'_p
+    # out[k'] = sum_p enc[k',p] * (sum_k dec[p,k] f_k) * mask[p]
+    return np.einsum("ap,pk->akp", enc, dec).astype(np.float32)

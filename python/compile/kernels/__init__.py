@@ -1,0 +1,19 @@
+"""L1: Pallas kernels for the paper's compute hot spots.
+
+All kernels run under interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls) and carry custom VJPs so the L2 train graphs never rely on
+interpret-mode autodiff.  `ref` holds the pure-jnp oracles.
+"""
+
+from .block_transform import block_transform
+from .asm_relu import asm_relu_blocks, apx_relu_blocks
+from .block_matmul import block_matmul
+from . import ref
+
+__all__ = [
+    "block_transform",
+    "asm_relu_blocks",
+    "apx_relu_blocks",
+    "block_matmul",
+    "ref",
+]

@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: tiled GEMM for the exploded (materialized-Xi) conv.
+
+The exploded JPEG-domain convolution (paper Algorithm 1) becomes, after
+im2col over 3x3 block neighborhoods, one GEMM per layer:
+
+    (M, 9*Cin*64) @ (9*Cin*64, Cout*64)
+
+with M = batch * out-blocks.  On TPU this is the MXU-saturating shape the
+paper approximated with an einsum (DESIGN.md §5).  Tiled over (M, N) with
+the full K dimension resident per step: K is at most 9*32*64 = 18432 so a
+(TILE_M, K) slab is 9 MiB-bounded at TILE_M=128 — we use TILE_M=64 to stay
+≈4.5 MiB and leave VMEM headroom for the (K, TILE_N) operand schedule.
+Executed here with interpret=True (CPU PJRT).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_M = 64
+TILE_N = 64
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] @ b_ref[...]
+
+
+def _pad_to(x: jnp.ndarray, axis: int, tile: int) -> jnp.ndarray:
+    pad = (-x.shape[axis]) % tile
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@jax.custom_vjp
+def block_matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(M, K) @ (K, N) tiled Pallas GEMM (exact)."""
+    return _forward(a, b)
+
+
+def _forward(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    ap = _pad_to(a, 0, TILE_M)
+    bp = _pad_to(b, 1, TILE_N)
+    gm, gn = ap.shape[0] // TILE_M, bp.shape[1] // TILE_N
+    out = pl.pallas_call(
+        _kernel,
+        grid=(gm, gn),
+        in_specs=[
+            pl.BlockSpec((TILE_M, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, TILE_N), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_N), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ap.shape[0], bp.shape[1]), a.dtype),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def _fwd(a, b):
+    return _forward(a, b), (a, b)
+
+
+def _bwd(res, g):
+    a, b = res
+    return g @ b.T, a.T @ g
+
+
+block_matmul.defvjp(_fwd, _bwd)

@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: batched per-block linear map  (M,64) @ (64,64).
+
+This is the encode/decode hot spot: the (de)quantized zigzag DCT folded
+into a single constant matrix, applied to a tile of flattened 8x8 blocks.
+
+TPU mental model (DESIGN.md §5): each grid step streams a (TILE, 64) tile
+HBM->VMEM and issues one (TILE,64)@(64,64) MXU matmul; the 64-wide operand
+is resident in VMEM for the whole grid.  VMEM footprint per step:
+TILE*64*4 * 2 + 64*64*4 bytes = 147 KiB at TILE=256 — far under the 16 MiB
+budget, so the kernel is bandwidth-bound and TILE mainly amortizes grid
+overhead.  Executed here with interpret=True (CPU PJRT).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 256
+
+
+def _kernel(x_ref, m_ref, o_ref):
+    o_ref[...] = x_ref[...] @ m_ref[...]
+
+
+def _pad_rows(x: jnp.ndarray, tile: int) -> tuple[jnp.ndarray, int]:
+    m = x.shape[0]
+    pad = (-m) % tile
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x, m
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def block_transform(x: jnp.ndarray, m: jnp.ndarray) -> jnp.ndarray:
+    """(M, K) @ (K, N) via a tiled Pallas kernel; exact linear map."""
+    return _forward(x, m)
+
+
+def _forward(x: jnp.ndarray, m: jnp.ndarray) -> jnp.ndarray:
+    xp, rows = _pad_rows(x, TILE)
+    k, n = m.shape
+    grid = (xp.shape[0] // TILE,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], n), x.dtype),
+        interpret=True,
+    )(xp, m)
+    return out[:rows]
+
+
+def _fwd(x, m):
+    return _forward(x, m), (x, m)
+
+
+def _bwd(res, g):
+    x, m = res
+    # linear map: dL/dx = g @ m.T, dL/dm = x.T @ g
+    return g @ m.T, x.T @ g
+
+
+block_transform.defvjp(_fwd, _bwd)

@@ -1,0 +1,269 @@
+"""L2 layers: spatial ops and their JPEG-transform-domain duals (paper §4).
+
+Every JPEG-domain op consumes/produces coefficient tensors of layout
+(N, C, Bh, Bw, 64) in zigzag order, divided by the quantization vector
+`qvec` (the paper's transform domain).  Two convolution forms are provided:
+
+  * `jpeg_conv_dcc`     — decompress -> conv -> compress.  Mathematically
+    identical to the exploded map (paper §3.2: "it is not an approximation")
+    and the form XLA fuses best; used in the default fwd/train graphs.
+  * `jpeg_conv_exploded`— the paper's Algorithm-1 materialized map, applied
+    as an im2col-over-blocks GEMM through the Pallas `block_matmul` kernel;
+    used by the precomputed-inference path and the ablation bench.
+
+Padding conventions are fixed so both forms agree exactly (DESIGN.md):
+3x3 stride-1 pads (1,1); 3x3 stride-2 pads (0,1); 1x1 stride-s pads (0,0)
+— all realizable as zero *blocks* in the coefficient grid.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import jpeg_ops as jo
+from .kernels import asm_relu_blocks, apx_relu_blocks, block_matmul, block_transform
+
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.1
+
+
+def _conv_padding(ksize: int, stride: int):
+    if ksize == 1:
+        return ((0, 0), (0, 0))
+    assert ksize == 3, ksize
+    return ((1, 1), (1, 1)) if stride == 1 else ((0, 1), (0, 1))
+
+
+# ===========================================================================
+# Spatial ops (the baseline network the JPEG formulation must match)
+# ===========================================================================
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """NCHW conv, OIHW weights, fixed padding convention above."""
+    ksize = w.shape[-1]
+    return lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding=_conv_padding(ksize, stride),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def batch_norm(x, gamma, beta, rmean, rvar, *, training: bool):
+    """Per-channel BN over (N, H, W).  Returns (y, new_rmean, new_rvar)."""
+    if training:
+        mean = jnp.mean(x, axis=(0, 2, 3))
+        var = jnp.mean(jnp.square(x), axis=(0, 2, 3)) - jnp.square(mean)
+        new_rmean = (1 - BN_MOMENTUM) * rmean + BN_MOMENTUM * mean
+        new_rvar = (1 - BN_MOMENTUM) * rvar + BN_MOMENTUM * var
+    else:
+        mean, var = rmean, rvar
+        new_rmean, new_rvar = rmean, rvar
+    inv = gamma / jnp.sqrt(var + BN_EPS)
+    y = (x - mean[None, :, None, None]) * inv[None, :, None, None]
+    y = y + beta[None, :, None, None]
+    return y, new_rmean, new_rvar
+
+
+def relu(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.maximum(x, 0.0)
+
+
+def global_avg_pool(x: jnp.ndarray) -> jnp.ndarray:
+    """(N, C, H, W) -> (N, C)."""
+    return jnp.mean(x, axis=(2, 3))
+
+
+def linear(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return x @ w + b
+
+
+# ===========================================================================
+# JPEG-domain ops (paper §4.1-4.5)
+# ===========================================================================
+def jpeg_encode_pallas(x: jnp.ndarray, qvec: jnp.ndarray) -> jnp.ndarray:
+    """Image -> JPEG domain through the Pallas block-transform kernel."""
+    n, c, h, w = x.shape
+    blocks = jo.blockify(x).reshape(-1, 64)
+    enc = jnp.asarray(jo.ZA.T, dtype=x.dtype)  # orthonormal part
+    coeffs = block_transform(blocks, enc) / qvec
+    return coeffs.reshape(n, c, h // 8, w // 8, 64)
+
+
+def jpeg_decode_pallas(f: jnp.ndarray, qvec: jnp.ndarray) -> jnp.ndarray:
+    """JPEG domain -> image through the Pallas block-transform kernel."""
+    n, c, bh, bw, _ = f.shape
+    dec = jnp.asarray(jo.ZA, dtype=f.dtype)
+    blocks = block_transform((f * qvec).reshape(-1, 64), dec)
+    return jo.unblockify(blocks.reshape(n, c, bh, bw, 64))
+
+
+def jpeg_conv_dcc(f, w, qvec, *, stride: int = 1):
+    """Decompress-convolve-compress JPEG conv (exact, XLA-fused)."""
+    x = jpeg_decode_pallas(f, qvec)
+    y = conv2d(x, w, stride=stride)
+    return jpeg_encode_pallas(y, qvec)
+
+
+# ---------------------------------------------------------------------------
+# Exploded convolution (paper Algorithm 1), block-local form.
+#
+# Because a 3x3 (or 1x1) conv with our padding convention only reads pixels
+# within one block of the output block's footprint, the full Xi tensor is
+# block-translation-invariant with a 3x3 block neighborhood, and zero pixel
+# padding equals zero *block* padding (a zero DCT block is a zero pixel
+# block).  explode_conv materializes the local map once per layer:
+#     Xi_local : (9 * Cin * 64, Cout * 64)
+# and jpeg_conv_exploded applies it as one GEMM over gathered neighborhoods.
+# ---------------------------------------------------------------------------
+def explode_conv(w: jnp.ndarray, qvec: jnp.ndarray, *, stride: int = 1) -> jnp.ndarray:
+    """Materialize the block-local exploded map for conv weights `w`.
+
+    Returns (9*Cin*64, Cout*64), neighborhood-major then channel then coeff.
+    """
+    cout, cin, kh, kw = w.shape
+    dtype = w.dtype
+    za = jnp.asarray(jo.ZA, dtype=dtype)
+    q = jnp.asarray(qvec, dtype=dtype)
+    dec = za * q[:, None]
+    enc = (za / q[:, None]).T
+
+    # Basis images: for each of the 9 neighborhood offsets and each of the 64
+    # coefficients, the decompressed 24x24 single-channel image.
+    basis = []
+    eye = jnp.eye(64, dtype=dtype)
+    pix = eye @ dec                      # (64 coeff, 64 pixels)
+    pix = pix.reshape(64, 8, 8)
+    for dy in range(3):
+        for dx in range(3):
+            img = jnp.zeros((64, 24, 24), dtype)
+            img = img.at[:, dy * 8:dy * 8 + 8, dx * 8:dx * 8 + 8].set(pix)
+            basis.append(img)
+    basis = jnp.concatenate(basis, axis=0)[:, None]   # (9*64, 1, 24, 24)
+
+    # Convolve each basis image with every (cout, cin) filter plane: VALID
+    # conv so we can window-extract the exact output-block footprint.
+    wk = w.reshape(cout * cin, 1, kh, kw)
+    resp = lax.conv_general_dilated(
+        basis, wk, window_strides=(stride, stride), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    # resp: (9*64, cout*cin, Ho, Wo)
+
+    # Output-block window within the VALID response (DESIGN.md derivation):
+    #   stride 1, k=3: rows 7..15 ;  stride 2 (k=1 or 3): rows 0..8
+    if stride == 1:
+        off = 7 if kh == 3 else 8
+    else:
+        off = 0 if kh == 3 else 0  # stride-2: window starts at 0 for k in {1,3}
+    if stride == 2 and kh == 1:
+        off = 0
+    win = resp[:, :, off:off + 8, off:off + 8]         # (9*64, cout*cin, 8, 8)
+
+    # Compress the 8x8 responses back to coefficients.
+    win = win.reshape(-1, 64) @ enc
+    win = win.reshape(9, 64, cout, cin, 64)
+    # -> (9, cin, 64, cout, 64) -> (9*cin*64, cout*64)
+    xi = win.transpose(0, 3, 1, 2, 4).reshape(9 * cin * 64, cout * 64)
+    return xi
+
+
+def _gather_neighborhoods(f: jnp.ndarray, stride: int) -> jnp.ndarray:
+    """(N,C,Bh,Bw,64) -> (N * Bho * Bwo, 9 * C * 64) 3x3 block neighborhoods.
+
+    stride 1: neighborhood centered on the output block (zero-block ring);
+    stride 2: anchored at input block 2*b (one trailing zero-block ring).
+    """
+    n, c, bh, bw, _ = f.shape
+    if stride == 1:
+        fp = jnp.pad(f, ((0, 0), (0, 0), (1, 1), (1, 1), (0, 0)))
+        bho, bwo = bh, bw
+        anchor = lambda b: b          # padded index of neighborhood origin
+    else:
+        fp = jnp.pad(f, ((0, 0), (0, 0), (0, 2), (0, 2), (0, 0)))
+        bho, bwo = bh // 2, bw // 2
+        anchor = lambda b: 2 * b
+    rows = []
+    for dy in range(3):
+        for dx in range(3):
+            sl = lax.dynamic_slice(
+                fp, (0, 0, dy, dx, 0), (n, c, fp.shape[2] - 2, fp.shape[3] - 2, 64))
+            if stride == 2:
+                sl = sl[:, :, ::2, ::2]
+            else:
+                sl = sl[:, :, :bho, :bwo]
+            rows.append(sl[:, :, :bho, :bwo])
+    nb = jnp.stack(rows, axis=0)       # (9, N, C, Bho, Bwo, 64)
+    nb = nb.transpose(1, 3, 4, 0, 2, 5)  # (N, Bho, Bwo, 9, C, 64)
+    return nb.reshape(n * bho * bwo, 9 * c * 64), (n, bho, bwo)
+
+
+def jpeg_conv_exploded(f, xi, qvec, *, cout: int, stride: int = 1):
+    """Apply a materialized exploded map via the Pallas GEMM kernel."""
+    a, (n, bho, bwo) = _gather_neighborhoods(f, stride)
+    out = block_matmul(a, xi)
+    return out.reshape(n, bho, bwo, cout, 64).transpose(0, 3, 1, 2, 4)
+
+
+# ---------------------------------------------------------------------------
+# ASM / APX ReLU (paper §4.2) over coefficient tensors
+# ---------------------------------------------------------------------------
+def jpeg_relu(f, qvec, freq_mask, *, method: str = "asm"):
+    """ASM (default) or APX ReLU on (N,C,Bh,Bw,64) coefficients."""
+    shape = f.shape
+    dec = jnp.asarray(jo.ZA, dtype=f.dtype) * (qvec[:, None].astype(f.dtype))
+    enc = (jnp.asarray(jo.ZA, dtype=f.dtype) / qvec[:, None].astype(f.dtype)).T
+    flat = f.reshape(-1, 64)
+    if method == "asm":
+        out = asm_relu_blocks(flat, freq_mask, dec, enc)
+    elif method == "apx":
+        out = apx_relu_blocks(flat, freq_mask, dec, enc)
+    else:
+        raise ValueError(method)
+    return out.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Batch normalization (paper §4.3, Algorithm 3) and GAP (paper §4.5)
+# ---------------------------------------------------------------------------
+def jpeg_batch_norm(f, qvec, gamma, beta, rmean, rvar, *, training: bool):
+    """BN on (N,C,Bh,Bw,64) coefficients.
+
+    Mean from the DC coefficient (Y00 = 8*mean for the orthonormal DCT);
+    second moment from the DCT Mean-Variance theorem / Parseval:
+    E[x^2] = E[||Y||^2] / 64 over dequantized blocks.
+    """
+    y = f * qvec                        # dequantized coefficients
+    if training:
+        mean = jnp.mean(y[..., 0], axis=(0, 2, 3)) / 8.0
+        e2 = jnp.mean(jnp.sum(jnp.square(y), axis=-1), axis=(0, 2, 3)) / 64.0
+        var = e2 - jnp.square(mean)
+        new_rmean = (1 - BN_MOMENTUM) * rmean + BN_MOMENTUM * mean
+        new_rvar = (1 - BN_MOMENTUM) * rvar + BN_MOMENTUM * var
+    else:
+        mean, var = rmean, rvar
+        new_rmean, new_rvar = rmean, rvar
+    inv = (gamma / jnp.sqrt(var + BN_EPS))[None, :, None, None]
+    # scale every coefficient; shift only the DC coefficient (paper §4.3)
+    dc_shift = (beta - mean * gamma / jnp.sqrt(var + BN_EPS))[None, :, None, None]
+    y = y * inv[..., None]
+    y = y.at[..., 0].add(dc_shift * 8.0)
+    return y / qvec, new_rmean, new_rvar
+
+
+def jpeg_global_avg_pool(f, qvec):
+    """(N,C,Bh,Bw,64) -> (N,C): channel-wise mean of per-block means.
+
+    For the paper's final 1x1-block feature map this is a single
+    unconditional read of the DC coefficient per channel (Figure 2).
+    """
+    dc = f[..., 0] * qvec[0]            # (N, C, Bh, Bw) dequantized DC
+    return jnp.mean(dc, axis=(2, 3)) / 8.0
+
+
+def jpeg_add(f, g):
+    """Component-wise addition (paper §4.4): linearity of J."""
+    return f + g

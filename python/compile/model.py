@@ -1,0 +1,281 @@
+"""L2 model: the paper's Figure-3 residual classifier, in both domains.
+
+Architecture (paper §5.1): stem conv + three residual blocks, the final two
+downsampling by 2, so a 32x32 input ends as a single 8x8 JPEG block; global
+average pooling then a fully-connected classifier.
+
+Both `spatial_forward` and `jpeg_forward` consume the SAME flat parameter
+dict — model conversion (paper §4.6) is the identity on parameters, exactly
+as in the paper: the convolution explosion consumes spatial filters
+directly and BN parameters carry over unchanged.
+
+Parameters are a flat {name: array} dict; `param_specs` fixes the order
+(sorted names) and init metadata that the rust runtime uses.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    in_channels: int
+    num_classes: int
+    widths: tuple[int, int, int] = (8, 16, 32)
+    image_size: int = 32
+
+
+CONFIGS = {
+    "mnist": ModelConfig("mnist", 1, 10),
+    "cifar10": ModelConfig("cifar10", 3, 10),
+    "cifar100": ModelConfig("cifar100", 3, 100),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter specification
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple[int, ...]
+    init: str          # "he_normal" | "zeros" | "ones"
+    fan_in: int
+    trainable: bool
+
+
+def _conv_spec(name, cout, cin, k):
+    return ParamSpec(name, (cout, cin, k, k), "he_normal", cin * k * k, True)
+
+
+def _bn_specs(prefix, c):
+    return [
+        ParamSpec(f"{prefix}.gamma", (c,), "ones", c, True),
+        ParamSpec(f"{prefix}.beta", (c,), "zeros", c, True),
+        ParamSpec(f"{prefix}.rmean", (c,), "zeros", c, False),
+        ParamSpec(f"{prefix}.rvar", (c,), "ones", c, False),
+    ]
+
+
+def param_specs(cfg: ModelConfig) -> list[ParamSpec]:
+    w1, w2, w3 = cfg.widths
+    specs: list[ParamSpec] = []
+    specs.append(_conv_spec("stem.conv.w", w1, cfg.in_channels, 3))
+    specs += _bn_specs("stem.bn", w1)
+    # block1: w1 -> w1 stride 1, identity shortcut
+    specs.append(_conv_spec("block1.conv1.w", w1, w1, 3))
+    specs += _bn_specs("block1.bn1", w1)
+    specs.append(_conv_spec("block1.conv2.w", w1, w1, 3))
+    specs += _bn_specs("block1.bn2", w1)
+    # block2: w1 -> w2 stride 2, projection shortcut
+    specs.append(_conv_spec("block2.conv1.w", w2, w1, 3))
+    specs += _bn_specs("block2.bn1", w2)
+    specs.append(_conv_spec("block2.conv2.w", w2, w2, 3))
+    specs += _bn_specs("block2.bn2", w2)
+    specs.append(_conv_spec("block2.proj.w", w2, w1, 1))
+    specs += _bn_specs("block2.projbn", w2)
+    # block3: w2 -> w3 stride 2, projection shortcut
+    specs.append(_conv_spec("block3.conv1.w", w3, w2, 3))
+    specs += _bn_specs("block3.bn1", w3)
+    specs.append(_conv_spec("block3.conv2.w", w3, w3, 3))
+    specs += _bn_specs("block3.bn2", w3)
+    specs.append(_conv_spec("block3.proj.w", w3, w2, 1))
+    specs += _bn_specs("block3.projbn", w3)
+    # classifier
+    specs.append(ParamSpec("fc.w", (w3, cfg.num_classes), "he_normal", w3, True))
+    specs.append(ParamSpec("fc.b", (cfg.num_classes,), "zeros", w3, True))
+    return sorted(specs, key=lambda s: s.name)
+
+
+def init_params(cfg: ModelConfig, seed: int) -> dict[str, jnp.ndarray]:
+    rng = np.random.default_rng(seed)
+    params = {}
+    for s in param_specs(cfg):
+        if s.init == "he_normal":
+            std = np.sqrt(2.0 / s.fan_in)
+            params[s.name] = jnp.asarray(
+                rng.normal(0.0, std, s.shape).astype(np.float32))
+        elif s.init == "zeros":
+            params[s.name] = jnp.zeros(s.shape, jnp.float32)
+        elif s.init == "ones":
+            params[s.name] = jnp.ones(s.shape, jnp.float32)
+        else:
+            raise ValueError(s.init)
+    return params
+
+
+def flatten_params(cfg, params):
+    return [params[s.name] for s in param_specs(cfg)]
+
+
+def unflatten_params(cfg, leaves):
+    specs = param_specs(cfg)
+    assert len(specs) == len(leaves)
+    return {s.name: leaf for s, leaf in zip(specs, leaves)}
+
+
+# ---------------------------------------------------------------------------
+# Spatial network
+# ---------------------------------------------------------------------------
+def _sp_bn(p, new, prefix, x, training):
+    y, rm, rv = L.batch_norm(
+        x, p[f"{prefix}.gamma"], p[f"{prefix}.beta"],
+        p[f"{prefix}.rmean"], p[f"{prefix}.rvar"], training=training)
+    new[f"{prefix}.rmean"], new[f"{prefix}.rvar"] = rm, rv
+    return y
+
+
+def _sp_block(p, new, prefix, x, stride, training):
+    y = L.conv2d(x, p[f"{prefix}.conv1.w"], stride=stride)
+    y = _sp_bn(p, new, f"{prefix}.bn1", y, training)
+    y = L.relu(y)
+    y = L.conv2d(y, p[f"{prefix}.conv2.w"], stride=1)
+    y = _sp_bn(p, new, f"{prefix}.bn2", y, training)
+    if stride != 1:
+        sc = L.conv2d(x, p[f"{prefix}.proj.w"], stride=stride)
+        sc = _sp_bn(p, new, f"{prefix}.projbn", sc, training)
+    else:
+        sc = x
+    return L.relu(y + sc)
+
+
+def spatial_forward(cfg: ModelConfig, params, x, *, training: bool = False):
+    """(N, C, 32, 32) pixels -> logits.  Returns (logits, updated_params)."""
+    p = dict(params)
+    new = dict(params)
+    y = L.conv2d(x, p["stem.conv.w"], stride=1)
+    y = _sp_bn(p, new, "stem.bn", y, training)
+    y = L.relu(y)
+    y = _sp_block(p, new, "block1", y, 1, training)
+    y = _sp_block(p, new, "block2", y, 2, training)
+    y = _sp_block(p, new, "block3", y, 2, training)
+    g = L.global_avg_pool(y)
+    logits = L.linear(g, p["fc.w"], p["fc.b"])
+    return logits, new
+
+
+# ---------------------------------------------------------------------------
+# JPEG-domain network (paper §4) — same parameters, coefficient activations
+# ---------------------------------------------------------------------------
+def _jp_bn(p, new, prefix, f, qvec, training):
+    y, rm, rv = L.jpeg_batch_norm(
+        f, qvec, p[f"{prefix}.gamma"], p[f"{prefix}.beta"],
+        p[f"{prefix}.rmean"], p[f"{prefix}.rvar"], training=training)
+    new[f"{prefix}.rmean"], new[f"{prefix}.rvar"] = rm, rv
+    return y
+
+
+def _jp_block(p, new, prefix, f, qvec, freq_mask, stride, training, method):
+    y = L.jpeg_conv_dcc(f, p[f"{prefix}.conv1.w"], qvec, stride=stride)
+    y = _jp_bn(p, new, f"{prefix}.bn1", y, qvec, training)
+    y = L.jpeg_relu(y, qvec, freq_mask, method=method)
+    y = L.jpeg_conv_dcc(y, p[f"{prefix}.conv2.w"], qvec, stride=1)
+    y = _jp_bn(p, new, f"{prefix}.bn2", y, qvec, training)
+    if stride != 1:
+        sc = L.jpeg_conv_dcc(f, p[f"{prefix}.proj.w"], qvec, stride=stride)
+        sc = _jp_bn(p, new, f"{prefix}.projbn", sc, qvec, training)
+    else:
+        sc = f
+    return L.jpeg_relu(L.jpeg_add(y, sc), qvec, freq_mask, method=method)
+
+
+def jpeg_forward(cfg: ModelConfig, params, coeffs, qvec, freq_mask, *,
+                 training: bool = False, method: str = "asm"):
+    """(N, C, 4, 4, 64) JPEG-domain coefficients -> logits.
+
+    `qvec` is the (64,) quantization vector the coefficients were divided
+    by; `freq_mask` the (64,) ASM band mask; `method` "asm" or "apx".
+    Returns (logits, updated_params).
+    """
+    p = dict(params)
+    new = dict(params)
+    f = L.jpeg_conv_dcc(coeffs, p["stem.conv.w"], qvec, stride=1)
+    f = _jp_bn(p, new, "stem.bn", f, qvec, training)
+    f = L.jpeg_relu(f, qvec, freq_mask, method=method)
+    f = _jp_block(p, new, "block1", f, qvec, freq_mask, 1, training, method)
+    f = _jp_block(p, new, "block2", f, qvec, freq_mask, 2, training, method)
+    f = _jp_block(p, new, "block3", f, qvec, freq_mask, 2, training, method)
+    g = L.jpeg_global_avg_pool(f, qvec)
+    logits = L.linear(g, p["fc.w"], p["fc.b"])
+    return logits, new
+
+
+# ---------------------------------------------------------------------------
+# Exploded-map inference path (precomputed Xi per conv layer, paper §4.1:
+# "the map can be precomputed to speed up inference")
+# ---------------------------------------------------------------------------
+def jpeg_forward_fused(cfg: ModelConfig, params, coeffs, qvec):
+    """Optimized JPEG-route inference (paper §4.1 "the map can be
+    precomputed to speed up inference", taken to its fixed point).
+
+    For eval the whole JPEG-domain network is the spatial network
+    conjugated by the (exact, linear) JPEG transform; composing the
+    per-layer decode/encode pairs cancels them everywhere except the
+    input, leaving one Pallas block-transform decode fused into the stem.
+    Mathematically identical to `jpeg_forward` at phi = 15; this is the
+    graph the serving fast path uses (DESIGN.md §8 / EXPERIMENTS.md §Perf).
+    The decode here is the plain-XLA GEMM (not the interpret-mode Pallas
+    kernel): interpret lowering wraps the matmul in a while loop that the
+    CPU backend cannot fuse or parallelize — measured 2-3x slower than the
+    bare dot (EXPERIMENTS.md §Perf iteration 2).
+    """
+    from . import jpeg_ops as jo
+    x = jo.decode(coeffs, qvec)
+    logits, _ = spatial_forward(cfg, params, x, training=False)
+    return logits
+
+
+#: (param name, stride) for every convolution in the network
+CONV_LAYOUT = [
+    ("stem.conv.w", 1),
+    ("block1.conv1.w", 1), ("block1.conv2.w", 1),
+    ("block2.conv1.w", 2), ("block2.conv2.w", 1), ("block2.proj.w", 2),
+    ("block3.conv1.w", 2), ("block3.conv2.w", 1), ("block3.proj.w", 2),
+]
+
+
+def explode_all(cfg: ModelConfig, params, qvec):
+    """Materialize every conv's exploded map (the paper's precompute)."""
+    return {name: L.explode_conv(params[name], qvec, stride=s)
+            for name, s in CONV_LAYOUT}
+
+
+def jpeg_forward_exploded(cfg: ModelConfig, params, xis, coeffs, qvec,
+                          freq_mask, *, method: str = "asm"):
+    """Inference with precomputed exploded maps (eval mode only)."""
+    p = dict(params)
+    new = dict(params)
+
+    def conv(f, name, stride):
+        # cout from the map itself so exploded graphs need no conv leaves
+        cout = xis[name].shape[1] // 64
+        return L.jpeg_conv_exploded(f, xis[name], qvec, cout=cout, stride=stride)
+
+    def block(prefix, f, stride):
+        y = conv(f, f"{prefix}.conv1.w", stride)
+        y = _jp_bn(p, new, f"{prefix}.bn1", y, qvec, False)
+        y = L.jpeg_relu(y, qvec, freq_mask, method=method)
+        y = conv(y, f"{prefix}.conv2.w", 1)
+        y = _jp_bn(p, new, f"{prefix}.bn2", y, qvec, False)
+        if stride != 1:
+            sc = conv(f, f"{prefix}.proj.w", stride)
+            sc = _jp_bn(p, new, f"{prefix}.projbn", sc, qvec, False)
+        else:
+            sc = f
+        return L.jpeg_relu(y + sc, qvec, freq_mask, method=method)
+
+    f = conv(coeffs, "stem.conv.w", 1)
+    f = _jp_bn(p, new, "stem.bn", f, qvec, False)
+    f = L.jpeg_relu(f, qvec, freq_mask, method=method)
+    f = block("block1", f, 1)
+    f = block("block2", f, 2)
+    f = block("block3", f, 2)
+    g = L.jpeg_global_avg_pool(f, qvec)
+    return L.linear(g, p["fc.w"], p["fc.b"])

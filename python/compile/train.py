@@ -1,0 +1,74 @@
+"""L2 training: cross-entropy + SGD-momentum steps for both domains.
+
+The train-step entry points are pure functions over flat leaf lists so the
+AOT artifacts have a stable, manifest-described interface:
+
+    spatial_train_step(x, y, lr, *params, *velocity)
+        -> (loss, *params', *velocity')
+    jpeg_train_step(coeffs, qvec, freq_mask, y, lr, *params, *velocity)
+        -> (loss, *params', *velocity')
+
+BN running statistics live inside `params` (non-trainable leaves: updated
+by the forward pass, not by SGD; their velocity slots stay zero).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+MOMENTUM = 0.9
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean CE over the batch; labels int32 (N,)."""
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logz, labels[:, None].astype(jnp.int32), axis=-1)
+    return jnp.mean(nll)
+
+
+def accuracy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+def _sgd_update(cfg, params, new_state, grads, velocity, lr):
+    """SGD+momentum on trainable leaves; BN stats come from new_state."""
+    specs = M.param_specs(cfg)
+    out_p, out_v = {}, {}
+    for s in specs:
+        if s.trainable:
+            v = MOMENTUM * velocity[s.name] - lr * grads[s.name]
+            out_p[s.name] = params[s.name] + v
+            out_v[s.name] = v
+        else:
+            out_p[s.name] = new_state[s.name]
+            out_v[s.name] = velocity[s.name]
+    return out_p, out_v
+
+
+def spatial_train_step(cfg, params, velocity, x, y, lr):
+    """One SGD step of the spatial model.  Returns (loss, params', vel')."""
+
+    def loss_fn(p):
+        logits, new_state = M.spatial_forward(cfg, p, x, training=True)
+        return cross_entropy(logits, y), new_state
+
+    (loss, new_state), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    params2, velocity2 = _sgd_update(cfg, params, new_state, grads, velocity, lr)
+    return loss, params2, velocity2
+
+
+def jpeg_train_step(cfg, params, velocity, coeffs, qvec, freq_mask, y, lr,
+                    *, method: str = "asm"):
+    """One SGD step of the JPEG-domain model (paper §5.4 training path)."""
+
+    def loss_fn(p):
+        logits, new_state = M.jpeg_forward(
+            cfg, p, coeffs, qvec, freq_mask, training=True, method=method)
+        return cross_entropy(logits, y), new_state
+
+    (loss, new_state), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    params2, velocity2 = _sgd_update(cfg, params, new_state, grads, velocity, lr)
+    return loss, params2, velocity2

@@ -1,0 +1,98 @@
+"""AOT pipeline tests: manifest consistency and HLO-text loadability."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model as M, jpeg_ops as jo
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first")
+
+
+def load_manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+@needs_artifacts
+class TestManifest:
+    def test_all_files_exist(self):
+        m = load_manifest()
+        for a in m["artifacts"]:
+            assert os.path.exists(os.path.join(ART, a["file"])), a["name"]
+
+    def test_configs_match_model(self):
+        m = load_manifest()
+        for name, cfg in M.CONFIGS.items():
+            mc = m["configs"][name]
+            assert mc["in_channels"] == cfg.in_channels
+            assert mc["num_classes"] == cfg.num_classes
+            specs = M.param_specs(cfg)
+            assert [p["name"] for p in mc["params"]] == [s.name for s in specs]
+            assert [tuple(p["shape"]) for p in mc["params"]] == \
+                   [s.shape for s in specs]
+
+    def test_expected_artifact_kinds(self):
+        m = load_manifest()
+        kinds = {a["kind"] for a in m["artifacts"]}
+        for k in ("spatial_fwd", "jpeg_fwd_asm", "jpeg_fwd_apx",
+                  "spatial_train", "jpeg_train_asm", "jpeg_train_apx",
+                  "explode", "jpeg_fwd_exploded"):
+            assert k in kinds, k
+
+    def test_input_leaf_counts(self):
+        m = load_manifest()
+        for a in m["artifacts"]:
+            nparam = len(m["configs"][a["config"]]["params"])
+            if a["kind"] == "spatial_fwd":
+                assert len(a["inputs"]) == 1 + nparam
+            elif a["kind"].startswith("jpeg_fwd_a"):
+                assert len(a["inputs"]) == 3 + nparam
+            elif a["kind"].endswith("train") or "train" in a["kind"]:
+                assert len(a["inputs"]) in (3 + 2 * nparam, 5 + 2 * nparam)
+
+    def test_constants_match(self):
+        m = load_manifest()
+        assert m["zigzag"] == jo.ZIGZAG.tolist()
+        assert m["band"] == jo.BAND.tolist()
+        np.testing.assert_allclose(m["qtable_flat"], jo.QTABLE_FLAT)
+
+    def test_sha256_recorded(self):
+        m = load_manifest()
+        assert all(len(a["sha256"]) == 64 for a in m["artifacts"])
+
+
+@needs_artifacts
+class TestHloText:
+    def test_entry_computation_present(self):
+        m = load_manifest()
+        a = m["artifacts"][0]
+        with open(os.path.join(ART, a["file"])) as f:
+            text = f.read()
+        assert "ENTRY" in text and "HloModule" in text
+
+    def test_hlo_text_parameter_count(self):
+        """Parameter list in the HLO must match the manifest inputs."""
+        m = load_manifest()
+        for a in m["artifacts"][:6]:
+            with open(os.path.join(ART, a["file"])) as f:
+                text = f.read()
+            entry = text.split("ENTRY")[-1]
+            nparams = entry.count("parameter(")
+            assert nparams == len(a["inputs"]), a["name"]
+
+
+class TestToHloText:
+    def test_small_function_roundtrips(self):
+        import jax
+        import jax.numpy as jnp
+        lowered = jax.jit(lambda x: (x * 2,)).lower(
+            jax.ShapeDtypeStruct((4,), jnp.float32))
+        text = aot.to_hlo_text(lowered)
+        assert "HloModule" in text

@@ -1,0 +1,112 @@
+"""Paper §4.3: JPEG-domain batch normalization and its two theorems."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import jpeg_ops as jo, layers as L
+
+QFLAT = jnp.asarray(jo.QTABLE_FLAT)
+
+
+def rand(seed, n=6, c=3, h=16, w=16):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, c, h, w)).astype(np.float32))
+
+
+class TestMeanVarianceTheorem:
+    def test_theorem2(self):
+        """Var[X] = E[Y^2] for zero-mean X (orthonormal DCT)."""
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=64)
+        x -= x.mean()
+        y = jo.dct_matrix_2d() @ x
+        assert abs(np.mean(y ** 2) - np.var(x)) < 1e-9
+
+    def test_second_moment_via_parseval(self):
+        """E[x^2] over a block = ||Y||^2 / 64 (the BN formulation)."""
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=64)
+        y = jo.dct_matrix_2d() @ x
+        assert abs(np.mean(x ** 2) - np.sum(y ** 2) / 64) < 1e-9
+
+
+class TestJpegBatchNorm:
+    @pytest.mark.parametrize("training", [True, False])
+    def test_matches_spatial(self, training):
+        x = rand(2)
+        c = jo.encode(x, QFLAT)
+        g = jnp.asarray(np.random.default_rng(3).uniform(0.5, 2, 3).astype(np.float32))
+        b = jnp.asarray(np.random.default_rng(4).normal(size=3).astype(np.float32))
+        rm = jnp.asarray(np.random.default_rng(5).normal(size=3).astype(np.float32))
+        rv = jnp.asarray(np.random.default_rng(6).uniform(0.5, 2, 3).astype(np.float32))
+        ys, rms, rvs = L.batch_norm(x, g, b, rm, rv, training=training)
+        cj, rmj, rvj = L.jpeg_batch_norm(c, QFLAT, g, b, rm, rv, training=training)
+        yj = jo.decode(cj, QFLAT)
+        np.testing.assert_allclose(ys, yj, atol=1e-4)
+        np.testing.assert_allclose(rms, rmj, atol=1e-5)
+        np.testing.assert_allclose(rvs, rvj, atol=1e-4)
+
+    def test_lossy_table(self):
+        q = jnp.asarray(jo.quality_scale(jo.ANNEX_K_LUMA, 60))
+        x = rand(7)
+        c = jo.encode(x, q)
+        g = jnp.ones(3)
+        b = jnp.zeros(3)
+        rm, rv = jnp.zeros(3), jnp.ones(3)
+        ys, _, _ = L.batch_norm(x, g, b, rm, rv, training=True)
+        cj, _, _ = L.jpeg_batch_norm(c, q, g, b, rm, rv, training=True)
+        np.testing.assert_allclose(ys, jo.decode(cj, q), atol=1e-3)
+
+    def test_centering_zeroes_batch_dc_mean(self):
+        """With gamma=1, beta=0 the normalized DC coefficients must have
+        zero mean over the batch (the paper's set-(0,0)-to-zero step)."""
+        x = rand(8)
+        c = jo.encode(x, QFLAT)
+        cj, _, _ = L.jpeg_batch_norm(
+            c, QFLAT, jnp.ones(3), jnp.zeros(3), jnp.zeros(3), jnp.ones(3),
+            training=True)
+        dc_mean = np.array(jnp.mean(cj[..., 0], axis=(0, 2, 3)))
+        np.testing.assert_allclose(dc_mean, 0, atol=1e-4)
+
+    def test_beta_moves_only_dc(self):
+        """Adding beta is a DC-only operation (paper §4.3)."""
+        x = rand(9)
+        c = jo.encode(x, QFLAT)
+        args = (QFLAT, jnp.ones(3), jnp.zeros(3), jnp.zeros(3), jnp.ones(3))
+        c0, _, _ = L.jpeg_batch_norm(c, *args, training=True)
+        beta = jnp.asarray(np.array([1.0, -2.0, 0.5], np.float32))
+        c1, _, _ = L.jpeg_batch_norm(
+            c, QFLAT, jnp.ones(3), beta, jnp.zeros(3), jnp.ones(3),
+            training=True)
+        diff = np.array(c1 - c0)
+        np.testing.assert_allclose(diff[..., 1:], 0, atol=1e-5)
+        assert np.abs(diff[..., 0]).max() > 0.1
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 1000), n=st.integers(2, 8), c=st.integers(1, 4))
+    def test_hypothesis_training_mode(self, seed, n, c):
+        x = rand(seed, n=n, c=c)
+        co = jo.encode(x, QFLAT)
+        g, b = jnp.ones(c), jnp.zeros(c)
+        rm, rv = jnp.zeros(c), jnp.ones(c)
+        ys, _, _ = L.batch_norm(x, g, b, rm, rv, training=True)
+        cj, _, _ = L.jpeg_batch_norm(co, QFLAT, g, b, rm, rv, training=True)
+        np.testing.assert_allclose(ys, jo.decode(cj, QFLAT), atol=1e-3)
+
+
+class TestGlobalAvgPool:
+    def test_matches_spatial(self):
+        x = rand(10, h=32, w=32)
+        c = jo.encode(x, QFLAT)
+        np.testing.assert_allclose(
+            L.global_avg_pool(x), L.jpeg_global_avg_pool(c, QFLAT), atol=1e-5)
+
+    def test_single_block_direct_read(self):
+        """Paper Figure 2: for a 1x1-block map GAP is one DC read."""
+        x = rand(11, h=8, w=8)
+        c = jo.encode(x, QFLAT)
+        expect = np.array(c)[..., 0, 0, 0] * float(QFLAT[0]) / 8.0
+        np.testing.assert_allclose(
+            L.jpeg_global_avg_pool(c, QFLAT), expect, atol=1e-6)

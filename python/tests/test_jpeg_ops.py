@@ -1,0 +1,199 @@
+"""Tests for the multilinear JPEG machinery (paper §3)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import jpeg_ops as jo
+
+
+def rand_image(rng, n=2, c=1, h=32, w=32):
+    return jnp.asarray(rng.uniform(-1, 1, (n, c, h, w)).astype(np.float32))
+
+
+class TestDctMatrix:
+    def test_orthonormal_1d(self):
+        d = jo.dct_matrix_1d()
+        np.testing.assert_allclose(d @ d.T, np.eye(8), atol=1e-12)
+
+    def test_orthonormal_2d(self):
+        a = jo.dct_matrix_2d()
+        np.testing.assert_allclose(a @ a.T, np.eye(64), atol=1e-12)
+
+    def test_dc_is_scaled_mean(self):
+        """Paper eq. 22: Y00 = 8 * mean for an 8x8 block."""
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=64)
+        y = jo.dct_matrix_2d() @ x
+        assert abs(y[0] - 8.0 * x.mean()) < 1e-9
+
+    def test_parseval(self):
+        """Theorem 2 machinery: ||Y||^2 = ||x||^2 (orthonormal)."""
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=64)
+        y = jo.dct_matrix_2d() @ x
+        assert abs((y ** 2).sum() - (x ** 2).sum()) < 1e-9
+
+
+class TestZigzag:
+    def test_permutation(self):
+        assert sorted(jo.ZIGZAG.tolist()) == list(range(64))
+
+    def test_inverse(self):
+        np.testing.assert_array_equal(jo.ZIGZAG[jo.UNZIGZAG], np.arange(64))
+
+    def test_first_entries(self):
+        # standard JPEG zigzag prefix
+        assert jo.ZIGZAG[:6].tolist() == [0, 1, 8, 16, 9, 2]
+
+    def test_band_monotone_prefix(self):
+        # zigzag visits bands in nondecreasing order
+        assert (np.diff(jo.BAND) >= -1).all()
+        assert jo.BAND[0] == 0 and jo.BAND[-1] == 14
+
+
+class TestBandMask:
+    def test_full_mask_is_all_ones(self):
+        assert jo.band_mask(15).sum() == 64
+
+    def test_mask_monotone(self):
+        prev = 0
+        for k in range(1, 16):
+            s = jo.band_mask(k).sum()
+            assert s > prev
+            prev = s
+
+    def test_band_counts(self):
+        # band b has min(b+1, 15-b) coefficients
+        for k in range(1, 16):
+            expect = sum(min(b + 1, 8, 15 - b) for b in range(k))
+            assert jo.band_mask(k).sum() == expect
+
+    def test_invalid(self):
+        with pytest.raises(ValueError):
+            jo.band_mask(0)
+        with pytest.raises(ValueError):
+            jo.band_mask(16)
+
+
+class TestQuantTables:
+    def test_flat(self):
+        assert (jo.QTABLE_FLAT == 1).all()
+
+    def test_quality_50_is_base(self):
+        q = jo.quality_scale(jo.ANNEX_K_LUMA, 50)
+        assert q[0] == jo.ANNEX_K_LUMA[jo.ZIGZAG[0]]
+
+    def test_quality_100_near_one(self):
+        q = jo.quality_scale(jo.ANNEX_K_LUMA, 100)
+        assert (q >= 1).all() and q.max() <= 2
+
+    def test_quality_monotone_dc(self):
+        qs = [jo.quality_scale(jo.ANNEX_K_LUMA, qq)[0] for qq in (10, 50, 90)]
+        assert qs[0] >= qs[1] >= qs[2]
+
+    def test_invalid_quality(self):
+        with pytest.raises(ValueError):
+            jo.quality_scale(jo.ANNEX_K_LUMA, 0)
+
+
+class TestBlockify:
+    def test_roundtrip(self):
+        rng = np.random.default_rng(2)
+        x = rand_image(rng)
+        np.testing.assert_allclose(jo.unblockify(jo.blockify(x)), x)
+
+    def test_block_content(self):
+        rng = np.random.default_rng(3)
+        x = rand_image(rng, 1, 1, 16, 16)
+        b = jo.blockify(x)
+        np.testing.assert_allclose(
+            np.array(b)[0, 0, 1, 0].reshape(8, 8), np.array(x)[0, 0, 8:16, 0:8])
+
+
+class TestEncodeDecode:
+    @pytest.mark.parametrize("quality", [None, 10, 50, 90])
+    def test_roundtrip(self, quality):
+        rng = np.random.default_rng(4)
+        q = (jo.QTABLE_FLAT if quality is None
+             else jo.quality_scale(jo.ANNEX_K_LUMA, quality))
+        x = rand_image(rng)
+        c = jo.encode(x, jnp.asarray(q))
+        np.testing.assert_allclose(jo.decode(c, jnp.asarray(q)), x, atol=1e-4)
+
+    def test_linearity(self):
+        """Paper eq. 25: J(F+G) = J(F) + J(G)."""
+        rng = np.random.default_rng(5)
+        q = jnp.asarray(jo.QTABLE_FLAT)
+        f, g = rand_image(rng), rand_image(rng)
+        lhs = jo.encode(f + g, q)
+        rhs = jo.encode(f, q) + jo.encode(g, q)
+        np.testing.assert_allclose(lhs, rhs, atol=1e-4)
+
+    def test_dc_is_mean(self):
+        rng = np.random.default_rng(6)
+        x = rand_image(rng, 1, 1, 8, 8)
+        c = jo.encode(x, jnp.asarray(jo.QTABLE_FLAT))
+        assert abs(float(c[0, 0, 0, 0, 0]) - 8 * float(x.mean())) < 1e-4
+
+    def test_dec_enc_matrices_inverse(self):
+        for q in (jo.QTABLE_FLAT, jo.quality_scale(jo.ANNEX_K_LUMA, 75)):
+            np.testing.assert_allclose(
+                jo.dec_matrix(q) @ jo.enc_matrix(q), np.eye(64), atol=1e-4)
+
+
+class TestLeastSquares:
+    def test_dct_least_squares_theorem(self):
+        """Theorem 1: keeping the lowest-band coefficients minimizes the
+        reconstruction error over same-size coefficient subsets."""
+        rng = np.random.default_rng(7)
+        a = jo.dct_matrix_2d()
+        x = rng.normal(size=64)
+        y = a @ x
+        mask_low = jo.band_mask(4)[jo.UNZIGZAG[np.arange(64)]]  # raster order?
+        # work directly in zigzag space to avoid index confusion
+        y_zz = jo.ZA @ x
+        m = jo.band_mask(4).astype(bool)
+        err_low = np.sum((jo.ZA.T @ (y_zz * m) - x) ** 2)
+        # any random same-size subset that is not the low bands does worse
+        # in expectation; check 20 draws
+        k = int(m.sum())
+        worse = 0
+        for _ in range(20):
+            idx = rng.choice(64, size=k, replace=False)
+            mm = np.zeros(64, bool)
+            mm[idx] = True
+            if (mm == m).all():
+                continue
+            err = np.sum((jo.ZA.T @ (y_zz * mm) - x) ** 2)
+            if err >= err_low - 1e-9:
+                worse += 1
+        assert worse >= 18  # random vectors: low bands ~tied only by luck
+
+
+class TestHarmonicMixing:
+    def test_matches_naive_mask(self):
+        """Paper eq. 16/17: H(F, G) == DCT(IDCT(F) * G)."""
+        rng = np.random.default_rng(8)
+        q = jo.quality_scale(jo.ANNEX_K_LUMA, 75)
+        h = jo.harmonic_mixing_tensor(q)
+        f = rng.normal(size=64).astype(np.float32)
+        g = (rng.normal(size=64) > 0).astype(np.float32)
+        out_h = np.einsum("akp,k,p->a", h, f, g)
+        x = jo.dec_matrix(q).T @ f * 0  # keep explicit
+        x = f @ jo.dec_matrix(q)
+        out_naive = (x * g) @ jo.enc_matrix(q)
+        np.testing.assert_allclose(out_h, out_naive, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 3), c=st.integers(1, 3),
+    bh=st.sampled_from([1, 2, 4]), seed=st.integers(0, 10_000),
+)
+def test_encode_decode_roundtrip_hypothesis(n, c, bh, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(jo.QTABLE_FLAT)
+    x = jnp.asarray(rng.uniform(-2, 2, (n, c, bh * 8, bh * 8)).astype(np.float32))
+    np.testing.assert_allclose(jo.decode(jo.encode(x, q), q), x, atol=1e-4)

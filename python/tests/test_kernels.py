@@ -1,0 +1,179 @@
+"""L1 Pallas kernels vs the pure-jnp oracles in ref.py.
+
+Hypothesis sweeps shapes/seeds; every kernel must match its oracle to
+float tolerance, including through the custom VJPs.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import jpeg_ops as jo
+from compile.kernels import (
+    asm_relu_blocks, apx_relu_blocks, block_matmul, block_transform, ref)
+
+Q_FLAT = jo.QTABLE_FLAT
+Q_75 = jo.quality_scale(jo.ANNEX_K_LUMA, 75)
+
+
+def mats(q):
+    return jnp.asarray(jo.dec_matrix(q)), jnp.asarray(jo.enc_matrix(q))
+
+
+def rand_blocks(seed, m):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(m, 64)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# block_transform
+# ---------------------------------------------------------------------------
+class TestBlockTransform:
+    @pytest.mark.parametrize("m", [1, 7, 256, 300, 1000])
+    def test_matches_ref(self, m):
+        x = rand_blocks(0, m)
+        t = jnp.asarray(jo.ZA.T.astype(np.float32))
+        np.testing.assert_allclose(
+            block_transform(x, t), ref.block_transform(x, t), atol=1e-5)
+
+    def test_grad_matches_ref(self):
+        x = rand_blocks(1, 100)
+        t = jnp.asarray(jo.ZA.T.astype(np.float32))
+        g1 = jax.grad(lambda a: jnp.sum(block_transform(a, t) ** 2))(x)
+        g2 = jax.grad(lambda a: jnp.sum(ref.block_transform(a, t) ** 2))(x)
+        np.testing.assert_allclose(g1, g2, atol=1e-4)
+
+    def test_weight_grad(self):
+        x = rand_blocks(2, 64)
+        t = jnp.asarray(jo.ZA.T.astype(np.float32))
+        g1 = jax.grad(lambda w: jnp.sum(block_transform(x, w) ** 2))(t)
+        g2 = jax.grad(lambda w: jnp.sum(ref.block_transform(x, w) ** 2))(t)
+        np.testing.assert_allclose(g1, g2, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ASM / APX ReLU
+# ---------------------------------------------------------------------------
+class TestAsmRelu:
+    @pytest.mark.parametrize("nf", [1, 3, 6, 10, 15])
+    @pytest.mark.parametrize("qname", ["flat", "q75"])
+    def test_matches_ref(self, nf, qname):
+        q = Q_FLAT if qname == "flat" else Q_75
+        dec, enc = mats(q)
+        f = rand_blocks(nf, 300)
+        mask = jnp.asarray(jo.band_mask(nf))
+        np.testing.assert_allclose(
+            asm_relu_blocks(f, mask, dec, enc),
+            ref.asm_relu_blocks(f, mask, dec, enc), atol=1e-4)
+
+    def test_exact_at_15(self):
+        """phi=15 must be the exact ReLU (paper §5.2 sanity check)."""
+        rng = np.random.default_rng(3)
+        q = jnp.asarray(Q_75)
+        x = jnp.asarray(rng.normal(size=(2, 1, 16, 16)).astype(np.float32))
+        c = jo.encode(x, q)
+        dec, enc = mats(Q_75)
+        out = asm_relu_blocks(
+            c.reshape(-1, 64), jnp.asarray(jo.band_mask(15)), dec, enc)
+        xr = jo.decode(out.reshape(c.shape), q)
+        np.testing.assert_allclose(xr, jnp.maximum(x, 0), atol=1e-4)
+
+    def test_asm_preserves_positive_values(self):
+        """Paper Figure 1: ASM never alters the value of a kept pixel —
+        output pixels are either the exact input or exactly zero."""
+        rng = np.random.default_rng(4)
+        dec, enc = mats(Q_FLAT)
+        x = jnp.asarray(rng.normal(size=(50, 64)).astype(np.float32))
+        f = x @ enc
+        out = asm_relu_blocks(f, jnp.asarray(jo.band_mask(6)), dec, enc)
+        xo = np.array(out @ dec)
+        xi = np.array(x)
+        is_kept = np.abs(xo - xi) < 1e-4
+        is_zero = np.abs(xo) < 1e-4
+        assert np.all(is_kept | is_zero)
+
+    def test_apx_matches_ref(self):
+        dec, enc = mats(Q_FLAT)
+        f = rand_blocks(5, 200)
+        for nf in (2, 8, 15):
+            mask = jnp.asarray(jo.band_mask(nf))
+            np.testing.assert_allclose(
+                apx_relu_blocks(f, mask, dec, enc),
+                ref.apx_relu_blocks(f, mask, dec, enc), atol=1e-4)
+
+    def test_asm_beats_apx_rmse(self):
+        """The Fig-4a ordering on random blocks."""
+        rng = np.random.default_rng(6)
+        dec, enc = mats(Q_FLAT)
+        x = jnp.asarray(rng.uniform(-1, 1, (2000, 64)).astype(np.float32))
+        f = x @ enc
+        truth = np.maximum(np.array(x), 0)
+        for nf in (4, 8, 12):
+            mask = jnp.asarray(jo.band_mask(nf))
+            asm = np.array(asm_relu_blocks(f, mask, dec, enc) @ dec)
+            apx = np.array(apx_relu_blocks(f, mask, dec, enc) @ dec)
+            rmse_asm = np.sqrt(np.mean((asm - truth) ** 2))
+            rmse_apx = np.sqrt(np.mean((apx - truth) ** 2))
+            assert rmse_asm < rmse_apx
+
+    def test_grad_exact_at_15(self):
+        """At phi=15 the ASM VJP is the exact ReLU subgradient."""
+        dec, enc = mats(Q_FLAT)
+        f = rand_blocks(7, 128)
+        mask = jnp.asarray(jo.band_mask(15))
+
+        def jpeg_loss(ff):
+            return jnp.sum(asm_relu_blocks(ff, mask, dec, enc) ** 2)
+
+        def spatial_loss(ff):
+            x = ff @ dec
+            return jnp.sum((jnp.maximum(x, 0) @ enc) ** 2)
+
+        g1 = jax.grad(jpeg_loss)(f)
+        g2 = jax.grad(spatial_loss)(f)
+        np.testing.assert_allclose(g1, g2, atol=1e-3)
+
+    @settings(max_examples=20, deadline=None)
+    @given(m=st.integers(1, 600), nf=st.integers(1, 15), seed=st.integers(0, 1000))
+    def test_hypothesis_sweep(self, m, nf, seed):
+        dec, enc = mats(Q_FLAT)
+        f = rand_blocks(seed, m)
+        mask = jnp.asarray(jo.band_mask(nf))
+        np.testing.assert_allclose(
+            asm_relu_blocks(f, mask, dec, enc),
+            ref.asm_relu_blocks(f, mask, dec, enc), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# block_matmul
+# ---------------------------------------------------------------------------
+class TestBlockMatmul:
+    @pytest.mark.parametrize("m,k,n", [
+        (1, 64, 64), (64, 64, 64), (100, 576, 512), (17, 128, 30)])
+    def test_matches_ref(self, m, k, n):
+        rng = np.random.default_rng(m + k + n)
+        a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        b = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+        np.testing.assert_allclose(
+            block_matmul(a, b), ref.block_matmul(a, b), atol=1e-3)
+
+    def test_grads(self):
+        rng = np.random.default_rng(9)
+        a = jnp.asarray(rng.normal(size=(32, 64)).astype(np.float32))
+        b = jnp.asarray(rng.normal(size=(64, 48)).astype(np.float32))
+        ga = jax.grad(lambda aa: jnp.sum(block_matmul(aa, b) ** 2))(a)
+        gb = jax.grad(lambda bb: jnp.sum(block_matmul(a, bb) ** 2))(b)
+        np.testing.assert_allclose(ga, 2 * (a @ b) @ b.T, atol=1e-2)
+        np.testing.assert_allclose(gb, 2 * a.T @ (a @ b), atol=1e-2)
+
+    @settings(max_examples=15, deadline=None)
+    @given(m=st.integers(1, 200), k=st.sampled_from([64, 128, 576]),
+           n=st.sampled_from([10, 64, 512]), seed=st.integers(0, 100))
+    def test_hypothesis_sweep(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        b = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+        np.testing.assert_allclose(
+            block_matmul(a, b), ref.block_matmul(a, b), atol=1e-3)

@@ -1,0 +1,162 @@
+"""The paper's central claim (§5.2): the JPEG-domain network is
+mathematically equivalent to the spatial network up to ReLU approximation
+accuracy — exactly equivalent at phi=15.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import jpeg_ops as jo, model as M
+
+MASK15 = jnp.asarray(jo.band_mask(15))
+QFLAT = jnp.asarray(jo.QTABLE_FLAT)
+
+
+def make_inputs(cfg, seed, n=4):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(
+        rng.uniform(0, 1, (n, cfg.in_channels, 32, 32)).astype(np.float32))
+    return x, jo.encode(x, QFLAT)
+
+
+@pytest.mark.parametrize("cfg_name", ["mnist", "cifar10", "cifar100"])
+class TestEquivalence:
+    def test_eval_logits_match(self, cfg_name):
+        cfg = M.CONFIGS[cfg_name]
+        params = M.init_params(cfg, 0)
+        x, c = make_inputs(cfg, 1)
+        ls, _ = M.spatial_forward(cfg, params, x, training=False)
+        lj, _ = M.jpeg_forward(cfg, params, c, QFLAT, MASK15, training=False)
+        np.testing.assert_allclose(ls, lj, atol=1e-4)
+
+    def test_train_mode_matches(self, cfg_name):
+        """Batch-stat BN path must agree too (Theorem 2 in action)."""
+        cfg = M.CONFIGS[cfg_name]
+        params = M.init_params(cfg, 2)
+        x, c = make_inputs(cfg, 3, n=8)
+        ls, ss = M.spatial_forward(cfg, params, x, training=True)
+        lj, sj = M.jpeg_forward(cfg, params, c, QFLAT, MASK15, training=True)
+        np.testing.assert_allclose(ls, lj, atol=1e-4)
+        for k in ss:
+            if k.endswith((".rmean", ".rvar")):
+                np.testing.assert_allclose(ss[k], sj[k], atol=1e-4,
+                                           err_msg=k)
+
+    def test_predictions_identical(self, cfg_name):
+        """Table-1 consequence: identical argmax predictions."""
+        cfg = M.CONFIGS[cfg_name]
+        params = M.init_params(cfg, 4)
+        x, c = make_inputs(cfg, 5, n=16)
+        ls, _ = M.spatial_forward(cfg, params, x, training=False)
+        lj, _ = M.jpeg_forward(cfg, params, c, QFLAT, MASK15, training=False)
+        np.testing.assert_array_equal(
+            np.argmax(np.array(ls), -1), np.argmax(np.array(lj), -1))
+
+
+class TestQualityTables:
+    def test_equivalence_under_lossy_table(self):
+        """Equivalence is a property of the transform, not the table: with
+        the SAME (unrounded) coefficients the networks agree for any q."""
+        cfg = M.CONFIGS["mnist"]
+        params = M.init_params(cfg, 6)
+        q = jnp.asarray(jo.quality_scale(jo.ANNEX_K_LUMA, 50))
+        rng = np.random.default_rng(7)
+        x = jnp.asarray(rng.uniform(0, 1, (4, 1, 32, 32)).astype(np.float32))
+        c = jo.encode(x, q)
+        ls, _ = M.spatial_forward(cfg, params, x, training=False)
+        lj, _ = M.jpeg_forward(cfg, params, c, q, MASK15, training=False)
+        np.testing.assert_allclose(ls, lj, atol=1e-3)
+
+
+class TestApproximation:
+    def test_low_freq_changes_logits(self):
+        cfg = M.CONFIGS["mnist"]
+        params = M.init_params(cfg, 8)
+        x, c = make_inputs(cfg, 9)
+        l15, _ = M.jpeg_forward(cfg, params, c, QFLAT, MASK15)
+        l2, _ = M.jpeg_forward(cfg, params, c, QFLAT, jnp.asarray(jo.band_mask(2)))
+        assert float(jnp.abs(l15 - l2).max()) > 1e-3
+
+    def test_asm_closer_than_apx(self):
+        """Fig-4b ordering at the logit level: ASM logits are closer to the
+        exact logits than APX logits, averaged over frequencies."""
+        cfg = M.CONFIGS["mnist"]
+        params = M.init_params(cfg, 10)
+        x, c = make_inputs(cfg, 11, n=8)
+        exact, _ = M.spatial_forward(cfg, params, x)
+        err_asm, err_apx = [], []
+        for nf in (4, 8, 12):
+            mask = jnp.asarray(jo.band_mask(nf))
+            la, _ = M.jpeg_forward(cfg, params, c, QFLAT, mask, method="asm")
+            lp, _ = M.jpeg_forward(cfg, params, c, QFLAT, mask, method="apx")
+            err_asm.append(float(jnp.mean((la - exact) ** 2)))
+            err_apx.append(float(jnp.mean((lp - exact) ** 2)))
+        assert np.mean(err_asm) < np.mean(err_apx)
+
+
+class TestExploded:
+    def test_exploded_matches_dcc(self):
+        """Paper §4.1: the precomputed exploded map is exact."""
+        cfg = M.CONFIGS["mnist"]
+        params = M.init_params(cfg, 12)
+        x, c = make_inputs(cfg, 13)
+        xis = M.explode_all(cfg, params, QFLAT)
+        ls, _ = M.spatial_forward(cfg, params, x)
+        le = M.jpeg_forward_exploded(cfg, params, xis, c, QFLAT, MASK15)
+        np.testing.assert_allclose(ls, le, atol=1e-4)
+
+    def test_exploded_lossy_table(self):
+        cfg = M.CONFIGS["mnist"]
+        params = M.init_params(cfg, 14)
+        q = jnp.asarray(jo.quality_scale(jo.ANNEX_K_LUMA, 90))
+        rng = np.random.default_rng(15)
+        x = jnp.asarray(rng.uniform(0, 1, (2, 1, 32, 32)).astype(np.float32))
+        c = jo.encode(x, q)
+        xis = M.explode_all(cfg, params, q)
+        ls, _ = M.spatial_forward(cfg, params, x)
+        le = M.jpeg_forward_exploded(cfg, params, xis, c, q, MASK15)
+        np.testing.assert_allclose(ls, le, atol=1e-3)
+
+
+class TestFused:
+    def test_fused_matches_spatial(self):
+        """The serving fast-path graph is the same function (phi=15)."""
+        cfg = M.CONFIGS["mnist"]
+        params = M.init_params(cfg, 20)
+        x, c = make_inputs(cfg, 21)
+        ls, _ = M.spatial_forward(cfg, params, x)
+        lf = M.jpeg_forward_fused(cfg, params, c, QFLAT)
+        np.testing.assert_allclose(ls, lf, atol=1e-4)
+
+    def test_fused_lossy_table(self):
+        cfg = M.CONFIGS["cifar10"]
+        params = M.init_params(cfg, 22)
+        q = jnp.asarray(jo.quality_scale(jo.ANNEX_K_LUMA, 80))
+        rng = np.random.default_rng(23)
+        x = jnp.asarray(rng.uniform(0, 1, (2, 3, 32, 32)).astype(np.float32))
+        c = jo.encode(x, q)
+        ls, _ = M.spatial_forward(cfg, params, x)
+        lf = M.jpeg_forward_fused(cfg, params, c, q)
+        np.testing.assert_allclose(ls, lf, atol=1e-3)
+
+
+class TestParamSpecs:
+    @pytest.mark.parametrize("cfg_name", ["mnist", "cifar10", "cifar100"])
+    def test_flatten_roundtrip(self, cfg_name):
+        cfg = M.CONFIGS[cfg_name]
+        params = M.init_params(cfg, 16)
+        leaves = M.flatten_params(cfg, params)
+        back = M.unflatten_params(cfg, leaves)
+        assert set(back) == set(params)
+        for k in params:
+            np.testing.assert_array_equal(params[k], back[k])
+
+    def test_specs_sorted_and_shaped(self):
+        cfg = M.CONFIGS["cifar10"]
+        specs = M.param_specs(cfg)
+        names = [s.name for s in specs]
+        assert names == sorted(names)
+        params = M.init_params(cfg, 0)
+        for s in specs:
+            assert params[s.name].shape == s.shape

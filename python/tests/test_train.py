@@ -1,0 +1,100 @@
+"""Training-step tests: gradient equivalence between domains and actual
+learning on a separable toy problem (the Fig-4c machinery)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import jpeg_ops as jo, model as M, train as T
+
+QFLAT = jnp.asarray(jo.QTABLE_FLAT)
+MASK15 = jnp.asarray(jo.band_mask(15))
+
+
+def toy_batch(cfg, seed, n=40):
+    """Linearly separable toy data: class k = bright patch at position k."""
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, cfg.num_classes, n)
+    x = rng.uniform(0, 0.1, (n, cfg.in_channels, 32, 32)).astype(np.float32)
+    for i, cls in enumerate(y):
+        r, cc = divmod(int(cls) % 16, 4)
+        x[i, :, r * 8:r * 8 + 8, cc * 8:cc * 8 + 8] += 0.8
+    return jnp.asarray(x), jnp.asarray(y.astype(np.int32))
+
+
+class TestLoss:
+    def test_cross_entropy_uniform(self):
+        logits = jnp.zeros((4, 10))
+        labels = jnp.asarray([0, 1, 2, 3], jnp.int32)
+        assert abs(float(T.cross_entropy(logits, labels)) - np.log(10)) < 1e-5
+
+    def test_accuracy(self):
+        logits = jnp.asarray([[0.0, 1.0], [1.0, 0.0]])
+        labels = jnp.asarray([1, 1], jnp.int32)
+        assert float(T.accuracy(logits, labels)) == 0.5
+
+
+class TestGradEquivalence:
+    def test_spatial_vs_jpeg_one_step(self):
+        """One train step in each domain from identical params must yield
+        identical losses and near-identical updated parameters (phi=15)."""
+        cfg = M.CONFIGS["mnist"]
+        params = M.init_params(cfg, 0)
+        vel = {s.name: jnp.zeros(s.shape) for s in M.param_specs(cfg)}
+        x, y = toy_batch(cfg, 1)
+        c = jo.encode(x, QFLAT)
+        ls, ps, vs = T.spatial_train_step(cfg, params, vel, x, y, 0.05)
+        lj, pj, vj = T.jpeg_train_step(
+            cfg, params, vel, c, QFLAT, MASK15, y, 0.05)
+        assert abs(float(ls) - float(lj)) < 1e-4
+        for k in ps:
+            np.testing.assert_allclose(ps[k], pj[k], atol=1e-3, err_msg=k)
+
+    def test_velocity_zero_for_non_trainable(self):
+        cfg = M.CONFIGS["mnist"]
+        params = M.init_params(cfg, 2)
+        vel = {s.name: jnp.zeros(s.shape) for s in M.param_specs(cfg)}
+        x, y = toy_batch(cfg, 3)
+        _, _, v2 = T.spatial_train_step(cfg, params, vel, x, y, 0.05)
+        for s in M.param_specs(cfg):
+            if not s.trainable:
+                np.testing.assert_array_equal(v2[s.name], 0)
+
+
+class TestLearning:
+    @pytest.mark.parametrize("domain", ["spatial", "jpeg"])
+    def test_loss_decreases(self, domain):
+        cfg = M.CONFIGS["mnist"]
+        params = M.init_params(cfg, 4)
+        vel = {s.name: jnp.zeros(s.shape) for s in M.param_specs(cfg)}
+        x, y = toy_batch(cfg, 5)
+        c = jo.encode(x, QFLAT)
+
+        if domain == "spatial":
+            step = jax.jit(lambda p, v: T.spatial_train_step(cfg, p, v, x, y, 0.05))
+        else:
+            step = jax.jit(lambda p, v: T.jpeg_train_step(
+                cfg, p, v, c, QFLAT, MASK15, y, 0.05))
+
+        losses = []
+        for _ in range(25):
+            loss, params, vel = step(params, vel)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.7, losses
+
+    def test_jpeg_low_freq_still_learns(self):
+        """Fig-4c premise: training copes with an aggressive approximation."""
+        cfg = M.CONFIGS["mnist"]
+        params = M.init_params(cfg, 6)
+        vel = {s.name: jnp.zeros(s.shape) for s in M.param_specs(cfg)}
+        x, y = toy_batch(cfg, 7)
+        c = jo.encode(x, QFLAT)
+        mask = jnp.asarray(jo.band_mask(4))
+        step = jax.jit(lambda p, v: T.jpeg_train_step(
+            cfg, p, v, c, QFLAT, mask, y, 0.05))
+        losses = []
+        for _ in range(25):
+            loss, params, vel = step(params, vel)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.85, losses

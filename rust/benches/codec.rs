@@ -1,0 +1,54 @@
+//! Bench: the JPEG codec substrate — the decompression cost that
+//! separates the two pipelines (paper abstract: "skipping the costly
+//! decompression step").  `cargo bench --bench codec`
+//! Env: CODEC_IMAGES (default 400), CODEC_QUALITY (default 95).
+
+use std::time::Instant;
+
+use jpegdomain::data::{Dataset, Split, SynthKind};
+use jpegdomain::jpeg::codec;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = env_usize("CODEC_IMAGES", 400);
+    let quality = env_usize("CODEC_QUALITY", 95) as u8;
+    let mut rows = Vec::new();
+    for kind in [SynthKind::Mnist, SynthKind::Cifar10] {
+        let label = if kind == SynthKind::Mnist { "mnist(gray)" } else { "cifar(color)" };
+        let data = Dataset::synthetic(kind, 2, n, 3);
+
+        let t0 = Instant::now();
+        let files = data.jpeg_bytes(Split::Test, quality);
+        let encode_us = t0.elapsed().as_secs_f64() * 1e6 / n as f64;
+
+        let t0 = Instant::now();
+        for (bytes, _) in &files {
+            std::hint::black_box(codec::decode_to_coefficients(bytes)?);
+        }
+        let entropy_us = t0.elapsed().as_secs_f64() * 1e6 / n as f64;
+
+        let t0 = Instant::now();
+        for (bytes, _) in &files {
+            std::hint::black_box(codec::decode(bytes)?);
+        }
+        let full_us = t0.elapsed().as_secs_f64() * 1e6 / n as f64;
+
+        rows.push(vec![
+            label.to_string(),
+            format!("{encode_us:.1}"),
+            format!("{entropy_us:.1}"),
+            format!("{full_us:.1}"),
+            format!("{:.1}", full_us - entropy_us),
+        ]);
+    }
+    jpegdomain::bench_harness::print_table(
+        "JPEG codec cost per image (us)",
+        &["dataset", "encode", "entropy decode", "full decode", "skipped by jpeg route"],
+        &rows,
+    );
+    println!("\ncodec bench OK");
+    Ok(())
+}

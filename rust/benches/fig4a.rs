@@ -1,0 +1,29 @@
+//! Bench: regenerate Figure 4a (per-block ReLU RMSE, ASM vs APX over
+//! phi = 1..15) and time the pure-rust ASM hot loop.
+//! `cargo bench --bench fig4a`   Env: F4A_BLOCKS (default 1,000,000).
+
+use jpegdomain::bench_harness as bh;
+
+fn main() {
+    let blocks = std::env::var("F4A_BLOCKS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1_000_000usize);
+    eprintln!("[fig4a] {blocks} random 4x4->8x8 blocks, phi = 1..15, ASM + APX");
+    let t0 = std::time::Instant::now();
+    let rows = bh::fig4a(blocks, 1);
+    let secs = t0.elapsed().as_secs_f64();
+    bh::blocks::print(&rows);
+    // each block runs 15 ASM + 15 APX evaluations
+    let evals = blocks as f64 * 30.0;
+    println!(
+        "\nthroughput: {:.2} Mblocks/s ({:.0} ns per relu-approximation eval)",
+        blocks as f64 / secs / 1e6,
+        secs / evals * 1e9
+    );
+    assert!(rows[14].rmse_asm < 1e-4, "phi=15 must be exact");
+    for r in &rows[..14] {
+        assert!(r.rmse_asm < r.rmse_apx, "ASM must beat APX at phi={}", r.num_freqs);
+    }
+    println!("fig4a bench OK (ASM < APX everywhere, exact at phi=15)");
+}

@@ -1,0 +1,36 @@
+//! Bench: regenerate Figure 4b (converted-model accuracy vs ReLU
+//! spatial-frequency budget, ASM vs APX).  `cargo bench --bench fig4b`
+//! Env: F4B_SEEDS (default 2), F4B_STEPS (default 150), F4B_DATASET.
+
+use std::sync::Arc;
+
+use jpegdomain::bench_harness as bh;
+use jpegdomain::runtime::{Engine, Session};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let dataset = std::env::var("F4B_DATASET").unwrap_or_else(|_| "mnist".into());
+    let exp = bh::model_exps::ExpConfig {
+        seeds: env_usize("F4B_SEEDS", 1),
+        train_steps: env_usize("F4B_STEPS", 150),
+        ..Default::default()
+    };
+    let engine = Arc::new(Engine::new(std::path::Path::new("artifacts"))?);
+    let session = Session::new(engine, &dataset)?;
+    eprintln!(
+        "[fig4b] {dataset}: {} seeds x {} steps, then 15-phi x 2-method eval sweep",
+        exp.seeds, exp.train_steps
+    );
+    let rows = bh::fig4b(&session, &exp)?;
+    bh::model_exps::print_fig4("Figure 4b — converted-model accuracy vs phi", &rows);
+    // shape checks: ASM >= APX on average; accuracy recovers with phi
+    let mean_asm: f64 = rows.iter().map(|r| r.acc_asm).sum::<f64>() / 15.0;
+    let mean_apx: f64 = rows.iter().map(|r| r.acc_apx).sum::<f64>() / 15.0;
+    assert!(mean_asm > mean_apx, "ASM {mean_asm} !> APX {mean_apx}");
+    assert!(rows[14].acc_asm >= rows[0].acc_asm);
+    println!("\nfig4b bench OK (mean ASM {mean_asm:.4} > mean APX {mean_apx:.4})");
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Bench: regenerate Figure 4c (accuracy vs phi when TRAINING in the
+//! JPEG domain — the weights learn to cope with the approximation).
+//! `cargo bench --bench fig4c`
+//! Env: F4C_SEEDS (1), F4C_STEPS (120), F4C_FREQS ("2,4,6,8,12,15").
+
+use std::sync::Arc;
+
+use jpegdomain::bench_harness as bh;
+use jpegdomain::runtime::{Engine, Session};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let exp = bh::model_exps::ExpConfig {
+        seeds: env_usize("F4C_SEEDS", 1),
+        train_steps: env_usize("F4C_STEPS", 80),
+        ..Default::default()
+    };
+    let freqs: Vec<usize> = std::env::var("F4C_FREQS")
+        .unwrap_or_else(|_| "2,4,6,8,12,15".into())
+        .split(',')
+        .filter_map(|t| t.trim().parse().ok())
+        .collect();
+    let engine = Arc::new(Engine::new(std::path::Path::new("artifacts"))?);
+    let session = Session::new(engine, "mnist")?;
+    eprintln!(
+        "[fig4c] training IN the JPEG domain at phi = {:?} x 2 methods x {} seeds x {} steps",
+        freqs, exp.seeds, exp.train_steps
+    );
+    let rows = bh::fig4c(&session, &exp, &freqs)?;
+    bh::model_exps::print_fig4(
+        "Figure 4c — trained-in-JPEG-domain accuracy vs phi",
+        &rows,
+    );
+    let mean_asm: f64 = rows.iter().map(|r| r.acc_asm).sum::<f64>() / rows.len() as f64;
+    let mean_apx: f64 = rows.iter().map(|r| r.acc_apx).sum::<f64>() / rows.len() as f64;
+    println!("\nfig4c bench OK (mean ASM {mean_asm:.4} vs mean APX {mean_apx:.4})");
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Bench: regenerate Figure 5 (training + inference throughput,
+//! spatial vs JPEG pipelines, batch 40, JPEG-file inputs).
+//! `cargo bench --bench fig5`
+//! Env: F5_DATASETS ("mnist,cifar10,cifar100"), F5_FILES (200),
+//!      F5_STEPS (20), F5_PASSES (2), F5_QUALITY (95).
+
+use std::sync::Arc;
+
+use jpegdomain::bench_harness as bh;
+use jpegdomain::runtime::{Engine, Session};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let datasets = std::env::var("F5_DATASETS")
+        .unwrap_or_else(|_| "mnist,cifar10,cifar100".into());
+    let engine = Arc::new(Engine::new(std::path::Path::new("artifacts"))?);
+    let mut rows = Vec::new();
+    for name in datasets.split(',') {
+        let name = name.trim();
+        eprintln!("[fig5] {name}");
+        let session = Session::new(engine.clone(), name)?;
+        rows.extend(bh::fig5(
+            &session,
+            env_usize("F5_QUALITY", 95) as u8,
+            env_usize("F5_FILES", 200),
+            env_usize("F5_STEPS", 20),
+            env_usize("F5_PASSES", 2),
+        )?);
+    }
+    bh::throughput::print_fig5(&rows);
+    // the paper's headline shape: jpeg inference beats spatial inference
+    for name in datasets.split(',') {
+        let name = name.trim();
+        let get = |mode: &str, route: &str| {
+            rows.iter()
+                .find(|r| r.dataset == name && r.mode == mode && r.route == route)
+                .map(|r| r.images_per_sec)
+                .unwrap_or(0.0)
+        };
+        let (jd, sd) = (
+            get("test", "jpeg (decode-bound)"),
+            get("test", "spatial (decode-bound)"),
+        );
+        assert!(jd > sd, "{name}: decode-bound jpeg {jd:.1} !> spatial {sd:.1}");
+        println!(
+            "{name}: decode-bound inference speedup {:.2}x | end-to-end ratio {:.2}x | training ratio {:.2}x",
+            jd / sd,
+            get("test", "jpeg") / get("test", "spatial"),
+            get("train", "jpeg") / get("train", "spatial")
+        );
+    }
+    println!("\nfig5 bench OK (jpeg pipeline wins the decode-bound inference regime everywhere)");
+    Ok(())
+}

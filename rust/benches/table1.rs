@@ -1,0 +1,41 @@
+//! Bench: regenerate Table 1 (model conversion accuracies) for all three
+//! dataset substitutes.  `cargo bench --bench table1`
+//!
+//! Env knobs: T1_SEEDS (default 3), T1_STEPS (default 150).
+
+use std::sync::Arc;
+
+use jpegdomain::bench_harness as bh;
+use jpegdomain::runtime::{Engine, Session};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let exp = bh::model_exps::ExpConfig {
+        seeds: env_usize("T1_SEEDS", 3),
+        train_steps: env_usize("T1_STEPS", 150),
+        ..Default::default()
+    };
+    let engine = Arc::new(Engine::new(std::path::Path::new("artifacts"))?);
+    let mut rows = Vec::new();
+    for name in ["mnist", "cifar10", "cifar100"] {
+        eprintln!("[table1] {name}: {} seeds x {} steps", exp.seeds, exp.train_steps);
+        let session = Session::new(engine.clone(), name)?;
+        let t0 = std::time::Instant::now();
+        rows.push(bh::table1(&session, &exp)?);
+        eprintln!("[table1] {name} done in {:.1}s", t0.elapsed().as_secs_f64());
+    }
+    bh::model_exps::print_table1(&rows);
+    for r in &rows {
+        assert!(
+            r.deviation < 1e-3,
+            "{}: spatial/jpeg deviation {} above float-error scale",
+            r.dataset,
+            r.deviation
+        );
+    }
+    println!("\ntable1 bench OK (all deviations at float-error scale)");
+    Ok(())
+}

@@ -1,0 +1,172 @@
+//! Figure 4a: per-block ReLU approximation RMSE, ASM vs APX, phi = 1..15.
+//!
+//! Paper §5.3: random 4x4 pixel blocks in [-1, 1] box-upsampled to 8x8
+//! ("fully random 8x8 blocks ... are known to be a worst case for the
+//! DCT"), pushed through both approximations at every spatial-frequency
+//! budget; report RMSE against the exact ReLU.  Pure rust hot loop —
+//! this is also the `jpeg_domain::relu` micro-benchmark.
+
+use crate::jpeg::zigzag::band_mask;
+use crate::jpeg_domain::relu::{apx_relu_block, asm_relu_block, ReluCtx};
+use crate::jpeg_domain::{dec_matrix, enc_matrix, qvec_flat};
+use crate::util::Rng;
+
+/// One row of the Fig-4a series.
+#[derive(Clone, Debug)]
+pub struct Fig4aRow {
+    pub num_freqs: usize,
+    pub rmse_asm: f64,
+    pub rmse_apx: f64,
+}
+
+/// The paper's random block distribution: 4x4 uniform [-1,1], box-
+/// upsampled 2x to 8x8.
+pub fn random_block(rng: &mut Rng) -> [f32; 64] {
+    let mut small = [0.0f32; 16];
+    for v in &mut small {
+        *v = rng.uniform_in(-1.0, 1.0);
+    }
+    let mut out = [0.0f32; 64];
+    for y in 0..8 {
+        for x in 0..8 {
+            out[y * 8 + x] = small[(y / 2) * 4 + (x / 2)];
+        }
+    }
+    out
+}
+
+/// Run the experiment over `num_blocks` blocks; returns 15 rows.
+pub fn fig4a(num_blocks: usize, seed: u64) -> Vec<Fig4aRow> {
+    let q = qvec_flat();
+    let ctx = ReluCtx::new(&q);
+    let dec = dec_matrix(&q);
+    let enc = enc_matrix(&q);
+    let dd = dec.data();
+    let ed = enc.data();
+
+    let masks: Vec<[f32; 64]> = (1..=15).map(band_mask).collect();
+    let mut se_asm = [0.0f64; 15];
+    let mut se_apx = [0.0f64; 15];
+
+    let mut rng = Rng::new(seed);
+    let mut f = [0.0f32; 64];
+    let mut spatial = [0.0f32; 64];
+    for _ in 0..num_blocks {
+        let x = random_block(&mut rng);
+        // encode once: f = x @ enc
+        for (k, fk) in f.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for p in 0..64 {
+                acc += x[p] * ed[p * 64 + k];
+            }
+            *fk = acc;
+        }
+        let truth: Vec<f32> = x.iter().map(|&v| v.max(0.0)).collect();
+        for (i, mask) in masks.iter().enumerate() {
+            for (out, se) in [
+                (asm_relu_block(&ctx, &f, mask), &mut se_asm[i]),
+                (apx_relu_block(&ctx, &f, mask), &mut se_apx[i]),
+            ] {
+                // decode: spatial = out @ dec
+                for (p, sp) in spatial.iter_mut().enumerate() {
+                    let mut acc = 0.0f32;
+                    for (k, &ok) in out.iter().enumerate() {
+                        acc += ok * dd[k * 64 + p];
+                    }
+                    *sp = acc;
+                }
+                let mut block_se = 0.0f64;
+                for p in 0..64 {
+                    let d = (spatial[p] - truth[p]) as f64;
+                    block_se += d * d;
+                }
+                *se += block_se;
+            }
+        }
+    }
+
+    let n = (num_blocks * 64) as f64;
+    (0..15)
+        .map(|i| Fig4aRow {
+            num_freqs: i + 1,
+            rmse_asm: (se_asm[i] / n).sqrt(),
+            rmse_apx: (se_apx[i] / n).sqrt(),
+        })
+        .collect()
+}
+
+/// Print the series the paper plots.
+pub fn print(rows: &[Fig4aRow]) {
+    super::print_table(
+        "Figure 4a — per-block ReLU RMSE (ASM vs APX)",
+        &["spatial frequencies", "ASM RMSE", "APX RMSE"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.num_freqs.to_string(),
+                    format!("{:.5}", r.rmse_asm),
+                    format!("{:.5}", r.rmse_apx),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_ordering() {
+        let rows = fig4a(400, 1);
+        assert_eq!(rows.len(), 15);
+        // ASM beats APX at every frequency budget (the paper's claim)
+        for r in &rows[..14] {
+            assert!(
+                r.rmse_asm < r.rmse_apx,
+                "phi={}: {} !< {}",
+                r.num_freqs,
+                r.rmse_asm,
+                r.rmse_apx
+            );
+        }
+    }
+
+    #[test]
+    fn exact_at_15() {
+        let rows = fig4a(300, 2);
+        assert!(rows[14].rmse_asm < 1e-4, "{}", rows[14].rmse_asm);
+        assert!(rows[14].rmse_apx < 1e-4, "{}", rows[14].rmse_apx);
+    }
+
+    #[test]
+    fn rmse_decreases_with_more_freqs() {
+        let rows = fig4a(400, 3);
+        for w in rows.windows(2) {
+            assert!(w[1].rmse_asm <= w[0].rmse_asm + 1e-6);
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = fig4a(100, 7);
+        let b = fig4a(100, 7);
+        assert_eq!(a[4].rmse_asm, b[4].rmse_asm);
+    }
+
+    #[test]
+    fn upsampled_block_structure() {
+        let mut rng = Rng::new(1);
+        let b = random_block(&mut rng);
+        // box-upsampled: 2x2 cells are constant
+        for y in (0..8).step_by(2) {
+            for x in (0..8).step_by(2) {
+                let v = b[y * 8 + x];
+                assert_eq!(b[y * 8 + x + 1], v);
+                assert_eq!(b[(y + 1) * 8 + x], v);
+                assert_eq!(b[(y + 1) * 8 + x + 1], v);
+            }
+        }
+    }
+}

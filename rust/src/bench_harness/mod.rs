@@ -1,0 +1,31 @@
+//! Experiment harnesses: one driver per paper table/figure (DESIGN.md §3),
+//! shared by the CLI (`repro exp ...`) and the cargo benches.
+//!
+//! Every driver returns structured rows and prints the same series the
+//! paper reports, so EXPERIMENTS.md can be regenerated mechanically.
+
+pub mod blocks;
+pub mod model_exps;
+pub mod throughput;
+
+pub use blocks::{fig4a, Fig4aRow};
+pub use model_exps::{fig4b, fig4c, table1, Fig4Row, Table1Row};
+pub use throughput::{ablation_exploded, fig5, AblationReport, Fig5Row};
+
+/// Markdown-ish row printing helper.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n## {title}");
+    println!("| {} |", header.join(" | "));
+    println!("|{}|", header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+    for r in rows {
+        println!("| {} |", r.join(" | "));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn print_table_smoke() {
+        super::print_table("t", &["a", "b"], &[vec!["1".into(), "2".into()]]);
+    }
+}

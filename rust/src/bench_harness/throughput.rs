@@ -1,0 +1,353 @@
+//! Figure 5 (training + inference throughput) and the exploded-map
+//! ablation.
+//!
+//! Fig 5 measures the end-to-end pipelines the paper deploys: inputs are
+//! entropy-coded JPEG files; the spatial route pays full decompression
+//! before its network, the JPEG route pays entropy decode only.  Both
+//! run batch-40 through the same PJRT artifacts (phi = 15, so identical
+//! predictions).
+
+use std::time::Instant;
+
+use crate::coordinator::router::{Route, Router};
+use crate::coordinator::training::{TrainConfig, TrainDomain, Trainer};
+use crate::data::{Dataset, Split, SynthKind};
+use crate::jpeg_domain::relu::Method;
+use crate::params::ParamSet;
+use crate::runtime::Session;
+
+/// One Fig-5 bar.
+#[derive(Clone, Debug)]
+pub struct Fig5Row {
+    pub dataset: String,
+    pub mode: &'static str,  // "train" | "test"
+    pub route: &'static str, // "spatial" | "jpeg"
+    pub images_per_sec: f64,
+}
+
+/// Which end-to-end inference pipeline to measure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pipeline {
+    /// full decompression (rust) + spatial network
+    SpatialFull,
+    /// entropy decode only + fused JPEG graph (the paper's precomputed-
+    /// map serving path; exact phi = 15 semantics)
+    JpegFused,
+    /// entropy decode only + coefficient-domain ops graph (the tunable-
+    /// phi path used by Fig 4; slower on CPU, reported for completeness)
+    JpegDomain,
+}
+
+impl Pipeline {
+    fn route(&self) -> Route {
+        match self {
+            Pipeline::SpatialFull => Route::Spatial,
+            _ => Route::Jpeg,
+        }
+    }
+    pub fn label(&self) -> &'static str {
+        match self {
+            Pipeline::SpatialFull => "spatial",
+            Pipeline::JpegFused => "jpeg",
+            Pipeline::JpegDomain => "jpeg (domain ops)",
+        }
+    }
+}
+
+/// Inference throughput for one pipeline: decode + batched forward over
+/// pre-encoded JPEG byte streams.
+pub fn inference_throughput(
+    session: &Session,
+    params: &ParamSet,
+    files: &[(Vec<u8>, u32)],
+    pipeline: Pipeline,
+    batch: usize,
+    passes: usize,
+) -> anyhow::Result<f64> {
+    let router = Router::new(pipeline.route());
+    let q_default = crate::jpeg_domain::qvec_flat();
+    let t0 = Instant::now();
+    let mut images = 0usize;
+    for _ in 0..passes {
+        for chunk in files.chunks(batch) {
+            if chunk.len() < batch {
+                continue; // fig5 measures full batches, like the paper
+            }
+            let mut inputs = Vec::with_capacity(chunk.len());
+            let mut qvec = q_default;
+            for (bytes, _) in chunk {
+                let p = router.prepare(bytes)?;
+                qvec = p.qvec;
+                inputs.push(p.input);
+            }
+            let x = Router::stack(&inputs);
+            match pipeline {
+                Pipeline::SpatialFull => {
+                    session.forward_spatial(params, &x)?;
+                }
+                Pipeline::JpegFused => {
+                    session.forward_jpeg_fused(params, &x, &qvec)?;
+                }
+                Pipeline::JpegDomain => {
+                    session.forward_jpeg(params, &x, &qvec, 15, Method::Asm)?;
+                }
+            }
+            images += chunk.len();
+        }
+    }
+    Ok(images as f64 / t0.elapsed().as_secs_f64())
+}
+
+/// The full Fig-5 experiment for one dataset: 4 bars.
+pub fn fig5(
+    session: &Session,
+    quality: u8,
+    n_files: usize,
+    train_steps: usize,
+    passes: usize,
+) -> anyhow::Result<Vec<Fig5Row>> {
+    let kind = SynthKind::parse(&session.cfg.name)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {}", session.cfg.name))?;
+    let batch = session.engine.manifest.train_batch;
+    let data = Dataset::synthetic(kind, n_files.max(batch), n_files.max(batch), 11);
+    let files = data.jpeg_bytes(Split::Test, quality);
+    let params = ParamSet::init(&session.cfg, 0);
+    let mut rows = Vec::new();
+
+    // -- inference ---------------------------------------------------------
+    for pipeline in [Pipeline::SpatialFull, Pipeline::JpegFused, Pipeline::JpegDomain] {
+        let ips =
+            inference_throughput(session, &params, &files, pipeline, batch, passes)?;
+        rows.push(Fig5Row {
+            dataset: session.cfg.name.clone(),
+            mode: "test",
+            route: pipeline.label(),
+            images_per_sec: ips,
+        });
+    }
+
+    // -- inference, decode-bound projection ---------------------------------
+    // The paper's testbed runs the network on a Pascal GPU, so its Fig-5
+    // inference gap is the CPU decompression cost.  On this CPU-PJRT
+    // substrate the (shared) network execution dominates instead; these
+    // rows measure the per-route pipeline work EXCLUDING the shared
+    // network execute — i.e. the throughput each route sustains in the
+    // paper's accelerator-bound regime (DESIGN.md §4 substitution).
+    for (route, label) in [
+        (Route::Spatial, "spatial (decode-bound)"),
+        (Route::Jpeg, "jpeg (decode-bound)"),
+    ] {
+        let router = Router::new(route);
+        let t0 = Instant::now();
+        let mut images = 0usize;
+        for _ in 0..passes.max(3) {
+            for (bytes, _) in &files {
+                std::hint::black_box(router.prepare(bytes)?);
+                images += 1;
+            }
+        }
+        rows.push(Fig5Row {
+            dataset: session.cfg.name.clone(),
+            mode: "test",
+            route: label,
+            images_per_sec: images as f64 / t0.elapsed().as_secs_f64(),
+        });
+    }
+
+    // -- training ----------------------------------------------------------
+    for (domain, label) in [
+        (TrainDomain::Spatial, "spatial"),
+        (TrainDomain::Jpeg { num_freqs: 15, method: Method::Asm }, "jpeg"),
+    ] {
+        let cfg = TrainConfig {
+            domain,
+            steps: train_steps,
+            eval_batches: 1,
+            ..Default::default()
+        };
+        let trainer = Trainer::new(session, &data, cfg);
+        let (_, report) = trainer.run()?;
+        rows.push(Fig5Row {
+            dataset: session.cfg.name.clone(),
+            mode: "train",
+            route: label,
+            images_per_sec: report.images_per_sec,
+        });
+    }
+    Ok(rows)
+}
+
+pub fn print_fig5(rows: &[Fig5Row]) {
+    super::print_table(
+        "Figure 5 — throughput (images/s)",
+        &["dataset", "mode", "pipeline", "images/s"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.dataset.clone(),
+                    r.mode.to_string(),
+                    r.route.to_string(),
+                    format!("{:.1}", r.images_per_sec),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+}
+
+/// Exploded-map ablation: DCC forward vs precompute+exploded forward,
+/// plus the paper-faithful materialized harmonic tensor vs our factored
+/// ASM on the pure-rust path.
+#[derive(Clone, Debug)]
+pub struct AblationReport {
+    pub dcc_ms_per_batch: f64,
+    pub exploded_ms_per_batch: f64,
+    pub explode_precompute_ms: f64,
+    pub harmonic_ns_per_block: f64,
+    pub factored_ns_per_block: f64,
+}
+
+pub fn ablation_exploded(session: &Session, iters: usize) -> anyhow::Result<AblationReport> {
+    anyhow::ensure!(session.cfg.name == "mnist", "exploded artifacts: mnist only");
+    let params = ParamSet::init(&session.cfg, 0);
+    let q = crate::jpeg_domain::qvec_flat();
+    let batch = session.engine.manifest.train_batch;
+    let mut rng = crate::util::Rng::new(5);
+    let x = crate::tensor::Tensor::from_vec(
+        &[batch, 1, 32, 32],
+        (0..batch * 1024).map(|_| rng.uniform()).collect(),
+    );
+    let coeffs = crate::jpeg_domain::encode_tensor(&x, &q);
+
+    // warm both executables
+    session.forward_jpeg(&params, &coeffs, &q, 15, Method::Asm)?;
+    let t0 = Instant::now();
+    let xis = session.explode(&params, &q)?;
+    let explode_precompute_ms = t0.elapsed().as_secs_f64() * 1e3;
+    session.forward_jpeg_exploded(&params, &xis, &coeffs, &q, 15)?;
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        session.forward_jpeg(&params, &coeffs, &q, 15, Method::Asm)?;
+    }
+    let dcc_ms_per_batch = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        session.forward_jpeg_exploded(&params, &xis, &coeffs, &q, 15)?;
+    }
+    let exploded_ms_per_batch = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+
+    // pure-rust: materialized H vs factored 3-matmul ASM, per block
+    let h = crate::jpeg_domain::harmonic::harmonic_mixing_tensor(&q);
+    let ctx = crate::jpeg_domain::relu::ReluCtx::new(&q);
+    let mask = crate::jpeg::zigzag::band_mask(8);
+    let mut blk = [0.0f32; 64];
+    for (i, v) in blk.iter_mut().enumerate() {
+        *v = (i as f32 * 0.37).sin();
+    }
+    let nb = 2000;
+    let t0 = Instant::now();
+    for _ in 0..nb {
+        std::hint::black_box(crate::jpeg_domain::harmonic::apply_harmonic(
+            &h,
+            std::hint::black_box(&blk),
+            &mask,
+        ));
+    }
+    let harmonic_ns_per_block = t0.elapsed().as_secs_f64() * 1e9 / nb as f64;
+    let t0 = Instant::now();
+    for _ in 0..nb {
+        std::hint::black_box(crate::jpeg_domain::relu::asm_relu_block(
+            &ctx,
+            std::hint::black_box(&blk),
+            &mask,
+        ));
+    }
+    let factored_ns_per_block = t0.elapsed().as_secs_f64() * 1e9 / nb as f64;
+
+    Ok(AblationReport {
+        dcc_ms_per_batch,
+        exploded_ms_per_batch,
+        explode_precompute_ms,
+        harmonic_ns_per_block,
+        factored_ns_per_block,
+    })
+}
+
+pub fn print_ablation(r: &AblationReport) {
+    super::print_table(
+        "Ablation — exploded map vs decompress-conv-compress (batch 40, mnist)",
+        &["path", "cost"],
+        &[
+            vec!["DCC forward (ms/batch)".into(), format!("{:.2}", r.dcc_ms_per_batch)],
+            vec![
+                "exploded forward (ms/batch)".into(),
+                format!("{:.2}", r.exploded_ms_per_batch),
+            ],
+            vec![
+                "explode precompute (ms, once)".into(),
+                format!("{:.2}", r.explode_precompute_ms),
+            ],
+            vec![
+                "materialized H per block (ns)".into(),
+                format!("{:.0}", r.harmonic_ns_per_block),
+            ],
+            vec![
+                "factored ASM per block (ns)".into(),
+                format!("{:.0}", r.factored_ns_per_block),
+            ],
+        ],
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Engine;
+    use std::path::PathBuf;
+    use std::sync::Arc;
+
+    fn session() -> Option<Session> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Session::new(Arc::new(Engine::new(&dir).unwrap()), "mnist").unwrap())
+    }
+
+    #[test]
+    fn fig5_shape_holds() {
+        let Some(s) = session() else { return };
+        let rows = fig5(&s, 95, 80, 3, 1).unwrap();
+        assert_eq!(rows.len(), 7);
+        let get = |mode: &str, route: &str| {
+            rows.iter()
+                .find(|r| r.mode == mode && r.route == route)
+                .unwrap()
+                .images_per_sec
+        };
+        // the paper's headline ordering, measured in the decode-bound
+        // projection (the paper's accelerator-bound regime): the jpeg
+        // route skips dequantize+IDCT and must win deterministically.
+        assert!(
+            get("test", "jpeg (decode-bound)") > get("test", "spatial (decode-bound)"),
+            "decode-bound: jpeg {} !> spatial {}",
+            get("test", "jpeg (decode-bound)"),
+            get("test", "spatial (decode-bound)")
+        );
+        assert!(get("test", "jpeg") > 0.0 && get("test", "spatial") > 0.0);
+        assert!(get("train", "spatial") > 0.0 && get("train", "jpeg") > 0.0);
+    }
+
+    #[test]
+    fn ablation_runs() {
+        let Some(s) = session() else { return };
+        let r = ablation_exploded(&s, 2).unwrap();
+        assert!(r.dcc_ms_per_batch > 0.0);
+        assert!(r.exploded_ms_per_batch > 0.0);
+        // factored ASM must beat the materialized 64^3 contraction
+        assert!(r.factored_ns_per_block < r.harmonic_ns_per_block);
+    }
+}

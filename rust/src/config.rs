@@ -1,0 +1,223 @@
+//! Config system: a TOML-subset parser (std-only) + typed run configs.
+//!
+//! Supports the subset real deployments of this system need: `[section]`
+//! headers, `key = value` with strings, integers, floats, booleans and
+//! `#` comments.  CLI flags override file values (see `main.rs`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// A parsed config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// section -> key -> value
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> anyhow::Result<Config> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = k.trim().to_string();
+            let val = Self::parse_value(v.trim())
+                .ok_or_else(|| anyhow::anyhow!("line {}: bad value {:?}", lineno + 1, v.trim()))?;
+            cfg.sections.entry(section.clone()).or_default().insert(key, val);
+        }
+        Ok(cfg)
+    }
+
+    fn parse_value(s: &str) -> Option<Value> {
+        if let Some(q) = s.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+            return Some(Value::Str(q.to_string()));
+        }
+        match s {
+            "true" => return Some(Value::Bool(true)),
+            "false" => return Some(Value::Bool(false)),
+            _ => {}
+        }
+        if let Ok(i) = s.parse::<i64>() {
+            return Some(Value::Int(i));
+        }
+        if let Ok(f) = s.parse::<f64>() {
+            return Some(Value::Float(f));
+        }
+        None
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Config> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key)
+            .and_then(|v| v.as_i64())
+            .map(|i| i as usize)
+            .unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, section: &str, key: &str, default: f32) -> f32 {
+        self.get(section, key)
+            .and_then(|v| v.as_f64())
+            .map(|f| f as f32)
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+/// Shared run settings resolved from config + CLI.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub artifacts_dir: PathBuf,
+    pub dataset: String,
+    pub quality: u8,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            dataset: "mnist".to_string(),
+            quality: 95,
+            seed: 0,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_config(cfg: &Config) -> RunConfig {
+        let d = RunConfig::default();
+        RunConfig {
+            artifacts_dir: PathBuf::from(cfg.str_or(
+                "run",
+                "artifacts_dir",
+                d.artifacts_dir.to_str().unwrap(),
+            )),
+            dataset: cfg.str_or("run", "dataset", &d.dataset),
+            quality: cfg.usize_or("run", "quality", d.quality as usize) as u8,
+            seed: cfg.usize_or("run", "seed", d.seed as usize) as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# a comment
+[run]
+dataset = "cifar10"
+quality = 85
+seed = 3
+
+[train]
+steps = 200
+lr = 0.05
+verbose = true
+"#;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("run", "dataset", "x"), "cifar10");
+        assert_eq!(c.usize_or("run", "quality", 0), 85);
+        assert_eq!(c.usize_or("train", "steps", 0), 200);
+        assert!((c.f32_or("train", "lr", 0.0) - 0.05).abs() < 1e-9);
+        assert!(c.bool_or("train", "verbose", false));
+    }
+
+    #[test]
+    fn defaults_for_missing() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.usize_or("nope", "k", 7), 7);
+        assert_eq!(c.str_or("run", "nope", "d"), "d");
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let c = Config::parse("# only a comment\n\n[a]\nx = 1 # trailing\n").unwrap();
+        assert_eq!(c.usize_or("a", "x", 0), 1);
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(Config::parse("[a]\nnot a kv\n").is_err());
+        assert!(Config::parse("[a]\nx = @@@\n").is_err());
+    }
+
+    #[test]
+    fn run_config_from() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let r = RunConfig::from_config(&c);
+        assert_eq!(r.dataset, "cifar10");
+        assert_eq!(r.quality, 85);
+        assert_eq!(r.seed, 3);
+    }
+}

@@ -1,0 +1,147 @@
+//! Dynamic batcher: coalesce requests into compiled batch shapes.
+//!
+//! Size-or-deadline policy (the standard serving tradeoff): a batch is
+//! released when it reaches `max_batch` items or the oldest item has
+//! waited `max_wait`.  Generic over the item type so the serving path
+//! and tests can use it with plain values.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 40, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// Pull-side dynamic batcher over an mpsc receiver.
+pub struct DynamicBatcher<T> {
+    rx: Receiver<T>,
+    cfg: BatcherConfig,
+}
+
+impl<T> DynamicBatcher<T> {
+    pub fn new(rx: Receiver<T>, cfg: BatcherConfig) -> Self {
+        assert!(cfg.max_batch > 0);
+        DynamicBatcher { rx, cfg }
+    }
+
+    /// Block for the next batch.  Returns `None` when the channel is
+    /// closed and drained (clean shutdown).
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        // block for the first item
+        let first = match self.rx.recv() {
+            Ok(v) => v,
+            Err(_) => return None,
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.cfg.max_wait;
+        while batch.len() < self.cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(v) => batch.push(v),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn full_batch_released_immediately() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = DynamicBatcher::new(
+            rx,
+            BatcherConfig { max_batch: 4, max_wait: Duration::from_secs(10) },
+        );
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn deadline_releases_partial_batch() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let b = DynamicBatcher::new(
+            rx,
+            BatcherConfig { max_batch: 40, max_wait: Duration::from_millis(20) },
+        );
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![1]);
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(15), "{waited:?}");
+        drop(tx);
+    }
+
+    #[test]
+    fn shutdown_returns_none() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        let b = DynamicBatcher::new(rx, BatcherConfig::default());
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn drains_pending_before_shutdown() {
+        let (tx, rx) = channel();
+        tx.send(7).unwrap();
+        tx.send(8).unwrap();
+        drop(tx);
+        let b = DynamicBatcher::new(
+            rx,
+            BatcherConfig { max_batch: 10, max_wait: Duration::from_millis(1) },
+        );
+        assert_eq!(b.next_batch().unwrap(), vec![7, 8]);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn concurrent_producers() {
+        let (tx, rx) = channel();
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    for j in 0..5 {
+                        tx.send(i * 10 + j).unwrap();
+                    }
+                })
+            })
+            .collect();
+        drop(tx);
+        for h in handles {
+            h.join().unwrap();
+        }
+        let b = DynamicBatcher::new(
+            rx,
+            BatcherConfig { max_batch: 40, max_wait: Duration::from_millis(10) },
+        );
+        let mut total = 0;
+        while let Some(batch) = b.next_batch() {
+            total += batch.len();
+        }
+        assert_eq!(total, 20);
+    }
+}

@@ -1,0 +1,210 @@
+//! Serving metrics: latency histogram + throughput counters.
+//!
+//! Log-bucketed histogram (1us .. ~100s, 10 buckets/decade) so p50/p95/
+//! p99 are O(1) to read and the recording path is lock-cheap.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+const BUCKETS_PER_DECADE: usize = 10;
+const DECADES: usize = 8; // 1us .. 100s
+const NBUCKETS: usize = BUCKETS_PER_DECADE * DECADES;
+
+/// Lock-free log-bucketed latency histogram.
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(us: f64) -> usize {
+        if us <= 1.0 {
+            return 0;
+        }
+        let b = (us.log10() * BUCKETS_PER_DECADE as f64) as usize;
+        b.min(NBUCKETS - 1)
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_secs_f64() * 1e6;
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Upper edge (us) of the bucket containing quantile `q` in [0,1].
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 10f64.powf((i + 1) as f64 / BUCKETS_PER_DECADE as f64);
+            }
+        }
+        10f64.powf(NBUCKETS as f64 / BUCKETS_PER_DECADE as f64)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+}
+
+/// Aggregate serving metrics.
+pub struct Metrics {
+    pub request_latency: LatencyHistogram,
+    pub batch_sizes: AtomicU64,
+    pub batches: AtomicU64,
+    pub requests: AtomicU64,
+    pub started: std::time::Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            request_latency: LatencyHistogram::new(),
+            batch_sizes: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            started: std::time::Instant::now(),
+        }
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batch_sizes.fetch_add(size as u64, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.requests.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let requests = self.requests.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        Snapshot {
+            requests,
+            batches,
+            mean_batch: if batches == 0 {
+                0.0
+            } else {
+                self.batch_sizes.load(Ordering::Relaxed) as f64 / batches as f64
+            },
+            p50_ms: self.request_latency.quantile_us(0.50) / 1e3,
+            p95_ms: self.request_latency.quantile_us(0.95) / 1e3,
+            p99_ms: self.request_latency.quantile_us(0.99) / 1e3,
+            mean_ms: self.request_latency.mean_us() / 1e3,
+            throughput: requests as f64 / self.started.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+/// Point-in-time metrics view.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub throughput: f64,
+}
+
+impl std::fmt::Display for Snapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "requests={} batches={} mean_batch={:.1} p50={:.2}ms p95={:.2}ms p99={:.2}ms mean={:.2}ms throughput={:.1}/s",
+            self.requests, self.batches, self.mean_batch,
+            self.p50_ms, self.p95_ms, self.p99_ms, self.mean_ms, self.throughput
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_us(0.5), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn quantiles_ordered() {
+        let h = LatencyHistogram::new();
+        for ms in [1u64, 2, 3, 5, 8, 13, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        let p50 = h.quantile_us(0.5);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 >= 1_000.0 && p50 <= 20_000.0, "{p50}");
+        assert!(p99 >= 50_000.0, "{p99}");
+    }
+
+    #[test]
+    fn mean_tracks() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_millis(10));
+        h.record(Duration::from_millis(30));
+        assert!((h.mean_us() - 20_000.0).abs() < 1_500.0);
+    }
+
+    #[test]
+    fn metrics_snapshot() {
+        let m = Metrics::new();
+        m.record_batch(8);
+        m.record_batch(4);
+        m.request_latency.record(Duration::from_millis(5));
+        let s = m.snapshot();
+        assert_eq!(s.requests, 12);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch - 6.0).abs() < 1e-9);
+        assert!(s.throughput > 0.0);
+        assert!(!s.to_string().is_empty());
+    }
+
+    #[test]
+    fn bucket_monotone() {
+        assert!(LatencyHistogram::bucket_of(1.0) <= LatencyHistogram::bucket_of(10.0));
+        assert!(LatencyHistogram::bucket_of(10.0) < LatencyHistogram::bucket_of(1e6));
+        assert_eq!(LatencyHistogram::bucket_of(1e20), NBUCKETS - 1);
+    }
+}

@@ -1,0 +1,29 @@
+//! L3 coordinator: the serving and training runtime around the AOT
+//! artifacts.
+//!
+//! The serving side is the paper's deployment story: requests arrive as
+//! entropy-coded JPEG bytes; the [`router`] picks a pipeline (spatial =
+//! full decompression -> pixel network; jpeg = entropy decode only ->
+//! coefficient network); the [`batcher`] coalesces requests into the
+//! compiled batch shapes; [`metrics`] tracks latency/throughput — the
+//! quantities Figure 5 reports.
+//!
+//! The training side ([`training`]) drives the train-step artifacts with
+//! synthetic data batches, logging the loss curve and checkpointing
+//! through [`crate::params`].
+//!
+//! No tokio in this environment's vendored crate set: the runtime is
+//! std::thread + mpsc, which for a CPU PJRT backend (blocking execute)
+//! is the honest architecture anyway.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+pub mod training;
+
+pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use metrics::{LatencyHistogram, Metrics, Snapshot};
+pub use router::{Route, Router};
+pub use server::{InferRequest, InferResponse, Server, ServerConfig};
+pub use training::{TrainConfig, TrainReport, Trainer};

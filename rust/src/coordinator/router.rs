@@ -1,0 +1,160 @@
+//! Route selection + per-route input preparation.
+//!
+//! The two pipelines the paper compares (Figure 5):
+//! * **Spatial** — full JPEG decompression (entropy decode + dequantize +
+//!   un-zigzag + IDCT + level shift) to component planes, normalized to
+//!   [0,1], fed to the spatial network artifact.
+//! * **Jpeg** — entropy decode only; integer coefficients are mapped to
+//!   the network's domain representation (a DC shift + 1/255 scale,
+//!   `CoeffImage::to_network_input`), fed to the JPEG-domain artifact.
+//!
+//! Both routes share the entropy decoder; everything the jpeg route
+//! skips is exactly the paper's "costly decompression step".
+
+use crate::jpeg::{self, codec};
+use crate::tensor::Tensor;
+
+/// Which network consumes the request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    Spatial,
+    Jpeg,
+}
+
+impl std::str::FromStr for Route {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "spatial" => Ok(Route::Spatial),
+            "jpeg" => Ok(Route::Jpeg),
+            other => Err(format!("unknown route {other:?}")),
+        }
+    }
+}
+
+/// Prepared model input for one image.
+pub struct Prepared {
+    /// (C, 32, 32) pixels for Spatial; (C, 4, 4, 64) coefficients for Jpeg
+    pub input: Tensor,
+    /// quantization vector of the luma channel (Jpeg route)
+    pub qvec: [f32; 64],
+}
+
+/// Stateless request preparation (the per-image decode work).
+pub struct Router {
+    pub route: Route,
+}
+
+impl Router {
+    pub fn new(route: Route) -> Self {
+        Router { route }
+    }
+
+    /// Decode one JPEG file into the route's network input.
+    pub fn prepare(&self, jpeg_bytes: &[u8]) -> anyhow::Result<Prepared> {
+        let coeffs = codec::decode_to_coefficients(jpeg_bytes)?;
+        // the network artifacts take one qvec per image (the paper's
+        // single-J formulation); reject mixed-table files up front
+        // rather than silently mis-dequantizing chroma
+        if self.route == Route::Jpeg {
+            for c in 1..coeffs.channels {
+                anyhow::ensure!(
+                    coeffs.qtables[c] == coeffs.qtables[0],
+                    "jpeg route requires a single quant table across \
+                     components (encode with separate_chroma_table=false)"
+                );
+            }
+        }
+        let qvec = coeffs.qvec(0);
+        match self.route {
+            Route::Spatial => {
+                let h = coeffs.blocks_h * jpeg::BLK;
+                let w = coeffs.blocks_w * jpeg::BLK;
+                // the paper's "costly decompression step":
+                let planes = codec::decode_planes(&coeffs, h, w);
+                Ok(Prepared { input: planes.to_unit_tensor(), qvec })
+            }
+            Route::Jpeg => Ok(Prepared { input: coeffs.to_network_input(), qvec }),
+        }
+    }
+
+    /// Stack per-image inputs into a batch tensor.
+    pub fn stack(inputs: &[Tensor]) -> Tensor {
+        assert!(!inputs.is_empty());
+        let item_shape = inputs[0].shape().to_vec();
+        let mut shape = vec![inputs.len()];
+        shape.extend_from_slice(&item_shape);
+        let mut data = Vec::with_capacity(inputs.len() * inputs[0].len());
+        for t in inputs {
+            assert_eq!(t.shape(), item_shape.as_slice(), "ragged batch");
+            data.extend_from_slice(t.data());
+        }
+        Tensor::from_vec(&shape, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Dataset, Split, SynthKind};
+    use crate::jpeg_domain::{decode_tensor, encode_tensor};
+
+    fn one_jpeg() -> Vec<u8> {
+        let d = Dataset::synthetic(SynthKind::Mnist, 2, 1, 1);
+        d.jpeg_bytes(Split::Test, 90).remove(0).0
+    }
+
+    #[test]
+    fn route_parse() {
+        assert_eq!("spatial".parse::<Route>().unwrap(), Route::Spatial);
+        assert_eq!("jpeg".parse::<Route>().unwrap(), Route::Jpeg);
+        assert!("x".parse::<Route>().is_err());
+    }
+
+    #[test]
+    fn spatial_prepare_shapes() {
+        let r = Router::new(Route::Spatial);
+        let p = r.prepare(&one_jpeg()).unwrap();
+        assert_eq!(p.input.shape(), &[1, 32, 32]);
+    }
+
+    #[test]
+    fn jpeg_prepare_shapes() {
+        let r = Router::new(Route::Jpeg);
+        let p = r.prepare(&one_jpeg()).unwrap();
+        assert_eq!(p.input.shape(), &[1, 4, 4, 64]);
+        assert!(p.qvec.iter().all(|&q| q >= 1.0));
+    }
+
+    #[test]
+    fn routes_produce_equivalent_activations() {
+        // decode(jpeg-route input) == spatial-route input: the two
+        // pipelines feed the model the same image.
+        let bytes = one_jpeg();
+        let sp = Router::new(Route::Spatial).prepare(&bytes).unwrap();
+        let jp = Router::new(Route::Jpeg).prepare(&bytes).unwrap();
+        let coeffs = jp.input.clone().reshape(&[1, 1, 4, 4, 64]);
+        let pixels = decode_tensor(&coeffs, &jp.qvec);
+        let spatial = sp.input.clone().reshape(&[1, 1, 32, 32]);
+        assert!(pixels.max_abs_diff(&spatial) < 1e-3);
+        // and re-encoding the spatial input reproduces the coefficients
+        let re = encode_tensor(&spatial, &jp.qvec);
+        assert!(re.max_abs_diff(&coeffs) < 1e-3);
+    }
+
+    #[test]
+    fn stack_batches() {
+        let a = Tensor::full(&[2, 3], 1.0);
+        let b = Tensor::full(&[2, 3], 2.0);
+        let s = Router::stack(&[a, b]);
+        assert_eq!(s.shape(), &[2, 2, 3]);
+        assert_eq!(s.data()[0], 1.0);
+        assert_eq!(s.data()[6], 2.0);
+    }
+
+    #[test]
+    fn bad_bytes_error() {
+        let r = Router::new(Route::Jpeg);
+        assert!(r.prepare(&[0, 1, 2]).is_err());
+    }
+}

@@ -1,0 +1,354 @@
+//! The serving loop: requests -> dynamic batcher -> route decode ->
+//! PJRT forward -> responses, with metrics.
+//!
+//! One worker thread owns the session and pulls batches; callers submit
+//! JPEG bytes and receive logits over a oneshot-style channel.  This is
+//! the harness behind the Fig-5 inference throughput comparison and the
+//! `serve` CLI subcommand.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::jpeg_domain::relu::Method;
+use crate::params::ParamSet;
+use crate::runtime::Session;
+use crate::tensor::Tensor;
+
+use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::metrics::Metrics;
+use super::router::{Route, Router};
+
+/// One inference request: a JPEG file + a reply channel.
+pub struct InferRequest {
+    pub jpeg_bytes: Vec<u8>,
+    pub submitted: Instant,
+    pub reply: Sender<anyhow::Result<InferResponse>>,
+}
+
+/// The response: class logits + prediction.
+#[derive(Clone, Debug)]
+pub struct InferResponse {
+    pub logits: Vec<f32>,
+    pub predicted: usize,
+    pub latency: Duration,
+}
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub route: Route,
+    pub num_freqs: usize,
+    pub method: Method,
+    pub batcher: BatcherConfig,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            route: Route::Jpeg,
+            num_freqs: 15,
+            method: Method::Asm,
+            batcher: BatcherConfig::default(),
+        }
+    }
+}
+
+/// A running server: submit handle + worker thread + metrics.
+pub struct Server {
+    tx: Option<Sender<InferRequest>>,
+    worker: Option<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Server {
+    /// Spawn the worker thread.  The PJRT client is `Rc`-based (not
+    /// `Send`), so the worker constructs its own `Session` via the
+    /// factory; the convenience `start_default` builds one from an
+    /// artifacts dir + config name.
+    pub fn start<F>(factory: F, cfg: ServerConfig) -> Server
+    where
+        F: FnOnce() -> anyhow::Result<(Session, ParamSet)> + Send + 'static,
+    {
+        let (tx, rx) = channel::<InferRequest>();
+        let metrics = Arc::new(Metrics::new());
+        let m = metrics.clone();
+        let worker = std::thread::spawn(move || {
+            let (session, params) = match factory() {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("server init failed: {e}");
+                    return;
+                }
+            };
+            Self::worker_loop(session, params, cfg, rx, m);
+        });
+        Server { tx: Some(tx), worker: Some(worker), metrics }
+    }
+
+    /// Start a server over an artifacts directory, a model config name
+    /// and a parameter seed or checkpoint path.
+    pub fn start_default(
+        artifacts: std::path::PathBuf,
+        config: String,
+        checkpoint: Option<std::path::PathBuf>,
+        seed: u64,
+        cfg: ServerConfig,
+    ) -> Server {
+        Self::start(
+            move || {
+                let engine = Arc::new(crate::runtime::Engine::new(&artifacts)?);
+                let session = Session::new(engine, &config)?;
+                let params = match checkpoint {
+                    Some(p) => ParamSet::load(&session.cfg, &p)?,
+                    None => ParamSet::init(&session.cfg, seed),
+                };
+                Ok((session, params))
+            },
+            cfg,
+        )
+    }
+
+    fn worker_loop(
+        session: Session,
+        params: ParamSet,
+        cfg: ServerConfig,
+        rx: Receiver<InferRequest>,
+        metrics: Arc<Metrics>,
+    ) {
+        let batcher = DynamicBatcher::new(rx, cfg.batcher);
+        let router = Router::new(cfg.route);
+        while let Some(batch) = batcher.next_batch() {
+            metrics.record_batch(batch.len());
+            Self::serve_batch(&session, &params, &cfg, &router, batch, &metrics);
+        }
+    }
+
+    fn serve_batch(
+        session: &Session,
+        params: &ParamSet,
+        cfg: &ServerConfig,
+        router: &Router,
+        batch: Vec<InferRequest>,
+        metrics: &Metrics,
+    ) {
+        // per-image decode (the route-dependent cost)
+        let mut prepared = Vec::with_capacity(batch.len());
+        let mut requests = Vec::with_capacity(batch.len());
+        let mut qvec = crate::jpeg_domain::qvec_flat();
+        for req in batch {
+            match router.prepare(&req.jpeg_bytes) {
+                Ok(p) => {
+                    qvec = p.qvec;
+                    prepared.push(p.input);
+                    requests.push(req);
+                }
+                Err(e) => {
+                    let _ = req.reply.send(Err(e));
+                }
+            }
+        }
+        if prepared.is_empty() {
+            return;
+        }
+        let x = Router::stack(&prepared);
+        let result = match cfg.route {
+            Route::Spatial => session.forward_spatial(params, &x),
+            // exact setting -> the fused serving fast path (identical
+            // function, one XLA GEMM decode instead of per-layer domain
+            // ops; EXPERIMENTS.md §Perf)
+            Route::Jpeg if cfg.num_freqs == 15 && cfg.method == Method::Asm => {
+                session.forward_jpeg_fused(params, &x, &qvec)
+            }
+            Route::Jpeg => {
+                session.forward_jpeg(params, &x, &qvec, cfg.num_freqs, cfg.method)
+            }
+        };
+        match result {
+            Ok(logits) => {
+                let classes = logits.shape()[1];
+                let preds = logits.argmax_last();
+                for (i, req) in requests.into_iter().enumerate() {
+                    let latency = req.submitted.elapsed();
+                    metrics.request_latency.record(latency);
+                    let row = logits.data()[i * classes..(i + 1) * classes].to_vec();
+                    let _ = req.reply.send(Ok(InferResponse {
+                        logits: row,
+                        predicted: preds[i],
+                        latency,
+                    }));
+                }
+            }
+            Err(e) => {
+                for req in requests {
+                    let _ = req.reply.send(Err(anyhow::anyhow!("forward failed: {e}")));
+                }
+            }
+        }
+    }
+
+    /// Submit a request; returns the receiver for the response.
+    pub fn submit(&self, jpeg_bytes: Vec<u8>) -> Receiver<anyhow::Result<InferResponse>> {
+        let (reply, rx) = channel();
+        let req = InferRequest { jpeg_bytes, submitted: Instant::now(), reply };
+        self.tx
+            .as_ref()
+            .expect("server running")
+            .send(req)
+            .expect("worker alive");
+        rx
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn infer(&self, jpeg_bytes: Vec<u8>) -> anyhow::Result<InferResponse> {
+        self.submit(jpeg_bytes)
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server shut down"))?
+    }
+
+    /// Graceful shutdown: drain, then join the worker.
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Unused-but-typed helper for tests: run `n` requests through a server
+/// and return (accuracy, snapshot).
+pub fn drive_requests(
+    server: &Server,
+    files: &[(Vec<u8>, u32)],
+) -> anyhow::Result<f32> {
+    let receivers: Vec<_> = files
+        .iter()
+        .map(|(bytes, label)| (server.submit(bytes.clone()), *label))
+        .collect();
+    let mut correct = 0usize;
+    for (rx, label) in &receivers {
+        let resp = rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server shut down"))??;
+        if resp.predicted == *label as usize {
+            correct += 1;
+        }
+    }
+    Ok(correct as f32 / files.len().max(1) as f32)
+}
+
+#[allow(unused)]
+fn _assert_tensor_unused(_: Tensor) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Dataset, Split, SynthKind};
+    use std::path::PathBuf;
+
+    fn artifacts() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(dir)
+    }
+
+    fn start(route: Route, seed: u64, batcher: BatcherConfig) -> Option<Server> {
+        let dir = artifacts()?;
+        Some(Server::start_default(
+            dir,
+            "mnist".into(),
+            None,
+            seed,
+            ServerConfig { route, batcher, ..Default::default() },
+        ))
+    }
+
+    #[test]
+    fn serve_roundtrip_both_routes() {
+        let Some(_) = artifacts() else { return };
+        let data = Dataset::synthetic(SynthKind::Mnist, 4, 6, 1);
+        let files = data.jpeg_bytes(Split::Test, 95);
+        for route in [Route::Spatial, Route::Jpeg] {
+            let server = start(route, 0, BatcherConfig::default()).unwrap();
+            for (bytes, _) in &files {
+                let resp = server.infer(bytes.clone()).unwrap();
+                assert_eq!(resp.logits.len(), 10);
+                assert!(resp.predicted < 10);
+            }
+            let snap = server.metrics.snapshot();
+            assert_eq!(snap.requests, files.len() as u64);
+            server.shutdown();
+        }
+    }
+
+    #[test]
+    fn routes_agree_on_predictions() {
+        // phi=15 + same params: both pipelines must predict identically
+        let Some(_) = artifacts() else { return };
+        let data = Dataset::synthetic(SynthKind::Mnist, 4, 8, 2);
+        let files = data.jpeg_bytes(Split::Test, 95);
+        let mut preds = Vec::new();
+        for route in [Route::Spatial, Route::Jpeg] {
+            let server = start(route, 7, BatcherConfig::default()).unwrap();
+            let p: Vec<usize> = files
+                .iter()
+                .map(|(b, _)| server.infer(b.clone()).unwrap().predicted)
+                .collect();
+            preds.push(p);
+            server.shutdown();
+        }
+        assert_eq!(preds[0], preds[1]);
+    }
+
+    #[test]
+    fn invalid_request_gets_error_not_hang() {
+        let Some(server) = start(Route::Jpeg, 0, BatcherConfig::default()) else {
+            return;
+        };
+        let err = server.infer(vec![1, 2, 3]);
+        assert!(err.is_err());
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submitters_batched() {
+        let Some(server) = start(
+            Route::Jpeg,
+            0,
+            BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(20) },
+        ) else {
+            return;
+        };
+        let server = Arc::new(server);
+        let data = Dataset::synthetic(SynthKind::Mnist, 2, 4, 3);
+        let files = Arc::new(data.jpeg_bytes(Split::Test, 95));
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let s = server.clone();
+                let f = files.clone();
+                std::thread::spawn(move || {
+                    s.infer(f[i % f.len()].0.clone()).unwrap().predicted
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.requests, 4);
+        assert!(snap.batches <= 4);
+    }
+}

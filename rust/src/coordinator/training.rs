@@ -1,0 +1,225 @@
+//! Training driver: runs the AOT train-step artifacts over synthetic
+//! batches, logs the loss curve, evaluates, and checkpoints.
+//!
+//! This is the machinery behind Table 1 (train spatial -> convert ->
+//! eval JPEG), Fig 4c (train IN the JPEG domain at each phi) and the
+//! training half of Fig 5.
+
+use std::path::PathBuf;
+
+use crate::data::{BatchIter, Dataset, Split};
+use crate::jpeg_domain::relu::Method;
+use crate::jpeg_domain::{encode_tensor, qvec_flat};
+use crate::params::ParamSet;
+use crate::runtime::session::accuracy;
+use crate::runtime::{Session, TrainState};
+use crate::tensor::Tensor;
+
+/// Which domain the train steps run in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainDomain {
+    Spatial,
+    Jpeg { num_freqs: usize, method: Method },
+}
+
+/// Trainer configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub domain: TrainDomain,
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub log_every: usize,
+    pub eval_batches: usize,
+    pub checkpoint: Option<PathBuf>,
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            domain: TrainDomain::Spatial,
+            steps: 300,
+            lr: 0.05,
+            seed: 0,
+            log_every: 25,
+            eval_batches: 4,
+            checkpoint: None,
+            verbose: false,
+        }
+    }
+}
+
+/// Everything the run produced.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub losses: Vec<f32>,
+    pub train_accuracy: f32,
+    pub test_accuracy: f32,
+    pub steps_per_sec: f64,
+    pub images_per_sec: f64,
+}
+
+/// The training coordinator.
+pub struct Trainer<'a> {
+    pub session: &'a Session,
+    pub dataset: &'a Dataset,
+    pub cfg: TrainConfig,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(session: &'a Session, dataset: &'a Dataset, cfg: TrainConfig) -> Self {
+        Trainer { session, dataset, cfg }
+    }
+
+    fn batch_inputs(&self, idx: &[usize], split: Split) -> (Tensor, Vec<i32>) {
+        self.dataset.pixel_batch(idx, split)
+    }
+
+    /// Run the configured number of steps from a fresh init.
+    pub fn run(&self) -> anyhow::Result<(TrainState, TrainReport)> {
+        let mut state = TrainState::init(&self.session.cfg, self.cfg.seed);
+        let report = self.run_from(&mut state)?;
+        Ok((state, report))
+    }
+
+    /// Run steps, mutating the given state (resume / fine-tune).
+    pub fn run_from(&self, state: &mut TrainState) -> anyhow::Result<TrainReport> {
+        let batch = self.session.engine.manifest.train_batch;
+        let q = qvec_flat();
+        let mut iter = BatchIter::new(
+            self.dataset.train.len(),
+            batch,
+            self.cfg.seed ^ 0xBA7C4,
+        );
+        let mut losses = Vec::with_capacity(self.cfg.steps);
+        let t0 = std::time::Instant::now();
+        for step in 0..self.cfg.steps {
+            let idx = iter.next().expect("infinite iter");
+            let (x, y) = self.batch_inputs(&idx, Split::Train);
+            let loss = match self.cfg.domain {
+                TrainDomain::Spatial => {
+                    self.session.train_step_spatial(state, &x, &y, self.cfg.lr)?
+                }
+                TrainDomain::Jpeg { num_freqs, method } => {
+                    let coeffs = encode_tensor(&x, &q);
+                    self.session.train_step_jpeg(
+                        state, &coeffs, &q, num_freqs, method, &y, self.cfg.lr,
+                    )?
+                }
+            };
+            anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}");
+            losses.push(loss);
+            if self.cfg.verbose && (step + 1) % self.cfg.log_every == 0 {
+                eprintln!(
+                    "step {:>5}  loss {:.4}  ({:.1} steps/s)",
+                    step + 1,
+                    loss,
+                    (step + 1) as f64 / t0.elapsed().as_secs_f64()
+                );
+            }
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+
+        let train_accuracy = self.evaluate(&state.params, Split::Train)?;
+        let test_accuracy = self.evaluate(&state.params, Split::Test)?;
+        if let Some(path) = &self.cfg.checkpoint {
+            state.params.save(path)?;
+        }
+        Ok(TrainReport {
+            losses,
+            train_accuracy,
+            test_accuracy,
+            steps_per_sec: self.cfg.steps as f64 / elapsed,
+            images_per_sec: (self.cfg.steps * batch) as f64 / elapsed,
+        })
+    }
+
+    /// Eval accuracy through the same domain the model trains in
+    /// (phi = 15 for JPEG: exact).
+    pub fn evaluate(&self, params: &ParamSet, split: Split) -> anyhow::Result<f32> {
+        let batch = self.session.engine.manifest.train_batch;
+        let q = qvec_flat();
+        let n = self.cfg.eval_batches;
+        let mut acc = 0.0f32;
+        for b in 0..n {
+            let idx: Vec<usize> = (b * batch..(b + 1) * batch).collect();
+            let (x, y) = self.batch_inputs(&idx, split);
+            let logits = match self.cfg.domain {
+                TrainDomain::Spatial => self.session.forward_spatial(params, &x)?,
+                TrainDomain::Jpeg { num_freqs, method } => {
+                    let coeffs = encode_tensor(&x, &q);
+                    self.session.forward_jpeg(params, &coeffs, &q, num_freqs, method)?
+                }
+            };
+            acc += accuracy(&logits, &y);
+        }
+        Ok(acc / n as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthKind;
+    use crate::runtime::Engine;
+    use std::path::PathBuf;
+    use std::sync::Arc;
+
+    fn session() -> Option<Session> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        let engine = Arc::new(Engine::new(&dir).unwrap());
+        Some(Session::new(engine, "mnist").unwrap())
+    }
+
+    #[test]
+    fn spatial_training_learns() {
+        let Some(s) = session() else { return };
+        let data = Dataset::synthetic(SynthKind::Mnist, 400, 160, 1);
+        let cfg = TrainConfig { steps: 60, eval_batches: 2, ..Default::default() };
+        let trainer = Trainer::new(&s, &data, cfg);
+        let (_, report) = trainer.run().unwrap();
+        assert!(report.losses[0] > *report.losses.last().unwrap());
+        assert!(report.test_accuracy > 0.2, "{}", report.test_accuracy);
+        assert!(report.steps_per_sec > 0.0);
+    }
+
+    #[test]
+    fn jpeg_training_learns() {
+        let Some(s) = session() else { return };
+        let data = Dataset::synthetic(SynthKind::Mnist, 400, 160, 2);
+        let cfg = TrainConfig {
+            domain: TrainDomain::Jpeg { num_freqs: 15, method: Method::Asm },
+            steps: 60,
+            eval_batches: 2,
+            ..Default::default()
+        };
+        let trainer = Trainer::new(&s, &data, cfg);
+        let (_, report) = trainer.run().unwrap();
+        assert!(report.losses[0] > *report.losses.last().unwrap());
+        assert!(report.test_accuracy > 0.2, "{}", report.test_accuracy);
+    }
+
+    #[test]
+    fn checkpoint_written_and_loadable() {
+        let Some(s) = session() else { return };
+        let data = Dataset::synthetic(SynthKind::Mnist, 80, 40, 3);
+        let path = std::env::temp_dir().join("trainer_test.ckpt");
+        let cfg = TrainConfig {
+            steps: 2,
+            eval_batches: 1,
+            checkpoint: Some(path.clone()),
+            ..Default::default()
+        };
+        let (state, _) = Trainer::new(&s, &data, cfg).run().unwrap();
+        let loaded = ParamSet::load(&s.cfg, &path).unwrap();
+        for (a, b) in state.params.tensors.iter().zip(&loaded.tensors) {
+            assert_eq!(a, b);
+        }
+        std::fs::remove_file(path).unwrap();
+    }
+}

@@ -1,0 +1,163 @@
+//! Dataset wrapper: train/test splits, batch iteration, and the two
+//! input encodings (pixels for the spatial route, JPEG bytes for the
+//! serving pipelines).
+
+use crate::jpeg::{encode, EncodeOptions};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+use super::synth::{generate, SynthKind};
+use super::Example;
+
+/// Which split to draw.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+/// An in-memory dataset with a fixed train/test split.
+pub struct Dataset {
+    pub kind: SynthKind,
+    pub train: Vec<Example>,
+    pub test: Vec<Example>,
+}
+
+impl Dataset {
+    /// Generate `n_train` + `n_test` examples, disjoint streams.
+    pub fn synthetic(kind: SynthKind, n_train: usize, n_test: usize, seed: u64) -> Self {
+        Dataset {
+            kind,
+            train: generate(kind, n_train, seed),
+            test: generate(kind, n_test, seed.wrapping_add(0x7E57)),
+        }
+    }
+
+    pub fn split(&self, s: Split) -> &[Example] {
+        match s {
+            Split::Train => &self.train,
+            Split::Test => &self.test,
+        }
+    }
+
+    /// Batch of normalized pixels (N, C, 32, 32) in [0,1] + labels.
+    pub fn pixel_batch(&self, idx: &[usize], s: Split) -> (Tensor, Vec<i32>) {
+        let ex = self.split(s);
+        let c = self.kind.channels();
+        let mut data = Vec::with_capacity(idx.len() * c * 32 * 32);
+        let mut labels = Vec::with_capacity(idx.len());
+        for &i in idx {
+            let e = &ex[i % ex.len()];
+            data.extend(e.pixels.data.iter().map(|&v| v / 255.0));
+            labels.push(e.label as i32);
+        }
+        (
+            Tensor::from_vec(&[idx.len(), c, 32, 32], data),
+            labels,
+        )
+    }
+
+    /// JPEG-compress a split to in-memory .jpg byte vectors (the serving
+    /// input format for both routes).
+    pub fn jpeg_bytes(&self, s: Split, quality: u8) -> Vec<(Vec<u8>, u32)> {
+        self.split(s)
+            .iter()
+            .map(|e| {
+                (
+                    encode(&e.pixels, EncodeOptions::quality(quality)).expect("encode"),
+                    e.label,
+                )
+            })
+            .collect()
+    }
+}
+
+/// Shuffled epoch iterator over batch index lists.
+pub struct BatchIter {
+    order: Vec<usize>,
+    pos: usize,
+    batch: usize,
+    rng: Rng,
+}
+
+impl BatchIter {
+    pub fn new(n: usize, batch: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        BatchIter { order, pos: 0, batch, rng }
+    }
+}
+
+impl Iterator for BatchIter {
+    type Item = Vec<usize>;
+
+    /// Infinite stream of full batches; reshuffles each epoch.
+    fn next(&mut self) -> Option<Vec<usize>> {
+        if self.pos + self.batch > self.order.len() {
+            self.rng.shuffle(&mut self.order);
+            self.pos = 0;
+        }
+        let out = self.order[self.pos..self.pos + self.batch].to_vec();
+        self.pos += self.batch;
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_sizes() {
+        let d = Dataset::synthetic(SynthKind::Mnist, 100, 40, 1);
+        assert_eq!(d.train.len(), 100);
+        assert_eq!(d.test.len(), 40);
+    }
+
+    #[test]
+    fn train_test_disjoint_streams() {
+        let d = Dataset::synthetic(SynthKind::Mnist, 10, 10, 1);
+        // same index, same label cycle, but different jitter draw
+        assert_ne!(d.train[0].pixels.data, d.test[0].pixels.data);
+    }
+
+    #[test]
+    fn pixel_batch_shape_and_range() {
+        let d = Dataset::synthetic(SynthKind::Cifar10, 20, 5, 2);
+        let (x, y) = d.pixel_batch(&[0, 1, 2, 3], Split::Train);
+        assert_eq!(x.shape(), &[4, 3, 32, 32]);
+        assert_eq!(y.len(), 4);
+        assert!(x.data().iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn jpeg_bytes_decode() {
+        let d = Dataset::synthetic(SynthKind::Mnist, 4, 2, 3);
+        let files = d.jpeg_bytes(Split::Test, 90);
+        assert_eq!(files.len(), 2);
+        for (bytes, _) in &files {
+            let img = crate::jpeg::decode(bytes).unwrap();
+            assert_eq!((img.height, img.width), (32, 32));
+        }
+    }
+
+    #[test]
+    fn batch_iter_covers_epoch() {
+        let mut it = BatchIter::new(10, 3, 4);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..3 {
+            for i in it.next().unwrap() {
+                assert!(seen.insert(i), "dup in epoch");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_iter_infinite() {
+        let mut it = BatchIter::new(5, 2, 5);
+        for _ in 0..20 {
+            assert_eq!(it.next().unwrap().len(), 2);
+        }
+    }
+}

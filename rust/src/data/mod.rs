@@ -1,0 +1,26 @@
+//! Synthetic dataset substrate (DESIGN.md §4 substitution).
+//!
+//! MNIST/CIFAR are not downloadable in this environment, so we generate
+//! deterministic, seeded, class-structured image distributions that
+//! preserve what the paper's experiments actually exercise: a learnable
+//! class structure with JPEG-typical low-frequency energy, identical
+//! inputs to both pipelines, and a non-trivial train/test gap.
+//!
+//! * [`SynthKind::Mnist`] — 10 procedural stroke-glyph classes on 32x32
+//!   grayscale with affine jitter, thickness and noise.
+//! * [`SynthKind::Cifar10`] / [`SynthKind::Cifar100`] — N classes of
+//!   colored texture fields (oriented gratings x palettes x blobs) with
+//!   photometric jitter.
+
+pub mod loader;
+pub mod synth;
+
+pub use loader::{BatchIter, Dataset, Split};
+pub use synth::{generate, SynthKind};
+
+/// One labeled example: planar pixels in [0, 255].
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub pixels: crate::jpeg::PixelImage,
+    pub label: u32,
+}

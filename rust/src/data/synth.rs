@@ -1,0 +1,275 @@
+//! Procedural generators for the three dataset substitutes.
+
+use crate::jpeg::PixelImage;
+use crate::util::Rng;
+
+use super::Example;
+
+/// Which synthetic distribution to draw from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SynthKind {
+    Mnist,
+    Cifar10,
+    Cifar100,
+}
+
+impl SynthKind {
+    pub fn parse(name: &str) -> Option<Self> {
+        match name {
+            "mnist" => Some(SynthKind::Mnist),
+            "cifar10" => Some(SynthKind::Cifar10),
+            "cifar100" => Some(SynthKind::Cifar100),
+            _ => None,
+        }
+    }
+
+    pub fn channels(&self) -> usize {
+        match self {
+            SynthKind::Mnist => 1,
+            _ => 3,
+        }
+    }
+
+    pub fn num_classes(&self) -> usize {
+        match self {
+            SynthKind::Mnist | SynthKind::Cifar10 => 10,
+            SynthKind::Cifar100 => 100,
+        }
+    }
+}
+
+const SIZE: usize = 32;
+
+/// Digit-like stroke templates: each class is a sequence of line segments
+/// in a normalized [0,1]^2 box (loosely the seven-segment shapes).
+fn glyph_strokes(class: u32) -> &'static [((f32, f32), (f32, f32))] {
+    // segments: a=top, b=tr, c=br, d=bottom, e=bl, f=tl, g=middle
+    const A: ((f32, f32), (f32, f32)) = ((0.2, 0.15), (0.8, 0.15));
+    const B: ((f32, f32), (f32, f32)) = ((0.8, 0.15), (0.8, 0.5));
+    const C: ((f32, f32), (f32, f32)) = ((0.8, 0.5), (0.8, 0.85));
+    const D: ((f32, f32), (f32, f32)) = ((0.2, 0.85), (0.8, 0.85));
+    const E: ((f32, f32), (f32, f32)) = ((0.2, 0.5), (0.2, 0.85));
+    const F: ((f32, f32), (f32, f32)) = ((0.2, 0.15), (0.2, 0.5));
+    const G: ((f32, f32), (f32, f32)) = ((0.2, 0.5), (0.8, 0.5));
+    match class {
+        0 => &[A, B, C, D, E, F],
+        1 => &[B, C],
+        2 => &[A, B, G, E, D],
+        3 => &[A, B, G, C, D],
+        4 => &[F, G, B, C],
+        5 => &[A, F, G, C, D],
+        6 => &[A, F, E, D, C, G],
+        7 => &[A, B, C],
+        8 => &[A, B, C, D, E, F, G],
+        _ => &[A, B, C, D, F, G],
+    }
+}
+
+/// Distance from point to segment (for stroke rasterization).
+fn seg_dist(px: f32, py: f32, a: (f32, f32), b: (f32, f32)) -> f32 {
+    let (ax, ay) = a;
+    let (bx, by) = b;
+    let (dx, dy) = (bx - ax, by - ay);
+    let len2 = dx * dx + dy * dy;
+    let t = if len2 > 0.0 {
+        (((px - ax) * dx + (py - ay) * dy) / len2).clamp(0.0, 1.0)
+    } else {
+        0.0
+    };
+    let (cx, cy) = (ax + t * dx, ay + t * dy);
+    ((px - cx).powi(2) + (py - cy).powi(2)).sqrt()
+}
+
+/// One MNIST-like glyph with affine jitter and noise.
+fn mnist_example(class: u32, rng: &mut Rng) -> PixelImage {
+    let mut img = PixelImage::new(1, SIZE, SIZE);
+    let strokes = glyph_strokes(class);
+    // affine jitter
+    let angle = rng.uniform_in(-0.25, 0.25);
+    let scale = rng.uniform_in(0.85, 1.15);
+    let (tx, ty) = (rng.uniform_in(-0.08, 0.08), rng.uniform_in(-0.08, 0.08));
+    let thick = rng.uniform_in(0.045, 0.08);
+    let (sin, cos) = angle.sin_cos();
+    for y in 0..SIZE {
+        for x in 0..SIZE {
+            // map pixel to glyph space (inverse affine about the center)
+            let u = x as f32 / SIZE as f32 - 0.5 - tx;
+            let v = y as f32 / SIZE as f32 - 0.5 - ty;
+            let gu = (cos * u + sin * v) / scale + 0.5;
+            let gv = (-sin * u + cos * v) / scale + 0.5;
+            let d = strokes
+                .iter()
+                .map(|&(a, b)| seg_dist(gu, gv, a, b))
+                .fold(f32::INFINITY, f32::min);
+            // soft stroke profile + background noise
+            let ink = (1.0 - (d / thick).powi(2)).max(0.0);
+            let val = 255.0 * ink + rng.uniform_in(0.0, 18.0);
+            img.set(0, y, x, val.clamp(0.0, 255.0));
+        }
+    }
+    img
+}
+
+/// Class-conditioned texture parameters for CIFAR-like data.
+struct TextureParams {
+    freq: f32,
+    angle: f32,
+    palette: [(f32, f32, f32); 2],
+    blob_cx: f32,
+    blob_cy: f32,
+    blob_amp: f32,
+}
+
+fn texture_params(kind: SynthKind, class: u32) -> TextureParams {
+    // deterministic per-class parameters from a hash of the class id
+    let mut h = 0x9E37_79B9_7F4A_7C15u64 ^ ((class as u64) << 7) ^ kind as u64;
+    let mut next = || crate::util::splitmix64(&mut h) as f64 / u64::MAX as f64;
+    let freq = 1.5 + 6.0 * next() as f32;
+    let angle = std::f64::consts::PI as f32 * next() as f32;
+    let c0 = (
+        60.0 + 180.0 * next() as f32,
+        60.0 + 180.0 * next() as f32,
+        60.0 + 180.0 * next() as f32,
+    );
+    let c1 = (
+        40.0 + 180.0 * next() as f32,
+        40.0 + 180.0 * next() as f32,
+        40.0 + 180.0 * next() as f32,
+    );
+    TextureParams {
+        freq,
+        angle,
+        palette: [c0, c1],
+        blob_cx: 0.25 + 0.5 * next() as f32,
+        blob_cy: 0.25 + 0.5 * next() as f32,
+        blob_amp: 30.0 + 50.0 * next() as f32,
+    }
+}
+
+/// One CIFAR-like textured example with photometric jitter.
+fn cifar_example(kind: SynthKind, class: u32, rng: &mut Rng) -> PixelImage {
+    let p = texture_params(kind, class);
+    let mut img = PixelImage::new(3, SIZE, SIZE);
+    let phase = rng.uniform_in(0.0, std::f32::consts::TAU);
+    let gain = rng.uniform_in(0.8, 1.2);
+    let angle = p.angle + rng.uniform_in(-0.12, 0.12);
+    let (sin, cos) = angle.sin_cos();
+    for y in 0..SIZE {
+        for x in 0..SIZE {
+            let u = x as f32 / SIZE as f32;
+            let v = y as f32 / SIZE as f32;
+            // oriented grating in [0,1]
+            let t = 0.5 + 0.5 * (p.freq * std::f32::consts::TAU * (cos * u + sin * v) + phase).sin();
+            // radial blob bump
+            let db = ((u - p.blob_cx).powi(2) + (v - p.blob_cy).powi(2)).sqrt();
+            let blob = p.blob_amp * (-14.0 * db * db).exp();
+            let (c0, c1) = (p.palette[0], p.palette[1]);
+            let mix = |a: f32, b: f32| (a * t + b * (1.0 - t)) * gain;
+            let noise = rng.uniform_in(-7.0, 7.0);
+            img.set(0, y, x, (mix(c0.0, c1.0) + blob + noise).clamp(0.0, 255.0));
+            img.set(1, y, x, (mix(c0.1, c1.1) + blob + noise).clamp(0.0, 255.0));
+            img.set(2, y, x, (mix(c0.2, c1.2) - blob + noise).clamp(0.0, 255.0));
+        }
+    }
+    img
+}
+
+/// Generate `n` labeled examples, deterministic in (kind, seed).
+pub fn generate(kind: SynthKind, n: usize, seed: u64) -> Vec<Example> {
+    let mut rng = Rng::new(seed ^ 0xDA7A_5E7);
+    (0..n)
+        .map(|i| {
+            let label = (i % kind.num_classes()) as u32;
+            let pixels = match kind {
+                SynthKind::Mnist => mnist_example(label, &mut rng),
+                k => cifar_example(k, label, &mut rng),
+            };
+            Example { pixels, label }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = generate(SynthKind::Mnist, 8, 1);
+        let b = generate(SynthKind::Mnist, 8, 1);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.pixels.data, y.pixels.data);
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let a = generate(SynthKind::Mnist, 4, 1);
+        let b = generate(SynthKind::Mnist, 4, 2);
+        assert_ne!(a[0].pixels.data, b[0].pixels.data);
+    }
+
+    #[test]
+    fn labels_cycle_all_classes() {
+        let ex = generate(SynthKind::Cifar100, 200, 3);
+        let mut seen = vec![false; 100];
+        for e in &ex {
+            seen[e.label as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shapes_and_range() {
+        for kind in [SynthKind::Mnist, SynthKind::Cifar10, SynthKind::Cifar100] {
+            let ex = generate(kind, 3, 4);
+            for e in &ex {
+                assert_eq!(e.pixels.channels, kind.channels());
+                assert_eq!((e.pixels.height, e.pixels.width), (32, 32));
+                assert!(e
+                    .pixels
+                    .data
+                    .iter()
+                    .all(|&v| (0.0..=255.0).contains(&v)));
+            }
+        }
+    }
+
+    #[test]
+    fn classes_are_separated() {
+        // same-class images are closer than cross-class ones on average
+        let ex = generate(SynthKind::Cifar10, 60, 5);
+        let dist = |a: &Example, b: &Example| -> f32 {
+            a.pixels
+                .data
+                .iter()
+                .zip(&b.pixels.data)
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum::<f32>()
+                / a.pixels.data.len() as f32
+        };
+        let mut same = Vec::new();
+        let mut diff = Vec::new();
+        for i in 0..ex.len() {
+            for j in i + 1..ex.len() {
+                if ex[i].label == ex[j].label {
+                    same.push(dist(&ex[i], &ex[j]));
+                } else {
+                    diff.push(dist(&ex[i], &ex[j]));
+                }
+            }
+        }
+        let mean = |v: &[f32]| v.iter().sum::<f32>() / v.len() as f32;
+        assert!(mean(&same) < mean(&diff), "{} vs {}", mean(&same), mean(&diff));
+    }
+
+    #[test]
+    fn glyphs_have_ink() {
+        let ex = generate(SynthKind::Mnist, 10, 6);
+        for e in &ex {
+            let bright = e.pixels.data.iter().filter(|&&v| v > 128.0).count();
+            assert!(bright > 20, "class {} has {} bright px", e.label, bright);
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! MSB-first bit I/O with JPEG 0xFF byte stuffing.
+//!
+//! JPEG entropy-coded segments escape every 0xFF data byte with a 0x00
+//! stuffing byte so decoders can find markers; the reader strips them and
+//! stops cleanly at any non-stuffed marker.
+
+use super::{JpegError, Result};
+
+/// Bit writer: accumulates MSB-first, stuffs 0xFF with 0x00.
+#[derive(Default)]
+pub struct BitWriter {
+    out: Vec<u8>,
+    acc: u32,
+    nbits: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write the low `n` bits of `value`, MSB first.  n <= 24.
+    pub fn put(&mut self, value: u32, n: u32) {
+        debug_assert!(n <= 24);
+        debug_assert!(n == 32 || value < (1u32 << n).max(1));
+        self.acc = (self.acc << n) | (value & ((1u32 << n).wrapping_sub(1)));
+        self.nbits += n;
+        while self.nbits >= 8 {
+            self.nbits -= 8;
+            let byte = ((self.acc >> self.nbits) & 0xFF) as u8;
+            self.out.push(byte);
+            if byte == 0xFF {
+                self.out.push(0x00); // stuffing
+            }
+        }
+    }
+
+    /// Pad with 1-bits to a byte boundary (JPEG convention) and return.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            let pad = 8 - self.nbits;
+            self.put((1u32 << pad) - 1, pad);
+        }
+        self.out
+    }
+
+    pub fn bit_len(&self) -> usize {
+        self.out.len() * 8 + self.nbits as usize
+    }
+}
+
+/// Bit reader over an entropy-coded segment; un-stuffs 0xFF 0x00.
+pub struct BitReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+    acc: u32,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(data: &'a [u8]) -> Self {
+        BitReader { data, pos: 0, acc: 0, nbits: 0 }
+    }
+
+    fn fill(&mut self) -> Result<()> {
+        while self.nbits <= 24 {
+            if self.pos >= self.data.len() {
+                // feed 1-padding past the end (decoder tolerance)
+                self.acc = (self.acc << 8) | 0xFF;
+                self.nbits += 8;
+                continue;
+            }
+            let byte = self.data[self.pos];
+            if byte == 0xFF {
+                match self.data.get(self.pos + 1) {
+                    Some(0x00) => {
+                        self.pos += 2; // stuffed data 0xFF
+                    }
+                    _ => {
+                        // a real marker: stop consuming, pad with ones
+                        self.acc = (self.acc << 8) | 0xFF;
+                        self.nbits += 8;
+                        continue;
+                    }
+                }
+            } else {
+                self.pos += 1;
+            }
+            self.acc = (self.acc << 8) | byte as u32;
+            self.nbits += 8;
+        }
+        Ok(())
+    }
+
+    /// Peek the next 16 bits without consuming.
+    pub fn peek16(&mut self) -> Result<u16> {
+        self.fill()?;
+        Ok(((self.acc >> (self.nbits - 16)) & 0xFFFF) as u16)
+    }
+
+    /// Consume `n` bits.
+    pub fn skip(&mut self, n: u32) -> Result<()> {
+        self.fill()?;
+        if n > self.nbits {
+            return Err(JpegError::Invalid("bit underrun".into()));
+        }
+        self.nbits -= n;
+        Ok(())
+    }
+
+    /// Read `n` bits as an unsigned value.  n <= 16.
+    pub fn get(&mut self, n: u32) -> Result<u32> {
+        if n == 0 {
+            return Ok(0);
+        }
+        self.fill()?;
+        let v = (self.acc >> (self.nbits - n)) & ((1u32 << n) - 1);
+        self.nbits -= n;
+        Ok(v)
+    }
+
+    /// Bytes consumed from the underlying segment (approximate, for EOS).
+    pub fn byte_pos(&self) -> usize {
+        self.pos
+    }
+}
+
+/// JPEG "extend": map an n-bit magnitude to its signed value (T.81 F.2.2.1).
+#[inline]
+pub fn extend(v: u32, n: u32) -> i32 {
+    if n == 0 {
+        return 0;
+    }
+    if v < (1 << (n - 1)) {
+        v as i32 - (1 << n) as i32 + 1
+    } else {
+        v as i32
+    }
+}
+
+/// Inverse of extend: (category n, magnitude bits) for a signed value.
+#[inline]
+pub fn magnitude(value: i32) -> (u32, u32) {
+    let abs = value.unsigned_abs();
+    let n = 32 - abs.leading_zeros();
+    let bits = if value < 0 {
+        (value - 1) as u32 & ((1u32 << n) - 1)
+    } else {
+        value as u32
+    };
+    (n, bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut w = BitWriter::new();
+        let vals = [(0b101u32, 3u32), (0xFF, 8), (0, 1), (0b1111_0000, 8), (1, 1)];
+        for &(v, n) in &vals {
+            w.put(v, n);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &(v, n) in &vals {
+            assert_eq!(r.get(n).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn ff_is_stuffed() {
+        let mut w = BitWriter::new();
+        w.put(0xFF, 8);
+        w.put(0xFF, 8);
+        let bytes = w.finish();
+        assert_eq!(bytes, vec![0xFF, 0x00, 0xFF, 0x00]);
+    }
+
+    #[test]
+    fn reader_unstuffs() {
+        let data = [0xFF, 0x00, 0xAB];
+        let mut r = BitReader::new(&data);
+        assert_eq!(r.get(8).unwrap(), 0xFF);
+        assert_eq!(r.get(8).unwrap(), 0xAB);
+    }
+
+    #[test]
+    fn reader_stops_at_marker() {
+        let data = [0x12, 0xFF, 0xD9]; // EOI marker
+        let mut r = BitReader::new(&data);
+        assert_eq!(r.get(8).unwrap(), 0x12);
+        // past the marker we read 1-padding
+        assert_eq!(r.get(8).unwrap(), 0xFF);
+        assert_eq!(r.byte_pos(), 1);
+    }
+
+    #[test]
+    fn extend_magnitude_roundtrip() {
+        for v in [-255i32, -128, -1, 1, 2, 37, 255, 1023, -1023] {
+            let (n, bits) = magnitude(v);
+            assert_eq!(extend(bits, n), v, "v={v}");
+        }
+    }
+
+    #[test]
+    fn magnitude_categories() {
+        assert_eq!(magnitude(1).0, 1);
+        assert_eq!(magnitude(-1).0, 1);
+        assert_eq!(magnitude(2).0, 2);
+        assert_eq!(magnitude(3).0, 2);
+        assert_eq!(magnitude(255).0, 8);
+        assert_eq!(magnitude(-255).0, 8);
+    }
+
+    #[test]
+    fn peek_does_not_consume() {
+        let data = [0b1010_1010, 0b0101_0101];
+        let mut r = BitReader::new(&data);
+        let p1 = r.peek16().unwrap();
+        let p2 = r.peek16().unwrap();
+        assert_eq!(p1, p2);
+        assert_eq!(r.get(8).unwrap(), 0b1010_1010);
+    }
+}

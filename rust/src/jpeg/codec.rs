@@ -1,0 +1,547 @@
+//! Top-level JPEG codec: pixels <-> .jpg bytes <-> transform-domain
+//! coefficients.
+//!
+//! Two decode entry points mirror the paper's two pipelines:
+//! * [`decode`] — the full decompression the spatial route pays:
+//!   entropy decode + dequantize + un-zigzag + inverse DCT + level shift
+//!   (+ color conversion).
+//! * [`decode_to_coefficients`] — stops at the paper's JPEG transform
+//!   domain (output of encoder step 4): entropy decode only.  This is the
+//!   input to the JPEG-domain network and the source of the Fig-5 gap.
+
+use super::bits::{BitReader, BitWriter};
+use super::color;
+use super::dct;
+use super::entropy;
+use super::huffman::{
+    ac_chroma_spec, ac_luma_spec, dc_chroma_spec, dc_luma_spec, HuffDecoder,
+    HuffEncoder,
+};
+use super::jfif::{self, FrameComponent};
+use super::quant::QuantTable;
+use super::zigzag;
+use super::{JpegError, Result, BLK, NCOEF};
+use crate::tensor::Tensor;
+
+/// Planar pixel image, values in [0, 255].
+#[derive(Clone, Debug)]
+pub struct PixelImage {
+    pub channels: usize,
+    pub height: usize,
+    pub width: usize,
+    /// planar layout: (channels, height, width)
+    pub data: Vec<f32>,
+}
+
+impl PixelImage {
+    pub fn new(channels: usize, height: usize, width: usize) -> Self {
+        PixelImage {
+            channels,
+            height,
+            width,
+            data: vec![0.0; channels * height * width],
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, c: usize, y: usize, x: usize) -> f32 {
+        self.data[(c * self.height + y) * self.width + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, c: usize, y: usize, x: usize, v: f32) {
+        self.data[(c * self.height + y) * self.width + x] = v;
+    }
+
+    /// Network-normalized tensor (C, H, W) in [0, 1].
+    pub fn to_unit_tensor(&self) -> Tensor {
+        Tensor::from_vec(
+            &[self.channels, self.height, self.width],
+            self.data.iter().map(|&v| v / 255.0).collect(),
+        )
+    }
+}
+
+/// Integer JPEG-transform-domain image (entropy-decoded, still quantized).
+#[derive(Clone, Debug)]
+pub struct CoeffImage {
+    pub channels: usize,
+    pub blocks_h: usize,
+    pub blocks_w: usize,
+    /// zigzag-order quantized integers, layout (channels, bh, bw, 64)
+    pub coeffs: Vec<i32>,
+    /// quant table per channel
+    pub qtables: Vec<QuantTable>,
+}
+
+impl CoeffImage {
+    #[inline]
+    pub fn block(&self, c: usize, by: usize, bx: usize) -> &[i32] {
+        let off = (((c * self.blocks_h) + by) * self.blocks_w + bx) * NCOEF;
+        &self.coeffs[off..off + NCOEF]
+    }
+
+    /// Network input: domain coefficients of the [0,1]-normalized,
+    /// unshifted image, layout (C, Bh, Bw, 64).
+    ///
+    /// pixel01 = (128 + idct(dequant(c)))/255, and the DCT of the constant
+    /// 128 plane is DC-only (8*128 = 1024), so
+    ///   f01[k] = (c[k] + [k==0] * 1024/q0) / 255.
+    pub fn to_network_input(&self) -> Tensor {
+        const INV255: f32 = 1.0 / 255.0;
+        let mut out = vec![0.0f32; self.coeffs.len()];
+        let nblk = self.blocks_h * self.blocks_w;
+        for c in 0..self.channels {
+            let dc_shift = 1024.0 / self.qtables[c].values[0] as f32;
+            let src = &self.coeffs[c * nblk * NCOEF..(c + 1) * nblk * NCOEF];
+            let dst = &mut out[c * nblk * NCOEF..(c + 1) * nblk * NCOEF];
+            // branch-free: scale everything, then fix up the DC lane
+            for (o, &v) in dst.iter_mut().zip(src) {
+                *o = v as f32 * INV255;
+            }
+            for b in 0..nblk {
+                dst[b * NCOEF] += dc_shift * INV255;
+            }
+        }
+        Tensor::from_vec(
+            &[self.channels, self.blocks_h, self.blocks_w, NCOEF],
+            out,
+        )
+    }
+
+    /// The (64,) quantization vector for channel `c`, f32.
+    pub fn qvec(&self, c: usize) -> [f32; 64] {
+        self.qtables[c].as_f32()
+    }
+}
+
+/// Encoder options.
+#[derive(Clone, Copy, Debug)]
+pub struct EncodeOptions {
+    pub quality: u8,
+    /// Use the Annex-K chroma table for Cb/Cr.  Off by default: a single
+    /// shared table keeps the transform domain uniform across channels —
+    /// the single-J-tensor setting of the paper's formulation (the
+    /// network artifacts take one qvec per image).  Decoding supports
+    /// either layout.
+    pub separate_chroma_table: bool,
+}
+
+impl Default for EncodeOptions {
+    fn default() -> Self {
+        EncodeOptions { quality: 90, separate_chroma_table: false }
+    }
+}
+
+impl EncodeOptions {
+    pub fn quality(quality: u8) -> Self {
+        EncodeOptions { quality, ..Default::default() }
+    }
+}
+
+/// Fully decoded output.
+pub type DecodedImage = PixelImage;
+
+/// Everything needed to entropy-code one component.
+pub struct Component {
+    pub qtable: QuantTable,
+    pub dc_enc: HuffEncoder,
+    pub ac_enc: HuffEncoder,
+}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// Extract the 8x8 block at (by, bx) with edge replication padding.
+fn extract_block(plane: &[f32], h: usize, w: usize, by: usize, bx: usize) -> [f32; 64] {
+    let mut out = [0.0f32; 64];
+    for y in 0..BLK {
+        let sy = (by * BLK + y).min(h - 1);
+        for x in 0..BLK {
+            let sx = (bx * BLK + x).min(w - 1);
+            out[y * BLK + x] = plane[sy * w + sx];
+        }
+    }
+    out
+}
+
+/// Encode a planar image (values [0,255]; 1 = grayscale, 3 = RGB) to
+/// baseline JFIF bytes.  3-channel input is converted to YCbCr 4:4:4.
+pub fn encode(img: &PixelImage, opts: EncodeOptions) -> Result<Vec<u8>> {
+    if img.channels != 1 && img.channels != 3 {
+        return Err(JpegError::Unsupported(format!(
+            "{} channels",
+            img.channels
+        )));
+    }
+    let (h, w) = (img.height, img.width);
+    let planes: Vec<f32> = if img.channels == 3 {
+        color::planes_rgb_to_ycbcr(&img.data, h, w)
+    } else {
+        img.data.clone()
+    };
+
+    let q_luma = QuantTable::luma(opts.quality);
+    let q_chroma = if opts.separate_chroma_table {
+        QuantTable::chroma(opts.quality)
+    } else {
+        q_luma.clone()
+    };
+    let (bh, bw) = (ceil_div(h, BLK), ceil_div(w, BLK));
+
+    let mut writer = jfif::Writer::new();
+    writer.app0_jfif();
+    writer.dqt(0, &q_luma);
+    if img.channels == 3 && opts.separate_chroma_table {
+        writer.dqt(1, &q_chroma);
+    }
+    let comps: Vec<FrameComponent> = (0..img.channels)
+        .map(|i| FrameComponent {
+            id: i as u8 + 1,
+            qtable: usize::from(i > 0 && opts.separate_chroma_table),
+            dc_table: usize::from(i > 0),
+            ac_table: usize::from(i > 0),
+        })
+        .collect();
+    writer.sof0(h, w, &comps);
+    writer.dht(0, 0, &dc_luma_spec());
+    writer.dht(1, 0, &ac_luma_spec());
+    if img.channels == 3 {
+        writer.dht(0, 1, &dc_chroma_spec());
+        writer.dht(1, 1, &ac_chroma_spec());
+    }
+    writer.sos(&comps);
+
+    let dc_encs = [HuffEncoder::new(&dc_luma_spec()), HuffEncoder::new(&dc_chroma_spec())];
+    let ac_encs = [HuffEncoder::new(&ac_luma_spec()), HuffEncoder::new(&ac_chroma_spec())];
+    let qts = [&q_luma, &q_chroma];
+
+    let mut bitw = BitWriter::new();
+    let mut preds = vec![0i32; img.channels];
+    // interleaved MCU order: for 4:4:4 an MCU is one block per component
+    for by in 0..bh {
+        for bx in 0..bw {
+            for (ci, pred) in preds.iter_mut().enumerate() {
+                let plane = &planes[ci * h * w..(ci + 1) * h * w];
+                let mut block = extract_block(plane, h, w, by, bx);
+                for v in &mut block {
+                    *v -= 128.0; // level shift
+                }
+                let f = dct::forward(&block);
+                let zz = zigzag::to_zigzag(&f);
+                let t = usize::from(ci > 0);
+                let qz = QuantTable::round(&qts[t].quantize(&zz));
+                *pred = entropy::encode_block(
+                    &mut bitw, &qz, *pred, &dc_encs[t], &ac_encs[t],
+                );
+            }
+        }
+    }
+    writer.scan_data(&bitw.finish());
+    Ok(writer.finish())
+}
+
+/// Entropy-decode only: bytes -> the paper's JPEG transform domain.
+pub fn decode_to_coefficients(data: &[u8]) -> Result<CoeffImage> {
+    let parsed = jfif::parse(data)?;
+    let (h, w) = (parsed.height, parsed.width);
+    let (bh, bw) = (ceil_div(h, BLK), ceil_div(w, BLK));
+    let nc = parsed.components.len();
+
+    let mut qtables = Vec::with_capacity(nc);
+    let mut dc_decs = Vec::with_capacity(nc);
+    let mut ac_decs = Vec::with_capacity(nc);
+    for comp in &parsed.components {
+        qtables.push(
+            parsed.qtables[comp.qtable]
+                .clone()
+                .ok_or_else(|| JpegError::Invalid("missing DQT".into()))?,
+        );
+        dc_decs.push(HuffDecoder::new(
+            parsed.dc_specs[comp.dc_table]
+                .as_ref()
+                .ok_or_else(|| JpegError::Invalid("missing DC DHT".into()))?,
+        ));
+        ac_decs.push(HuffDecoder::new(
+            parsed.ac_specs[comp.ac_table]
+                .as_ref()
+                .ok_or_else(|| JpegError::Invalid("missing AC DHT".into()))?,
+        ));
+    }
+
+    let mut coeffs = vec![0i32; nc * bh * bw * NCOEF];
+    let mut preds = vec![0i32; nc];
+    let mut reader = BitReader::new(&parsed.scan_data);
+    let mut block = [0i32; 64];
+    for by in 0..bh {
+        for bx in 0..bw {
+            for ci in 0..nc {
+                preds[ci] = entropy::decode_block(
+                    &mut reader, &mut block, preds[ci], &dc_decs[ci], &ac_decs[ci],
+                )?;
+                let off = (((ci * bh) + by) * bw + bx) * NCOEF;
+                coeffs[off..off + NCOEF].copy_from_slice(&block);
+            }
+        }
+    }
+    Ok(CoeffImage { channels: nc, blocks_h: bh, blocks_w: bw, coeffs, qtables })
+}
+
+/// Full decode: bytes -> planar pixels in [0,255] (RGB for 3 channels).
+pub fn decode(data: &[u8]) -> Result<DecodedImage> {
+    let ci = decode_to_coefficients(data)?;
+    let parsed = jfif::parse(data)?; // cheap: headers only
+    decode_coefficients_to_pixels(&ci, parsed.height, parsed.width)
+}
+
+/// Decode to raw component planes (Y or YCbCr) WITHOUT clamping or color
+/// conversion — the network input format of the spatial route.  The
+/// JPEG-domain route consumes `CoeffImage::to_network_input` of the same
+/// stream; the two are mathematically identical activations (the clamp
+/// and RGB conversion in [`decode`] exist for display, not the model).
+pub fn decode_planes(ci: &CoeffImage, height: usize, width: usize) -> PixelImage {
+    let (bh, bw, nc) = (ci.blocks_h, ci.blocks_w, ci.channels);
+    let mut planes = vec![0.0f32; nc * height * width];
+    let mut zz = [0.0f32; 64];
+    for c in 0..nc {
+        let qt = &ci.qtables[c];
+        for by in 0..bh {
+            for bx in 0..bw {
+                let blk = ci.block(c, by, bx);
+                for k in 0..NCOEF {
+                    zz[k] = blk[k] as f32;
+                }
+                let deq = qt.dequantize(&zz);
+                let raster = zigzag::from_zigzag(&deq);
+                let pix = dct::inverse(&raster);
+                for y in 0..BLK {
+                    let py = by * BLK + y;
+                    if py >= height {
+                        continue;
+                    }
+                    for x in 0..BLK {
+                        let px = bx * BLK + x;
+                        if px >= width {
+                            continue;
+                        }
+                        planes[(c * height + py) * width + px] =
+                            pix[y * BLK + x] + 128.0;
+                    }
+                }
+            }
+        }
+    }
+    PixelImage { channels: nc, height, width, data: planes }
+}
+
+/// The decompression back half (dequantize + un-zigzag + IDCT + shift):
+/// exactly the work the JPEG-domain pipeline skips.
+pub fn decode_coefficients_to_pixels(
+    ci: &CoeffImage,
+    height: usize,
+    width: usize,
+) -> Result<DecodedImage> {
+    let (bh, bw, nc) = (ci.blocks_h, ci.blocks_w, ci.channels);
+    let mut planes = vec![0.0f32; nc * height * width];
+    let mut zz = [0.0f32; 64];
+    for c in 0..nc {
+        let qt = &ci.qtables[c];
+        for by in 0..bh {
+            for bx in 0..bw {
+                let blk = ci.block(c, by, bx);
+                for k in 0..NCOEF {
+                    zz[k] = blk[k] as f32;
+                }
+                let deq = qt.dequantize(&zz);
+                let raster = zigzag::from_zigzag(&deq);
+                let pix = dct::inverse(&raster);
+                for y in 0..BLK {
+                    let py = by * BLK + y;
+                    if py >= height {
+                        continue;
+                    }
+                    for x in 0..BLK {
+                        let px = bx * BLK + x;
+                        if px >= width {
+                            continue;
+                        }
+                        planes[(c * height + py) * width + px] =
+                            (pix[y * BLK + x] + 128.0).clamp(0.0, 255.0);
+                    }
+                }
+            }
+        }
+    }
+    let data = if nc == 3 {
+        color::planes_ycbcr_to_rgb(&planes, height, width)
+            .iter()
+            .map(|v| v.clamp(0.0, 255.0))
+            .collect()
+    } else {
+        planes
+    };
+    Ok(PixelImage { channels: nc, height, width, data })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_image(channels: usize, h: usize, w: usize, seed: u64) -> PixelImage {
+        let mut rng = crate::util::Rng::new(seed);
+        let mut img = PixelImage::new(channels, h, w);
+        // smooth image (JPEG-friendly): low-frequency gradients + noise
+        for c in 0..channels {
+            let phase = rng.uniform_in(0.0, 6.28);
+            for y in 0..h {
+                for x in 0..w {
+                    let v = 128.0
+                        + 90.0 * ((x as f32 / w as f32) * 3.1 + phase).sin()
+                        + 30.0 * ((y as f32 / h as f32) * 2.4).cos()
+                        + rng.uniform_in(-4.0, 4.0);
+                    img.set(c, y, x, v.clamp(0.0, 255.0));
+                }
+            }
+        }
+        img
+    }
+
+    #[test]
+    fn gray_roundtrip_high_quality() {
+        let img = test_image(1, 32, 32, 1);
+        let bytes = encode(&img, EncodeOptions::quality(95)).unwrap();
+        let dec = decode(&bytes).unwrap();
+        assert_eq!((dec.channels, dec.height, dec.width), (1, 32, 32));
+        let rmse: f32 = {
+            let se: f32 = img
+                .data
+                .iter()
+                .zip(&dec.data)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            (se / img.data.len() as f32).sqrt()
+        };
+        assert!(rmse < 4.0, "rmse {rmse}");
+    }
+
+    #[test]
+    fn color_roundtrip() {
+        let img = test_image(3, 32, 32, 2);
+        let bytes = encode(&img, EncodeOptions::quality(90)).unwrap();
+        let dec = decode(&bytes).unwrap();
+        assert_eq!(dec.channels, 3);
+        let rmse: f32 = {
+            let se: f32 = img
+                .data
+                .iter()
+                .zip(&dec.data)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            (se / img.data.len() as f32).sqrt()
+        };
+        assert!(rmse < 8.0, "rmse {rmse}");
+    }
+
+    #[test]
+    fn lower_quality_more_error_fewer_bytes() {
+        let img = test_image(1, 64, 64, 3);
+        let hi = encode(&img, EncodeOptions::quality(95)).unwrap();
+        let lo = encode(&img, EncodeOptions::quality(10)).unwrap();
+        assert!(lo.len() < hi.len());
+        let rm = |bytes: &[u8]| {
+            let d = decode(bytes).unwrap();
+            let se: f32 = img
+                .data
+                .iter()
+                .zip(&d.data)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            (se / img.data.len() as f32).sqrt()
+        };
+        assert!(rm(&lo) > rm(&hi));
+    }
+
+    #[test]
+    fn coefficients_match_manual_encode() {
+        // decode_to_coefficients must invert the encoder's entropy coding
+        let img = test_image(1, 16, 16, 4);
+        let bytes = encode(&img, EncodeOptions::quality(75)).unwrap();
+        let ci = decode_to_coefficients(&bytes).unwrap();
+        assert_eq!((ci.channels, ci.blocks_h, ci.blocks_w), (1, 2, 2));
+        // re-derive block (0,0) by hand
+        let mut block = [0.0f32; 64];
+        for y in 0..8 {
+            for x in 0..8 {
+                block[y * 8 + x] = img.at(0, y, x) - 128.0;
+            }
+        }
+        let zz = zigzag::to_zigzag(&dct::forward(&block));
+        let expect = QuantTable::round(&QuantTable::luma(75).quantize(&zz));
+        assert_eq!(ci.block(0, 0, 0), &expect[..]);
+    }
+
+    #[test]
+    fn network_input_dc_shift() {
+        let img = test_image(1, 8, 8, 5);
+        let bytes = encode(&img, EncodeOptions::quality(100)).unwrap();
+        let ci = decode_to_coefficients(&bytes).unwrap();
+        let t = ci.to_network_input();
+        assert_eq!(t.shape(), &[1, 1, 1, 64]);
+        // DC of the network input ~ 8 * mean(pixel01) / q0
+        let mean01: f32 = img.data.iter().sum::<f32>() / (64.0 * 255.0);
+        let q0 = ci.qtables[0].values[0] as f32;
+        let got = t.at(&[0, 0, 0, 0]) * q0;
+        assert!((got - 8.0 * mean01).abs() < 0.2, "{got} vs {}", 8.0 * mean01);
+    }
+
+    #[test]
+    fn non_multiple_of_8_padded() {
+        let img = test_image(1, 20, 28, 6);
+        let bytes = encode(&img, EncodeOptions::quality(90)).unwrap();
+        let dec = decode(&bytes).unwrap();
+        assert_eq!((dec.height, dec.width), (20, 28));
+    }
+
+    #[test]
+    fn decode_planes_matches_jpeg_route_input() {
+        // the two serving routes must produce the SAME model activations:
+        // encode(decode_planes/255) == to_network_input, per channel
+        let img = test_image(3, 16, 16, 7);
+        let bytes = encode(&img, EncodeOptions::quality(85)).unwrap();
+        let ci = decode_to_coefficients(&bytes).unwrap();
+        let planes = decode_planes(&ci, 16, 16);
+        let x01 = planes.to_unit_tensor().reshape(&[1, 3, 16, 16]);
+        let want = ci.to_network_input().reshape(&[1, 3, 2, 2, 64]);
+        // encode each channel with its own qtable and compare
+        for c in 0..3 {
+            let q = ci.qvec(c);
+            let plane = crate::tensor::Tensor::from_vec(
+                &[1, 1, 16, 16],
+                x01.data()[c * 256..(c + 1) * 256].to_vec(),
+            );
+            let got = crate::jpeg_domain::encode_tensor(&plane, &q);
+            for b in 0..4 {
+                for k in 0..64 {
+                    let idx = (c * 4 + b) * 64 + k;
+                    assert!(
+                        (got.data()[b * 64 + k] - want.data()[idx]).abs() < 1e-3,
+                        "c={c} b={b} k={k}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(decode(&[1, 2, 3]).is_err());
+        assert!(decode_to_coefficients(&[0xFF, 0xD8, 0xFF]).is_err());
+    }
+
+    #[test]
+    fn four_channels_rejected() {
+        let img = PixelImage::new(4, 8, 8);
+        assert!(encode(&img, EncodeOptions::default()).is_err());
+    }
+}

@@ -1,0 +1,93 @@
+//! RGB <-> YCbCr conversion (JFIF / BT.601 full-range convention).
+
+/// RGB [0,255] -> YCbCr [0,255] (Cb/Cr centered at 128).
+#[inline]
+pub fn rgb_to_ycbcr(r: f32, g: f32, b: f32) -> (f32, f32, f32) {
+    let y = 0.299 * r + 0.587 * g + 0.114 * b;
+    let cb = 128.0 - 0.168_736 * r - 0.331_264 * g + 0.5 * b;
+    let cr = 128.0 + 0.5 * r - 0.418_688 * g - 0.081_312 * b;
+    (y, cb, cr)
+}
+
+/// YCbCr [0,255] -> RGB [0,255].
+#[inline]
+pub fn ycbcr_to_rgb(y: f32, cb: f32, cr: f32) -> (f32, f32, f32) {
+    let cb = cb - 128.0;
+    let cr = cr - 128.0;
+    let r = y + 1.402 * cr;
+    let g = y - 0.344_136 * cb - 0.714_136 * cr;
+    let b = y + 1.772 * cb;
+    (r, g, b)
+}
+
+/// Convert an interleaved-planar RGB image (3, H, W) to YCbCr planes.
+pub fn planes_rgb_to_ycbcr(rgb: &[f32], h: usize, w: usize) -> Vec<f32> {
+    let hw = h * w;
+    assert_eq!(rgb.len(), 3 * hw);
+    let mut out = vec![0.0f32; 3 * hw];
+    for i in 0..hw {
+        let (y, cb, cr) = rgb_to_ycbcr(rgb[i], rgb[hw + i], rgb[2 * hw + i]);
+        out[i] = y;
+        out[hw + i] = cb;
+        out[2 * hw + i] = cr;
+    }
+    out
+}
+
+/// Convert YCbCr planes (3, H, W) back to RGB planes.
+pub fn planes_ycbcr_to_rgb(ycc: &[f32], h: usize, w: usize) -> Vec<f32> {
+    let hw = h * w;
+    assert_eq!(ycc.len(), 3 * hw);
+    let mut out = vec![0.0f32; 3 * hw];
+    for i in 0..hw {
+        let (r, g, b) = ycbcr_to_rgb(ycc[i], ycc[hw + i], ycc[2 * hw + i]);
+        out[i] = r;
+        out[hw + i] = g;
+        out[2 * hw + i] = b;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gray_is_y_only() {
+        let (y, cb, cr) = rgb_to_ycbcr(100.0, 100.0, 100.0);
+        assert!((y - 100.0).abs() < 1e-3);
+        assert!((cb - 128.0).abs() < 1e-3);
+        assert!((cr - 128.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn roundtrip_pointwise() {
+        for (r, g, b) in [(0.0, 0.0, 0.0), (255.0, 255.0, 255.0), (12.0, 200.0, 99.0)] {
+            let (y, cb, cr) = rgb_to_ycbcr(r, g, b);
+            let (r2, g2, b2) = ycbcr_to_rgb(y, cb, cr);
+            assert!((r - r2).abs() < 0.01, "r");
+            assert!((g - g2).abs() < 0.01, "g");
+            assert!((b - b2).abs() < 0.01, "b");
+        }
+    }
+
+    #[test]
+    fn roundtrip_planes() {
+        let mut rng = crate::util::Rng::new(9);
+        let (h, w) = (4, 6);
+        let rgb: Vec<f32> = (0..3 * h * w).map(|_| rng.uniform_in(0.0, 255.0)).collect();
+        let back = planes_ycbcr_to_rgb(&planes_rgb_to_ycbcr(&rgb, h, w), h, w);
+        for (a, b) in rgb.iter().zip(&back) {
+            assert!((a - b).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn primaries() {
+        // pure red has high Cr, pure blue high Cb
+        let (_, cb_r, cr_r) = rgb_to_ycbcr(255.0, 0.0, 0.0);
+        let (_, cb_b, cr_b) = rgb_to_ycbcr(0.0, 0.0, 255.0);
+        assert!(cr_r > 200.0 && cb_r < 128.0);
+        assert!(cb_b > 200.0 && cr_b < 128.0);
+    }
+}

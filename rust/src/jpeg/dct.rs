@@ -1,0 +1,222 @@
+//! Orthonormal 8x8 DCT-II, forward and inverse.
+//!
+//! Two implementations, cross-checked in tests:
+//! * `forward_naive` / `inverse_naive` — the 64x64 matrix form, the
+//!   mathematical definition (paper eq. 5).
+//! * `forward` / `inverse` — separable row/column 1-D transforms (16
+//!   8x8 matmuls instead of one 64x64), ~4x fewer MACs; the codec hot
+//!   path.
+//!
+//! Convention: orthonormal scaling (D D^T = I), so coefficient (0,0) is
+//! 8x the block mean — the property the paper's BN and GAP rely on.
+
+use once_cell::sync::Lazy;
+
+use super::BLK;
+
+/// 1-D orthonormal DCT-II matrix, row-major [k][n].
+pub static DCT1D: Lazy<[[f32; BLK]; BLK]> = Lazy::new(|| {
+    let mut d = [[0.0f32; BLK]; BLK];
+    for k in 0..BLK {
+        let scale = if k == 0 {
+            (1.0 / BLK as f64).sqrt()
+        } else {
+            (2.0 / BLK as f64).sqrt()
+        };
+        for n in 0..BLK {
+            d[k][n] = (scale
+                * ((2 * n + 1) as f64 * k as f64 * std::f64::consts::PI
+                    / (2.0 * BLK as f64))
+                    .cos()) as f32;
+        }
+    }
+    d
+});
+
+/// 2-D orthonormal DCT matrix on flattened blocks: A[(8a+b)][(8m+n)].
+pub static DCT2D: Lazy<Vec<f32>> = Lazy::new(|| {
+    let d = &*DCT1D;
+    let mut a = vec![0.0f32; 64 * 64];
+    for aa in 0..BLK {
+        for bb in 0..BLK {
+            for m in 0..BLK {
+                for n in 0..BLK {
+                    a[(aa * BLK + bb) * 64 + (m * BLK + n)] = d[aa][m] * d[bb][n];
+                }
+            }
+        }
+    }
+    a
+});
+
+/// Forward 2-D DCT via the 64x64 matrix (definition form).
+pub fn forward_naive(block: &[f32; 64]) -> [f32; 64] {
+    let a = &*DCT2D;
+    let mut out = [0.0f32; 64];
+    for (k, o) in out.iter_mut().enumerate() {
+        let row = &a[k * 64..(k + 1) * 64];
+        *o = row.iter().zip(block.iter()).map(|(x, y)| x * y).sum();
+    }
+    out
+}
+
+/// Inverse 2-D DCT via the transposed 64x64 matrix.
+pub fn inverse_naive(coef: &[f32; 64]) -> [f32; 64] {
+    let a = &*DCT2D;
+    let mut out = [0.0f32; 64];
+    for (k, &c) in coef.iter().enumerate() {
+        if c == 0.0 {
+            continue;
+        }
+        let row = &a[k * 64..(k + 1) * 64];
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += c * v;
+        }
+    }
+    out
+}
+
+/// Separable forward DCT: rows then columns.
+pub fn forward(block: &[f32; 64]) -> [f32; 64] {
+    let d = &*DCT1D;
+    let mut tmp = [0.0f32; 64];
+    // transform rows: tmp[m][k] = sum_n block[m][n] d[k][n]
+    for m in 0..BLK {
+        for k in 0..BLK {
+            let mut acc = 0.0;
+            for n in 0..BLK {
+                acc += block[m * BLK + n] * d[k][n];
+            }
+            tmp[m * BLK + k] = acc;
+        }
+    }
+    // transform columns: out[a][k] = sum_m tmp[m][k] d[a][m]
+    let mut out = [0.0f32; 64];
+    for aa in 0..BLK {
+        for k in 0..BLK {
+            let mut acc = 0.0;
+            for m in 0..BLK {
+                acc += tmp[m * BLK + k] * d[aa][m];
+            }
+            out[aa * BLK + k] = acc;
+        }
+    }
+    out
+}
+
+/// Separable inverse DCT.
+pub fn inverse(coef: &[f32; 64]) -> [f32; 64] {
+    let d = &*DCT1D;
+    let mut tmp = [0.0f32; 64];
+    // columns first: tmp[m][k] = sum_a coef[a][k] d[a][m]
+    for m in 0..BLK {
+        for k in 0..BLK {
+            let mut acc = 0.0;
+            for aa in 0..BLK {
+                acc += coef[aa * BLK + k] * d[aa][m];
+            }
+            tmp[m * BLK + k] = acc;
+        }
+    }
+    let mut out = [0.0f32; 64];
+    for m in 0..BLK {
+        for n in 0..BLK {
+            let mut acc = 0.0;
+            for k in 0..BLK {
+                acc += tmp[m * BLK + k] * d[k][n];
+            }
+            out[m * BLK + n] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_block(seed: u64) -> [f32; 64] {
+        let mut rng = crate::util::Rng::new(seed);
+        let mut b = [0.0f32; 64];
+        for v in &mut b {
+            *v = rng.uniform_in(-128.0, 128.0);
+        }
+        b
+    }
+
+    #[test]
+    fn dct1d_orthonormal() {
+        let d = &*DCT1D;
+        for i in 0..8 {
+            for j in 0..8 {
+                let dot: f32 = (0..8).map(|n| d[i][n] * d[j][n]).sum();
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - expect).abs() < 1e-5, "({i},{j}) = {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_matches_naive() {
+        for seed in 0..5 {
+            let b = rand_block(seed);
+            let f = forward(&b);
+            let fn_ = forward_naive(&b);
+            for k in 0..64 {
+                assert!((f[k] - fn_[k]).abs() < 1e-2, "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_matches_naive() {
+        for seed in 5..10 {
+            let c = rand_block(seed);
+            let a = inverse(&c);
+            let b = inverse_naive(&c);
+            for k in 0..64 {
+                assert!((a[k] - b[k]).abs() < 1e-2, "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        for seed in 10..15 {
+            let b = rand_block(seed);
+            let r = inverse(&forward(&b));
+            for k in 0..64 {
+                assert!((b[k] - r[k]).abs() < 1e-2, "k={k}: {} vs {}", b[k], r[k]);
+            }
+        }
+    }
+
+    #[test]
+    fn dc_is_scaled_mean() {
+        // paper eq. 22: Y(0,0) = 8 * mean for the orthonormal DCT
+        let b = rand_block(42);
+        let f = forward(&b);
+        let mean: f32 = b.iter().sum::<f32>() / 64.0;
+        assert!((f[0] - 8.0 * mean).abs() < 1e-3);
+    }
+
+    #[test]
+    fn parseval() {
+        // Theorem 2 machinery: energy is preserved
+        let b = rand_block(43);
+        let f = forward(&b);
+        let eb: f32 = b.iter().map(|x| x * x).sum();
+        let ef: f32 = f.iter().map(|x| x * x).sum();
+        assert!((eb - ef).abs() / eb < 1e-4);
+    }
+
+    #[test]
+    fn constant_block_has_only_dc() {
+        let b = [3.0f32; 64];
+        let f = forward(&b);
+        assert!((f[0] - 24.0).abs() < 1e-4); // 8 * 3
+        for &v in &f[1..] {
+            assert!(v.abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Coefficient-level entropy coding (T.81 F.1.2/F.2.2): DC DPCM + AC
+//! run-length with ZRL (16 zeros) and EOB markers, over quantized integer
+//! coefficient blocks in zigzag order.
+
+use super::bits::{extend, magnitude, BitReader, BitWriter};
+use super::huffman::{HuffDecoder, HuffEncoder};
+use super::{JpegError, Result};
+
+/// Encode one 64-coefficient zigzag block.  `pred` is the running DC
+/// predictor for this component; returns the updated predictor.
+pub fn encode_block(
+    w: &mut BitWriter,
+    block: &[i32; 64],
+    pred: i32,
+    dc: &HuffEncoder,
+    ac: &HuffEncoder,
+) -> i32 {
+    // DC: category + magnitude bits of the DPCM difference
+    let diff = block[0] - pred;
+    let (n, bits) = magnitude(diff);
+    dc.emit(w, n as u8);
+    if n > 0 {
+        w.put(bits, n);
+    }
+
+    // AC: (run, size) symbols
+    let mut run = 0u32;
+    for k in 1..64 {
+        let v = block[k];
+        if v == 0 {
+            run += 1;
+            continue;
+        }
+        while run >= 16 {
+            ac.emit(w, 0xF0); // ZRL
+            run -= 16;
+        }
+        let (n, bits) = magnitude(v);
+        debug_assert!(n <= 10, "AC coefficient too large: {v}");
+        ac.emit(w, ((run << 4) | n) as u8);
+        w.put(bits, n);
+        run = 0;
+    }
+    if run > 0 {
+        ac.emit(w, 0x00); // EOB
+    }
+    block[0]
+}
+
+/// Decode one block; returns the updated DC predictor.
+pub fn decode_block(
+    r: &mut BitReader,
+    block: &mut [i32; 64],
+    pred: i32,
+    dc: &HuffDecoder,
+    ac: &HuffDecoder,
+) -> Result<i32> {
+    block.fill(0);
+    let n = dc.decode(r)? as u32;
+    if n > 11 {
+        return Err(JpegError::Invalid(format!("DC category {n}")));
+    }
+    let bits = r.get(n)?;
+    block[0] = pred + extend(bits, n);
+
+    let mut k = 1usize;
+    while k < 64 {
+        let sym = ac.decode(r)?;
+        if sym == 0x00 {
+            break; // EOB
+        }
+        if sym == 0xF0 {
+            k += 16; // ZRL
+            continue;
+        }
+        let run = (sym >> 4) as usize;
+        let size = (sym & 0x0F) as u32;
+        k += run;
+        if k >= 64 {
+            return Err(JpegError::Invalid("AC run past block end".into()));
+        }
+        let bits = r.get(size)?;
+        block[k] = extend(bits, size);
+        k += 1;
+    }
+    Ok(block[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jpeg::huffman::*;
+
+    fn enc_dec(blocks: &[[i32; 64]]) -> Vec<[i32; 64]> {
+        let dce = HuffEncoder::new(&dc_luma_spec());
+        let ace = HuffEncoder::new(&ac_luma_spec());
+        let dcd = HuffDecoder::new(&dc_luma_spec());
+        let acd = HuffDecoder::new(&ac_luma_spec());
+        let mut w = BitWriter::new();
+        let mut pred = 0;
+        for b in blocks {
+            pred = encode_block(&mut w, b, pred, &dce, &ace);
+        }
+        let data = w.finish();
+        let mut r = BitReader::new(&data);
+        let mut out = vec![[0i32; 64]; blocks.len()];
+        let mut pred = 0;
+        for b in &mut out {
+            pred = decode_block(&mut r, b, pred, &dcd, &acd).unwrap();
+        }
+        out
+    }
+
+    #[test]
+    fn zero_block() {
+        let blocks = [[0i32; 64]];
+        assert_eq!(enc_dec(&blocks), blocks);
+    }
+
+    #[test]
+    fn dc_only() {
+        let mut b = [0i32; 64];
+        b[0] = -37;
+        assert_eq!(enc_dec(&[b]), vec![b]);
+    }
+
+    #[test]
+    fn dc_dpcm_chain() {
+        let mut blocks = vec![[0i32; 64]; 5];
+        for (i, b) in blocks.iter_mut().enumerate() {
+            b[0] = (i as i32 - 2) * 100;
+        }
+        assert_eq!(enc_dec(&blocks), blocks);
+    }
+
+    #[test]
+    fn long_zero_runs_need_zrl() {
+        let mut b = [0i32; 64];
+        b[0] = 5;
+        b[40] = 3; // 39 leading AC zeros -> 2 ZRLs
+        b[63] = -1;
+        assert_eq!(enc_dec(&[b]), vec![b]);
+    }
+
+    #[test]
+    fn dense_block() {
+        let mut b = [0i32; 64];
+        let mut rng = crate::util::Rng::new(3);
+        for v in b.iter_mut() {
+            *v = rng.below(21) as i32 - 10;
+        }
+        assert_eq!(enc_dec(&[b]), vec![b]);
+    }
+
+    #[test]
+    fn random_blocks_roundtrip() {
+        let mut rng = crate::util::Rng::new(4);
+        let mut blocks = vec![[0i32; 64]; 20];
+        for b in &mut blocks {
+            // JPEG-like sparsity: mostly zeros, low freq energy
+            b[0] = rng.below(2047) as i32 - 1023;
+            for k in 1..64 {
+                if rng.uniform() < 0.2 {
+                    b[k] = rng.below(201) as i32 - 100;
+                }
+            }
+        }
+        assert_eq!(enc_dec(&blocks), blocks);
+    }
+
+    #[test]
+    fn trailing_nonzero_no_eob() {
+        let mut b = [1i32; 64]; // fully dense: encoder must not emit EOB
+        b[0] = 10;
+        assert_eq!(enc_dec(&[b]), vec![b]);
+    }
+}

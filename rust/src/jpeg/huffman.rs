@@ -1,0 +1,280 @@
+//! Baseline JPEG Huffman coding (ITU-T T.81 Annex C + K.3).
+//!
+//! Tables are specified as (BITS, HUFFVAL): number of codes per length
+//! 1..=16 plus the symbol list.  Codes are canonical.  Decode uses the
+//! classic per-length (mincode, maxcode, valptr) walk plus an 8-bit
+//! lookup fast path — the Huffman decode loop is the serial hot spot of
+//! the spatial pipeline, which is exactly the cost the paper's system
+//! shares between both routes (entropy decoding is common) while the
+//! spatial route additionally pays dequantize+IDCT.
+
+use super::{JpegError, Result};
+use super::bits::{BitReader, BitWriter};
+
+/// A Huffman table specification (BITS counts + symbol values).
+#[derive(Clone, Debug)]
+pub struct HuffSpec {
+    pub counts: [u8; 16],
+    pub values: Vec<u8>,
+}
+
+/// Annex K.3.1 — luminance DC.
+pub fn dc_luma_spec() -> HuffSpec {
+    HuffSpec {
+        counts: [0, 1, 5, 1, 1, 1, 1, 1, 1, 0, 0, 0, 0, 0, 0, 0],
+        values: vec![0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11],
+    }
+}
+
+/// Annex K.3.1 — chrominance DC.
+pub fn dc_chroma_spec() -> HuffSpec {
+    HuffSpec {
+        counts: [0, 3, 1, 1, 1, 1, 1, 1, 1, 1, 1, 0, 0, 0, 0, 0],
+        values: vec![0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11],
+    }
+}
+
+/// Annex K.3.2 — luminance AC.
+pub fn ac_luma_spec() -> HuffSpec {
+    HuffSpec {
+        counts: [0, 2, 1, 3, 3, 2, 4, 3, 5, 5, 4, 4, 0, 0, 1, 0x7D],
+        values: vec![
+            0x01, 0x02, 0x03, 0x00, 0x04, 0x11, 0x05, 0x12, 0x21, 0x31, 0x41,
+            0x06, 0x13, 0x51, 0x61, 0x07, 0x22, 0x71, 0x14, 0x32, 0x81, 0x91,
+            0xA1, 0x08, 0x23, 0x42, 0xB1, 0xC1, 0x15, 0x52, 0xD1, 0xF0, 0x24,
+            0x33, 0x62, 0x72, 0x82, 0x09, 0x0A, 0x16, 0x17, 0x18, 0x19, 0x1A,
+            0x25, 0x26, 0x27, 0x28, 0x29, 0x2A, 0x34, 0x35, 0x36, 0x37, 0x38,
+            0x39, 0x3A, 0x43, 0x44, 0x45, 0x46, 0x47, 0x48, 0x49, 0x4A, 0x53,
+            0x54, 0x55, 0x56, 0x57, 0x58, 0x59, 0x5A, 0x63, 0x64, 0x65, 0x66,
+            0x67, 0x68, 0x69, 0x6A, 0x73, 0x74, 0x75, 0x76, 0x77, 0x78, 0x79,
+            0x7A, 0x83, 0x84, 0x85, 0x86, 0x87, 0x88, 0x89, 0x8A, 0x92, 0x93,
+            0x94, 0x95, 0x96, 0x97, 0x98, 0x99, 0x9A, 0xA2, 0xA3, 0xA4, 0xA5,
+            0xA6, 0xA7, 0xA8, 0xA9, 0xAA, 0xB2, 0xB3, 0xB4, 0xB5, 0xB6, 0xB7,
+            0xB8, 0xB9, 0xBA, 0xC2, 0xC3, 0xC4, 0xC5, 0xC6, 0xC7, 0xC8, 0xC9,
+            0xCA, 0xD2, 0xD3, 0xD4, 0xD5, 0xD6, 0xD7, 0xD8, 0xD9, 0xDA, 0xE1,
+            0xE2, 0xE3, 0xE4, 0xE5, 0xE6, 0xE7, 0xE8, 0xE9, 0xEA, 0xF1, 0xF2,
+            0xF3, 0xF4, 0xF5, 0xF6, 0xF7, 0xF8, 0xF9, 0xFA,
+        ],
+    }
+}
+
+/// Annex K.3.2 — chrominance AC.
+pub fn ac_chroma_spec() -> HuffSpec {
+    HuffSpec {
+        counts: [0, 2, 1, 2, 4, 4, 3, 4, 7, 5, 4, 4, 0, 1, 2, 0x77],
+        values: vec![
+            0x00, 0x01, 0x02, 0x03, 0x11, 0x04, 0x05, 0x21, 0x31, 0x06, 0x12,
+            0x41, 0x51, 0x07, 0x61, 0x71, 0x13, 0x22, 0x32, 0x81, 0x08, 0x14,
+            0x42, 0x91, 0xA1, 0xB1, 0xC1, 0x09, 0x23, 0x33, 0x52, 0xF0, 0x15,
+            0x62, 0x72, 0xD1, 0x0A, 0x16, 0x24, 0x34, 0xE1, 0x25, 0xF1, 0x17,
+            0x18, 0x19, 0x1A, 0x26, 0x27, 0x28, 0x29, 0x2A, 0x35, 0x36, 0x37,
+            0x38, 0x39, 0x3A, 0x43, 0x44, 0x45, 0x46, 0x47, 0x48, 0x49, 0x4A,
+            0x53, 0x54, 0x55, 0x56, 0x57, 0x58, 0x59, 0x5A, 0x63, 0x64, 0x65,
+            0x66, 0x67, 0x68, 0x69, 0x6A, 0x73, 0x74, 0x75, 0x76, 0x77, 0x78,
+            0x79, 0x7A, 0x82, 0x83, 0x84, 0x85, 0x86, 0x87, 0x88, 0x89, 0x8A,
+            0x92, 0x93, 0x94, 0x95, 0x96, 0x97, 0x98, 0x99, 0x9A, 0xA2, 0xA3,
+            0xA4, 0xA5, 0xA6, 0xA7, 0xA8, 0xA9, 0xAA, 0xB2, 0xB3, 0xB4, 0xB5,
+            0xB6, 0xB7, 0xB8, 0xB9, 0xBA, 0xC2, 0xC3, 0xC4, 0xC5, 0xC6, 0xC7,
+            0xC8, 0xC9, 0xCA, 0xD2, 0xD3, 0xD4, 0xD5, 0xD6, 0xD7, 0xD8, 0xD9,
+            0xDA, 0xE2, 0xE3, 0xE4, 0xE5, 0xE6, 0xE7, 0xE8, 0xE9, 0xEA, 0xF2,
+            0xF3, 0xF4, 0xF5, 0xF6, 0xF7, 0xF8, 0xF9, 0xFA,
+        ],
+    }
+}
+
+/// Encoder side: symbol -> (code, length).
+#[derive(Clone, Debug)]
+pub struct HuffEncoder {
+    code: [u16; 256],
+    len: [u8; 256],
+}
+
+impl HuffEncoder {
+    pub fn new(spec: &HuffSpec) -> Self {
+        let mut enc = HuffEncoder { code: [0; 256], len: [0; 256] };
+        let mut code = 0u16;
+        let mut vi = 0usize;
+        for l in 0..16 {
+            for _ in 0..spec.counts[l] {
+                let sym = spec.values[vi] as usize;
+                enc.code[sym] = code;
+                enc.len[sym] = (l + 1) as u8;
+                code += 1;
+                vi += 1;
+            }
+            code <<= 1;
+        }
+        enc
+    }
+
+    #[inline]
+    pub fn emit(&self, w: &mut BitWriter, symbol: u8) {
+        let l = self.len[symbol as usize];
+        debug_assert!(l > 0, "symbol {symbol:#x} has no code");
+        w.put(self.code[symbol as usize] as u32, l as u32);
+    }
+
+    pub fn code_len(&self, symbol: u8) -> u8 {
+        self.len[symbol as usize]
+    }
+}
+
+/// Decoder side: canonical (mincode/maxcode/valptr) + 8-bit fast lookup.
+#[derive(Clone, Debug)]
+pub struct HuffDecoder {
+    mincode: [i32; 17],
+    maxcode: [i32; 17],
+    valptr: [usize; 17],
+    values: Vec<u8>,
+    /// fast path: (symbol, length) for every 8-bit prefix; len=0 -> slow path
+    fast: [(u8, u8); 256],
+}
+
+impl HuffDecoder {
+    pub fn new(spec: &HuffSpec) -> Self {
+        let mut mincode = [0i32; 17];
+        let mut maxcode = [-1i32; 17];
+        let mut valptr = [0usize; 17];
+        let mut code = 0i32;
+        let mut vi = 0usize;
+        for l in 1..=16 {
+            valptr[l] = vi;
+            mincode[l] = code;
+            let n = spec.counts[l - 1] as usize;
+            code += n as i32;
+            vi += n;
+            maxcode[l] = code - 1;
+            code <<= 1;
+        }
+        let mut dec = HuffDecoder {
+            mincode,
+            maxcode,
+            valptr,
+            values: spec.values.clone(),
+            fast: [(0, 0); 256],
+        };
+        // build the 8-bit lookup
+        let mut c = 0i32;
+        let mut vi = 0usize;
+        for l in 1..=8u32 {
+            for _ in 0..spec.counts[(l - 1) as usize] {
+                let sym = spec.values[vi];
+                let shift = 8 - l;
+                let lo = (c << shift) as usize;
+                for e in 0..(1usize << shift) {
+                    dec.fast[lo + e] = (sym, l as u8);
+                }
+                c += 1;
+                vi += 1;
+            }
+            c <<= 1;
+        }
+        dec
+    }
+
+    /// Decode one symbol from the bit reader.
+    pub fn decode(&self, r: &mut BitReader) -> Result<u8> {
+        let peek = r.peek16()?;
+        let (sym, l) = self.fast[(peek >> 8) as usize];
+        if l > 0 {
+            r.skip(l as u32)?;
+            return Ok(sym);
+        }
+        // slow path: lengths 9..=16
+        let mut code = (peek >> 8) as i32;
+        let mut l = 8u32;
+        loop {
+            l += 1;
+            if l > 16 {
+                return Err(JpegError::Invalid("bad huffman code".into()));
+            }
+            code = (code << 1) | ((peek >> (16 - l)) & 1) as i32;
+            if code <= self.maxcode[l as usize] {
+                let idx = self.valptr[l as usize]
+                    + (code - self.mincode[l as usize]) as usize;
+                let sym = self.values[idx];
+                r.skip(l)?;
+                return Ok(sym);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(spec: &HuffSpec, symbols: &[u8]) {
+        let enc = HuffEncoder::new(spec);
+        let dec = HuffDecoder::new(spec);
+        let mut w = BitWriter::new();
+        for &s in symbols {
+            enc.emit(&mut w, s);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &s in symbols {
+            assert_eq!(dec.decode(&mut r).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn dc_luma_roundtrip() {
+        roundtrip(&dc_luma_spec(), &[0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 0, 5]);
+    }
+
+    #[test]
+    fn dc_chroma_roundtrip() {
+        roundtrip(&dc_chroma_spec(), &[11, 0, 3, 7, 1, 1, 0]);
+    }
+
+    #[test]
+    fn ac_luma_roundtrip_all_symbols() {
+        let spec = ac_luma_spec();
+        let syms = spec.values.clone();
+        roundtrip(&spec, &syms);
+    }
+
+    #[test]
+    fn ac_chroma_roundtrip_all_symbols() {
+        let spec = ac_chroma_spec();
+        let syms = spec.values.clone();
+        roundtrip(&spec, &syms);
+    }
+
+    #[test]
+    fn spec_counts_match_values() {
+        for spec in [dc_luma_spec(), dc_chroma_spec(), ac_luma_spec(), ac_chroma_spec()] {
+            let total: usize = spec.counts.iter().map(|&c| c as usize).sum();
+            assert_eq!(total, spec.values.len());
+        }
+    }
+
+    #[test]
+    fn canonical_prefix_free() {
+        // no code is a prefix of another in the encoder table
+        let enc = HuffEncoder::new(&ac_luma_spec());
+        let spec = ac_luma_spec();
+        for &a in &spec.values {
+            for &b in &spec.values {
+                if a == b {
+                    continue;
+                }
+                let (la, lb) = (enc.code_len(a) as u32, enc.code_len(b) as u32);
+                if la <= lb {
+                    let ca = enc.code[a as usize] as u32;
+                    let cb = enc.code[b as usize] as u32;
+                    assert_ne!(ca, cb >> (lb - la), "{a:#x} prefix of {b:#x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_and_slow_paths_agree() {
+        // long AC codes exercise the slow path
+        let spec = ac_luma_spec();
+        let syms: Vec<u8> = spec.values.iter().rev().cloned().collect();
+        roundtrip(&spec, &syms);
+    }
+}

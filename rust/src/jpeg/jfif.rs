@@ -1,0 +1,395 @@
+//! JFIF container: marker segment writing and parsing (baseline SOF0).
+//!
+//! Supports what the paper's pipeline needs: 8-bit baseline, 1 or 3
+//! components, 4:4:4 (no chroma subsampling), interleaved single scan,
+//! standard or custom Huffman/quant tables.  Progressive, arithmetic
+//! coding and restart intervals are rejected with clear errors.
+
+use super::huffman::HuffSpec;
+use super::quant::QuantTable;
+use super::zigzag::UNZIGZAG;
+use super::{JpegError, Result};
+
+pub const SOI: u16 = 0xFFD8;
+pub const EOI: u16 = 0xFFD9;
+pub const APP0: u16 = 0xFFE0;
+pub const DQT: u16 = 0xFFDB;
+pub const SOF0: u16 = 0xFFC0;
+pub const DHT: u16 = 0xFFC4;
+pub const SOS: u16 = 0xFFDA;
+pub const DRI: u16 = 0xFFDD;
+pub const COM: u16 = 0xFFFE;
+
+/// One frame component as declared in SOF0/SOS.
+#[derive(Clone, Debug)]
+pub struct FrameComponent {
+    pub id: u8,
+    pub qtable: usize,
+    pub dc_table: usize,
+    pub ac_table: usize,
+}
+
+/// Everything parsed from the headers plus the entropy-coded segment.
+#[derive(Debug)]
+pub struct ParsedJpeg {
+    pub height: usize,
+    pub width: usize,
+    pub components: Vec<FrameComponent>,
+    pub qtables: Vec<Option<QuantTable>>,
+    pub dc_specs: Vec<Option<HuffSpec>>,
+    pub ac_specs: Vec<Option<HuffSpec>>,
+    pub scan_data: Vec<u8>,
+}
+
+// ---------------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------------
+pub struct Writer {
+    out: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        let mut w = Writer { out: Vec::new() };
+        w.marker(SOI);
+        w
+    }
+
+    fn marker(&mut self, m: u16) {
+        self.out.extend_from_slice(&m.to_be_bytes());
+    }
+
+    fn segment(&mut self, m: u16, payload: &[u8]) {
+        self.marker(m);
+        let len = (payload.len() + 2) as u16;
+        self.out.extend_from_slice(&len.to_be_bytes());
+        self.out.extend_from_slice(payload);
+    }
+
+    pub fn app0_jfif(&mut self) {
+        // JFIF 1.02, no thumbnail, 1:1 aspect
+        let payload = [
+            b'J', b'F', b'I', b'F', 0, 1, 2, 0, 0, 1, 0, 1, 0, 0,
+        ];
+        self.segment(APP0, &payload);
+    }
+
+    pub fn comment(&mut self, text: &str) {
+        self.segment(COM, text.as_bytes());
+    }
+
+    /// DQT with one 8-bit table (values in zigzag order, as stored).
+    pub fn dqt(&mut self, id: u8, table: &QuantTable) {
+        let mut p = Vec::with_capacity(65);
+        p.push(id & 0x0F); // precision 0 (8-bit), table id
+        for &v in &table.values {
+            debug_assert!(v <= 255);
+            p.push(v as u8);
+        }
+        self.segment(DQT, &p);
+    }
+
+    pub fn sof0(&mut self, height: usize, width: usize, comps: &[FrameComponent]) {
+        let mut p = vec![8u8]; // precision
+        p.extend_from_slice(&(height as u16).to_be_bytes());
+        p.extend_from_slice(&(width as u16).to_be_bytes());
+        p.push(comps.len() as u8);
+        for c in comps {
+            p.push(c.id);
+            p.push(0x11); // 1x1 sampling (4:4:4)
+            p.push(c.qtable as u8);
+        }
+        self.segment(SOF0, &p);
+    }
+
+    /// DHT: class 0 = DC, 1 = AC.
+    pub fn dht(&mut self, class: u8, id: u8, spec: &HuffSpec) {
+        let mut p = vec![(class << 4) | (id & 0x0F)];
+        p.extend_from_slice(&spec.counts);
+        p.extend_from_slice(&spec.values);
+        self.segment(DHT, &p);
+    }
+
+    pub fn sos(&mut self, comps: &[FrameComponent]) {
+        let mut p = vec![comps.len() as u8];
+        for c in comps {
+            p.push(c.id);
+            p.push(((c.dc_table as u8) << 4) | (c.ac_table as u8));
+        }
+        p.extend_from_slice(&[0, 63, 0]); // spectral selection (baseline)
+        self.segment(SOS, &p);
+    }
+
+    pub fn scan_data(&mut self, data: &[u8]) {
+        self.out.extend_from_slice(data);
+    }
+
+    pub fn finish(mut self) -> Vec<u8> {
+        self.marker(EOI);
+        self.out
+    }
+}
+
+impl Default for Writer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parser
+// ---------------------------------------------------------------------------
+struct Cursor<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn u8(&mut self) -> Result<u8> {
+        let v = *self
+            .data
+            .get(self.pos)
+            .ok_or_else(|| JpegError::Invalid("truncated".into()))?;
+        self.pos += 1;
+        Ok(v)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(((self.u8()? as u16) << 8) | self.u8()? as u16)
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.data.len() {
+            return Err(JpegError::Invalid("truncated segment".into()));
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+}
+
+/// Parse headers and locate the entropy-coded segment.
+pub fn parse(data: &[u8]) -> Result<ParsedJpeg> {
+    let mut c = Cursor { data, pos: 0 };
+    if c.u16()? != SOI {
+        return Err(JpegError::Invalid("missing SOI".into()));
+    }
+    let mut qtables: Vec<Option<QuantTable>> = vec![None; 4];
+    let mut dc_specs: Vec<Option<HuffSpec>> = vec![None; 4];
+    let mut ac_specs: Vec<Option<HuffSpec>> = vec![None; 4];
+    let mut frame: Option<(usize, usize, Vec<(u8, usize)>)> = None;
+
+    loop {
+        let marker = c.u16()?;
+        if marker == EOI {
+            return Err(JpegError::Invalid("EOI before SOS".into()));
+        }
+        if !(0xFF01..=0xFFFE).contains(&marker) {
+            return Err(JpegError::Invalid(format!("bad marker {marker:#06x}")));
+        }
+        match marker {
+            SOS => {
+                let len = c.u16()? as usize;
+                let payload = c.bytes(len - 2)?;
+                let (h, w, fcomps) = frame
+                    .as_ref()
+                    .ok_or_else(|| JpegError::Invalid("SOS before SOF0".into()))?;
+                let ns = payload[0] as usize;
+                if ns != fcomps.len() {
+                    return Err(JpegError::Unsupported(
+                        "non-interleaved scans".into(),
+                    ));
+                }
+                let mut components = Vec::new();
+                for i in 0..ns {
+                    let id = payload[1 + 2 * i];
+                    let tables = payload[2 + 2 * i];
+                    let (fid, qt) = fcomps
+                        .iter()
+                        .find(|(cid, _)| *cid == id)
+                        .ok_or_else(|| JpegError::Invalid("unknown scan comp".into()))?;
+                    components.push(FrameComponent {
+                        id: *fid,
+                        qtable: *qt,
+                        dc_table: (tables >> 4) as usize,
+                        ac_table: (tables & 0x0F) as usize,
+                    });
+                }
+                // entropy data runs until the next real marker (EOI)
+                let scan_start = c.pos;
+                let mut end = scan_start;
+                while end + 1 < data.len() {
+                    if data[end] == 0xFF && data[end + 1] != 0x00 {
+                        break;
+                    }
+                    end += 1;
+                }
+                return Ok(ParsedJpeg {
+                    height: *h,
+                    width: *w,
+                    components,
+                    qtables,
+                    dc_specs,
+                    ac_specs,
+                    scan_data: data[scan_start..end].to_vec(),
+                });
+            }
+            SOF0 => {
+                let len = c.u16()? as usize;
+                let p = c.bytes(len - 2)?;
+                if p[0] != 8 {
+                    return Err(JpegError::Unsupported("precision != 8".into()));
+                }
+                let h = ((p[1] as usize) << 8) | p[2] as usize;
+                let w = ((p[3] as usize) << 8) | p[4] as usize;
+                let nc = p[5] as usize;
+                let mut comps = Vec::new();
+                for i in 0..nc {
+                    let id = p[6 + 3 * i];
+                    let sampling = p[7 + 3 * i];
+                    if sampling != 0x11 {
+                        return Err(JpegError::Unsupported(
+                            "chroma subsampling (only 4:4:4 supported)".into(),
+                        ));
+                    }
+                    comps.push((id, p[8 + 3 * i] as usize));
+                }
+                frame = Some((h, w, comps));
+            }
+            m if (0xFFC1..=0xFFCB).contains(&m) && m != DHT && m != 0xFFC8 => {
+                return Err(JpegError::Unsupported(format!(
+                    "non-baseline frame {m:#06x}"
+                )));
+            }
+            DQT => {
+                let len = c.u16()? as usize;
+                let p = c.bytes(len - 2)?;
+                let mut off = 0;
+                while off < p.len() {
+                    let pq = p[off] >> 4;
+                    let tq = (p[off] & 0x0F) as usize;
+                    off += 1;
+                    if pq != 0 {
+                        return Err(JpegError::Unsupported("16-bit DQT".into()));
+                    }
+                    let mut values = [0u16; 64];
+                    for (k, v) in values.iter_mut().enumerate() {
+                        *v = p[off + k] as u16;
+                    }
+                    off += 64;
+                    qtables[tq] = Some(QuantTable { values });
+                }
+            }
+            DHT => {
+                let len = c.u16()? as usize;
+                let p = c.bytes(len - 2)?;
+                let mut off = 0;
+                while off < p.len() {
+                    let class = p[off] >> 4;
+                    let id = (p[off] & 0x0F) as usize;
+                    off += 1;
+                    let mut counts = [0u8; 16];
+                    counts.copy_from_slice(&p[off..off + 16]);
+                    off += 16;
+                    let total: usize = counts.iter().map(|&x| x as usize).sum();
+                    let values = p[off..off + total].to_vec();
+                    off += total;
+                    let spec = HuffSpec { counts, values };
+                    match class {
+                        0 => dc_specs[id] = Some(spec),
+                        1 => ac_specs[id] = Some(spec),
+                        _ => return Err(JpegError::Invalid("DHT class".into())),
+                    }
+                }
+            }
+            DRI => {
+                let len = c.u16()? as usize;
+                let p = c.bytes(len - 2)?;
+                let interval = ((p[0] as u16) << 8) | p[1] as u16;
+                if interval != 0 {
+                    return Err(JpegError::Unsupported("restart intervals".into()));
+                }
+            }
+            _ => {
+                // skippable segment (APPn, COM, ...)
+                let len = c.u16()? as usize;
+                c.bytes(len - 2)?;
+            }
+        }
+    }
+}
+
+/// Convert a zigzag-order quant table to raster order (for display).
+pub fn qtable_raster(t: &QuantTable) -> [u16; 64] {
+    let mut out = [0u16; 64];
+    for raster in 0..64 {
+        out[raster] = t.values[UNZIGZAG[raster]];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jpeg::huffman::{ac_luma_spec, dc_luma_spec};
+
+    fn minimal_jpeg() -> Vec<u8> {
+        let mut w = Writer::new();
+        w.app0_jfif();
+        w.comment("test");
+        w.dqt(0, &QuantTable::luma(75));
+        w.sof0(8, 8, &[FrameComponent { id: 1, qtable: 0, dc_table: 0, ac_table: 0 }]);
+        w.dht(0, 0, &dc_luma_spec());
+        w.dht(1, 0, &ac_luma_spec());
+        w.sos(&[FrameComponent { id: 1, qtable: 0, dc_table: 0, ac_table: 0 }]);
+        w.scan_data(&[0xAB, 0xCD]);
+        w.finish()
+    }
+
+    #[test]
+    fn roundtrip_headers() {
+        let bytes = minimal_jpeg();
+        assert_eq!(&bytes[..2], &[0xFF, 0xD8]);
+        assert_eq!(&bytes[bytes.len() - 2..], &[0xFF, 0xD9]);
+        let p = parse(&bytes).unwrap();
+        assert_eq!((p.height, p.width), (8, 8));
+        assert_eq!(p.components.len(), 1);
+        assert_eq!(p.scan_data, vec![0xAB, 0xCD]);
+        assert!(p.qtables[0].is_some());
+        assert!(p.dc_specs[0].is_some());
+        assert!(p.ac_specs[0].is_some());
+    }
+
+    #[test]
+    fn parsed_qtable_matches() {
+        let bytes = minimal_jpeg();
+        let p = parse(&bytes).unwrap();
+        assert_eq!(p.qtables[0].as_ref().unwrap(), &QuantTable::luma(75));
+    }
+
+    #[test]
+    fn missing_soi_rejected() {
+        assert!(parse(&[0x00, 0x01]).is_err());
+    }
+
+    #[test]
+    fn progressive_rejected() {
+        let mut bytes = minimal_jpeg();
+        // flip SOF0 (FFC0) into SOF2 (FFC2, progressive)
+        let pos = bytes
+            .windows(2)
+            .position(|w| w == [0xFF, 0xC0])
+            .unwrap();
+        bytes[pos + 1] = 0xC2;
+        match parse(&bytes) {
+            Err(JpegError::Unsupported(_)) => {}
+            other => panic!("expected Unsupported, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let bytes = minimal_jpeg();
+        assert!(parse(&bytes[..10]).is_err());
+    }
+}

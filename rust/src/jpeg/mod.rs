@@ -1,0 +1,54 @@
+//! Full baseline JPEG codec, built from scratch (paper §3.1 substrate).
+//!
+//! This is the system the paper's pipeline sits on: the coordinator's
+//! "spatial" route decodes files all the way to pixels, while the "jpeg"
+//! route stops after entropy decoding — the paper's JPEG transform domain
+//! (output of encoder step 4) — and feeds coefficients to the network.
+//!
+//! Components:
+//! * [`dct`] — forward/inverse 8x8 DCT (naive matrix form + separable
+//!   fast path, cross-checked against each other)
+//! * [`zigzag`] — the zigzag permutation and spatial-frequency bands
+//! * [`quant`] — Annex-K tables + libjpeg quality scaling
+//! * [`bits`] — MSB-first bit reader/writer with 0xFF byte stuffing
+//! * [`huffman`] — baseline Huffman coding (Annex-K tables, canonical
+//!   code construction, fast lookup decode)
+//! * [`entropy`] — DC DPCM + AC run-length (ZRL/EOB) coefficient coding
+//! * [`color`] — RGB <-> YCbCr (BT.601 full range, JFIF convention)
+//! * [`jfif`] — the JFIF container: SOI/APP0/DQT/SOF0/DHT/SOS/EOI
+//! * [`codec`] — top-level encode/decode plus `decode_to_coefficients`
+
+pub mod bits;
+pub mod codec;
+pub mod color;
+pub mod dct;
+pub mod entropy;
+pub mod huffman;
+pub mod jfif;
+pub mod quant;
+pub mod zigzag;
+
+pub use codec::{
+    decode, decode_to_coefficients, encode, CoeffImage, Component, DecodedImage,
+    EncodeOptions, PixelImage,
+};
+pub use quant::QuantTable;
+
+/// JPEG block edge (8) and block size (64).
+pub const BLK: usize = 8;
+pub const NCOEF: usize = 64;
+/// Number of spatial-frequency bands of an 8x8 DCT (paper: 15).
+pub const NUM_BANDS: usize = 15;
+
+/// Errors across the codec.
+#[derive(Debug, thiserror::Error)]
+pub enum JpegError {
+    #[error("invalid JPEG stream: {0}")]
+    Invalid(String),
+    #[error("unsupported JPEG feature: {0}")]
+    Unsupported(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, JpegError>;

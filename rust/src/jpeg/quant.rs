@@ -1,0 +1,174 @@
+//! Quantization tables (paper eq. 7/9): Annex-K bases + quality scaling.
+
+use super::zigzag::ZIGZAG;
+
+/// ITU-T T.81 Annex K.1 luminance table, raster order.
+pub const ANNEX_K_LUMA: [u16; 64] = [
+    16, 11, 10, 16, 24, 40, 51, 61, //
+    12, 12, 14, 19, 26, 58, 60, 55, //
+    14, 13, 16, 24, 40, 57, 69, 56, //
+    14, 17, 22, 29, 51, 87, 80, 62, //
+    18, 22, 37, 56, 68, 109, 103, 77, //
+    24, 35, 55, 64, 81, 104, 113, 92, //
+    49, 64, 78, 87, 103, 121, 120, 101, //
+    72, 92, 95, 98, 112, 100, 103, 99,
+];
+
+/// ITU-T T.81 Annex K.2 chrominance table, raster order.
+pub const ANNEX_K_CHROMA: [u16; 64] = [
+    17, 18, 24, 47, 99, 99, 99, 99, //
+    18, 21, 26, 66, 99, 99, 99, 99, //
+    24, 26, 56, 99, 99, 99, 99, 99, //
+    47, 66, 99, 99, 99, 99, 99, 99, //
+    99, 99, 99, 99, 99, 99, 99, 99, //
+    99, 99, 99, 99, 99, 99, 99, 99, //
+    99, 99, 99, 99, 99, 99, 99, 99, //
+    99, 99, 99, 99, 99, 99, 99, 99,
+];
+
+/// A quantization table in zigzag order (the layout the domain uses).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantTable {
+    pub values: [u16; 64],
+}
+
+impl QuantTable {
+    /// All-ones table — the paper's "losslessly JPEG compressed" setting.
+    pub fn flat() -> Self {
+        QuantTable { values: [1; 64] }
+    }
+
+    /// libjpeg-style quality scaling of a raster-order base table.
+    pub fn from_quality(base_raster: &[u16; 64], quality: u8) -> Self {
+        assert!((1..=100).contains(&quality), "quality in 1..=100");
+        let scale: f64 = if quality < 50 {
+            5000.0 / quality as f64
+        } else {
+            200.0 - 2.0 * quality as f64
+        };
+        let mut values = [0u16; 64];
+        for (k, v) in values.iter_mut().enumerate() {
+            let raw = ((base_raster[ZIGZAG[k]] as f64 * scale + 50.0) / 100.0).floor();
+            *v = raw.clamp(1.0, 255.0) as u16;
+        }
+        QuantTable { values }
+    }
+
+    pub fn luma(quality: u8) -> Self {
+        Self::from_quality(&ANNEX_K_LUMA, quality)
+    }
+
+    pub fn chroma(quality: u8) -> Self {
+        Self::from_quality(&ANNEX_K_CHROMA, quality)
+    }
+
+    /// f32 view, zigzag order, for the numeric paths / artifact inputs.
+    pub fn as_f32(&self) -> [f32; 64] {
+        let mut q = [0.0f32; 64];
+        for (o, &v) in q.iter_mut().zip(&self.values) {
+            *o = v as f32;
+        }
+        q
+    }
+
+    /// Divide a zigzag coefficient block by the table (encoder step 4).
+    pub fn quantize(&self, zz: &[f32; 64]) -> [f32; 64] {
+        let mut out = [0.0f32; 64];
+        for k in 0..64 {
+            out[k] = zz[k] / self.values[k] as f32;
+        }
+        out
+    }
+
+    /// Round to integers (encoder step 5, the lossy step).
+    pub fn round(domain: &[f32; 64]) -> [i32; 64] {
+        let mut out = [0i32; 64];
+        for (o, &v) in out.iter_mut().zip(domain) {
+            *o = v.round() as i32;
+        }
+        out
+    }
+
+    /// Multiply back (decoder dequantization).
+    pub fn dequantize(&self, domain: &[f32; 64]) -> [f32; 64] {
+        let mut out = [0.0f32; 64];
+        for k in 0..64 {
+            out[k] = domain[k] * self.values[k] as f32;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_is_identity() {
+        let q = QuantTable::flat();
+        let mut zz = [0.0f32; 64];
+        for (i, v) in zz.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        assert_eq!(q.quantize(&zz), zz);
+        assert_eq!(q.dequantize(&zz), zz);
+    }
+
+    #[test]
+    fn quality50_is_base_table() {
+        let q = QuantTable::luma(50);
+        assert_eq!(q.values[0], ANNEX_K_LUMA[0]); // zigzag[0] = raster 0
+    }
+
+    #[test]
+    fn quality100_near_lossless() {
+        let q = QuantTable::luma(100);
+        assert!(q.values.iter().all(|&v| v >= 1 && v <= 2));
+    }
+
+    #[test]
+    fn lower_quality_coarser() {
+        let q10 = QuantTable::luma(10);
+        let q90 = QuantTable::luma(90);
+        assert!(q10.values[0] > q90.values[0]);
+        let s10: u32 = q10.values.iter().map(|&v| v as u32).sum();
+        let s90: u32 = q90.values.iter().map(|&v| v as u32).sum();
+        assert!(s10 > s90);
+    }
+
+    #[test]
+    fn quantize_dequantize_roundtrip() {
+        let q = QuantTable::luma(75);
+        let mut rng = crate::util::Rng::new(1);
+        let mut zz = [0.0f32; 64];
+        for v in &mut zz {
+            *v = rng.uniform_in(-100.0, 100.0);
+        }
+        let d = q.quantize(&zz);
+        let back = q.dequantize(&d);
+        for k in 0..64 {
+            assert!((back[k] - zz[k]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn rounding_error_bounded() {
+        let q = QuantTable::luma(50);
+        let mut rng = crate::util::Rng::new(2);
+        let mut zz = [0.0f32; 64];
+        for v in &mut zz {
+            *v = rng.uniform_in(-500.0, 500.0);
+        }
+        let rounded = QuantTable::round(&q.quantize(&zz));
+        for k in 0..64 {
+            let rec = rounded[k] as f32 * q.values[k] as f32;
+            assert!((rec - zz[k]).abs() <= 0.5 * q.values[k] as f32 + 1e-3);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_quality_panics() {
+        QuantTable::luma(0);
+    }
+}

@@ -1,0 +1,126 @@
+//! Zigzag ordering (paper eq. 6) and spatial-frequency band structure.
+
+/// `ZIGZAG[k]` = raster index (8*row + col) of the k-th zigzag coefficient.
+pub const ZIGZAG: [usize; 64] = [
+    0, 1, 8, 16, 9, 2, 3, 10, //
+    17, 24, 32, 25, 18, 11, 4, 5, //
+    12, 19, 26, 33, 40, 48, 41, 34, //
+    27, 20, 13, 6, 7, 14, 21, 28, //
+    35, 42, 49, 56, 57, 50, 43, 36, //
+    29, 22, 15, 23, 30, 37, 44, 51, //
+    58, 59, 52, 45, 38, 31, 39, 46, //
+    53, 60, 61, 54, 47, 55, 62, 63,
+];
+
+/// `UNZIGZAG[raster]` = zigzag position of a raster index.
+pub const fn unzigzag() -> [usize; 64] {
+    let mut inv = [0usize; 64];
+    let mut k = 0;
+    while k < 64 {
+        inv[ZIGZAG[k]] = k;
+        k += 1;
+    }
+    inv
+}
+
+pub const UNZIGZAG: [usize; 64] = unzigzag();
+
+/// Spatial-frequency band (alpha+beta) of zigzag coefficient k (0..=14).
+pub const fn band(k: usize) -> usize {
+    let r = ZIGZAG[k];
+    r / 8 + r % 8
+}
+
+/// 0/1 mask over zigzag coefficients keeping the lowest `num_freqs`
+/// spatial-frequency bands (the paper's phi <= k set; 15 = all).
+pub fn band_mask(num_freqs: usize) -> [f32; 64] {
+    assert!((1..=15).contains(&num_freqs), "num_freqs in 1..=15");
+    let mut m = [0.0f32; 64];
+    let mut k = 0;
+    while k < 64 {
+        if band(k) < num_freqs {
+            m[k] = 1.0;
+        }
+        k += 1;
+    }
+    m
+}
+
+/// Reorder a raster block into zigzag order.
+pub fn to_zigzag(raster: &[f32; 64]) -> [f32; 64] {
+    let mut out = [0.0f32; 64];
+    for (k, o) in out.iter_mut().enumerate() {
+        *o = raster[ZIGZAG[k]];
+    }
+    out
+}
+
+/// Reorder a zigzag block back to raster order.
+pub fn from_zigzag(zz: &[f32; 64]) -> [f32; 64] {
+    let mut out = [0.0f32; 64];
+    for (k, &v) in zz.iter().enumerate() {
+        out[ZIGZAG[k]] = v;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn is_permutation() {
+        let mut seen = [false; 64];
+        for &z in &ZIGZAG {
+            assert!(!seen[z]);
+            seen[z] = true;
+        }
+    }
+
+    #[test]
+    fn inverse_consistent() {
+        for k in 0..64 {
+            assert_eq!(UNZIGZAG[ZIGZAG[k]], k);
+        }
+    }
+
+    #[test]
+    fn standard_prefix() {
+        assert_eq!(&ZIGZAG[..6], &[0, 1, 8, 16, 9, 2]);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut b = [0.0f32; 64];
+        for (i, v) in b.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        assert_eq!(from_zigzag(&to_zigzag(&b)), b);
+    }
+
+    #[test]
+    fn bands_nondecreasing_stepwise() {
+        for k in 1..64 {
+            assert!(band(k) + 1 >= band(k - 1), "k={k}");
+        }
+        assert_eq!(band(0), 0);
+        assert_eq!(band(63), 14);
+    }
+
+    #[test]
+    fn band_mask_counts() {
+        assert_eq!(band_mask(1).iter().sum::<f32>(), 1.0); // DC only
+        assert_eq!(band_mask(15).iter().sum::<f32>(), 64.0); // everything
+        // band b holds min(b+1, 8, 15-b) coefficients
+        for nf in 1..=15 {
+            let expect: usize = (0..nf).map(|b| (b + 1).min(8).min(15 - b)).sum();
+            assert_eq!(band_mask(nf).iter().sum::<f32>() as usize, expect);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn band_mask_zero_panics() {
+        band_mask(0);
+    }
+}

@@ -1,0 +1,187 @@
+//! JPEG-domain batch normalization and global average pooling
+//! (paper §4.3, §4.5; Algorithm 3).
+
+use crate::nn::BN_EPS;
+use crate::tensor::Tensor;
+
+/// Eval-mode BN on domain coefficients (N, C, Bh, Bw, 64).
+///
+/// Scale every coefficient by gamma/sqrt(var+eps); shift only the DC
+/// coefficient by 8*(beta - mean*scale) (dequantized units).
+pub fn jpeg_batch_norm_eval(
+    f: &Tensor,
+    qvec: &[f32; 64],
+    gamma: &Tensor,
+    beta: &Tensor,
+    rmean: &Tensor,
+    rvar: &Tensor,
+) -> Tensor {
+    let s = f.shape();
+    let (n, c, bh, bw) = (s[0], s[1], s[2], s[3]);
+    let mut out = vec![0.0f32; f.len()];
+    let fd = f.data();
+    for ci in 0..c {
+        let inv = gamma.data()[ci] / (rvar.data()[ci] + BN_EPS).sqrt();
+        let dc_shift = 8.0 * (beta.data()[ci] - rmean.data()[ci] * inv) / qvec[0];
+        for b in 0..n {
+            for blk in 0..bh * bw {
+                let off = (((b * c + ci) * bh * bw) + blk) * 64;
+                for k in 0..64 {
+                    out[off + k] = fd[off + k] * inv;
+                }
+                out[off] += dc_shift;
+            }
+        }
+    }
+    Tensor::from_vec(s, out)
+}
+
+/// Batch statistics in the domain (paper Theorem 2):
+/// mean from DC coefficients, second moment from Parseval.
+/// Returns (mean, var) per channel over (N, Bh, Bw) blocks.
+pub fn jpeg_batch_stats(f: &Tensor, qvec: &[f32; 64]) -> (Tensor, Tensor) {
+    let s = f.shape();
+    let (n, c, bh, bw) = (s[0], s[1], s[2], s[3]);
+    let fd = f.data();
+    let nblocks = (n * bh * bw) as f32;
+    let mut mean = vec![0.0f32; c];
+    let mut e2 = vec![0.0f32; c];
+    for b in 0..n {
+        for ci in 0..c {
+            for blk in 0..bh * bw {
+                let off = (((b * c + ci) * bh * bw) + blk) * 64;
+                mean[ci] += fd[off] * qvec[0] / 8.0;
+                let mut acc = 0.0f32;
+                for k in 0..64 {
+                    let y = fd[off + k] * qvec[k];
+                    acc += y * y;
+                }
+                e2[ci] += acc / 64.0;
+            }
+        }
+    }
+    let mut var = vec![0.0f32; c];
+    for ci in 0..c {
+        mean[ci] /= nblocks;
+        e2[ci] /= nblocks;
+        var[ci] = e2[ci] - mean[ci] * mean[ci];
+    }
+    (
+        Tensor::from_vec(&[c], mean),
+        Tensor::from_vec(&[c], var),
+    )
+}
+
+/// Global average pooling in the domain (paper Figure 2):
+/// channel-wise mean of dequantized DC coefficients / 8.
+pub fn jpeg_global_avg_pool(f: &Tensor, qvec: &[f32; 64]) -> Tensor {
+    let s = f.shape();
+    let (n, c, bh, bw) = (s[0], s[1], s[2], s[3]);
+    let fd = f.data();
+    let mut out = vec![0.0f32; n * c];
+    for b in 0..n {
+        for ci in 0..c {
+            let mut acc = 0.0f32;
+            for blk in 0..bh * bw {
+                let off = (((b * c + ci) * bh * bw) + blk) * 64;
+                acc += fd[off];
+            }
+            out[b * c + ci] = acc * qvec[0] / (8.0 * (bh * bw) as f32);
+        }
+    }
+    Tensor::from_vec(&[n, c], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jpeg_domain::{decode_tensor, encode_tensor, qvec_flat};
+    use crate::nn;
+    use crate::util::Rng;
+
+    fn rand_image(seed: u64, n: usize, c: usize, h: usize) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::from_vec(
+            &[n, c, h, h],
+            (0..n * c * h * h).map(|_| rng.normal()).collect(),
+        )
+    }
+
+    fn rand_vec(seed: u64, c: usize, lo: f32, hi: f32) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::from_vec(&[c], (0..c).map(|_| rng.uniform_in(lo, hi)).collect())
+    }
+
+    #[test]
+    fn eval_matches_spatial() {
+        let q = qvec_flat();
+        let x = rand_image(1, 2, 3, 16);
+        let f = encode_tensor(&x, &q);
+        let g = rand_vec(2, 3, 0.5, 2.0);
+        let b = rand_vec(3, 3, -1.0, 1.0);
+        let rm = rand_vec(4, 3, -0.5, 0.5);
+        let rv = rand_vec(5, 3, 0.5, 2.0);
+        let want = nn::batch_norm_eval(&x, &g, &b, &rm, &rv);
+        let got = decode_tensor(&jpeg_batch_norm_eval(&f, &q, &g, &b, &rm, &rv), &q);
+        assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn eval_matches_spatial_lossy_table() {
+        let q = crate::jpeg::QuantTable::luma(70).as_f32();
+        let x = rand_image(6, 1, 2, 16);
+        let f = encode_tensor(&x, &q);
+        let g = rand_vec(7, 2, 0.5, 2.0);
+        let b = rand_vec(8, 2, -1.0, 1.0);
+        let rm = rand_vec(9, 2, -0.5, 0.5);
+        let rv = rand_vec(10, 2, 0.5, 2.0);
+        let want = nn::batch_norm_eval(&x, &g, &b, &rm, &rv);
+        let got = decode_tensor(&jpeg_batch_norm_eval(&f, &q, &g, &b, &rm, &rv), &q);
+        assert!(got.max_abs_diff(&want) < 1e-2);
+    }
+
+    #[test]
+    fn batch_stats_match_pixel_stats() {
+        // Theorem 2 at system level
+        let q = qvec_flat();
+        let x = rand_image(11, 4, 2, 16);
+        let f = encode_tensor(&x, &q);
+        let (mean, var) = jpeg_batch_stats(&f, &q);
+        for ci in 0..2 {
+            // pixel-space stats per channel
+            let mut vals = Vec::new();
+            for b in 0..4 {
+                for y in 0..16 {
+                    for xx in 0..16 {
+                        vals.push(x.at(&[b, ci, y, xx]));
+                    }
+                }
+            }
+            let m: f32 = vals.iter().sum::<f32>() / vals.len() as f32;
+            let v: f32 =
+                vals.iter().map(|a| (a - m) * (a - m)).sum::<f32>() / vals.len() as f32;
+            assert!((mean.data()[ci] - m).abs() < 1e-3, "mean ch{ci}");
+            assert!((var.data()[ci] - v).abs() < 1e-2, "var ch{ci}");
+        }
+    }
+
+    #[test]
+    fn gap_matches_spatial() {
+        let q = qvec_flat();
+        let x = rand_image(12, 3, 2, 32);
+        let f = encode_tensor(&x, &q);
+        let want = nn::global_avg_pool(&x);
+        let got = jpeg_global_avg_pool(&f, &q);
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn gap_single_block_is_dc_read() {
+        let q = crate::jpeg::QuantTable::luma(90).as_f32();
+        let x = rand_image(13, 1, 1, 8);
+        let f = encode_tensor(&x, &q);
+        let got = jpeg_global_avg_pool(&f, &q);
+        let expect = f.at(&[0, 0, 0, 0, 0]) * q[0] / 8.0;
+        assert!((got.data()[0] - expect).abs() < 1e-6);
+    }
+}

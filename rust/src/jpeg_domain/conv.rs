@@ -1,0 +1,250 @@
+//! JPEG-domain convolution (paper §4.1).
+//!
+//! `jpeg_conv_dcc` is the decompress-convolve-compress composition — the
+//! paper's eq. 11 evaluated without materializing Xi; "mathematically
+//! equivalent ... not an approximation" (paper §3.2).  `explode_conv` +
+//! `jpeg_conv_exploded` materialize the block-local Xi (Algorithm 1) for
+//! the precomputed-inference ablation, mirroring
+//! `python/compile/layers.py`.
+
+use crate::tensor::{conv2d, matmul, Tensor};
+
+use super::{decode_tensor, encode_tensor};
+
+/// Decompress -> conv (fixed padding convention) -> compress.
+pub fn jpeg_conv_dcc(f: &Tensor, w: &Tensor, qvec: &[f32; 64], stride: usize) -> Tensor {
+    let x = decode_tensor(f, qvec);
+    let y = conv2d(&x, w, stride);
+    encode_tensor(&y, qvec)
+}
+
+/// Materialize the block-local exploded map: (9 * Cin * 64, Cout * 64).
+///
+/// Built by pushing all 9*64 basis blocks of a 3x3 block neighborhood
+/// through decompress -> conv -> window-extract -> compress; see
+/// DESIGN.md for the window-offset derivation per (ksize, stride).
+pub fn explode_conv(w: &Tensor, qvec: &[f32; 64], stride: usize) -> Tensor {
+    let (cout, cin, kh, _) = (w.shape()[0], w.shape()[1], w.shape()[2], w.shape()[3]);
+    // output-block window offset within the 24x24 neighborhood's VALID conv
+    let off = match (kh, stride) {
+        (3, 1) => 7,
+        (1, 1) => 8,
+        (3, 2) | (1, 2) => 0,
+        _ => panic!("unsupported conv ({kh}, {stride})"),
+    };
+
+    let dec = super::dec_matrix(qvec);
+    let enc = super::enc_matrix(qvec);
+
+    let mut xi = Tensor::zeros(&[9 * cin * 64, cout * 64]);
+    // basis pixel images of each coefficient (64 pixels per coefficient)
+    for delta in 0..9 {
+        let (dy, dx) = (delta / 3, delta % 3);
+        for k in 0..64 {
+            // decompressed basis block for coefficient k
+            let pix = &dec.data()[k * 64..(k + 1) * 64];
+            // neighborhood image 24x24 with the block at (dy, dx)
+            let mut img = Tensor::zeros(&[1, 1, 24, 24]);
+            for y in 0..8 {
+                for x in 0..8 {
+                    img.set(&[0, 0, dy * 8 + y, dx * 8 + x], pix[y * 8 + x]);
+                }
+            }
+            for co in 0..cout {
+                for ci in 0..cin {
+                    // single-plane VALID conv
+                    let mut wk = Tensor::zeros(&[1, 1, kh, kh]);
+                    for a in 0..kh {
+                        for b in 0..kh {
+                            wk.set(&[0, 0, a, b], w.at(&[co, ci, a, b]));
+                        }
+                    }
+                    let resp = valid_conv_plane(&img, &wk, stride);
+                    // extract the 8x8 output window and compress
+                    let mut win = [0.0f32; 64];
+                    for y in 0..8 {
+                        for x in 0..8 {
+                            win[y * 8 + x] = resp.at(&[0, 0, off + y, off + x]);
+                        }
+                    }
+                    let wt = Tensor::from_vec(&[1, 64], win.to_vec());
+                    let fz = matmul(&wt, &enc);
+                    let row = (delta * cin + ci) * 64 + k;
+                    for kp in 0..64 {
+                        let v = xi.at(&[row, co * 64 + kp]) + fz.data()[kp];
+                        xi.set(&[row, co * 64 + kp], v);
+                    }
+                }
+            }
+        }
+    }
+    xi
+}
+
+/// VALID (no padding) single-image conv used by the explode builder.
+fn valid_conv_plane(x: &Tensor, w: &Tensor, stride: usize) -> Tensor {
+    let (h, wd) = (x.shape()[2], x.shape()[3]);
+    let k = w.shape()[2];
+    let oh = (h - k) / stride + 1;
+    let ow = (wd - k) / stride + 1;
+    let mut out = Tensor::zeros(&[1, 1, oh, ow]);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let mut acc = 0.0f32;
+            for ky in 0..k {
+                for kx in 0..k {
+                    acc += x.at(&[0, 0, oy * stride + ky, ox * stride + kx])
+                        * w.at(&[0, 0, ky, kx]);
+                }
+            }
+            out.set(&[0, 0, oy, ox], acc);
+        }
+    }
+    out
+}
+
+/// Apply a materialized exploded map via gathered 3x3 block neighborhoods.
+pub fn jpeg_conv_exploded(
+    f: &Tensor,
+    xi: &Tensor,
+    cout: usize,
+    stride: usize,
+) -> Tensor {
+    let s = f.shape();
+    let (n, c, bh, bw) = (s[0], s[1], s[2], s[3]);
+    let (bho, bwo) = if stride == 1 { (bh, bw) } else { (bh / 2, bw / 2) };
+    let rows = n * bho * bwo;
+    let mut a = Tensor::zeros(&[rows, 9 * c * 64]);
+    for b in 0..n {
+        for oy in 0..bho {
+            for ox in 0..bwo {
+                let row = (b * bho + oy) * bwo + ox;
+                for delta in 0..9 {
+                    let (dy, dx) = (delta / 3, delta % 3);
+                    // stride 1: neighborhood centered (origin oy-1);
+                    // stride 2: anchored at 2*oy
+                    let (iy, ix) = if stride == 1 {
+                        (oy as isize + dy as isize - 1, ox as isize + dx as isize - 1)
+                    } else {
+                        (2 * oy as isize + dy as isize, 2 * ox as isize + dx as isize)
+                    };
+                    if iy < 0 || ix < 0 || iy >= bh as isize || ix >= bw as isize {
+                        continue; // zero block (pixel zero padding)
+                    }
+                    for ci in 0..c {
+                        let src = ((((b * c + ci) * bh) + iy as usize) * bw
+                            + ix as usize)
+                            * 64;
+                        let dst_col = (delta * c + ci) * 64;
+                        for k in 0..64 {
+                            a.set(&[row, dst_col + k], f.data()[src + k]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let out = matmul(&a, xi); // (rows, cout*64)
+    // (N, Bho, Bwo, Cout, 64) -> (N, Cout, Bho, Bwo, 64)
+    let mut res = Tensor::zeros(&[n, cout, bho, bwo, 64]);
+    for b in 0..n {
+        for oy in 0..bho {
+            for ox in 0..bwo {
+                let row = (b * bho + oy) * bwo + ox;
+                for co in 0..cout {
+                    for k in 0..64 {
+                        res.set(
+                            &[b, co, oy, ox, k],
+                            out.at(&[row, co * 64 + k]),
+                        );
+                    }
+                }
+            }
+        }
+    }
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jpeg_domain::qvec_flat;
+    use crate::util::Rng;
+
+    fn rand(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.normal() * 0.5).collect())
+    }
+
+    #[test]
+    fn dcc_matches_spatial_conv() {
+        let q = qvec_flat();
+        let x = rand(&[2, 3, 32, 32], 1);
+        let w = rand(&[4, 3, 3, 3], 2);
+        let f = encode_tensor(&x, &q);
+        let got = decode_tensor(&jpeg_conv_dcc(&f, &w, &q, 1), &q);
+        let want = conv2d(&x, &w, 1);
+        assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn dcc_stride2_matches() {
+        let q = qvec_flat();
+        let x = rand(&[1, 2, 32, 32], 3);
+        let w = rand(&[2, 2, 3, 3], 4);
+        let f = encode_tensor(&x, &q);
+        let got = decode_tensor(&jpeg_conv_dcc(&f, &w, &q, 2), &q);
+        assert_eq!(got.shape(), &[1, 2, 16, 16]);
+        assert!(got.max_abs_diff(&conv2d(&x, &w, 2)) < 1e-3);
+    }
+
+    #[test]
+    fn exploded_matches_dcc_stride1() {
+        let q = qvec_flat();
+        let x = rand(&[1, 2, 32, 32], 5);
+        let w = rand(&[3, 2, 3, 3], 6);
+        let f = encode_tensor(&x, &q);
+        let xi = explode_conv(&w, &q, 1);
+        let got = jpeg_conv_exploded(&f, &xi, 3, 1);
+        let want = jpeg_conv_dcc(&f, &w, &q, 1);
+        assert_eq!(got.shape(), want.shape());
+        assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn exploded_matches_dcc_stride2() {
+        let q = qvec_flat();
+        let x = rand(&[1, 2, 16, 16], 7);
+        let w = rand(&[2, 2, 3, 3], 8);
+        let f = encode_tensor(&x, &q);
+        let xi = explode_conv(&w, &q, 2);
+        let got = jpeg_conv_exploded(&f, &xi, 2, 2);
+        let want = jpeg_conv_dcc(&f, &w, &q, 2);
+        assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn exploded_matches_dcc_1x1_stride2() {
+        let q = qvec_flat();
+        let x = rand(&[1, 2, 16, 16], 9);
+        let w = rand(&[4, 2, 1, 1], 10);
+        let f = encode_tensor(&x, &q);
+        let xi = explode_conv(&w, &q, 2);
+        let got = jpeg_conv_exploded(&f, &xi, 4, 2);
+        let want = jpeg_conv_dcc(&f, &w, &q, 2);
+        assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn exploded_lossy_table() {
+        let q = crate::jpeg::QuantTable::luma(80).as_f32();
+        let x = rand(&[1, 1, 16, 16], 11);
+        let w = rand(&[1, 1, 3, 3], 12);
+        let f = encode_tensor(&x, &q);
+        let xi = explode_conv(&w, &q, 1);
+        let got = jpeg_conv_exploded(&f, &xi, 1, 1);
+        let want = jpeg_conv_dcc(&f, &w, &q, 1);
+        assert!(got.max_abs_diff(&want) < 1e-2);
+    }
+}

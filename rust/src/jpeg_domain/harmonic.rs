@@ -1,0 +1,141 @@
+//! The materialized harmonic mixing tensor (paper eq. 17/20).
+//!
+//! `H[k'][k][p]`: applying a spatial mask G to a zigzag block F is
+//! `F'_{k'} = sum_{k,p} H[k',k,p] F_k G_p`.  The factored 3-matmul form in
+//! [`super::relu`] is mathematically identical and ~20x cheaper (DESIGN.md
+//! §5); this materialization exists as the paper-faithful reference and
+//! for the ablation bench that quantifies that gap.
+
+use crate::tensor::Tensor;
+
+use super::{dec_matrix, enc_matrix};
+
+/// Materialize H for a quantization vector: shape (64, 64, 64) =
+/// (k_out, k_in, pixel).
+pub fn harmonic_mixing_tensor(qvec: &[f32; 64]) -> Tensor {
+    let dec = dec_matrix(qvec); // dec[k][p]
+    let enc = enc_matrix(qvec); // enc[p][k']
+    let dd = dec.data();
+    let ed = enc.data();
+    let mut h = vec![0.0f32; 64 * 64 * 64];
+    for ko in 0..64 {
+        for ki in 0..64 {
+            let out = &mut h[(ko * 64 + ki) * 64..(ko * 64 + ki + 1) * 64];
+            for (p, o) in out.iter_mut().enumerate() {
+                // F'_{ko} = sum_p enc[p][ko] * dec[ki][p] * F_ki * G_p
+                *o = ed[p * 64 + ko] * dd[ki * 64 + p];
+            }
+        }
+    }
+    Tensor::from_vec(&[64, 64, 64], h)
+}
+
+/// Apply the materialized tensor: out[k'] = sum_{k,p} H[k',k,p] f[k] g[p].
+pub fn apply_harmonic(h: &Tensor, f: &[f32; 64], mask: &[f32; 64]) -> [f32; 64] {
+    let hd = h.data();
+    let mut out = [0.0f32; 64];
+    for (ko, o) in out.iter_mut().enumerate() {
+        let mut acc = 0.0f32;
+        for (ki, &fv) in f.iter().enumerate() {
+            if fv == 0.0 {
+                continue;
+            }
+            let row = &hd[(ko * 64 + ki) * 64..(ko * 64 + ki + 1) * 64];
+            let mut dot = 0.0f32;
+            for (hv, gv) in row.iter().zip(mask.iter()) {
+                dot += hv * gv;
+            }
+            acc += fv * dot;
+        }
+        *o = acc;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jpeg::QuantTable;
+    use crate::tensor::matmul;
+    use crate::util::Rng;
+
+    fn rand64(seed: u64) -> [f32; 64] {
+        let mut rng = Rng::new(seed);
+        let mut f = [0.0f32; 64];
+        for v in &mut f {
+            *v = rng.normal();
+        }
+        f
+    }
+
+    #[test]
+    fn matches_factored_form() {
+        // H(F, G) == enc(dec(F) * G) for arbitrary masks, both tables
+        for q in [super::super::qvec_flat(), QuantTable::luma(60).as_f32()] {
+            let h = harmonic_mixing_tensor(&q);
+            let dec = dec_matrix(&q);
+            let enc = enc_matrix(&q);
+            let f = rand64(1);
+            let mut g = [0.0f32; 64];
+            let mut rng = Rng::new(2);
+            for v in &mut g {
+                *v = if rng.uniform() > 0.5 { 1.0 } else { 0.0 };
+            }
+            let via_h = apply_harmonic(&h, &f, &g);
+            // factored: (f @ dec) * g @ enc
+            let ft = Tensor::from_vec(&[1, 64], f.to_vec());
+            let x = matmul(&ft, &dec);
+            let masked = Tensor::from_vec(
+                &[1, 64],
+                x.data().iter().zip(&g).map(|(a, b)| a * b).collect(),
+            );
+            let back = matmul(&masked, &enc);
+            for k in 0..64 {
+                assert!(
+                    (via_h[k] - back.data()[k]).abs() < 1e-3,
+                    "k={k}: {} vs {}",
+                    via_h[k],
+                    back.data()[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_ones_mask_is_identity() {
+        let q = super::super::qvec_flat();
+        let h = harmonic_mixing_tensor(&q);
+        let f = rand64(3);
+        let out = apply_harmonic(&h, &f, &[1.0; 64]);
+        for k in 0..64 {
+            assert!((out[k] - f[k]).abs() < 1e-4, "k={k}");
+        }
+    }
+
+    #[test]
+    fn zero_mask_is_zero() {
+        let q = super::super::qvec_flat();
+        let h = harmonic_mixing_tensor(&q);
+        let f = rand64(4);
+        let out = apply_harmonic(&h, &f, &[0.0; 64]);
+        assert!(out.iter().all(|&v| v.abs() < 1e-6));
+    }
+
+    #[test]
+    fn bilinearity_in_f() {
+        let q = super::super::qvec_flat();
+        let h = harmonic_mixing_tensor(&q);
+        let (a, b) = (rand64(5), rand64(6));
+        let mut sum = [0.0f32; 64];
+        for k in 0..64 {
+            sum[k] = a[k] + b[k];
+        }
+        let mask = crate::jpeg::zigzag::band_mask(7);
+        let lhs = apply_harmonic(&h, &sum, &mask);
+        let ra = apply_harmonic(&h, &a, &mask);
+        let rb = apply_harmonic(&h, &b, &mask);
+        for k in 0..64 {
+            assert!((lhs[k] - ra[k] - rb[k]).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! Pure-rust JPEG-transform-domain network ops (paper §4).
+//!
+//! Mirrors `python/compile/layers.py`: the same math that the AOT
+//! artifacts execute, implemented natively so the rust side has an
+//! oracle, a CPU baseline, and a fast harness for the per-block
+//! experiments (Fig 4a runs millions of blocks through [`relu`]).
+//!
+//! Layout convention: coefficient tensors are (N, C, Bh, Bw, 64), zigzag
+//! order, divided by the quantization vector (the paper's domain).
+
+pub mod batchnorm;
+pub mod conv;
+pub mod harmonic;
+pub mod network;
+pub mod relu;
+
+use once_cell::sync::Lazy;
+
+use crate::jpeg::dct::DCT2D;
+use crate::jpeg::zigzag::ZIGZAG;
+use crate::tensor::Tensor;
+
+/// (64, 64) zigzag-ordered orthonormal DCT: y_zz = ZA @ x_flat.
+pub static ZA: Lazy<Vec<f32>> = Lazy::new(|| {
+    let a = &*DCT2D;
+    let mut za = vec![0.0f32; 64 * 64];
+    for k in 0..64 {
+        za[k * 64..(k + 1) * 64]
+            .copy_from_slice(&a[ZIGZAG[k] * 64..(ZIGZAG[k] + 1) * 64]);
+    }
+    za
+});
+
+/// Row-vector decode matrix: x_flat = f_zz @ dec (dequant + unzigzag +
+/// IDCT);  dec[k][p] = ZA[k][p] * q[k].
+pub fn dec_matrix(qvec: &[f32; 64]) -> Tensor {
+    let za = &*ZA;
+    let mut m = vec![0.0f32; 64 * 64];
+    for k in 0..64 {
+        for p in 0..64 {
+            m[k * 64 + p] = za[k * 64 + p] * qvec[k];
+        }
+    }
+    Tensor::from_vec(&[64, 64], m)
+}
+
+/// Row-vector encode matrix: f_zz = x_flat @ enc;  enc[p][k] = ZA[k][p]/q[k].
+pub fn enc_matrix(qvec: &[f32; 64]) -> Tensor {
+    let za = &*ZA;
+    let mut m = vec![0.0f32; 64 * 64];
+    for p in 0..64 {
+        for k in 0..64 {
+            m[p * 64 + k] = za[k * 64 + p] / qvec[k];
+        }
+    }
+    Tensor::from_vec(&[64, 64], m)
+}
+
+/// Image (N, C, H, W) -> domain coefficients (N, C, H/8, W/8, 64).
+pub fn encode_tensor(x: &Tensor, qvec: &[f32; 64]) -> Tensor {
+    let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    assert!(h % 8 == 0 && w % 8 == 0);
+    let (bh, bw) = (h / 8, w / 8);
+    let za = &*ZA;
+    let mut out = vec![0.0f32; n * c * bh * bw * 64];
+    let xd = x.data();
+    let mut block = [0.0f32; 64];
+    for b in 0..n {
+        for ci in 0..c {
+            let plane = (b * c + ci) * h * w;
+            for by in 0..bh {
+                for bx in 0..bw {
+                    for y in 0..8 {
+                        let row = plane + (by * 8 + y) * w + bx * 8;
+                        block[y * 8..y * 8 + 8].copy_from_slice(&xd[row..row + 8]);
+                    }
+                    let off = ((((b * c + ci) * bh) + by) * bw + bx) * 64;
+                    for k in 0..64 {
+                        let zarow = &za[k * 64..(k + 1) * 64];
+                        let dot: f32 =
+                            zarow.iter().zip(&block).map(|(a, x)| a * x).sum();
+                        out[off + k] = dot / qvec[k];
+                    }
+                }
+            }
+        }
+    }
+    Tensor::from_vec(&[n, c, bh, bw, 64], out)
+}
+
+/// Domain coefficients (N, C, Bh, Bw, 64) -> image (N, C, 8Bh, 8Bw).
+pub fn decode_tensor(f: &Tensor, qvec: &[f32; 64]) -> Tensor {
+    let s = f.shape();
+    let (n, c, bh, bw) = (s[0], s[1], s[2], s[3]);
+    let (h, w) = (bh * 8, bw * 8);
+    let za = &*ZA;
+    let mut out = vec![0.0f32; n * c * h * w];
+    let fd = f.data();
+    for b in 0..n {
+        for ci in 0..c {
+            let plane = (b * c + ci) * h * w;
+            for by in 0..bh {
+                for bx in 0..bw {
+                    let off = ((((b * c + ci) * bh) + by) * bw + bx) * 64;
+                    let mut block = [0.0f32; 64];
+                    for k in 0..64 {
+                        let v = fd[off + k] * qvec[k];
+                        if v == 0.0 {
+                            continue;
+                        }
+                        let zarow = &za[k * 64..(k + 1) * 64];
+                        for (o, &a) in block.iter_mut().zip(zarow) {
+                            *o += v * a;
+                        }
+                    }
+                    for y in 0..8 {
+                        let row = plane + (by * 8 + y) * w + bx * 8;
+                        out[row..row + 8].copy_from_slice(&block[y * 8..y * 8 + 8]);
+                    }
+                }
+            }
+        }
+    }
+    Tensor::from_vec(&[n, c, h, w], out)
+}
+
+/// Flat all-ones quantization vector (the "lossless" setting).
+pub fn qvec_flat() -> [f32; 64] {
+    [1.0; 64]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_image(seed: u64, n: usize, c: usize, h: usize, w: usize) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::from_vec(
+            &[n, c, h, w],
+            (0..n * c * h * w).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+        )
+    }
+
+    #[test]
+    fn dec_enc_are_inverse() {
+        for q in [qvec_flat(), crate::jpeg::QuantTable::luma(50).as_f32()] {
+            let d = dec_matrix(&q);
+            let e = enc_matrix(&q);
+            let prod = crate::tensor::matmul(&d, &e);
+            for i in 0..64 {
+                for j in 0..64 {
+                    let expect = if i == j { 1.0 } else { 0.0 };
+                    assert!((prod.at(&[i, j]) - expect).abs() < 1e-4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let x = rand_image(1, 2, 3, 16, 24);
+        let q = qvec_flat();
+        let f = encode_tensor(&x, &q);
+        assert_eq!(f.shape(), &[2, 3, 2, 3, 64]);
+        let back = decode_tensor(&f, &q);
+        assert!(x.max_abs_diff(&back) < 1e-4);
+    }
+
+    #[test]
+    fn roundtrip_lossy_table() {
+        let x = rand_image(2, 1, 1, 32, 32);
+        let q = crate::jpeg::QuantTable::luma(75).as_f32();
+        let f = encode_tensor(&x, &q);
+        let back = decode_tensor(&f, &q);
+        assert!(x.max_abs_diff(&back) < 1e-3);
+    }
+
+    #[test]
+    fn linearity() {
+        // paper eq. 25
+        let a = rand_image(3, 1, 1, 16, 16);
+        let b = rand_image(4, 1, 1, 16, 16);
+        let q = qvec_flat();
+        let lhs = encode_tensor(&a.add(&b), &q);
+        let rhs = encode_tensor(&a, &q).add(&encode_tensor(&b, &q));
+        assert!(lhs.max_abs_diff(&rhs) < 1e-4);
+    }
+
+    #[test]
+    fn dc_is_scaled_mean() {
+        let x = rand_image(5, 1, 1, 8, 8);
+        let f = encode_tensor(&x, &qvec_flat());
+        let mean = x.mean();
+        assert!((f.at(&[0, 0, 0, 0, 0]) - 8.0 * mean).abs() < 1e-4);
+    }
+
+    #[test]
+    fn matches_codec_dct() {
+        // encode_tensor and the codec's forward DCT agree on one block
+        let x = rand_image(6, 1, 1, 8, 8);
+        let mut block = [0.0f32; 64];
+        block.copy_from_slice(x.data());
+        let f = crate::jpeg::dct::forward(&block);
+        let zz = crate::jpeg::zigzag::to_zigzag(&f);
+        let enc = encode_tensor(&x, &qvec_flat());
+        for k in 0..64 {
+            assert!((enc.data()[k] - zz[k]).abs() < 1e-4, "k={k}");
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! The full JPEG-domain residual classifier (paper Figure 3, §4) in rust.
+//!
+//! Consumes the SAME `ParamSet` as `nn::spatial_forward` — model
+//! conversion (paper §4.6) is the identity on parameters.  Eval mode
+//! only; training runs through the AOT artifacts.
+
+use crate::params::{ModelConfig, ParamSet};
+use crate::tensor::Tensor;
+
+use super::batchnorm::{jpeg_batch_norm_eval, jpeg_global_avg_pool};
+use super::conv::jpeg_conv_dcc;
+use super::relu::{jpeg_relu, Method};
+
+fn bn(p: &ParamSet, prefix: &str, f: &Tensor, q: &[f32; 64]) -> Tensor {
+    jpeg_batch_norm_eval(
+        f,
+        q,
+        p.get(&format!("{prefix}.gamma")),
+        p.get(&format!("{prefix}.beta")),
+        p.get(&format!("{prefix}.rmean")),
+        p.get(&format!("{prefix}.rvar")),
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn res_block(
+    p: &ParamSet,
+    prefix: &str,
+    f: &Tensor,
+    q: &[f32; 64],
+    stride: usize,
+    nf: usize,
+    method: Method,
+) -> Tensor {
+    let mut y = jpeg_conv_dcc(f, p.get(&format!("{prefix}.conv1.w")), q, stride);
+    y = bn(p, &format!("{prefix}.bn1"), &y, q);
+    y = jpeg_relu(&y, q, nf, method);
+    y = jpeg_conv_dcc(&y, p.get(&format!("{prefix}.conv2.w")), q, 1);
+    y = bn(p, &format!("{prefix}.bn2"), &y, q);
+    let sc = if stride != 1 {
+        let s = jpeg_conv_dcc(f, p.get(&format!("{prefix}.proj.w")), q, stride);
+        bn(p, &format!("{prefix}.projbn"), &s, q)
+    } else {
+        f.clone()
+    };
+    // component-wise addition (paper §4.4) then ReLU
+    jpeg_relu(&y.add(&sc), q, nf, method)
+}
+
+/// Eval forward: domain coefficients (N, C, 4, 4, 64) -> logits.
+///
+/// `num_freqs` is the ASM/APX spatial-frequency budget (15 = exact).
+pub fn jpeg_forward(
+    cfg: &ModelConfig,
+    p: &ParamSet,
+    coeffs: &Tensor,
+    qvec: &[f32; 64],
+    num_freqs: usize,
+    method: Method,
+) -> Tensor {
+    assert_eq!(coeffs.shape()[1], cfg.in_channels);
+    let mut f = jpeg_conv_dcc(coeffs, p.get("stem.conv.w"), qvec, 1);
+    f = bn(p, "stem.bn", &f, qvec);
+    f = jpeg_relu(&f, qvec, num_freqs, method);
+    f = res_block(p, "block1", &f, qvec, 1, num_freqs, method);
+    f = res_block(p, "block2", &f, qvec, 2, num_freqs, method);
+    f = res_block(p, "block3", &f, qvec, 2, num_freqs, method);
+    let g = jpeg_global_avg_pool(&f, qvec);
+    crate::nn::linear(&g, p.get("fc.w"), p.get("fc.b"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jpeg_domain::{encode_tensor, qvec_flat};
+    use crate::nn::spatial_forward;
+    use crate::util::Rng;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::preset("mnist").unwrap()
+    }
+
+    fn rand_input(c: &ModelConfig, n: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let len = n * c.in_channels * 32 * 32;
+        Tensor::from_vec(
+            &[n, c.in_channels, 32, 32],
+            (0..len).map(|_| rng.uniform()).collect(),
+        )
+    }
+
+    #[test]
+    fn equivalent_to_spatial_at_15() {
+        // the paper's central claim, end to end in pure rust
+        let c = cfg();
+        let p = ParamSet::init(&c, 0);
+        let x = rand_input(&c, 2, 1);
+        let q = qvec_flat();
+        let f = encode_tensor(&x, &q);
+        let lj = jpeg_forward(&c, &p, &f, &q, 15, Method::Asm);
+        let ls = spatial_forward(&c, &p, &x);
+        assert!(
+            lj.max_abs_diff(&ls) < 1e-3,
+            "max diff {}",
+            lj.max_abs_diff(&ls)
+        );
+    }
+
+    #[test]
+    fn equivalent_for_cifar_config() {
+        let c = ModelConfig::preset("cifar10").unwrap();
+        let p = ParamSet::init(&c, 2);
+        let x = rand_input(&c, 1, 3);
+        let q = qvec_flat();
+        let f = encode_tensor(&x, &q);
+        let lj = jpeg_forward(&c, &p, &f, &q, 15, Method::Asm);
+        let ls = spatial_forward(&c, &p, &x);
+        assert!(lj.max_abs_diff(&ls) < 1e-3);
+    }
+
+    #[test]
+    fn low_freq_perturbs() {
+        let c = cfg();
+        let p = ParamSet::init(&c, 4);
+        let x = rand_input(&c, 1, 5);
+        let q = qvec_flat();
+        let f = encode_tensor(&x, &q);
+        let l15 = jpeg_forward(&c, &p, &f, &q, 15, Method::Asm);
+        let l3 = jpeg_forward(&c, &p, &f, &q, 3, Method::Asm);
+        assert!(l15.max_abs_diff(&l3) > 1e-4);
+    }
+
+    #[test]
+    fn asm_logits_closer_than_apx() {
+        let c = cfg();
+        let p = ParamSet::init(&c, 6);
+        let x = rand_input(&c, 2, 7);
+        let q = qvec_flat();
+        let f = encode_tensor(&x, &q);
+        let exact = spatial_forward(&c, &p, &x);
+        let mut asm_err = 0.0;
+        let mut apx_err = 0.0;
+        for nf in [4usize, 8, 12] {
+            asm_err += jpeg_forward(&c, &p, &f, &q, nf, Method::Asm).rmse(&exact);
+            apx_err += jpeg_forward(&c, &p, &f, &q, nf, Method::Apx).rmse(&exact);
+        }
+        assert!(asm_err < apx_err, "{asm_err} vs {apx_err}");
+    }
+}

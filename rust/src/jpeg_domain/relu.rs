@@ -1,0 +1,232 @@
+//! ASM and APX ReLU over domain coefficient blocks (paper §4.2).
+//!
+//! This is the rust mirror of the L1 Pallas `asm_relu` kernel: the
+//! 3-matmul factored form of the harmonic mixing tensor.  The Fig-4a
+//! harness pushes millions of blocks through these, so the inner loops
+//! are written over flat slices with hoisted row pointers.
+
+use crate::jpeg::zigzag::band_mask;
+use crate::tensor::Tensor;
+
+use super::{dec_matrix, enc_matrix};
+
+/// Precomputed matrices for a quantization vector.
+pub struct ReluCtx {
+    /// (64,64) coeff -> spatial (includes dequantization)
+    pub dec: Tensor,
+    /// (64,64) spatial -> coeff (includes quantization)
+    pub enc: Tensor,
+}
+
+impl ReluCtx {
+    pub fn new(qvec: &[f32; 64]) -> Self {
+        ReluCtx { dec: dec_matrix(qvec), enc: enc_matrix(qvec) }
+    }
+}
+
+#[inline]
+fn matvec64(m: &[f32], f: &[f32], out: &mut [f32; 64]) {
+    // out[p] = sum_k f[k] * m[k*64+p]   (row-vector x matrix)
+    out.fill(0.0);
+    for (k, &v) in f.iter().enumerate() {
+        if v == 0.0 {
+            continue;
+        }
+        let row = &m[k * 64..(k + 1) * 64];
+        for (o, &a) in out.iter_mut().zip(row) {
+            *o += v * a;
+        }
+    }
+}
+
+/// ASM ReLU on one zigzag block: exact values gated by the truncated-
+/// frequency nonnegative mask (paper Algorithm 2, factored form).
+pub fn asm_relu_block(ctx: &ReluCtx, f: &[f32; 64], mask: &[f32; 64]) -> [f32; 64] {
+    let dec = ctx.dec.data();
+    let enc = ctx.enc.data();
+    let mut x_exact = [0.0f32; 64];
+    matvec64(dec, f, &mut x_exact);
+    let mut fm = [0.0f32; 64];
+    for k in 0..64 {
+        fm[k] = f[k] * mask[k];
+    }
+    let mut x_apx = [0.0f32; 64];
+    matvec64(dec, &fm, &mut x_apx);
+    let mut gated = [0.0f32; 64];
+    for p in 0..64 {
+        gated[p] = if x_apx[p] > 0.0 { x_exact[p] } else { 0.0 };
+    }
+    let mut out = [0.0f32; 64];
+    matvec64(enc, &gated, &mut out);
+    out
+}
+
+/// APX ReLU: ReLU applied directly to the truncated reconstruction.
+pub fn apx_relu_block(ctx: &ReluCtx, f: &[f32; 64], mask: &[f32; 64]) -> [f32; 64] {
+    let dec = ctx.dec.data();
+    let enc = ctx.enc.data();
+    let mut fm = [0.0f32; 64];
+    for k in 0..64 {
+        fm[k] = f[k] * mask[k];
+    }
+    let mut x_apx = [0.0f32; 64];
+    matvec64(dec, &fm, &mut x_apx);
+    for v in &mut x_apx {
+        *v = v.max(0.0);
+    }
+    let mut out = [0.0f32; 64];
+    matvec64(enc, &x_apx, &mut out);
+    out
+}
+
+/// Apply ASM/APX ReLU over a whole coefficient tensor (..., 64).
+pub fn jpeg_relu(f: &Tensor, qvec: &[f32; 64], num_freqs: usize, method: Method) -> Tensor {
+    let ctx = ReluCtx::new(qvec);
+    let mask = band_mask(num_freqs);
+    let mut out = vec![0.0f32; f.len()];
+    let mut blk = [0.0f32; 64];
+    for (i, chunk) in f.data().chunks_exact(64).enumerate() {
+        blk.copy_from_slice(chunk);
+        let r = match method {
+            Method::Asm => asm_relu_block(&ctx, &blk, &mask),
+            Method::Apx => apx_relu_block(&ctx, &blk, &mask),
+        };
+        out[i * 64..(i + 1) * 64].copy_from_slice(&r);
+    }
+    Tensor::from_vec(f.shape(), out)
+}
+
+/// ReLU approximation method (the paper's comparison axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Asm,
+    Apx,
+}
+
+impl std::str::FromStr for Method {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "asm" => Ok(Method::Asm),
+            "apx" => Ok(Method::Apx),
+            other => Err(format!("unknown relu method {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jpeg_domain::{decode_tensor, encode_tensor, qvec_flat};
+    use crate::util::Rng;
+
+    fn rand_blocks(seed: u64, m: usize) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::from_vec(
+            &[m, 64],
+            (0..m * 64).map(|_| rng.normal()).collect(),
+        )
+    }
+
+    #[test]
+    fn exact_at_15_freqs() {
+        let q = qvec_flat();
+        let mut rng = Rng::new(1);
+        let x = Tensor::from_vec(
+            &[1, 1, 16, 16],
+            (0..256).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+        );
+        let f = encode_tensor(&x, &q);
+        let r = jpeg_relu(&f, &q, 15, Method::Asm);
+        let back = decode_tensor(&r, &q);
+        assert!(back.max_abs_diff(&x.relu()) < 1e-4);
+    }
+
+    #[test]
+    fn asm_preserves_or_zeroes_pixels() {
+        // paper Figure 1: ASM output pixels are exact or exactly zero
+        let q = qvec_flat();
+        let ctx = ReluCtx::new(&q);
+        let mask = band_mask(6);
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let mut x = [0.0f32; 64];
+            for v in &mut x {
+                *v = rng.normal();
+            }
+            // encode block
+            let xt = Tensor::from_vec(&[1, 1, 8, 8], x.to_vec());
+            let f = encode_tensor(&xt, &q);
+            let mut fb = [0.0f32; 64];
+            fb.copy_from_slice(f.data());
+            let out = asm_relu_block(&ctx, &fb, &mask);
+            let ot = Tensor::from_vec(&[1, 1, 1, 1, 64], out.to_vec());
+            let xo = decode_tensor(&ot, &q);
+            for (a, &b) in xo.data().iter().zip(&x) {
+                let kept = (a - b).abs() < 1e-4;
+                let zeroed = a.abs() < 1e-4;
+                assert!(kept || zeroed, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn asm_beats_apx_rmse() {
+        // the Fig-4a ordering
+        let q = qvec_flat();
+        let ctx = ReluCtx::new(&q);
+        let mut rng = Rng::new(3);
+        for nf in [4usize, 8, 12] {
+            let mask = band_mask(nf);
+            let (mut se_asm, mut se_apx) = (0.0f64, 0.0f64);
+            let n = 500;
+            for _ in 0..n {
+                let mut x = [0.0f32; 64];
+                for v in &mut x {
+                    *v = rng.uniform_in(-1.0, 1.0);
+                }
+                let xt = Tensor::from_vec(&[1, 1, 8, 8], x.to_vec());
+                let f = encode_tensor(&xt, &q);
+                let mut fb = [0.0f32; 64];
+                fb.copy_from_slice(f.data());
+                let results = [
+                    asm_relu_block(&ctx, &fb, &mask),
+                    apx_relu_block(&ctx, &fb, &mask),
+                ];
+                for (out, se) in results.iter().zip([&mut se_asm, &mut se_apx]) {
+                    let ot = Tensor::from_vec(&[1, 1, 1, 1, 64], out.to_vec());
+                    let xo = decode_tensor(&ot, &q);
+                    for (a, &b) in xo.data().iter().zip(&x) {
+                        let d = (a - b.max(0.0)) as f64;
+                        *se += d * d;
+                    }
+                }
+            }
+            assert!(se_asm < se_apx, "nf={nf}: {se_asm} vs {se_apx}");
+        }
+    }
+
+    #[test]
+    fn whole_tensor_matches_blockwise() {
+        let q = qvec_flat();
+        let f = rand_blocks(4, 10).reshape(&[1, 1, 2, 5, 64]);
+        let out = jpeg_relu(&f, &q, 8, Method::Asm);
+        let ctx = ReluCtx::new(&q);
+        let mask = band_mask(8);
+        for (i, chunk) in f.data().chunks_exact(64).enumerate() {
+            let mut fb = [0.0f32; 64];
+            fb.copy_from_slice(chunk);
+            let expect = asm_relu_block(&ctx, &fb, &mask);
+            for k in 0..64 {
+                assert!((out.data()[i * 64 + k] - expect[k]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn method_parse() {
+        assert_eq!("asm".parse::<Method>().unwrap(), Method::Asm);
+        assert_eq!("apx".parse::<Method>().unwrap(), Method::Apx);
+        assert!("bad".parse::<Method>().is_err());
+    }
+}

@@ -1,0 +1,36 @@
+//! # jpegdomain — Deep Residual Learning in the JPEG Transform Domain
+//!
+//! Production-quality reproduction of Ehrlich & Davis (2018) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: JPEG codec substrate, synthetic
+//!   datasets, request router + dynamic batcher, training driver, metrics,
+//!   parameter store, and pure-rust reference implementations of both the
+//!   spatial and JPEG-domain networks (used as oracles and CPU baselines).
+//! * **L2 (python/compile)** — the JAX model graphs, AOT-lowered to HLO
+//!   text in `artifacts/` and executed here through the PJRT CPU client
+//!   ([`runtime`]).
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the compute hot
+//!   spots (blockwise DCT, ASM ReLU, exploded-conv GEMM), lowered into the
+//!   same artifacts.
+//!
+//! Python never runs on the request path: after `make artifacts` the rust
+//! binary is self-contained.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod jpeg;
+pub mod jpeg_domain;
+pub mod json;
+pub mod nn;
+pub mod params;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use tensor::Tensor;

@@ -1,0 +1,417 @@
+//! `repro` — the launcher CLI for the JPEG-transform-domain ResNet stack.
+//!
+//! Subcommands:
+//!   info                       artifact + platform summary
+//!   train                      run the training coordinator
+//!   serve                      start the serving loop on synthetic requests
+//!   eval                       evaluate a checkpoint through either pipeline
+//!   convert                    spatial -> JPEG model conversion (paper §4.6)
+//!   exp <table1|fig4a|fig4b|fig4c|fig5|ablation>   regenerate paper results
+//!   codec <selftest>           JPEG codec round-trip demo
+//!
+//! Flags are `--key value`; `--config file.toml` loads defaults first.
+//! (No clap in this environment's vendored crate set — see DESIGN.md.)
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use jpegdomain::bench_harness as bh;
+use jpegdomain::config::Config;
+use jpegdomain::coordinator::router::Route;
+use jpegdomain::coordinator::server::{Server, ServerConfig};
+use jpegdomain::coordinator::training::{TrainConfig, TrainDomain, Trainer};
+use jpegdomain::coordinator::BatcherConfig;
+use jpegdomain::data::{Dataset, Split, SynthKind};
+use jpegdomain::jpeg_domain::relu::Method;
+use jpegdomain::params::ParamSet;
+use jpegdomain::runtime::{Engine, Session};
+
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Args {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut it = std::env::args().skip(1).peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = if it.peek().map(|v| !v.starts_with("--")).unwrap_or(false) {
+                    it.next().unwrap()
+                } else {
+                    "true".to_string()
+                };
+                flags.insert(key.to_string(), val);
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn f32(&self, key: &str, default: f32) -> f32 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: repro <info|train|serve|eval|convert|exp|codec> [--flags]
+  common: --artifacts DIR --dataset mnist|cifar10|cifar100 --config FILE
+  train:  --domain spatial|jpeg --steps N --lr F --nf 1..15 --method asm|apx
+          --ckpt PATH --train-size N --test-size N --verbose
+  serve:  --route spatial|jpeg --requests N --quality Q --max-batch N
+          --max-wait-ms N --ckpt PATH
+  eval:   --ckpt PATH --route spatial|jpeg --nf K --method asm|apx
+  convert: --ckpt-in PATH --ckpt-out PATH
+  exp:    table1|fig4a|fig4b|fig4c|fig5|ablation
+          --seeds N --steps N --blocks N --freqs 1,3,5 --quality Q"
+    );
+    std::process::exit(2);
+}
+
+fn session_from(args: &Args, cfg: &Config) -> anyhow::Result<Session> {
+    let artifacts = PathBuf::from(args.get(
+        "artifacts",
+        &cfg.str_or("run", "artifacts_dir", "artifacts"),
+    ));
+    let dataset = args.get("dataset", &cfg.str_or("run", "dataset", "mnist"));
+    let engine = Arc::new(Engine::new(&artifacts)?);
+    Session::new(engine, &dataset)
+}
+
+fn dataset_from(args: &Args, session: &Session, n_train: usize, n_test: usize) -> Dataset {
+    let kind = SynthKind::parse(&session.cfg.name).expect("known dataset");
+    Dataset::synthetic(
+        kind,
+        args.usize("train-size", n_train),
+        args.usize("test-size", n_test),
+        args.usize("data-seed", 42) as u64,
+    )
+}
+
+fn cmd_info(args: &Args, cfg: &Config) -> anyhow::Result<()> {
+    let session = session_from(args, cfg)?;
+    let m = &session.engine.manifest;
+    println!("platform: {}", session.engine.platform());
+    println!("artifacts: {} ({} compiled graphs)", m.dir.display(), m.artifacts.len());
+    println!("configs:");
+    for c in &m.configs {
+        println!(
+            "  {}: {} channels, {} classes, widths {:?}",
+            c.name, c.in_channels, c.num_classes, c.widths
+        );
+    }
+    println!("forward batch sizes: {:?}", m.fwd_batches);
+    println!("train batch size: {}", m.train_batch);
+    let params = ParamSet::init(&session.cfg, 0);
+    println!(
+        "model ({}): {} parameter tensors, {} scalars",
+        session.cfg.name,
+        params.len(),
+        params.num_scalars()
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args, cfg: &Config) -> anyhow::Result<()> {
+    let session = session_from(args, cfg)?;
+    let data = dataset_from(args, &session, 600, 200);
+    let domain = match args.get("domain", "spatial").as_str() {
+        "spatial" => TrainDomain::Spatial,
+        "jpeg" => TrainDomain::Jpeg {
+            num_freqs: args.usize("nf", 15),
+            method: args.get("method", "asm").parse().map_err(anyhow::Error::msg)?,
+        },
+        other => anyhow::bail!("unknown domain {other}"),
+    };
+    let tc = TrainConfig {
+        domain,
+        steps: args.usize("steps", cfg.usize_or("train", "steps", 300)),
+        lr: args.f32("lr", cfg.f32_or("train", "lr", 0.05)),
+        seed: args.usize("seed", 0) as u64,
+        log_every: args.usize("log-every", 25),
+        eval_batches: args.usize("eval-batches", 4),
+        checkpoint: args.flags.get("ckpt").map(PathBuf::from),
+        verbose: args.has("verbose") || cfg.bool_or("train", "verbose", true),
+    };
+    let trainer = Trainer::new(&session, &data, tc);
+    let (_, report) = trainer.run()?;
+    println!(
+        "done: {} steps, final loss {:.4}, train acc {:.4}, test acc {:.4}",
+        report.losses.len(),
+        report.losses.last().unwrap(),
+        report.train_accuracy,
+        report.test_accuracy
+    );
+    println!(
+        "throughput: {:.2} steps/s = {:.1} images/s",
+        report.steps_per_sec, report.images_per_sec
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args, cfg: &Config) -> anyhow::Result<()> {
+    let artifacts = PathBuf::from(args.get(
+        "artifacts",
+        &cfg.str_or("run", "artifacts_dir", "artifacts"),
+    ));
+    let dataset = args.get("dataset", "mnist");
+    let route: Route = args.get("route", "jpeg").parse().map_err(anyhow::Error::msg)?;
+    let quality = args.usize("quality", 95) as u8;
+    let n = args.usize("requests", 200);
+    let server = Server::start_default(
+        artifacts,
+        dataset.clone(),
+        args.flags.get("ckpt").map(PathBuf::from),
+        args.usize("seed", 0) as u64,
+        ServerConfig {
+            route,
+            num_freqs: args.usize("nf", 15),
+            method: args.get("method", "asm").parse().map_err(anyhow::Error::msg)?,
+            batcher: BatcherConfig {
+                max_batch: args.usize("max-batch", 40),
+                max_wait: std::time::Duration::from_millis(args.usize("max-wait-ms", 5) as u64),
+            },
+        },
+    );
+    let kind = SynthKind::parse(&dataset).ok_or_else(|| anyhow::anyhow!("dataset"))?;
+    let data = Dataset::synthetic(kind, 2, n, 7);
+    let files = data.jpeg_bytes(Split::Test, quality);
+    println!("serving {n} requests over route {route:?} ...");
+    let receivers: Vec<_> = files
+        .iter()
+        .map(|(b, l)| (server.submit(b.clone()), *l))
+        .collect();
+    let mut correct = 0;
+    for (rx, label) in receivers {
+        let resp = rx.recv().map_err(|_| anyhow::anyhow!("server died"))??;
+        if resp.predicted == label as usize {
+            correct += 1;
+        }
+    }
+    println!("accuracy (untrained unless --ckpt): {:.3}", correct as f32 / n as f32);
+    println!("{}", server.metrics.snapshot());
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_eval(args: &Args, cfg: &Config) -> anyhow::Result<()> {
+    let session = session_from(args, cfg)?;
+    let data = dataset_from(args, &session, 2, 400);
+    let params = match args.flags.get("ckpt") {
+        Some(p) => ParamSet::load(&session.cfg, &PathBuf::from(p))?,
+        None => ParamSet::init(&session.cfg, args.usize("seed", 0) as u64),
+    };
+    let route: Route = args.get("route", "jpeg").parse().map_err(anyhow::Error::msg)?;
+    let nf = args.usize("nf", 15);
+    let method: Method = args.get("method", "asm").parse().map_err(anyhow::Error::msg)?;
+    let batch = session.engine.manifest.train_batch;
+    let q = jpegdomain::jpeg_domain::qvec_flat();
+    let batches = args.usize("eval-batches", 5);
+    let mut acc = 0.0;
+    for b in 0..batches {
+        let idx: Vec<usize> = (b * batch..(b + 1) * batch).collect();
+        let (x, y) = data.pixel_batch(&idx, Split::Test);
+        let logits = match route {
+            Route::Spatial => session.forward_spatial(&params, &x)?,
+            Route::Jpeg => {
+                let coeffs = jpegdomain::jpeg_domain::encode_tensor(&x, &q);
+                session.forward_jpeg(&params, &coeffs, &q, nf, method)?
+            }
+        };
+        acc += jpegdomain::runtime::session::accuracy(&logits, &y);
+    }
+    println!(
+        "eval {} route={:?} nf={} method={:?}: accuracy {:.4}",
+        session.cfg.name,
+        route,
+        nf,
+        method,
+        acc / batches as f32
+    );
+    Ok(())
+}
+
+fn cmd_convert(args: &Args, cfg: &Config) -> anyhow::Result<()> {
+    // Model conversion (paper §4.6) is the identity on parameters: the
+    // JPEG network consumes spatial weights directly.  This command
+    // validates a spatial checkpoint against both pipelines and re-saves.
+    let session = session_from(args, cfg)?;
+    let src = PathBuf::from(
+        args.flags
+            .get("ckpt-in")
+            .ok_or_else(|| anyhow::anyhow!("--ckpt-in required"))?,
+    );
+    let dst = PathBuf::from(
+        args.flags
+            .get("ckpt-out")
+            .ok_or_else(|| anyhow::anyhow!("--ckpt-out required"))?,
+    );
+    let params = ParamSet::load(&session.cfg, &src)?;
+    let data = dataset_from(args, &session, 2, 80);
+    let batch = session.engine.manifest.train_batch;
+    let idx: Vec<usize> = (0..batch).collect();
+    let (x, _) = data.pixel_batch(&idx, Split::Test);
+    let q = jpegdomain::jpeg_domain::qvec_flat();
+    let coeffs = jpegdomain::jpeg_domain::encode_tensor(&x, &q);
+    let ls = session.forward_spatial(&params, &x)?;
+    let lj = session.forward_jpeg(&params, &coeffs, &q, 15, Method::Asm)?;
+    let dev = ls.max_abs_diff(&lj);
+    anyhow::ensure!(dev < 1e-2, "conversion check failed: logit deviation {dev}");
+    params.save(&dst)?;
+    println!("converted {} -> {} (logit deviation {:.2e})", src.display(), dst.display(), dev);
+    Ok(())
+}
+
+fn parse_freqs(s: &str) -> Vec<usize> {
+    s.split(',').filter_map(|t| t.trim().parse().ok()).collect()
+}
+
+fn cmd_exp(args: &Args, cfg: &Config) -> anyhow::Result<()> {
+    let which = args.positional.get(1).map(String::as_str).unwrap_or("");
+    let exp = bh::model_exps::ExpConfig {
+        seeds: args.usize("seeds", 3),
+        train_steps: args.usize("steps", 150),
+        eval_batches: args.usize("eval-batches", 4),
+        n_train: args.usize("train-size", 600),
+        n_test: args.usize("test-size", 200),
+        lr: args.f32("lr", 0.05),
+    };
+    match which {
+        "fig4a" => {
+            let rows = bh::fig4a(args.usize("blocks", 1_000_000), 1);
+            bh::blocks::print(&rows);
+        }
+        "table1" => {
+            let datasets = args.get("datasets", "mnist,cifar10,cifar100");
+            let mut rows = Vec::new();
+            for d in datasets.split(',') {
+                let mut a2 = Args {
+                    positional: vec![],
+                    flags: args.flags.clone(),
+                };
+                a2.flags.insert("dataset".into(), d.trim().into());
+                let session = session_from(&a2, cfg)?;
+                println!("[table1] {} ({} seeds x {} steps)", d, exp.seeds, exp.train_steps);
+                rows.push(bh::table1(&session, &exp)?);
+            }
+            bh::model_exps::print_table1(&rows);
+        }
+        "fig4b" => {
+            let session = session_from(args, cfg)?;
+            let rows = bh::fig4b(&session, &exp)?;
+            bh::model_exps::print_fig4("Figure 4b — converted-model accuracy vs phi", &rows);
+        }
+        "fig4c" => {
+            let session = session_from(args, cfg)?;
+            let freqs = parse_freqs(&args.get("freqs", "1,2,3,4,6,8,10,12,15"));
+            let rows = bh::fig4c(&session, &exp, &freqs)?;
+            bh::model_exps::print_fig4("Figure 4c — trained-in-JPEG-domain accuracy vs phi", &rows);
+        }
+        "fig5" => {
+            let datasets = args.get("datasets", "mnist,cifar10,cifar100");
+            let mut rows = Vec::new();
+            for d in datasets.split(',') {
+                let mut a2 = Args { positional: vec![], flags: args.flags.clone() };
+                a2.flags.insert("dataset".into(), d.trim().into());
+                let session = session_from(&a2, cfg)?;
+                println!("[fig5] {d}");
+                rows.extend(bh::fig5(
+                    &session,
+                    args.usize("quality", 95) as u8,
+                    args.usize("files", 200),
+                    args.usize("steps", 20),
+                    args.usize("passes", 2),
+                )?);
+            }
+            bh::throughput::print_fig5(&rows);
+        }
+        "ablation" => {
+            let session = session_from(args, cfg)?;
+            let r = bh::ablation_exploded(&session, args.usize("iters", 5))?;
+            bh::throughput::print_ablation(&r);
+        }
+        _ => usage(),
+    }
+    Ok(())
+}
+
+fn cmd_codec(args: &Args) -> anyhow::Result<()> {
+    match args.positional.get(1).map(String::as_str) {
+        Some("selftest") => {
+            let data = Dataset::synthetic(SynthKind::Cifar10, 1, 4, 3);
+            for quality in [30u8, 60, 90] {
+                let files = data.jpeg_bytes(Split::Test, quality);
+                let mut bytes_total = 0usize;
+                let mut rmse_total = 0.0f64;
+                for ((bytes, _), ex) in files.iter().zip(&data.test) {
+                    bytes_total += bytes.len();
+                    let dec = jpegdomain::jpeg::decode(bytes)?;
+                    let se: f32 = ex
+                        .pixels
+                        .data
+                        .iter()
+                        .zip(&dec.data)
+                        .map(|(a, b)| (a - b) * (a - b))
+                        .sum();
+                    rmse_total += (se as f64 / ex.pixels.data.len() as f64).sqrt();
+                }
+                println!(
+                    "quality {:>3}: {:>6} bytes/img, rmse {:.2}",
+                    quality,
+                    bytes_total / files.len(),
+                    rmse_total / files.len() as f64
+                );
+            }
+            Ok(())
+        }
+        _ => usage(),
+    }
+}
+
+fn main() {
+    let args = Args::parse();
+    let cfg = match args.flags.get("config") {
+        Some(p) => Config::load(std::path::Path::new(p)).unwrap_or_else(|e| {
+            eprintln!("config load failed: {e}");
+            std::process::exit(2);
+        }),
+        None => Config::default(),
+    };
+    let result = match args.positional.first().map(String::as_str) {
+        Some("info") => cmd_info(&args, &cfg),
+        Some("train") => cmd_train(&args, &cfg),
+        Some("serve") => cmd_serve(&args, &cfg),
+        Some("eval") => cmd_eval(&args, &cfg),
+        Some("convert") => cmd_convert(&args, &cfg),
+        Some("exp") => cmd_exp(&args, &cfg),
+        Some("codec") => cmd_codec(&args),
+        _ => usage(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,166 @@
+//! Pure-rust spatial reference network (the paper's Figure-3 classifier).
+//!
+//! This is the oracle and CPU baseline: eval-mode forward pass matching
+//! `python/compile/model.py::spatial_forward` bit-for-bit up to float
+//! associativity.  Training runs through the AOT artifacts; this module
+//! exists so rust-side tests and experiments can verify numerics without
+//! Python or PJRT in the loop.
+
+use crate::params::{ModelConfig, ParamSet};
+use crate::tensor::{conv2d, matmul, Tensor};
+
+pub const BN_EPS: f32 = 1e-5;
+
+/// Eval-mode batch norm over (N, C, H, W) using running statistics.
+pub fn batch_norm_eval(x: &Tensor, gamma: &Tensor, beta: &Tensor, rmean: &Tensor, rvar: &Tensor) -> Tensor {
+    let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let mut out = vec![0.0f32; x.len()];
+    let xd = x.data();
+    for ci in 0..c {
+        let inv = gamma.data()[ci] / (rvar.data()[ci] + BN_EPS).sqrt();
+        let shift = beta.data()[ci] - rmean.data()[ci] * inv;
+        for b in 0..n {
+            let off = (b * c + ci) * h * w;
+            for i in 0..h * w {
+                out[off + i] = xd[off + i] * inv + shift;
+            }
+        }
+    }
+    Tensor::from_vec(x.shape(), out)
+}
+
+/// Global average pool (N, C, H, W) -> (N, C).
+pub fn global_avg_pool(x: &Tensor) -> Tensor {
+    let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let hw = (h * w) as f32;
+    let mut out = vec![0.0f32; n * c];
+    for b in 0..n {
+        for ci in 0..c {
+            let off = (b * c + ci) * h * w;
+            out[b * c + ci] = x.data()[off..off + h * w].iter().sum::<f32>() / hw;
+        }
+    }
+    Tensor::from_vec(&[n, c], out)
+}
+
+/// x @ w + b with x (N, D), w (D, K), b (K).
+pub fn linear(x: &Tensor, w: &Tensor, b: &Tensor) -> Tensor {
+    let mut out = matmul(x, w);
+    let k = w.shape()[1];
+    for row in out.data_mut().chunks_mut(k) {
+        for (o, &bb) in row.iter_mut().zip(b.data()) {
+            *o += bb;
+        }
+    }
+    out
+}
+
+fn bn(p: &ParamSet, prefix: &str, x: &Tensor) -> Tensor {
+    batch_norm_eval(
+        x,
+        p.get(&format!("{prefix}.gamma")),
+        p.get(&format!("{prefix}.beta")),
+        p.get(&format!("{prefix}.rmean")),
+        p.get(&format!("{prefix}.rvar")),
+    )
+}
+
+fn res_block(p: &ParamSet, prefix: &str, x: &Tensor, stride: usize) -> Tensor {
+    let mut y = conv2d(x, p.get(&format!("{prefix}.conv1.w")), stride);
+    y = bn(p, &format!("{prefix}.bn1"), &y).relu();
+    y = conv2d(&y, p.get(&format!("{prefix}.conv2.w")), 1);
+    y = bn(p, &format!("{prefix}.bn2"), &y);
+    let sc = if stride != 1 {
+        let s = conv2d(x, p.get(&format!("{prefix}.proj.w")), stride);
+        bn(p, &format!("{prefix}.projbn"), &s)
+    } else {
+        x.clone()
+    };
+    y.add(&sc).relu()
+}
+
+/// Eval forward: (N, C, 32, 32) pixels in [0,1] -> (N, classes) logits.
+pub fn spatial_forward(cfg: &ModelConfig, p: &ParamSet, x: &Tensor) -> Tensor {
+    assert_eq!(x.shape()[1], cfg.in_channels);
+    let mut y = conv2d(x, p.get("stem.conv.w"), 1);
+    y = bn(p, "stem.bn", &y).relu();
+    y = res_block(p, "block1", &y, 1);
+    y = res_block(p, "block2", &y, 2);
+    y = res_block(p, "block3", &y, 2);
+    let g = global_avg_pool(&y);
+    linear(&g, p.get("fc.w"), p.get("fc.b"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::preset("mnist").unwrap()
+    }
+
+    fn rand_input(cfg: &ModelConfig, n: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let len = n * cfg.in_channels * 32 * 32;
+        Tensor::from_vec(
+            &[n, cfg.in_channels, 32, 32],
+            (0..len).map(|_| rng.uniform()).collect(),
+        )
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let c = cfg();
+        let p = ParamSet::init(&c, 0);
+        let x = rand_input(&c, 2, 1);
+        let logits = spatial_forward(&c, &p, &x);
+        assert_eq!(logits.shape(), &[2, 10]);
+        assert!(logits.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn forward_deterministic() {
+        let c = cfg();
+        let p = ParamSet::init(&c, 0);
+        let x = rand_input(&c, 2, 1);
+        assert_eq!(spatial_forward(&c, &p, &x), spatial_forward(&c, &p, &x));
+    }
+
+    #[test]
+    fn batchnorm_eval_formula() {
+        let x = Tensor::from_vec(&[1, 1, 1, 2], vec![2.0, 4.0]);
+        let g = Tensor::from_vec(&[1], vec![2.0]);
+        let b = Tensor::from_vec(&[1], vec![1.0]);
+        let rm = Tensor::from_vec(&[1], vec![3.0]);
+        let rv = Tensor::from_vec(&[1], vec![4.0]);
+        let y = batch_norm_eval(&x, &g, &b, &rm, &rv);
+        // (x - 3) * 2 / sqrt(4 + eps) + 1
+        assert!((y.data()[0] - 0.0).abs() < 1e-3);
+        assert!((y.data()[1] - 2.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gap_means() {
+        let x = Tensor::from_vec(&[1, 2, 1, 2], vec![1.0, 3.0, 10.0, 20.0]);
+        let g = global_avg_pool(&x);
+        assert_eq!(g.data(), &[2.0, 15.0]);
+    }
+
+    #[test]
+    fn linear_bias() {
+        let x = Tensor::from_vec(&[1, 2], vec![1.0, 1.0]);
+        let w = Tensor::from_vec(&[2, 3], vec![1., 0., 0., 0., 1., 0.]);
+        let b = Tensor::from_vec(&[3], vec![0.5, 0.5, 0.5]);
+        assert_eq!(linear(&x, &w, &b).data(), &[1.5, 1.5, 0.5]);
+    }
+
+    #[test]
+    fn cifar_config_forward() {
+        let c = ModelConfig::preset("cifar100").unwrap();
+        let p = ParamSet::init(&c, 3);
+        let x = rand_input(&c, 1, 4);
+        let logits = spatial_forward(&c, &p, &x);
+        assert_eq!(logits.shape(), &[1, 100]);
+    }
+}

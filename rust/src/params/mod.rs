@@ -1,0 +1,386 @@
+//! Parameter store: specs, init, flatten order and checkpoints.
+//!
+//! The spec list mirrors `python/compile/model.py::param_specs` exactly
+//! (sorted names, same shapes, same init metadata) and is cross-checked
+//! against `artifacts/manifest.json` at load time by the runtime.  A
+//! checkpoint is a flat little-endian f32 file + the ordered name list,
+//! so conversions between spatial and JPEG models are the identity — the
+//! paper's model conversion (§4.6).
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Model configuration (mirrors `ModelConfig` in L2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub in_channels: usize,
+    pub num_classes: usize,
+    pub widths: [usize; 3],
+    pub image_size: usize,
+}
+
+impl ModelConfig {
+    pub fn preset(name: &str) -> Option<ModelConfig> {
+        let (in_channels, num_classes) = match name {
+            "mnist" => (1, 10),
+            "cifar10" => (3, 10),
+            "cifar100" => (3, 100),
+            _ => return None,
+        };
+        Some(ModelConfig {
+            name: name.to_string(),
+            in_channels,
+            num_classes,
+            widths: [8, 16, 32],
+            image_size: 32,
+        })
+    }
+
+    pub fn blocks(&self) -> usize {
+        self.image_size / 8
+    }
+}
+
+/// Init kind for a parameter leaf.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Init {
+    HeNormal,
+    Zeros,
+    Ones,
+}
+
+/// One parameter leaf spec.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: Init,
+    pub fan_in: usize,
+    pub trainable: bool,
+}
+
+fn conv_spec(name: &str, cout: usize, cin: usize, k: usize) -> ParamSpec {
+    ParamSpec {
+        name: name.into(),
+        shape: vec![cout, cin, k, k],
+        init: Init::HeNormal,
+        fan_in: cin * k * k,
+        trainable: true,
+    }
+}
+
+fn bn_specs(prefix: &str, c: usize) -> Vec<ParamSpec> {
+    let leaf = |suffix: &str, init: Init, trainable: bool| ParamSpec {
+        name: format!("{prefix}.{suffix}"),
+        shape: vec![c],
+        init,
+        fan_in: c,
+        trainable,
+    };
+    vec![
+        leaf("gamma", Init::Ones, true),
+        leaf("beta", Init::Zeros, true),
+        leaf("rmean", Init::Zeros, false),
+        leaf("rvar", Init::Ones, false),
+    ]
+}
+
+/// The full ordered spec list (sorted by name, matching L2).
+pub fn param_specs(cfg: &ModelConfig) -> Vec<ParamSpec> {
+    let [w1, w2, w3] = cfg.widths;
+    let mut specs = Vec::new();
+    specs.push(conv_spec("stem.conv.w", w1, cfg.in_channels, 3));
+    specs.extend(bn_specs("stem.bn", w1));
+    specs.push(conv_spec("block1.conv1.w", w1, w1, 3));
+    specs.extend(bn_specs("block1.bn1", w1));
+    specs.push(conv_spec("block1.conv2.w", w1, w1, 3));
+    specs.extend(bn_specs("block1.bn2", w1));
+    specs.push(conv_spec("block2.conv1.w", w2, w1, 3));
+    specs.extend(bn_specs("block2.bn1", w2));
+    specs.push(conv_spec("block2.conv2.w", w2, w2, 3));
+    specs.extend(bn_specs("block2.bn2", w2));
+    specs.push(conv_spec("block2.proj.w", w2, w1, 1));
+    specs.extend(bn_specs("block2.projbn", w2));
+    specs.push(conv_spec("block3.conv1.w", w3, w2, 3));
+    specs.extend(bn_specs("block3.bn1", w3));
+    specs.push(conv_spec("block3.conv2.w", w3, w3, 3));
+    specs.extend(bn_specs("block3.bn2", w3));
+    specs.push(conv_spec("block3.proj.w", w3, w2, 1));
+    specs.extend(bn_specs("block3.projbn", w3));
+    specs.push(ParamSpec {
+        name: "fc.w".into(),
+        shape: vec![w3, cfg.num_classes],
+        init: Init::HeNormal,
+        fan_in: w3,
+        trainable: true,
+    });
+    specs.push(ParamSpec {
+        name: "fc.b".into(),
+        shape: vec![cfg.num_classes],
+        init: Init::Zeros,
+        fan_in: w3,
+        trainable: true,
+    });
+    specs.sort_by(|a, b| a.name.cmp(&b.name));
+    specs
+}
+
+/// A named set of parameter tensors in spec order.
+#[derive(Clone, Debug)]
+pub struct ParamSet {
+    pub specs: Vec<ParamSpec>,
+    pub tensors: Vec<Tensor>,
+    index: HashMap<String, usize>,
+}
+
+impl ParamSet {
+    pub fn from_tensors(specs: Vec<ParamSpec>, tensors: Vec<Tensor>) -> Self {
+        assert_eq!(specs.len(), tensors.len());
+        for (s, t) in specs.iter().zip(&tensors) {
+            assert_eq!(s.shape, t.shape(), "{}", s.name);
+        }
+        let index = specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.name.clone(), i))
+            .collect();
+        ParamSet { specs, tensors, index }
+    }
+
+    /// He-normal / zeros / ones init, deterministic in the seed.
+    pub fn init(cfg: &ModelConfig, seed: u64) -> Self {
+        let specs = param_specs(cfg);
+        let mut rng = Rng::new(seed);
+        let tensors = specs
+            .iter()
+            .map(|s| match s.init {
+                Init::Zeros => Tensor::zeros(&s.shape),
+                Init::Ones => Tensor::ones(&s.shape),
+                Init::HeNormal => {
+                    let std = (2.0 / s.fan_in as f32).sqrt();
+                    let n: usize = s.shape.iter().product();
+                    Tensor::from_vec(
+                        &s.shape,
+                        (0..n).map(|_| rng.normal() * std).collect(),
+                    )
+                }
+            })
+            .collect();
+        Self::from_tensors(specs, tensors)
+    }
+
+    /// All-zero set with the same layout (velocity buffers).
+    pub fn zeros_like(&self) -> Self {
+        let tensors = self.specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+        Self::from_tensors(self.specs.clone(), tensors)
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        &self.tensors[*self
+            .index
+            .get(name)
+            .unwrap_or_else(|| panic!("no param {name}"))]
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) {
+        let i = *self.index.get(name).unwrap_or_else(|| panic!("no param {name}"));
+        assert_eq!(self.specs[i].shape, t.shape());
+        self.tensors[i] = t;
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Total scalar count.
+    pub fn num_scalars(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    // -- checkpoint I/O ----------------------------------------------------
+    // format: magic "JDCK", count u32, then per leaf:
+    //   name_len u32 + name bytes + ndim u32 + dims u32.. + f32 data
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"JDCK")?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (s, t) in self.specs.iter().zip(&self.tensors) {
+            f.write_all(&(s.name.len() as u32).to_le_bytes())?;
+            f.write_all(s.name.as_bytes())?;
+            f.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+            for &d in t.shape() {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            for &v in t.data() {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(cfg: &ModelConfig, path: &Path) -> std::io::Result<Self> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"JDCK" {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "bad checkpoint magic",
+            ));
+        }
+        let mut u32buf = [0u8; 4];
+        f.read_exact(&mut u32buf)?;
+        let count = u32::from_le_bytes(u32buf) as usize;
+        let mut loaded: HashMap<String, Tensor> = HashMap::new();
+        for _ in 0..count {
+            f.read_exact(&mut u32buf)?;
+            let nlen = u32::from_le_bytes(u32buf) as usize;
+            if nlen > 4096 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    "implausible name length",
+                ));
+            }
+            let mut name = vec![0u8; nlen];
+            f.read_exact(&mut name)?;
+            let name = String::from_utf8(name)
+                .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+            f.read_exact(&mut u32buf)?;
+            let ndim = u32::from_le_bytes(u32buf) as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                f.read_exact(&mut u32buf)?;
+                shape.push(u32::from_le_bytes(u32buf) as usize);
+            }
+            let n: usize = shape.iter().product();
+            let mut data = vec![0.0f32; n];
+            for v in &mut data {
+                f.read_exact(&mut u32buf)?;
+                *v = f32::from_le_bytes(u32buf);
+            }
+            loaded.insert(name, Tensor::from_vec(&shape, data));
+        }
+        let specs = param_specs(cfg);
+        let tensors = specs
+            .iter()
+            .map(|s| {
+                loaded.remove(&s.name).ok_or_else(|| {
+                    std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        format!("checkpoint missing {}", s.name),
+                    )
+                })
+            })
+            .collect::<std::io::Result<Vec<_>>>()?;
+        Ok(Self::from_tensors(specs, tensors))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::preset("mnist").unwrap()
+    }
+
+    #[test]
+    fn presets() {
+        assert_eq!(ModelConfig::preset("cifar100").unwrap().num_classes, 100);
+        assert!(ModelConfig::preset("nope").is_none());
+    }
+
+    #[test]
+    fn specs_sorted_unique() {
+        let specs = param_specs(&cfg());
+        let names: Vec<_> = specs.iter().map(|s| s.name.clone()).collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(names, sorted);
+        assert_eq!(specs.len(), 9 + 9 * 4 + 2); // 9 convs, 9 BNs, fc w+b
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let a = ParamSet::init(&cfg(), 7);
+        let b = ParamSet::init(&cfg(), 7);
+        for (x, y) in a.tensors.iter().zip(&b.tensors) {
+            assert_eq!(x, y);
+        }
+        let c = ParamSet::init(&cfg(), 8);
+        // first tensor in sort order is a zeros BN leaf; compare a conv
+        assert!(a.get("stem.conv.w") != c.get("stem.conv.w"));
+    }
+
+    #[test]
+    fn init_statistics() {
+        let p = ParamSet::init(&cfg(), 1);
+        let w = p.get("block3.conv2.w"); // 32x32x3x3, fan_in 288
+        let std_expect = (2.0f32 / 288.0).sqrt();
+        let mean = w.mean();
+        let var = w.data().iter().map(|&x| (x - mean) * (x - mean)).sum::<f32>()
+            / w.len() as f32;
+        assert!(mean.abs() < 0.01);
+        assert!((var.sqrt() - std_expect).abs() / std_expect < 0.15);
+        assert!(p.get("stem.bn.gamma").data().iter().all(|&v| v == 1.0));
+        assert!(p.get("fc.b").data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn get_set() {
+        let mut p = ParamSet::init(&cfg(), 2);
+        let t = Tensor::full(&[10], 3.0);
+        p.set("fc.b", t.clone());
+        assert_eq!(p.get("fc.b"), &t);
+    }
+
+    #[test]
+    #[should_panic]
+    fn set_wrong_shape_panics() {
+        let mut p = ParamSet::init(&cfg(), 2);
+        p.set("fc.b", Tensor::zeros(&[11]));
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let dir = std::env::temp_dir().join("jdck_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.ckpt");
+        let p = ParamSet::init(&cfg(), 3);
+        p.save(&path).unwrap();
+        let q = ParamSet::load(&cfg(), &path).unwrap();
+        for (a, b) in p.tensors.iter().zip(&q.tensors) {
+            assert_eq!(a, b);
+        }
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("jdck_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(ParamSet::load(&cfg(), &path).is_err());
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn num_scalars_counts() {
+        let p = ParamSet::init(&cfg(), 4);
+        let by_hand: usize = p.tensors.iter().map(|t| t.len()).sum();
+        assert_eq!(p.num_scalars(), by_hand);
+        assert!(p.num_scalars() > 10_000); // sanity: real model
+    }
+}

@@ -1,0 +1,263 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them on the
+//! CPU client, and executes them with [`crate::tensor::Tensor`] inputs.
+//!
+//! HLO *text* is the interchange format (jax >= 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids).  Executables are compiled lazily and cached;
+//! all graphs were lowered with `return_tuple=True`, so outputs are
+//! always one tuple literal that we decompose.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::tensor::Tensor;
+
+use super::manifest::{ArtifactSpec, DType, Manifest};
+
+/// A typed runtime value crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Tensor),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Value {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => t.shape(),
+            Value::I32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Value::F32(_) => DType::F32,
+            Value::I32(..) => DType::I32,
+        }
+    }
+
+    pub fn as_tensor(&self) -> &Tensor {
+        match self {
+            Value::F32(t) => t,
+            _ => panic!("expected f32 value"),
+        }
+    }
+
+    pub fn into_tensor(self) -> Tensor {
+        match self {
+            Value::F32(t) => t,
+            _ => panic!("expected f32 value"),
+        }
+    }
+}
+
+impl From<Tensor> for Value {
+    fn from(t: Tensor) -> Self {
+        Value::F32(t)
+    }
+}
+
+/// The engine: one PJRT CPU client + a lazily-populated executable cache.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> anyhow::Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { manifest, client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn executable(
+        &self,
+        name: &str,
+    ) -> anyhow::Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of artifacts compiled so far (metrics / tests).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    fn to_literal(v: &Value) -> anyhow::Result<xla::Literal> {
+        let dims: Vec<i64> = v.shape().iter().map(|&d| d as i64).collect();
+        Ok(match v {
+            Value::F32(t) => xla::Literal::vec1(t.data()).reshape(&dims)?,
+            Value::I32(data, _) => xla::Literal::vec1(data).reshape(&dims)?,
+        })
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &super::manifest::IoSpec) -> anyhow::Result<Value> {
+        Ok(match spec.dtype {
+            DType::F32 => Value::F32(Tensor::from_vec(&spec.shape, lit.to_vec::<f32>()?)),
+            DType::I32 => Value::I32(lit.to_vec::<i32>()?, spec.shape.clone()),
+        })
+    }
+
+    /// Execute an artifact with shape/dtype-checked inputs.
+    pub fn run(&self, name: &str, inputs: &[Value]) -> anyhow::Result<Vec<Value>> {
+        let spec = self.manifest.artifact(name)?.clone();
+        self.check_inputs(&spec, inputs)?;
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(Self::to_literal)
+            .collect::<anyhow::Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == spec.outputs.len(),
+            "{name}: expected {} outputs, got {}",
+            spec.outputs.len(),
+            parts.len()
+        );
+        parts
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(lit, os)| Self::from_literal(lit, os))
+            .collect()
+    }
+
+    fn check_inputs(&self, spec: &ArtifactSpec, inputs: &[Value]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            inputs.len() == spec.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            spec.name,
+            spec.inputs.len(),
+            inputs.len()
+        );
+        for (v, is) in inputs.iter().zip(&spec.inputs) {
+            anyhow::ensure!(
+                v.shape() == is.shape.as_slice(),
+                "{}: input {} shape {:?} != {:?}",
+                spec.name,
+                is.name,
+                v.shape(),
+                is.shape
+            );
+            anyhow::ensure!(
+                v.dtype() == is.dtype,
+                "{}: input {} dtype mismatch",
+                spec.name,
+                is.name
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn engine() -> Option<Engine> {
+        if !artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Engine::new(&artifacts_dir()).unwrap())
+    }
+
+    #[test]
+    fn spatial_forward_runs_and_matches_rust_oracle() {
+        let Some(eng) = engine() else { return };
+        let cfg = eng.manifest.config("mnist").unwrap().clone();
+        let params = crate::params::ParamSet::init(&cfg, 0);
+        let mut rng = crate::util::Rng::new(1);
+        let x = Tensor::from_vec(
+            &[1, 1, 32, 32],
+            (0..1024).map(|_| rng.uniform()).collect(),
+        );
+        let mut inputs: Vec<Value> = vec![x.clone().into()];
+        inputs.extend(params.tensors.iter().cloned().map(Value::from));
+        let out = eng.run("spatial_fwd_mnist_b1", &inputs).unwrap();
+        let logits = out[0].as_tensor();
+        assert_eq!(logits.shape(), &[1, 10]);
+        // PJRT result must match the pure-rust reference network
+        let oracle = crate::nn::spatial_forward(&cfg, &params, &x);
+        assert!(
+            logits.max_abs_diff(&oracle) < 1e-3,
+            "diff {}",
+            logits.max_abs_diff(&oracle)
+        );
+    }
+
+    #[test]
+    fn jpeg_forward_matches_spatial_at_15() {
+        let Some(eng) = engine() else { return };
+        let cfg = eng.manifest.config("mnist").unwrap().clone();
+        let params = crate::params::ParamSet::init(&cfg, 2);
+        let mut rng = crate::util::Rng::new(3);
+        let x = Tensor::from_vec(
+            &[1, 1, 32, 32],
+            (0..1024).map(|_| rng.uniform()).collect(),
+        );
+        let q = crate::jpeg_domain::qvec_flat();
+        let coeffs = crate::jpeg_domain::encode_tensor(&x, &q);
+        let mask = crate::jpeg::zigzag::band_mask(15);
+
+        let mut inputs: Vec<Value> = vec![
+            coeffs.into(),
+            Tensor::from_vec(&[64], q.to_vec()).into(),
+            Tensor::from_vec(&[64], mask.to_vec()).into(),
+        ];
+        inputs.extend(params.tensors.iter().cloned().map(Value::from));
+        let out = eng.run("jpeg_fwd_asm_mnist_b1", &inputs).unwrap();
+
+        let mut sp_inputs: Vec<Value> = vec![x.into()];
+        sp_inputs.extend(params.tensors.iter().cloned().map(Value::from));
+        let sp = eng.run("spatial_fwd_mnist_b1", &sp_inputs).unwrap();
+
+        let d = out[0].as_tensor().max_abs_diff(sp[0].as_tensor());
+        assert!(d < 1e-3, "jpeg vs spatial: {d}");
+    }
+
+    #[test]
+    fn input_validation() {
+        let Some(eng) = engine() else { return };
+        let bad = vec![Value::F32(Tensor::zeros(&[2, 2]))];
+        assert!(eng.run("spatial_fwd_mnist_b1", &bad).is_err());
+        assert!(eng.run("no_such_artifact", &[]).is_err());
+    }
+
+    #[test]
+    fn executable_cache() {
+        let Some(eng) = engine() else { return };
+        assert_eq!(eng.compiled_count(), 0);
+        eng.executable("spatial_fwd_mnist_b1").unwrap();
+        eng.executable("spatial_fwd_mnist_b1").unwrap();
+        assert_eq!(eng.compiled_count(), 1);
+    }
+}

@@ -1,0 +1,259 @@
+//! `artifacts/manifest.json` loader: artifact inventory + parameter specs
+//! emitted by `python/compile/aot.py`, cross-checked against the rust
+//! [`crate::params`] spec tables at load time.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::json::{self, Json};
+use crate::params::{param_specs, ModelConfig};
+
+/// dtype of an artifact input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => anyhow::bail!("unknown dtype {other}"),
+        }
+    }
+}
+
+/// One named input or output of an artifact.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// One AOT-compiled graph.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,
+    pub config: String,
+    pub batch: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// The whole manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+    pub configs: Vec<ModelConfig>,
+    pub fwd_batches: Vec<usize>,
+    pub train_batch: usize,
+}
+
+fn io_specs(v: &Json) -> anyhow::Result<Vec<IoSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("expected io array"))?
+        .iter()
+        .map(|e| {
+            Ok(IoSpec {
+                name: e
+                    .get("name")
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("io missing name"))?
+                    .to_string(),
+                shape: e
+                    .get("shape")
+                    .usize_vec()
+                    .ok_or_else(|| anyhow::anyhow!("io missing shape"))?,
+                dtype: DType::parse(e.get("dtype").as_str().unwrap_or("f32"))?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let v = json::parse(&text)?;
+
+        let mut configs = Vec::new();
+        for (name, c) in v
+            .get("configs")
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("manifest missing configs"))?
+        {
+            let widths = c.get("widths").usize_vec().unwrap_or_default();
+            anyhow::ensure!(widths.len() == 3, "widths must have 3 entries");
+            let cfg = ModelConfig {
+                name: name.clone(),
+                in_channels: c
+                    .get("in_channels")
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("config missing in_channels"))?,
+                num_classes: c
+                    .get("num_classes")
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("config missing num_classes"))?,
+                widths: [widths[0], widths[1], widths[2]],
+                image_size: c.get("image_size").as_usize().unwrap_or(32),
+            };
+            // cross-check the parameter table against our spec order
+            let ours = param_specs(&cfg);
+            let theirs = c
+                .get("params")
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("config missing params"))?;
+            anyhow::ensure!(
+                ours.len() == theirs.len(),
+                "param count mismatch for {name}: rust {} vs manifest {}",
+                ours.len(),
+                theirs.len()
+            );
+            for (o, t) in ours.iter().zip(theirs) {
+                anyhow::ensure!(
+                    t.get("name").as_str() == Some(o.name.as_str()),
+                    "param order mismatch: {} vs {:?}",
+                    o.name,
+                    t.get("name")
+                );
+                anyhow::ensure!(
+                    t.get("shape").usize_vec().as_deref() == Some(&o.shape[..]),
+                    "param shape mismatch for {}",
+                    o.name
+                );
+            }
+            configs.push(cfg);
+        }
+
+        let mut artifacts = HashMap::new();
+        for a in v
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts"))?
+        {
+            let name = a
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("artifact missing name"))?
+                .to_string();
+            let spec = ArtifactSpec {
+                file: dir.join(
+                    a.get("file")
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("artifact missing file"))?,
+                ),
+                kind: a.get("kind").as_str().unwrap_or("").to_string(),
+                config: a.get("config").as_str().unwrap_or("").to_string(),
+                batch: a.get("batch").as_usize().unwrap_or(0),
+                inputs: io_specs(a.get("inputs"))?,
+                outputs: io_specs(a.get("outputs"))?,
+                name: name.clone(),
+            };
+            anyhow::ensure!(spec.file.exists(), "missing artifact file {:?}", spec.file);
+            artifacts.insert(name, spec);
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+            configs,
+            fwd_batches: v.get("fwd_batches").usize_vec().unwrap_or(vec![1, 8, 40]),
+            train_batch: v.get("train_batch").as_usize().unwrap_or(40),
+        })
+    }
+
+    pub fn config(&self, name: &str) -> anyhow::Result<&ModelConfig> {
+        self.configs
+            .iter()
+            .find(|c| c.name == name)
+            .ok_or_else(|| anyhow::anyhow!("no config {name} in manifest"))
+    }
+
+    pub fn artifact(&self, name: &str) -> anyhow::Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no artifact {name} in manifest"))
+    }
+
+    /// Smallest compiled forward batch that fits `n` requests.
+    pub fn pick_fwd_batch(&self, n: usize) -> usize {
+        let mut batches = self.fwd_batches.clone();
+        batches.sort_unstable();
+        for &b in &batches {
+            if b >= n {
+                return b;
+            }
+        }
+        *batches.last().unwrap_or(&1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn load_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert!(m.artifacts.len() >= 30, "{}", m.artifacts.len());
+        assert_eq!(m.configs.len(), 3);
+        let a = m.artifact("spatial_fwd_mnist_b40").unwrap();
+        assert_eq!(a.batch, 40);
+        assert_eq!(a.inputs[0].shape, vec![40, 1, 32, 32]);
+        assert_eq!(a.outputs[0].shape, vec![40, 10]);
+    }
+
+    #[test]
+    fn pick_batch() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert_eq!(m.pick_fwd_batch(1), 1);
+        assert_eq!(m.pick_fwd_batch(2), 8);
+        assert_eq!(m.pick_fwd_batch(9), 40);
+        assert_eq!(m.pick_fwd_batch(100), 40);
+    }
+
+    #[test]
+    fn jpeg_artifacts_have_qvec_and_mask_inputs() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let a = m.artifact("jpeg_fwd_asm_mnist_b40").unwrap();
+        let names: Vec<_> = a.inputs.iter().map(|i| i.name.as_str()).collect();
+        assert!(names.contains(&"qvec"));
+        assert!(names.contains(&"freq_mask"));
+        assert!(names.iter().any(|n| n.starts_with("param:")));
+    }
+
+    #[test]
+    fn train_artifacts_output_params() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let a = m.artifact("jpeg_train_asm_mnist_b40").unwrap();
+        assert_eq!(a.outputs[0].name, "loss");
+        let nparams = param_specs(m.config("mnist").unwrap()).len();
+        assert_eq!(a.outputs.len(), 1 + 2 * nparams);
+    }
+}

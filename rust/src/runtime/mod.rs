@@ -1,0 +1,15 @@
+//! PJRT runtime: manifest-driven loading and execution of the AOT
+//! artifacts (L2 graphs with embedded L1 Pallas kernels).
+//!
+//! `Engine` owns one PJRT CPU client and a lazily-populated executable
+//! cache; `Session` wraps an engine with the model-level call surface
+//! the coordinator uses (forward / train-step / convert), marshalling
+//! `ParamSet`s and batches into artifact input lists.
+
+mod engine;
+pub mod manifest;
+pub mod session;
+
+pub use engine::{Engine, Value};
+pub use manifest::{ArtifactSpec, DType, IoSpec, Manifest};
+pub use session::{Session, TrainState};

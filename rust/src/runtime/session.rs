@@ -1,0 +1,356 @@
+//! Model-level call surface over the engine: forward, train step,
+//! exploded-map precompute — with automatic batch padding to the
+//! compiled shapes.
+
+use std::sync::Arc;
+
+use crate::jpeg::zigzag::band_mask;
+use crate::jpeg_domain::relu::Method;
+use crate::params::{ModelConfig, ParamSet};
+use crate::tensor::Tensor;
+
+use super::{Engine, Value};
+
+/// Mutable training state: parameters + SGD momentum buffers.
+#[derive(Clone)]
+pub struct TrainState {
+    pub params: ParamSet,
+    pub velocity: ParamSet,
+    pub step: usize,
+}
+
+impl TrainState {
+    pub fn init(cfg: &ModelConfig, seed: u64) -> Self {
+        let params = ParamSet::init(cfg, seed);
+        let velocity = params.zeros_like();
+        TrainState { params, velocity, step: 0 }
+    }
+}
+
+/// A session binds an engine to one model config.
+pub struct Session {
+    pub engine: Arc<Engine>,
+    pub cfg: ModelConfig,
+}
+
+fn pad_rows(t: &Tensor, batch: usize) -> Tensor {
+    let n = t.shape()[0];
+    if n == batch {
+        return t.clone();
+    }
+    assert!(n < batch, "batch {n} larger than compiled {batch}");
+    let row: usize = t.shape()[1..].iter().product();
+    let mut data = t.data().to_vec();
+    data.resize(batch * row, 0.0);
+    let mut shape = t.shape().to_vec();
+    shape[0] = batch;
+    Tensor::from_vec(&shape, data)
+}
+
+fn slice_rows(t: &Tensor, n: usize) -> Tensor {
+    let row: usize = t.shape()[1..].iter().product();
+    let mut shape = t.shape().to_vec();
+    shape[0] = n;
+    Tensor::from_vec(&shape, t.data()[..n * row].to_vec())
+}
+
+impl Session {
+    pub fn new(engine: Arc<Engine>, config: &str) -> anyhow::Result<Session> {
+        let cfg = engine.manifest.config(config)?.clone();
+        Ok(Session { engine, cfg })
+    }
+
+    fn qvec_value(qvec: &[f32; 64]) -> Value {
+        Tensor::from_vec(&[64], qvec.to_vec()).into()
+    }
+
+    fn mask_value(num_freqs: usize) -> Value {
+        Tensor::from_vec(&[64], band_mask(num_freqs).to_vec()).into()
+    }
+
+    /// Spatial forward on (N, C, 32, 32) pixels; N <= max compiled batch.
+    pub fn forward_spatial(&self, params: &ParamSet, x: &Tensor) -> anyhow::Result<Tensor> {
+        let n = x.shape()[0];
+        let batch = self.engine.manifest.pick_fwd_batch(n);
+        let name = format!("spatial_fwd_{}_b{}", self.cfg.name, batch);
+        let mut inputs: Vec<Value> = vec![pad_rows(x, batch).into()];
+        inputs.extend(params.tensors.iter().cloned().map(Value::from));
+        let out = self.engine.run(&name, &inputs)?;
+        Ok(slice_rows(out[0].as_tensor(), n))
+    }
+
+    /// JPEG-domain forward on (N, C, 4, 4, 64) coefficients.
+    pub fn forward_jpeg(
+        &self,
+        params: &ParamSet,
+        coeffs: &Tensor,
+        qvec: &[f32; 64],
+        num_freqs: usize,
+        method: Method,
+    ) -> anyhow::Result<Tensor> {
+        let n = coeffs.shape()[0];
+        let m = match method {
+            Method::Asm => "asm",
+            Method::Apx => "apx",
+        };
+        // APX graphs are only compiled at the train batch size
+        let batch = match method {
+            Method::Asm => self.engine.manifest.pick_fwd_batch(n),
+            Method::Apx => self.engine.manifest.train_batch,
+        };
+        let name = format!("jpeg_fwd_{m}_{}_b{batch}", self.cfg.name);
+        let mut inputs: Vec<Value> = vec![
+            pad_rows(coeffs, batch).into(),
+            Self::qvec_value(qvec),
+            Self::mask_value(num_freqs),
+        ];
+        inputs.extend(params.tensors.iter().cloned().map(Value::from));
+        let out = self.engine.run(&name, &inputs)?;
+        Ok(slice_rows(out[0].as_tensor(), n))
+    }
+
+    fn train(
+        &self,
+        name: &str,
+        state: &mut TrainState,
+        head: Vec<Value>,
+    ) -> anyhow::Result<f32> {
+        let mut inputs = head;
+        inputs.extend(state.params.tensors.iter().cloned().map(Value::from));
+        inputs.extend(state.velocity.tensors.iter().cloned().map(Value::from));
+        let out = self.engine.run(name, &inputs)?;
+        let loss = out[0].as_tensor().data()[0];
+        let nparams = state.params.len();
+        for (i, v) in out.into_iter().enumerate().skip(1) {
+            let t = v.into_tensor();
+            if i <= nparams {
+                state.params.tensors[i - 1] = t;
+            } else {
+                state.velocity.tensors[i - 1 - nparams] = t;
+            }
+        }
+        state.step += 1;
+        Ok(loss)
+    }
+
+    /// One spatial SGD step at the compiled train batch size.
+    pub fn train_step_spatial(
+        &self,
+        state: &mut TrainState,
+        x: &Tensor,
+        labels: &[i32],
+        lr: f32,
+    ) -> anyhow::Result<f32> {
+        let batch = self.engine.manifest.train_batch;
+        anyhow::ensure!(x.shape()[0] == batch, "train batch must be {batch}");
+        let name = format!("spatial_train_{}_b{batch}", self.cfg.name);
+        let head = vec![
+            x.clone().into(),
+            Value::I32(labels.to_vec(), vec![batch]),
+            Tensor::from_vec(&[1], vec![lr]).into(),
+        ];
+        self.train(&name, state, head)
+    }
+
+    /// One JPEG-domain SGD step (paper §5.4 training path).
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step_jpeg(
+        &self,
+        state: &mut TrainState,
+        coeffs: &Tensor,
+        qvec: &[f32; 64],
+        num_freqs: usize,
+        method: Method,
+        labels: &[i32],
+        lr: f32,
+    ) -> anyhow::Result<f32> {
+        let batch = self.engine.manifest.train_batch;
+        anyhow::ensure!(coeffs.shape()[0] == batch, "train batch must be {batch}");
+        let m = match method {
+            Method::Asm => "asm",
+            Method::Apx => "apx",
+        };
+        let name = format!("jpeg_train_{m}_{}_b{batch}", self.cfg.name);
+        let head = vec![
+            coeffs.clone().into(),
+            Self::qvec_value(qvec),
+            Self::mask_value(num_freqs),
+            Value::I32(labels.to_vec(), vec![batch]),
+            Tensor::from_vec(&[1], vec![lr]).into(),
+        ];
+        self.train(&name, state, head)
+    }
+
+    /// Optimized inference fast path: the fused graph (decode folded into
+    /// the stem — paper §4.1's precompute taken to its fixed point; exact,
+    /// phi = 15 semantics).
+    pub fn forward_jpeg_fused(
+        &self,
+        params: &ParamSet,
+        coeffs: &Tensor,
+        qvec: &[f32; 64],
+    ) -> anyhow::Result<Tensor> {
+        let n = coeffs.shape()[0];
+        let batch = self.engine.manifest.pick_fwd_batch(n);
+        let name = format!("jpeg_fwd_fused_{}_b{batch}", self.cfg.name);
+        let mut inputs: Vec<Value> =
+            vec![pad_rows(coeffs, batch).into(), Self::qvec_value(qvec)];
+        inputs.extend(params.tensors.iter().cloned().map(Value::from));
+        let out = self.engine.run(&name, &inputs)?;
+        Ok(slice_rows(out[0].as_tensor(), n))
+    }
+
+    /// Convolution parameter names in explode order (mirrors L2
+    /// `model.CONV_LAYOUT`).
+    pub const CONV_LAYOUT: [&'static str; 9] = [
+        "stem.conv.w",
+        "block1.conv1.w",
+        "block1.conv2.w",
+        "block2.conv1.w",
+        "block2.conv2.w",
+        "block2.proj.w",
+        "block3.conv1.w",
+        "block3.conv2.w",
+        "block3.proj.w",
+    ];
+
+    /// Materialize every conv's exploded map (paper's precompute step).
+    /// The explode graph consumes only the conv weights.
+    pub fn explode(&self, params: &ParamSet, qvec: &[f32; 64]) -> anyhow::Result<Vec<Tensor>> {
+        let name = format!("explode_{}", self.cfg.name);
+        let mut inputs: Vec<Value> = vec![Self::qvec_value(qvec)];
+        for conv in Self::CONV_LAYOUT {
+            inputs.push(params.get(conv).clone().into());
+        }
+        let out = self.engine.run(&name, &inputs)?;
+        Ok(out.into_iter().map(Value::into_tensor).collect())
+    }
+
+    /// Inference through the precomputed exploded maps (ablation path).
+    /// The graph consumes the maps plus the non-conv (BN + fc) leaves.
+    pub fn forward_jpeg_exploded(
+        &self,
+        params: &ParamSet,
+        xis: &[Tensor],
+        coeffs: &Tensor,
+        qvec: &[f32; 64],
+        num_freqs: usize,
+    ) -> anyhow::Result<Tensor> {
+        let batch = self.engine.manifest.train_batch;
+        let n = coeffs.shape()[0];
+        let name = format!("jpeg_fwd_exploded_{}_b{batch}", self.cfg.name);
+        let mut inputs: Vec<Value> = vec![
+            pad_rows(coeffs, batch).into(),
+            Self::qvec_value(qvec),
+            Self::mask_value(num_freqs),
+        ];
+        inputs.extend(xis.iter().cloned().map(Value::from));
+        for (spec, t) in params.specs.iter().zip(&params.tensors) {
+            if !Self::CONV_LAYOUT.contains(&spec.name.as_str()) {
+                inputs.push(t.clone().into());
+            }
+        }
+        let out = self.engine.run(&name, &inputs)?;
+        Ok(slice_rows(out[0].as_tensor(), n))
+    }
+}
+
+/// Classification accuracy from logits.
+pub fn accuracy(logits: &Tensor, labels: &[i32]) -> f32 {
+    let preds = logits.argmax_last();
+    let correct = preds
+        .iter()
+        .zip(labels)
+        .filter(|(p, l)| **p as i32 == **l)
+        .count();
+    correct as f32 / labels.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn session(cfg: &str) -> Option<Session> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        let engine = Arc::new(Engine::new(&dir).unwrap());
+        Some(Session::new(engine, cfg).unwrap())
+    }
+
+    #[test]
+    fn forward_pads_odd_batches() {
+        let Some(s) = session("mnist") else { return };
+        let p = ParamSet::init(&s.cfg, 0);
+        let mut rng = crate::util::Rng::new(1);
+        let x = Tensor::from_vec(
+            &[3, 1, 32, 32],
+            (0..3 * 1024).map(|_| rng.uniform()).collect(),
+        );
+        let logits = s.forward_spatial(&p, &x).unwrap();
+        assert_eq!(logits.shape(), &[3, 10]);
+        // padding must not change the real rows
+        let l1 = s.forward_spatial(&p, &slice_rows(&x, 1)).unwrap();
+        assert!(slice_rows(&logits, 1).max_abs_diff(&l1) < 1e-4);
+    }
+
+    #[test]
+    fn train_step_decreases_loss() {
+        let Some(s) = session("mnist") else { return };
+        let mut state = TrainState::init(&s.cfg, 1);
+        let data = crate::data::Dataset::synthetic(
+            crate::data::SynthKind::Mnist,
+            80,
+            8,
+            2,
+        );
+        let idx: Vec<usize> = (0..40).collect();
+        let (x, y) = data.pixel_batch(&idx, crate::data::Split::Train);
+        let first = s.train_step_spatial(&mut state, &x, &y, 0.05).unwrap();
+        let mut last = first;
+        for _ in 0..14 {
+            last = s.train_step_spatial(&mut state, &x, &y, 0.05).unwrap();
+        }
+        assert!(last < first * 0.8, "loss {first} -> {last}");
+        assert_eq!(state.step, 15);
+    }
+
+    #[test]
+    fn jpeg_train_matches_spatial_first_step() {
+        // same batch, same init: the two train artifacts compute the same
+        // loss (phi = 15) — training-path equivalence end to end.
+        let Some(s) = session("mnist") else { return };
+        let data = crate::data::Dataset::synthetic(
+            crate::data::SynthKind::Mnist,
+            80,
+            8,
+            3,
+        );
+        let idx: Vec<usize> = (0..40).collect();
+        let (x, y) = data.pixel_batch(&idx, crate::data::Split::Train);
+        let q = crate::jpeg_domain::qvec_flat();
+        let coeffs = crate::jpeg_domain::encode_tensor(&x, &q);
+
+        let mut st_sp = TrainState::init(&s.cfg, 4);
+        let mut st_jp = st_sp.clone();
+        let l_sp = s.train_step_spatial(&mut st_sp, &x, &y, 0.05).unwrap();
+        let l_jp = s
+            .train_step_jpeg(&mut st_jp, &coeffs, &q, 15, Method::Asm, &y, 0.05)
+            .unwrap();
+        assert!((l_sp - l_jp).abs() < 1e-3, "{l_sp} vs {l_jp}");
+        // parameters after the step agree too
+        for (a, b) in st_sp.params.tensors.iter().zip(&st_jp.params.tensors) {
+            assert!(a.max_abs_diff(b) < 1e-2);
+        }
+    }
+
+    #[test]
+    fn accuracy_helper() {
+        let logits = Tensor::from_vec(&[2, 3], vec![0.0, 1.0, 0.0, 1.0, 0.0, 0.0]);
+        assert_eq!(accuracy(&logits, &[1, 0]), 1.0);
+        assert_eq!(accuracy(&logits, &[0, 0]), 0.5);
+    }
+}

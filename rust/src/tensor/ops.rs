@@ -1,0 +1,186 @@
+//! Dense linear algebra for the L3 reference paths: matmul and NCHW conv.
+//!
+//! These exist for oracles, data prep and experiments, not as the serving
+//! hot path (that's the AOT artifacts).  Still written cache-consciously
+//! (ikj matmul, hoisted row pointers) because the fig-4a harness pushes
+//! millions of blocks through them.
+
+use super::Tensor;
+
+/// (M, K) @ (K, N) row-major matmul, ikj loop order.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape().len(), 2);
+    assert_eq!(b.shape().len(), 2);
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &bd[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    Tensor::from_vec(&[m, n], out)
+}
+
+/// Padding convention shared with the L2 graphs (DESIGN.md):
+/// 3x3 stride-1 pads (1,1); 3x3 stride-2 pads (0,1); 1x1 pads (0,0).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Padding {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Padding {
+    /// The convention used by every conv in the model.
+    pub fn for_conv(ksize: usize, stride: usize) -> Padding {
+        match (ksize, stride) {
+            (1, _) => Padding { lo: 0, hi: 0 },
+            (3, 1) => Padding { lo: 1, hi: 1 },
+            (3, 2) => Padding { lo: 0, hi: 1 },
+            _ => panic!("unsupported conv ({ksize}, {stride})"),
+        }
+    }
+}
+
+/// NCHW x OIHW convolution with the fixed padding convention.
+pub fn conv2d(x: &Tensor, w: &Tensor, stride: usize) -> Tensor {
+    let (n, c, h, wd) = (
+        x.shape()[0],
+        x.shape()[1],
+        x.shape()[2],
+        x.shape()[3],
+    );
+    let (co, ci, kh, kw) = (
+        w.shape()[0],
+        w.shape()[1],
+        w.shape()[2],
+        w.shape()[3],
+    );
+    assert_eq!(c, ci, "channel mismatch");
+    assert_eq!(kh, kw);
+    let pad = Padding::for_conv(kh, stride);
+    let oh = (h + pad.lo + pad.hi - kh) / stride + 1;
+    let ow = (wd + pad.lo + pad.hi - kw) / stride + 1;
+
+    let xd = x.data();
+    let wdat = w.data();
+    let mut out = vec![0.0f32; n * co * oh * ow];
+
+    for b in 0..n {
+        for o in 0..co {
+            for ic in 0..c {
+                let xoff = (b * c + ic) * h * wd;
+                let woff = (o * c + ic) * kh * kw;
+                let ooff = (b * co + o) * oh * ow;
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut acc = 0.0f32;
+                        for ky in 0..kh {
+                            let iy = (oy * stride + ky) as isize - pad.lo as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            let xrow = xoff + iy as usize * wd;
+                            let wrow = woff + ky * kw;
+                            for kx in 0..kw {
+                                let ix = (ox * stride + kx) as isize - pad.lo as isize;
+                                if ix < 0 || ix >= wd as isize {
+                                    continue;
+                                }
+                                acc += xd[xrow + ix as usize] * wdat[wrow + kx];
+                            }
+                        }
+                        out[ooff + oy * ow + ox] += acc;
+                    }
+                }
+            }
+        }
+    }
+    Tensor::from_vec(&[n, co, oh, ow], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let i = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(matmul(&a, &i), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::from_vec(&[3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 kernel = scaling
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1., 2., 3., 4.]);
+        let w = Tensor::from_vec(&[1, 1, 1, 1], vec![2.0]);
+        let y = conv2d(&x, &w, 1);
+        assert_eq!(y.data(), &[2., 4., 6., 8.]);
+    }
+
+    #[test]
+    fn conv3x3_stride1_shape_and_border() {
+        let x = Tensor::ones(&[1, 1, 8, 8]);
+        let w = Tensor::ones(&[1, 1, 3, 3]);
+        let y = conv2d(&x, &w, 1);
+        assert_eq!(y.shape(), &[1, 1, 8, 8]);
+        // interior pixel sees all 9 ones; corner sees 4
+        assert_eq!(y.at(&[0, 0, 4, 4]), 9.0);
+        assert_eq!(y.at(&[0, 0, 0, 0]), 4.0);
+    }
+
+    #[test]
+    fn conv3x3_stride2_shape() {
+        let x = Tensor::ones(&[1, 1, 32, 32]);
+        let w = Tensor::ones(&[1, 1, 3, 3]);
+        let y = conv2d(&x, &w, 2);
+        assert_eq!(y.shape(), &[1, 1, 16, 16]);
+        // pad (0,1): first output reads rows 0..2 fully in-range
+        assert_eq!(y.at(&[0, 0, 0, 0]), 9.0);
+        // last output reads one padded row+col
+        assert_eq!(y.at(&[0, 0, 15, 15]), 4.0);
+    }
+
+    #[test]
+    fn conv1x1_stride2_subsamples() {
+        let mut x = Tensor::zeros(&[1, 1, 4, 4]);
+        for i in 0..4 {
+            for j in 0..4 {
+                x.set(&[0, 0, i, j], (i * 4 + j) as f32);
+            }
+        }
+        let w = Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]);
+        let y = conv2d(&x, &w, 2);
+        assert_eq!(y.shape(), &[1, 1, 2, 2]);
+        assert_eq!(y.data(), &[0.0, 2.0, 8.0, 10.0]);
+    }
+
+    #[test]
+    fn conv_multichannel_sums() {
+        let x = Tensor::ones(&[1, 3, 4, 4]);
+        let w = Tensor::ones(&[2, 3, 1, 1]);
+        let y = conv2d(&x, &w, 1);
+        assert_eq!(y.shape(), &[1, 2, 4, 4]);
+        assert!(y.data().iter().all(|&v| (v - 3.0).abs() < 1e-6));
+    }
+}

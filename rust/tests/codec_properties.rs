@@ -1,0 +1,153 @@
+//! Property-based integration tests over the JPEG codec substrate.
+//!
+//! No proptest crate in the offline vendored set, so properties are
+//! checked with seeded random sweeps (failures print the seed).
+
+use jpegdomain::data::{generate, SynthKind};
+use jpegdomain::jpeg::{
+    codec, decode, decode_to_coefficients, encode, EncodeOptions, PixelImage,
+    QuantTable,
+};
+use jpegdomain::util::Rng;
+
+fn random_image(rng: &mut Rng, channels: usize, h: usize, w: usize) -> PixelImage {
+    let mut img = PixelImage::new(channels, h, w);
+    // smooth random field (JPEG-plausible): sum of a few sinusoids
+    for c in 0..channels {
+        let (a, b, ph) = (
+            rng.uniform_in(1.0, 4.0),
+            rng.uniform_in(1.0, 4.0),
+            rng.uniform_in(0.0, 6.28),
+        );
+        for y in 0..h {
+            for x in 0..w {
+                let v = 128.0
+                    + 70.0 * ((x as f32 / w as f32) * a * 3.14 + ph).sin()
+                    + 40.0 * ((y as f32 / h as f32) * b * 3.14).cos()
+                    + rng.uniform_in(-5.0, 5.0);
+                img.set(c, y, x, v.clamp(0.0, 255.0));
+            }
+        }
+    }
+    img
+}
+
+fn rmse(a: &[f32], b: &[f32]) -> f32 {
+    let se: f32 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    (se / a.len() as f32).sqrt()
+}
+
+#[test]
+fn property_roundtrip_error_bounded_by_quality() {
+    // for every seed: rmse(q_hi) <= rmse(q_lo) and both bounded
+    for seed in 0..20 {
+        let mut rng = Rng::new(seed);
+        let ch = if seed % 2 == 0 { 1 } else { 3 };
+        let img = random_image(&mut rng, ch, 32, 32);
+        let hi = decode(&encode(&img, EncodeOptions::quality(95)).unwrap()).unwrap();
+        let lo = decode(&encode(&img, EncodeOptions::quality(25)).unwrap()).unwrap();
+        let e_hi = rmse(&img.data, &hi.data);
+        let e_lo = rmse(&img.data, &lo.data);
+        assert!(e_hi <= e_lo + 0.5, "seed {seed}: {e_hi} vs {e_lo}");
+        assert!(e_hi < 6.0, "seed {seed}: hi-quality rmse {e_hi}");
+        assert!(e_lo < 40.0, "seed {seed}: lo-quality rmse {e_lo}");
+    }
+}
+
+#[test]
+fn property_encode_deterministic() {
+    for seed in 0..10 {
+        let mut rng = Rng::new(seed + 100);
+        let img = random_image(&mut rng, 1, 24, 40);
+        let a = encode(&img, EncodeOptions::quality(77)).unwrap();
+        let b = encode(&img, EncodeOptions::quality(77)).unwrap();
+        assert_eq!(a, b, "seed {seed}");
+    }
+}
+
+#[test]
+fn property_entropy_roundtrip_exact() {
+    // entropy coding is lossless: decode_to_coefficients inverts the
+    // encoder's quantized integers exactly (checked via re-encode)
+    for seed in 0..10 {
+        let mut rng = Rng::new(seed + 200);
+        let img = random_image(&mut rng, 1, 16, 16);
+        let bytes = encode(&img, EncodeOptions::quality(50)).unwrap();
+        let ci = decode_to_coefficients(&bytes).unwrap();
+        // re-encode the decoded pixels of those exact coefficients
+        let px = codec::decode_coefficients_to_pixels(&ci, 16, 16).unwrap();
+        let bytes2 = encode(&px, EncodeOptions::quality(50)).unwrap();
+        let ci2 = decode_to_coefficients(&bytes2).unwrap();
+        // requantizing an already-quantized image is idempotent up to
+        // rounding at the clamp boundary; require near-total agreement
+        let same = ci
+            .coeffs
+            .iter()
+            .zip(&ci2.coeffs)
+            .filter(|(a, b)| a == b)
+            .count();
+        assert!(
+            same as f64 >= ci.coeffs.len() as f64 * 0.99,
+            "seed {seed}: {same}/{}",
+            ci.coeffs.len()
+        );
+    }
+}
+
+#[test]
+fn property_file_size_monotone_in_quality() {
+    let mut rng = Rng::new(42);
+    let img = random_image(&mut rng, 3, 32, 32);
+    let mut last = usize::MAX;
+    for q in [95u8, 60, 20] {
+        let bytes = encode(&img, EncodeOptions::quality(q)).unwrap();
+        assert!(bytes.len() <= last, "q={q}");
+        last = bytes.len();
+    }
+}
+
+#[test]
+fn property_dc_tracks_brightness() {
+    // raising every pixel raises exactly the DC coefficients
+    let mut rng = Rng::new(7);
+    let img = random_image(&mut rng, 1, 16, 16);
+    let mut brighter = img.clone();
+    for v in &mut brighter.data {
+        *v = (*v * 0.5) + 64.0; // compress range, shift up
+    }
+    let ca = decode_to_coefficients(&encode(&img, EncodeOptions::quality(90)).unwrap()).unwrap();
+    let cb =
+        decode_to_coefficients(&encode(&brighter, EncodeOptions::quality(90)).unwrap())
+            .unwrap();
+    let mean_dc_a: f64 = (0..4).map(|b| ca.coeffs[b * 64] as f64).sum::<f64>() / 4.0;
+    let mean_dc_b: f64 = (0..4).map(|b| cb.coeffs[b * 64] as f64).sum::<f64>() / 4.0;
+    let mean_a: f64 = img.data.iter().map(|&v| v as f64).sum::<f64>() / 256.0;
+    let mean_b: f64 = brighter.data.iter().map(|&v| v as f64).sum::<f64>() / 256.0;
+    assert_eq!(mean_dc_b > mean_dc_a, mean_b > mean_a);
+}
+
+#[test]
+fn synthetic_datasets_compress_reasonably() {
+    // JPEG-typical energy: synthetic data must compress far below raw size
+    for kind in [SynthKind::Mnist, SynthKind::Cifar10] {
+        let ex = generate(kind, 10, 5);
+        let raw = kind.channels() * 32 * 32;
+        for e in &ex {
+            let bytes = encode(&e.pixels, EncodeOptions::quality(80)).unwrap();
+            assert!(
+                bytes.len() < raw,
+                "{kind:?}: {} bytes vs raw {raw}",
+                bytes.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn quant_table_parsed_back_from_file() {
+    let mut rng = Rng::new(9);
+    let img = random_image(&mut rng, 1, 8, 8);
+    let bytes = encode(&img, EncodeOptions::quality(35)).unwrap();
+    let ci = decode_to_coefficients(&bytes).unwrap();
+    assert_eq!(ci.qtables[0], QuantTable::luma(35));
+}

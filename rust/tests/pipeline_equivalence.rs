@@ -1,0 +1,154 @@
+//! Integration: file-to-logits equivalence of the two serving pipelines
+//! across datasets, qualities and seeds — the paper's Table-1 claim at
+//! the system level, through the real codec + PJRT artifacts.
+//!
+//! Skipped gracefully when `make artifacts` hasn't run.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use jpegdomain::coordinator::router::{Route, Router};
+use jpegdomain::data::{Dataset, Split, SynthKind};
+use jpegdomain::jpeg_domain::relu::Method;
+use jpegdomain::params::ParamSet;
+use jpegdomain::runtime::{Engine, Session};
+
+fn engine() -> Option<Arc<Engine>> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Arc::new(Engine::new(&dir).unwrap()))
+}
+
+fn route_logits(
+    session: &Session,
+    params: &ParamSet,
+    files: &[(Vec<u8>, u32)],
+    route: Route,
+) -> Vec<Vec<f32>> {
+    let router = Router::new(route);
+    files
+        .iter()
+        .map(|(bytes, _)| {
+            let p = router.prepare(bytes).unwrap();
+            let x = Router::stack(&[p.input]);
+            let logits = match route {
+                Route::Spatial => session.forward_spatial(params, &x).unwrap(),
+                Route::Jpeg => session
+                    .forward_jpeg(params, &x, &p.qvec, 15, Method::Asm)
+                    .unwrap(),
+            };
+            logits.data().to_vec()
+        })
+        .collect()
+}
+
+#[test]
+fn pipelines_equivalent_all_datasets() {
+    let Some(eng) = engine() else { return };
+    for (name, kind) in [
+        ("mnist", SynthKind::Mnist),
+        ("cifar10", SynthKind::Cifar10),
+        ("cifar100", SynthKind::Cifar100),
+    ] {
+        let session = Session::new(eng.clone(), name).unwrap();
+        let params = ParamSet::init(&session.cfg, 3);
+        let data = Dataset::synthetic(kind, 2, 6, 11);
+        let files = data.jpeg_bytes(Split::Test, 95);
+        let ls = route_logits(&session, &params, &files, Route::Spatial);
+        let lj = route_logits(&session, &params, &files, Route::Jpeg);
+        for (i, (a, b)) in ls.iter().zip(&lj).enumerate() {
+            let maxd = a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(maxd < 5e-2, "{name} file {i}: logit divergence {maxd}");
+            // predictions must agree exactly
+            let am = a
+                .iter()
+                .enumerate()
+                .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+                .unwrap()
+                .0;
+            let bm = b
+                .iter()
+                .enumerate()
+                .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+                .unwrap()
+                .0;
+            assert_eq!(am, bm, "{name} file {i}");
+        }
+    }
+}
+
+#[test]
+fn pipelines_equivalent_across_qualities() {
+    let Some(eng) = engine() else { return };
+    let session = Session::new(eng, "mnist").unwrap();
+    let params = ParamSet::init(&session.cfg, 5);
+    let data = Dataset::synthetic(SynthKind::Mnist, 2, 4, 13);
+    for quality in [50u8, 75, 95] {
+        let files = data.jpeg_bytes(Split::Test, quality);
+        let ls = route_logits(&session, &params, &files, Route::Spatial);
+        let lj = route_logits(&session, &params, &files, Route::Jpeg);
+        for (a, b) in ls.iter().zip(&lj) {
+            let maxd = a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(maxd < 5e-2, "quality {quality}: {maxd}");
+        }
+    }
+}
+
+#[test]
+fn fused_graph_matches_domain_graph() {
+    // the optimized serving graph is the same function (phi = 15)
+    let Some(eng) = engine() else { return };
+    let session = Session::new(eng, "mnist").unwrap();
+    let params = ParamSet::init(&session.cfg, 6);
+    let data = Dataset::synthetic(SynthKind::Mnist, 2, 4, 17);
+    let files = data.jpeg_bytes(Split::Test, 90);
+    let router = Router::new(Route::Jpeg);
+    for (bytes, _) in &files {
+        let p = router.prepare(bytes).unwrap();
+        let coeffs = Router::stack(&[p.input]);
+        let domain = session
+            .forward_jpeg(&params, &coeffs, &p.qvec, 15, Method::Asm)
+            .unwrap();
+        let fused = session.forward_jpeg_fused(&params, &coeffs, &p.qvec).unwrap();
+        let d = domain.max_abs_diff(&fused);
+        assert!(d < 1e-2, "fused vs domain: {d}");
+    }
+}
+
+#[test]
+fn exploded_pipeline_matches() {
+    // precompute Xi once, then exploded inference == DCC inference
+    let Some(eng) = engine() else { return };
+    let session = Session::new(eng, "mnist").unwrap();
+    let params = ParamSet::init(&session.cfg, 8);
+    let q = jpegdomain::jpeg_domain::qvec_flat();
+    let xis = session.explode(&params, &q).unwrap();
+    assert_eq!(xis.len(), 9);
+
+    let mut rng = jpegdomain::util::Rng::new(1);
+    let batch = session.engine.manifest.train_batch;
+    let x = jpegdomain::tensor::Tensor::from_vec(
+        &[batch, 1, 32, 32],
+        (0..batch * 1024).map(|_| rng.uniform()).collect(),
+    );
+    let coeffs = jpegdomain::jpeg_domain::encode_tensor(&x, &q);
+    let dcc = session
+        .forward_jpeg(&params, &coeffs, &q, 15, Method::Asm)
+        .unwrap();
+    let exploded = session
+        .forward_jpeg_exploded(&params, &xis, &coeffs, &q, 15)
+        .unwrap();
+    let d = dcc.max_abs_diff(&exploded);
+    assert!(d < 5e-2, "exploded vs dcc: {d}");
+}

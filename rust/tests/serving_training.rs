@@ -1,0 +1,143 @@
+//! Integration: the full train -> checkpoint -> serve lifecycle, and
+//! failure injection on the serving path.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use jpegdomain::coordinator::router::Route;
+use jpegdomain::coordinator::server::{Server, ServerConfig};
+use jpegdomain::coordinator::training::{TrainConfig, TrainDomain, Trainer};
+use jpegdomain::coordinator::BatcherConfig;
+use jpegdomain::data::{Dataset, Split, SynthKind};
+use jpegdomain::runtime::{Engine, Session};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(dir)
+}
+
+#[test]
+fn train_checkpoint_serve_lifecycle() {
+    let Some(dir) = artifacts() else { return };
+    let ckpt = std::env::temp_dir().join("lifecycle.ckpt");
+
+    // 1. train a model to better-than-chance accuracy
+    let engine = Arc::new(Engine::new(&dir).unwrap());
+    let session = Session::new(engine, "mnist").unwrap();
+    let data = Dataset::synthetic(SynthKind::Mnist, 600, 200, 21);
+    let cfg = TrainConfig {
+        domain: TrainDomain::Spatial,
+        steps: 80,
+        eval_batches: 4,
+        checkpoint: Some(ckpt.clone()),
+        ..Default::default()
+    };
+    let (_, report) = Trainer::new(&session, &data, cfg).run().unwrap();
+    assert!(report.test_accuracy > 0.3, "{}", report.test_accuracy);
+    drop(session);
+
+    // 2. serve from the checkpoint over the JPEG pipeline; accuracy must
+    //    transfer (model conversion at system level)
+    let server = Server::start_default(
+        dir,
+        "mnist".into(),
+        Some(ckpt.clone()),
+        0,
+        ServerConfig { route: Route::Jpeg, ..Default::default() },
+    );
+    let files = data.jpeg_bytes(Split::Test, 95);
+    let mut correct = 0usize;
+    let n = 80;
+    for (bytes, label) in files.iter().take(n) {
+        let resp = server.infer(bytes.clone()).unwrap();
+        if resp.predicted == *label as usize {
+            correct += 1;
+        }
+    }
+    let acc = correct as f32 / n as f32;
+    // JPEG-side serving accuracy should be close to the spatial test
+    // accuracy (identical math, different input representation/quality)
+    assert!(
+        acc > report.test_accuracy - 0.15,
+        "served acc {acc} vs trained {}",
+        report.test_accuracy
+    );
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests as usize, n);
+    server.shutdown();
+    std::fs::remove_file(ckpt).unwrap();
+}
+
+#[test]
+fn server_survives_poison_requests_interleaved() {
+    let Some(dir) = artifacts() else { return };
+    let server = Server::start_default(
+        dir,
+        "mnist".into(),
+        None,
+        0,
+        ServerConfig {
+            route: Route::Jpeg,
+            batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(10) },
+            ..Default::default()
+        },
+    );
+    let data = Dataset::synthetic(SynthKind::Mnist, 2, 4, 5);
+    let files = data.jpeg_bytes(Split::Test, 95);
+    for i in 0..12 {
+        if i % 3 == 0 {
+            // poison: truncated JPEG
+            let mut bad = files[0].0.clone();
+            bad.truncate(bad.len() / 3);
+            assert!(server.infer(bad).is_err(), "request {i}");
+        } else {
+            assert!(server.infer(files[i % files.len()].0.clone()).is_ok(), "request {i}");
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn jpeg_domain_training_transfers_to_spatial_pipeline() {
+    // train IN the jpeg domain, serve over the SPATIAL pipeline: the
+    // shared parameterization works in both directions (phi = 15)
+    let Some(dir) = artifacts() else { return };
+    let engine = Arc::new(Engine::new(&dir).unwrap());
+    let session = Session::new(engine, "mnist").unwrap();
+    let data = Dataset::synthetic(SynthKind::Mnist, 400, 160, 31);
+    let cfg = TrainConfig {
+        domain: TrainDomain::Jpeg {
+            num_freqs: 15,
+            method: jpegdomain::jpeg_domain::relu::Method::Asm,
+        },
+        steps: 60,
+        eval_batches: 4,
+        ..Default::default()
+    };
+    let (state, report) = Trainer::new(&session, &data, cfg).run().unwrap();
+    assert!(report.test_accuracy > 0.25);
+
+    // evaluate through the spatial pipeline
+    let trainer_spatial = Trainer::new(
+        &session,
+        &data,
+        TrainConfig {
+            domain: TrainDomain::Spatial,
+            eval_batches: 4,
+            ..Default::default()
+        },
+    );
+    let acc_spatial = trainer_spatial
+        .evaluate(&state.params, Split::Test)
+        .unwrap();
+    assert!(
+        (acc_spatial - report.test_accuracy).abs() < 1e-3,
+        "spatial {acc_spatial} vs jpeg {}",
+        report.test_accuracy
+    );
+}
