@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# CI for the rust crate: build, test, format, lint.
+# Mirrors the tier-1 verify (`cargo build --release && cargo test -q`)
+# and adds fmt/clippy when those components are installed.
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --check
+else
+    echo "== cargo fmt not installed; skipping =="
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy -D warnings =="
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "== cargo clippy not installed; skipping =="
+fi
+
+echo "CI OK"

@@ -1,16 +1,34 @@
-//! Perf probe: per-stage timing of both serving pipelines (release).
-//! Used by the EXPERIMENTS.md §Perf iteration log.
+//! Perf probe: the sparse exploded-conv engine ablation (native, always
+//! runs) + per-stage timing of both PJRT serving pipelines (when
+//! artifacts are present).  Used by the EXPERIMENTS.md §Perf iteration
+//! log; emits `BENCH_PR1.json` so successive PRs have a perf
+//! trajectory.
 //!
 //! Run: `cargo run --release --example perf_probe`
+//! Env: PP_QUALITY (50), PP_BATCH (40), PP_COUT (16), PP_ITERS (5),
+//!      PP_PASSES (2), PP_THREADS (4), PP_OUT (BENCH_PR1.json)
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
+use jpegdomain::bench_harness as bh;
 use jpegdomain::coordinator::router::{Route, Router};
 use jpegdomain::data::{Dataset, Split, SynthKind};
+use jpegdomain::jpeg::codec;
+use jpegdomain::jpeg_domain::network::ExplodedModel;
 use jpegdomain::jpeg_domain::relu::Method;
-use jpegdomain::params::ParamSet;
+use jpegdomain::json::Json;
+use jpegdomain::params::{ModelConfig, ParamSet};
 use jpegdomain::runtime::{Engine, Session};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
 
 fn time_us(iters: usize, mut f: impl FnMut()) -> f64 {
     let t0 = Instant::now();
@@ -20,8 +38,68 @@ fn time_us(iters: usize, mut f: impl FnMut()) -> f64 {
     t0.elapsed().as_secs_f64() * 1e6 / iters as f64
 }
 
-fn main() -> anyhow::Result<()> {
-    let engine = Arc::new(Engine::new(std::path::Path::new("artifacts"))?);
+/// The native sparse engine probe: kernel ablation + end-to-end
+/// inference thread sweep.  No artifacts required.
+fn native_probe(report: &mut BTreeMap<String, Json>) -> anyhow::Result<()> {
+    let quality = env_usize("PP_QUALITY", 50) as u8;
+    let batch = env_usize("PP_BATCH", 40);
+    let iters = env_usize("PP_ITERS", 5);
+    let threads = env_usize("PP_THREADS", 4);
+
+    // -- kernel-level: dense vs sparse vs threaded --------------------------
+    let r = bh::sparse_conv_ablation(quality, batch, env_usize("PP_COUT", 16), threads, iters);
+    bh::throughput::print_sparse_conv(&r);
+    let mut conv = BTreeMap::new();
+    conv.insert("quality".into(), num(r.quality as f64));
+    conv.insert("batch".into(), num(r.batch as f64));
+    conv.insert("cout".into(), num(r.cout as f64));
+    conv.insert("threads".into(), num(r.threads as f64));
+    conv.insert("density".into(), num(r.density));
+    conv.insert("dense_blocks_per_sec".into(), num(r.dense_blocks_per_sec));
+    conv.insert("sparse_blocks_per_sec".into(), num(r.sparse_blocks_per_sec));
+    conv.insert(
+        "threaded_blocks_per_sec".into(),
+        num(r.threaded_blocks_per_sec),
+    );
+    conv.insert("sparse_speedup_vs_dense".into(), num(r.sparse_speedup));
+    conv.insert("thread_scaling".into(), num(r.thread_scaling));
+    conv.insert(
+        "max_abs_diff_vs_dcc".into(),
+        num(r.max_abs_diff_vs_dcc as f64),
+    );
+    report.insert("sparse_conv".into(), Json::Obj(conv));
+
+    // -- end-to-end: native exploded inference, 1 thread vs N ---------------
+    let cfg = ModelConfig::preset("mnist").expect("preset");
+    let params = ParamSet::init(&cfg, 0);
+    let data = Dataset::synthetic(SynthKind::Mnist, 2, batch.max(40), 3);
+    let files = data.jpeg_bytes(Split::Test, quality);
+    let qvec = codec::decode_to_coefficients(&files[0].0)?.qvec(0);
+    let em = ExplodedModel::precompute(&params, &qvec);
+    let passes = env_usize("PP_PASSES", 2);
+    let ips1 =
+        bh::native_sparse_inference_throughput(&cfg, &params, &em, &files, batch, passes, 1)?;
+    let ips_n = bh::native_sparse_inference_throughput(
+        &cfg, &params, &em, &files, batch, passes, threads,
+    )?;
+    println!(
+        "\nnative sparse inference: {ips1:.1} img/s @ 1 thread | {ips_n:.1} img/s @ {threads} \
+         threads ({:.2}x)",
+        ips_n / ips1
+    );
+    let mut inf = BTreeMap::new();
+    inf.insert("quality".into(), num(quality as f64));
+    inf.insert("batch".into(), num(batch as f64));
+    inf.insert("threads".into(), num(threads as f64));
+    inf.insert("images_per_sec_1_thread".into(), num(ips1));
+    inf.insert("images_per_sec_n_threads".into(), num(ips_n));
+    inf.insert("thread_scaling".into(), num(ips_n / ips1));
+    report.insert("native_inference".into(), Json::Obj(inf));
+    Ok(())
+}
+
+/// The original PJRT pipeline probe; skipped when no artifacts exist.
+fn pjrt_probe(engine: Arc<Engine>) -> anyhow::Result<()> {
     for config in ["mnist", "cifar10"] {
         let session = Session::new(engine.clone(), config)?;
         let params = ParamSet::init(&session.cfg, 0);
@@ -79,13 +157,7 @@ fn main() -> anyhow::Result<()> {
             );
         });
 
-
         // batch-1 scaling probe: overhead vs compute
-        let x1 = jpegdomain::tensor::Tensor::from_vec(
-            &x.shape().iter().cloned().map(|d| d).collect::<Vec<_>>()[..].to_vec(),
-            x.data().to_vec(),
-        );
-        let _ = x1;
         let sp1: Vec<_> = sp_inputs[..1].to_vec();
         let xb1 = Router::stack(&sp1);
         session.forward_spatial(&params, &xb1)?;
@@ -94,13 +166,36 @@ fn main() -> anyhow::Result<()> {
         });
         println!("forward b1: spatial {f_sp1:.0} us (b40/40 = {:.0} us)", f_sp / 40.0);
         println!("\n== {config} (batch {batch}) ==");
-        println!("prepare/img:   spatial {prep_sp:.1} us | jpeg {prep_jp:.1} us | delta {:.1} us", prep_sp - prep_jp);
-        println!("forward/batch: spatial {f_sp:.0} us | jpeg-fused {f_fused:.0} us | jpeg-domain {f_domain:.0} us");
+        println!(
+            "prepare/img:   spatial {prep_sp:.1} us | jpeg {prep_jp:.1} us | delta {:.1} us",
+            prep_sp - prep_jp
+        );
+        println!(
+            "forward/batch: spatial {f_sp:.0} us | jpeg-fused {f_fused:.0} us | jpeg-domain {f_domain:.0} us"
+        );
         println!(
             "end-to-end/img: spatial {:.1} us | jpeg-fused {:.1} us",
             prep_sp + f_sp / batch as f64,
             prep_jp + f_fused / batch as f64
         );
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut report = BTreeMap::new();
+    // a native-probe failure must not cost us the JSON or the PJRT probe
+    if let Err(e) = native_probe(&mut report) {
+        eprintln!("native probe failed: {e}");
+    }
+
+    let out = std::env::var("PP_OUT").unwrap_or_else(|_| "BENCH_PR1.json".into());
+    std::fs::write(&out, format!("{}\n", Json::Obj(report)))?;
+    println!("\nwrote {out}");
+
+    match Engine::new(std::path::Path::new("artifacts")) {
+        Ok(engine) => pjrt_probe(Arc::new(engine))?,
+        Err(e) => eprintln!("skipping PJRT probe: {e}"),
     }
     Ok(())
 }

@@ -10,7 +10,10 @@ pub mod throughput;
 
 pub use blocks::{fig4a, Fig4aRow};
 pub use model_exps::{fig4b, fig4c, table1, Fig4Row, Table1Row};
-pub use throughput::{ablation_exploded, fig5, AblationReport, Fig5Row};
+pub use throughput::{
+    ablation_exploded, fig5, native_sparse_inference_throughput, sparse_conv_ablation,
+    AblationReport, Fig5Row, SparseConvReport,
+};
 
 /// Markdown-ish row printing helper.
 pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {

@@ -12,9 +12,16 @@ use std::time::Instant;
 use crate::coordinator::router::{Route, Router};
 use crate::coordinator::training::{TrainConfig, TrainDomain, Trainer};
 use crate::data::{Dataset, Split, SynthKind};
+use crate::jpeg::codec;
+use crate::jpeg_domain::conv::{
+    explode_conv, jpeg_conv_dcc, jpeg_conv_exploded_dense, jpeg_conv_exploded_sparse,
+};
+use crate::jpeg_domain::network::{self, ExplodedModel};
 use crate::jpeg_domain::relu::Method;
-use crate::params::ParamSet;
+use crate::params::{ModelConfig, ParamSet};
 use crate::runtime::Session;
+use crate::tensor::{SparseBlocks, Tensor};
+use crate::util::Rng;
 
 /// One Fig-5 bar.
 #[derive(Clone, Debug)]
@@ -98,6 +105,48 @@ pub fn inference_throughput(
     Ok(images as f64 / t0.elapsed().as_secs_f64())
 }
 
+/// Native sparse end-to-end inference throughput: entropy decode ->
+/// [`SparseBlocks`] -> gather-free exploded forward (no PJRT).  The
+/// thread knob is explicit so fig5 / perf probes can sweep it.
+pub fn native_sparse_inference_throughput(
+    cfg: &ModelConfig,
+    params: &ParamSet,
+    em: &ExplodedModel,
+    files: &[(Vec<u8>, u32)],
+    batch: usize,
+    passes: usize,
+    threads: usize,
+) -> anyhow::Result<f64> {
+    anyhow::ensure!(batch > 0, "batch must be positive");
+    let t0 = Instant::now();
+    let mut images = 0usize;
+    for _ in 0..passes {
+        for chunk in files.chunks(batch) {
+            if chunk.len() < batch {
+                continue; // full batches only, like the paper
+            }
+            let mut cis = Vec::with_capacity(chunk.len());
+            for (bytes, _) in chunk {
+                cis.push(codec::decode_to_coefficients(bytes)?);
+            }
+            let qvec = cis[0].qvec(0);
+            let f0 = SparseBlocks::from_coeff_images(&cis);
+            std::hint::black_box(network::jpeg_forward_exploded_sparse(
+                cfg,
+                params,
+                &f0,
+                em,
+                &qvec,
+                15,
+                Method::Asm,
+                threads,
+            ));
+            images += chunk.len();
+        }
+    }
+    Ok(images as f64 / t0.elapsed().as_secs_f64())
+}
+
 /// The full Fig-5 experiment for one dataset: 4 bars.
 pub fn fig5(
     session: &Session,
@@ -122,6 +171,30 @@ pub fn fig5(
             dataset: session.cfg.name.clone(),
             mode: "test",
             route: pipeline.label(),
+            images_per_sec: ips,
+        });
+    }
+
+    // -- inference, native sparse exploded engine ----------------------------
+    // The gather-free rust path: entropy decode -> sparse blocks ->
+    // precomputed exploded maps, threaded per the engine's knob.  No
+    // PJRT execute on this route at all.
+    {
+        let qv = Router::new(Route::Jpeg).prepare(&files[0].0)?.qvec;
+        let em = ExplodedModel::precompute(&params, &qv);
+        let ips = native_sparse_inference_throughput(
+            &session.cfg,
+            &params,
+            &em,
+            &files,
+            batch,
+            passes,
+            session.engine.threads,
+        )?;
+        rows.push(Fig5Row {
+            dataset: session.cfg.name.clone(),
+            mode: "test",
+            route: "jpeg (sparse native)",
             images_per_sec: ips,
         });
     }
@@ -205,6 +278,17 @@ pub struct AblationReport {
     pub explode_precompute_ms: f64,
     pub harmonic_ns_per_block: f64,
     pub factored_ns_per_block: f64,
+    /// Native DCC forward (the pure-rust dense baseline), ms/batch.
+    pub native_dcc_fwd_ms_per_batch: f64,
+    /// Native gather-free exploded forward, 1 thread, ms/batch.
+    pub sparse_fwd_ms_per_batch: f64,
+    /// Native gather-free exploded forward at the engine's thread
+    /// count, ms/batch.
+    pub sparse_fwd_threaded_ms_per_batch: f64,
+    /// Input density of the quality-50 entropy-decoded batch.
+    pub input_density: f64,
+    /// Thread count used for the threaded row.
+    pub threads: usize,
 }
 
 pub fn ablation_exploded(session: &Session, iters: usize) -> anyhow::Result<AblationReport> {
@@ -266,12 +350,73 @@ pub fn ablation_exploded(session: &Session, iters: usize) -> anyhow::Result<Abla
     }
     let factored_ns_per_block = t0.elapsed().as_secs_f64() * 1e9 / nb as f64;
 
+    // -- native dense vs sparse vs threaded, quality-50 JPEG input ----------
+    let threads = session.engine.threads;
+    let files = Dataset::synthetic(SynthKind::Mnist, 2, batch, 6).jpeg_bytes(Split::Test, 50);
+    let cis: Vec<_> = files
+        .iter()
+        .map(|(b, _)| codec::decode_to_coefficients(b).expect("decode"))
+        .collect();
+    let qjpeg = cis[0].qvec(0);
+    let f0 = SparseBlocks::from_coeff_images(&cis);
+    let input_density = f0.density();
+    let coeffs50 = f0.to_dense();
+    let em = ExplodedModel::precompute(&params, &qjpeg);
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(crate::jpeg_domain::network::jpeg_forward(
+            &session.cfg,
+            &params,
+            &coeffs50,
+            &qjpeg,
+            15,
+            Method::Asm,
+        ));
+    }
+    let native_dcc_fwd_ms_per_batch = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(network::jpeg_forward_exploded_sparse(
+            &session.cfg,
+            &params,
+            &f0,
+            &em,
+            &qjpeg,
+            15,
+            Method::Asm,
+            1,
+        ));
+    }
+    let sparse_fwd_ms_per_batch = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(network::jpeg_forward_exploded_sparse(
+            &session.cfg,
+            &params,
+            &f0,
+            &em,
+            &qjpeg,
+            15,
+            Method::Asm,
+            threads,
+        ));
+    }
+    let sparse_fwd_threaded_ms_per_batch = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+
     Ok(AblationReport {
         dcc_ms_per_batch,
         exploded_ms_per_batch,
         explode_precompute_ms,
         harmonic_ns_per_block,
         factored_ns_per_block,
+        native_dcc_fwd_ms_per_batch,
+        sparse_fwd_ms_per_batch,
+        sparse_fwd_threaded_ms_per_batch,
+        input_density,
+        threads,
     })
 }
 
@@ -297,7 +442,143 @@ pub fn print_ablation(r: &AblationReport) {
                 "factored ASM per block (ns)".into(),
                 format!("{:.0}", r.factored_ns_per_block),
             ],
+            vec![
+                "native DCC forward, q50 (ms/batch)".into(),
+                format!("{:.2}", r.native_dcc_fwd_ms_per_batch),
+            ],
+            vec![
+                format!("native sparse exploded fwd, 1 thread (ms/batch, density {:.3})", r.input_density),
+                format!("{:.2}", r.sparse_fwd_ms_per_batch),
+            ],
+            vec![
+                format!("native sparse exploded fwd, {} threads (ms/batch)", r.threads),
+                format!("{:.2}", r.sparse_fwd_threaded_ms_per_batch),
+            ],
         ],
+    );
+}
+
+/// Kernel-level sparsity ablation: dense Algorithm-1 gather+matmul vs
+/// the gather-free sparse kernel vs the threaded sparse kernel, on a
+/// real entropy-decoded batch.  Needs no PJRT artifacts.
+#[derive(Clone, Debug)]
+pub struct SparseConvReport {
+    pub quality: u8,
+    pub batch: usize,
+    pub cout: usize,
+    pub threads: usize,
+    /// Input density of the entropy-decoded batch, in [0, 1].
+    pub density: f64,
+    /// Input 8x8 blocks processed per second, per path.
+    pub dense_blocks_per_sec: f64,
+    pub sparse_blocks_per_sec: f64,
+    pub threaded_blocks_per_sec: f64,
+    /// sparse (1 thread) / dense.
+    pub sparse_speedup: f64,
+    /// threaded / sparse (1 thread).
+    pub thread_scaling: f64,
+    /// Sparse output vs `jpeg_conv_dcc` on the same inputs.
+    pub max_abs_diff_vs_dcc: f32,
+}
+
+/// Run the kernel ablation on a quality-`quality` synthetic batch.
+/// `threads = 0` resolves to the hardware parallelism.
+pub fn sparse_conv_ablation(
+    quality: u8,
+    batch: usize,
+    cout: usize,
+    threads: usize,
+    iters: usize,
+) -> SparseConvReport {
+    let threads = crate::config::resolve_threads(threads);
+    let iters = iters.max(1);
+    let batch = batch.max(1);
+
+    // real JPEG input: synthetic images -> encoder -> entropy decode
+    let files = Dataset::synthetic(SynthKind::Cifar10, 2, batch, 21).jpeg_bytes(Split::Test, quality);
+    let cis: Vec<_> = files
+        .iter()
+        .map(|(b, _)| codec::decode_to_coefficients(b).expect("decode"))
+        .collect();
+    let f0 = SparseBlocks::from_coeff_images(&cis);
+    let (n, c, bh, bw) = f0.dims();
+    let qvec = cis[0].qvec(0);
+    let dense = f0.to_dense();
+
+    let mut rng = Rng::new(33);
+    let wlen = cout * c * 9;
+    let w = Tensor::from_vec(
+        &[cout, c, 3, 3],
+        (0..wlen).map(|_| rng.normal() * 0.5).collect(),
+    );
+    let xi = explode_conv(&w, &qvec, 1);
+
+    // correctness first: the sparse path must reproduce the DCC oracle
+    let got = jpeg_conv_exploded_sparse(&f0, &xi, cout, 1, 1);
+    let want = jpeg_conv_dcc(&dense, &w, &qvec, 1);
+    let max_abs_diff_vs_dcc = got.max_abs_diff(&want);
+
+    let blocks = (n * c * bh * bw * iters) as f64;
+    let time = |f: &mut dyn FnMut()| {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        t0.elapsed().as_secs_f64()
+    };
+    let dense_s = time(&mut || {
+        std::hint::black_box(jpeg_conv_exploded_dense(&dense, &xi, cout, 1));
+    });
+    let sparse_s = time(&mut || {
+        std::hint::black_box(jpeg_conv_exploded_sparse(&f0, &xi, cout, 1, 1));
+    });
+    let threaded_s = time(&mut || {
+        std::hint::black_box(jpeg_conv_exploded_sparse(&f0, &xi, cout, 1, threads));
+    });
+
+    SparseConvReport {
+        quality,
+        batch,
+        cout,
+        threads,
+        density: f0.density(),
+        dense_blocks_per_sec: blocks / dense_s,
+        sparse_blocks_per_sec: blocks / sparse_s,
+        threaded_blocks_per_sec: blocks / threaded_s,
+        sparse_speedup: dense_s / sparse_s,
+        thread_scaling: sparse_s / threaded_s,
+        max_abs_diff_vs_dcc,
+    }
+}
+
+pub fn print_sparse_conv(r: &SparseConvReport) {
+    super::print_table(
+        &format!(
+            "Sparse exploded-conv ablation (quality {}, batch {}, cout {}, density {:.3})",
+            r.quality, r.batch, r.cout, r.density
+        ),
+        &["path", "blocks/s", "vs dense"],
+        &[
+            vec![
+                "dense gather + tiled matmul".into(),
+                format!("{:.0}", r.dense_blocks_per_sec),
+                "1.00x".into(),
+            ],
+            vec![
+                "sparse gather-free, 1 thread".into(),
+                format!("{:.0}", r.sparse_blocks_per_sec),
+                format!("{:.2}x", r.sparse_speedup),
+            ],
+            vec![
+                format!("sparse gather-free, {} threads", r.threads),
+                format!("{:.0}", r.threaded_blocks_per_sec),
+                format!("{:.2}x", r.sparse_speedup * r.thread_scaling),
+            ],
+        ],
+    );
+    println!(
+        "max |sparse - dcc| = {:.2e}; thread scaling {:.2}x at {} threads",
+        r.max_abs_diff_vs_dcc, r.thread_scaling, r.threads
     );
 }
 
@@ -321,7 +602,7 @@ mod tests {
     fn fig5_shape_holds() {
         let Some(s) = session() else { return };
         let rows = fig5(&s, 95, 80, 3, 1).unwrap();
-        assert_eq!(rows.len(), 7);
+        assert_eq!(rows.len(), 8);
         let get = |mode: &str, route: &str| {
             rows.iter()
                 .find(|r| r.mode == mode && r.route == route)
@@ -339,6 +620,22 @@ mod tests {
         );
         assert!(get("test", "jpeg") > 0.0 && get("test", "spatial") > 0.0);
         assert!(get("train", "spatial") > 0.0 && get("train", "jpeg") > 0.0);
+    }
+
+    #[test]
+    fn sparse_conv_ablation_runs_without_artifacts() {
+        let r = sparse_conv_ablation(50, 4, 4, 2, 1);
+        assert_eq!((r.quality, r.batch, r.cout, r.threads), (50, 4, 4, 2));
+        assert!(r.density > 0.0 && r.density < 1.0, "density {}", r.density);
+        assert!(
+            r.max_abs_diff_vs_dcc < 1e-3,
+            "sparse vs dcc diff {}",
+            r.max_abs_diff_vs_dcc
+        );
+        assert!(r.dense_blocks_per_sec > 0.0);
+        assert!(r.sparse_blocks_per_sec > 0.0);
+        assert!(r.threaded_blocks_per_sec > 0.0);
+        print_sparse_conv(&r); // smoke the printer
     }
 
     #[test]

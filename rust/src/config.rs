@@ -130,6 +130,17 @@ impl Config {
     }
 }
 
+/// Resolve a worker-thread request: `0` means "auto" (all available
+/// hardware parallelism), anything else is taken literally.  Used by
+/// the sparse exploded-conv execution paths.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
 /// Shared run settings resolved from config + CLI.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -137,6 +148,8 @@ pub struct RunConfig {
     pub dataset: String,
     pub quality: u8,
     pub seed: u64,
+    /// Worker threads for the sparse execution paths (`0` = auto).
+    pub threads: usize,
 }
 
 impl Default for RunConfig {
@@ -146,6 +159,7 @@ impl Default for RunConfig {
             dataset: "mnist".to_string(),
             quality: 95,
             seed: 0,
+            threads: 0,
         }
     }
 }
@@ -162,7 +176,13 @@ impl RunConfig {
             dataset: cfg.str_or("run", "dataset", &d.dataset),
             quality: cfg.usize_or("run", "quality", d.quality as usize) as u8,
             seed: cfg.usize_or("run", "seed", d.seed as usize) as u64,
+            threads: cfg.usize_or("run", "threads", d.threads),
         }
+    }
+
+    /// The effective worker-thread count for this run.
+    pub fn effective_threads(&self) -> usize {
+        resolve_threads(self.threads)
     }
 }
 
@@ -219,5 +239,16 @@ verbose = true
         assert_eq!(r.dataset, "cifar10");
         assert_eq!(r.quality, 85);
         assert_eq!(r.seed, 3);
+        assert_eq!(r.threads, 0, "threads defaults to auto");
+    }
+
+    #[test]
+    fn threads_knob() {
+        let c = Config::parse("[run]\nthreads = 6\n").unwrap();
+        let r = RunConfig::from_config(&c);
+        assert_eq!(r.threads, 6);
+        assert_eq!(r.effective_threads(), 6);
+        assert_eq!(resolve_threads(3), 3);
+        assert!(resolve_threads(0) >= 1, "auto resolves to >= 1");
     }
 }

@@ -2,12 +2,29 @@
 //!
 //! `jpeg_conv_dcc` is the decompress-convolve-compress composition — the
 //! paper's eq. 11 evaluated without materializing Xi; "mathematically
-//! equivalent ... not an approximation" (paper §3.2).  `explode_conv` +
-//! `jpeg_conv_exploded` materialize the block-local Xi (Algorithm 1) for
-//! the precomputed-inference ablation, mirroring
+//! equivalent ... not an approximation" (paper §3.2).  `explode_conv`
+//! materializes the block-local Xi (Algorithm 1), mirroring
 //! `python/compile/layers.py`.
+//!
+//! ## Gather-free sparse formulation vs. Algorithm 1
+//!
+//! Algorithm 1 applies Xi by *gathering* each output block's 3x3 block
+//! neighborhood into a `(N*Bho*Bwo, 9*C*64)` matrix and multiplying it
+//! by Xi — a dense formulation that materializes every zero the
+//! quantizer produced and every zero-padding border block.  The default
+//! path here inverts that: for each output block it walks only the
+//! *stored nonzeros* of the 9 neighboring input blocks (via
+//! [`SparseBlocks`]) and accumulates `value x Xi-row` into the output
+//! row.  Because `y_row = sum_k a[row,k] * Xi[k,:]` is a sum of scaled
+//! Xi rows, dropping the zero terms is exact, not an approximation —
+//! the arithmetic that remains is identical to Algorithm 1's.  Border
+//! neighborhoods that fall outside the image contribute nothing and are
+//! skipped outright instead of being gathered as zero blocks.  The
+//! dense Algorithm-1 path is kept as [`jpeg_conv_exploded_dense`] so
+//! dense-vs-sparse stays a measured ablation (see
+//! `bench_harness::throughput::sparse_conv_ablation`).
 
-use crate::tensor::{conv2d, matmul, Tensor};
+use crate::tensor::{conv2d, matmul, matmul_tiled, SparseBlocks, Tensor};
 
 use super::{decode_tensor, encode_tensor};
 
@@ -24,7 +41,7 @@ pub fn jpeg_conv_dcc(f: &Tensor, w: &Tensor, qvec: &[f32; 64], stride: usize) ->
 /// through decompress -> conv -> window-extract -> compress; see
 /// DESIGN.md for the window-offset derivation per (ksize, stride).
 pub fn explode_conv(w: &Tensor, qvec: &[f32; 64], stride: usize) -> Tensor {
-    let (cout, cin, kh, _) = (w.shape()[0], w.shape()[1], w.shape()[2], w.shape()[3]);
+    let (cout, cin, kh) = (w.shape()[0], w.shape()[1], w.shape()[2]);
     // output-block window offset within the 24x24 neighborhood's VALID conv
     let off = match (kh, stride) {
         (3, 1) => 7,
@@ -36,44 +53,46 @@ pub fn explode_conv(w: &Tensor, qvec: &[f32; 64], stride: usize) -> Tensor {
     let dec = super::dec_matrix(qvec);
     let enc = super::enc_matrix(qvec);
 
+    // single-plane kernels, hoisted out of the 9*64 basis loop
+    let kernels: Vec<Tensor> = (0..cout * cin)
+        .map(|i| {
+            let (co, ci) = (i / cin, i % cin);
+            let mut wk = Tensor::zeros(&[1, 1, kh, kh]);
+            for a in 0..kh {
+                let row = w.slice_at(&[co, ci, a], kh).to_vec();
+                wk.copy_block(&[0, 0, a], &row);
+            }
+            wk
+        })
+        .collect();
+
     let mut xi = Tensor::zeros(&[9 * cin * 64, cout * 64]);
     // basis pixel images of each coefficient (64 pixels per coefficient)
     for delta in 0..9 {
         let (dy, dx) = (delta / 3, delta % 3);
         for k in 0..64 {
-            // decompressed basis block for coefficient k
-            let pix = &dec.data()[k * 64..(k + 1) * 64];
-            // neighborhood image 24x24 with the block at (dy, dx)
+            // decompressed basis block for coefficient k, placed at
+            // (dy, dx) inside a 24x24 neighborhood image
+            let pix = dec.slice_at(&[k], 64).to_vec();
             let mut img = Tensor::zeros(&[1, 1, 24, 24]);
             for y in 0..8 {
-                for x in 0..8 {
-                    img.set(&[0, 0, dy * 8 + y, dx * 8 + x], pix[y * 8 + x]);
-                }
+                img.copy_block(&[0, 0, dy * 8 + y, dx * 8], &pix[y * 8..y * 8 + 8]);
             }
             for co in 0..cout {
                 for ci in 0..cin {
-                    // single-plane VALID conv
-                    let mut wk = Tensor::zeros(&[1, 1, kh, kh]);
-                    for a in 0..kh {
-                        for b in 0..kh {
-                            wk.set(&[0, 0, a, b], w.at(&[co, ci, a, b]));
-                        }
-                    }
-                    let resp = valid_conv_plane(&img, &wk, stride);
+                    let resp = valid_conv_plane(&img, &kernels[co * cin + ci], stride);
                     // extract the 8x8 output window and compress
                     let mut win = [0.0f32; 64];
                     for y in 0..8 {
-                        for x in 0..8 {
-                            win[y * 8 + x] = resp.at(&[0, 0, off + y, off + x]);
-                        }
+                        win[y * 8..y * 8 + 8]
+                            .copy_from_slice(resp.slice_at(&[0, 0, off + y, off], 8));
                     }
                     let wt = Tensor::from_vec(&[1, 64], win.to_vec());
                     let fz = matmul(&wt, &enc);
+                    // each (row, co) pair is visited exactly once
                     let row = (delta * cin + ci) * 64 + k;
-                    for kp in 0..64 {
-                        let v = xi.at(&[row, co * 64 + kp]) + fz.data()[kp];
-                        xi.set(&[row, co * 64 + kp], v);
-                    }
+                    xi.slice_at_mut(&[row], cout * 64)[co * 64..(co + 1) * 64]
+                        .copy_from_slice(fz.data());
                 }
             }
         }
@@ -83,86 +102,213 @@ pub fn explode_conv(w: &Tensor, qvec: &[f32; 64], stride: usize) -> Tensor {
 
 /// VALID (no padding) single-image conv used by the explode builder.
 fn valid_conv_plane(x: &Tensor, w: &Tensor, stride: usize) -> Tensor {
-    let (h, wd) = (x.shape()[2], x.shape()[3]);
+    let (h, width) = (x.shape()[2], x.shape()[3]);
     let k = w.shape()[2];
     let oh = (h - k) / stride + 1;
-    let ow = (wd - k) / stride + 1;
-    let mut out = Tensor::zeros(&[1, 1, oh, ow]);
+    let ow = (width - k) / stride + 1;
+    let xd = x.data();
+    let wd = w.data();
+    let mut out = vec![0.0f32; oh * ow];
     for oy in 0..oh {
         for ox in 0..ow {
             let mut acc = 0.0f32;
             for ky in 0..k {
-                for kx in 0..k {
-                    acc += x.at(&[0, 0, oy * stride + ky, ox * stride + kx])
-                        * w.at(&[0, 0, ky, kx]);
-                }
+                let xrow = &xd[(oy * stride + ky) * width + ox * stride..][..k];
+                let wrow = &wd[ky * k..][..k];
+                acc += xrow.iter().zip(wrow).map(|(a, b)| a * b).sum::<f32>();
             }
-            out.set(&[0, 0, oy, ox], acc);
+            out[oy * ow + ox] = acc;
         }
     }
-    out
+    Tensor::from_vec(&[1, 1, oh, ow], out)
 }
 
-/// Apply a materialized exploded map via gathered 3x3 block neighborhoods.
-pub fn jpeg_conv_exploded(
-    f: &Tensor,
+/// Output block grid for a given stride.
+#[inline]
+fn out_blocks(bh: usize, bw: usize, stride: usize) -> (usize, usize) {
+    if stride == 1 {
+        (bh, bw)
+    } else {
+        (bh / 2, bw / 2)
+    }
+}
+
+/// Input block coordinate of neighborhood slot `delta` for output block
+/// (oy, ox), or `None` when the slot falls in the zero padding.
+/// Stride 1: neighborhood centered (origin oy-1); stride 2: anchored at
+/// 2*oy.
+#[inline]
+fn neighbor(
+    oy: usize,
+    ox: usize,
+    delta: usize,
+    stride: usize,
+    bh: usize,
+    bw: usize,
+) -> Option<(usize, usize)> {
+    let (dy, dx) = ((delta / 3) as isize, (delta % 3) as isize);
+    let (iy, ix) = if stride == 1 {
+        (oy as isize + dy - 1, ox as isize + dx - 1)
+    } else {
+        (2 * oy as isize + dy, 2 * ox as isize + dx)
+    };
+    if iy < 0 || ix < 0 || iy >= bh as isize || ix >= bw as isize {
+        None
+    } else {
+        Some((iy as usize, ix as usize))
+    }
+}
+
+/// Reorder row-major conv output rows `(N*Bho*Bwo, Cout*64)` into the
+/// coefficient layout `(N, Cout, Bho, Bwo, 64)` with block-slice copies.
+fn rows_to_coeff_tensor(rows: &[f32], n: usize, cout: usize, bho: usize, bwo: usize) -> Tensor {
+    let xw = cout * 64;
+    let mut res = vec![0.0f32; n * xw * bho * bwo];
+    for b in 0..n {
+        for oy in 0..bho {
+            for ox in 0..bwo {
+                let src = &rows[((b * bho + oy) * bwo + ox) * xw..][..xw];
+                for co in 0..cout {
+                    let dst = ((((b * cout + co) * bho) + oy) * bwo + ox) * 64;
+                    res[dst..dst + 64].copy_from_slice(&src[co * 64..(co + 1) * 64]);
+                }
+            }
+        }
+    }
+    Tensor::from_vec(&[n, cout, bho, bwo, 64], res)
+}
+
+/// Gather-free kernel core: compute output rows `[r0, r0 + out.len() /
+/// (cout*64))` into `out`, walking only stored nonzeros of each 3x3
+/// block neighborhood.  `out` must be zeroed, row-major `(rows,
+/// cout*64)`.
+fn sparse_rows_into(
+    f: &SparseBlocks,
     xi: &Tensor,
     cout: usize,
     stride: usize,
+    r0: usize,
+    out: &mut [f32],
+) {
+    let (_, c, bh, bw) = f.dims();
+    let (bho, bwo) = out_blocks(bh, bw, stride);
+    let xw = cout * 64;
+    assert_eq!(xi.shape(), &[9 * c * 64, xw], "xi shape mismatch");
+    let xd = xi.data();
+    let nrows = out.len() / xw;
+    for rloc in 0..nrows {
+        let r = r0 + rloc;
+        let orow = &mut out[rloc * xw..(rloc + 1) * xw];
+        let b = r / (bho * bwo);
+        let rem = r % (bho * bwo);
+        let (oy, ox) = (rem / bwo, rem % bwo);
+        for delta in 0..9 {
+            let Some((iy, ix)) = neighbor(oy, ox, delta, stride, bh, bw) else {
+                continue; // zero-padding block: contributes nothing
+            };
+            for ci in 0..c {
+                let bid = ((b * c + ci) * bh + iy) * bw + ix;
+                let (ks, vs) = f.block(bid);
+                let base = (delta * c + ci) * 64;
+                // 4-wide accumulation: one pass over orow per 4 nonzeros
+                let mut t = 0;
+                while t + 4 <= ks.len() {
+                    let x0 = &xd[(base + ks[t] as usize) * xw..][..xw];
+                    let x1 = &xd[(base + ks[t + 1] as usize) * xw..][..xw];
+                    let x2 = &xd[(base + ks[t + 2] as usize) * xw..][..xw];
+                    let x3 = &xd[(base + ks[t + 3] as usize) * xw..][..xw];
+                    let (v0, v1, v2, v3) = (vs[t], vs[t + 1], vs[t + 2], vs[t + 3]);
+                    for (o, (((&a0, &a1), &a2), &a3)) in orow
+                        .iter_mut()
+                        .zip(x0.iter().zip(x1).zip(x2).zip(x3))
+                    {
+                        *o += v0 * a0 + v1 * a1 + v2 * a2 + v3 * a3;
+                    }
+                    t += 4;
+                }
+                while t < ks.len() {
+                    let v = vs[t];
+                    let xrow = &xd[(base + ks[t] as usize) * xw..][..xw];
+                    for (o, &x) in orow.iter_mut().zip(xrow) {
+                        *o += v * x;
+                    }
+                    t += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Apply a materialized exploded map to sparse block input — the
+/// gather-free kernel, optionally threaded.
+///
+/// `threads <= 1` runs inline; otherwise output rows are split into
+/// contiguous ranges across `threads` scoped workers (each writes a
+/// disjoint slice, so results are bit-identical to the single-thread
+/// path).
+pub fn jpeg_conv_exploded_sparse(
+    f: &SparseBlocks,
+    xi: &Tensor,
+    cout: usize,
+    stride: usize,
+    threads: usize,
 ) -> Tensor {
+    let (n, _, bh, bw) = f.dims();
+    let (bho, bwo) = out_blocks(bh, bw, stride);
+    let rows = n * bho * bwo;
+    let xw = cout * 64;
+    let mut out = vec![0.0f32; rows * xw];
+    let threads = threads.max(1).min(rows.max(1));
+    if threads <= 1 {
+        sparse_rows_into(f, xi, cout, stride, 0, &mut out);
+    } else {
+        let chunk = rows.div_ceil(threads);
+        std::thread::scope(|s| {
+            for (i, buf) in out.chunks_mut(chunk * xw).enumerate() {
+                s.spawn(move || sparse_rows_into(f, xi, cout, stride, i * chunk, buf));
+            }
+        });
+    }
+    rows_to_coeff_tensor(&out, n, cout, bho, bwo)
+}
+
+/// Apply a materialized exploded map — default (sparse, gather-free)
+/// path.  Dense input is sparsified first; exact zeros cost nothing
+/// downstream.
+pub fn jpeg_conv_exploded(f: &Tensor, xi: &Tensor, cout: usize, stride: usize) -> Tensor {
+    jpeg_conv_exploded_sparse(&SparseBlocks::from_dense(f), xi, cout, stride, 1)
+}
+
+/// Algorithm-1 dense path: gather 3x3 block neighborhoods into a
+/// `(N*Bho*Bwo, 9*C*64)` matrix (slice-level copies, no per-element
+/// `set`) and multiply by Xi with the cache-tiled dense matmul.  Kept
+/// as the measured dense baseline of the sparsity ablation.
+pub fn jpeg_conv_exploded_dense(f: &Tensor, xi: &Tensor, cout: usize, stride: usize) -> Tensor {
     let s = f.shape();
     let (n, c, bh, bw) = (s[0], s[1], s[2], s[3]);
-    let (bho, bwo) = if stride == 1 { (bh, bw) } else { (bh / 2, bw / 2) };
+    let (bho, bwo) = out_blocks(bh, bw, stride);
     let rows = n * bho * bwo;
-    let mut a = Tensor::zeros(&[rows, 9 * c * 64]);
+    let kwidth = 9 * c * 64;
+    let mut a = vec![0.0f32; rows * kwidth];
     for b in 0..n {
         for oy in 0..bho {
             for ox in 0..bwo {
                 let row = (b * bho + oy) * bwo + ox;
+                let arow = &mut a[row * kwidth..(row + 1) * kwidth];
                 for delta in 0..9 {
-                    let (dy, dx) = (delta / 3, delta % 3);
-                    // stride 1: neighborhood centered (origin oy-1);
-                    // stride 2: anchored at 2*oy
-                    let (iy, ix) = if stride == 1 {
-                        (oy as isize + dy as isize - 1, ox as isize + dx as isize - 1)
-                    } else {
-                        (2 * oy as isize + dy as isize, 2 * ox as isize + dx as isize)
-                    };
-                    if iy < 0 || ix < 0 || iy >= bh as isize || ix >= bw as isize {
+                    let Some((iy, ix)) = neighbor(oy, ox, delta, stride, bh, bw) else {
                         continue; // zero block (pixel zero padding)
-                    }
+                    };
                     for ci in 0..c {
-                        let src = ((((b * c + ci) * bh) + iy as usize) * bw
-                            + ix as usize)
-                            * 64;
-                        let dst_col = (delta * c + ci) * 64;
-                        for k in 0..64 {
-                            a.set(&[row, dst_col + k], f.data()[src + k]);
-                        }
+                        arow[(delta * c + ci) * 64..][..64]
+                            .copy_from_slice(f.slice_at(&[b, ci, iy, ix], 64));
                     }
                 }
             }
         }
     }
-    let out = matmul(&a, xi); // (rows, cout*64)
-    // (N, Bho, Bwo, Cout, 64) -> (N, Cout, Bho, Bwo, 64)
-    let mut res = Tensor::zeros(&[n, cout, bho, bwo, 64]);
-    for b in 0..n {
-        for oy in 0..bho {
-            for ox in 0..bwo {
-                let row = (b * bho + oy) * bwo + ox;
-                for co in 0..cout {
-                    for k in 0..64 {
-                        res.set(
-                            &[b, co, oy, ox, k],
-                            out.at(&[row, co * 64 + k]),
-                        );
-                    }
-                }
-            }
-        }
-    }
-    res
+    let out = matmul_tiled(&Tensor::from_vec(&[rows, kwidth], a), xi);
+    rows_to_coeff_tensor(out.data(), n, cout, bho, bwo)
 }
 
 #[cfg(test)]
@@ -246,5 +392,46 @@ mod tests {
         let got = jpeg_conv_exploded(&f, &xi, 1, 1);
         let want = jpeg_conv_dcc(&f, &w, &q, 1);
         assert!(got.max_abs_diff(&want) < 1e-2);
+    }
+
+    #[test]
+    fn dense_path_matches_sparse_path() {
+        let q = qvec_flat();
+        let x = rand(&[2, 2, 32, 32], 13);
+        let w = rand(&[3, 2, 3, 3], 14);
+        let f = encode_tensor(&x, &q);
+        let xi = explode_conv(&w, &q, 1);
+        let sparse = jpeg_conv_exploded(&f, &xi, 3, 1);
+        let dense = jpeg_conv_exploded_dense(&f, &xi, 3, 1);
+        assert!(dense.max_abs_diff(&sparse) < 1e-3);
+    }
+
+    #[test]
+    fn threaded_path_is_bit_identical() {
+        let q = qvec_flat();
+        let x = rand(&[3, 2, 32, 32], 15);
+        let w = rand(&[4, 2, 3, 3], 16);
+        let f = encode_tensor(&x, &q);
+        let xi = explode_conv(&w, &q, 1);
+        let fs = SparseBlocks::from_dense(&f);
+        let one = jpeg_conv_exploded_sparse(&fs, &xi, 4, 1, 1);
+        for threads in [2, 3, 4, 7] {
+            let many = jpeg_conv_exploded_sparse(&fs, &xi, 4, 1, threads);
+            assert_eq!(one, many, "threads={threads} diverged");
+        }
+    }
+
+    #[test]
+    fn sparse_input_skips_padding_blocks() {
+        // an all-zero input must produce an all-zero output through the
+        // sparse path (no gather matrix, no border contributions)
+        let q = qvec_flat();
+        let w = rand(&[2, 1, 3, 3], 17);
+        let xi = explode_conv(&w, &q, 1);
+        let f = SparseBlocks::from_dense(&Tensor::zeros(&[1, 1, 4, 4, 64]));
+        assert_eq!(f.nnz(), 0);
+        let y = jpeg_conv_exploded_sparse(&f, &xi, 2, 1, 1);
+        assert_eq!(y.shape(), &[1, 2, 4, 4, 64]);
+        assert!(y.data().iter().all(|&v| v == 0.0));
     }
 }

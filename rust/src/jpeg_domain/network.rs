@@ -5,10 +5,10 @@
 //! only; training runs through the AOT artifacts.
 
 use crate::params::{ModelConfig, ParamSet};
-use crate::tensor::Tensor;
+use crate::tensor::{SparseBlocks, Tensor};
 
 use super::batchnorm::{jpeg_batch_norm_eval, jpeg_global_avg_pool};
-use super::conv::jpeg_conv_dcc;
+use super::conv::{explode_conv, jpeg_conv_dcc, jpeg_conv_exploded_sparse};
 use super::relu::{jpeg_relu, Method};
 
 fn bn(p: &ParamSet, prefix: &str, f: &Tensor, q: &[f32; 64]) -> Tensor {
@@ -67,6 +67,127 @@ pub fn jpeg_forward(
     f = res_block(p, "block3", &f, qvec, 2, num_freqs, method);
     let g = jpeg_global_avg_pool(&f, qvec);
     crate::nn::linear(&g, p.get("fc.w"), p.get("fc.b"))
+}
+
+/// Conv parameter names + strides in explode order (mirrors the L2
+/// `model.CONV_LAYOUT` and `runtime::Session::CONV_LAYOUT`).
+pub const EXPLODE_PLAN: [(&str, usize); 9] = [
+    ("stem.conv.w", 1),
+    ("block1.conv1.w", 1),
+    ("block1.conv2.w", 1),
+    ("block2.conv1.w", 2),
+    ("block2.conv2.w", 1),
+    ("block2.proj.w", 2),
+    ("block3.conv1.w", 2),
+    ("block3.conv2.w", 1),
+    ("block3.proj.w", 2),
+];
+
+/// Every conv's materialized exploded map (the paper's Algorithm-1
+/// precompute), consumed by the sparse gather-free forward.
+pub struct ExplodedModel {
+    pub xis: Vec<Tensor>,
+    pub couts: Vec<usize>,
+    pub strides: Vec<usize>,
+}
+
+impl ExplodedModel {
+    /// Precompute all nine maps from a parameter set (native, no PJRT).
+    pub fn precompute(p: &ParamSet, qvec: &[f32; 64]) -> ExplodedModel {
+        let mut xis = Vec::with_capacity(EXPLODE_PLAN.len());
+        let mut couts = Vec::with_capacity(EXPLODE_PLAN.len());
+        let mut strides = Vec::with_capacity(EXPLODE_PLAN.len());
+        for (name, stride) in EXPLODE_PLAN {
+            let w = p.get(name);
+            xis.push(explode_conv(w, qvec, stride));
+            couts.push(w.shape()[0]);
+            strides.push(stride);
+        }
+        ExplodedModel { xis, couts, strides }
+    }
+
+    /// Sparse gather-free conv by plan index, on already-sparse input.
+    fn conv_sparse(&self, i: usize, f: &SparseBlocks, threads: usize) -> Tensor {
+        jpeg_conv_exploded_sparse(f, &self.xis[i], self.couts[i], self.strides[i], threads)
+    }
+
+    /// Sparse gather-free conv by plan index, sparsifying dense input
+    /// first (interior activations keep their exact zeros for free).
+    fn conv(&self, i: usize, f: &Tensor, threads: usize) -> Tensor {
+        self.conv_sparse(i, &SparseBlocks::from_dense(f), threads)
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn res_block_exploded(
+    p: &ParamSet,
+    em: &ExplodedModel,
+    prefix: &str,
+    convs: (usize, usize, Option<usize>),
+    f: &Tensor,
+    q: &[f32; 64],
+    nf: usize,
+    method: Method,
+    threads: usize,
+) -> Tensor {
+    let (c1, c2, proj) = convs;
+    let mut y = em.conv(c1, f, threads);
+    y = bn(p, &format!("{prefix}.bn1"), &y, q);
+    y = jpeg_relu(&y, q, nf, method);
+    y = em.conv(c2, &y, threads);
+    y = bn(p, &format!("{prefix}.bn2"), &y, q);
+    let sc = match proj {
+        Some(i) => {
+            let s = em.conv(i, f, threads);
+            bn(p, &format!("{prefix}.projbn"), &s, q)
+        }
+        None => f.clone(),
+    };
+    jpeg_relu(&y.add(&sc), q, nf, method)
+}
+
+/// Eval forward through the precomputed exploded maps, consuming sparse
+/// block input straight from entropy decode — the serving fast path.
+///
+/// `threads` fans each conv's output rows across scoped workers
+/// (`1` = inline; results are bit-identical at any thread count).
+#[allow(clippy::too_many_arguments)]
+pub fn jpeg_forward_exploded_sparse(
+    cfg: &ModelConfig,
+    p: &ParamSet,
+    f0: &SparseBlocks,
+    em: &ExplodedModel,
+    qvec: &[f32; 64],
+    num_freqs: usize,
+    method: Method,
+    threads: usize,
+) -> Tensor {
+    assert_eq!(f0.dims().1, cfg.in_channels);
+    let mut f = em.conv_sparse(0, f0, threads);
+    f = bn(p, "stem.bn", &f, qvec);
+    f = jpeg_relu(&f, qvec, num_freqs, method);
+    f = res_block_exploded(p, em, "block1", (1, 2, None), &f, qvec, num_freqs, method, threads);
+    f = res_block_exploded(p, em, "block2", (3, 4, Some(5)), &f, qvec, num_freqs, method, threads);
+    f = res_block_exploded(p, em, "block3", (6, 7, Some(8)), &f, qvec, num_freqs, method, threads);
+    let g = jpeg_global_avg_pool(&f, qvec);
+    crate::nn::linear(&g, p.get("fc.w"), p.get("fc.b"))
+}
+
+/// Dense-input convenience wrapper over
+/// [`jpeg_forward_exploded_sparse`].
+#[allow(clippy::too_many_arguments)]
+pub fn jpeg_forward_exploded(
+    cfg: &ModelConfig,
+    p: &ParamSet,
+    coeffs: &Tensor,
+    em: &ExplodedModel,
+    qvec: &[f32; 64],
+    num_freqs: usize,
+    method: Method,
+    threads: usize,
+) -> Tensor {
+    let f0 = SparseBlocks::from_dense(coeffs);
+    jpeg_forward_exploded_sparse(cfg, p, &f0, em, qvec, num_freqs, method, threads)
 }
 
 #[cfg(test)]
@@ -128,6 +249,36 @@ mod tests {
         let l15 = jpeg_forward(&c, &p, &f, &q, 15, Method::Asm);
         let l3 = jpeg_forward(&c, &p, &f, &q, 3, Method::Asm);
         assert!(l15.max_abs_diff(&l3) > 1e-4);
+    }
+
+    #[test]
+    fn exploded_forward_matches_dcc_forward() {
+        let c = cfg();
+        let p = ParamSet::init(&c, 8);
+        let x = rand_input(&c, 2, 9);
+        let q = qvec_flat();
+        let f = encode_tensor(&x, &q);
+        let em = ExplodedModel::precompute(&p, &q);
+        let want = jpeg_forward(&c, &p, &f, &q, 15, Method::Asm);
+        let got = jpeg_forward_exploded(&c, &p, &f, &em, &q, 15, Method::Asm, 1);
+        assert!(
+            got.max_abs_diff(&want) < 1e-3,
+            "max diff {}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn exploded_forward_threaded_is_identical() {
+        let c = cfg();
+        let p = ParamSet::init(&c, 10);
+        let x = rand_input(&c, 2, 11);
+        let q = qvec_flat();
+        let f = encode_tensor(&x, &q);
+        let em = ExplodedModel::precompute(&p, &q);
+        let one = jpeg_forward_exploded(&c, &p, &f, &em, &q, 15, Method::Asm, 1);
+        let four = jpeg_forward_exploded(&c, &p, &f, &em, &q, 15, Method::Asm, 4);
+        assert_eq!(one, four);
     }
 
     #[test]

@@ -85,8 +85,10 @@ fn usage() -> ! {
           --max-wait-ms N --ckpt PATH
   eval:   --ckpt PATH --route spatial|jpeg --nf K --method asm|apx
   convert: --ckpt-in PATH --ckpt-out PATH
-  exp:    table1|fig4a|fig4b|fig4c|fig5|ablation
-          --seeds N --steps N --blocks N --freqs 1,3,5 --quality Q"
+  exp:    table1|fig4a|fig4b|fig4c|fig5|ablation|sparse
+          --seeds N --steps N --blocks N --freqs 1,3,5 --quality Q
+          sparse: --quality Q --batch N --cout N --threads N --iters N
+          (sparse runs natively, no artifacts required)"
     );
     std::process::exit(2);
 }
@@ -97,7 +99,9 @@ fn session_from(args: &Args, cfg: &Config) -> anyhow::Result<Session> {
         &cfg.str_or("run", "artifacts_dir", "artifacts"),
     ));
     let dataset = args.get("dataset", &cfg.str_or("run", "dataset", "mnist"));
-    let engine = Arc::new(Engine::new(&artifacts)?);
+    // worker threads for the native sparse paths: --threads > [run] threads > auto
+    let threads = args.usize("threads", cfg.usize_or("run", "threads", 0));
+    let engine = Arc::new(Engine::with_threads(&artifacts, threads)?);
     Session::new(engine, &dataset)
 }
 
@@ -352,6 +356,17 @@ fn cmd_exp(args: &Args, cfg: &Config) -> anyhow::Result<()> {
             let session = session_from(args, cfg)?;
             let r = bh::ablation_exploded(&session, args.usize("iters", 5))?;
             bh::throughput::print_ablation(&r);
+        }
+        "sparse" => {
+            // pure-rust sparsity ablation: no session / artifacts needed
+            let r = bh::sparse_conv_ablation(
+                args.usize("quality", 50) as u8,
+                args.usize("batch", 40),
+                args.usize("cout", 16),
+                args.usize("threads", cfg.usize_or("run", "threads", 0)),
+                args.usize("iters", 5),
+            );
+            bh::throughput::print_sparse_conv(&r);
         }
         _ => usage(),
     }

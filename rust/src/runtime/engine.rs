@@ -63,14 +63,29 @@ pub struct Engine {
     pub manifest: Manifest,
     client: xla::PjRtClient,
     cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// Worker threads for the native sparse execution paths
+    /// (`Session::forward_jpeg_exploded_native*`); resolved at
+    /// construction, see `config::resolve_threads`.
+    pub threads: usize,
 }
 
 impl Engine {
-    /// Create a CPU engine over an artifacts directory.
+    /// Create a CPU engine over an artifacts directory (auto threads).
     pub fn new(artifacts_dir: &Path) -> anyhow::Result<Engine> {
+        Self::with_threads(artifacts_dir, 0)
+    }
+
+    /// Create a CPU engine with an explicit worker-thread count for the
+    /// native sparse paths (`0` = auto).
+    pub fn with_threads(artifacts_dir: &Path, threads: usize) -> anyhow::Result<Engine> {
         let manifest = Manifest::load(artifacts_dir)?;
         let client = xla::PjRtClient::cpu()?;
-        Ok(Engine { manifest, client, cache: Mutex::new(HashMap::new()) })
+        Ok(Engine {
+            manifest,
+            client,
+            cache: Mutex::new(HashMap::new()),
+            threads: crate::config::resolve_threads(threads),
+        })
     }
 
     pub fn platform(&self) -> String {

@@ -5,9 +5,10 @@
 use std::sync::Arc;
 
 use crate::jpeg::zigzag::band_mask;
+use crate::jpeg_domain::network::{self, ExplodedModel};
 use crate::jpeg_domain::relu::Method;
 use crate::params::{ModelConfig, ParamSet};
-use crate::tensor::Tensor;
+use crate::tensor::{SparseBlocks, Tensor};
 
 use super::{Engine, Value};
 
@@ -224,6 +225,58 @@ impl Session {
         }
         let out = self.engine.run(&name, &inputs)?;
         Ok(out.into_iter().map(Value::into_tensor).collect())
+    }
+
+    /// Native precompute of every conv's exploded map — the same
+    /// Algorithm-1 step as [`Session::explode`], but pure rust (no PJRT
+    /// artifact required).
+    pub fn explode_native(&self, params: &ParamSet, qvec: &[f32; 64]) -> ExplodedModel {
+        ExplodedModel::precompute(params, qvec)
+    }
+
+    /// Native sparse serving path: gather-free exploded forward on the
+    /// engine's worker-thread budget.  Exact phi = `num_freqs`
+    /// semantics, same logits as the PJRT exploded artifact.
+    pub fn forward_jpeg_exploded_native(
+        &self,
+        params: &ParamSet,
+        em: &ExplodedModel,
+        coeffs: &Tensor,
+        qvec: &[f32; 64],
+        num_freqs: usize,
+    ) -> Tensor {
+        network::jpeg_forward_exploded(
+            &self.cfg,
+            params,
+            coeffs,
+            em,
+            qvec,
+            num_freqs,
+            Method::Asm,
+            self.engine.threads,
+        )
+    }
+
+    /// [`Session::forward_jpeg_exploded_native`] on sparse block input
+    /// straight from entropy decode (no dense intermediate).
+    pub fn forward_jpeg_exploded_native_sparse(
+        &self,
+        params: &ParamSet,
+        em: &ExplodedModel,
+        f0: &SparseBlocks,
+        qvec: &[f32; 64],
+        num_freqs: usize,
+    ) -> Tensor {
+        network::jpeg_forward_exploded_sparse(
+            &self.cfg,
+            params,
+            f0,
+            em,
+            qvec,
+            num_freqs,
+            Method::Asm,
+            self.engine.threads,
+        )
     }
 
     /// Inference through the precomputed exploded maps (ablation path).

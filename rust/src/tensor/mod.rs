@@ -7,8 +7,10 @@
 //! verify numerics without any Python.
 
 mod ops;
+mod sparse;
 
-pub use ops::{conv2d, matmul, Padding};
+pub use ops::{conv2d, matmul, matmul_tiled, Padding};
+pub use sparse::SparseBlocks;
 
 /// Dense row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]
@@ -87,6 +89,59 @@ impl Tensor {
             off = off * dim + ix;
         }
         off
+    }
+
+    /// Checked flat offset of a *leading* multi-index: `idx` addresses
+    /// the first `idx.len()` axes; the remaining axes are flattened.
+    /// Bounds are enforced unconditionally (unlike [`Tensor::offset`],
+    /// whose checks are `debug_assert` only) — this is the safe base
+    /// for the slice-level kernels.
+    fn prefix_offset(&self, idx: &[usize]) -> usize {
+        assert!(
+            idx.len() <= self.shape.len(),
+            "prefix index {:?} longer than shape {:?}",
+            idx,
+            self.shape
+        );
+        let mut off = 0;
+        for (i, &ix) in idx.iter().enumerate() {
+            let dim = self.shape[i];
+            assert!(ix < dim, "index {ix} out of bounds {dim} at axis {i}");
+            off = off * dim + ix;
+        }
+        off * self.shape[idx.len()..].iter().product::<usize>()
+    }
+
+    /// Checked contiguous view of `len` elements starting at the
+    /// leading multi-index `idx`.
+    #[inline]
+    pub fn slice_at(&self, idx: &[usize], len: usize) -> &[f32] {
+        let off = self.prefix_offset(idx);
+        assert!(
+            off + len <= self.data.len(),
+            "slice [{off}, {off}+{len}) out of bounds {}",
+            self.data.len()
+        );
+        &self.data[off..off + len]
+    }
+
+    /// Mutable counterpart of [`Tensor::slice_at`].
+    #[inline]
+    pub fn slice_at_mut(&mut self, idx: &[usize], len: usize) -> &mut [f32] {
+        let off = self.prefix_offset(idx);
+        assert!(
+            off + len <= self.data.len(),
+            "slice [{off}, {off}+{len}) out of bounds {}",
+            self.data.len()
+        );
+        &mut self.data[off..off + len]
+    }
+
+    /// Copy `src` into the checked slice at the leading multi-index
+    /// `idx` — the slice-level replacement for per-element `set` loops.
+    #[inline]
+    pub fn copy_block(&mut self, idx: &[usize], src: &[f32]) {
+        self.slice_at_mut(idx, src.len()).copy_from_slice(src);
     }
 
     #[inline]
@@ -200,6 +255,38 @@ mod tests {
         assert_eq!(t.at(&[1, 2, 3]), 5.0);
         assert_eq!(t.offset(&[1, 2, 3]), 23);
         assert_eq!(t.len(), 24);
+    }
+
+    #[test]
+    fn slice_at_reads_rows() {
+        let t = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(t.slice_at(&[1], 3), &[4.0, 5.0, 6.0]);
+        assert_eq!(t.slice_at(&[0, 2], 1), &[3.0]);
+        assert_eq!(t.slice_at(&[], 6).len(), 6);
+    }
+
+    #[test]
+    fn copy_block_writes_rows() {
+        let mut t = Tensor::zeros(&[2, 4]);
+        t.copy_block(&[1], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.at(&[1, 2]), 3.0);
+        assert_eq!(t.at(&[0, 2]), 0.0);
+        t.slice_at_mut(&[0, 1], 2).fill(7.0);
+        assert_eq!(&t.data()[1..3], &[7.0, 7.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn slice_at_checks_axis_bounds() {
+        let t = Tensor::zeros(&[2, 3]);
+        t.slice_at(&[2], 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn slice_at_checks_length() {
+        let t = Tensor::zeros(&[2, 3]);
+        t.slice_at(&[1], 4);
     }
 
     #[test]

@@ -33,6 +33,48 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     Tensor::from_vec(&[m, n], out)
 }
 
+/// Cache-tiled dense (M, K) @ (K, N) matmul.
+///
+/// Blocks over (i, k) so the active `KC x N` panel of `b` stays
+/// cache-resident while `MC` output rows accumulate against it.  Unlike
+/// [`matmul`] there is no per-element zero test: this is the straight
+/// dense kernel (branch-free inner loops vectorize better when the
+/// data really is dense), used as the measured dense baseline of the
+/// sparse exploded-conv ablation and for dense gather products.
+pub fn matmul_tiled(a: &Tensor, b: &Tensor) -> Tensor {
+    const MC: usize = 32;
+    const KC: usize = 128;
+    assert_eq!(a.shape().len(), 2);
+    assert_eq!(b.shape().len(), 2);
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    let mut k0 = 0;
+    while k0 < k {
+        let kend = (k0 + KC).min(k);
+        let mut i0 = 0;
+        while i0 < m {
+            let iend = (i0 + MC).min(m);
+            for i in i0..iend {
+                let arow = &ad[i * k..(i + 1) * k];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (kk, &av) in arow.iter().enumerate().take(kend).skip(k0) {
+                    let brow = &bd[kk * n..(kk + 1) * n];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+            i0 = iend;
+        }
+        k0 = kend;
+    }
+    Tensor::from_vec(&[m, n], out)
+}
+
 /// Padding convention shared with the L2 graphs (DESIGN.md):
 /// 3x3 stride-1 pads (1,1); 3x3 stride-2 pads (0,1); 1x1 pads (0,0).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -127,6 +169,24 @@ mod tests {
         let b = Tensor::from_vec(&[3, 2], vec![7., 8., 9., 10., 11., 12.]);
         let c = matmul(&a, &b);
         assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_tiled_matches_reference() {
+        let mut rng = crate::util::Rng::new(9);
+        let (m, k, n) = (37, 150, 41); // non-multiples of the tile sizes
+        let a = Tensor::from_vec(&[m, k], (0..m * k).map(|_| rng.normal()).collect());
+        let b = Tensor::from_vec(&[k, n], (0..k * n).map(|_| rng.normal()).collect());
+        let want = matmul(&a, &b);
+        let got = matmul_tiled(&a, &b);
+        assert!(got.max_abs_diff(&want) < 1e-3, "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn matmul_tiled_identity() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let i = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(matmul_tiled(&a, &i), a);
     }
 
     #[test]

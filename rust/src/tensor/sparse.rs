@@ -1,0 +1,267 @@
+//! Sparse block tensors: per-8x8-block CSR storage of JPEG-domain
+//! coefficients.
+//!
+//! The paper's performance argument (§5) rests on the JPEG transform
+//! domain being *sparse*: quantization zeroes most AC coefficients, and
+//! the entropy decoder hands us exactly the nonzero (zigzag index,
+//! value) runs for free.  [`SparseBlocks`] preserves that structure
+//! instead of densifying it:
+//!
+//! * blocks are stored in the same order as the dense
+//!   `(N, C, Bh, Bw, 64)` layout, so block ids are interchangeable
+//!   between the two representations;
+//! * each block is a CSR-style run of `(zigzag index, value)` pairs,
+//!   sorted by zigzag index — the natural order entropy decoding
+//!   produces ([`SparseBlocks::from_coeff_images`] builds straight from
+//!   entropy-decoded integers with the network's DC-shift + 1/255
+//!   normalization, no dense intermediate);
+//! * per-block nnz and last-nonzero cursors ([`SparseBlocks::block_nnz`]
+//!   / [`SparseBlocks::block_last_nonzero`]) expose the band structure
+//!   that the gather-free exploded-conv kernel and the ASM frequency
+//!   masks exploit.
+//!
+//! The gather-free convolution consumer lives in
+//! `crate::jpeg_domain::conv::jpeg_conv_exploded_sparse`.
+
+use crate::jpeg::codec::CoeffImage;
+
+use super::Tensor;
+
+/// Per-8x8-block CSR storage of `(N, C, Bh, Bw, 64)` coefficients.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseBlocks {
+    n: usize,
+    c: usize,
+    bh: usize,
+    bw: usize,
+    /// CSR offsets into `idx` / `val`; length `num_blocks() + 1`.
+    ptr: Vec<u32>,
+    /// Zigzag index of each stored coefficient, ascending within a block.
+    idx: Vec<u8>,
+    /// Coefficient values, parallel to `idx`.
+    val: Vec<f32>,
+}
+
+impl SparseBlocks {
+    /// Empty container for `(n, c, bh, bw)` blocks; fill with
+    /// [`SparseBlocks::push_block`] in block order.
+    pub fn with_capacity(n: usize, c: usize, bh: usize, bw: usize, nnz_hint: usize) -> Self {
+        let nblocks = n * c * bh * bw;
+        let mut ptr = Vec::with_capacity(nblocks + 1);
+        ptr.push(0);
+        SparseBlocks {
+            n,
+            c,
+            bh,
+            bw,
+            ptr,
+            idx: Vec::with_capacity(nnz_hint),
+            val: Vec::with_capacity(nnz_hint),
+        }
+    }
+
+    /// `(n, c, bh, bw)`.
+    #[inline]
+    pub fn dims(&self) -> (usize, usize, usize, usize) {
+        (self.n, self.c, self.bh, self.bw)
+    }
+
+    #[inline]
+    pub fn num_blocks(&self) -> usize {
+        self.n * self.c * self.bh * self.bw
+    }
+
+    /// Total stored (nonzero) coefficients.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.val.len()
+    }
+
+    /// Stored fraction of the dense element count, in [0, 1].
+    pub fn density(&self) -> f64 {
+        if self.num_blocks() == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.num_blocks() * 64) as f64
+    }
+
+    /// Append the next block's `(zigzag index, value)` entries.  Blocks
+    /// must arrive in dense `(N, C, Bh, Bw)` row-major order; entries
+    /// must be ascending in zigzag index.
+    pub fn push_block(&mut self, entries: impl IntoIterator<Item = (u8, f32)>) {
+        debug_assert!(self.ptr.len() <= self.num_blocks(), "too many blocks pushed");
+        let mut last: i32 = -1;
+        for (k, v) in entries {
+            assert!((k as usize) < 64, "zigzag index {k} out of range");
+            assert!(k as i32 > last, "zigzag indices must be ascending");
+            last = k as i32;
+            self.idx.push(k);
+            self.val.push(v);
+        }
+        self.ptr.push(self.val.len() as u32);
+    }
+
+    /// The `(zigzag indices, values)` run of block `bid` (dense block
+    /// order).
+    #[inline]
+    pub fn block(&self, bid: usize) -> (&[u8], &[f32]) {
+        let lo = self.ptr[bid] as usize;
+        let hi = self.ptr[bid + 1] as usize;
+        (&self.idx[lo..hi], &self.val[lo..hi])
+    }
+
+    /// Stored coefficients in block `bid`.
+    #[inline]
+    pub fn block_nnz(&self, bid: usize) -> usize {
+        (self.ptr[bid + 1] - self.ptr[bid]) as usize
+    }
+
+    /// Highest nonzero zigzag index of block `bid` (the EOB cursor);
+    /// `None` for an all-zero block.
+    #[inline]
+    pub fn block_last_nonzero(&self, bid: usize) -> Option<u8> {
+        let (idx, _) = self.block(bid);
+        idx.last().copied()
+    }
+
+    /// Sparsify a dense `(N, C, Bh, Bw, 64)` coefficient tensor,
+    /// dropping exact zeros.
+    pub fn from_dense(t: &Tensor) -> Self {
+        let s = t.shape();
+        assert_eq!(s.len(), 5, "expected (N, C, Bh, Bw, 64), got {s:?}");
+        assert_eq!(s[4], 64, "expected 64 coefficients per block, got {s:?}");
+        let (n, c, bh, bw) = (s[0], s[1], s[2], s[3]);
+        let nblocks = n * c * bh * bw;
+        let mut out = SparseBlocks::with_capacity(n, c, bh, bw, t.len() / 4);
+        let data = t.data();
+        for bid in 0..nblocks {
+            let blk = &data[bid * 64..(bid + 1) * 64];
+            out.push_block(
+                blk.iter()
+                    .enumerate()
+                    .filter(|(_, &v)| v != 0.0)
+                    .map(|(k, &v)| (k as u8, v)),
+            );
+        }
+        out
+    }
+
+    /// Densify back to `(N, C, Bh, Bw, 64)`.
+    pub fn to_dense(&self) -> Tensor {
+        let mut data = vec![0.0f32; self.num_blocks() * 64];
+        for bid in 0..self.num_blocks() {
+            let (idx, val) = self.block(bid);
+            let blk = &mut data[bid * 64..(bid + 1) * 64];
+            for (&k, &v) in idx.iter().zip(val) {
+                blk[k as usize] = v;
+            }
+        }
+        Tensor::from_vec(&[self.n, self.c, self.bh, self.bw, 64], data)
+    }
+
+    /// Build a batch directly from entropy-decoded coefficient images —
+    /// sparsity is free at decode time, no dense intermediate.
+    ///
+    /// Values carry the network normalization of
+    /// `CoeffImage::to_network_input`: `f[k] = (c[k] + [k==0] *
+    /// 1024/q0) / 255` per channel (the DC shift folds the JPEG level
+    /// shift into the [0,1] pixel convention).  All images must share
+    /// block dimensions and channel count.
+    pub fn from_coeff_images(images: &[CoeffImage]) -> Self {
+        assert!(!images.is_empty(), "empty batch");
+        const INV255: f32 = 1.0 / 255.0;
+        let (c, bh, bw) = (images[0].channels, images[0].blocks_h, images[0].blocks_w);
+        let n = images.len();
+        let mut out = SparseBlocks::with_capacity(n, c, bh, bw, n * c * bh * bw * 12);
+        for ci in images {
+            assert_eq!(
+                (ci.channels, ci.blocks_h, ci.blocks_w),
+                (c, bh, bw),
+                "ragged batch of coefficient images"
+            );
+            for ch in 0..c {
+                let dc_shift = 1024.0 / ci.qtables[ch].values[0] as f32;
+                for by in 0..bh {
+                    for bx in 0..bw {
+                        let blk = ci.block(ch, by, bx);
+                        out.push_block(blk.iter().enumerate().filter_map(|(k, &v)| {
+                            let x = if k == 0 {
+                                (v as f32 + dc_shift) * INV255
+                            } else {
+                                v as f32 * INV255
+                            };
+                            (x != 0.0).then_some((k as u8, x))
+                        }));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_dense() -> Tensor {
+        let mut t = Tensor::zeros(&[2, 1, 2, 2, 64]);
+        t.set(&[0, 0, 0, 0, 0], 1.5);
+        t.set(&[0, 0, 0, 0, 5], -2.0);
+        t.set(&[0, 0, 1, 1, 63], 0.25);
+        t.set(&[1, 0, 0, 1, 7], 3.0);
+        t
+    }
+
+    #[test]
+    fn dense_roundtrip_exact() {
+        let t = sample_dense();
+        let s = SparseBlocks::from_dense(&t);
+        assert_eq!(s.nnz(), 4);
+        assert_eq!(s.to_dense(), t);
+    }
+
+    #[test]
+    fn block_cursors() {
+        let t = sample_dense();
+        let s = SparseBlocks::from_dense(&t);
+        // block 0 = (0,0,0,0): entries at zigzag 0 and 5
+        assert_eq!(s.block_nnz(0), 2);
+        assert_eq!(s.block_last_nonzero(0), Some(5));
+        let (idx, val) = s.block(0);
+        assert_eq!(idx, &[0, 5]);
+        assert_eq!(val, &[1.5, -2.0]);
+        // block 1 = (0,0,0,1): empty
+        assert_eq!(s.block_nnz(1), 0);
+        assert_eq!(s.block_last_nonzero(1), None);
+    }
+
+    #[test]
+    fn density_counts_zeros_dropped() {
+        let t = sample_dense();
+        let s = SparseBlocks::from_dense(&t);
+        let expect = 4.0 / (8.0 * 64.0);
+        assert!((s.density() - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn push_block_ascending_enforced() {
+        let mut s = SparseBlocks::with_capacity(1, 1, 1, 1, 4);
+        s.push_block([(0u8, 1.0f32), (3, 2.0)]);
+        assert_eq!(s.block_nnz(0), 2);
+        let r = std::panic::catch_unwind(|| {
+            let mut s = SparseBlocks::with_capacity(1, 1, 1, 1, 4);
+            s.push_block([(3u8, 1.0f32), (1, 2.0)]);
+        });
+        assert!(r.is_err(), "descending zigzag order must panic");
+    }
+
+    #[test]
+    fn dims_and_counts() {
+        let s = SparseBlocks::from_dense(&Tensor::zeros(&[3, 2, 4, 4, 64]));
+        assert_eq!(s.dims(), (3, 2, 4, 4));
+        assert_eq!(s.num_blocks(), 96);
+        assert_eq!(s.nnz(), 0);
+        assert_eq!(s.density(), 0.0);
+    }
+}

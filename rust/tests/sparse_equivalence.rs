@@ -1,0 +1,187 @@
+//! Sparse execution engine equivalence + the sparsity property the perf
+//! claim rests on (paper §5: "the sparsity of the JPEG format allows
+//! for faster processing ... with little to no penalty").
+//!
+//! Everything here runs without PJRT artifacts.
+
+use jpegdomain::data::{Dataset, Split, SynthKind};
+use jpegdomain::jpeg::codec;
+use jpegdomain::jpeg_domain::conv::{
+    explode_conv, jpeg_conv_dcc, jpeg_conv_exploded, jpeg_conv_exploded_dense,
+    jpeg_conv_exploded_sparse,
+};
+use jpegdomain::jpeg_domain::network::{
+    jpeg_forward, jpeg_forward_exploded_sparse, ExplodedModel,
+};
+use jpegdomain::jpeg_domain::relu::Method;
+use jpegdomain::jpeg_domain::{encode_tensor, qvec_flat};
+use jpegdomain::params::{ModelConfig, ParamSet};
+use jpegdomain::tensor::{SparseBlocks, Tensor};
+use jpegdomain::util::Rng;
+
+fn rand(shape: &[usize], seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.normal() * 0.5).collect())
+}
+
+/// sparse == dense == dcc for one (weights, stride, qvec) combination.
+fn check_equivalence(
+    x: &Tensor,
+    w: &Tensor,
+    qvec: &[f32; 64],
+    stride: usize,
+    tol: f32,
+) {
+    let cout = w.shape()[0];
+    let f = encode_tensor(x, qvec);
+    let xi = explode_conv(w, qvec, stride);
+    let fs = SparseBlocks::from_dense(&f);
+
+    let want = jpeg_conv_dcc(&f, w, qvec, stride);
+    let sparse = jpeg_conv_exploded_sparse(&fs, &xi, cout, stride, 1);
+    let dense = jpeg_conv_exploded_dense(&f, &xi, cout, stride);
+    let default = jpeg_conv_exploded(&f, &xi, cout, stride);
+
+    assert_eq!(sparse.shape(), want.shape());
+    assert!(
+        sparse.max_abs_diff(&want) < tol,
+        "sparse vs dcc: {}",
+        sparse.max_abs_diff(&want)
+    );
+    assert!(
+        dense.max_abs_diff(&want) < tol,
+        "dense vs dcc: {}",
+        dense.max_abs_diff(&want)
+    );
+    assert_eq!(default, sparse, "default path must be the sparse path");
+}
+
+#[test]
+fn sparse_matches_dense_stride1() {
+    let x = rand(&[2, 2, 32, 32], 1);
+    let w = rand(&[3, 2, 3, 3], 2);
+    check_equivalence(&x, &w, &qvec_flat(), 1, 1e-3);
+}
+
+#[test]
+fn sparse_matches_dense_stride2() {
+    let x = rand(&[1, 2, 32, 32], 3);
+    let w = rand(&[2, 2, 3, 3], 4);
+    check_equivalence(&x, &w, &qvec_flat(), 2, 1e-3);
+}
+
+#[test]
+fn sparse_matches_dense_1x1() {
+    let x = rand(&[1, 3, 16, 16], 5);
+    let w = rand(&[4, 3, 1, 1], 6);
+    check_equivalence(&x, &w, &qvec_flat(), 1, 1e-3);
+    let w2 = rand(&[4, 3, 1, 1], 7);
+    check_equivalence(&x, &w2, &qvec_flat(), 2, 1e-3);
+}
+
+#[test]
+fn sparse_matches_dense_lossy_tables() {
+    let x = rand(&[1, 1, 16, 16], 8);
+    let w = rand(&[2, 1, 3, 3], 9);
+    for quality in [50u8, 80] {
+        let q = jpegdomain::jpeg::QuantTable::luma(quality).as_f32();
+        check_equivalence(&x, &w, &q, 1, 1e-2);
+    }
+}
+
+#[test]
+fn threaded_is_bit_identical_to_single() {
+    let x = rand(&[3, 2, 32, 32], 10);
+    let w = rand(&[4, 2, 3, 3], 11);
+    let q = qvec_flat();
+    let f = encode_tensor(&x, &q);
+    let xi = explode_conv(&w, &q, 1);
+    let fs = SparseBlocks::from_dense(&f);
+    let one = jpeg_conv_exploded_sparse(&fs, &xi, 4, 1, 1);
+    for threads in [2, 4, 8] {
+        assert_eq!(one, jpeg_conv_exploded_sparse(&fs, &xi, 4, 1, threads));
+    }
+}
+
+#[test]
+fn quality50_blocks_are_majority_zero() {
+    // the property the whole perf story depends on: at quality 50 the
+    // entropy-decoded transform domain is >= 50% zeros
+    let data = Dataset::synthetic(SynthKind::Cifar10, 2, 16, 13);
+    let files = data.jpeg_bytes(Split::Test, 50);
+    let mut zeros = 0usize;
+    let mut total = 0usize;
+    for (bytes, _) in &files {
+        let ci = codec::decode_to_coefficients(bytes).unwrap();
+        zeros += ci.coeffs.iter().filter(|&&v| v == 0).count();
+        total += ci.coeffs.len();
+    }
+    let frac = zeros as f64 / total as f64;
+    assert!(
+        frac >= 0.5,
+        "expected >= 50% zero coefficients at quality 50, got {frac:.3}"
+    );
+
+    // and SparseBlocks built from the same streams reflects it.  The DC
+    // level shift can turn a quantized-DC==0 block into one stored
+    // entry, so allow up to 1/64 slack over the raw zero fraction.
+    let cis: Vec<_> = files
+        .iter()
+        .map(|(b, _)| codec::decode_to_coefficients(b).unwrap())
+        .collect();
+    let s = SparseBlocks::from_coeff_images(&cis);
+    assert!(
+        s.density() <= (1.0 - frac) + 1.0 / 64.0 + 1e-9,
+        "sparse density {:.3} contradicts zero fraction {frac:.3}",
+        s.density()
+    );
+}
+
+#[test]
+fn from_coeff_images_matches_to_network_input() {
+    let data = Dataset::synthetic(SynthKind::Mnist, 2, 3, 14);
+    let files = data.jpeg_bytes(Split::Test, 75);
+    let cis: Vec<_> = files
+        .iter()
+        .map(|(b, _)| codec::decode_to_coefficients(b).unwrap())
+        .collect();
+    let s = SparseBlocks::from_coeff_images(&cis);
+    let dense = s.to_dense();
+    for (i, ci) in cis.iter().enumerate() {
+        let want = ci.to_network_input();
+        let got = Tensor::from_vec(
+            want.shape(),
+            dense.slice_at(&[i], want.len()).to_vec(),
+        );
+        assert!(
+            got.max_abs_diff(&want) < 1e-6,
+            "image {i}: {}",
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn exploded_network_forward_matches_dcc_network() {
+    let cfg = ModelConfig::preset("mnist").unwrap();
+    let p = ParamSet::init(&cfg, 15);
+    let data = Dataset::synthetic(SynthKind::Mnist, 2, 2, 16);
+    let files = data.jpeg_bytes(Split::Test, 50);
+    let cis: Vec<_> = files
+        .iter()
+        .map(|(b, _)| codec::decode_to_coefficients(b).unwrap())
+        .collect();
+    let qvec = cis[0].qvec(0);
+    let f0 = SparseBlocks::from_coeff_images(&cis);
+    let em = ExplodedModel::precompute(&p, &qvec);
+
+    let want = jpeg_forward(&cfg, &p, &f0.to_dense(), &qvec, 15, Method::Asm);
+    let got = jpeg_forward_exploded_sparse(&cfg, &p, &f0, &em, &qvec, 15, Method::Asm, 2);
+    assert_eq!(got.shape(), &[2, 10]);
+    assert!(
+        got.max_abs_diff(&want) < 1e-2,
+        "exploded vs dcc logits: {}",
+        got.max_abs_diff(&want)
+    );
+}
