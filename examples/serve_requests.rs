@@ -1,72 +1,55 @@
-//! Serving demo: batched JPEG classification over both pipelines.
+//! Serving demo + closed-loop load generator.
 //!
-//! Starts the coordinator's serving loop (dynamic batcher + router +
-//! PJRT worker), pumps a stream of JPEG files from concurrent client
-//! threads, and prints the latency/throughput metrics — the live
+//! Drives the native staged pipeline (entropy decode -> SparseBlocks ->
+//! sparse exploded forward; no PJRT required) with concurrent client
+//! threads over mixed-quality traffic, compares the sparse kernel
+//! against the dense Algorithm-1 baseline, adds the PJRT worker loop
+//! when artifacts are present, and writes `BENCH_PR2.json` — the live
 //! version of the Figure-5 inference comparison.
 //!
 //! Run: `cargo run --release --example serve_requests [n_requests]`
+//! Env: SR_CLIENTS (4), SR_QUALITIES (50,75,90), SR_OUT (BENCH_PR2.json),
+//!      SR_SKIP_DENSE (unset)
 
-use std::sync::Arc;
-use std::time::Duration;
-
-use jpegdomain::coordinator::router::Route;
-use jpegdomain::coordinator::server::{Server, ServerConfig};
-use jpegdomain::coordinator::BatcherConfig;
-use jpegdomain::data::{Dataset, Split, SynthKind};
+use jpegdomain::bench_harness as bh;
+use jpegdomain::serving::bench::{print_rows, report_json, run, BenchOptions};
 
 fn main() -> anyhow::Result<()> {
     let n: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
-        .unwrap_or(400);
-    let data = Dataset::synthetic(SynthKind::Mnist, 2, n, 9);
-    let files = Arc::new(data.jpeg_bytes(Split::Test, 95));
-    println!("serving {n} requests per route, 4 client threads, batch<=40/5ms");
+        .unwrap_or(200);
+    let clients: usize = std::env::var("SR_CLIENTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+    let qualities: Vec<u8> = std::env::var("SR_QUALITIES")
+        .unwrap_or_else(|_| "50,75,90".into())
+        .split(',')
+        .filter_map(|t| t.trim().parse().ok())
+        .collect();
+    let opts = BenchOptions {
+        requests: n,
+        clients,
+        qualities,
+        skip_dense: std::env::var("SR_SKIP_DENSE").is_ok(),
+        ..Default::default()
+    };
+    println!(
+        "serve_requests: {} requests, {} clients, qualities {:?}",
+        opts.requests, opts.clients, opts.qualities
+    );
 
-    for route in [Route::Spatial, Route::Jpeg] {
-        let server = Arc::new(Server::start_default(
-            "artifacts".into(),
-            "mnist".into(),
-            None,
-            0,
-            ServerConfig {
-                route,
-                batcher: BatcherConfig {
-                    max_batch: 40,
-                    max_wait: Duration::from_millis(5),
-                },
-                ..Default::default()
-            },
-        ));
-        // concurrent clients
-        let handles: Vec<_> = (0..4)
-            .map(|t| {
-                let server = server.clone();
-                let files = files.clone();
-                std::thread::spawn(move || {
-                    let mut ok = 0usize;
-                    for i in (t..files.len()).step_by(4) {
-                        if server.infer(files[i].0.clone()).is_ok() {
-                            ok += 1;
-                        }
-                    }
-                    ok
-                })
-            })
-            .collect();
-        let mut served = 0;
-        for h in handles {
-            served += h.join().expect("client thread");
-        }
-        let snap = server.metrics.snapshot();
-        println!("\nroute {route:?}: served {served}/{n}");
-        println!("  {snap}");
-        match Arc::try_unwrap(server) {
-            Ok(s) => s.shutdown(),
-            Err(_) => unreachable!("clients joined"),
-        }
-    }
-    println!("\nserve_requests OK");
+    let (rows, skipped) = run(&opts)?;
+    print_rows(&rows, &skipped);
+
+    let axpy = bh::axpy_tiling_ablation(50, 16, 16, 3);
+    bh::throughput::print_axpy(&axpy);
+
+    let doc = report_json(&opts, &rows, &skipped, &axpy);
+    let out = std::env::var("SR_OUT").unwrap_or_else(|_| "BENCH_PR2.json".into());
+    std::fs::write(&out, format!("{doc}\n"))?;
+    println!("\nwrote {out}");
+    println!("serve_requests OK");
     Ok(())
 }

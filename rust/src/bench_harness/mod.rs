@@ -11,8 +11,8 @@ pub mod throughput;
 pub use blocks::{fig4a, Fig4aRow};
 pub use model_exps::{fig4b, fig4c, table1, Fig4Row, Table1Row};
 pub use throughput::{
-    ablation_exploded, fig5, native_sparse_inference_throughput, sparse_conv_ablation,
-    AblationReport, Fig5Row, SparseConvReport,
+    ablation_exploded, axpy_tiling_ablation, fig5, native_sparse_inference_throughput,
+    sparse_conv_ablation, AblationReport, AxpyReport, Fig5Row, SparseConvReport,
 };
 
 /// Markdown-ish row printing helper.

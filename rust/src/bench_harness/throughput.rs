@@ -15,6 +15,7 @@ use crate::data::{Dataset, Split, SynthKind};
 use crate::jpeg::codec;
 use crate::jpeg_domain::conv::{
     explode_conv, jpeg_conv_dcc, jpeg_conv_exploded_dense, jpeg_conv_exploded_sparse,
+    jpeg_conv_exploded_sparse_tiled, AxpyTiling,
 };
 use crate::jpeg_domain::network::{self, ExplodedModel};
 use crate::jpeg_domain::relu::Method;
@@ -549,6 +550,93 @@ pub fn sparse_conv_ablation(
         thread_scaling: sparse_s / threaded_s,
         max_abs_diff_vs_dcc,
     }
+}
+
+/// The axpy inner-loop tiling before/after: PR-1's 4-wide unroll vs the
+/// 8-wide SIMD-width tiling, on a real entropy-decoded batch.
+#[derive(Clone, Debug)]
+pub struct AxpyReport {
+    pub quality: u8,
+    pub batch: usize,
+    pub cout: usize,
+    pub density: f64,
+    pub unroll4_blocks_per_sec: f64,
+    pub unroll8_blocks_per_sec: f64,
+    /// unroll8 / unroll4.
+    pub speedup: f64,
+    /// unroll8 output vs unroll4 output on the same inputs.
+    pub max_abs_diff: f32,
+}
+
+/// Measure the 4-wide vs 8-wide sparse axpy kernels (single thread, so
+/// the inner loop is the only variable).
+pub fn axpy_tiling_ablation(quality: u8, batch: usize, cout: usize, iters: usize) -> AxpyReport {
+    let iters = iters.max(1);
+    let batch = batch.max(1);
+    let files =
+        Dataset::synthetic(SynthKind::Cifar10, 2, batch, 29).jpeg_bytes(Split::Test, quality);
+    let cis: Vec<_> = files
+        .iter()
+        .map(|(b, _)| codec::decode_to_coefficients(b).expect("decode"))
+        .collect();
+    let f0 = SparseBlocks::from_coeff_images(&cis);
+    let (n, c, bh, bw) = f0.dims();
+    let qvec = cis[0].qvec(0);
+    let mut rng = Rng::new(37);
+    let w = Tensor::from_vec(
+        &[cout, c, 3, 3],
+        (0..cout * c * 9).map(|_| rng.normal() * 0.5).collect(),
+    );
+    let xi = explode_conv(&w, &qvec, 1);
+
+    let u4 = jpeg_conv_exploded_sparse_tiled(&f0, &xi, cout, 1, 1, AxpyTiling::Unroll4);
+    let u8w = jpeg_conv_exploded_sparse_tiled(&f0, &xi, cout, 1, 1, AxpyTiling::Unroll8);
+    let max_abs_diff = u8w.max_abs_diff(&u4);
+
+    let blocks = (n * c * bh * bw * iters) as f64;
+    let time = |tiling: AxpyTiling| {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(jpeg_conv_exploded_sparse_tiled(&f0, &xi, cout, 1, 1, tiling));
+        }
+        t0.elapsed().as_secs_f64()
+    };
+    let s4 = time(AxpyTiling::Unroll4);
+    let s8 = time(AxpyTiling::Unroll8);
+
+    AxpyReport {
+        quality,
+        batch,
+        cout,
+        density: f0.density(),
+        unroll4_blocks_per_sec: blocks / s4,
+        unroll8_blocks_per_sec: blocks / s8,
+        speedup: s4 / s8,
+        max_abs_diff,
+    }
+}
+
+pub fn print_axpy(r: &AxpyReport) {
+    super::print_table(
+        &format!(
+            "Axpy tiling ablation (quality {}, batch {}, cout {}, density {:.3})",
+            r.quality, r.batch, r.cout, r.density
+        ),
+        &["tiling", "blocks/s", "vs unroll4"],
+        &[
+            vec![
+                "unroll4 (PR 1)".into(),
+                format!("{:.0}", r.unroll4_blocks_per_sec),
+                "1.00x".into(),
+            ],
+            vec![
+                "unroll8 (default)".into(),
+                format!("{:.0}", r.unroll8_blocks_per_sec),
+                format!("{:.2}x", r.speedup),
+            ],
+        ],
+    );
+    println!("max |unroll8 - unroll4| = {:.2e}", r.max_abs_diff);
 }
 
 pub fn print_sparse_conv(r: &SparseConvReport) {

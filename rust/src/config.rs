@@ -186,6 +186,54 @@ impl RunConfig {
     }
 }
 
+/// `[serve]` settings resolved from config (CLI flags override in
+/// `main.rs`).  Mirrors `serving::PipelineConfig` plus the engine
+/// switch.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// "native" or "pjrt".
+    pub engine: String,
+    /// "sparse" or "dense" (native engine kernel).
+    pub mode: String,
+    pub decode_workers: usize,
+    pub compute_workers: usize,
+    pub queue_capacity: usize,
+    pub decoded_capacity: usize,
+    pub max_batch: usize,
+    pub max_wait_ms: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            engine: "native".to_string(),
+            mode: "sparse".to_string(),
+            decode_workers: 2,
+            compute_workers: 1,
+            queue_capacity: 256,
+            decoded_capacity: 64,
+            max_batch: 8,
+            max_wait_ms: 5,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_config(cfg: &Config) -> ServeConfig {
+        let d = ServeConfig::default();
+        ServeConfig {
+            engine: cfg.str_or("serve", "engine", &d.engine),
+            mode: cfg.str_or("serve", "mode", &d.mode),
+            decode_workers: cfg.usize_or("serve", "decode_workers", d.decode_workers),
+            compute_workers: cfg.usize_or("serve", "compute_workers", d.compute_workers),
+            queue_capacity: cfg.usize_or("serve", "queue_capacity", d.queue_capacity),
+            decoded_capacity: cfg.usize_or("serve", "decoded_capacity", d.decoded_capacity),
+            max_batch: cfg.usize_or("serve", "max_batch", d.max_batch),
+            max_wait_ms: cfg.usize_or("serve", "max_wait_ms", d.max_wait_ms),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -240,6 +288,23 @@ verbose = true
         assert_eq!(r.quality, 85);
         assert_eq!(r.seed, 3);
         assert_eq!(r.threads, 0, "threads defaults to auto");
+    }
+
+    #[test]
+    fn serve_config_defaults_and_overrides() {
+        let d = ServeConfig::from_config(&Config::default());
+        assert_eq!(d.engine, "native");
+        assert_eq!(d.mode, "sparse");
+        assert_eq!(d.queue_capacity, 256);
+        let c = Config::parse(
+            "[serve]\nengine = \"pjrt\"\nqueue_capacity = 8\nmax_batch = 2\n",
+        )
+        .unwrap();
+        let s = ServeConfig::from_config(&c);
+        assert_eq!(s.engine, "pjrt");
+        assert_eq!(s.queue_capacity, 8);
+        assert_eq!(s.max_batch, 2);
+        assert_eq!(s.decode_workers, 2, "untouched keys keep defaults");
     }
 
     #[test]

@@ -1,11 +1,15 @@
 //! Dynamic batcher: coalesce requests into compiled batch shapes.
 //!
 //! Size-or-deadline policy (the standard serving tradeoff): a batch is
-//! released when it reaches `max_batch` items or the oldest item has
-//! waited `max_wait`.  Generic over the item type so the serving path
-//! and tests can use it with plain values.
+//! released when it reaches `max_batch` items or the *oldest* item has
+//! waited `max_wait` — including time it spent queued in the channel
+//! before the batcher picked it up (see
+//! [`DynamicBatcher::with_enqueue_time`]).  `max_wait == 0` means
+//! "never coalesce": every batch is a single item, released
+//! immediately.  Generic over the item type so the serving path and
+//! tests can use it with plain values.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::time::{Duration, Instant};
 
 /// Batching policy.
@@ -25,12 +29,25 @@ impl Default for BatcherConfig {
 pub struct DynamicBatcher<T> {
     rx: Receiver<T>,
     cfg: BatcherConfig,
+    /// When set, returns an item's original enqueue time so the wait
+    /// budget is measured from the oldest *queued* item, not from when
+    /// the batcher happened to pick it up.
+    enqueue_time: Option<Box<dyn Fn(&T) -> Instant + Send>>,
 }
 
 impl<T> DynamicBatcher<T> {
     pub fn new(rx: Receiver<T>, cfg: BatcherConfig) -> Self {
         assert!(cfg.max_batch > 0);
-        DynamicBatcher { rx, cfg }
+        DynamicBatcher { rx, cfg, enqueue_time: None }
+    }
+
+    /// Measure the deadline from each item's own enqueue timestamp.
+    pub fn with_enqueue_time(
+        mut self,
+        f: impl Fn(&T) -> Instant + Send + 'static,
+    ) -> Self {
+        self.enqueue_time = Some(Box::new(f));
+        self
     }
 
     /// Block for the next batch.  Returns `None` when the channel is
@@ -41,12 +58,31 @@ impl<T> DynamicBatcher<T> {
             Ok(v) => v,
             Err(_) => return None,
         };
+        if self.cfg.max_wait.is_zero() || self.cfg.max_batch == 1 {
+            // never coalesce: single-item batches, no timed waiting
+            return Some(vec![first]);
+        }
+        // the wait budget runs from the oldest item's enqueue time; the
+        // channel is FIFO, so that is the first item
+        let t0 = self
+            .enqueue_time
+            .as_ref()
+            .map(|f| f(&first))
+            .unwrap_or_else(Instant::now);
+        let deadline = t0 + self.cfg.max_wait;
         let mut batch = vec![first];
-        let deadline = Instant::now() + self.cfg.max_wait;
         while batch.len() < self.cfg.max_batch {
             let now = Instant::now();
             if now >= deadline {
-                break;
+                // budget already spent in the queue: take whatever is
+                // ready without waiting further
+                match self.rx.try_recv() {
+                    Ok(v) => {
+                        batch.push(v);
+                        continue;
+                    }
+                    Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                }
             }
             match self.rx.recv_timeout(deadline - now) {
                 Ok(v) => batch.push(v),
@@ -115,6 +151,63 @@ mod tests {
         );
         assert_eq!(b.next_batch().unwrap(), vec![7, 8]);
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn zero_wait_never_coalesces() {
+        let (tx, rx) = channel();
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        let b = DynamicBatcher::new(
+            rx,
+            BatcherConfig { max_batch: 40, max_wait: Duration::ZERO },
+        );
+        for i in 0..5 {
+            assert_eq!(b.next_batch().unwrap(), vec![i], "single-item batches");
+        }
+        drop(tx);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn deadline_counts_queue_time_of_oldest_item() {
+        // items that already waited past the budget in the channel are
+        // released immediately (with whatever else is queued), instead
+        // of the batcher restarting the clock on pickup
+        let (tx, rx) = channel();
+        let stamped = Instant::now() - Duration::from_millis(200);
+        tx.send((stamped, 1u32)).unwrap();
+        tx.send((stamped, 2)).unwrap();
+        let b = DynamicBatcher::new(
+            rx,
+            BatcherConfig { max_batch: 40, max_wait: Duration::from_millis(50) },
+        )
+        .with_enqueue_time(|&(t, _)| t);
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 2, "drains already-queued items");
+        assert!(
+            t0.elapsed() < Duration::from_millis(40),
+            "must not wait a fresh max_wait: {:?}",
+            t0.elapsed()
+        );
+        drop(tx);
+    }
+
+    #[test]
+    fn fresh_item_still_gets_full_budget() {
+        let (tx, rx) = channel();
+        tx.send((Instant::now(), 7u32)).unwrap();
+        let b = DynamicBatcher::new(
+            rx,
+            BatcherConfig { max_batch: 40, max_wait: Duration::from_millis(20) },
+        )
+        .with_enqueue_time(|&(t, _)| t);
+        let t0 = Instant::now();
+        assert_eq!(b.next_batch().unwrap().len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(10), "{:?}", t0.elapsed());
+        drop(tx);
     }
 
     #[test]

@@ -6,7 +6,10 @@
 //! full decompression -> pixel network; jpeg = entropy decode only ->
 //! coefficient network); the [`batcher`] coalesces requests into the
 //! compiled batch shapes; [`metrics`] tracks latency/throughput — the
-//! quantities Figure 5 reports.
+//! quantities Figure 5 reports.  The [`server::Server`] facade also
+//! fronts the native staged pipeline in [`crate::serving`]
+//! (`--engine native`), which serves the same requests with no PJRT
+//! artifacts at all.
 //!
 //! The training side ([`training`]) drives the train-step artifacts with
 //! synthetic data batches, logging the loss curve and checkpointing

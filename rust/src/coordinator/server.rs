@@ -1,10 +1,16 @@
-//! The serving loop: requests -> dynamic batcher -> route decode ->
-//! PJRT forward -> responses, with metrics.
+//! The serving facade: one `Server` type over two engines.
 //!
-//! One worker thread owns the session and pulls batches; callers submit
-//! JPEG bytes and receive logits over a oneshot-style channel.  This is
-//! the harness behind the Fig-5 inference throughput comparison and the
-//! `serve` CLI subcommand.
+//! * **pjrt** — the original worker loop: requests -> dynamic batcher
+//!   -> route decode -> PJRT forward -> responses.  One worker thread
+//!   owns the session and pulls batches.
+//! * **native** — the staged pure-rust pipeline in [`crate::serving`]
+//!   (entropy decode -> `SparseBlocks` -> exploded sparse forward), no
+//!   artifacts or PJRT backend required.
+//!
+//! Callers submit JPEG bytes and receive logits over a oneshot-style
+//! channel either way; `Server::metrics` is the shared aggregate
+//! surface.  This is the harness behind the Fig-5 inference throughput
+//! comparison, the `serve` CLI subcommand and `serve bench`.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -14,6 +20,7 @@ use std::time::{Duration, Instant};
 use crate::jpeg_domain::relu::Method;
 use crate::params::ParamSet;
 use crate::runtime::Session;
+use crate::serving::{NativeEngine, NativePipeline, PipelineConfig};
 use crate::tensor::Tensor;
 
 use super::batcher::{BatcherConfig, DynamicBatcher};
@@ -55,15 +62,24 @@ impl Default for ServerConfig {
     }
 }
 
-/// A running server: submit handle + worker thread + metrics.
+/// A running server: submit handle + engine backend + metrics.
 pub struct Server {
-    tx: Option<Sender<InferRequest>>,
-    worker: Option<JoinHandle<()>>,
+    inner: Inner,
     pub metrics: Arc<Metrics>,
 }
 
+enum Inner {
+    Pjrt {
+        tx: Option<Sender<InferRequest>>,
+        worker: Option<JoinHandle<()>>,
+    },
+    Native {
+        pipeline: Option<NativePipeline>,
+    },
+}
+
 impl Server {
-    /// Spawn the worker thread.  The PJRT client is `Rc`-based (not
+    /// Spawn the PJRT worker thread.  The PJRT client is `Rc`-based (not
     /// `Send`), so the worker constructs its own `Session` via the
     /// factory; the convenience `start_default` builds one from an
     /// artifacts dir + config name.
@@ -84,7 +100,27 @@ impl Server {
             };
             Self::worker_loop(session, params, cfg, rx, m);
         });
-        Server { tx: Some(tx), worker: Some(worker), metrics }
+        Server {
+            inner: Inner::Pjrt { tx: Some(tx), worker: Some(worker) },
+            metrics,
+        }
+    }
+
+    /// Start the native staged pipeline behind the same `Server` facade
+    /// (`serve --engine native`): no artifacts, no PJRT.
+    pub fn start_native(engine: NativeEngine, cfg: PipelineConfig) -> Server {
+        let pipeline = NativePipeline::start(engine, cfg);
+        let metrics = pipeline.aggregate().clone();
+        Server { inner: Inner::Native { pipeline: Some(pipeline) }, metrics }
+    }
+
+    /// The native pipeline behind this server, when running natively
+    /// (per-stage metrics, warm-up).
+    pub fn pipeline(&self) -> Option<&NativePipeline> {
+        match &self.inner {
+            Inner::Native { pipeline } => pipeline.as_ref(),
+            Inner::Pjrt { .. } => None,
+        }
     }
 
     /// Start a server over an artifacts directory, a model config name
@@ -117,7 +153,9 @@ impl Server {
         rx: Receiver<InferRequest>,
         metrics: Arc<Metrics>,
     ) {
-        let batcher = DynamicBatcher::new(rx, cfg.batcher);
+        // deadline budget runs from each request's submit time
+        let batcher = DynamicBatcher::new(rx, cfg.batcher)
+            .with_enqueue_time(|r: &InferRequest| r.submitted);
         let router = Router::new(cfg.route);
         while let Some(batch) = batcher.next_batch() {
             metrics.record_batch(batch.len());
@@ -153,18 +191,8 @@ impl Server {
             return;
         }
         let x = Router::stack(&prepared);
-        let result = match cfg.route {
-            Route::Spatial => session.forward_spatial(params, &x),
-            // exact setting -> the fused serving fast path (identical
-            // function, one XLA GEMM decode instead of per-layer domain
-            // ops; EXPERIMENTS.md §Perf)
-            Route::Jpeg if cfg.num_freqs == 15 && cfg.method == Method::Asm => {
-                session.forward_jpeg_fused(params, &x, &qvec)
-            }
-            Route::Jpeg => {
-                session.forward_jpeg(params, &x, &qvec, cfg.num_freqs, cfg.method)
-            }
-        };
+        let result =
+            session.forward_route(params, cfg.route, &x, &qvec, cfg.num_freqs, cfg.method);
         match result {
             Ok(logits) => {
                 let classes = logits.shape()[1];
@@ -188,16 +216,32 @@ impl Server {
         }
     }
 
-    /// Submit a request; returns the receiver for the response.
+    /// Submit a request; returns the receiver for the response.  On the
+    /// native engine an admission rejection (queue full) is delivered
+    /// through the receiver as a typed [`crate::serving::ServeError`].
     pub fn submit(&self, jpeg_bytes: Vec<u8>) -> Receiver<anyhow::Result<InferResponse>> {
-        let (reply, rx) = channel();
-        let req = InferRequest { jpeg_bytes, submitted: Instant::now(), reply };
-        self.tx
-            .as_ref()
-            .expect("server running")
-            .send(req)
-            .expect("worker alive");
-        rx
+        match &self.inner {
+            Inner::Pjrt { tx, .. } => {
+                let (reply, rx) = channel();
+                let req = InferRequest { jpeg_bytes, submitted: Instant::now(), reply };
+                tx.as_ref()
+                    .expect("server running")
+                    .send(req)
+                    .expect("worker alive");
+                rx
+            }
+            Inner::Native { pipeline } => {
+                let p = pipeline.as_ref().expect("server running");
+                match p.try_submit(jpeg_bytes) {
+                    Ok(rx) => rx,
+                    Err(e) => {
+                        let (reply, rx) = channel();
+                        let _ = reply.send(Err(anyhow::Error::new(e)));
+                        rx
+                    }
+                }
+            }
+        }
     }
 
     /// Blocking convenience: submit and wait.
@@ -207,21 +251,31 @@ impl Server {
             .map_err(|_| anyhow::anyhow!("server shut down"))?
     }
 
-    /// Graceful shutdown: drain, then join the worker.
+    /// Graceful shutdown: drain, then join the worker(s).
     pub fn shutdown(mut self) {
-        drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        match &mut self.inner {
+            Inner::Pjrt { tx, worker } => {
+                drop(tx.take());
+                if let Some(w) = worker.take() {
+                    let _ = w.join();
+                }
+            }
+            Inner::Native { pipeline } => {
+                if let Some(p) = pipeline.take() {
+                    p.shutdown();
+                }
+            }
         }
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.stop();
     }
 }
 

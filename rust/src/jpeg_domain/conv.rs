@@ -178,6 +178,89 @@ fn rows_to_coeff_tensor(rows: &[f32], n: usize, cout: usize, bho: usize, bwo: us
     Tensor::from_vec(&[n, cout, bho, bwo, 64], res)
 }
 
+/// Inner-loop tiling width of the sparse axpy kernel.
+///
+/// The accumulation `y_row += sum_t v_t * Xi[k_t, :]` is tiled so each
+/// pass over the output row consumes several nonzeros at once (more ILP
+/// / SIMD lanes per memory traversal of `orow`).  `Unroll8` is the
+/// default; `Unroll4` (the PR-1 kernel) is kept so before/after stays a
+/// measured ablation (`bench_harness::throughput::axpy_tiling_ablation`,
+/// recorded in `BENCH_PR2.json`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AxpyTiling {
+    Unroll4,
+    Unroll8,
+}
+
+/// 4-wide accumulation: one pass over `orow` per 4 nonzeros.
+#[inline]
+fn axpy_unroll4(orow: &mut [f32], xd: &[f32], xw: usize, base: usize, ks: &[u8], vs: &[f32]) {
+    let mut t = 0;
+    while t + 4 <= ks.len() {
+        let x0 = &xd[(base + ks[t] as usize) * xw..][..xw];
+        let x1 = &xd[(base + ks[t + 1] as usize) * xw..][..xw];
+        let x2 = &xd[(base + ks[t + 2] as usize) * xw..][..xw];
+        let x3 = &xd[(base + ks[t + 3] as usize) * xw..][..xw];
+        let (v0, v1, v2, v3) = (vs[t], vs[t + 1], vs[t + 2], vs[t + 3]);
+        for (o, (((&a0, &a1), &a2), &a3)) in orow
+            .iter_mut()
+            .zip(x0.iter().zip(x1).zip(x2).zip(x3))
+        {
+            *o += v0 * a0 + v1 * a1 + v2 * a2 + v3 * a3;
+        }
+        t += 4;
+    }
+    axpy_tail(orow, xd, xw, base, ks, vs, t);
+}
+
+/// 8-wide accumulation: one pass over `orow` per 8 nonzeros (SIMD-width
+/// tiling of the axpy inner loop; at quality 50 most blocks store 4-16
+/// nonzeros, so a block is usually one or two passes).
+#[inline]
+fn axpy_unroll8(orow: &mut [f32], xd: &[f32], xw: usize, base: usize, ks: &[u8], vs: &[f32]) {
+    let mut t = 0;
+    while t + 8 <= ks.len() {
+        let x0 = &xd[(base + ks[t] as usize) * xw..][..xw];
+        let x1 = &xd[(base + ks[t + 1] as usize) * xw..][..xw];
+        let x2 = &xd[(base + ks[t + 2] as usize) * xw..][..xw];
+        let x3 = &xd[(base + ks[t + 3] as usize) * xw..][..xw];
+        let x4 = &xd[(base + ks[t + 4] as usize) * xw..][..xw];
+        let x5 = &xd[(base + ks[t + 5] as usize) * xw..][..xw];
+        let x6 = &xd[(base + ks[t + 6] as usize) * xw..][..xw];
+        let x7 = &xd[(base + ks[t + 7] as usize) * xw..][..xw];
+        let (v0, v1, v2, v3) = (vs[t], vs[t + 1], vs[t + 2], vs[t + 3]);
+        let (v4, v5, v6, v7) = (vs[t + 4], vs[t + 5], vs[t + 6], vs[t + 7]);
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o += v0 * x0[j] + v1 * x1[j] + v2 * x2[j] + v3 * x3[j]
+                + v4 * x4[j] + v5 * x5[j] + v6 * x6[j] + v7 * x7[j];
+        }
+        t += 8;
+    }
+    // remainder (< 8 nonzeros): the 4-wide kernel handles its own tail
+    axpy_unroll4(orow, xd, xw, base, &ks[t..], &vs[t..]);
+}
+
+/// Scalar tail shared by both tilings.
+#[inline]
+fn axpy_tail(
+    orow: &mut [f32],
+    xd: &[f32],
+    xw: usize,
+    base: usize,
+    ks: &[u8],
+    vs: &[f32],
+    mut t: usize,
+) {
+    while t < ks.len() {
+        let v = vs[t];
+        let xrow = &xd[(base + ks[t] as usize) * xw..][..xw];
+        for (o, &x) in orow.iter_mut().zip(xrow) {
+            *o += v * x;
+        }
+        t += 1;
+    }
+}
+
 /// Gather-free kernel core: compute output rows `[r0, r0 + out.len() /
 /// (cout*64))` into `out`, walking only stored nonzeros of each 3x3
 /// block neighborhood.  `out` must be zeroed, row-major `(rows,
@@ -189,6 +272,7 @@ fn sparse_rows_into(
     stride: usize,
     r0: usize,
     out: &mut [f32],
+    tiling: AxpyTiling,
 ) {
     let (_, c, bh, bw) = f.dims();
     let (bho, bwo) = out_blocks(bh, bw, stride);
@@ -210,29 +294,9 @@ fn sparse_rows_into(
                 let bid = ((b * c + ci) * bh + iy) * bw + ix;
                 let (ks, vs) = f.block(bid);
                 let base = (delta * c + ci) * 64;
-                // 4-wide accumulation: one pass over orow per 4 nonzeros
-                let mut t = 0;
-                while t + 4 <= ks.len() {
-                    let x0 = &xd[(base + ks[t] as usize) * xw..][..xw];
-                    let x1 = &xd[(base + ks[t + 1] as usize) * xw..][..xw];
-                    let x2 = &xd[(base + ks[t + 2] as usize) * xw..][..xw];
-                    let x3 = &xd[(base + ks[t + 3] as usize) * xw..][..xw];
-                    let (v0, v1, v2, v3) = (vs[t], vs[t + 1], vs[t + 2], vs[t + 3]);
-                    for (o, (((&a0, &a1), &a2), &a3)) in orow
-                        .iter_mut()
-                        .zip(x0.iter().zip(x1).zip(x2).zip(x3))
-                    {
-                        *o += v0 * a0 + v1 * a1 + v2 * a2 + v3 * a3;
-                    }
-                    t += 4;
-                }
-                while t < ks.len() {
-                    let v = vs[t];
-                    let xrow = &xd[(base + ks[t] as usize) * xw..][..xw];
-                    for (o, &x) in orow.iter_mut().zip(xrow) {
-                        *o += v * x;
-                    }
-                    t += 1;
+                match tiling {
+                    AxpyTiling::Unroll4 => axpy_unroll4(orow, xd, xw, base, ks, vs),
+                    AxpyTiling::Unroll8 => axpy_unroll8(orow, xd, xw, base, ks, vs),
                 }
             }
         }
@@ -253,6 +317,19 @@ pub fn jpeg_conv_exploded_sparse(
     stride: usize,
     threads: usize,
 ) -> Tensor {
+    jpeg_conv_exploded_sparse_tiled(f, xi, cout, stride, threads, AxpyTiling::Unroll8)
+}
+
+/// [`jpeg_conv_exploded_sparse`] with an explicit inner-loop tiling —
+/// the bench knob behind the unroll-4 vs unroll-8 ablation.
+pub fn jpeg_conv_exploded_sparse_tiled(
+    f: &SparseBlocks,
+    xi: &Tensor,
+    cout: usize,
+    stride: usize,
+    threads: usize,
+    tiling: AxpyTiling,
+) -> Tensor {
     let (n, _, bh, bw) = f.dims();
     let (bho, bwo) = out_blocks(bh, bw, stride);
     let rows = n * bho * bwo;
@@ -260,12 +337,12 @@ pub fn jpeg_conv_exploded_sparse(
     let mut out = vec![0.0f32; rows * xw];
     let threads = threads.max(1).min(rows.max(1));
     if threads <= 1 {
-        sparse_rows_into(f, xi, cout, stride, 0, &mut out);
+        sparse_rows_into(f, xi, cout, stride, 0, &mut out, tiling);
     } else {
         let chunk = rows.div_ceil(threads);
         std::thread::scope(|s| {
             for (i, buf) in out.chunks_mut(chunk * xw).enumerate() {
-                s.spawn(move || sparse_rows_into(f, xi, cout, stride, i * chunk, buf));
+                s.spawn(move || sparse_rows_into(f, xi, cout, stride, i * chunk, buf, tiling));
             }
         });
     }
@@ -419,6 +496,24 @@ mod tests {
             let many = jpeg_conv_exploded_sparse(&fs, &xi, 4, 1, threads);
             assert_eq!(one, many, "threads={threads} diverged");
         }
+    }
+
+    #[test]
+    fn unroll8_matches_unroll4() {
+        // tiling only reorders the per-pass accumulation; results must
+        // agree to float tolerance on a real lossy-table input
+        let q = crate::jpeg::QuantTable::luma(50).as_f32();
+        let x = rand(&[2, 2, 32, 32], 18);
+        let w = rand(&[3, 2, 3, 3], 19);
+        let f = encode_tensor(&x, &q);
+        let xi = explode_conv(&w, &q, 1);
+        let fs = SparseBlocks::from_dense(&f);
+        let u4 = jpeg_conv_exploded_sparse_tiled(&fs, &xi, 3, 1, 1, AxpyTiling::Unroll4);
+        let u8w = jpeg_conv_exploded_sparse_tiled(&fs, &xi, 3, 1, 1, AxpyTiling::Unroll8);
+        assert_eq!(u4.shape(), u8w.shape());
+        assert!(u4.max_abs_diff(&u8w) < 1e-4, "{}", u4.max_abs_diff(&u8w));
+        // and the default path is the 8-wide kernel
+        assert_eq!(jpeg_conv_exploded_sparse(&fs, &xi, 3, 1, 1), u8w);
     }
 
     #[test]

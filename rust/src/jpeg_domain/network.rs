@@ -8,7 +8,9 @@ use crate::params::{ModelConfig, ParamSet};
 use crate::tensor::{SparseBlocks, Tensor};
 
 use super::batchnorm::{jpeg_batch_norm_eval, jpeg_global_avg_pool};
-use super::conv::{explode_conv, jpeg_conv_dcc, jpeg_conv_exploded_sparse};
+use super::conv::{
+    explode_conv, jpeg_conv_dcc, jpeg_conv_exploded_dense, jpeg_conv_exploded_sparse,
+};
 use super::relu::{jpeg_relu, Method};
 
 fn bn(p: &ParamSet, prefix: &str, f: &Tensor, q: &[f32; 64]) -> Tensor {
@@ -116,34 +118,58 @@ impl ExplodedModel {
     fn conv(&self, i: usize, f: &Tensor, threads: usize) -> Tensor {
         self.conv_sparse(i, &SparseBlocks::from_dense(f), threads)
     }
+
+    /// Algorithm-1 dense conv by plan index (neighborhood gather + tiled
+    /// matmul) — the dense-kernel ablation counterpart of `conv`.
+    fn conv_dense(&self, i: usize, f: &Tensor) -> Tensor {
+        jpeg_conv_exploded_dense(f, &self.xis[i], self.couts[i], self.strides[i])
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
 fn res_block_exploded(
     p: &ParamSet,
-    em: &ExplodedModel,
     prefix: &str,
     convs: (usize, usize, Option<usize>),
     f: &Tensor,
     q: &[f32; 64],
     nf: usize,
     method: Method,
-    threads: usize,
+    conv: &dyn Fn(usize, &Tensor) -> Tensor,
 ) -> Tensor {
     let (c1, c2, proj) = convs;
-    let mut y = em.conv(c1, f, threads);
+    let mut y = conv(c1, f);
     y = bn(p, &format!("{prefix}.bn1"), &y, q);
     y = jpeg_relu(&y, q, nf, method);
-    y = em.conv(c2, &y, threads);
+    y = conv(c2, &y);
     y = bn(p, &format!("{prefix}.bn2"), &y, q);
     let sc = match proj {
         Some(i) => {
-            let s = em.conv(i, f, threads);
+            let s = conv(i, f);
             bn(p, &format!("{prefix}.projbn"), &s, q)
         }
         None => f.clone(),
     };
     jpeg_relu(&y.add(&sc), q, nf, method)
+}
+
+/// Shared tail of the exploded forwards: stem-conv output -> logits,
+/// with interior convs applied through `conv` (sparse or dense kernel).
+fn exploded_tail(
+    p: &ParamSet,
+    stem_out: Tensor,
+    qvec: &[f32; 64],
+    num_freqs: usize,
+    method: Method,
+    conv: &dyn Fn(usize, &Tensor) -> Tensor,
+) -> Tensor {
+    let mut f = bn(p, "stem.bn", &stem_out, qvec);
+    f = jpeg_relu(&f, qvec, num_freqs, method);
+    f = res_block_exploded(p, "block1", (1, 2, None), &f, qvec, num_freqs, method, conv);
+    f = res_block_exploded(p, "block2", (3, 4, Some(5)), &f, qvec, num_freqs, method, conv);
+    f = res_block_exploded(p, "block3", (6, 7, Some(8)), &f, qvec, num_freqs, method, conv);
+    let g = jpeg_global_avg_pool(&f, qvec);
+    crate::nn::linear(&g, p.get("fc.w"), p.get("fc.b"))
 }
 
 /// Eval forward through the precomputed exploded maps, consuming sparse
@@ -163,14 +189,26 @@ pub fn jpeg_forward_exploded_sparse(
     threads: usize,
 ) -> Tensor {
     assert_eq!(f0.dims().1, cfg.in_channels);
-    let mut f = em.conv_sparse(0, f0, threads);
-    f = bn(p, "stem.bn", &f, qvec);
-    f = jpeg_relu(&f, qvec, num_freqs, method);
-    f = res_block_exploded(p, em, "block1", (1, 2, None), &f, qvec, num_freqs, method, threads);
-    f = res_block_exploded(p, em, "block2", (3, 4, Some(5)), &f, qvec, num_freqs, method, threads);
-    f = res_block_exploded(p, em, "block3", (6, 7, Some(8)), &f, qvec, num_freqs, method, threads);
-    let g = jpeg_global_avg_pool(&f, qvec);
-    crate::nn::linear(&g, p.get("fc.w"), p.get("fc.b"))
+    let stem = em.conv_sparse(0, f0, threads);
+    exploded_tail(p, stem, qvec, num_freqs, method, &|i, t| em.conv(i, t, threads))
+}
+
+/// Eval forward through the precomputed exploded maps with the dense
+/// Algorithm-1 kernel at every conv — the measured dense baseline the
+/// serving bench compares the sparse pipeline against (`--mode dense`).
+#[allow(clippy::too_many_arguments)]
+pub fn jpeg_forward_exploded_dense_kernel(
+    cfg: &ModelConfig,
+    p: &ParamSet,
+    coeffs: &Tensor,
+    em: &ExplodedModel,
+    qvec: &[f32; 64],
+    num_freqs: usize,
+    method: Method,
+) -> Tensor {
+    assert_eq!(coeffs.shape()[1], cfg.in_channels);
+    let stem = em.conv_dense(0, coeffs);
+    exploded_tail(p, stem, qvec, num_freqs, method, &|i, t| em.conv_dense(i, t))
 }
 
 /// Dense-input convenience wrapper over
@@ -279,6 +317,23 @@ mod tests {
         let one = jpeg_forward_exploded(&c, &p, &f, &em, &q, 15, Method::Asm, 1);
         let four = jpeg_forward_exploded(&c, &p, &f, &em, &q, 15, Method::Asm, 4);
         assert_eq!(one, four);
+    }
+
+    #[test]
+    fn dense_kernel_forward_matches_sparse() {
+        let c = cfg();
+        let p = ParamSet::init(&c, 12);
+        let x = rand_input(&c, 2, 13);
+        let q = qvec_flat();
+        let f = encode_tensor(&x, &q);
+        let em = ExplodedModel::precompute(&p, &q);
+        let sparse = jpeg_forward_exploded(&c, &p, &f, &em, &q, 15, Method::Asm, 1);
+        let dense = jpeg_forward_exploded_dense_kernel(&c, &p, &f, &em, &q, 15, Method::Asm);
+        assert!(
+            dense.max_abs_diff(&sparse) < 1e-3,
+            "dense-kernel vs sparse logits: {}",
+            dense.max_abs_diff(&sparse)
+        );
     }
 
     #[test]

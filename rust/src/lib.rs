@@ -30,6 +30,7 @@ pub mod json;
 pub mod nn;
 pub mod params;
 pub mod runtime;
+pub mod serving;
 pub mod tensor;
 pub mod util;
 

@@ -4,6 +4,9 @@
 //!   info                       artifact + platform summary
 //!   train                      run the training coordinator
 //!   serve                      start the serving loop on synthetic requests
+//!                              (--engine native = pure-rust sparse pipeline,
+//!                               --engine pjrt = AOT artifacts); `serve bench`
+//!                              runs the closed-loop load generator
 //!   eval                       evaluate a checkpoint through either pipeline
 //!   convert                    spatial -> JPEG model conversion (paper §4.6)
 //!   exp <table1|fig4a|fig4b|fig4c|fig5|ablation>   regenerate paper results
@@ -17,15 +20,16 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use jpegdomain::bench_harness as bh;
-use jpegdomain::config::Config;
+use jpegdomain::config::{Config, ServeConfig};
 use jpegdomain::coordinator::router::Route;
-use jpegdomain::coordinator::server::{Server, ServerConfig};
+use jpegdomain::coordinator::server::{InferResponse, Server, ServerConfig};
 use jpegdomain::coordinator::training::{TrainConfig, TrainDomain, Trainer};
 use jpegdomain::coordinator::BatcherConfig;
 use jpegdomain::data::{Dataset, Split, SynthKind};
 use jpegdomain::jpeg_domain::relu::Method;
 use jpegdomain::params::ParamSet;
 use jpegdomain::runtime::{Engine, Session};
+use jpegdomain::serving::{self, EngineKind, NativeEngine, NativeMode, PipelineConfig};
 
 struct Args {
     positional: Vec<String>,
@@ -81,8 +85,14 @@ fn usage() -> ! {
   common: --artifacts DIR --dataset mnist|cifar10|cifar100 --config FILE
   train:  --domain spatial|jpeg --steps N --lr F --nf 1..15 --method asm|apx
           --ckpt PATH --train-size N --test-size N --verbose
-  serve:  --route spatial|jpeg --requests N --quality Q --max-batch N
-          --max-wait-ms N --ckpt PATH
+  serve:  --engine native|pjrt (default native) --requests N --quality Q
+          --ckpt PATH --window N (in-flight request window, default 32)
+          native: --mode sparse|dense --decode-workers N --compute-workers N
+                  --queue-cap N --decoded-cap N --max-batch N --threads N
+          pjrt:   --route spatial|jpeg --max-batch N --max-wait-ms N
+  serve bench: closed-loop load generator -> BENCH_PR2.json
+          --requests N --clients N --qualities 50,75,90 --skip-dense
+          --out FILE (native-sparse vs native-dense vs pjrt-if-present)
   eval:   --ckpt PATH --route spatial|jpeg --nf K --method asm|apx
   convert: --ckpt-in PATH --ckpt-out PATH
   exp:    table1|fig4a|fig4b|fig4c|fig5|ablation|sparse
@@ -176,48 +186,172 @@ fn cmd_train(args: &Args, cfg: &Config) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn pipeline_config_from(args: &Args, sc: &ServeConfig) -> PipelineConfig {
+    PipelineConfig {
+        decode_workers: args.usize("decode-workers", sc.decode_workers),
+        compute_workers: args.usize("compute-workers", sc.compute_workers),
+        queue_capacity: args.usize("queue-cap", sc.queue_capacity),
+        decoded_capacity: args.usize("decoded-cap", sc.decoded_capacity),
+        max_batch: args.usize("max-batch", sc.max_batch),
+    }
+}
+
 fn cmd_serve(args: &Args, cfg: &Config) -> anyhow::Result<()> {
-    let artifacts = PathBuf::from(args.get(
-        "artifacts",
-        &cfg.str_or("run", "artifacts_dir", "artifacts"),
-    ));
-    let dataset = args.get("dataset", "mnist");
-    let route: Route = args.get("route", "jpeg").parse().map_err(anyhow::Error::msg)?;
+    if args.positional.get(1).map(String::as_str) == Some("bench") {
+        return cmd_serve_bench(args, cfg);
+    }
+    let sc = ServeConfig::from_config(cfg);
+    let dataset = args.get("dataset", &cfg.str_or("run", "dataset", "mnist"));
     let quality = args.usize("quality", 95) as u8;
     let n = args.usize("requests", 200);
-    let server = Server::start_default(
-        artifacts,
-        dataset.clone(),
-        args.flags.get("ckpt").map(PathBuf::from),
-        args.usize("seed", 0) as u64,
-        ServerConfig {
-            route,
-            num_freqs: args.usize("nf", 15),
-            method: args.get("method", "asm").parse().map_err(anyhow::Error::msg)?,
-            batcher: BatcherConfig {
-                max_batch: args.usize("max-batch", 40),
-                max_wait: std::time::Duration::from_millis(args.usize("max-wait-ms", 5) as u64),
-            },
-        },
-    );
+    let engine: EngineKind = args
+        .get("engine", &sc.engine)
+        .parse()
+        .map_err(anyhow::Error::msg)?;
+
+    let server = match engine {
+        EngineKind::Pjrt => {
+            let artifacts = PathBuf::from(args.get(
+                "artifacts",
+                &cfg.str_or("run", "artifacts_dir", "artifacts"),
+            ));
+            let route: Route =
+                args.get("route", "jpeg").parse().map_err(anyhow::Error::msg)?;
+            Server::start_default(
+                artifacts,
+                dataset.clone(),
+                args.flags.get("ckpt").map(PathBuf::from),
+                args.usize("seed", 0) as u64,
+                ServerConfig {
+                    route,
+                    num_freqs: args.usize("nf", 15),
+                    method: args.get("method", "asm").parse().map_err(anyhow::Error::msg)?,
+                    batcher: BatcherConfig {
+                        max_batch: args.usize("max-batch", 40),
+                        max_wait: std::time::Duration::from_millis(
+                            args.usize("max-wait-ms", sc.max_wait_ms) as u64,
+                        ),
+                    },
+                },
+            )
+        }
+        EngineKind::Native => {
+            let mode: NativeMode =
+                args.get("mode", &sc.mode).parse().map_err(anyhow::Error::msg)?;
+            let native = NativeEngine::from_preset(
+                &dataset,
+                args.flags.get("ckpt").map(PathBuf::from),
+                args.usize("seed", 0) as u64,
+                args.usize("nf", 15),
+                args.get("method", "asm").parse().map_err(anyhow::Error::msg)?,
+                args.usize("threads", cfg.usize_or("run", "threads", 0)),
+                mode,
+            )?;
+            let server = Server::start_native(native, pipeline_config_from(args, &sc));
+            // pay the exploded-map precompute before opening the doors
+            if let Some(p) = server.pipeline() {
+                p.warm(quality);
+            }
+            server
+        }
+    };
+
     let kind = SynthKind::parse(&dataset).ok_or_else(|| anyhow::anyhow!("dataset"))?;
     let data = Dataset::synthetic(kind, 2, n, 7);
     let files = data.jpeg_bytes(Split::Test, quality);
-    println!("serving {n} requests over route {route:?} ...");
-    let receivers: Vec<_> = files
-        .iter()
-        .map(|(b, l)| (server.submit(b.clone()), *l))
-        .collect();
-    let mut correct = 0;
-    for (rx, label) in receivers {
-        let resp = rx.recv().map_err(|_| anyhow::anyhow!("server died"))??;
-        if resp.predicted == label as usize {
-            correct += 1;
+    println!("serving {n} requests over engine {engine} ...");
+    let mut correct = 0usize;
+    let mut failed = 0usize;
+    let mut classes = 0usize;
+    // keep a bounded in-flight window so the native admission queue is
+    // never flooded faster than it can drain (eager submission of all
+    // n requests would trip QueueFull load shedding by design)
+    let window = args.usize("window", 32).max(1);
+    let mut pending = std::collections::VecDeque::new();
+    type ReplyRx = std::sync::mpsc::Receiver<anyhow::Result<InferResponse>>;
+    let mut settle = |rx: ReplyRx, label: u32| {
+        match rx.recv() {
+            Ok(Ok(resp)) => {
+                classes = resp.logits.len();
+                if resp.predicted == label as usize {
+                    correct += 1;
+                }
+            }
+            Ok(Err(e)) => {
+                failed += 1;
+                eprintln!("request failed: {e}");
+            }
+            Err(_) => {
+                failed += 1;
+                eprintln!("request failed: server died before replying");
+            }
         }
+    };
+    for (b, l) in &files {
+        if pending.len() >= window {
+            let (rx, label) = pending.pop_front().unwrap();
+            settle(rx, label);
+        }
+        pending.push_back((server.submit(b.clone()), *l));
     }
+    for (rx, label) in pending {
+        settle(rx, label);
+    }
+    println!("logit classes: {classes}");
     println!("accuracy (untrained unless --ckpt): {:.3}", correct as f32 / n as f32);
+    if failed > 0 {
+        println!("failed requests: {failed}");
+    }
     println!("{}", server.metrics.snapshot());
+    if let Some(p) = server.pipeline() {
+        println!("{}", p.metrics.snapshot());
+    }
     server.shutdown();
+    anyhow::ensure!(failed == 0, "{failed} of {n} requests failed");
+    Ok(())
+}
+
+fn cmd_serve_bench(args: &Args, cfg: &Config) -> anyhow::Result<()> {
+    let sc = ServeConfig::from_config(cfg);
+    let qualities: Vec<u8> = args
+        .get("qualities", "50,75,90")
+        .split(',')
+        .filter_map(|t| t.trim().parse().ok())
+        .collect();
+    let opts = serving::bench::BenchOptions {
+        dataset: args.get("dataset", &cfg.str_or("run", "dataset", "mnist")),
+        requests: args.usize("requests", 200),
+        clients: args.usize("clients", 4),
+        qualities,
+        seed: args.usize("seed", 0) as u64,
+        threads: args.usize("threads", cfg.usize_or("run", "threads", 0)),
+        pipeline: pipeline_config_from(args, &sc),
+        artifacts: PathBuf::from(args.get(
+            "artifacts",
+            &cfg.str_or("run", "artifacts_dir", "artifacts"),
+        )),
+        skip_dense: args.has("skip-dense"),
+    };
+    println!(
+        "serve bench: {} requests x {} engines, {} clients, qualities {:?}",
+        opts.requests,
+        if opts.skip_dense { 1 } else { 2 },
+        opts.clients,
+        opts.qualities
+    );
+    let (rows, skipped) = serving::bench::run(&opts)?;
+    serving::bench::print_rows(&rows, &skipped);
+    let axpy = bh::axpy_tiling_ablation(
+        args.usize("axpy-quality", 50) as u8,
+        args.usize("axpy-batch", 16),
+        args.usize("axpy-cout", 16),
+        args.usize("axpy-iters", 3),
+    );
+    bh::throughput::print_axpy(&axpy);
+    let doc = serving::bench::report_json(&opts, &rows, &skipped, &axpy);
+    let out = args.get("out", "BENCH_PR2.json");
+    std::fs::write(&out, format!("{doc}\n"))?;
+    println!("wrote {out}");
     Ok(())
 }
 

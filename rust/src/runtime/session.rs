@@ -4,6 +4,7 @@
 
 use std::sync::Arc;
 
+use crate::coordinator::router::Route;
 use crate::jpeg::zigzag::band_mask;
 use crate::jpeg_domain::network::{self, ExplodedModel};
 use crate::jpeg_domain::relu::Method;
@@ -180,6 +181,32 @@ impl Session {
             Tensor::from_vec(&[1], vec![lr]).into(),
         ];
         self.train(&name, state, head)
+    }
+
+    /// Route-dispatched serving forward (hoisted out of the server's
+    /// batch loop so both the pjrt worker and benches share one policy):
+    /// spatial -> pixel graph; jpeg at the exact setting (phi = 15, ASM)
+    /// -> the fused fast-path graph; otherwise the tunable domain-ops
+    /// graph.
+    pub fn forward_route(
+        &self,
+        params: &ParamSet,
+        route: Route,
+        x: &Tensor,
+        qvec: &[f32; 64],
+        num_freqs: usize,
+        method: Method,
+    ) -> anyhow::Result<Tensor> {
+        match route {
+            Route::Spatial => self.forward_spatial(params, x),
+            // exact setting -> the fused serving fast path (identical
+            // function, one XLA GEMM decode instead of per-layer domain
+            // ops; EXPERIMENTS.md §Perf)
+            Route::Jpeg if num_freqs == 15 && method == Method::Asm => {
+                self.forward_jpeg_fused(params, x, qvec)
+            }
+            Route::Jpeg => self.forward_jpeg(params, x, qvec, num_freqs, method),
+        }
     }
 
     /// Optimized inference fast path: the fused graph (decode folded into

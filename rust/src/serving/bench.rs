@@ -1,0 +1,361 @@
+//! Closed-loop serving load generator (`repro serve bench`).
+//!
+//! Drives the `Server` facade with `clients` synchronous client threads
+//! over a mixed-quality JPEG request stream and reports throughput +
+//! latency percentiles per engine: native-sparse, native-dense, and —
+//! when PJRT artifacts are present — the pjrt worker loop.  Emits
+//! `BENCH_PR2.json` (rows + the axpy-tiling kernel ablation) so
+//! successive PRs keep a serving-perf trajectory.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::bench_harness::throughput::AxpyReport;
+use crate::coordinator::router::Route;
+use crate::coordinator::server::{Server, ServerConfig};
+use crate::data::{Dataset, Split, SynthKind};
+use crate::jpeg_domain::relu::Method;
+use crate::json::Json;
+
+use super::engine::{NativeEngine, NativeMode};
+use super::pipeline::PipelineConfig;
+
+/// Load-generator settings.
+#[derive(Clone, Debug)]
+pub struct BenchOptions {
+    pub dataset: String,
+    pub requests: usize,
+    pub clients: usize,
+    pub qualities: Vec<u8>,
+    pub seed: u64,
+    pub threads: usize,
+    pub pipeline: PipelineConfig,
+    pub artifacts: PathBuf,
+    /// Skip the dense-kernel baseline (it is much slower).
+    pub skip_dense: bool,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        BenchOptions {
+            dataset: "mnist".into(),
+            requests: 200,
+            clients: 4,
+            qualities: vec![50, 75, 90],
+            seed: 0,
+            threads: 0,
+            pipeline: PipelineConfig::default(),
+            artifacts: PathBuf::from("artifacts"),
+            skip_dense: false,
+        }
+    }
+}
+
+/// One engine's measured row.
+#[derive(Clone, Debug)]
+pub struct BenchRow {
+    pub engine: String,
+    pub requests: u64,
+    pub errors: u64,
+    pub rejected: u64,
+    pub throughput: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    /// (tag label, requests, p50 ms) — native engines only.
+    pub per_tag: Vec<(String, u64, f64)>,
+}
+
+/// Mixed-quality request stream: request i is encoded at
+/// `qualities[i % qualities.len()]`.
+fn request_stream(opts: &BenchOptions) -> anyhow::Result<Vec<Vec<u8>>> {
+    let kind = SynthKind::parse(&opts.dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {:?}", opts.dataset))?;
+    let data = Dataset::synthetic(kind, 2, opts.requests, opts.seed.wrapping_add(17));
+    let per_quality: Vec<Vec<(Vec<u8>, u32)>> = opts
+        .qualities
+        .iter()
+        .map(|&q| data.jpeg_bytes(Split::Test, q))
+        .collect();
+    anyhow::ensure!(!per_quality.is_empty(), "need at least one quality");
+    Ok((0..opts.requests)
+        .map(|i| per_quality[i % per_quality.len()][i % per_quality[0].len()].0.clone())
+        .collect())
+}
+
+/// Drive `files` through `server` from `clients` synchronous threads.
+/// Returns (wall seconds, error count).
+fn closed_loop(server: &Server, files: &[Vec<u8>], clients: usize) -> (f64, u64) {
+    let clients = clients.max(1);
+    let t0 = Instant::now();
+    let errors: u64 = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|t| {
+                s.spawn(move || {
+                    let mut errs = 0u64;
+                    for i in (t..files.len()).step_by(clients) {
+                        if server.infer(files[i].clone()).is_err() {
+                            errs += 1;
+                        }
+                    }
+                    errs
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).sum()
+    });
+    (t0.elapsed().as_secs_f64(), errors)
+}
+
+fn measure(server: &Server, name: &str, files: &[Vec<u8>], clients: usize) -> BenchRow {
+    let (wall, errors) = closed_loop(server, files, clients);
+    let snap = server.metrics.snapshot();
+    let (rejected, per_tag) = match server.pipeline() {
+        Some(p) => {
+            let ps = p.metrics.snapshot();
+            (
+                ps.rejected,
+                ps.per_tag
+                    .iter()
+                    .filter(|(_, n, _)| *n > 0)
+                    .map(|(t, n, p50)| (t.label().to_string(), *n, *p50))
+                    .collect(),
+            )
+        }
+        None => (0, Vec::new()),
+    };
+    BenchRow {
+        engine: name.to_string(),
+        requests: files.len() as u64,
+        errors,
+        rejected,
+        // served requests only: rejected/errored ones cost ~no wall
+        // time and would inflate req/s exactly when shedding load
+        throughput: (files.len() as u64).saturating_sub(errors) as f64 / wall,
+        p50_ms: snap.p50_ms,
+        p99_ms: snap.p99_ms,
+        mean_ms: snap.mean_ms,
+        per_tag,
+    }
+}
+
+fn native_row(
+    opts: &BenchOptions,
+    files: &[Vec<u8>],
+    mode: NativeMode,
+) -> anyhow::Result<BenchRow> {
+    let name = match mode {
+        NativeMode::Sparse => "native-sparse",
+        NativeMode::Dense => "native-dense",
+    };
+    let engine = NativeEngine::from_preset(
+        &opts.dataset,
+        None,
+        opts.seed,
+        15,
+        Method::Asm,
+        opts.threads,
+        mode,
+    )?;
+    let server = Server::start_native(engine, opts.pipeline);
+    for &q in &opts.qualities {
+        if let Some(p) = server.pipeline() {
+            p.warm(q);
+        }
+    }
+    let row = measure(&server, name, files, opts.clients);
+    server.shutdown();
+    Ok(row)
+}
+
+/// Run the full comparison.  Returns the measured rows plus a note for
+/// every engine that was skipped (e.g. pjrt with no artifacts).
+pub fn run(opts: &BenchOptions) -> anyhow::Result<(Vec<BenchRow>, Vec<(String, String)>)> {
+    let files = request_stream(opts)?;
+    let mut rows = Vec::new();
+    let mut skipped = Vec::new();
+
+    rows.push(native_row(opts, &files, NativeMode::Sparse)?);
+    if opts.skip_dense {
+        skipped.push(("native-dense".to_string(), "skipped by flag".to_string()));
+    } else {
+        rows.push(native_row(opts, &files, NativeMode::Dense)?);
+    }
+
+    // the pjrt engine needs real artifacts + a linked PJRT backend;
+    // probe before spawning so a missing backend is a skip, not a hang
+    match crate::runtime::Engine::new(&opts.artifacts) {
+        Ok(_) => {
+            let server = Server::start_default(
+                opts.artifacts.clone(),
+                opts.dataset.clone(),
+                None,
+                opts.seed,
+                ServerConfig { route: Route::Jpeg, ..Default::default() },
+            );
+            rows.push(measure(&server, "pjrt", &files, opts.clients));
+            server.shutdown();
+        }
+        Err(e) => skipped.push(("pjrt".to_string(), e.to_string())),
+    }
+    Ok((rows, skipped))
+}
+
+/// Render rows + the axpy kernel ablation into the `BENCH_PR2.json`
+/// document.
+pub fn report_json(
+    opts: &BenchOptions,
+    rows: &[BenchRow],
+    skipped: &[(String, String)],
+    axpy_report: &AxpyReport,
+) -> Json {
+    let num = Json::Num;
+    let mut doc = BTreeMap::new();
+
+    let mut config = BTreeMap::new();
+    config.insert("dataset".into(), Json::Str(opts.dataset.clone()));
+    config.insert("requests".into(), num(opts.requests as f64));
+    config.insert("clients".into(), num(opts.clients as f64));
+    config.insert(
+        "qualities".into(),
+        Json::Arr(opts.qualities.iter().map(|&q| num(q as f64)).collect()),
+    );
+    config.insert("max_batch".into(), num(opts.pipeline.max_batch as f64));
+    config.insert("decode_workers".into(), num(opts.pipeline.decode_workers as f64));
+    config.insert("compute_workers".into(), num(opts.pipeline.compute_workers as f64));
+    doc.insert("config".into(), Json::Obj(config));
+
+    let mut out_rows = Vec::new();
+    for r in rows {
+        let mut o = BTreeMap::new();
+        o.insert("engine".into(), Json::Str(r.engine.clone()));
+        o.insert("requests".into(), num(r.requests as f64));
+        o.insert("errors".into(), num(r.errors as f64));
+        o.insert("rejected".into(), num(r.rejected as f64));
+        o.insert("throughput".into(), num(r.throughput));
+        o.insert("p50_ms".into(), num(r.p50_ms));
+        o.insert("p99_ms".into(), num(r.p99_ms));
+        o.insert("mean_ms".into(), num(r.mean_ms));
+        let mut tags = BTreeMap::new();
+        for (label, n, p50) in &r.per_tag {
+            let mut t = BTreeMap::new();
+            t.insert("requests".into(), num(*n as f64));
+            t.insert("p50_ms".into(), num(*p50));
+            tags.insert(label.clone(), Json::Obj(t));
+        }
+        o.insert("tags".into(), Json::Obj(tags));
+        out_rows.push(Json::Obj(o));
+    }
+    for (engine, why) in skipped {
+        let mut o = BTreeMap::new();
+        o.insert("engine".into(), Json::Str(engine.clone()));
+        o.insert("skipped".into(), Json::Str(why.clone()));
+        out_rows.push(Json::Obj(o));
+    }
+    doc.insert("rows".into(), Json::Arr(out_rows));
+
+    // satellite: the axpy inner-loop tiling before/after (unroll 4 vs 8)
+    let a = axpy_report;
+    let mut axpy = BTreeMap::new();
+    axpy.insert("quality".into(), num(a.quality as f64));
+    axpy.insert("batch".into(), num(a.batch as f64));
+    axpy.insert("cout".into(), num(a.cout as f64));
+    axpy.insert("density".into(), num(a.density));
+    axpy.insert("unroll4_blocks_per_sec".into(), num(a.unroll4_blocks_per_sec));
+    axpy.insert("unroll8_blocks_per_sec".into(), num(a.unroll8_blocks_per_sec));
+    axpy.insert("speedup_8_vs_4".into(), num(a.speedup));
+    axpy.insert("max_abs_diff".into(), num(a.max_abs_diff as f64));
+    doc.insert("axpy_tiling".into(), Json::Obj(axpy));
+
+    Json::Obj(doc)
+}
+
+/// Human-readable summary table.
+pub fn print_rows(rows: &[BenchRow], skipped: &[(String, String)]) {
+    crate::bench_harness::print_table(
+        "Serving bench — closed-loop throughput + latency",
+        &["engine", "req/s", "p50 ms", "p99 ms", "mean ms", "errors", "rejected"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.engine.clone(),
+                    format!("{:.1}", r.throughput),
+                    format!("{:.2}", r.p50_ms),
+                    format!("{:.2}", r.p99_ms),
+                    format!("{:.2}", r.mean_ms),
+                    r.errors.to_string(),
+                    r.rejected.to_string(),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    for r in rows {
+        if !r.per_tag.is_empty() {
+            let tags: Vec<String> = r
+                .per_tag
+                .iter()
+                .map(|(l, n, p50)| format!("{l}={n} (p50 {p50:.2}ms)"))
+                .collect();
+            println!("  {} traffic: {}", r.engine, tags.join(" "));
+        }
+    }
+    for (engine, why) in skipped {
+        println!("  {engine}: skipped ({why})");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_mixes_qualities() {
+        let opts = BenchOptions {
+            requests: 6,
+            qualities: vec![50, 90],
+            ..Default::default()
+        };
+        let files = request_stream(&opts).unwrap();
+        assert_eq!(files.len(), 6);
+        // alternating qualities produce different byte streams
+        assert_ne!(files[0], files[1]);
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let opts = BenchOptions::default();
+        let rows = vec![BenchRow {
+            engine: "native-sparse".into(),
+            requests: 10,
+            errors: 0,
+            rejected: 0,
+            throughput: 100.0,
+            p50_ms: 1.0,
+            p99_ms: 2.0,
+            mean_ms: 1.2,
+            per_tag: vec![("q50".into(), 10, 1.0)],
+        }];
+        let skipped = vec![("pjrt".into(), "no artifacts".into())];
+        let axpy = AxpyReport {
+            quality: 50,
+            batch: 8,
+            cout: 16,
+            density: 0.25,
+            unroll4_blocks_per_sec: 1.0e6,
+            unroll8_blocks_per_sec: 1.2e6,
+            speedup: 1.2,
+            max_abs_diff: 1e-6,
+        };
+        let doc = report_json(&opts, &rows, &skipped, &axpy);
+        let rows_v = doc.get("rows").as_arr().unwrap();
+        assert_eq!(rows_v.len(), 2);
+        assert_eq!(rows_v[0].get("engine").as_str(), Some("native-sparse"));
+        assert_eq!(rows_v[1].get("skipped").as_str(), Some("no artifacts"));
+        assert!(doc.get("axpy_tiling").get("unroll8_blocks_per_sec").as_f64().is_some());
+        // round-trips through the parser
+        let text = doc.to_string();
+        assert!(crate::json::parse(&text).is_ok());
+    }
+}

@@ -1,0 +1,203 @@
+//! The native inference engine behind the compute stage: a parameter
+//! set plus a per-quant-table cache of precomputed exploded maps.
+//!
+//! The exploded maps (paper Algorithm 1) bake the quantization vector
+//! into the conv kernels, so a serving process that sees mixed
+//! quality-50/75/90 traffic needs one [`ExplodedModel`] per distinct
+//! quant table.  The cache precomputes on first sight (seconds) and is
+//! warm thereafter; [`NativeEngine::warm`] lets the CLI pay that cost
+//! before opening the doors.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::jpeg::QuantTable;
+use crate::jpeg_domain::network::{
+    self, jpeg_forward_exploded_dense_kernel, jpeg_forward_exploded_sparse, ExplodedModel,
+};
+use crate::jpeg_domain::relu::Method;
+use crate::params::{ModelConfig, ParamSet};
+use crate::tensor::{SparseBlocks, Tensor};
+
+/// Which exploded-conv kernel the compute stage runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NativeMode {
+    /// Gather-free kernel over stored nonzeros (the default).
+    Sparse,
+    /// Algorithm-1 dense gather + tiled matmul (the measured baseline).
+    Dense,
+}
+
+impl std::str::FromStr for NativeMode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "sparse" => Ok(NativeMode::Sparse),
+            "dense" => Ok(NativeMode::Dense),
+            other => Err(format!("unknown native mode {other:?} (sparse|dense)")),
+        }
+    }
+}
+
+type QvecKey = [u32; 64];
+
+fn qvec_key(qvec: &[f32; 64]) -> QvecKey {
+    qvec.map(f32::to_bits)
+}
+
+/// Model + parameters + exploded-map cache; shared by all compute
+/// workers (`Send + Sync`, interior mutability only in the cache).
+pub struct NativeEngine {
+    pub cfg: ModelConfig,
+    pub params: ParamSet,
+    pub num_freqs: usize,
+    pub method: Method,
+    /// Row-parallel worker threads inside one forward (1 = inline).
+    pub threads: usize,
+    pub mode: NativeMode,
+    cache: Mutex<HashMap<QvecKey, Arc<ExplodedModel>>>,
+}
+
+impl NativeEngine {
+    pub fn new(
+        cfg: ModelConfig,
+        params: ParamSet,
+        num_freqs: usize,
+        method: Method,
+        threads: usize,
+        mode: NativeMode,
+    ) -> NativeEngine {
+        NativeEngine {
+            cfg,
+            params,
+            num_freqs,
+            method,
+            threads: crate::config::resolve_threads(threads),
+            mode,
+            cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Build from a model preset + optional checkpoint — no artifacts
+    /// directory, no PJRT.
+    pub fn from_preset(
+        config: &str,
+        checkpoint: Option<std::path::PathBuf>,
+        seed: u64,
+        num_freqs: usize,
+        method: Method,
+        threads: usize,
+        mode: NativeMode,
+    ) -> anyhow::Result<NativeEngine> {
+        let cfg = ModelConfig::preset(config)
+            .ok_or_else(|| anyhow::anyhow!("unknown model config {config:?}"))?;
+        let params = match checkpoint {
+            Some(p) => ParamSet::load(&cfg, &p)?,
+            None => ParamSet::init(&cfg, seed),
+        };
+        Ok(Self::new(cfg, params, num_freqs, method, threads, mode))
+    }
+
+    /// The exploded maps for `qvec`, precomputing on first sight.
+    pub fn exploded_for(&self, qvec: &[f32; 64]) -> Arc<ExplodedModel> {
+        let key = qvec_key(qvec);
+        if let Some(em) = self.cache.lock().unwrap().get(&key) {
+            return em.clone();
+        }
+        // precompute outside the lock: concurrent first requests for the
+        // same table both compute, one insert wins, both get a valid map
+        let em = Arc::new(ExplodedModel::precompute(&self.params, qvec));
+        self.cache.lock().unwrap().entry(key).or_insert(em).clone()
+    }
+
+    /// Precompute the maps for an encoder quality level up front.
+    pub fn warm(&self, quality: u8) {
+        self.exploded_for(&QuantTable::luma(quality).as_f32());
+    }
+
+    /// Number of distinct quant tables seen so far.
+    pub fn cached_maps(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Batch forward on sparse block input: logits `(N, classes)`.
+    pub fn forward(&self, f0: &SparseBlocks, qvec: &[f32; 64]) -> Tensor {
+        let em = self.exploded_for(qvec);
+        match self.mode {
+            NativeMode::Sparse => jpeg_forward_exploded_sparse(
+                &self.cfg,
+                &self.params,
+                f0,
+                &em,
+                qvec,
+                self.num_freqs,
+                self.method,
+                self.threads,
+            ),
+            NativeMode::Dense => jpeg_forward_exploded_dense_kernel(
+                &self.cfg,
+                &self.params,
+                &f0.to_dense(),
+                &em,
+                qvec,
+                self.num_freqs,
+                self.method,
+            ),
+        }
+    }
+
+    /// Reference (non-exploded) forward for equivalence checks.
+    pub fn forward_reference(&self, coeffs: &Tensor, qvec: &[f32; 64]) -> Tensor {
+        network::jpeg_forward(&self.cfg, &self.params, coeffs, qvec, self.num_freqs, self.method)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A deliberately tiny model so exploded-map precompute stays cheap
+    /// in debug test runs.
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            in_channels: 1,
+            num_classes: 4,
+            widths: [2, 2, 2],
+            image_size: 32,
+        }
+    }
+
+    fn engine(mode: NativeMode) -> NativeEngine {
+        let cfg = tiny_cfg();
+        let params = ParamSet::init(&cfg, 5);
+        NativeEngine::new(cfg, params, 15, Method::Asm, 1, mode)
+    }
+
+    #[test]
+    fn mode_parse() {
+        assert_eq!("sparse".parse::<NativeMode>().unwrap(), NativeMode::Sparse);
+        assert_eq!("dense".parse::<NativeMode>().unwrap(), NativeMode::Dense);
+        assert!("x".parse::<NativeMode>().is_err());
+    }
+
+    #[test]
+    fn unknown_preset_errors() {
+        assert!(
+            NativeEngine::from_preset("nope", None, 0, 15, Method::Asm, 1, NativeMode::Sparse)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn exploded_cache_is_per_qvec() {
+        let e = engine(NativeMode::Sparse);
+        assert_eq!(e.cached_maps(), 0);
+        e.warm(75);
+        assert_eq!(e.cached_maps(), 1);
+        e.warm(75);
+        assert_eq!(e.cached_maps(), 1, "same table reuses the cache");
+        e.warm(90);
+        assert_eq!(e.cached_maps(), 2);
+    }
+}

@@ -1,0 +1,38 @@
+//! Typed serving errors.
+//!
+//! Admission rejections and in-flight failures are `ServeError`s, not
+//! anyhow strings, so load generators and tests can distinguish "shed
+//! load" from "bad request" from "shutting down".  When a reply travels
+//! through the generic `anyhow::Result` reply channel the concrete type
+//! is recoverable with `err.downcast_ref::<ServeError>()`.
+
+/// Everything the native serving pipeline can answer besides logits.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum ServeError {
+    /// The bounded admission queue is at capacity; the request was never
+    /// enqueued.  Retry later (load shedding, not failure).
+    #[error("admission queue full (capacity {capacity})")]
+    QueueFull { capacity: usize },
+    /// The pipeline is draining; no new requests are admitted.
+    #[error("server is shutting down")]
+    ShuttingDown,
+    /// The request bytes did not decode to a usable coefficient image.
+    #[error("decode failed: {0}")]
+    Decode(String),
+    /// A worker disappeared before replying (reply channel dropped).
+    #[error("serving worker lost before reply")]
+    WorkerLost,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_downcast_roundtrip() {
+        let e = ServeError::QueueFull { capacity: 8 };
+        assert!(e.to_string().contains("capacity 8"));
+        let any = anyhow::Error::new(e.clone());
+        assert_eq!(any.downcast_ref::<ServeError>(), Some(&e));
+    }
+}

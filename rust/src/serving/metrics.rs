@@ -1,0 +1,264 @@
+//! Per-stage pipeline metrics + per-quality traffic tags.
+//!
+//! Histograms reuse the coordinator's lock-free
+//! [`LatencyHistogram`]; each stage tracks queue wait (enqueue ->
+//! pickup), service time, processed/error counts and the inbound
+//! queue's high-water mark.  Requests additionally carry a
+//! [`QualityTag`] recovered from the image's quantization table so
+//! quality-50/75/90 traffic can be read out separately.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::coordinator::metrics::LatencyHistogram;
+use crate::jpeg::quant::QuantTable;
+
+/// Traffic class of one request, derived from its luma quant table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QualityTag {
+    Q50,
+    Q75,
+    Q90,
+    Other,
+}
+
+impl QualityTag {
+    pub const ALL: [QualityTag; 4] =
+        [QualityTag::Q50, QualityTag::Q75, QualityTag::Q90, QualityTag::Other];
+
+    /// Recover the tag by matching the dequantization vector against
+    /// the Annex-K luma tables at the tracked qualities.
+    pub fn from_qvec(qvec: &[f32; 64]) -> QualityTag {
+        for (tag, q) in [(QualityTag::Q50, 50u8), (QualityTag::Q75, 75), (QualityTag::Q90, 90)] {
+            if QuantTable::luma(q).as_f32() == *qvec {
+                return tag;
+            }
+        }
+        QualityTag::Other
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            QualityTag::Q50 => "q50",
+            QualityTag::Q75 => "q75",
+            QualityTag::Q90 => "q90",
+            QualityTag::Other => "other",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            QualityTag::Q50 => 0,
+            QualityTag::Q75 => 1,
+            QualityTag::Q90 => 2,
+            QualityTag::Other => 3,
+        }
+    }
+}
+
+/// One stage's counters: wait in the inbound queue, service time,
+/// inbound queue high-water mark.
+pub struct StageMetrics {
+    pub queue_wait: LatencyHistogram,
+    pub service: LatencyHistogram,
+    pub processed: AtomicU64,
+    pub errors: AtomicU64,
+    pub queue_peak: AtomicU64,
+}
+
+impl Default for StageMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StageMetrics {
+    pub fn new() -> StageMetrics {
+        StageMetrics {
+            queue_wait: LatencyHistogram::new(),
+            service: LatencyHistogram::new(),
+            processed: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            queue_peak: AtomicU64::new(0),
+        }
+    }
+
+    /// Record an observed inbound queue depth.
+    pub fn note_depth(&self, depth: usize) {
+        self.queue_peak.fetch_max(depth as u64, Ordering::Relaxed);
+    }
+}
+
+/// Per-tag request counter + end-to-end latency histogram.
+pub struct TagMetrics {
+    pub requests: AtomicU64,
+    pub latency: LatencyHistogram,
+}
+
+/// Aggregate view over the whole native pipeline.
+pub struct PipelineMetrics {
+    pub admitted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub decode: StageMetrics,
+    pub compute: StageMetrics,
+    /// submit -> reply, over successfully answered requests.
+    pub e2e: LatencyHistogram,
+    tags: [TagMetrics; 4],
+}
+
+impl Default for PipelineMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PipelineMetrics {
+    pub fn new() -> PipelineMetrics {
+        PipelineMetrics {
+            admitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            decode: StageMetrics::new(),
+            compute: StageMetrics::new(),
+            e2e: LatencyHistogram::new(),
+            tags: std::array::from_fn(|_| TagMetrics {
+                requests: AtomicU64::new(0),
+                latency: LatencyHistogram::new(),
+            }),
+        }
+    }
+
+    pub fn tag(&self, t: QualityTag) -> &TagMetrics {
+        &self.tags[t.index()]
+    }
+
+    /// Record a completed request's end-to-end latency under its tag.
+    pub fn record_done(&self, tag: QualityTag, latency: Duration) {
+        self.e2e.record(latency);
+        let tm = self.tag(tag);
+        tm.requests.fetch_add(1, Ordering::Relaxed);
+        tm.latency.record(latency);
+    }
+
+    pub fn snapshot(&self) -> PipelineSnapshot {
+        let stage = |s: &StageMetrics| StageSnapshot {
+            queue_wait_p50_ms: s.queue_wait.quantile_us(0.50) / 1e3,
+            queue_wait_p99_ms: s.queue_wait.quantile_us(0.99) / 1e3,
+            service_p50_ms: s.service.quantile_us(0.50) / 1e3,
+            service_p99_ms: s.service.quantile_us(0.99) / 1e3,
+            processed: s.processed.load(Ordering::Relaxed),
+            errors: s.errors.load(Ordering::Relaxed),
+            queue_peak: s.queue_peak.load(Ordering::Relaxed),
+        };
+        PipelineSnapshot {
+            admitted: self.admitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            decode: stage(&self.decode),
+            compute: stage(&self.compute),
+            e2e_p50_ms: self.e2e.quantile_us(0.50) / 1e3,
+            e2e_p99_ms: self.e2e.quantile_us(0.99) / 1e3,
+            e2e_mean_ms: self.e2e.mean_us() / 1e3,
+            per_tag: QualityTag::ALL.map(|t| {
+                let tm = self.tag(t);
+                (t, tm.requests.load(Ordering::Relaxed), tm.latency.quantile_us(0.50) / 1e3)
+            }),
+        }
+    }
+}
+
+/// Point-in-time view of one stage.
+#[derive(Clone, Copy, Debug)]
+pub struct StageSnapshot {
+    pub queue_wait_p50_ms: f64,
+    pub queue_wait_p99_ms: f64,
+    pub service_p50_ms: f64,
+    pub service_p99_ms: f64,
+    pub processed: u64,
+    pub errors: u64,
+    pub queue_peak: u64,
+}
+
+/// Point-in-time view of the pipeline.
+#[derive(Clone, Debug)]
+pub struct PipelineSnapshot {
+    pub admitted: u64,
+    pub rejected: u64,
+    pub decode: StageSnapshot,
+    pub compute: StageSnapshot,
+    pub e2e_p50_ms: f64,
+    pub e2e_p99_ms: f64,
+    pub e2e_mean_ms: f64,
+    /// (tag, requests, p50 ms) per quality class.
+    pub per_tag: [(QualityTag, u64, f64); 4],
+}
+
+impl std::fmt::Display for PipelineSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "admitted={} rejected={} e2e p50={:.2}ms p99={:.2}ms mean={:.2}ms",
+            self.admitted, self.rejected, self.e2e_p50_ms, self.e2e_p99_ms, self.e2e_mean_ms
+        )?;
+        for (name, s) in [("decode", &self.decode), ("compute", &self.compute)] {
+            writeln!(
+                f,
+                "  {name}: processed={} errors={} queue_peak={} wait p50={:.2}ms p99={:.2}ms \
+                 service p50={:.2}ms p99={:.2}ms",
+                s.processed,
+                s.errors,
+                s.queue_peak,
+                s.queue_wait_p50_ms,
+                s.queue_wait_p99_ms,
+                s.service_p50_ms,
+                s.service_p99_ms
+            )?;
+        }
+        let tags: Vec<String> = self
+            .per_tag
+            .iter()
+            .filter(|(_, n, _)| *n > 0)
+            .map(|(t, n, p50)| format!("{}={} (p50 {:.2}ms)", t.label(), n, p50))
+            .collect();
+        write!(
+            f,
+            "  traffic: {}",
+            if tags.is_empty() { "none".to_string() } else { tags.join(" ") }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tag_from_qvec() {
+        for (q, tag) in [(50u8, QualityTag::Q50), (75, QualityTag::Q75), (90, QualityTag::Q90)] {
+            assert_eq!(QualityTag::from_qvec(&QuantTable::luma(q).as_f32()), tag);
+        }
+        assert_eq!(
+            QualityTag::from_qvec(&QuantTable::luma(42).as_f32()),
+            QualityTag::Other
+        );
+        assert_eq!(QualityTag::from_qvec(&[1.0; 64]), QualityTag::Other);
+    }
+
+    #[test]
+    fn record_and_snapshot() {
+        let m = PipelineMetrics::new();
+        m.admitted.fetch_add(3, Ordering::Relaxed);
+        m.rejected.fetch_add(1, Ordering::Relaxed);
+        m.decode.note_depth(5);
+        m.decode.note_depth(2);
+        m.record_done(QualityTag::Q50, Duration::from_millis(4));
+        m.record_done(QualityTag::Q50, Duration::from_millis(6));
+        m.record_done(QualityTag::Other, Duration::from_millis(2));
+        let s = m.snapshot();
+        assert_eq!(s.admitted, 3);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.decode.queue_peak, 5);
+        assert_eq!(s.per_tag[0].1, 2, "q50 count");
+        assert_eq!(s.per_tag[3].1, 1, "other count");
+        assert!(s.e2e_p50_ms > 0.0);
+        assert!(!s.to_string().is_empty());
+    }
+}

@@ -1,0 +1,101 @@
+//! Native sparse serving subsystem: JPEG bytes -> logits with no PJRT.
+//!
+//! This is the production-facing path the paper's performance claim
+//! (§5) asks for: requests arrive as entropy-coded JPEG bytes and leave
+//! as class logits, never materializing the dense pixel image and never
+//! touching an AOT artifact — entropy decode feeds
+//! [`crate::tensor::SparseBlocks`] straight into the gather-free
+//! exploded-conv forward ([`crate::jpeg_domain::network::jpeg_forward_exploded_sparse`]).
+//!
+//! ## Stage / channel topology
+//!
+//! ```text
+//!                 admission queue          decoded queue
+//!  clients --> [SyncSender, cap Qa] --> D decode workers --> [SyncSender, cap Qd]
+//!   try_send (typed reject when full)    entropy decode        blocking send
+//!                                        -> SparseBlocks      (backpressure)
+//!                                                                  |
+//!                                            C compute workers <---+
+//!                                            micro-batch (<= max_batch, grouped
+//!                                            by quant table), ExplodedModel
+//!                                            cache per qvec, sparse or dense
+//!                                            kernel forward -> per-request reply
+//! ```
+//!
+//! Backpressure is applied at exactly two points:
+//!
+//! 1. **Admission** — [`NativePipeline::try_submit`] uses a bounded
+//!    `sync_channel` and *rejects* with the typed
+//!    [`ServeError::QueueFull`] instead of blocking the caller, so an
+//!    overloaded server sheds load at the front door with a bounded
+//!    queue behind it.
+//! 2. **Decode -> compute handoff** — decode workers use a *blocking*
+//!    bounded send; when the compute pool falls behind, decoders stall,
+//!    the admission queue fills, and new requests are rejected.  No
+//!    queue in the pipeline is unbounded.
+//!
+//! Shutdown is a drain: dropping the admission sender lets decode
+//! workers finish the queued requests and exit, which disconnects the
+//! decoded queue, which lets compute workers finish and exit — every
+//! admitted request receives a reply.
+//!
+//! Per-stage latency and queue-depth metrics live in
+//! [`metrics::PipelineMetrics`] (histograms reuse
+//! [`crate::coordinator::metrics::LatencyHistogram`]); every request
+//! also carries a quality tag ([`metrics::QualityTag`], recovered from
+//! the quant table) so quality-50/75/90 traffic is tracked separately.
+
+pub mod bench;
+pub mod engine;
+pub mod error;
+pub mod metrics;
+pub mod pipeline;
+pub mod queue;
+
+pub use engine::{NativeEngine, NativeMode};
+pub use error::ServeError;
+pub use metrics::{PipelineMetrics, QualityTag};
+pub use pipeline::{NativePipeline, PipelineConfig};
+
+/// Which serving backend the `serve` CLI drives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Pure-rust staged pipeline over the sparse exploded engine
+    /// (works with no artifacts present).
+    Native,
+    /// The original PJRT worker loop over the AOT artifacts.
+    Pjrt,
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "native" => Ok(EngineKind::Native),
+            "pjrt" => Ok(EngineKind::Pjrt),
+            other => Err(format!("unknown engine {other:?} (native|pjrt)")),
+        }
+    }
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineKind::Native => write!(f, "native"),
+            EngineKind::Pjrt => write!(f, "pjrt"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_kind_parse() {
+        assert_eq!("native".parse::<EngineKind>().unwrap(), EngineKind::Native);
+        assert_eq!("pjrt".parse::<EngineKind>().unwrap(), EngineKind::Pjrt);
+        assert!("xla".parse::<EngineKind>().is_err());
+        assert_eq!(EngineKind::Native.to_string(), "native");
+    }
+}

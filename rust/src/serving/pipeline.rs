@@ -1,0 +1,391 @@
+//! The staged native pipeline: admission -> decode pool -> compute pool.
+//!
+//! See the module doc in [`crate::serving`] for the topology and where
+//! backpressure applies.  Replies travel over per-request oneshot-style
+//! channels as `anyhow::Result<InferResponse>`; typed failures are
+//! [`ServeError`]s recoverable via `downcast_ref`.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::server::InferResponse;
+use crate::jpeg::codec;
+use crate::tensor::SparseBlocks;
+
+use super::engine::NativeEngine;
+use super::error::ServeError;
+use super::metrics::{PipelineMetrics, QualityTag};
+use super::queue::{bounded, BoundedReceiver, BoundedSender, SendRejected};
+
+/// Pipeline sizing.  Capacities bound every queue in the system; worker
+/// counts size the two pools.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineConfig {
+    /// Entropy-decode workers (stage 1).
+    pub decode_workers: usize,
+    /// Forward-pass workers (stage 2).
+    pub compute_workers: usize,
+    /// Admission queue capacity; beyond it `try_submit` rejects.
+    pub queue_capacity: usize,
+    /// Decoded-job queue capacity (decode blocks when full).
+    pub decoded_capacity: usize,
+    /// Compute micro-batch ceiling (requests coalesced per forward).
+    pub max_batch: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            decode_workers: 2,
+            compute_workers: 1,
+            queue_capacity: 256,
+            decoded_capacity: 64,
+            max_batch: 8,
+        }
+    }
+}
+
+type Reply = Sender<anyhow::Result<InferResponse>>;
+
+struct Job {
+    bytes: Vec<u8>,
+    submitted: Instant,
+    reply: Reply,
+}
+
+struct DecodedJob {
+    /// Single-image sparse input (N = 1).
+    f0: SparseBlocks,
+    qvec: [f32; 64],
+    tag: QualityTag,
+    submitted: Instant,
+    decoded_at: Instant,
+    reply: Reply,
+}
+
+/// A running native pipeline.
+pub struct NativePipeline {
+    admit: Option<BoundedSender<Job>>,
+    decode_handles: Vec<JoinHandle<()>>,
+    compute_handles: Vec<JoinHandle<()>>,
+    /// Per-stage metrics (latency, queue depth, per-quality traffic).
+    pub metrics: Arc<PipelineMetrics>,
+    /// Coordinator-compatible aggregate (requests/batches/latency), so
+    /// the `Server` facade exposes one metrics surface for both engines.
+    aggregate: Arc<Metrics>,
+    engine: Arc<NativeEngine>,
+}
+
+impl NativePipeline {
+    pub fn start(engine: NativeEngine, cfg: PipelineConfig) -> NativePipeline {
+        let engine = Arc::new(engine);
+        let metrics = Arc::new(PipelineMetrics::new());
+        let aggregate = Arc::new(Metrics::new());
+        let (admit_tx, admit_rx) = bounded::<Job>(cfg.queue_capacity.max(1));
+        let (dec_tx, dec_rx) = bounded::<DecodedJob>(cfg.decoded_capacity.max(1));
+
+        let in_channels = engine.cfg.in_channels;
+        let decode_handles: Vec<JoinHandle<()>> = (0..cfg.decode_workers.max(1))
+            .map(|_| {
+                let rx = admit_rx.clone();
+                let tx = dec_tx.clone();
+                let m = metrics.clone();
+                std::thread::spawn(move || decode_worker(rx, tx, m, in_channels))
+            })
+            .collect();
+        // decode workers hold the only senders into stage 2: when they
+        // exit (admission drained + disconnected), stage 2 disconnects
+        // and the compute pool drains out behind them
+        drop(dec_tx);
+
+        let compute_handles: Vec<JoinHandle<()>> = (0..cfg.compute_workers.max(1))
+            .map(|_| {
+                let rx = dec_rx.clone();
+                let e = engine.clone();
+                let m = metrics.clone();
+                let a = aggregate.clone();
+                let max_batch = cfg.max_batch.max(1);
+                std::thread::spawn(move || compute_worker(rx, e, m, a, max_batch))
+            })
+            .collect();
+
+        NativePipeline {
+            admit: Some(admit_tx),
+            decode_handles,
+            compute_handles,
+            metrics,
+            aggregate,
+            engine,
+        }
+    }
+
+    /// The engine shared by the compute pool.
+    pub fn engine(&self) -> &Arc<NativeEngine> {
+        &self.engine
+    }
+
+    /// Coordinator-compatible aggregate metrics.
+    pub fn aggregate(&self) -> &Arc<Metrics> {
+        &self.aggregate
+    }
+
+    /// Precompute exploded maps for an encoder quality before traffic.
+    pub fn warm(&self, quality: u8) {
+        self.engine.warm(quality);
+    }
+
+    /// Admit one request, or reject immediately with a typed error when
+    /// the admission queue is at capacity.
+    pub fn try_submit(
+        &self,
+        bytes: Vec<u8>,
+    ) -> Result<Receiver<anyhow::Result<InferResponse>>, ServeError> {
+        let admit = self.admit.as_ref().ok_or(ServeError::ShuttingDown)?;
+        let (reply, rx) = channel();
+        let job = Job { bytes, submitted: Instant::now(), reply };
+        match admit.try_send(job) {
+            Ok(()) => {
+                self.metrics.admitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                self.metrics.decode.note_depth(admit.depth());
+                Ok(rx)
+            }
+            Err(SendRejected::Full(_)) => {
+                self.metrics.rejected.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                Err(ServeError::QueueFull { capacity: admit.capacity() })
+            }
+            Err(SendRejected::Disconnected(_)) => Err(ServeError::ShuttingDown),
+        }
+    }
+
+    /// Blocking convenience: submit and wait for the reply.
+    pub fn infer(&self, bytes: Vec<u8>) -> anyhow::Result<InferResponse> {
+        self.try_submit(bytes)?
+            .recv()
+            .map_err(|_| anyhow::Error::new(ServeError::WorkerLost))?
+    }
+
+    /// Graceful drain: stop admitting, let both pools finish every
+    /// queued request, then join all workers.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        drop(self.admit.take());
+        for h in self.decode_handles.drain(..) {
+            let _ = h.join();
+        }
+        for h in self.compute_handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NativePipeline {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Decode one request's bytes to a single-image sparse batch + qvec.
+fn decode_one(bytes: &[u8], in_channels: usize) -> Result<(SparseBlocks, [f32; 64]), ServeError> {
+    let ci = codec::decode_to_coefficients(bytes).map_err(|e| ServeError::Decode(e.to_string()))?;
+    if ci.channels != in_channels {
+        return Err(ServeError::Decode(format!(
+            "expected {in_channels} channels, got {}",
+            ci.channels
+        )));
+    }
+    // one quant table across components (the single-J formulation the
+    // exploded maps bake in); reject mixed-table files up front
+    if ci.qtables[1..].iter().any(|t| *t != ci.qtables[0]) {
+        return Err(ServeError::Decode(
+            "mixed quant tables across components (encode with \
+             separate_chroma_table=false)"
+                .into(),
+        ));
+    }
+    let qvec = ci.qvec(0);
+    Ok((SparseBlocks::from_coeff_images(std::slice::from_ref(&ci)), qvec))
+}
+
+fn decode_worker(
+    rx: Arc<BoundedReceiver<Job>>,
+    tx: BoundedSender<DecodedJob>,
+    metrics: Arc<PipelineMetrics>,
+    in_channels: usize,
+) {
+    while let Some(job) = rx.recv() {
+        let picked_up = Instant::now();
+        metrics
+            .decode
+            .queue_wait
+            .record(picked_up.saturating_duration_since(job.submitted));
+        match decode_one(&job.bytes, in_channels) {
+            Ok((f0, qvec)) => {
+                let decoded_at = Instant::now();
+                metrics.decode.service.record(decoded_at.saturating_duration_since(picked_up));
+                metrics
+                    .decode
+                    .processed
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let dj = DecodedJob {
+                    f0,
+                    qvec,
+                    tag: QualityTag::from_qvec(&qvec),
+                    submitted: job.submitted,
+                    decoded_at,
+                    reply: job.reply,
+                };
+                match tx.send(dj) {
+                    Ok(()) => metrics.compute.note_depth(tx.depth()),
+                    // compute pool is gone: fail the request, keep draining
+                    Err(dj) => {
+                        let _ = dj
+                            .reply
+                            .send(Err(anyhow::Error::new(ServeError::ShuttingDown)));
+                    }
+                }
+            }
+            Err(e) => {
+                metrics.decode.errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let _ = job.reply.send(Err(anyhow::Error::new(e)));
+            }
+        }
+    }
+}
+
+fn compute_worker(
+    rx: Arc<BoundedReceiver<DecodedJob>>,
+    engine: Arc<NativeEngine>,
+    metrics: Arc<PipelineMetrics>,
+    aggregate: Arc<Metrics>,
+    max_batch: usize,
+) {
+    loop {
+        let jobs = rx.recv_up_to(max_batch);
+        if jobs.is_empty() {
+            return; // disconnected and drained
+        }
+        // group by (quant table, block grid): each group is one batched
+        // forward through the matching exploded maps
+        let mut groups: Vec<Vec<DecodedJob>> = Vec::new();
+        for job in jobs {
+            let key = (job.qvec.map(f32::to_bits), job.f0.dims());
+            match groups
+                .iter_mut()
+                .find(|g| (g[0].qvec.map(f32::to_bits), g[0].f0.dims()) == key)
+            {
+                Some(g) => g.push(job),
+                None => groups.push(vec![job]),
+            }
+        }
+        for group in groups {
+            serve_group(&engine, &metrics, &aggregate, group);
+        }
+    }
+}
+
+fn serve_group(
+    engine: &NativeEngine,
+    metrics: &PipelineMetrics,
+    aggregate: &Metrics,
+    group: Vec<DecodedJob>,
+) {
+    let t0 = Instant::now();
+    for job in &group {
+        metrics
+            .compute
+            .queue_wait
+            .record(t0.saturating_duration_since(job.decoded_at));
+    }
+    let qvec = group[0].qvec;
+    let batch = SparseBlocks::concat(group.iter().map(|j| &j.f0));
+    let logits = engine.forward(&batch, &qvec);
+    metrics.compute.service.record(t0.elapsed());
+    metrics
+        .compute
+        .processed
+        .fetch_add(group.len() as u64, std::sync::atomic::Ordering::Relaxed);
+    aggregate.record_batch(group.len());
+
+    let classes = logits.shape()[1];
+    let preds = logits.argmax_last();
+    for (i, job) in group.into_iter().enumerate() {
+        let latency = job.submitted.elapsed();
+        metrics.record_done(job.tag, latency);
+        aggregate.request_latency.record(latency);
+        let row = logits.data()[i * classes..(i + 1) * classes].to_vec();
+        let _ = job.reply.send(Ok(InferResponse {
+            logits: row,
+            predicted: preds[i],
+            latency,
+        }));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Dataset, Split, SynthKind};
+    use crate::jpeg_domain::relu::Method;
+    use crate::params::{ModelConfig, ParamSet};
+    use crate::serving::engine::NativeMode;
+
+    fn tiny_engine(mode: NativeMode) -> NativeEngine {
+        let cfg = ModelConfig {
+            name: "tiny".into(),
+            in_channels: 1,
+            num_classes: 4,
+            widths: [2, 2, 2],
+            image_size: 32,
+        };
+        let params = ParamSet::init(&cfg, 3);
+        NativeEngine::new(cfg, params, 15, Method::Asm, 1, mode)
+    }
+
+    fn files(n: usize, quality: u8) -> Vec<(Vec<u8>, u32)> {
+        Dataset::synthetic(SynthKind::Mnist, 2, n, 11).jpeg_bytes(Split::Test, quality)
+    }
+
+    #[test]
+    fn roundtrip_and_tags() {
+        let p = NativePipeline::start(tiny_engine(NativeMode::Sparse), PipelineConfig::default());
+        p.warm(75);
+        for (bytes, _) in files(3, 75) {
+            let resp = p.infer(bytes).unwrap();
+            assert_eq!(resp.logits.len(), 4);
+            assert!(resp.predicted < 4);
+        }
+        let s = p.metrics.snapshot();
+        assert_eq!(s.admitted, 3);
+        assert_eq!(s.decode.processed, 3);
+        assert_eq!(s.compute.processed, 3);
+        // q75 traffic lands under the q75 tag
+        assert_eq!(s.per_tag[1].1, 3, "{s}");
+        p.shutdown();
+    }
+
+    #[test]
+    fn bad_bytes_get_typed_decode_error() {
+        let p = NativePipeline::start(tiny_engine(NativeMode::Sparse), PipelineConfig::default());
+        let err = p.infer(vec![9, 9, 9]).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<ServeError>(),
+            Some(ServeError::Decode(_))
+        ));
+        assert_eq!(p.metrics.snapshot().decode.errors, 1);
+        p.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_not_possible_via_infer_path() {
+        let p = NativePipeline::start(tiny_engine(NativeMode::Sparse), PipelineConfig::default());
+        // shutdown consumes the pipeline; this test just verifies a
+        // clean second shutdown path doesn't hang via Drop
+        drop(p);
+    }
+}

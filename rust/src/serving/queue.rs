@@ -1,0 +1,207 @@
+//! Bounded inter-stage queues with a shared depth gauge.
+//!
+//! Thin wrapper over `std::sync::mpsc::sync_channel` adding the two
+//! things the pipeline needs: a live queue-depth gauge (for the
+//! per-stage metrics) and a worker-pool receiving side (multiple
+//! workers pull from one queue through a mutex; std's `Receiver` is
+//! single-consumer).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
+use std::sync::{Arc, Mutex};
+
+/// Sending half: `try_send` for the admission edge, blocking `send` for
+/// the interior edges (that block *is* the backpressure).
+pub struct BoundedSender<T> {
+    tx: SyncSender<T>,
+    depth: Arc<AtomicUsize>,
+    capacity: usize,
+}
+
+impl<T> Clone for BoundedSender<T> {
+    fn clone(&self) -> Self {
+        BoundedSender {
+            tx: self.tx.clone(),
+            depth: self.depth.clone(),
+            capacity: self.capacity,
+        }
+    }
+}
+
+/// Why a non-blocking send did not enqueue; carries the value back.
+pub enum SendRejected<T> {
+    Full(T),
+    Disconnected(T),
+}
+
+impl<T> BoundedSender<T> {
+    /// Non-blocking enqueue; `Full` when the queue is at capacity.
+    ///
+    /// The gauge is bumped *before* the channel send: a receiver may
+    /// pull the item (and decrement) the instant it lands, and
+    /// incrementing afterwards would let the counter dip below zero
+    /// and wrap.
+    pub fn try_send(&self, v: T) -> Result<(), SendRejected<T>> {
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        match self.tx.try_send(v) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(v)) => {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                Err(SendRejected::Full(v))
+            }
+            Err(TrySendError::Disconnected(v)) => {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                Err(SendRejected::Disconnected(v))
+            }
+        }
+    }
+
+    /// Blocking enqueue; `Err` returns the value when all receivers are
+    /// gone.  (Same increment-before-send ordering as [`Self::try_send`].)
+    pub fn send(&self, v: T) -> Result<(), T> {
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        match self.tx.send(v) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                Err(e.0)
+            }
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Approximate number of queued items (gauge, racy by nature).
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+}
+
+/// Receiving half, shareable across a worker pool.
+pub struct BoundedReceiver<T> {
+    rx: Mutex<Receiver<T>>,
+    depth: Arc<AtomicUsize>,
+}
+
+impl<T> BoundedReceiver<T> {
+    /// Block for the next item; `None` once all senders are gone and the
+    /// queue is drained.
+    pub fn recv(&self) -> Option<T> {
+        let v = self.rx.lock().unwrap().recv().ok()?;
+        self.depth.fetch_sub(1, Ordering::Relaxed);
+        Some(v)
+    }
+
+    /// Block for one item, then opportunistically drain up to `max`
+    /// total without blocking (the compute stage's micro-batch pull).
+    /// Empty result means disconnected-and-drained.
+    pub fn recv_up_to(&self, max: usize) -> Vec<T> {
+        let mut out = Vec::new();
+        let rx = self.rx.lock().unwrap();
+        match rx.recv() {
+            Ok(v) => out.push(v),
+            Err(_) => return out,
+        }
+        while out.len() < max.max(1) {
+            match rx.try_recv() {
+                Ok(v) => out.push(v),
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        self.depth.fetch_sub(out.len(), Ordering::Relaxed);
+        out
+    }
+
+    /// Approximate number of queued items (gauge, racy by nature).
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+}
+
+/// A bounded queue of `capacity` items.
+pub fn bounded<T>(capacity: usize) -> (BoundedSender<T>, Arc<BoundedReceiver<T>>) {
+    let capacity = capacity.max(1);
+    let (tx, rx) = sync_channel(capacity);
+    let depth = Arc::new(AtomicUsize::new(0));
+    (
+        BoundedSender { tx, depth: depth.clone(), capacity },
+        Arc::new(BoundedReceiver { rx: Mutex::new(rx), depth }),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn try_send_rejects_at_capacity() {
+        let (tx, rx) = bounded(2);
+        assert!(tx.try_send(1).is_ok());
+        assert!(tx.try_send(2).is_ok());
+        match tx.try_send(3) {
+            Err(SendRejected::Full(v)) => assert_eq!(v, 3),
+            _ => panic!("expected Full"),
+        }
+        assert_eq!(tx.depth(), 2);
+        assert_eq!(rx.recv(), Some(1));
+        assert!(tx.try_send(3).is_ok());
+    }
+
+    #[test]
+    fn recv_up_to_micro_batches() {
+        let (tx, rx) = bounded(8);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        let batch = rx.recv_up_to(3);
+        assert_eq!(batch, vec![0, 1, 2]);
+        assert_eq!(rx.recv_up_to(10), vec![3, 4]);
+        assert_eq!(rx.depth(), 0);
+    }
+
+    #[test]
+    fn disconnect_drains_then_ends() {
+        let (tx, rx) = bounded(4);
+        tx.send(7).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv_up_to(4), vec![7]);
+        assert!(rx.recv_up_to(4).is_empty());
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn send_returns_value_on_disconnect() {
+        let (tx, rx) = bounded(1);
+        drop(rx);
+        assert_eq!(tx.send(9), Err(9));
+        match tx.try_send(9) {
+            Err(SendRejected::Disconnected(v)) => assert_eq!(v, 9),
+            _ => panic!("expected Disconnected"),
+        }
+    }
+
+    #[test]
+    fn worker_pool_shares_receiver() {
+        let (tx, rx) = bounded(64);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let rx = rx.clone();
+                std::thread::spawn(move || {
+                    let mut n = 0usize;
+                    while rx.recv().is_some() {
+                        n += 1;
+                    }
+                    n
+                })
+            })
+            .collect();
+        for i in 0..40 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 40);
+    }
+}

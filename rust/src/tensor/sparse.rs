@@ -146,6 +146,26 @@ impl SparseBlocks {
         out
     }
 
+    /// Concatenate batches along N.  All parts must share `(C, Bh, Bw)`;
+    /// used by the serving compute stage to micro-batch single-image
+    /// sparse inputs without a dense intermediate.
+    pub fn concat<'a>(parts: impl IntoIterator<Item = &'a SparseBlocks>) -> SparseBlocks {
+        let parts: Vec<&SparseBlocks> = parts.into_iter().collect();
+        assert!(!parts.is_empty(), "empty concat");
+        let (_, c, bh, bw) = parts[0].dims();
+        let n: usize = parts.iter().map(|p| p.n).sum();
+        let nnz: usize = parts.iter().map(|p| p.nnz()).sum();
+        let mut out = SparseBlocks::with_capacity(n, c, bh, bw, nnz);
+        for p in &parts {
+            assert_eq!((p.c, p.bh, p.bw), (c, bh, bw), "ragged concat");
+            let base = out.val.len() as u32;
+            out.ptr.extend(p.ptr[1..].iter().map(|&o| o + base));
+            out.idx.extend_from_slice(&p.idx);
+            out.val.extend_from_slice(&p.val);
+        }
+        out
+    }
+
     /// Densify back to `(N, C, Bh, Bw, 64)`.
     pub fn to_dense(&self) -> Tensor {
         let mut data = vec![0.0f32; self.num_blocks() * 64];
@@ -254,6 +274,22 @@ mod tests {
             s.push_block([(3u8, 1.0f32), (1, 2.0)]);
         });
         assert!(r.is_err(), "descending zigzag order must panic");
+    }
+
+    #[test]
+    fn concat_matches_dense_concat() {
+        let a = sample_dense(); // (2, 1, 2, 2, 64)
+        let mut b = Tensor::zeros(&[1, 1, 2, 2, 64]);
+        b.set(&[0, 0, 1, 0, 2], 9.0);
+        let sa = SparseBlocks::from_dense(&a);
+        let sb = SparseBlocks::from_dense(&b);
+        let cat = SparseBlocks::concat([&sa, &sb]);
+        assert_eq!(cat.dims(), (3, 1, 2, 2));
+        assert_eq!(cat.nnz(), sa.nnz() + sb.nnz());
+        let dense = cat.to_dense();
+        let mut want = a.data().to_vec();
+        want.extend_from_slice(b.data());
+        assert_eq!(dense.data(), &want[..]);
     }
 
     #[test]

@@ -1,0 +1,191 @@
+//! Native serving pipeline integration tests: admission backpressure,
+//! graceful drain, and logits equivalence across kernels — all without
+//! PJRT artifacts (same fixture recipe as `sparse_equivalence.rs`:
+//! synthetic images -> real encoder -> entropy decode).
+
+use std::time::Duration;
+
+use jpegdomain::coordinator::server::Server;
+use jpegdomain::data::{Dataset, Split, SynthKind};
+use jpegdomain::jpeg::codec;
+use jpegdomain::jpeg_domain::network::jpeg_forward;
+use jpegdomain::jpeg_domain::relu::Method;
+use jpegdomain::params::{ModelConfig, ParamSet};
+use jpegdomain::serving::{
+    NativeEngine, NativeMode, NativePipeline, PipelineConfig, ServeError,
+};
+use jpegdomain::tensor::{SparseBlocks, Tensor};
+
+/// A deliberately small model: exploded-map precompute stays cheap in
+/// debug test runs while exercising every layer of the pipeline.
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "tiny".into(),
+        in_channels: 1,
+        num_classes: 4,
+        widths: [2, 2, 2],
+        image_size: 32,
+    }
+}
+
+fn engine(mode: NativeMode, seed: u64) -> NativeEngine {
+    let cfg = tiny_cfg();
+    let params = ParamSet::init(&cfg, seed);
+    NativeEngine::new(cfg, params, 15, Method::Asm, 1, mode)
+}
+
+fn quality50_files(n: usize) -> Vec<(Vec<u8>, u32)> {
+    Dataset::synthetic(SynthKind::Mnist, 2, n, 16).jpeg_bytes(Split::Test, 50)
+}
+
+#[test]
+fn backpressure_rejects_with_typed_error_then_drains() {
+    // tiny queues + a compute stage that must first pay the exploded
+    // precompute (the engine is cold): flooding the admission queue has
+    // to produce a typed QueueFull rejection, and shutdown must still
+    // answer every admitted request.
+    let p = NativePipeline::start(
+        engine(NativeMode::Sparse, 1),
+        PipelineConfig {
+            decode_workers: 1,
+            compute_workers: 1,
+            queue_capacity: 2,
+            decoded_capacity: 1,
+            max_batch: 1,
+        },
+    );
+    let files = quality50_files(4);
+    let mut receivers = Vec::new();
+    let mut rejections = 0usize;
+    // far more submissions than total queue space; decode cannot drain
+    // into the stalled compute stage faster than we submit
+    for i in 0..64 {
+        match p.try_submit(files[i % files.len()].0.clone()) {
+            Ok(rx) => receivers.push(rx),
+            Err(ServeError::QueueFull { capacity }) => {
+                assert_eq!(capacity, 2);
+                rejections += 1;
+            }
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert!(rejections > 0, "flooding a capacity-2 queue must reject");
+    assert!(!receivers.is_empty(), "some requests are admitted");
+    assert_eq!(p.metrics.snapshot().rejected, rejections as u64);
+
+    // graceful drain: every admitted request still gets a reply
+    p.shutdown();
+    for rx in receivers {
+        let resp = rx.recv().expect("reply delivered before shutdown completed");
+        let resp = resp.expect("admitted request served");
+        assert_eq!(resp.logits.len(), 4);
+    }
+}
+
+#[test]
+fn shutdown_drains_in_flight_requests() {
+    let p = NativePipeline::start(
+        engine(NativeMode::Sparse, 2),
+        PipelineConfig {
+            decode_workers: 2,
+            compute_workers: 1,
+            queue_capacity: 64,
+            decoded_capacity: 16,
+            max_batch: 4,
+        },
+    );
+    let files = quality50_files(6);
+    let receivers: Vec<_> = files
+        .iter()
+        .map(|(b, _)| p.try_submit(b.clone()).expect("capacity 64"))
+        .collect();
+    // shut down immediately: the pipeline must finish what it admitted
+    p.shutdown();
+    for rx in receivers {
+        let resp = rx.recv().expect("drained").expect("served");
+        assert_eq!(resp.logits.len(), 4);
+        assert!(resp.predicted < 4);
+    }
+}
+
+#[test]
+fn native_sparse_dense_and_reference_logits_agree() {
+    let files = quality50_files(3);
+    // oracle: the non-exploded DCC network on the densified input
+    let cis: Vec<_> = files
+        .iter()
+        .map(|(b, _)| codec::decode_to_coefficients(b).unwrap())
+        .collect();
+    let qvec = cis[0].qvec(0);
+    let f0 = SparseBlocks::from_coeff_images(&cis);
+    let cfg = tiny_cfg();
+    let params = ParamSet::init(&cfg, 3);
+    let want = jpeg_forward(&cfg, &params, &f0.to_dense(), &qvec, 15, Method::Asm);
+
+    let mut got = Vec::new();
+    for mode in [NativeMode::Sparse, NativeMode::Dense] {
+        let e = NativeEngine::new(cfg.clone(), params.clone(), 15, Method::Asm, 1, mode);
+        let p = NativePipeline::start(e, PipelineConfig::default());
+        let logits: Vec<Vec<f32>> = files
+            .iter()
+            .map(|(b, _)| p.infer(b.clone()).unwrap().logits)
+            .collect();
+        p.shutdown();
+        got.push(logits);
+    }
+    for (i, (s, d)) in got[0].iter().zip(&got[1]).enumerate() {
+        let srow = Tensor::from_vec(&[1, 4], s.clone());
+        let drow = Tensor::from_vec(&[1, 4], d.clone());
+        let wrow = Tensor::from_vec(
+            &[1, 4],
+            want.data()[i * 4..(i + 1) * 4].to_vec(),
+        );
+        assert!(
+            srow.max_abs_diff(&drow) < 1e-2,
+            "sparse vs dense row {i}: {}",
+            srow.max_abs_diff(&drow)
+        );
+        assert!(
+            srow.max_abs_diff(&wrow) < 1e-2,
+            "sparse vs reference row {i}: {}",
+            srow.max_abs_diff(&wrow)
+        );
+    }
+}
+
+#[test]
+fn server_facade_native_roundtrip_and_tags() {
+    let server = Server::start_native(
+        engine(NativeMode::Sparse, 4),
+        PipelineConfig::default(),
+    );
+    let q50 = quality50_files(2);
+    let q90 = Dataset::synthetic(SynthKind::Mnist, 2, 2, 16).jpeg_bytes(Split::Test, 90);
+    for (bytes, _) in q50.iter().chain(&q90) {
+        let resp = server.infer(bytes.clone()).unwrap();
+        assert_eq!(resp.logits.len(), 4);
+        assert!(resp.latency > Duration::ZERO);
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests, 4);
+    let ps = server.pipeline().unwrap().metrics.snapshot();
+    assert_eq!(ps.per_tag[0].1, 2, "q50 traffic tracked separately: {ps}");
+    assert_eq!(ps.per_tag[2].1, 2, "q90 traffic tracked separately: {ps}");
+    assert_eq!(ps.decode.processed, 4);
+    assert_eq!(ps.compute.processed, 4);
+    server.shutdown();
+}
+
+#[test]
+fn server_facade_native_bad_request_typed_error() {
+    let server = Server::start_native(
+        engine(NativeMode::Sparse, 5),
+        PipelineConfig::default(),
+    );
+    let err = server.infer(vec![0, 1, 2]).unwrap_err();
+    assert!(
+        matches!(err.downcast_ref::<ServeError>(), Some(ServeError::Decode(_))),
+        "{err}"
+    );
+    server.shutdown();
+}
