@@ -11,16 +11,32 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== cargo doc --no-deps (rustdoc warnings are errors) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 echo "== serve-smoke (native engine, no artifacts needed) =="
 # start the native server, push a handful of synthetic JPEGs through it,
 # assert non-empty logits came back; budget well under 30 s
-SMOKE_OUT=$(./target/release/repro serve --engine native --requests 6 \
+SMOKE_OUT=$(./target/release/repro serve --engine native --mode sparse --requests 6 \
     --quality 75 --decode-workers 2 --compute-workers 2 --max-batch 4)
 echo "$SMOKE_OUT"
 echo "$SMOKE_OUT" | grep -q "logit classes: 10" \
     || { echo "serve-smoke FAILED: no logits"; exit 1; }
 echo "$SMOKE_OUT" | grep -q "requests=6" \
     || { echo "serve-smoke FAILED: wrong request count"; exit 1; }
+
+echo "== sparse-resident-smoke (activations stay sparse between layers) =="
+# the resident kernel must serve the same traffic and report per-layer
+# nonzero fractions through the pipeline metrics
+RESIDENT_OUT=$(./target/release/repro serve --engine native --mode sparse-resident \
+    --requests 6 --quality 75 --decode-workers 2 --compute-workers 2 --max-batch 4)
+echo "$RESIDENT_OUT"
+echo "$RESIDENT_OUT" | grep -q "logit classes: 10" \
+    || { echo "sparse-resident-smoke FAILED: no logits"; exit 1; }
+echo "$RESIDENT_OUT" | grep -q "requests=6" \
+    || { echo "sparse-resident-smoke FAILED: wrong request count"; exit 1; }
+echo "$RESIDENT_OUT" | grep -q "nonzero fraction:" \
+    || { echo "sparse-resident-smoke FAILED: no per-layer sparsity"; exit 1; }
 
 if cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check =="

@@ -1,12 +1,13 @@
-//! Perf probe: the sparse exploded-conv engine ablation (native, always
-//! runs) + per-stage timing of both PJRT serving pipelines (when
+//! Perf probe: the sparse exploded-conv engine ablation + the
+//! dense-boundary vs sparse-resident forward ablation (native, always
+//! run) + per-stage timing of both PJRT serving pipelines (when
 //! artifacts are present).  Used by the EXPERIMENTS.md §Perf iteration
-//! log; emits `BENCH_PR1.json` so successive PRs have a perf
-//! trajectory.
+//! log; emits `BENCH_PR3.json` (throughput rows + per-layer nonzero
+//! fractions) so successive PRs have a perf trajectory.
 //!
 //! Run: `cargo run --release --example perf_probe`
 //! Env: PP_QUALITY (50), PP_BATCH (40), PP_COUT (16), PP_ITERS (5),
-//!      PP_PASSES (2), PP_THREADS (4), PP_OUT (BENCH_PR1.json)
+//!      PP_PASSES (2), PP_THREADS (4), PP_OUT (BENCH_PR3.json)
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -95,6 +96,31 @@ fn native_probe(report: &mut BTreeMap<String, Json>) -> anyhow::Result<()> {
     inf.insert("images_per_sec_n_threads".into(), num(ips_n));
     inf.insert("thread_scaling".into(), num(ips_n / ips1));
     report.insert("native_inference".into(), Json::Obj(inf));
+
+    // -- tentpole: dense-boundary vs sparse-resident forward ----------------
+    let rr = bh::resident_forward_ablation(quality, batch, iters, threads)?;
+    bh::throughput::print_resident(&rr);
+    let mut res = BTreeMap::new();
+    res.insert("quality".into(), num(rr.quality as f64));
+    res.insert("batch".into(), num(rr.batch as f64));
+    res.insert("threads".into(), num(rr.threads as f64));
+    res.insert("input_density".into(), num(rr.input_density));
+    res.insert(
+        "dense_boundary_images_per_sec".into(),
+        num(rr.dense_boundary_images_per_sec),
+    );
+    res.insert(
+        "sparse_resident_images_per_sec".into(),
+        num(rr.resident_images_per_sec),
+    );
+    res.insert("speedup_resident_vs_boundary".into(), num(rr.speedup));
+    res.insert("max_abs_diff".into(), num(rr.max_abs_diff as f64));
+    let mut layers = BTreeMap::new();
+    for (label, d) in &rr.layer_density {
+        layers.insert(label.to_string(), num(*d));
+    }
+    res.insert("layer_nonzero".into(), Json::Obj(layers));
+    report.insert("residency".into(), Json::Obj(res));
     Ok(())
 }
 
@@ -189,7 +215,7 @@ fn main() -> anyhow::Result<()> {
         eprintln!("native probe failed: {e}");
     }
 
-    let out = std::env::var("PP_OUT").unwrap_or_else(|_| "BENCH_PR1.json".into());
+    let out = std::env::var("PP_OUT").unwrap_or_else(|_| "BENCH_PR3.json".into());
     std::fs::write(&out, format!("{}\n", Json::Obj(report)))?;
     println!("\nwrote {out}");
 

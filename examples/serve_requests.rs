@@ -2,10 +2,12 @@
 //!
 //! Drives the native staged pipeline (entropy decode -> SparseBlocks ->
 //! sparse exploded forward; no PJRT required) with concurrent client
-//! threads over mixed-quality traffic, compares the sparse kernel
-//! against the dense Algorithm-1 baseline, adds the PJRT worker loop
-//! when artifacts are present, and writes `BENCH_PR2.json` — the live
-//! version of the Figure-5 inference comparison.
+//! threads over mixed-quality traffic, compares the sparse-resident
+//! kernel (activations stay sparse between layers) against the
+//! dense-boundary sparse kernel and the dense Algorithm-1 baseline,
+//! adds the PJRT worker loop when artifacts are present, and writes
+//! `BENCH_PR2.json` — the live version of the Figure-5 inference
+//! comparison.
 //!
 //! Run: `cargo run --release --example serve_requests [n_requests]`
 //! Env: SR_CLIENTS (4), SR_QUALITIES (50,75,90), SR_OUT (BENCH_PR2.json),

@@ -12,7 +12,8 @@ pub use blocks::{fig4a, Fig4aRow};
 pub use model_exps::{fig4b, fig4c, table1, Fig4Row, Table1Row};
 pub use throughput::{
     ablation_exploded, axpy_tiling_ablation, fig5, native_sparse_inference_throughput,
-    sparse_conv_ablation, AblationReport, AxpyReport, Fig5Row, SparseConvReport,
+    resident_forward_ablation, sparse_conv_ablation, AblationReport, AxpyReport, Fig5Row,
+    ResidentReport, SparseConvReport,
 };
 
 /// Markdown-ish row printing helper.

@@ -286,6 +286,13 @@ pub struct AblationReport {
     /// Native gather-free exploded forward at the engine's thread
     /// count, ms/batch.
     pub sparse_fwd_threaded_ms_per_batch: f64,
+    /// Sparse-resident forward (activations stay in `SparseBlocks`
+    /// form between layers), 1 thread, ms/batch.
+    pub resident_fwd_ms_per_batch: f64,
+    /// Sparse-resident forward at the engine's thread count, ms/batch.
+    pub resident_fwd_threaded_ms_per_batch: f64,
+    /// Per-layer nonzero fractions observed by the resident forward.
+    pub resident_layer_density: Vec<(&'static str, f64)>,
     /// Input density of the quality-50 entropy-decoded batch.
     pub input_density: f64,
     /// Thread count used for the threaded row.
@@ -407,6 +414,40 @@ pub fn ablation_exploded(session: &Session, iters: usize) -> anyhow::Result<Abla
     }
     let sparse_fwd_threaded_ms_per_batch = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
 
+    // -- sparse-resident: activations stay in SparseBlocks between layers --
+    let mut tr = network::ResidencyTrace::new();
+    network::jpeg_forward_exploded_resident(
+        &session.cfg,
+        &params,
+        &f0,
+        &em,
+        &qjpeg,
+        15,
+        Method::Asm,
+        1,
+        Some(&mut tr),
+    );
+    let resident_layer_density = tr.densities();
+    let resident_ms = |threads: usize| {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(network::jpeg_forward_exploded_resident(
+                &session.cfg,
+                &params,
+                &f0,
+                &em,
+                &qjpeg,
+                15,
+                Method::Asm,
+                threads,
+                None,
+            ));
+        }
+        t0.elapsed().as_secs_f64() * 1e3 / iters as f64
+    };
+    let resident_fwd_ms_per_batch = resident_ms(1);
+    let resident_fwd_threaded_ms_per_batch = resident_ms(threads);
+
     Ok(AblationReport {
         dcc_ms_per_batch,
         exploded_ms_per_batch,
@@ -416,6 +457,9 @@ pub fn ablation_exploded(session: &Session, iters: usize) -> anyhow::Result<Abla
         native_dcc_fwd_ms_per_batch,
         sparse_fwd_ms_per_batch,
         sparse_fwd_threaded_ms_per_batch,
+        resident_fwd_ms_per_batch,
+        resident_fwd_threaded_ms_per_batch,
+        resident_layer_density,
         input_density,
         threads,
     })
@@ -455,8 +499,22 @@ pub fn print_ablation(r: &AblationReport) {
                 format!("native sparse exploded fwd, {} threads (ms/batch)", r.threads),
                 format!("{:.2}", r.sparse_fwd_threaded_ms_per_batch),
             ],
+            vec![
+                "sparse-resident fwd, 1 thread (ms/batch)".into(),
+                format!("{:.2}", r.resident_fwd_ms_per_batch),
+            ],
+            vec![
+                format!("sparse-resident fwd, {} threads (ms/batch)", r.threads),
+                format!("{:.2}", r.resident_fwd_threaded_ms_per_batch),
+            ],
         ],
     );
+    let layers: Vec<String> = r
+        .resident_layer_density
+        .iter()
+        .map(|(l, d)| format!("{l}={d:.3}"))
+        .collect();
+    println!("resident nonzero fraction: {}", layers.join(" "));
 }
 
 /// Kernel-level sparsity ablation: dense Algorithm-1 gather+matmul vs
@@ -616,6 +674,154 @@ pub fn axpy_tiling_ablation(quality: u8, batch: usize, cout: usize, iters: usize
     }
 }
 
+/// Dense-boundary vs sparse-resident forward ablation on a real
+/// entropy-decoded batch — the tentpole before/after of activation
+/// residency.  Both paths run the same gather-free conv kernel; the
+/// boundary path densifies activations at every BN/ReLU, the resident
+/// path keeps them in `SparseBlocks` form end to end (bit-identical
+/// logits).  Needs no PJRT artifacts.
+#[derive(Clone, Debug)]
+pub struct ResidentReport {
+    pub quality: u8,
+    pub batch: usize,
+    pub threads: usize,
+    /// Input density of the entropy-decoded batch, in [0, 1].
+    pub input_density: f64,
+    /// End-to-end images/s: entropy decode excluded, forward only.
+    pub dense_boundary_images_per_sec: f64,
+    pub resident_images_per_sec: f64,
+    /// resident / dense-boundary.
+    pub speedup: f64,
+    /// Max |resident - boundary| over the logits (must be 0.0).
+    pub max_abs_diff: f32,
+    /// Per-layer nonzero fractions observed by the resident forward.
+    pub layer_density: Vec<(&'static str, f64)>,
+}
+
+/// Run the residency ablation on a quality-`quality` synthetic mnist
+/// batch.  `threads = 0` resolves to the hardware parallelism.
+pub fn resident_forward_ablation(
+    quality: u8,
+    batch: usize,
+    iters: usize,
+    threads: usize,
+) -> anyhow::Result<ResidentReport> {
+    let threads = crate::config::resolve_threads(threads);
+    let iters = iters.max(1);
+    let batch = batch.max(1);
+    let cfg = ModelConfig::preset("mnist")
+        .ok_or_else(|| anyhow::anyhow!("mnist preset missing"))?;
+    let params = ParamSet::init(&cfg, 0);
+    let files = Dataset::synthetic(SynthKind::Mnist, 2, batch, 41).jpeg_bytes(Split::Test, quality);
+    let cis: Vec<_> = files
+        .iter()
+        .map(|(b, _)| codec::decode_to_coefficients(b).expect("decode"))
+        .collect();
+    let qvec = cis[0].qvec(0);
+    let f0 = SparseBlocks::from_coeff_images(&cis);
+    let em = ExplodedModel::precompute(&params, &qvec);
+
+    // correctness + layer densities first
+    let boundary = network::jpeg_forward_exploded_sparse(
+        &cfg,
+        &params,
+        &f0,
+        &em,
+        &qvec,
+        15,
+        Method::Asm,
+        threads,
+    );
+    let mut tr = network::ResidencyTrace::new();
+    let resident = network::jpeg_forward_exploded_resident(
+        &cfg,
+        &params,
+        &f0,
+        &em,
+        &qvec,
+        15,
+        Method::Asm,
+        threads,
+        Some(&mut tr),
+    );
+    let max_abs_diff = resident.max_abs_diff(&boundary);
+
+    let images = (batch * iters) as f64;
+    let time = |f: &mut dyn FnMut()| {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        t0.elapsed().as_secs_f64()
+    };
+    let boundary_s = time(&mut || {
+        std::hint::black_box(network::jpeg_forward_exploded_sparse(
+            &cfg,
+            &params,
+            &f0,
+            &em,
+            &qvec,
+            15,
+            Method::Asm,
+            threads,
+        ));
+    });
+    let resident_s = time(&mut || {
+        std::hint::black_box(network::jpeg_forward_exploded_resident(
+            &cfg,
+            &params,
+            &f0,
+            &em,
+            &qvec,
+            15,
+            Method::Asm,
+            threads,
+            None,
+        ));
+    });
+
+    Ok(ResidentReport {
+        quality,
+        batch,
+        threads,
+        input_density: f0.density(),
+        dense_boundary_images_per_sec: images / boundary_s,
+        resident_images_per_sec: images / resident_s,
+        speedup: boundary_s / resident_s,
+        max_abs_diff,
+        layer_density: tr.densities(),
+    })
+}
+
+pub fn print_resident(r: &ResidentReport) {
+    super::print_table(
+        &format!(
+            "Activation residency ablation (quality {}, batch {}, {} threads, input density {:.3})",
+            r.quality, r.batch, r.threads, r.input_density
+        ),
+        &["path", "images/s", "vs boundary"],
+        &[
+            vec![
+                "dense-boundary (densify at every BN/ReLU)".into(),
+                format!("{:.1}", r.dense_boundary_images_per_sec),
+                "1.00x".into(),
+            ],
+            vec![
+                "sparse-resident (runs end to end)".into(),
+                format!("{:.1}", r.resident_images_per_sec),
+                format!("{:.2}x", r.speedup),
+            ],
+        ],
+    );
+    let layers: Vec<String> =
+        r.layer_density.iter().map(|(l, d)| format!("{l}={d:.3}")).collect();
+    println!(
+        "max |resident - boundary| = {:.1e}; nonzero fraction: {}",
+        r.max_abs_diff,
+        layers.join(" ")
+    );
+}
+
 pub fn print_axpy(r: &AxpyReport) {
     super::print_table(
         &format!(
@@ -724,6 +930,23 @@ mod tests {
         assert!(r.sparse_blocks_per_sec > 0.0);
         assert!(r.threaded_blocks_per_sec > 0.0);
         print_sparse_conv(&r); // smoke the printer
+    }
+
+    #[test]
+    fn resident_ablation_runs_without_artifacts() {
+        let r = resident_forward_ablation(50, 2, 1, 1).unwrap();
+        assert_eq!((r.quality, r.batch, r.threads), (50, 2, 1));
+        assert_eq!(r.max_abs_diff, 0.0, "resident logits must be bit-identical");
+        assert!(r.input_density > 0.0 && r.input_density < 1.0);
+        assert!(r.dense_boundary_images_per_sec > 0.0);
+        assert!(r.resident_images_per_sec > 0.0);
+        assert_eq!(
+            r.layer_density.len(),
+            network::RESIDENCY_POINTS.len(),
+            "one density per observation point"
+        );
+        assert_eq!(r.layer_density[0].0, "input");
+        print_resident(&r); // smoke the printer
     }
 
     #[test]

@@ -193,7 +193,9 @@ impl RunConfig {
 pub struct ServeConfig {
     /// "native" or "pjrt".
     pub engine: String,
-    /// "sparse" or "dense" (native engine kernel).
+    /// Native engine kernel: "sparse-resident" (activations stay in
+    /// `SparseBlocks` form between layers; the default), "sparse"
+    /// (dense-boundary baseline) or "dense" (Algorithm-1 baseline).
     pub mode: String,
     pub decode_workers: usize,
     pub compute_workers: usize,
@@ -207,7 +209,7 @@ impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
             engine: "native".to_string(),
-            mode: "sparse".to_string(),
+            mode: "sparse-resident".to_string(),
             decode_workers: 2,
             compute_workers: 1,
             queue_capacity: 256,
@@ -294,7 +296,7 @@ verbose = true
     fn serve_config_defaults_and_overrides() {
         let d = ServeConfig::from_config(&Config::default());
         assert_eq!(d.engine, "native");
-        assert_eq!(d.mode, "sparse");
+        assert_eq!(d.mode, "sparse-resident");
         assert_eq!(d.queue_capacity, 256);
         let c = Config::parse(
             "[serve]\nengine = \"pjrt\"\nqueue_capacity = 8\nmax_batch = 2\n",

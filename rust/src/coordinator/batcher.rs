@@ -26,6 +26,44 @@ impl Default for BatcherConfig {
 }
 
 /// Pull-side dynamic batcher over an mpsc receiver.
+///
+/// Release policy, where the two non-obvious rules live:
+///
+/// * **`max_wait == 0` means "never coalesce"** — every
+///   [`DynamicBatcher::next_batch`] returns a single-item batch
+///   immediately, with no timed waiting at all.  It does *not* mean
+///   "wait zero then drain the queue": items already queued behind the
+///   first stay queued for the next call.
+/// * **The wait budget is measured from the *oldest* item**, not from
+///   when the batcher picked it up.  With
+///   [`DynamicBatcher::with_enqueue_time`], an item that already spent
+///   its budget queued in the channel releases immediately (together
+///   with whatever else is ready) instead of the clock restarting on
+///   pickup.  Without an enqueue-time accessor the clock starts at
+///   pickup, which is the same thing for an empty queue.
+///
+/// ```
+/// use std::sync::mpsc::channel;
+/// use std::time::Duration;
+/// use jpegdomain::coordinator::{BatcherConfig, DynamicBatcher};
+///
+/// let (tx, rx) = channel();
+/// for i in 0..3 {
+///     tx.send(i).unwrap();
+/// }
+/// drop(tx);
+///
+/// // max_wait = 0: never coalesce — three single-item batches, even
+/// // though all three items were already queued
+/// let b = DynamicBatcher::new(
+///     rx,
+///     BatcherConfig { max_batch: 40, max_wait: Duration::ZERO },
+/// );
+/// assert_eq!(b.next_batch(), Some(vec![0]));
+/// assert_eq!(b.next_batch(), Some(vec![1]));
+/// assert_eq!(b.next_batch(), Some(vec![2]));
+/// assert_eq!(b.next_batch(), None); // channel closed + drained
+/// ```
 pub struct DynamicBatcher<T> {
     rx: Receiver<T>,
     cfg: BatcherConfig,

@@ -46,6 +46,21 @@ pub fn band_mask(num_freqs: usize) -> [f32; 64] {
     m
 }
 
+/// Number of leading zigzag coefficients kept by
+/// [`band_mask`]`(num_freqs)`.  Zigzag order enumerates anti-diagonals
+/// in ascending band order, so the band mask is always a zigzag
+/// *prefix*: masking a sparse run is a truncation at this cutoff
+/// (`SparseBlocks::truncate_runs`), never a scatter.
+pub fn band_cutoff(num_freqs: usize) -> usize {
+    let m = band_mask(num_freqs);
+    let cut = m.iter().position(|&v| v == 0.0).unwrap_or(64);
+    debug_assert!(
+        m[cut..].iter().all(|&v| v == 0.0),
+        "band mask must be a zigzag prefix"
+    );
+    cut
+}
+
 /// Reorder a raster block into zigzag order.
 pub fn to_zigzag(raster: &[f32; 64]) -> [f32; 64] {
     let mut out = [0.0f32; 64];
@@ -122,5 +137,18 @@ mod tests {
     #[should_panic]
     fn band_mask_zero_panics() {
         band_mask(0);
+    }
+
+    #[test]
+    fn band_cutoff_matches_mask() {
+        for nf in 1..=15 {
+            let m = band_mask(nf);
+            let cut = band_cutoff(nf);
+            assert_eq!(cut, m.iter().sum::<f32>() as usize, "nf={nf}");
+            assert!(m[..cut].iter().all(|&v| v == 1.0));
+            assert!(m[cut..].iter().all(|&v| v == 0.0));
+        }
+        assert_eq!(band_cutoff(15), 64);
+        assert_eq!(band_cutoff(1), 1);
     }
 }

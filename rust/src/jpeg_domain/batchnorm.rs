@@ -1,8 +1,17 @@
 //! JPEG-domain batch normalization and global average pooling
 //! (paper §4.3, §4.5; Algorithm 3).
+//!
+//! Both ops exist in two forms: over dense coefficient tensors and
+//! over [`SparseBlocks`] runs ([`jpeg_batch_norm_eval_sparse`],
+//! [`jpeg_global_avg_pool_sparse`]) for the sparse-resident network
+//! path.  Eval-mode BN is linear per frequency — scale every
+//! coefficient, shift only DC — so on runs it is an in-place affine
+//! rewrite (`SparseBlocks::scale_bias_per_index`) that performs the
+//! identical float ops on the stored nonzeros; results are
+//! bit-identical to the dense kernel on the densified input.
 
 use crate::nn::BN_EPS;
-use crate::tensor::Tensor;
+use crate::tensor::{SparseBlocks, Tensor};
 
 /// Eval-mode BN on domain coefficients (N, C, Bh, Bw, 64).
 ///
@@ -34,6 +43,33 @@ pub fn jpeg_batch_norm_eval(
         }
     }
     Tensor::from_vec(s, out)
+}
+
+/// Eval-mode BN on sparse block runs, in place — the sparse-resident
+/// form of [`jpeg_batch_norm_eval`].
+///
+/// Per channel `c`: every stored value scales by
+/// `gamma_c / sqrt(var_c + eps)` and the DC entry gains
+/// `8 * (beta_c - mean_c * scale_c) / q0` — inserted into the run when
+/// the quantized DC was zero, exactly the value the dense kernel
+/// writes there (`0.0 * scale + shift == shift`).
+pub fn jpeg_batch_norm_eval_sparse(
+    f: &mut SparseBlocks,
+    qvec: &[f32; 64],
+    gamma: &Tensor,
+    beta: &Tensor,
+    rmean: &Tensor,
+    rvar: &Tensor,
+) {
+    let c = f.dims().1;
+    let mut scale = vec![[0.0f32; 64]; c];
+    let mut bias = vec![[0.0f32; 64]; c];
+    for ci in 0..c {
+        let inv = gamma.data()[ci] / (rvar.data()[ci] + BN_EPS).sqrt();
+        scale[ci] = [inv; 64];
+        bias[ci][0] = 8.0 * (beta.data()[ci] - rmean.data()[ci] * inv) / qvec[0];
+    }
+    f.scale_bias_per_index(&scale, &bias);
 }
 
 /// Batch statistics in the domain (paper Theorem 2):
@@ -85,6 +121,29 @@ pub fn jpeg_global_avg_pool(f: &Tensor, qvec: &[f32; 64]) -> Tensor {
             for blk in 0..bh * bw {
                 let off = (((b * c + ci) * bh * bw) + blk) * 64;
                 acc += fd[off];
+            }
+            out[b * c + ci] = acc * qvec[0] / (8.0 * (bh * bw) as f32);
+        }
+    }
+    Tensor::from_vec(&[n, c], out)
+}
+
+/// Global average pooling over sparse block runs — the sparse-resident
+/// form of [`jpeg_global_avg_pool`].  Only stored DC entries
+/// contribute; skipping an absent DC is adding `0.0`, so the
+/// accumulation is bit-identical to the dense kernel's.
+pub fn jpeg_global_avg_pool_sparse(f: &SparseBlocks, qvec: &[f32; 64]) -> Tensor {
+    let (n, c, bh, bw) = f.dims();
+    let mut out = vec![0.0f32; n * c];
+    for b in 0..n {
+        for ci in 0..c {
+            let mut acc = 0.0f32;
+            for blk in 0..bh * bw {
+                let bid = (b * c + ci) * bh * bw + blk;
+                let (idx, val) = f.block(bid);
+                if idx.first() == Some(&0) {
+                    acc += val[0];
+                }
             }
             out[b * c + ci] = acc * qvec[0] / (8.0 * (bh * bw) as f32);
         }
@@ -173,6 +232,52 @@ mod tests {
         let want = nn::global_avg_pool(&x);
         let got = jpeg_global_avg_pool(&f, &q);
         assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn sparse_bn_bit_identical_to_dense() {
+        // lossy table so the quantizer leaves real zeros (absent DCs
+        // included) for the run rewrite to handle
+        let q = crate::jpeg::QuantTable::luma(50).as_f32();
+        let x = rand_image(21, 2, 3, 16);
+        let f = encode_tensor(&x, &q);
+        let fq = {
+            // round-trip through the quantizer grid: drop tiny values so
+            // some runs are short / empty
+            let mut d = f.data().to_vec();
+            for v in &mut d {
+                if v.abs() < 0.02 {
+                    *v = 0.0;
+                }
+            }
+            Tensor::from_vec(f.shape(), d)
+        };
+        let g = rand_vec(22, 3, -2.0, 2.0); // negative gammas too
+        let b = rand_vec(23, 3, -1.0, 1.0);
+        let rm = rand_vec(24, 3, -0.5, 0.5);
+        let rv = rand_vec(25, 3, 0.5, 2.0);
+        let dense = jpeg_batch_norm_eval(&fq, &q, &g, &b, &rm, &rv);
+        let mut sparse = SparseBlocks::from_dense(&fq);
+        jpeg_batch_norm_eval_sparse(&mut sparse, &q, &g, &b, &rm, &rv);
+        // same nonzeros, same bits
+        assert_eq!(sparse, SparseBlocks::from_dense(&dense));
+    }
+
+    #[test]
+    fn sparse_gap_bit_identical_to_dense() {
+        let q = crate::jpeg::QuantTable::luma(75).as_f32();
+        let x = rand_image(26, 2, 2, 16);
+        let mut f = encode_tensor(&x, &q);
+        // zero out some DCs so absent-DC skipping is exercised
+        for blk in [0usize, 3, 5] {
+            let off = blk * 64;
+            let mut d = f.data().to_vec();
+            d[off] = 0.0;
+            f = Tensor::from_vec(f.shape(), d);
+        }
+        let dense = jpeg_global_avg_pool(&f, &q);
+        let sparse = jpeg_global_avg_pool_sparse(&SparseBlocks::from_dense(&f), &q);
+        assert_eq!(dense, sparse);
     }
 
     #[test]

@@ -303,6 +303,80 @@ fn sparse_rows_into(
     }
 }
 
+/// Reorder row-major conv output rows straight into [`SparseBlocks`]
+/// runs, dropping exact zeros — the sparse-resident twin of
+/// [`rows_to_coeff_tensor`] (one scan either way, but no dense
+/// `(N, Cout, Bho, Bwo, 64)` intermediate for the next layer to
+/// re-scan).
+fn rows_to_sparse_blocks(
+    rows: &[f32],
+    n: usize,
+    cout: usize,
+    bho: usize,
+    bwo: usize,
+) -> SparseBlocks {
+    let xw = cout * 64;
+    let mut out = SparseBlocks::with_capacity(n, cout, bho, bwo, rows.len() / 2);
+    for b in 0..n {
+        for co in 0..cout {
+            for oy in 0..bho {
+                for ox in 0..bwo {
+                    out.push_dense_block(&rows[((b * bho + oy) * bwo + ox) * xw + co * 64..][..64]);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Apply a materialized exploded map to sparse block input and keep the
+/// output sparse — the sparse-resident conv.  Identical kernel core to
+/// [`jpeg_conv_exploded_sparse`] (same rows, same threading); only the
+/// output materialization differs: nonzeros go straight into runs, so
+/// the activation never takes dense `(N, Cout, Bho, Bwo, 64)` form
+/// between layers.
+pub fn jpeg_conv_exploded_sparse_resident(
+    f: &SparseBlocks,
+    xi: &Tensor,
+    cout: usize,
+    stride: usize,
+    threads: usize,
+) -> SparseBlocks {
+    let (n, _, bh, bw) = f.dims();
+    let (bho, bwo) = out_blocks(bh, bw, stride);
+    let rows = compute_sparse_rows(f, xi, cout, stride, threads, AxpyTiling::Unroll8);
+    rows_to_sparse_blocks(&rows, n, cout, bho, bwo)
+}
+
+/// Shared driver of the gather-free kernel: produce the row-major
+/// `(N*Bho*Bwo, cout*64)` output rows, inline or threaded.
+fn compute_sparse_rows(
+    f: &SparseBlocks,
+    xi: &Tensor,
+    cout: usize,
+    stride: usize,
+    threads: usize,
+    tiling: AxpyTiling,
+) -> Vec<f32> {
+    let (n, _, bh, bw) = f.dims();
+    let (bho, bwo) = out_blocks(bh, bw, stride);
+    let rows = n * bho * bwo;
+    let xw = cout * 64;
+    let mut out = vec![0.0f32; rows * xw];
+    let threads = threads.max(1).min(rows.max(1));
+    if threads <= 1 {
+        sparse_rows_into(f, xi, cout, stride, 0, &mut out, tiling);
+    } else {
+        let chunk = rows.div_ceil(threads);
+        std::thread::scope(|s| {
+            for (i, buf) in out.chunks_mut(chunk * xw).enumerate() {
+                s.spawn(move || sparse_rows_into(f, xi, cout, stride, i * chunk, buf, tiling));
+            }
+        });
+    }
+    out
+}
+
 /// Apply a materialized exploded map to sparse block input — the
 /// gather-free kernel, optionally threaded.
 ///
@@ -332,20 +406,7 @@ pub fn jpeg_conv_exploded_sparse_tiled(
 ) -> Tensor {
     let (n, _, bh, bw) = f.dims();
     let (bho, bwo) = out_blocks(bh, bw, stride);
-    let rows = n * bho * bwo;
-    let xw = cout * 64;
-    let mut out = vec![0.0f32; rows * xw];
-    let threads = threads.max(1).min(rows.max(1));
-    if threads <= 1 {
-        sparse_rows_into(f, xi, cout, stride, 0, &mut out, tiling);
-    } else {
-        let chunk = rows.div_ceil(threads);
-        std::thread::scope(|s| {
-            for (i, buf) in out.chunks_mut(chunk * xw).enumerate() {
-                s.spawn(move || sparse_rows_into(f, xi, cout, stride, i * chunk, buf, tiling));
-            }
-        });
-    }
+    let out = compute_sparse_rows(f, xi, cout, stride, threads, tiling);
     rows_to_coeff_tensor(&out, n, cout, bho, bwo)
 }
 
@@ -514,6 +575,25 @@ mod tests {
         assert!(u4.max_abs_diff(&u8w) < 1e-4, "{}", u4.max_abs_diff(&u8w));
         // and the default path is the 8-wide kernel
         assert_eq!(jpeg_conv_exploded_sparse(&fs, &xi, 3, 1, 1), u8w);
+    }
+
+    #[test]
+    fn resident_conv_is_sparsified_dense_output() {
+        // resident output == SparseBlocks::from_dense(tensor output),
+        // bit for bit, threaded or not
+        let q = crate::jpeg::QuantTable::luma(50).as_f32();
+        let x = rand(&[2, 2, 32, 32], 21);
+        let w = rand(&[3, 2, 3, 3], 22);
+        let f = encode_tensor(&x, &q);
+        let fs = SparseBlocks::from_dense(&f);
+        for stride in [1usize, 2] {
+            let xi = explode_conv(&w, &q, stride);
+            let dense_out = jpeg_conv_exploded_sparse(&fs, &xi, 3, stride, 1);
+            let resident = jpeg_conv_exploded_sparse_resident(&fs, &xi, 3, stride, 1);
+            assert_eq!(resident, SparseBlocks::from_dense(&dense_out));
+            let threaded = jpeg_conv_exploded_sparse_resident(&fs, &xi, 3, stride, 4);
+            assert_eq!(resident, threaded);
+        }
     }
 
     #[test]

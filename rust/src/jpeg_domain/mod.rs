@@ -5,8 +5,24 @@
 //! oracle, a CPU baseline, and a fast harness for the per-block
 //! experiments (Fig 4a runs millions of blocks through [`relu`]).
 //!
-//! Layout convention: coefficient tensors are (N, C, Bh, Bw, 64), zigzag
-//! order, divided by the quantization vector (the paper's domain).
+//! ## Invariants
+//!
+//! * **Layout** — coefficient tensors are `(N, C, Bh, Bw, 64)`, zigzag
+//!   order, divided by the quantization vector (the paper's domain).
+//!   Sparse activations ([`crate::tensor::SparseBlocks`]) store the
+//!   same blocks in the same order as runs of ascending
+//!   `(zigzag index, value)` pairs.
+//! * **Two interchangeable activation forms** — every layer op exists
+//!   over dense tensors and over sparse runs ([`conv`], [`batchnorm`],
+//!   [`relu`]); the sparse forms perform the identical float
+//!   operations on the identical nonzeros, so the sparse-resident
+//!   forward ([`network::jpeg_forward_exploded_resident`]) is
+//!   bit-identical to the dense-boundary one
+//!   ([`network::jpeg_forward_exploded_sparse`]).
+//! * **Band masks are zigzag prefixes** — the ASM/APX phi mask keeps
+//!   the lowest spatial-frequency bands, which are contiguous leading
+//!   zigzag indices ([`crate::jpeg::zigzag::band_cutoff`]); on runs,
+//!   masking is a truncation.
 
 pub mod batchnorm;
 pub mod conv;

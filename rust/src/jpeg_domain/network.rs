@@ -7,11 +7,15 @@
 use crate::params::{ModelConfig, ParamSet};
 use crate::tensor::{SparseBlocks, Tensor};
 
-use super::batchnorm::{jpeg_batch_norm_eval, jpeg_global_avg_pool};
+use super::batchnorm::{
+    jpeg_batch_norm_eval, jpeg_batch_norm_eval_sparse, jpeg_global_avg_pool,
+    jpeg_global_avg_pool_sparse,
+};
 use super::conv::{
     explode_conv, jpeg_conv_dcc, jpeg_conv_exploded_dense, jpeg_conv_exploded_sparse,
+    jpeg_conv_exploded_sparse_resident,
 };
-use super::relu::{jpeg_relu, Method};
+use super::relu::{jpeg_relu, jpeg_relu_sparse, Method};
 
 fn bn(p: &ParamSet, prefix: &str, f: &Tensor, q: &[f32; 64]) -> Tensor {
     jpeg_batch_norm_eval(
@@ -22,6 +26,19 @@ fn bn(p: &ParamSet, prefix: &str, f: &Tensor, q: &[f32; 64]) -> Tensor {
         p.get(&format!("{prefix}.rmean")),
         p.get(&format!("{prefix}.rvar")),
     )
+}
+
+/// In-place sparse-resident BN by parameter prefix (the run-rewrite
+/// twin of [`bn`]).
+fn bn_sparse(p: &ParamSet, prefix: &str, f: &mut SparseBlocks, q: &[f32; 64]) {
+    jpeg_batch_norm_eval_sparse(
+        f,
+        q,
+        p.get(&format!("{prefix}.gamma")),
+        p.get(&format!("{prefix}.beta")),
+        p.get(&format!("{prefix}.rmean")),
+        p.get(&format!("{prefix}.rvar")),
+    );
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -124,6 +141,74 @@ impl ExplodedModel {
     fn conv_dense(&self, i: usize, f: &Tensor) -> Tensor {
         jpeg_conv_exploded_dense(f, &self.xis[i], self.couts[i], self.strides[i])
     }
+
+    /// Sparse-resident conv by plan index: sparse in, sparse out, no
+    /// dense intermediate.
+    fn conv_resident(&self, i: usize, f: &SparseBlocks, threads: usize) -> SparseBlocks {
+        jpeg_conv_exploded_sparse_resident(
+            f,
+            &self.xis[i],
+            self.couts[i],
+            self.strides[i],
+            threads,
+        )
+    }
+}
+
+/// Observation points of the sparse-resident forward, in network order.
+/// `input` is the entropy-decoded batch; each `*.relu1` / `*.out` point
+/// samples the activation right after an ASM/APX ReLU — the op that
+/// (re)introduces exact zeros — so the sequence shows how JPEG-domain
+/// sparsity decays through the network.
+pub const RESIDENCY_POINTS: [&str; 8] = [
+    "input",
+    "stem.relu",
+    "block1.relu1",
+    "block1.out",
+    "block2.relu1",
+    "block2.out",
+    "block3.relu1",
+    "block3.out",
+];
+
+/// Per-point nonzero accounting of one (or many accumulated)
+/// sparse-resident forward passes: raw `(stored nonzeros, dense
+/// element count)` pairs indexed like [`RESIDENCY_POINTS`], so traces
+/// aggregate exactly across batches.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ResidencyTrace {
+    pub counts: [(u64, u64); RESIDENCY_POINTS.len()],
+}
+
+impl ResidencyTrace {
+    pub fn new() -> ResidencyTrace {
+        ResidencyTrace::default()
+    }
+
+    fn observe(&mut self, point: usize, f: &SparseBlocks) {
+        let c = &mut self.counts[point];
+        c.0 += f.nnz() as u64;
+        c.1 += (f.num_blocks() * 64) as u64;
+    }
+
+    /// Nonzero fraction at a point, in [0, 1]; 0.0 before any traffic.
+    pub fn density(&self, point: usize) -> f64 {
+        let (nnz, total) = self.counts[point];
+        if total == 0 {
+            0.0
+        } else {
+            nnz as f64 / total as f64
+        }
+    }
+
+    /// `(label, nonzero fraction)` per observation point.
+    pub fn densities(&self) -> Vec<(&'static str, f64)> {
+        RESIDENCY_POINTS
+            .iter()
+            .enumerate()
+            .map(|(i, &l)| (l, self.density(i)))
+            .collect()
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -191,6 +276,105 @@ pub fn jpeg_forward_exploded_sparse(
     assert_eq!(f0.dims().1, cfg.in_channels);
     let stem = em.conv_sparse(0, f0, threads);
     exploded_tail(p, stem, qvec, num_freqs, method, &|i, t| em.conv(i, t, threads))
+}
+
+/// One residual block of the sparse-resident forward: every activation
+/// stays in [`SparseBlocks`] form (conv -> run-rewrite BN -> run ReLU,
+/// shortcut merged as a run addition).  `points` are the two
+/// [`RESIDENCY_POINTS`] indices this block records into `tr`.
+#[allow(clippy::too_many_arguments)]
+fn res_block_resident(
+    p: &ParamSet,
+    prefix: &str,
+    convs: (usize, usize, Option<usize>),
+    f: &SparseBlocks,
+    em: &ExplodedModel,
+    q: &[f32; 64],
+    nf: usize,
+    method: Method,
+    threads: usize,
+    tr: &mut ResidencyTrace,
+    points: (usize, usize),
+) -> SparseBlocks {
+    let (c1, c2, proj) = convs;
+    let mut y = em.conv_resident(c1, f, threads);
+    bn_sparse(p, &format!("{prefix}.bn1"), &mut y, q);
+    let y = jpeg_relu_sparse(&y, q, nf, method);
+    tr.observe(points.0, &y);
+    let mut y = em.conv_resident(c2, &y, threads);
+    bn_sparse(p, &format!("{prefix}.bn2"), &mut y, q);
+    // the identity shortcut merges against a borrow of the block input
+    // — no activation copy on the stride-1 blocks
+    let sum = match proj {
+        Some(i) => {
+            let mut s = em.conv_resident(i, f, threads);
+            bn_sparse(p, &format!("{prefix}.projbn"), &mut s, q);
+            SparseBlocks::merge_add(&y, &s)
+        }
+        None => SparseBlocks::merge_add(&y, f),
+    };
+    let out = jpeg_relu_sparse(&sum, q, nf, method);
+    tr.observe(points.1, &out);
+    out
+}
+
+/// Eval forward with end-to-end sparse activation residency: every
+/// interior activation stays in [`SparseBlocks`] form — ASM/ReLU and
+/// BN consume and produce runs, the residual shortcut is a run merge —
+/// and the network only densifies at the global-average-pool /
+/// fully-connected tail, where the representation is `(N, C)` anyway.
+///
+/// Performs the identical float operations on the identical nonzeros
+/// as [`jpeg_forward_exploded_sparse`] (which densifies at every
+/// BN/ReLU boundary), so logits are **bit-identical**; what changes is
+/// the memory traffic: no dense `(N, C, Bh, Bw, 64)` intermediates are
+/// written or re-scanned between layers.  `trace`, when given,
+/// accumulates per-layer nonzero fractions ([`RESIDENCY_POINTS`]).
+#[allow(clippy::too_many_arguments)]
+pub fn jpeg_forward_exploded_resident(
+    cfg: &ModelConfig,
+    p: &ParamSet,
+    f0: &SparseBlocks,
+    em: &ExplodedModel,
+    qvec: &[f32; 64],
+    num_freqs: usize,
+    method: Method,
+    threads: usize,
+    trace: Option<&mut ResidencyTrace>,
+) -> Tensor {
+    assert_eq!(f0.dims().1, cfg.in_channels);
+    let mut local = ResidencyTrace::new();
+    let tr: &mut ResidencyTrace = match trace {
+        Some(t) => t,
+        None => &mut local,
+    };
+    tr.observe(0, f0);
+    let mut f = em.conv_resident(0, f0, threads);
+    bn_sparse(p, "stem.bn", &mut f, qvec);
+    let mut f = jpeg_relu_sparse(&f, qvec, num_freqs, method);
+    tr.observe(1, &f);
+    let blocks = [
+        ("block1", (1, 2, None), (2, 3)),
+        ("block2", (3, 4, Some(5)), (4, 5)),
+        ("block3", (6, 7, Some(8)), (6, 7)),
+    ];
+    for (prefix, convs, points) in blocks {
+        f = res_block_resident(
+            p,
+            prefix,
+            convs,
+            &f,
+            em,
+            qvec,
+            num_freqs,
+            method,
+            threads,
+            tr,
+            points,
+        );
+    }
+    let g = jpeg_global_avg_pool_sparse(&f, qvec);
+    crate::nn::linear(&g, p.get("fc.w"), p.get("fc.b"))
 }
 
 /// Eval forward through the precomputed exploded maps with the dense
@@ -334,6 +518,42 @@ mod tests {
             "dense-kernel vs sparse logits: {}",
             dense.max_abs_diff(&sparse)
         );
+    }
+
+    #[test]
+    fn resident_forward_bit_identical_to_dense_boundary() {
+        // one exploded precompute covers all the resident assertions:
+        // exactness at phi 15, truncated phi, both methods, threading,
+        // and the residency trace
+        let c = cfg();
+        let p = ParamSet::init(&c, 14);
+        let x = rand_input(&c, 2, 15);
+        let q = qvec_flat();
+        let f = encode_tensor(&x, &q);
+        let f0 = SparseBlocks::from_dense(&f);
+        let em = ExplodedModel::precompute(&p, &q);
+        let boundary = jpeg_forward_exploded_sparse(&c, &p, &f0, &em, &q, 15, Method::Asm, 1);
+        let mut tr = ResidencyTrace::new();
+        let resident =
+            jpeg_forward_exploded_resident(&c, &p, &f0, &em, &q, 15, Method::Asm, 1, Some(&mut tr));
+        assert_eq!(resident, boundary, "resident path must be bit-identical");
+        // trace populated at every point, fractions in (0, 1]
+        for (label, d) in tr.densities() {
+            assert!(d > 0.0 && d <= 1.0, "{label}: density {d}");
+        }
+        // threaded resident is bit-identical too
+        let threaded =
+            jpeg_forward_exploded_resident(&c, &p, &f0, &em, &q, 15, Method::Asm, 4, None);
+        assert_eq!(resident, threaded);
+        // the resident run-truncation must agree with the dense band
+        // mask at lossy phi budgets, for both relu approximations
+        for nf in [4usize, 8] {
+            for method in [Method::Asm, Method::Apx] {
+                let b = jpeg_forward_exploded_sparse(&c, &p, &f0, &em, &q, nf, method, 1);
+                let r = jpeg_forward_exploded_resident(&c, &p, &f0, &em, &q, nf, method, 1, None);
+                assert_eq!(r, b, "nf={nf} method={method:?}");
+            }
+        }
     }
 
     #[test]

@@ -4,9 +4,19 @@
 //! 3-matmul factored form of the harmonic mixing tensor.  The Fig-4a
 //! harness pushes millions of blocks through these, so the inner loops
 //! are written over flat slices with hoisted row pointers.
+//!
+//! Two activation representations are supported: [`jpeg_relu`] over a
+//! dense coefficient tensor, and [`jpeg_relu_sparse`] over
+//! [`SparseBlocks`] runs for the sparse-resident network path.  The
+//! sparse form performs the *same* float operations on the same
+//! nonzeros in the same order (the dense kernel already skips zero
+//! terms), so the two are bit-identical; all-zero blocks short-circuit
+//! to empty output runs, and the phi band mask is applied as a run
+//! truncation ([`crate::jpeg::zigzag::band_cutoff`]) instead of a
+//! 64-wide multiply.
 
-use crate::jpeg::zigzag::band_mask;
-use crate::tensor::Tensor;
+use crate::jpeg::zigzag::{band_cutoff, band_mask};
+use crate::tensor::{SparseBlocks, Tensor};
 
 use super::{dec_matrix, enc_matrix};
 
@@ -76,6 +86,91 @@ pub fn apx_relu_block(ctx: &ReluCtx, f: &[f32; 64], mask: &[f32; 64]) -> [f32; 6
     }
     let mut out = [0.0f32; 64];
     matvec64(enc, &x_apx, &mut out);
+    out
+}
+
+/// Sparse-run matvec: `out[p] = sum_t val[t] * m[idx[t]*64+p]`.
+///
+/// Walks only the stored nonzeros of a run.  [`matvec64`] skips zero
+/// entries of its dense input, so for the run of a block's nonzeros
+/// this performs the identical adds in the identical (ascending
+/// zigzag) order — results are bit-for-bit equal.
+#[inline]
+fn matvec_run(m: &[f32], idx: &[u8], val: &[f32], out: &mut [f32; 64]) {
+    out.fill(0.0);
+    for (&k, &v) in idx.iter().zip(val) {
+        let row = &m[k as usize * 64..(k as usize + 1) * 64];
+        for (o, &a) in out.iter_mut().zip(row) {
+            *o += v * a;
+        }
+    }
+}
+
+/// ASM ReLU on one sparse run: the phi mask is a run truncation at
+/// `cutoff` (the mask's zigzag prefix length).  Output is the dense
+/// 64-vector of coefficients; the caller keeps its nonzeros.
+pub fn asm_relu_run(ctx: &ReluCtx, idx: &[u8], val: &[f32], cutoff: usize) -> [f32; 64] {
+    let dec = ctx.dec.data();
+    let enc = ctx.enc.data();
+    let mut x_exact = [0.0f32; 64];
+    matvec_run(dec, idx, val, &mut x_exact);
+    // phi mask == keep the run prefix below the band cutoff
+    let t = idx.partition_point(|&k| (k as usize) < cutoff);
+    let mut x_apx = [0.0f32; 64];
+    matvec_run(dec, &idx[..t], &val[..t], &mut x_apx);
+    let mut gated = [0.0f32; 64];
+    for p in 0..64 {
+        gated[p] = if x_apx[p] > 0.0 { x_exact[p] } else { 0.0 };
+    }
+    let mut out = [0.0f32; 64];
+    matvec64(enc, &gated, &mut out);
+    out
+}
+
+/// APX ReLU on one sparse run (mask = run truncation, as in
+/// [`asm_relu_run`]).
+pub fn apx_relu_run(ctx: &ReluCtx, idx: &[u8], val: &[f32], cutoff: usize) -> [f32; 64] {
+    let dec = ctx.dec.data();
+    let enc = ctx.enc.data();
+    let t = idx.partition_point(|&k| (k as usize) < cutoff);
+    let mut x_apx = [0.0f32; 64];
+    matvec_run(dec, &idx[..t], &val[..t], &mut x_apx);
+    for v in &mut x_apx {
+        *v = v.max(0.0);
+    }
+    let mut out = [0.0f32; 64];
+    matvec64(enc, &x_apx, &mut out);
+    out
+}
+
+/// Apply ASM/APX ReLU over sparse block runs, producing sparse runs —
+/// the sparse-resident form of [`jpeg_relu`].  All-zero blocks are
+/// skipped outright (both methods map the zero block to the zero
+/// block); output blocks store exactly the nonzero coefficients the
+/// dense kernel would produce, so a subsequent sparse consumer sees
+/// bit-identical inputs either way.
+pub fn jpeg_relu_sparse(
+    f: &SparseBlocks,
+    qvec: &[f32; 64],
+    num_freqs: usize,
+    method: Method,
+) -> SparseBlocks {
+    let ctx = ReluCtx::new(qvec);
+    let cutoff = band_cutoff(num_freqs);
+    let (n, c, bh, bw) = f.dims();
+    let mut out = SparseBlocks::with_capacity(n, c, bh, bw, f.nnz());
+    for bid in 0..f.num_blocks() {
+        let (idx, val) = f.block(bid);
+        if idx.is_empty() {
+            out.push_block(std::iter::empty());
+            continue;
+        }
+        let r = match method {
+            Method::Asm => asm_relu_run(&ctx, idx, val, cutoff),
+            Method::Apx => apx_relu_run(&ctx, idx, val, cutoff),
+        };
+        out.push_dense_block(&r);
+    }
     out
 }
 
@@ -219,6 +314,39 @@ mod tests {
             let expect = asm_relu_block(&ctx, &fb, &mask);
             for k in 0..64 {
                 assert!((out.data()[i * 64 + k] - expect[k]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_relu_bit_identical_to_dense() {
+        use crate::tensor::SparseBlocks;
+        let q = crate::jpeg::QuantTable::luma(50).as_f32();
+        let mut rng = Rng::new(9);
+        // sparse-ish random coefficient batch with empty blocks too
+        let mut data = vec![0.0f32; 2 * 2 * 2 * 2 * 64];
+        for v in data.iter_mut() {
+            if rng.uniform() < 0.25 {
+                *v = rng.normal();
+            }
+        }
+        for blk in 0..4 {
+            // force a few all-zero blocks (the short-circuit path)
+            for k in 0..64 {
+                data[blk * 5 * 64 + k] = 0.0;
+            }
+        }
+        let f = Tensor::from_vec(&[2, 2, 2, 2, 64], data);
+        let fs = SparseBlocks::from_dense(&f);
+        for nf in [4usize, 8, 15] {
+            for method in [Method::Asm, Method::Apx] {
+                let dense = jpeg_relu(&f, &q, nf, method);
+                let sparse = jpeg_relu_sparse(&fs, &q, nf, method);
+                assert_eq!(
+                    sparse,
+                    SparseBlocks::from_dense(&dense),
+                    "nf={nf} method={method:?}"
+                );
             }
         }
     }

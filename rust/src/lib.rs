@@ -15,10 +15,17 @@
 //!   same artifacts.
 //!
 //! Python never runs on the request path: after `make artifacts` the rust
-//! binary is self-contained.
+//! binary is self-contained — and the [`serving`] subsystem needs no
+//! artifacts at all: entropy decode feeds [`tensor::SparseBlocks`]
+//! straight into the gather-free exploded-conv network
+//! ([`jpeg_domain::network`]), with activations staying in sparse run
+//! form *between* layers on the default `sparse-resident` kernel
+//! (bit-identical logits, per-layer nonzero fractions in the metrics).
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index,
-//! and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `ARCHITECTURE.md` for the module map, the paper-to-code table and
+//! the serving data-flow diagram; `DESIGN.md` for the system inventory
+//! and the per-experiment index; `EXPERIMENTS.md` for paper-vs-measured
+//! results.
 
 pub mod bench_harness;
 pub mod config;

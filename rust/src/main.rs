@@ -9,7 +9,8 @@
 //!                              runs the closed-loop load generator
 //!   eval                       evaluate a checkpoint through either pipeline
 //!   convert                    spatial -> JPEG model conversion (paper §4.6)
-//!   exp <table1|fig4a|fig4b|fig4c|fig5|ablation>   regenerate paper results
+//!   exp <table1|fig4a|fig4b|fig4c|fig5|ablation|sparse|resident>
+//!                              regenerate paper results + perf ablations
 //!   codec <selftest>           JPEG codec round-trip demo
 //!
 //! Flags are `--key value`; `--config file.toml` loads defaults first.
@@ -87,18 +88,22 @@ fn usage() -> ! {
           --ckpt PATH --train-size N --test-size N --verbose
   serve:  --engine native|pjrt (default native) --requests N --quality Q
           --ckpt PATH --window N (in-flight request window, default 32)
-          native: --mode sparse|dense --decode-workers N --compute-workers N
+          native: --mode sparse-resident|sparse|dense (default
+                  sparse-resident: activations stay sparse between layers)
+                  --decode-workers N --compute-workers N
                   --queue-cap N --decoded-cap N --max-batch N --threads N
           pjrt:   --route spatial|jpeg --max-batch N --max-wait-ms N
   serve bench: closed-loop load generator -> BENCH_PR2.json
           --requests N --clients N --qualities 50,75,90 --skip-dense
-          --out FILE (native-sparse vs native-dense vs pjrt-if-present)
+          --out FILE (native-sparse-resident vs native-sparse vs
+          native-dense vs pjrt-if-present)
   eval:   --ckpt PATH --route spatial|jpeg --nf K --method asm|apx
   convert: --ckpt-in PATH --ckpt-out PATH
-  exp:    table1|fig4a|fig4b|fig4c|fig5|ablation|sparse
+  exp:    table1|fig4a|fig4b|fig4c|fig5|ablation|sparse|resident
           --seeds N --steps N --blocks N --freqs 1,3,5 --quality Q
           sparse: --quality Q --batch N --cout N --threads N --iters N
-          (sparse runs natively, no artifacts required)"
+          resident: --quality Q --batch N --threads N --iters N
+          (sparse and resident run natively, no artifacts required)"
     );
     std::process::exit(2);
 }
@@ -335,7 +340,7 @@ fn cmd_serve_bench(args: &Args, cfg: &Config) -> anyhow::Result<()> {
     println!(
         "serve bench: {} requests x {} engines, {} clients, qualities {:?}",
         opts.requests,
-        if opts.skip_dense { 1 } else { 2 },
+        if opts.skip_dense { 2 } else { 3 },
         opts.clients,
         opts.qualities
     );
@@ -501,6 +506,16 @@ fn cmd_exp(args: &Args, cfg: &Config) -> anyhow::Result<()> {
                 args.usize("iters", 5),
             );
             bh::throughput::print_sparse_conv(&r);
+        }
+        "resident" => {
+            // dense-boundary vs sparse-resident forward: no artifacts needed
+            let r = bh::resident_forward_ablation(
+                args.usize("quality", 50) as u8,
+                args.usize("batch", 40),
+                args.usize("iters", 5),
+                args.usize("threads", cfg.usize_or("run", "threads", 0)),
+            )?;
+            bh::throughput::print_resident(&r);
         }
         _ => usage(),
     }

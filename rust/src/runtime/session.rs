@@ -306,6 +306,32 @@ impl Session {
         )
     }
 
+    /// [`Session::forward_jpeg_exploded_native_sparse`] with end-to-end
+    /// sparse activation residency: activations stay in
+    /// [`SparseBlocks`] form between layers (bit-identical logits).
+    /// `trace`, when given, accumulates per-layer nonzero fractions.
+    pub fn forward_jpeg_exploded_native_resident(
+        &self,
+        params: &ParamSet,
+        em: &ExplodedModel,
+        f0: &SparseBlocks,
+        qvec: &[f32; 64],
+        num_freqs: usize,
+        trace: Option<&mut network::ResidencyTrace>,
+    ) -> Tensor {
+        network::jpeg_forward_exploded_resident(
+            &self.cfg,
+            params,
+            f0,
+            em,
+            qvec,
+            num_freqs,
+            Method::Asm,
+            self.engine.threads,
+            trace,
+        )
+    }
+
     /// Inference through the precomputed exploded maps (ablation path).
     /// The graph consumes the maps plus the non-conv (BN + fc) leaves.
     pub fn forward_jpeg_exploded(

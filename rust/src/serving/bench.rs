@@ -2,10 +2,12 @@
 //!
 //! Drives the `Server` facade with `clients` synchronous client threads
 //! over a mixed-quality JPEG request stream and reports throughput +
-//! latency percentiles per engine: native-sparse, native-dense, and —
-//! when PJRT artifacts are present — the pjrt worker loop.  Emits
-//! `BENCH_PR2.json` (rows + the axpy-tiling kernel ablation) so
-//! successive PRs keep a serving-perf trajectory.
+//! latency percentiles per engine: native-sparse-resident (activations
+//! stay sparse between layers; includes per-layer nonzero fractions),
+//! native-sparse (dense-boundary), native-dense, and — when PJRT
+//! artifacts are present — the pjrt worker loop.  Emits a JSON report
+//! (rows + the axpy-tiling kernel ablation) so successive PRs keep a
+//! serving-perf trajectory.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -65,6 +67,8 @@ pub struct BenchRow {
     pub mean_ms: f64,
     /// (tag label, requests, p50 ms) — native engines only.
     pub per_tag: Vec<(String, u64, f64)>,
+    /// (layer label, nonzero fraction) — sparse-resident engine only.
+    pub layer_nonzero: Vec<(String, f64)>,
 }
 
 /// Mixed-quality request stream: request i is encoded at
@@ -111,7 +115,7 @@ fn closed_loop(server: &Server, files: &[Vec<u8>], clients: usize) -> (f64, u64)
 fn measure(server: &Server, name: &str, files: &[Vec<u8>], clients: usize) -> BenchRow {
     let (wall, errors) = closed_loop(server, files, clients);
     let snap = server.metrics.snapshot();
-    let (rejected, per_tag) = match server.pipeline() {
+    let (rejected, per_tag, layer_nonzero) = match server.pipeline() {
         Some(p) => {
             let ps = p.metrics.snapshot();
             (
@@ -121,9 +125,13 @@ fn measure(server: &Server, name: &str, files: &[Vec<u8>], clients: usize) -> Be
                     .filter(|(_, n, _)| *n > 0)
                     .map(|(t, n, p50)| (t.label().to_string(), *n, *p50))
                     .collect(),
+                ps.layer_nonzero
+                    .iter()
+                    .map(|(l, d)| (l.to_string(), *d))
+                    .collect(),
             )
         }
-        None => (0, Vec::new()),
+        None => (0, Vec::new(), Vec::new()),
     };
     BenchRow {
         engine: name.to_string(),
@@ -137,6 +145,7 @@ fn measure(server: &Server, name: &str, files: &[Vec<u8>], clients: usize) -> Be
         p99_ms: snap.p99_ms,
         mean_ms: snap.mean_ms,
         per_tag,
+        layer_nonzero,
     }
 }
 
@@ -148,6 +157,7 @@ fn native_row(
     let name = match mode {
         NativeMode::Sparse => "native-sparse",
         NativeMode::Dense => "native-dense",
+        NativeMode::SparseResident => "native-sparse-resident",
     };
     let engine = NativeEngine::from_preset(
         &opts.dataset,
@@ -176,6 +186,7 @@ pub fn run(opts: &BenchOptions) -> anyhow::Result<(Vec<BenchRow>, Vec<(String, S
     let mut rows = Vec::new();
     let mut skipped = Vec::new();
 
+    rows.push(native_row(opts, &files, NativeMode::SparseResident)?);
     rows.push(native_row(opts, &files, NativeMode::Sparse)?);
     if opts.skip_dense {
         skipped.push(("native-dense".to_string(), "skipped by flag".to_string()));
@@ -245,6 +256,13 @@ pub fn report_json(
             tags.insert(label.clone(), Json::Obj(t));
         }
         o.insert("tags".into(), Json::Obj(tags));
+        if !r.layer_nonzero.is_empty() {
+            let mut layers = BTreeMap::new();
+            for (label, d) in &r.layer_nonzero {
+                layers.insert(label.clone(), num(*d));
+            }
+            o.insert("layer_nonzero".into(), Json::Obj(layers));
+        }
         out_rows.push(Json::Obj(o));
     }
     for (engine, why) in skipped {
@@ -300,6 +318,14 @@ pub fn print_rows(rows: &[BenchRow], skipped: &[(String, String)]) {
                 .collect();
             println!("  {} traffic: {}", r.engine, tags.join(" "));
         }
+        if !r.layer_nonzero.is_empty() {
+            let layers: Vec<String> = r
+                .layer_nonzero
+                .iter()
+                .map(|(l, d)| format!("{l}={d:.3}"))
+                .collect();
+            println!("  {} nonzero fraction: {}", r.engine, layers.join(" "));
+        }
     }
     for (engine, why) in skipped {
         println!("  {engine}: skipped ({why})");
@@ -336,6 +362,7 @@ mod tests {
             p99_ms: 2.0,
             mean_ms: 1.2,
             per_tag: vec![("q50".into(), 10, 1.0)],
+            layer_nonzero: vec![("input".into(), 0.25), ("stem.relu".into(), 0.5)],
         }];
         let skipped = vec![("pjrt".into(), "no artifacts".into())];
         let axpy = AxpyReport {
@@ -353,6 +380,7 @@ mod tests {
         assert_eq!(rows_v.len(), 2);
         assert_eq!(rows_v[0].get("engine").as_str(), Some("native-sparse"));
         assert_eq!(rows_v[1].get("skipped").as_str(), Some("no artifacts"));
+        assert!(rows_v[0].get("layer_nonzero").get("input").as_f64().is_some());
         assert!(doc.get("axpy_tiling").get("unroll8_blocks_per_sec").as_f64().is_some());
         // round-trips through the parser
         let text = doc.to_string();

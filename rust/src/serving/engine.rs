@@ -13,7 +13,8 @@ use std::sync::{Arc, Mutex};
 
 use crate::jpeg::QuantTable;
 use crate::jpeg_domain::network::{
-    self, jpeg_forward_exploded_dense_kernel, jpeg_forward_exploded_sparse, ExplodedModel,
+    self, jpeg_forward_exploded_dense_kernel, jpeg_forward_exploded_resident,
+    jpeg_forward_exploded_sparse, ExplodedModel, ResidencyTrace,
 };
 use crate::jpeg_domain::relu::Method;
 use crate::params::{ModelConfig, ParamSet};
@@ -22,10 +23,15 @@ use crate::tensor::{SparseBlocks, Tensor};
 /// Which exploded-conv kernel the compute stage runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum NativeMode {
-    /// Gather-free kernel over stored nonzeros (the default).
+    /// Gather-free kernel over stored nonzeros, densifying activations
+    /// at every BN/ReLU boundary (the dense-boundary baseline).
     Sparse,
     /// Algorithm-1 dense gather + tiled matmul (the measured baseline).
     Dense,
+    /// Gather-free kernel with end-to-end sparse activation residency:
+    /// activations stay in `SparseBlocks` form between layers
+    /// (bit-identical logits to `Sparse`; the default).
+    SparseResident,
 }
 
 impl std::str::FromStr for NativeMode {
@@ -34,7 +40,10 @@ impl std::str::FromStr for NativeMode {
         match s {
             "sparse" => Ok(NativeMode::Sparse),
             "dense" => Ok(NativeMode::Dense),
-            other => Err(format!("unknown native mode {other:?} (sparse|dense)")),
+            "sparse-resident" | "resident" => Ok(NativeMode::SparseResident),
+            other => {
+                Err(format!("unknown native mode {other:?} (sparse|dense|sparse-resident)"))
+            }
         }
     }
 }
@@ -122,6 +131,19 @@ impl NativeEngine {
 
     /// Batch forward on sparse block input: logits `(N, classes)`.
     pub fn forward(&self, f0: &SparseBlocks, qvec: &[f32; 64]) -> Tensor {
+        self.forward_traced(f0, qvec, None)
+    }
+
+    /// [`NativeEngine::forward`] with an optional residency trace: in
+    /// `SparseResident` mode the trace accumulates per-layer nonzero
+    /// fractions (the other kernels never densify-track and leave it
+    /// untouched).
+    pub fn forward_traced(
+        &self,
+        f0: &SparseBlocks,
+        qvec: &[f32; 64],
+        trace: Option<&mut ResidencyTrace>,
+    ) -> Tensor {
         let em = self.exploded_for(qvec);
         match self.mode {
             NativeMode::Sparse => jpeg_forward_exploded_sparse(
@@ -133,6 +155,17 @@ impl NativeEngine {
                 self.num_freqs,
                 self.method,
                 self.threads,
+            ),
+            NativeMode::SparseResident => jpeg_forward_exploded_resident(
+                &self.cfg,
+                &self.params,
+                f0,
+                &em,
+                qvec,
+                self.num_freqs,
+                self.method,
+                self.threads,
+                trace,
             ),
             NativeMode::Dense => jpeg_forward_exploded_dense_kernel(
                 &self.cfg,
@@ -178,7 +211,31 @@ mod tests {
     fn mode_parse() {
         assert_eq!("sparse".parse::<NativeMode>().unwrap(), NativeMode::Sparse);
         assert_eq!("dense".parse::<NativeMode>().unwrap(), NativeMode::Dense);
+        assert_eq!(
+            "sparse-resident".parse::<NativeMode>().unwrap(),
+            NativeMode::SparseResident
+        );
+        assert_eq!("resident".parse::<NativeMode>().unwrap(), NativeMode::SparseResident);
         assert!("x".parse::<NativeMode>().is_err());
+    }
+
+    #[test]
+    fn resident_mode_matches_sparse_mode_bitwise() {
+        use crate::data::{Dataset, Split, SynthKind};
+        use crate::jpeg::codec;
+        let files = Dataset::synthetic(SynthKind::Mnist, 2, 3, 19).jpeg_bytes(Split::Test, 75);
+        let cis: Vec<_> = files
+            .iter()
+            .map(|(b, _)| codec::decode_to_coefficients(b).unwrap())
+            .collect();
+        let qvec = cis[0].qvec(0);
+        let f0 = SparseBlocks::from_coeff_images(&cis);
+        let (a, b) = (engine(NativeMode::Sparse), engine(NativeMode::SparseResident));
+        let mut trace = ResidencyTrace::new();
+        let la = a.forward(&f0, &qvec);
+        let lb = b.forward_traced(&f0, &qvec, Some(&mut trace));
+        assert_eq!(la, lb, "resident kernel must be bit-identical");
+        assert!(trace.density(0) > 0.0, "trace records input density");
     }
 
     #[test]

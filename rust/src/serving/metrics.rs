@@ -5,13 +5,18 @@
 //! pickup), service time, processed/error counts and the inbound
 //! queue's high-water mark.  Requests additionally carry a
 //! [`QualityTag`] recovered from the image's quantization table so
-//! quality-50/75/90 traffic can be read out separately.
+//! quality-50/75/90 traffic can be read out separately.  When the
+//! compute stage runs the sparse-resident kernel, [`SparsityMetrics`]
+//! additionally accumulates per-layer nonzero fractions
+//! ([`crate::jpeg_domain::network::RESIDENCY_POINTS`]) so the sparsity
+//! decay through the network is observable in production.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 use crate::coordinator::metrics::LatencyHistogram;
 use crate::jpeg::quant::QuantTable;
+use crate::jpeg_domain::network::{ResidencyTrace, RESIDENCY_POINTS};
 
 /// Traffic class of one request, derived from its luma quant table.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -95,6 +100,55 @@ pub struct TagMetrics {
     pub latency: LatencyHistogram,
 }
 
+/// Per-layer nonzero accounting of the sparse-resident kernel: one
+/// `(nnz, total)` accumulator per [`RESIDENCY_POINTS`] entry.  Raw
+/// counts (not fractions) so aggregation across batches and workers is
+/// exact; only populated when the compute stage runs `sparse-resident`.
+pub struct SparsityMetrics {
+    nnz: [AtomicU64; RESIDENCY_POINTS.len()],
+    total: [AtomicU64; RESIDENCY_POINTS.len()],
+}
+
+impl Default for SparsityMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SparsityMetrics {
+    pub fn new() -> SparsityMetrics {
+        SparsityMetrics {
+            nnz: std::array::from_fn(|_| AtomicU64::new(0)),
+            total: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Fold one forward's residency trace into the counters.
+    pub fn record(&self, trace: &ResidencyTrace) {
+        for (i, &(nnz, total)) in trace.counts.iter().enumerate() {
+            self.nnz[i].fetch_add(nnz, Ordering::Relaxed);
+            self.total[i].fetch_add(total, Ordering::Relaxed);
+        }
+    }
+
+    /// `(layer label, nonzero fraction)` per observation point;
+    /// empty when no resident traffic has been recorded.
+    pub fn fractions(&self) -> Vec<(&'static str, f64)> {
+        if self.total[0].load(Ordering::Relaxed) == 0 {
+            return Vec::new();
+        }
+        RESIDENCY_POINTS
+            .iter()
+            .enumerate()
+            .map(|(i, &label)| {
+                let t = self.total[i].load(Ordering::Relaxed);
+                let n = self.nnz[i].load(Ordering::Relaxed);
+                (label, if t == 0 { 0.0 } else { n as f64 / t as f64 })
+            })
+            .collect()
+    }
+}
+
 /// Aggregate view over the whole native pipeline.
 pub struct PipelineMetrics {
     pub admitted: AtomicU64,
@@ -103,6 +157,8 @@ pub struct PipelineMetrics {
     pub compute: StageMetrics,
     /// submit -> reply, over successfully answered requests.
     pub e2e: LatencyHistogram,
+    /// Per-layer nonzero fractions (sparse-resident kernel only).
+    pub sparsity: SparsityMetrics,
     tags: [TagMetrics; 4],
 }
 
@@ -120,6 +176,7 @@ impl PipelineMetrics {
             decode: StageMetrics::new(),
             compute: StageMetrics::new(),
             e2e: LatencyHistogram::new(),
+            sparsity: SparsityMetrics::new(),
             tags: std::array::from_fn(|_| TagMetrics {
                 requests: AtomicU64::new(0),
                 latency: LatencyHistogram::new(),
@@ -161,6 +218,7 @@ impl PipelineMetrics {
                 let tm = self.tag(t);
                 (t, tm.requests.load(Ordering::Relaxed), tm.latency.quantile_us(0.50) / 1e3)
             }),
+            layer_nonzero: self.sparsity.fractions(),
         }
     }
 }
@@ -189,6 +247,9 @@ pub struct PipelineSnapshot {
     pub e2e_mean_ms: f64,
     /// (tag, requests, p50 ms) per quality class.
     pub per_tag: [(QualityTag, u64, f64); 4],
+    /// (layer label, nonzero fraction) through the resident network;
+    /// empty unless the sparse-resident kernel served traffic.
+    pub layer_nonzero: Vec<(&'static str, f64)>,
 }
 
 impl std::fmt::Display for PipelineSnapshot {
@@ -222,7 +283,16 @@ impl std::fmt::Display for PipelineSnapshot {
             f,
             "  traffic: {}",
             if tags.is_empty() { "none".to_string() } else { tags.join(" ") }
-        )
+        )?;
+        if !self.layer_nonzero.is_empty() {
+            let layers: Vec<String> = self
+                .layer_nonzero
+                .iter()
+                .map(|(l, d)| format!("{l}={d:.3}"))
+                .collect();
+            write!(f, "\n  nonzero fraction: {}", layers.join(" "))?;
+        }
+        Ok(())
     }
 }
 
@@ -240,6 +310,26 @@ mod tests {
             QualityTag::Other
         );
         assert_eq!(QualityTag::from_qvec(&[1.0; 64]), QualityTag::Other);
+    }
+
+    #[test]
+    fn sparsity_counters_aggregate_exactly() {
+        let m = PipelineMetrics::new();
+        assert!(m.snapshot().layer_nonzero.is_empty(), "no resident traffic yet");
+        let mut t1 = ResidencyTrace::new();
+        t1.counts[0] = (16, 64);
+        t1.counts[1] = (8, 64);
+        let mut t2 = ResidencyTrace::new();
+        t2.counts[0] = (48, 64);
+        t2.counts[1] = (8, 64);
+        m.sparsity.record(&t1);
+        m.sparsity.record(&t2);
+        let s = m.snapshot();
+        assert_eq!(s.layer_nonzero.len(), RESIDENCY_POINTS.len());
+        assert_eq!(s.layer_nonzero[0].0, "input");
+        assert!((s.layer_nonzero[0].1 - 0.5).abs() < 1e-12);
+        assert!((s.layer_nonzero[1].1 - 0.125).abs() < 1e-12);
+        assert!(s.to_string().contains("nonzero fraction"));
     }
 
     #[test]

@@ -22,17 +22,33 @@
 //!                                            kernel forward -> per-request reply
 //! ```
 //!
-//! Backpressure is applied at exactly two points:
+//! ## Invariants
 //!
-//! 1. **Admission** — [`NativePipeline::try_submit`] uses a bounded
-//!    `sync_channel` and *rejects* with the typed
-//!    [`ServeError::QueueFull`] instead of blocking the caller, so an
-//!    overloaded server sheds load at the front door with a bounded
-//!    queue behind it.
-//! 2. **Decode -> compute handoff** — decode workers use a *blocking*
-//!    bounded send; when the compute pool falls behind, decoders stall,
-//!    the admission queue fills, and new requests are rejected.  No
-//!    queue in the pipeline is unbounded.
+//! * **Bounded queues everywhere.**  Backpressure is applied at
+//!   exactly two points:
+//!   1. **Admission** — [`NativePipeline::try_submit`] uses a bounded
+//!      `sync_channel` and *rejects* with the typed
+//!      [`ServeError::QueueFull`] instead of blocking the caller, so an
+//!      overloaded server sheds load at the front door with a bounded
+//!      queue behind it.
+//!   2. **Decode -> compute handoff** — decode workers use a
+//!      *blocking* bounded send; when the compute pool falls behind,
+//!      decoders stall, the admission queue fills, and new requests
+//!      are rejected.  No queue in the pipeline is unbounded.
+//! * **Quant-table batching key.**  The exploded maps bake the
+//!   quantization vector into the conv kernels, so a micro-batch may
+//!   only coalesce requests whose `(quant table bits, block grid)`
+//!   keys are identical; the compute stage groups by that key and runs
+//!   one batched forward per group over the per-qvec
+//!   [`engine::NativeEngine`] exploded-map cache.  Mixed-table JPEG
+//!   files (separate chroma tables) are rejected at decode.
+//! * **Zigzag run ordering.**  Activations travel as
+//!   [`crate::tensor::SparseBlocks`]: per-8x8-block runs of
+//!   `(zigzag index, value)` pairs, strictly ascending per block, no
+//!   stored zeros.  Every stage preserves this; with the
+//!   `sparse-resident` kernel the activations keep that form *between*
+//!   network layers too, and per-layer nonzero fractions are folded
+//!   into [`metrics::SparsityMetrics`].
 //!
 //! Shutdown is a drain: dropping the admission sender lets decode
 //! workers finish the queued requests and exit, which disconnects the

@@ -304,7 +304,13 @@ fn serve_group(
     }
     let qvec = group[0].qvec;
     let batch = SparseBlocks::concat(group.iter().map(|j| &j.f0));
-    let logits = engine.forward(&batch, &qvec);
+    // the resident kernel reports per-layer nonzero fractions; fold
+    // them into the pipeline metrics so sparsity decay is observable
+    let mut trace = crate::jpeg_domain::network::ResidencyTrace::new();
+    let logits = engine.forward_traced(&batch, &qvec, Some(&mut trace));
+    if engine.mode == crate::serving::engine::NativeMode::SparseResident {
+        metrics.sparsity.record(&trace);
+    }
     metrics.compute.service.record(t0.elapsed());
     metrics
         .compute
@@ -366,6 +372,27 @@ mod tests {
         assert_eq!(s.compute.processed, 3);
         // q75 traffic lands under the q75 tag
         assert_eq!(s.per_tag[1].1, 3, "{s}");
+        p.shutdown();
+    }
+
+    #[test]
+    fn resident_mode_serves_and_reports_sparsity() {
+        let p = NativePipeline::start(
+            tiny_engine(NativeMode::SparseResident),
+            PipelineConfig::default(),
+        );
+        p.warm(75);
+        for (bytes, _) in files(4, 75) {
+            let resp = p.infer(bytes).unwrap();
+            assert_eq!(resp.logits.len(), 4);
+        }
+        let s = p.metrics.snapshot();
+        assert_eq!(s.compute.processed, 4);
+        assert!(!s.layer_nonzero.is_empty(), "resident mode must report sparsity");
+        assert!(s.layer_nonzero[0].1 > 0.0, "input density must be positive");
+        for (label, d) in &s.layer_nonzero {
+            assert!((0.0..=1.0).contains(d), "{label}: {d}");
+        }
         p.shutdown();
     }
 

@@ -20,8 +20,39 @@
 //!   that the gather-free exploded-conv kernel and the ASM frequency
 //!   masks exploit.
 //!
-//! The gather-free convolution consumer lives in
-//! `crate::jpeg_domain::conv::jpeg_conv_exploded_sparse`.
+//! ## Invariants
+//!
+//! * **Zigzag ordering** — within every block, stored `(index, value)`
+//!   entries are strictly ascending in zigzag index.  Every mutation API
+//!   preserves this; [`SparseBlocks::push_block`] asserts it on build.
+//! * **No stored zeros** — builders drop exact `0.0` values, and the
+//!   rewrite APIs ([`SparseBlocks::scale_bias_per_index`],
+//!   [`SparseBlocks::merge_add`], [`SparseBlocks::prune_below_epsilon`])
+//!   drop entries whose result compares equal to `0.0` (this includes
+//!   `-0.0`).  Because every consumer skips zero terms, a dropped zero
+//!   and a stored zero are arithmetically interchangeable — which is
+//!   what makes the sparse-resident network path bit-identical to the
+//!   dense-boundary one.
+//! * **Dense block order** — blocks are stored in `(N, C, Bh, Bw)`
+//!   row-major order, so block ids are interchangeable with the dense
+//!   layout and a block's channel is recoverable from its id.
+//!
+//! ## Residency between layers
+//!
+//! The mutation APIs exist so activations can *stay* sparse across
+//! BN/ReLU boundaries instead of densifying after every layer:
+//! [`SparseBlocks::scale_bias_per_index`] is eval-mode batch norm (a
+//! per-frequency affine run rewrite) and [`SparseBlocks::merge_add`]
+//! is the residual shortcut addition.  The ASM phi mask is a run
+//! *truncation* because the band mask is a zigzag prefix
+//! (`crate::jpeg::zigzag::band_cutoff`): the resident ReLU applies it
+//! as a borrowed prefix slice of each run
+//! (`crate::jpeg_domain::relu::asm_relu_run`), and
+//! [`SparseBlocks::truncate_runs`] is the standalone in-place form of
+//! the same operation.  The gather-free convolution consumer lives in
+//! `crate::jpeg_domain::conv::jpeg_conv_exploded_sparse`; the
+//! sparse-resident network forward in
+//! `crate::jpeg_domain::network::jpeg_forward_exploded_resident`.
 
 use crate::jpeg::codec::CoeffImage;
 
@@ -85,6 +116,12 @@ impl SparseBlocks {
         self.nnz() as f64 / (self.num_blocks() * 64) as f64
     }
 
+    /// Channel of block `bid` under the dense `(N, C, Bh, Bw)` order.
+    #[inline]
+    pub fn block_channel(&self, bid: usize) -> usize {
+        (bid / (self.bh * self.bw)) % self.c
+    }
+
     /// Append the next block's `(zigzag index, value)` entries.  Blocks
     /// must arrive in dense `(N, C, Bh, Bw)` row-major order; entries
     /// must be ascending in zigzag index.
@@ -124,6 +161,187 @@ impl SparseBlocks {
         idx.last().copied()
     }
 
+    /// Append a block from parallel `(indices, values)` slices — the
+    /// slice-based twin of [`SparseBlocks::push_block`] for builders
+    /// that already hold a run in slice form.
+    pub fn push_run(&mut self, idx: &[u8], val: &[f32]) {
+        assert_eq!(idx.len(), val.len(), "ragged run");
+        self.push_block(idx.iter().copied().zip(val.iter().copied()));
+    }
+
+    /// Append a block from a dense 64-coefficient slice, storing only
+    /// its nonzeros — the one place the "no stored zeros" test lives
+    /// (`v != 0.0`: drops `±0.0`, keeps NaN so corruption stays
+    /// visible).  Every dense-to-run conversion goes through here.
+    pub fn push_dense_block(&mut self, blk: &[f32]) {
+        assert_eq!(blk.len(), 64, "expected a 64-coefficient block");
+        self.push_block(
+            blk.iter()
+                .enumerate()
+                .filter(|(_, &v)| v != 0.0)
+                .map(|(k, &v)| (k as u8, v)),
+        );
+    }
+
+    /// In-place affine rewrite of every run, per zigzag index: an entry
+    /// `(k, v)` in a block of channel `ci` becomes `v * scale[ci][k]`,
+    /// plus `bias[ci][k]` wherever the bias is nonzero — inserting the
+    /// entry when index `k` was absent (the implicit zero picks up the
+    /// bias) and dropping any entry whose result compares equal to
+    /// `0.0`.  `scale` / `bias` hold one 64-vector per channel.
+    ///
+    /// This is exactly eval-mode JPEG-domain batch norm (scale every
+    /// frequency, shift only DC), performed as a run rewrite: the same
+    /// multiplies and adds the dense kernel does on nonzero elements,
+    /// so results are bit-identical to dense-then-resparsify.
+    pub fn scale_bias_per_index(&mut self, scale: &[[f32; 64]], bias: &[[f32; 64]]) {
+        assert_eq!(scale.len(), self.c, "scale: one 64-vector per channel");
+        assert_eq!(bias.len(), self.c, "bias: one 64-vector per channel");
+        // per-channel list of indices the bias can inject into a run
+        let injected: Vec<Vec<u8>> = bias
+            .iter()
+            .map(|b| (0..64u8).filter(|&k| b[k as usize] != 0.0).collect())
+            .collect();
+        let extra: usize = injected.iter().map(Vec::len).sum::<usize>() * self.bh * self.bw * self.n;
+        let mut new_ptr = Vec::with_capacity(self.ptr.len());
+        new_ptr.push(0u32);
+        let mut new_idx = Vec::with_capacity(self.idx.len() + extra);
+        let mut new_val = Vec::with_capacity(self.val.len() + extra);
+        for bid in 0..self.num_blocks() {
+            let ci = self.block_channel(bid);
+            let (s, b) = (&scale[ci], &bias[ci]);
+            let inj = &injected[ci];
+            let lo = self.ptr[bid] as usize;
+            let hi = self.ptr[bid + 1] as usize;
+            // two-pointer merge of the stored run with the bias indices
+            let mut j = 0usize; // cursor into inj
+            for t in lo..hi {
+                let k = self.idx[t];
+                while j < inj.len() && inj[j] < k {
+                    // absent index gaining a pure-bias entry
+                    let v = b[inj[j] as usize];
+                    debug_assert!(v != 0.0);
+                    new_idx.push(inj[j]);
+                    new_val.push(v);
+                    j += 1;
+                }
+                let mut v = self.val[t] * s[k as usize];
+                if j < inj.len() && inj[j] == k {
+                    v += b[k as usize];
+                    j += 1;
+                }
+                if v != 0.0 {
+                    new_idx.push(k);
+                    new_val.push(v);
+                }
+            }
+            while j < inj.len() {
+                new_idx.push(inj[j]);
+                new_val.push(b[inj[j] as usize]);
+                j += 1;
+            }
+            new_ptr.push(new_val.len() as u32);
+        }
+        self.ptr = new_ptr;
+        self.idx = new_idx;
+        self.val = new_val;
+    }
+
+    /// In-place prune: drop every entry with `|value| <= eps`.
+    /// `eps = 0.0` drops exact zeros only (including `-0.0`), which is
+    /// lossless for every consumer; a positive `eps` is an explicit
+    /// approximation knob.  NaN entries are kept (they compare false
+    /// to everything) so upstream numeric corruption stays visible.
+    pub fn prune_below_epsilon(&mut self, eps: f32) {
+        assert!(eps >= 0.0, "eps must be nonnegative");
+        let mut w = 0usize; // write cursor: compact idx/val in place
+        let nblocks = self.num_blocks();
+        for bid in 0..nblocks {
+            let lo = self.ptr[bid] as usize;
+            let hi = self.ptr[bid + 1] as usize;
+            self.ptr[bid] = w as u32;
+            for t in lo..hi {
+                if self.val[t].abs() > eps || self.val[t].is_nan() {
+                    self.idx[w] = self.idx[t];
+                    self.val[w] = self.val[t];
+                    w += 1;
+                }
+            }
+        }
+        self.ptr[nblocks] = w as u32;
+        self.idx.truncate(w);
+        self.val.truncate(w);
+    }
+
+    /// In-place run truncation: drop every entry with zigzag index `>=
+    /// cutoff`.  Because the ASM/APX band mask is a zigzag *prefix*
+    /// (see `crate::jpeg::zigzag::band_cutoff`), applying the phi mask
+    /// to a sparse activation is exactly this truncation — it can only
+    /// shrink runs, never grow them.  The resident ReLU applies the
+    /// same truncation as a borrowed prefix slice per run (no
+    /// mutation); this is the standalone form for callers that want a
+    /// band-limited copy.
+    pub fn truncate_runs(&mut self, cutoff: u8) {
+        let mut w = 0usize;
+        let nblocks = self.num_blocks();
+        for bid in 0..nblocks {
+            let lo = self.ptr[bid] as usize;
+            let hi = self.ptr[bid + 1] as usize;
+            self.ptr[bid] = w as u32;
+            // runs are ascending, so the kept part is a prefix
+            for t in lo..hi {
+                if self.idx[t] >= cutoff {
+                    break;
+                }
+                self.idx[w] = self.idx[t];
+                self.val[w] = self.val[t];
+                w += 1;
+            }
+        }
+        self.ptr[nblocks] = w as u32;
+        self.idx.truncate(w);
+        self.val.truncate(w);
+    }
+
+    /// Elementwise sum of two batches with identical dims — the
+    /// residual shortcut addition, as an ascending two-pointer run
+    /// merge.  Indices present on one side keep their value verbatim
+    /// (`x + 0.0 == x` for stored nonzeros); indices present on both
+    /// store `a + b` unless the sum compares equal to `0.0`, matching
+    /// what dense addition followed by resparsification would keep.
+    pub fn merge_add(a: &SparseBlocks, b: &SparseBlocks) -> SparseBlocks {
+        assert_eq!(a.dims(), b.dims(), "merge_add dims mismatch");
+        let mut out = SparseBlocks::with_capacity(a.n, a.c, a.bh, a.bw, a.nnz() + b.nnz());
+        for bid in 0..a.num_blocks() {
+            let (ai, av) = a.block(bid);
+            let (bi, bv) = b.block(bid);
+            let (mut i, mut j) = (0usize, 0usize);
+            while i < ai.len() || j < bi.len() {
+                let ka = ai.get(i).copied().unwrap_or(64);
+                let kb = bi.get(j).copied().unwrap_or(64);
+                if ka < kb {
+                    out.idx.push(ka);
+                    out.val.push(av[i]);
+                    i += 1;
+                } else if kb < ka {
+                    out.idx.push(kb);
+                    out.val.push(bv[j]);
+                    j += 1;
+                } else {
+                    let v = av[i] + bv[j];
+                    if v != 0.0 {
+                        out.idx.push(ka);
+                        out.val.push(v);
+                    }
+                    i += 1;
+                    j += 1;
+                }
+            }
+            out.ptr.push(out.val.len() as u32);
+        }
+        out
+    }
+
     /// Sparsify a dense `(N, C, Bh, Bw, 64)` coefficient tensor,
     /// dropping exact zeros.
     pub fn from_dense(t: &Tensor) -> Self {
@@ -135,13 +353,7 @@ impl SparseBlocks {
         let mut out = SparseBlocks::with_capacity(n, c, bh, bw, t.len() / 4);
         let data = t.data();
         for bid in 0..nblocks {
-            let blk = &data[bid * 64..(bid + 1) * 64];
-            out.push_block(
-                blk.iter()
-                    .enumerate()
-                    .filter(|(_, &v)| v != 0.0)
-                    .map(|(k, &v)| (k as u8, v)),
-            );
+            out.push_dense_block(&data[bid * 64..(bid + 1) * 64]);
         }
         out
     }
@@ -290,6 +502,121 @@ mod tests {
         let mut want = a.data().to_vec();
         want.extend_from_slice(b.data());
         assert_eq!(dense.data(), &want[..]);
+    }
+
+    #[test]
+    fn scale_bias_matches_dense_affine() {
+        // (1, 2, 1, 2) blocks, channel-dependent scale + DC bias
+        let mut t = Tensor::zeros(&[1, 2, 1, 2, 64]);
+        t.set(&[0, 0, 0, 0, 0], 2.0); // ch0, DC stored
+        t.set(&[0, 0, 0, 0, 3], -1.0);
+        t.set(&[0, 1, 0, 1, 5], 4.0); // ch1, DC absent
+        let mut s = SparseBlocks::from_dense(&t);
+        let mut b0 = [0.0f32; 64];
+        b0[0] = 7.0;
+        let mut b1 = [0.0f32; 64];
+        b1[0] = -3.0;
+        s.scale_bias_per_index(&[[0.5f32; 64], [2.0f32; 64]], &[b0, b1]);
+        // dense oracle: v * scale[c] everywhere, + bias at DC
+        let mut want = Tensor::zeros(&[1, 2, 1, 2, 64]);
+        want.set(&[0, 0, 0, 0, 0], 2.0 * 0.5 + 7.0);
+        want.set(&[0, 0, 0, 0, 3], -0.5);
+        want.set(&[0, 0, 0, 1, 0], 7.0); // absent DC gains the bias
+        want.set(&[0, 1, 0, 0, 0], -3.0);
+        want.set(&[0, 1, 0, 1, 0], -3.0);
+        want.set(&[0, 1, 0, 1, 5], 8.0);
+        assert_eq!(s.to_dense(), want);
+        // runs stay ascending and zero-free
+        for bid in 0..s.num_blocks() {
+            let (idx, val) = s.block(bid);
+            assert!(idx.windows(2).all(|w| w[0] < w[1]));
+            assert!(val.iter().all(|&v| v != 0.0));
+        }
+    }
+
+    #[test]
+    fn scale_bias_drops_cancelled_entries() {
+        let mut t = Tensor::zeros(&[1, 1, 1, 1, 64]);
+        t.set(&[0, 0, 0, 0, 0], 1.0);
+        let mut s = SparseBlocks::from_dense(&t);
+        let mut bias = [0.0f32; 64];
+        bias[0] = -2.0; // 1.0 * 2.0 + (-2.0) == 0.0 -> dropped
+        s.scale_bias_per_index(&[[2.0f32; 64]], &[bias]);
+        assert_eq!(s.nnz(), 0);
+    }
+
+    #[test]
+    fn prune_below_epsilon_drops_small() {
+        let mut t = Tensor::zeros(&[1, 1, 1, 2, 64]);
+        t.set(&[0, 0, 0, 0, 1], 0.5);
+        t.set(&[0, 0, 0, 0, 9], 1e-8);
+        t.set(&[0, 0, 0, 1, 2], -1e-8);
+        t.set(&[0, 0, 0, 1, 7], f32::NAN);
+        let mut s = SparseBlocks::from_dense(&t);
+        assert_eq!(s.nnz(), 4);
+        s.prune_below_epsilon(1e-6);
+        assert_eq!(s.nnz(), 2);
+        assert_eq!(s.block(0), (&[1u8][..], &[0.5f32][..]));
+        // NaN survives the prune: corruption must stay visible
+        let (idx, val) = s.block(1);
+        assert_eq!(idx, &[7u8]);
+        assert!(val[0].is_nan());
+    }
+
+    #[test]
+    fn truncate_runs_is_prefix_and_monotone() {
+        let t = sample_dense();
+        for cutoff in [0u8, 1, 6, 15, 64] {
+            let mut s = SparseBlocks::from_dense(&t);
+            let before = s.nnz();
+            s.truncate_runs(cutoff);
+            assert!(s.nnz() <= before, "truncation must never grow nnz");
+            for bid in 0..s.num_blocks() {
+                let (idx, _) = s.block(bid);
+                assert!(idx.iter().all(|&k| k < cutoff));
+            }
+        }
+        let mut s = SparseBlocks::from_dense(&t);
+        s.truncate_runs(64);
+        assert_eq!(s, SparseBlocks::from_dense(&t), "cutoff 64 is identity");
+    }
+
+    #[test]
+    fn merge_add_matches_dense_add() {
+        let a = sample_dense();
+        let mut b = Tensor::zeros(&[2, 1, 2, 2, 64]);
+        b.set(&[0, 0, 0, 0, 0], 0.5);
+        b.set(&[0, 0, 0, 0, 5], 2.0); // cancels a's -2.0
+        b.set(&[1, 0, 0, 1, 9], 1.0);
+        let sa = SparseBlocks::from_dense(&a);
+        let sb = SparseBlocks::from_dense(&b);
+        let sum = SparseBlocks::merge_add(&sa, &sb);
+        assert_eq!(sum.to_dense(), a.add(&b));
+        // the exact cancellation at (0,0,0,0,5) is dropped, not stored
+        let (idx, _) = sum.block(0);
+        assert!(!idx.contains(&5));
+    }
+
+    #[test]
+    fn push_run_matches_push_block() {
+        let mut a = SparseBlocks::with_capacity(1, 1, 1, 1, 4);
+        a.push_run(&[0, 7], &[1.0, -2.0]);
+        let mut b = SparseBlocks::with_capacity(1, 1, 1, 1, 4);
+        b.push_block([(0u8, 1.0f32), (7, -2.0)]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn block_channel_follows_layout() {
+        let s = SparseBlocks::from_dense(&Tensor::zeros(&[2, 3, 2, 2, 64]));
+        for b in 0..2 {
+            for c in 0..3 {
+                for blk in 0..4 {
+                    let bid = (b * 3 + c) * 4 + blk;
+                    assert_eq!(s.block_channel(bid), c);
+                }
+            }
+        }
     }
 
     #[test]

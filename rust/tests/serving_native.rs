@@ -123,7 +123,7 @@ fn native_sparse_dense_and_reference_logits_agree() {
     let want = jpeg_forward(&cfg, &params, &f0.to_dense(), &qvec, 15, Method::Asm);
 
     let mut got = Vec::new();
-    for mode in [NativeMode::Sparse, NativeMode::Dense] {
+    for mode in [NativeMode::Sparse, NativeMode::Dense, NativeMode::SparseResident] {
         let e = NativeEngine::new(cfg.clone(), params.clone(), 15, Method::Asm, 1, mode);
         let p = NativePipeline::start(e, PipelineConfig::default());
         let logits: Vec<Vec<f32>> = files
@@ -133,6 +133,8 @@ fn native_sparse_dense_and_reference_logits_agree() {
         p.shutdown();
         got.push(logits);
     }
+    // the resident kernel is not merely close — it is the same arithmetic
+    assert_eq!(got[2], got[0], "sparse-resident logits must be bit-identical");
     for (i, (s, d)) in got[0].iter().zip(&got[1]).enumerate() {
         let srow = Tensor::from_vec(&[1, 4], s.clone());
         let drow = Tensor::from_vec(&[1, 4], d.clone());

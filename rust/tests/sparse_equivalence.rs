@@ -11,7 +11,8 @@ use jpegdomain::jpeg_domain::conv::{
     jpeg_conv_exploded_sparse,
 };
 use jpegdomain::jpeg_domain::network::{
-    jpeg_forward, jpeg_forward_exploded_sparse, ExplodedModel,
+    jpeg_forward, jpeg_forward_exploded_resident, jpeg_forward_exploded_sparse, ExplodedModel,
+    ResidencyTrace, RESIDENCY_POINTS,
 };
 use jpegdomain::jpeg_domain::relu::Method;
 use jpegdomain::jpeg_domain::{encode_tensor, qvec_flat};
@@ -159,6 +160,100 @@ fn from_coeff_images_matches_to_network_input() {
             "image {i}: {}",
             got.max_abs_diff(&want)
         );
+    }
+}
+
+#[test]
+fn resident_logits_bit_identical_across_qualities() {
+    // the tentpole guarantee: keeping activations in SparseBlocks form
+    // between layers changes nothing but the memory traffic — logits
+    // match the dense-boundary exploded path bit for bit at every
+    // tracked serving quality.  A slim model keeps the three per-qvec
+    // exploded precomputes affordable in debug test runs; the mnist
+    // preset is covered by the network unit tests.
+    let cfg = ModelConfig {
+        name: "slim".into(),
+        in_channels: 1,
+        num_classes: 10,
+        widths: [4, 4, 4],
+        image_size: 32,
+    };
+    let p = ParamSet::init(&cfg, 31);
+    let data = Dataset::synthetic(SynthKind::Mnist, 2, 2, 32);
+    for quality in [50u8, 75, 90] {
+        let files = data.jpeg_bytes(Split::Test, quality);
+        let cis: Vec<_> = files
+            .iter()
+            .map(|(b, _)| codec::decode_to_coefficients(b).unwrap())
+            .collect();
+        let qvec = cis[0].qvec(0);
+        let f0 = SparseBlocks::from_coeff_images(&cis);
+        let em = ExplodedModel::precompute(&p, &qvec);
+        let boundary = jpeg_forward_exploded_sparse(&cfg, &p, &f0, &em, &qvec, 15, Method::Asm, 1);
+        let mut tr = ResidencyTrace::new();
+        let resident = jpeg_forward_exploded_resident(
+            &cfg,
+            &p,
+            &f0,
+            &em,
+            &qvec,
+            15,
+            Method::Asm,
+            1,
+            Some(&mut tr),
+        );
+        assert_eq!(
+            resident, boundary,
+            "quality {quality}: resident logits must be bit-identical"
+        );
+        // threading must not perturb the resident path either
+        let threaded =
+            jpeg_forward_exploded_resident(&cfg, &p, &f0, &em, &qvec, 15, Method::Asm, 3, None);
+        assert_eq!(resident, threaded, "quality {quality}: threaded resident");
+        // the trace saw every observation point
+        for (i, label) in RESIDENCY_POINTS.iter().enumerate() {
+            assert!(tr.density(i) > 0.0, "quality {quality}: {label} density 0");
+        }
+        // lower quality = coarser quantizer = sparser input
+        assert!(tr.density(0) < 1.0, "quality {quality}: input not sparse");
+    }
+}
+
+#[test]
+fn asm_run_truncation_never_increases_nonzeros() {
+    // property test for the phi-mask-as-truncation claim: over random
+    // runs and every band budget, truncation only shrinks runs and
+    // keeps a prefix of the original
+    let mut rng = Rng::new(77);
+    for trial in 0..50 {
+        // random sparse block batch
+        let mut dense = Tensor::zeros(&[1, 1, 2, 2, 64]);
+        for bid in 0..4 {
+            for k in 0..64 {
+                if rng.uniform() < 0.3 {
+                    dense.set(&[0, 0, bid / 2, bid % 2, k], rng.normal());
+                }
+            }
+        }
+        let original = SparseBlocks::from_dense(&dense);
+        for nf in 1..=15usize {
+            let cutoff = jpegdomain::jpeg::zigzag::band_cutoff(nf) as u8;
+            let mut truncated = original.clone();
+            truncated.truncate_runs(cutoff);
+            assert!(
+                truncated.nnz() <= original.nnz(),
+                "trial {trial} nf {nf}: truncation grew nnz"
+            );
+            for bid in 0..original.num_blocks() {
+                let (oi, ov) = original.block(bid);
+                let (ti, tv) = truncated.block(bid);
+                assert!(ti.len() <= oi.len());
+                // kept entries are exactly the original prefix below the cutoff
+                let keep = oi.iter().position(|&k| k >= cutoff).unwrap_or(oi.len());
+                assert_eq!(ti, &oi[..keep], "trial {trial} nf {nf} bid {bid}");
+                assert_eq!(tv, &ov[..keep]);
+            }
+        }
     }
 }
 
