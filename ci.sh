@@ -38,6 +38,18 @@ echo "$RESIDENT_OUT" | grep -q "requests=6" \
 echo "$RESIDENT_OUT" | grep -q "nonzero fraction:" \
     || { echo "sparse-resident-smoke FAILED: no per-layer sparsity"; exit 1; }
 
+echo "== plan-smoke (execution-graph API: one topology, three executors) =="
+# `repro exp ablation` runs the plan-executor rows natively (no
+# artifacts needed); all three execution strategies must show up
+PLAN_OUT=$(./target/release/repro exp ablation --iters 1 --batch 6)
+echo "$PLAN_OUT"
+for row in "plan dense-kernel" "plan sparse-kernel" "plan sparse-resident"; do
+    echo "$PLAN_OUT" | grep -q "$row" \
+        || { echo "plan-smoke FAILED: missing row '$row'"; exit 1; }
+done
+echo "$PLAN_OUT" | grep -q "bit-identical: yes" \
+    || { echo "plan-smoke FAILED: sparse vs resident not bit-identical"; exit 1; }
+
 if cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check =="
     cargo fmt --check

@@ -1,13 +1,15 @@
-//! Perf probe: the sparse exploded-conv engine ablation + the
-//! dense-boundary vs sparse-resident forward ablation (native, always
-//! run) + per-stage timing of both PJRT serving pipelines (when
-//! artifacts are present).  Used by the EXPERIMENTS.md §Perf iteration
-//! log; emits `BENCH_PR3.json` (throughput rows + per-layer nonzero
-//! fractions) so successive PRs have a perf trajectory.
+//! Perf probe: the sparse exploded-conv engine ablation, the
+//! dense-boundary vs sparse-resident forward ablation, the
+//! plan-executor ablation (the three execution strategies over the
+//! single topology) and the prune-epsilon curve (native, always run) +
+//! per-stage timing of both PJRT serving pipelines (when artifacts are
+//! present).  Used by the EXPERIMENTS.md §Perf iteration log; emits
+//! `BENCH_PR4.json` (throughput rows + per-layer nonzero fractions +
+//! per-op plan timings) so successive PRs have a perf trajectory.
 //!
 //! Run: `cargo run --release --example perf_probe`
 //! Env: PP_QUALITY (50), PP_BATCH (40), PP_COUT (16), PP_ITERS (5),
-//!      PP_PASSES (2), PP_THREADS (4), PP_OUT (BENCH_PR3.json)
+//!      PP_PASSES (2), PP_THREADS (4), PP_OUT (BENCH_PR4.json)
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -121,6 +123,50 @@ fn native_probe(report: &mut BTreeMap<String, Json>) -> anyhow::Result<()> {
     }
     res.insert("layer_nonzero".into(), Json::Obj(layers));
     report.insert("residency".into(), Json::Obj(res));
+
+    // -- plan API: the three executors over the single topology -------------
+    let pa = bh::plan_executor_ablation(quality, batch, iters, threads)?;
+    bh::throughput::print_plan_ablation(&pa);
+    let mut plan = BTreeMap::new();
+    plan.insert("quality".into(), num(pa.quality as f64));
+    plan.insert("batch".into(), num(pa.batch as f64));
+    plan.insert("threads".into(), num(pa.threads as f64));
+    plan.insert("input_density".into(), num(pa.input_density));
+    plan.insert(
+        "sparse_vs_resident_bitwise".into(),
+        num(if pa.sparse_vs_resident_bitwise { 1.0 } else { 0.0 }),
+    );
+    plan.insert("dense_kernel_max_dev".into(), num(pa.dense_kernel_max_dev as f64));
+    for row in &pa.rows {
+        plan.insert(
+            format!("{}_images_per_sec", row.executor.replace('-', "_")),
+            num(row.images_per_sec),
+        );
+    }
+    let mut ops = BTreeMap::new();
+    for (i, (label, ms)) in pa.op_timings_ms.iter().enumerate() {
+        ops.insert(format!("{i:02} {label}"), num(*ms));
+    }
+    plan.insert("resident_op_ms".into(), Json::Obj(ops));
+    report.insert("plan_executors".into(), Json::Obj(plan));
+
+    // -- prune-epsilon curve (the paper's "little to no penalty" knob) ------
+    let pr = bh::prune_epsilon_ablation(quality, batch, iters, threads, &[0.0, 1e-4, 1e-3, 1e-2])?;
+    bh::throughput::print_prune(&pr);
+    let rows: Vec<Json> = pr
+        .rows
+        .iter()
+        .map(|row| {
+            let mut o = BTreeMap::new();
+            o.insert("epsilon".into(), num(row.epsilon as f64));
+            o.insert("images_per_sec".into(), num(row.images_per_sec));
+            o.insert("prediction_agreement".into(), num(row.prediction_agreement));
+            o.insert("max_logit_dev".into(), num(row.max_logit_dev as f64));
+            o.insert("mean_nonzero".into(), num(row.mean_nonzero));
+            Json::Obj(o)
+        })
+        .collect();
+    report.insert("prune_epsilon".into(), Json::Arr(rows));
     Ok(())
 }
 
@@ -215,7 +261,7 @@ fn main() -> anyhow::Result<()> {
         eprintln!("native probe failed: {e}");
     }
 
-    let out = std::env::var("PP_OUT").unwrap_or_else(|_| "BENCH_PR3.json".into());
+    let out = std::env::var("PP_OUT").unwrap_or_else(|_| "BENCH_PR4.json".into());
     std::fs::write(&out, format!("{}\n", Json::Obj(report)))?;
     println!("\nwrote {out}");
 

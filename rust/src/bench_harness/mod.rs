@@ -12,7 +12,8 @@ pub use blocks::{fig4a, Fig4aRow};
 pub use model_exps::{fig4b, fig4c, table1, Fig4Row, Table1Row};
 pub use throughput::{
     ablation_exploded, axpy_tiling_ablation, fig5, native_sparse_inference_throughput,
-    resident_forward_ablation, sparse_conv_ablation, AblationReport, AxpyReport, Fig5Row,
+    plan_executor_ablation, prune_epsilon_ablation, resident_forward_ablation,
+    sparse_conv_ablation, AblationReport, AxpyReport, Fig5Row, PlanAblationReport, PruneReport,
     ResidentReport, SparseConvReport,
 };
 

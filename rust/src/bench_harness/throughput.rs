@@ -17,7 +17,10 @@ use crate::jpeg_domain::conv::{
     explode_conv, jpeg_conv_dcc, jpeg_conv_exploded_dense, jpeg_conv_exploded_sparse,
     jpeg_conv_exploded_sparse_tiled, AxpyTiling,
 };
-use crate::jpeg_domain::network::{self, ExplodedModel};
+use crate::jpeg_domain::network::{ExplodedModel, ResidencyTrace, RESNET_PLAN};
+use crate::jpeg_domain::plan::{
+    Act, DccRef, DenseKernel, Executor, PlanCtx, PlanTimings, SparseKernel, SparseResident,
+};
 use crate::jpeg_domain::relu::Method;
 use crate::params::{ModelConfig, ParamSet};
 use crate::runtime::Session;
@@ -132,15 +135,19 @@ pub fn native_sparse_inference_throughput(
             }
             let qvec = cis[0].qvec(0);
             let f0 = SparseBlocks::from_coeff_images(&cis);
-            std::hint::black_box(network::jpeg_forward_exploded_sparse(
-                cfg,
+            let ctx = PlanCtx {
                 params,
-                &f0,
-                em,
-                &qvec,
-                15,
-                Method::Asm,
-                threads,
+                exploded: Some(em),
+                qvec: &qvec,
+                num_freqs: 15,
+                method: Method::Asm,
+            };
+            assert_eq!(f0.dims().1, cfg.in_channels);
+            std::hint::black_box(RESNET_PLAN.run(
+                &SparseKernel { threads },
+                &ctx,
+                &Act::Sparse(f0),
+                None,
             ));
             images += chunk.len();
         }
@@ -368,78 +375,54 @@ pub fn ablation_exploded(session: &Session, iters: usize) -> anyhow::Result<Abla
     let qjpeg = cis[0].qvec(0);
     let f0 = SparseBlocks::from_coeff_images(&cis);
     let input_density = f0.density();
-    let coeffs50 = f0.to_dense();
     let em = ExplodedModel::precompute(&params, &qjpeg);
+    let ctx = PlanCtx {
+        params: &params,
+        exploded: Some(&em),
+        qvec: &qjpeg,
+        num_freqs: 15,
+        method: Method::Asm,
+    };
+    let sparse_input = Act::Sparse(f0.clone());
+    let dense_input = Act::Dense(f0.to_dense());
 
     let t0 = Instant::now();
     for _ in 0..iters {
-        std::hint::black_box(crate::jpeg_domain::network::jpeg_forward(
-            &session.cfg,
-            &params,
-            &coeffs50,
-            &qjpeg,
-            15,
-            Method::Asm,
-        ));
+        std::hint::black_box(RESNET_PLAN.run(&DccRef, &ctx, &dense_input, None));
     }
     let native_dcc_fwd_ms_per_batch = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
 
-    let t0 = Instant::now();
-    for _ in 0..iters {
-        std::hint::black_box(network::jpeg_forward_exploded_sparse(
-            &session.cfg,
-            &params,
-            &f0,
-            &em,
-            &qjpeg,
-            15,
-            Method::Asm,
-            1,
-        ));
-    }
-    let sparse_fwd_ms_per_batch = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
-
-    let t0 = Instant::now();
-    for _ in 0..iters {
-        std::hint::black_box(network::jpeg_forward_exploded_sparse(
-            &session.cfg,
-            &params,
-            &f0,
-            &em,
-            &qjpeg,
-            15,
-            Method::Asm,
-            threads,
-        ));
-    }
-    let sparse_fwd_threaded_ms_per_batch = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+    let sparse_ms = |threads: usize| {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(RESNET_PLAN.run(
+                &SparseKernel { threads },
+                &ctx,
+                &sparse_input,
+                None,
+            ));
+        }
+        t0.elapsed().as_secs_f64() * 1e3 / iters as f64
+    };
+    let sparse_fwd_ms_per_batch = sparse_ms(1);
+    let sparse_fwd_threaded_ms_per_batch = sparse_ms(threads);
 
     // -- sparse-resident: activations stay in SparseBlocks between layers --
-    let mut tr = network::ResidencyTrace::new();
-    network::jpeg_forward_exploded_resident(
-        &session.cfg,
-        &params,
-        &f0,
-        &em,
-        &qjpeg,
-        15,
-        Method::Asm,
-        1,
+    let mut tr = ResidencyTrace::new();
+    RESNET_PLAN.run(
+        &SparseResident { threads: 1, prune_epsilon: 0.0 },
+        &ctx,
+        &sparse_input,
         Some(&mut tr),
     );
     let resident_layer_density = tr.densities();
     let resident_ms = |threads: usize| {
         let t0 = Instant::now();
         for _ in 0..iters {
-            std::hint::black_box(network::jpeg_forward_exploded_resident(
-                &session.cfg,
-                &params,
-                &f0,
-                &em,
-                &qjpeg,
-                15,
-                Method::Asm,
-                threads,
+            std::hint::black_box(RESNET_PLAN.run(
+                &SparseResident { threads, prune_epsilon: 0.0 },
+                &ctx,
+                &sparse_input,
                 None,
             ));
         }
@@ -674,6 +657,29 @@ pub fn axpy_tiling_ablation(quality: u8, batch: usize, cout: usize, iters: usize
     }
 }
 
+/// Shared fixture of the native forward ablations: mnist preset
+/// parameters plus a real entropy-decoded batch (synthetic images ->
+/// encoder -> entropy decode) and its precomputed exploded maps.
+fn native_forward_fixture(
+    quality: u8,
+    batch: usize,
+    seed: u64,
+) -> anyhow::Result<(ParamSet, [f32; 64], SparseBlocks, ExplodedModel)> {
+    let cfg = ModelConfig::preset("mnist")
+        .ok_or_else(|| anyhow::anyhow!("mnist preset missing"))?;
+    let params = ParamSet::init(&cfg, 0);
+    let files = Dataset::synthetic(SynthKind::Mnist, 2, batch, seed).jpeg_bytes(Split::Test, quality);
+    let cis: Vec<_> = files
+        .iter()
+        .map(|(b, _)| codec::decode_to_coefficients(b).expect("decode"))
+        .collect();
+    let qvec = cis[0].qvec(0);
+    let f0 = SparseBlocks::from_coeff_images(&cis);
+    anyhow::ensure!(f0.dims().1 == cfg.in_channels, "channel mismatch");
+    let em = ExplodedModel::precompute(&params, &qvec);
+    Ok((params, qvec, f0, em))
+}
+
 /// Dense-boundary vs sparse-resident forward ablation on a real
 /// entropy-decoded batch — the tentpole before/after of activation
 /// residency.  Both paths run the same gather-free conv kernel; the
@@ -709,41 +715,22 @@ pub fn resident_forward_ablation(
     let threads = crate::config::resolve_threads(threads);
     let iters = iters.max(1);
     let batch = batch.max(1);
-    let cfg = ModelConfig::preset("mnist")
-        .ok_or_else(|| anyhow::anyhow!("mnist preset missing"))?;
-    let params = ParamSet::init(&cfg, 0);
-    let files = Dataset::synthetic(SynthKind::Mnist, 2, batch, 41).jpeg_bytes(Split::Test, quality);
-    let cis: Vec<_> = files
-        .iter()
-        .map(|(b, _)| codec::decode_to_coefficients(b).expect("decode"))
-        .collect();
-    let qvec = cis[0].qvec(0);
-    let f0 = SparseBlocks::from_coeff_images(&cis);
-    let em = ExplodedModel::precompute(&params, &qvec);
+    let (params, qvec, f0, em) = native_forward_fixture(quality, batch, 41)?;
+    let ctx = PlanCtx {
+        params: &params,
+        exploded: Some(&em),
+        qvec: &qvec,
+        num_freqs: 15,
+        method: Method::Asm,
+    };
+    let input = Act::Sparse(f0.clone());
+    let boundary_exec = SparseKernel { threads };
+    let resident_exec = SparseResident { threads, prune_epsilon: 0.0 };
 
     // correctness + layer densities first
-    let boundary = network::jpeg_forward_exploded_sparse(
-        &cfg,
-        &params,
-        &f0,
-        &em,
-        &qvec,
-        15,
-        Method::Asm,
-        threads,
-    );
-    let mut tr = network::ResidencyTrace::new();
-    let resident = network::jpeg_forward_exploded_resident(
-        &cfg,
-        &params,
-        &f0,
-        &em,
-        &qvec,
-        15,
-        Method::Asm,
-        threads,
-        Some(&mut tr),
-    );
+    let boundary = RESNET_PLAN.run(&boundary_exec, &ctx, &input, None);
+    let mut tr = ResidencyTrace::new();
+    let resident = RESNET_PLAN.run(&resident_exec, &ctx, &input, Some(&mut tr));
     let max_abs_diff = resident.max_abs_diff(&boundary);
 
     let images = (batch * iters) as f64;
@@ -755,29 +742,10 @@ pub fn resident_forward_ablation(
         t0.elapsed().as_secs_f64()
     };
     let boundary_s = time(&mut || {
-        std::hint::black_box(network::jpeg_forward_exploded_sparse(
-            &cfg,
-            &params,
-            &f0,
-            &em,
-            &qvec,
-            15,
-            Method::Asm,
-            threads,
-        ));
+        std::hint::black_box(RESNET_PLAN.run(&boundary_exec, &ctx, &input, None));
     });
     let resident_s = time(&mut || {
-        std::hint::black_box(network::jpeg_forward_exploded_resident(
-            &cfg,
-            &params,
-            &f0,
-            &em,
-            &qvec,
-            15,
-            Method::Asm,
-            threads,
-            None,
-        ));
+        std::hint::black_box(RESNET_PLAN.run(&resident_exec, &ctx, &input, None));
     });
 
     Ok(ResidentReport {
@@ -819,6 +787,250 @@ pub fn print_resident(r: &ResidentReport) {
         "max |resident - boundary| = {:.1e}; nonzero fraction: {}",
         r.max_abs_diff,
         layers.join(" ")
+    );
+}
+
+/// One executor row of the plan ablation.
+#[derive(Clone, Debug)]
+pub struct PlanExecRow {
+    /// `Executor::name()` of the strategy measured.
+    pub executor: &'static str,
+    pub images_per_sec: f64,
+}
+
+/// The plan-executor ablation: the three exploded execution strategies
+/// over the single topology (`network::RESNET_PLAN`), on a real
+/// entropy-decoded batch.  Needs no PJRT artifacts — this is what
+/// `ci.sh`'s plan-smoke runs.
+#[derive(Clone, Debug)]
+pub struct PlanAblationReport {
+    pub quality: u8,
+    pub batch: usize,
+    pub threads: usize,
+    /// Input density of the entropy-decoded batch, in [0, 1].
+    pub input_density: f64,
+    /// One row per executor, in `dense-kernel`, `sparse-kernel`,
+    /// `sparse-resident` order.
+    pub rows: Vec<PlanExecRow>,
+    /// sparse-kernel and sparse-resident logits compare equal bitwise.
+    pub sparse_vs_resident_bitwise: bool,
+    /// Max |dense-kernel - sparse-kernel| over the logits.
+    pub dense_kernel_max_dev: f32,
+    /// `(op label, ms)` per node of one sparse-resident forward — the
+    /// per-op timing observer hook in action.
+    pub op_timings_ms: Vec<(String, f64)>,
+}
+
+/// Measure the three executors through `Plan::run` on a
+/// quality-`quality` synthetic mnist batch.  `threads = 0` resolves to
+/// the hardware parallelism.
+pub fn plan_executor_ablation(
+    quality: u8,
+    batch: usize,
+    iters: usize,
+    threads: usize,
+) -> anyhow::Result<PlanAblationReport> {
+    let threads = crate::config::resolve_threads(threads);
+    let iters = iters.max(1);
+    let batch = batch.max(1);
+    let (params, qvec, f0, em) = native_forward_fixture(quality, batch, 47)?;
+    let ctx = PlanCtx {
+        params: &params,
+        exploded: Some(&em),
+        qvec: &qvec,
+        num_freqs: 15,
+        method: Method::Asm,
+    };
+    let sparse_input = Act::Sparse(f0.clone());
+    let dense_input = Act::Dense(f0.to_dense());
+    let sparse_exec = SparseKernel { threads };
+    let resident_exec = SparseResident { threads, prune_epsilon: 0.0 };
+
+    // correctness before throughput
+    let l_sparse = RESNET_PLAN.run(&sparse_exec, &ctx, &sparse_input, None);
+    let l_resident = RESNET_PLAN.run(&resident_exec, &ctx, &sparse_input, None);
+    let l_dense = RESNET_PLAN.run(&DenseKernel, &ctx, &dense_input, None);
+    let sparse_vs_resident_bitwise = l_resident == l_sparse;
+    let dense_kernel_max_dev = l_dense.max_abs_diff(&l_sparse);
+
+    // per-op timing through the observer hook (one resident forward)
+    let mut timings = PlanTimings::default();
+    RESNET_PLAN.run(&resident_exec, &ctx, &sparse_input, Some(&mut timings));
+    let op_timings_ms: Vec<(String, f64)> = timings
+        .ops
+        .iter()
+        .map(|(label, d)| (label.clone(), d.as_secs_f64() * 1e3))
+        .collect();
+
+    let images = (batch * iters) as f64;
+    let mut rows = Vec::new();
+    let mut measure = |exec: &dyn Executor, input: &Act| {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(RESNET_PLAN.run(exec, &ctx, input, None));
+        }
+        rows.push(PlanExecRow {
+            executor: exec.name(),
+            images_per_sec: images / t0.elapsed().as_secs_f64(),
+        });
+    };
+    measure(&DenseKernel, &dense_input);
+    measure(&sparse_exec, &sparse_input);
+    measure(&resident_exec, &sparse_input);
+
+    Ok(PlanAblationReport {
+        quality,
+        batch,
+        threads,
+        input_density: f0.density(),
+        rows,
+        sparse_vs_resident_bitwise,
+        dense_kernel_max_dev,
+        op_timings_ms,
+    })
+}
+
+pub fn print_plan_ablation(r: &PlanAblationReport) {
+    super::print_table(
+        &format!(
+            "Plan executor ablation — one topology, three strategies (quality {}, batch {}, \
+             {} threads, input density {:.3})",
+            r.quality, r.batch, r.threads, r.input_density
+        ),
+        &["executor", "images/s"],
+        &r.rows
+            .iter()
+            .map(|row| vec![format!("plan {}", row.executor), format!("{:.1}", row.images_per_sec)])
+            .collect::<Vec<_>>(),
+    );
+    println!(
+        "sparse-kernel vs sparse-resident bit-identical: {}; max |dense-kernel - sparse-kernel| \
+         = {:.2e}",
+        if r.sparse_vs_resident_bitwise { "yes" } else { "NO" },
+        r.dense_kernel_max_dev
+    );
+    // the three slowest ops, from the per-op observer
+    let mut by_cost = r.op_timings_ms.clone();
+    by_cost.sort_by(|a, b| b.1.total_cmp(&a.1));
+    let top: Vec<String> = by_cost
+        .iter()
+        .take(3)
+        .map(|(l, ms)| format!("{l} {ms:.2}ms"))
+        .collect();
+    println!("slowest resident ops: {}", top.join(", "));
+}
+
+/// One epsilon row of the prune ablation.
+#[derive(Clone, Debug)]
+pub struct PruneRow {
+    pub epsilon: f32,
+    pub images_per_sec: f64,
+    /// Fraction of predictions that match the exact (eps = 0) forward.
+    pub prediction_agreement: f64,
+    /// Max |logits(eps) - logits(0)|.
+    pub max_logit_dev: f32,
+    /// Mean nonzero fraction across the residency points.
+    pub mean_nonzero: f64,
+}
+
+/// The accuracy-vs-throughput curve of the plan-level
+/// `prune_epsilon` knob (the paper's "little to no penalty" claim):
+/// each epsilon runs the sparse-resident executor with post-ReLU
+/// magnitude pruning and is compared against the exact forward.
+#[derive(Clone, Debug)]
+pub struct PruneReport {
+    pub quality: u8,
+    pub batch: usize,
+    pub threads: usize,
+    /// Input density of the entropy-decoded batch, in [0, 1].
+    pub input_density: f64,
+    pub rows: Vec<PruneRow>,
+}
+
+/// Run the prune ablation on a quality-`quality` synthetic mnist
+/// batch.  `threads = 0` resolves to the hardware parallelism.
+pub fn prune_epsilon_ablation(
+    quality: u8,
+    batch: usize,
+    iters: usize,
+    threads: usize,
+    epsilons: &[f32],
+) -> anyhow::Result<PruneReport> {
+    let threads = crate::config::resolve_threads(threads);
+    let iters = iters.max(1);
+    let batch = batch.max(1);
+    anyhow::ensure!(!epsilons.is_empty(), "need at least one epsilon");
+    let (params, qvec, f0, em) = native_forward_fixture(quality, batch, 53)?;
+    let ctx = PlanCtx {
+        params: &params,
+        exploded: Some(&em),
+        qvec: &qvec,
+        num_freqs: 15,
+        method: Method::Asm,
+    };
+    let input = Act::Sparse(f0.clone());
+
+    // the exact forward is the accuracy baseline
+    let exact = RESNET_PLAN.run(
+        &SparseResident { threads, prune_epsilon: 0.0 },
+        &ctx,
+        &input,
+        None,
+    );
+    let exact_preds = exact.argmax_last();
+
+    let images = (batch * iters) as f64;
+    let mut rows = Vec::new();
+    for &eps in epsilons {
+        let exec = SparseResident { threads, prune_epsilon: eps.max(0.0) };
+        let mut tr = ResidencyTrace::new();
+        let logits = RESNET_PLAN.run(&exec, &ctx, &input, Some(&mut tr));
+        let preds = logits.argmax_last();
+        let agree = preds
+            .iter()
+            .zip(&exact_preds)
+            .filter(|(a, b)| a == b)
+            .count() as f64
+            / preds.len().max(1) as f64;
+        let mean_nonzero = {
+            let d = tr.densities();
+            d.iter().map(|(_, v)| *v).sum::<f64>() / d.len() as f64
+        };
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(RESNET_PLAN.run(&exec, &ctx, &input, None));
+        }
+        rows.push(PruneRow {
+            epsilon: eps,
+            images_per_sec: images / t0.elapsed().as_secs_f64(),
+            prediction_agreement: agree,
+            max_logit_dev: logits.max_abs_diff(&exact),
+            mean_nonzero,
+        });
+    }
+    Ok(PruneReport { quality, batch, threads, input_density: f0.density(), rows })
+}
+
+pub fn print_prune(r: &PruneReport) {
+    super::print_table(
+        &format!(
+            "Prune-epsilon ablation — accuracy vs throughput (quality {}, batch {}, {} threads, \
+             input density {:.3})",
+            r.quality, r.batch, r.threads, r.input_density
+        ),
+        &["epsilon", "images/s", "prediction agreement", "max logit dev", "mean nonzero"],
+        &r.rows
+            .iter()
+            .map(|row| {
+                vec![
+                    format!("{:.0e}", row.epsilon),
+                    format!("{:.1}", row.images_per_sec),
+                    format!("{:.3}", row.prediction_agreement),
+                    format!("{:.2e}", row.max_logit_dev),
+                    format!("{:.3}", row.mean_nonzero),
+                ]
+            })
+            .collect::<Vec<_>>(),
     );
 }
 
@@ -879,6 +1091,7 @@ pub fn print_sparse_conv(r: &SparseConvReport) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::jpeg_domain::network::RESIDENCY_POINTS;
     use crate::runtime::Engine;
     use std::path::PathBuf;
     use std::sync::Arc;
@@ -942,11 +1155,39 @@ mod tests {
         assert!(r.resident_images_per_sec > 0.0);
         assert_eq!(
             r.layer_density.len(),
-            network::RESIDENCY_POINTS.len(),
+            RESIDENCY_POINTS.len(),
             "one density per observation point"
         );
         assert_eq!(r.layer_density[0].0, "input");
         print_resident(&r); // smoke the printer
+    }
+
+    #[test]
+    fn plan_ablation_runs_without_artifacts() {
+        let r = plan_executor_ablation(50, 2, 1, 1).unwrap();
+        assert_eq!((r.quality, r.batch, r.threads), (50, 2, 1));
+        assert!(r.sparse_vs_resident_bitwise, "resident must match sparse bitwise");
+        assert!(r.dense_kernel_max_dev < 1e-2, "dev {}", r.dense_kernel_max_dev);
+        let names: Vec<_> = r.rows.iter().map(|row| row.executor).collect();
+        assert_eq!(names, ["dense-kernel", "sparse-kernel", "sparse-resident"]);
+        assert!(r.rows.iter().all(|row| row.images_per_sec > 0.0));
+        // one timing per plan node, via the observer hook
+        assert_eq!(r.op_timings_ms.len(), RESNET_PLAN.len());
+        print_plan_ablation(&r); // smoke the printer
+    }
+
+    #[test]
+    fn prune_ablation_epsilon_zero_is_exact() {
+        let r = prune_epsilon_ablation(50, 2, 1, 1, &[0.0, 0.05]).unwrap();
+        assert_eq!(r.rows.len(), 2);
+        assert_eq!(r.rows[0].max_logit_dev, 0.0, "eps 0 is the exact forward");
+        assert_eq!(r.rows[0].prediction_agreement, 1.0);
+        for row in &r.rows {
+            assert!(row.images_per_sec > 0.0);
+            assert!((0.0..=1.0).contains(&row.prediction_agreement));
+            assert!(row.mean_nonzero > 0.0 && row.mean_nonzero <= 1.0);
+        }
+        print_prune(&r); // smoke the printer
     }
 
     #[test]

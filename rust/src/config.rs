@@ -150,6 +150,10 @@ pub struct RunConfig {
     pub seed: u64,
     /// Worker threads for the sparse execution paths (`0` = auto).
     pub threads: usize,
+    /// Post-ReLU magnitude prune of the sparse-resident executor
+    /// (`0.0` = exact; the paper's "little to no penalty" knob,
+    /// measured by `repro exp prune`).
+    pub prune_epsilon: f32,
 }
 
 impl Default for RunConfig {
@@ -160,6 +164,7 @@ impl Default for RunConfig {
             quality: 95,
             seed: 0,
             threads: 0,
+            prune_epsilon: 0.0,
         }
     }
 }
@@ -177,6 +182,7 @@ impl RunConfig {
             quality: cfg.usize_or("run", "quality", d.quality as usize) as u8,
             seed: cfg.usize_or("run", "seed", d.seed as usize) as u64,
             threads: cfg.usize_or("run", "threads", d.threads),
+            prune_epsilon: cfg.f32_or("run", "prune_epsilon", d.prune_epsilon),
         }
     }
 
@@ -290,6 +296,10 @@ verbose = true
         assert_eq!(r.quality, 85);
         assert_eq!(r.seed, 3);
         assert_eq!(r.threads, 0, "threads defaults to auto");
+        assert_eq!(r.prune_epsilon, 0.0, "prune defaults to exact");
+        let c2 = Config::parse("[run]\nprune_epsilon = 0.001\n").unwrap();
+        let r2 = RunConfig::from_config(&c2);
+        assert!((r2.prune_epsilon - 0.001).abs() < 1e-9);
     }
 
     #[test]

@@ -264,7 +264,9 @@ fn axpy_tail(
 /// Gather-free kernel core: compute output rows `[r0, r0 + out.len() /
 /// (cout*64))` into `out`, walking only stored nonzeros of each 3x3
 /// block neighborhood.  `out` must be zeroed, row-major `(rows,
-/// cout*64)`.
+/// cout*64)`.  `occupied`, when given, marks the rows whose input
+/// neighborhood stores at least one coefficient — the others are
+/// provably zero and skipped outright (see [`occupied_output_rows`]).
 fn sparse_rows_into(
     f: &SparseBlocks,
     xi: &Tensor,
@@ -273,6 +275,7 @@ fn sparse_rows_into(
     r0: usize,
     out: &mut [f32],
     tiling: AxpyTiling,
+    occupied: Option<&[bool]>,
 ) {
     let (_, c, bh, bw) = f.dims();
     let (bho, bwo) = out_blocks(bh, bw, stride);
@@ -282,6 +285,11 @@ fn sparse_rows_into(
     let nrows = out.len() / xw;
     for rloc in 0..nrows {
         let r = r0 + rloc;
+        if let Some(occ) = occupied {
+            if !occ[r] {
+                continue; // empty 3x3 neighborhood: the row stays zero
+            }
+        }
         let orow = &mut out[rloc * xw..(rloc + 1) * xw];
         let b = r / (bho * bwo);
         let rem = r % (bho * bwo);
@@ -307,13 +315,16 @@ fn sparse_rows_into(
 /// runs, dropping exact zeros — the sparse-resident twin of
 /// [`rows_to_coeff_tensor`] (one scan either way, but no dense
 /// `(N, Cout, Bho, Bwo, 64)` intermediate for the next layer to
-/// re-scan).
+/// re-scan).  Rows marked unoccupied skip the 64-wide scan and become
+/// empty runs directly — bit-identical, since an unoccupied row is
+/// provably all-zero and `push_dense_block` over zeros stores nothing.
 fn rows_to_sparse_blocks(
     rows: &[f32],
     n: usize,
     cout: usize,
     bho: usize,
     bwo: usize,
+    occupied: Option<&[bool]>,
 ) -> SparseBlocks {
     let xw = cout * 64;
     let mut out = SparseBlocks::with_capacity(n, cout, bho, bwo, rows.len() / 2);
@@ -321,12 +332,44 @@ fn rows_to_sparse_blocks(
         for co in 0..cout {
             for oy in 0..bho {
                 for ox in 0..bwo {
-                    out.push_dense_block(&rows[((b * bho + oy) * bwo + ox) * xw + co * 64..][..64]);
+                    let row = (b * bho + oy) * bwo + ox;
+                    if occupied.map_or(false, |occ| !occ[row]) {
+                        out.push_block(std::iter::empty());
+                        continue;
+                    }
+                    out.push_dense_block(&rows[row * xw + co * 64..][..64]);
                 }
             }
         }
     }
     out
+}
+
+/// Per-output-row occupancy cursor for the resident kernel: row `r` is
+/// provably all-zero when every block of its 3x3 input neighborhood
+/// stores no coefficients.  The per-block CSR pointers (the same
+/// cursors behind `SparseBlocks::block_nnz` /
+/// `SparseBlocks::block_last_nonzero`) make this an O(1) check per
+/// neighbor, so threading the mask through the kernel turns the
+/// dense-row accumulation waste on empty regions into an outright
+/// skip — of both the axpy accumulation and the 64-wide re-sparsify
+/// scan.
+fn occupied_output_rows(f: &SparseBlocks, stride: usize) -> Vec<bool> {
+    let (n, c, bh, bw) = f.dims();
+    let (bho, bwo) = out_blocks(bh, bw, stride);
+    let mut occ = vec![false; n * bho * bwo];
+    for (r, o) in occ.iter_mut().enumerate() {
+        let b = r / (bho * bwo);
+        let rem = r % (bho * bwo);
+        let (oy, ox) = (rem / bwo, rem % bwo);
+        *o = (0..9).any(|delta| match neighbor(oy, ox, delta, stride, bh, bw) {
+            Some((iy, ix)) => {
+                (0..c).any(|ci| f.block_nnz(((b * c + ci) * bh + iy) * bw + ix) > 0)
+            }
+            None => false,
+        });
+    }
+    occ
 }
 
 /// Apply a materialized exploded map to sparse block input and keep the
@@ -344,8 +387,9 @@ pub fn jpeg_conv_exploded_sparse_resident(
 ) -> SparseBlocks {
     let (n, _, bh, bw) = f.dims();
     let (bho, bwo) = out_blocks(bh, bw, stride);
-    let rows = compute_sparse_rows(f, xi, cout, stride, threads, AxpyTiling::Unroll8);
-    rows_to_sparse_blocks(&rows, n, cout, bho, bwo)
+    let occ = occupied_output_rows(f, stride);
+    let rows = compute_sparse_rows(f, xi, cout, stride, threads, AxpyTiling::Unroll8, Some(&occ));
+    rows_to_sparse_blocks(&rows, n, cout, bho, bwo, Some(&occ))
 }
 
 /// Shared driver of the gather-free kernel: produce the row-major
@@ -357,6 +401,7 @@ fn compute_sparse_rows(
     stride: usize,
     threads: usize,
     tiling: AxpyTiling,
+    occupied: Option<&[bool]>,
 ) -> Vec<f32> {
     let (n, _, bh, bw) = f.dims();
     let (bho, bwo) = out_blocks(bh, bw, stride);
@@ -365,12 +410,14 @@ fn compute_sparse_rows(
     let mut out = vec![0.0f32; rows * xw];
     let threads = threads.max(1).min(rows.max(1));
     if threads <= 1 {
-        sparse_rows_into(f, xi, cout, stride, 0, &mut out, tiling);
+        sparse_rows_into(f, xi, cout, stride, 0, &mut out, tiling, occupied);
     } else {
         let chunk = rows.div_ceil(threads);
         std::thread::scope(|s| {
             for (i, buf) in out.chunks_mut(chunk * xw).enumerate() {
-                s.spawn(move || sparse_rows_into(f, xi, cout, stride, i * chunk, buf, tiling));
+                s.spawn(move || {
+                    sparse_rows_into(f, xi, cout, stride, i * chunk, buf, tiling, occupied)
+                });
             }
         });
     }
@@ -406,7 +453,7 @@ pub fn jpeg_conv_exploded_sparse_tiled(
 ) -> Tensor {
     let (n, _, bh, bw) = f.dims();
     let (bho, bwo) = out_blocks(bh, bw, stride);
-    let out = compute_sparse_rows(f, xi, cout, stride, threads, tiling);
+    let out = compute_sparse_rows(f, xi, cout, stride, threads, tiling, None);
     rows_to_coeff_tensor(&out, n, cout, bho, bwo)
 }
 
@@ -593,6 +640,39 @@ mod tests {
             assert_eq!(resident, SparseBlocks::from_dense(&dense_out));
             let threaded = jpeg_conv_exploded_sparse_resident(&fs, &xi, 3, stride, 4);
             assert_eq!(resident, threaded);
+        }
+    }
+
+    #[test]
+    fn resident_conv_skips_empty_neighborhoods_bit_identically() {
+        // image 2 of the batch is all zeros: every one of its output
+        // rows has an empty 3x3 neighborhood, so the occupancy cursor
+        // skips both the accumulation and the re-sparsify scan — and
+        // the result must still equal the dense path's sparsified
+        // output, with empty runs for the zero image
+        let q = crate::jpeg::QuantTable::luma(50).as_f32();
+        let x = rand(&[2, 2, 32, 32], 25);
+        let mut d = x.data().to_vec();
+        for v in &mut d[2 * 32 * 32..] {
+            *v = 0.0; // zero both channels of image 2
+        }
+        let x = Tensor::from_vec(&[2, 2, 32, 32], d);
+        let w = rand(&[3, 2, 3, 3], 26);
+        let f = encode_tensor(&x, &q);
+        let fs = SparseBlocks::from_dense(&f);
+        for stride in [1usize, 2] {
+            let xi = explode_conv(&w, &q, stride);
+            let dense_out = jpeg_conv_exploded_sparse(&fs, &xi, 3, stride, 1);
+            let resident = jpeg_conv_exploded_sparse_resident(&fs, &xi, 3, stride, 1);
+            assert_eq!(resident, SparseBlocks::from_dense(&dense_out), "stride {stride}");
+            // image 2's blocks are all empty runs
+            let (_, _, bho, bwo) = resident.dims();
+            let per_image = 3 * bho * bwo;
+            for bid in per_image..2 * per_image {
+                assert_eq!(resident.block_nnz(bid), 0, "bid {bid}");
+            }
+            // threaded path agrees with the mask applied per chunk
+            assert_eq!(resident, jpeg_conv_exploded_sparse_resident(&fs, &xi, 3, stride, 4));
         }
     }
 

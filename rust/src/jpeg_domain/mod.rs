@@ -16,9 +16,12 @@
 //!   over dense tensors and over sparse runs ([`conv`], [`batchnorm`],
 //!   [`relu`]); the sparse forms perform the identical float
 //!   operations on the identical nonzeros, so the sparse-resident
-//!   forward ([`network::jpeg_forward_exploded_resident`]) is
-//!   bit-identical to the dense-boundary one
-//!   ([`network::jpeg_forward_exploded_sparse`]).
+//!   execution strategy ([`plan::SparseResident`]) is bit-identical to
+//!   the dense-boundary one ([`plan::SparseKernel`]).
+//! * **One topology, many strategies** — the network is data: the
+//!   single ResNet graph ([`network::RESNET_PLAN`]) runs under any
+//!   [`plan::Executor`]; execution modes differ only in kernels and
+//!   activation representation, never in layer sequencing.
 //! * **Band masks are zigzag prefixes** — the ASM/APX phi mask keeps
 //!   the lowest spatial-frequency bands, which are contiguous leading
 //!   zigzag indices ([`crate::jpeg::zigzag::band_cutoff`]); on runs,
@@ -28,6 +31,7 @@ pub mod batchnorm;
 pub mod conv;
 pub mod harmonic;
 pub mod network;
+pub mod plan;
 pub mod relu;
 
 use once_cell::sync::Lazy;

@@ -1,92 +1,27 @@
 //! The full JPEG-domain residual classifier (paper Figure 3, §4) in rust.
 //!
+//! Since the `Plan`/`Executor` redesign this module holds exactly one
+//! topology definition — [`resnet_plan`] / [`RESNET_PLAN`] — consumed
+//! by every execution mode, plus the per-`(ParamSet, qvec)` exploded
+//! precompute ([`ExplodedModel`]) and the residency accounting
+//! ([`ResidencyTrace`]).  The old per-mode forward functions remain as
+//! deprecated shims over [`Plan::run`].
+//!
 //! Consumes the SAME `ParamSet` as `nn::spatial_forward` — model
 //! conversion (paper §4.6) is the identity on parameters.  Eval mode
 //! only; training runs through the AOT artifacts.
 
+use once_cell::sync::Lazy;
+
 use crate::params::{ModelConfig, ParamSet};
 use crate::tensor::{SparseBlocks, Tensor};
 
-use super::batchnorm::{
-    jpeg_batch_norm_eval, jpeg_batch_norm_eval_sparse, jpeg_global_avg_pool,
-    jpeg_global_avg_pool_sparse,
+use super::conv::explode_conv;
+use super::plan::{
+    Act, DccRef, DenseKernel, Plan, PlanBuilder, PlanCtx, PlanObserver, SparseKernel,
+    SparseResident,
 };
-use super::conv::{
-    explode_conv, jpeg_conv_dcc, jpeg_conv_exploded_dense, jpeg_conv_exploded_sparse,
-    jpeg_conv_exploded_sparse_resident,
-};
-use super::relu::{jpeg_relu, jpeg_relu_sparse, Method};
-
-fn bn(p: &ParamSet, prefix: &str, f: &Tensor, q: &[f32; 64]) -> Tensor {
-    jpeg_batch_norm_eval(
-        f,
-        q,
-        p.get(&format!("{prefix}.gamma")),
-        p.get(&format!("{prefix}.beta")),
-        p.get(&format!("{prefix}.rmean")),
-        p.get(&format!("{prefix}.rvar")),
-    )
-}
-
-/// In-place sparse-resident BN by parameter prefix (the run-rewrite
-/// twin of [`bn`]).
-fn bn_sparse(p: &ParamSet, prefix: &str, f: &mut SparseBlocks, q: &[f32; 64]) {
-    jpeg_batch_norm_eval_sparse(
-        f,
-        q,
-        p.get(&format!("{prefix}.gamma")),
-        p.get(&format!("{prefix}.beta")),
-        p.get(&format!("{prefix}.rmean")),
-        p.get(&format!("{prefix}.rvar")),
-    );
-}
-
-#[allow(clippy::too_many_arguments)]
-fn res_block(
-    p: &ParamSet,
-    prefix: &str,
-    f: &Tensor,
-    q: &[f32; 64],
-    stride: usize,
-    nf: usize,
-    method: Method,
-) -> Tensor {
-    let mut y = jpeg_conv_dcc(f, p.get(&format!("{prefix}.conv1.w")), q, stride);
-    y = bn(p, &format!("{prefix}.bn1"), &y, q);
-    y = jpeg_relu(&y, q, nf, method);
-    y = jpeg_conv_dcc(&y, p.get(&format!("{prefix}.conv2.w")), q, 1);
-    y = bn(p, &format!("{prefix}.bn2"), &y, q);
-    let sc = if stride != 1 {
-        let s = jpeg_conv_dcc(f, p.get(&format!("{prefix}.proj.w")), q, stride);
-        bn(p, &format!("{prefix}.projbn"), &s, q)
-    } else {
-        f.clone()
-    };
-    // component-wise addition (paper §4.4) then ReLU
-    jpeg_relu(&y.add(&sc), q, nf, method)
-}
-
-/// Eval forward: domain coefficients (N, C, 4, 4, 64) -> logits.
-///
-/// `num_freqs` is the ASM/APX spatial-frequency budget (15 = exact).
-pub fn jpeg_forward(
-    cfg: &ModelConfig,
-    p: &ParamSet,
-    coeffs: &Tensor,
-    qvec: &[f32; 64],
-    num_freqs: usize,
-    method: Method,
-) -> Tensor {
-    assert_eq!(coeffs.shape()[1], cfg.in_channels);
-    let mut f = jpeg_conv_dcc(coeffs, p.get("stem.conv.w"), qvec, 1);
-    f = bn(p, "stem.bn", &f, qvec);
-    f = jpeg_relu(&f, qvec, num_freqs, method);
-    f = res_block(p, "block1", &f, qvec, 1, num_freqs, method);
-    f = res_block(p, "block2", &f, qvec, 2, num_freqs, method);
-    f = res_block(p, "block3", &f, qvec, 2, num_freqs, method);
-    let g = jpeg_global_avg_pool(&f, qvec);
-    crate::nn::linear(&g, p.get("fc.w"), p.get("fc.b"))
-}
+use super::relu::Method;
 
 /// Conv parameter names + strides in explode order (mirrors the L2
 /// `model.CONV_LAYOUT` and `runtime::Session::CONV_LAYOUT`).
@@ -102,16 +37,76 @@ pub const EXPLODE_PLAN: [(&str, usize); 9] = [
     ("block3.proj.w", 2),
 ];
 
+/// Residual-block structure: `(param prefix, conv1, conv2, projection,
+/// relu1 observation label, output observation label)`, with conv
+/// entries indexing [`EXPLODE_PLAN`].  This table plus the stem/tail in
+/// [`resnet_plan`] is the repo's only layer sequencing.
+const RES_BLOCKS: [(&str, usize, usize, Option<usize>, &str, &str); 3] = [
+    ("block1", 1, 2, None, "block1.relu1", "block1.out"),
+    ("block2", 3, 4, Some(5), "block2.relu1", "block2.out"),
+    ("block3", 6, 7, Some(8), "block3.relu1", "block3.out"),
+];
+
+/// Build the canonical ResNet topology (paper Figure 3) as a [`Plan`]:
+/// stem conv/BN/ReLU, three residual blocks with explicit shortcut
+/// edges (identity for block 1, strided projection chains for blocks 2
+/// and 3), then global-average-pool and the fc head.
+///
+/// This is the **single topology definition** every execution mode
+/// consumes; pick the mode by passing a `plan::Executor` to
+/// [`Plan::run`].
+pub fn resnet_plan() -> Plan {
+    let mut b = PlanBuilder::new();
+    let (stem_w, stem_s) = EXPLODE_PLAN[0];
+    b.conv(stem_w, 0, stem_s);
+    b.batch_norm("stem.bn");
+    b.relu_observed("stem.relu");
+    for (prefix, c1, c2, proj, relu1_label, out_label) in RES_BLOCKS {
+        let block_in = b.mark();
+        let (w1, s1) = EXPLODE_PLAN[c1];
+        b.conv(w1, c1, s1);
+        b.batch_norm(format!("{prefix}.bn1"));
+        b.relu_observed(relu1_label);
+        let (w2, s2) = EXPLODE_PLAN[c2];
+        b.conv(w2, c2, s2);
+        b.batch_norm(format!("{prefix}.bn2"));
+        let main = b.mark();
+        let shortcut = match proj {
+            Some(pi) => {
+                let (wp, sp) = EXPLODE_PLAN[pi];
+                b.conv_from(block_in, wp, pi, sp);
+                b.batch_norm(format!("{prefix}.projbn"));
+                b.mark()
+            }
+            None => block_in,
+        };
+        b.shortcut_add(main, shortcut);
+        b.relu_observed(out_label);
+    }
+    b.global_avg_pool();
+    b.fc();
+    b.finish().expect("the canonical resnet topology is valid")
+}
+
+/// The canonical topology, built once (the plan is pure data; the
+/// per-`(ParamSet, qvec)` work lives in [`ExplodedModel::precompute`]).
+pub static RESNET_PLAN: Lazy<Plan> = Lazy::new(resnet_plan);
+
 /// Every conv's materialized exploded map (the paper's Algorithm-1
-/// precompute), consumed by the sparse gather-free forward.
+/// precompute), consumed by the exploded executors through
+/// [`super::plan::PlanCtx::exploded`].
 pub struct ExplodedModel {
+    /// One `(9*Cin*64, Cout*64)` map per [`EXPLODE_PLAN`] entry.
     pub xis: Vec<Tensor>,
+    /// Output channels per map.
     pub couts: Vec<usize>,
+    /// Stride per map.
     pub strides: Vec<usize>,
 }
 
 impl ExplodedModel {
     /// Precompute all nine maps from a parameter set (native, no PJRT).
+    /// This is the expensive once-per-`(ParamSet, qvec)` build step.
     pub fn precompute(p: &ParamSet, qvec: &[f32; 64]) -> ExplodedModel {
         let mut xis = Vec::with_capacity(EXPLODE_PLAN.len());
         let mut couts = Vec::with_capacity(EXPLODE_PLAN.len());
@@ -124,42 +119,14 @@ impl ExplodedModel {
         }
         ExplodedModel { xis, couts, strides }
     }
-
-    /// Sparse gather-free conv by plan index, on already-sparse input.
-    fn conv_sparse(&self, i: usize, f: &SparseBlocks, threads: usize) -> Tensor {
-        jpeg_conv_exploded_sparse(f, &self.xis[i], self.couts[i], self.strides[i], threads)
-    }
-
-    /// Sparse gather-free conv by plan index, sparsifying dense input
-    /// first (interior activations keep their exact zeros for free).
-    fn conv(&self, i: usize, f: &Tensor, threads: usize) -> Tensor {
-        self.conv_sparse(i, &SparseBlocks::from_dense(f), threads)
-    }
-
-    /// Algorithm-1 dense conv by plan index (neighborhood gather + tiled
-    /// matmul) — the dense-kernel ablation counterpart of `conv`.
-    fn conv_dense(&self, i: usize, f: &Tensor) -> Tensor {
-        jpeg_conv_exploded_dense(f, &self.xis[i], self.couts[i], self.strides[i])
-    }
-
-    /// Sparse-resident conv by plan index: sparse in, sparse out, no
-    /// dense intermediate.
-    fn conv_resident(&self, i: usize, f: &SparseBlocks, threads: usize) -> SparseBlocks {
-        jpeg_conv_exploded_sparse_resident(
-            f,
-            &self.xis[i],
-            self.couts[i],
-            self.strides[i],
-            threads,
-        )
-    }
 }
 
-/// Observation points of the sparse-resident forward, in network order.
-/// `input` is the entropy-decoded batch; each `*.relu1` / `*.out` point
-/// samples the activation right after an ASM/APX ReLU — the op that
+/// Observation points of the forward pass, in network order.  `input`
+/// is the entropy-decoded batch; each `*.relu1` / `*.out` point samples
+/// the activation right after an ASM/APX ReLU — the op that
 /// (re)introduces exact zeros — so the sequence shows how JPEG-domain
-/// sparsity decays through the network.
+/// sparsity decays through the network.  The labels are exactly the
+/// observed labels of [`RESNET_PLAN`] (asserted in tests).
 pub const RESIDENCY_POINTS: [&str; 8] = [
     "input",
     "stem.relu",
@@ -171,24 +138,21 @@ pub const RESIDENCY_POINTS: [&str; 8] = [
     "block3.out",
 ];
 
-/// Per-point nonzero accounting of one (or many accumulated)
-/// sparse-resident forward passes: raw `(stored nonzeros, dense
-/// element count)` pairs indexed like [`RESIDENCY_POINTS`], so traces
-/// aggregate exactly across batches.
+/// Per-point nonzero accounting of one (or many accumulated) forward
+/// passes: raw `(stored nonzeros, dense element count)` pairs indexed
+/// like [`RESIDENCY_POINTS`], so traces aggregate exactly across
+/// batches.  Implements `plan::PlanObserver`, so it attaches directly
+/// to [`Plan::run`].
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ResidencyTrace {
+    /// `(nnz, total)` per observation point.
     pub counts: [(u64, u64); RESIDENCY_POINTS.len()],
 }
 
 impl ResidencyTrace {
+    /// A zeroed trace.
     pub fn new() -> ResidencyTrace {
         ResidencyTrace::default()
-    }
-
-    fn observe(&mut self, point: usize, f: &SparseBlocks) {
-        let c = &mut self.counts[point];
-        c.0 += f.nnz() as u64;
-        c.1 += (f.num_blocks() * 64) as u64;
     }
 
     /// Nonzero fraction at a point, in [0, 1]; 0.0 before any traffic.
@@ -211,57 +175,36 @@ impl ResidencyTrace {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn res_block_exploded(
-    p: &ParamSet,
-    prefix: &str,
-    convs: (usize, usize, Option<usize>),
-    f: &Tensor,
-    q: &[f32; 64],
-    nf: usize,
-    method: Method,
-    conv: &dyn Fn(usize, &Tensor) -> Tensor,
-) -> Tensor {
-    let (c1, c2, proj) = convs;
-    let mut y = conv(c1, f);
-    y = bn(p, &format!("{prefix}.bn1"), &y, q);
-    y = jpeg_relu(&y, q, nf, method);
-    y = conv(c2, &y);
-    y = bn(p, &format!("{prefix}.bn2"), &y, q);
-    let sc = match proj {
-        Some(i) => {
-            let s = conv(i, f);
-            bn(p, &format!("{prefix}.projbn"), &s, q)
+impl PlanObserver for ResidencyTrace {
+    fn activation(&mut self, label: &'static str, nnz: u64, total: u64) {
+        if let Some(i) = RESIDENCY_POINTS.iter().position(|&l| l == label) {
+            self.counts[i].0 += nnz;
+            self.counts[i].1 += total;
         }
-        None => f.clone(),
-    };
-    jpeg_relu(&y.add(&sc), q, nf, method)
+    }
 }
 
-/// Shared tail of the exploded forwards: stem-conv output -> logits,
-/// with interior convs applied through `conv` (sparse or dense kernel).
-fn exploded_tail(
+/// Eval forward: domain coefficients (N, C, 4, 4, 64) -> logits.
+///
+/// `num_freqs` is the ASM/APX spatial-frequency budget (15 = exact).
+#[deprecated(note = "run RESNET_PLAN with the plan::DccRef executor instead")]
+pub fn jpeg_forward(
+    cfg: &ModelConfig,
     p: &ParamSet,
-    stem_out: Tensor,
+    coeffs: &Tensor,
     qvec: &[f32; 64],
     num_freqs: usize,
     method: Method,
-    conv: &dyn Fn(usize, &Tensor) -> Tensor,
 ) -> Tensor {
-    let mut f = bn(p, "stem.bn", &stem_out, qvec);
-    f = jpeg_relu(&f, qvec, num_freqs, method);
-    f = res_block_exploded(p, "block1", (1, 2, None), &f, qvec, num_freqs, method, conv);
-    f = res_block_exploded(p, "block2", (3, 4, Some(5)), &f, qvec, num_freqs, method, conv);
-    f = res_block_exploded(p, "block3", (6, 7, Some(8)), &f, qvec, num_freqs, method, conv);
-    let g = jpeg_global_avg_pool(&f, qvec);
-    crate::nn::linear(&g, p.get("fc.w"), p.get("fc.b"))
+    assert_eq!(coeffs.shape()[1], cfg.in_channels);
+    let ctx = PlanCtx { params: p, exploded: None, qvec, num_freqs, method };
+    RESNET_PLAN.run(&DccRef, &ctx, &Act::Dense(coeffs.clone()), None)
 }
 
 /// Eval forward through the precomputed exploded maps, consuming sparse
-/// block input straight from entropy decode — the serving fast path.
-///
-/// `threads` fans each conv's output rows across scoped workers
-/// (`1` = inline; results are bit-identical at any thread count).
+/// block input straight from entropy decode — the dense-boundary
+/// serving baseline.
+#[deprecated(note = "run RESNET_PLAN with the plan::SparseKernel executor instead")]
 #[allow(clippy::too_many_arguments)]
 pub fn jpeg_forward_exploded_sparse(
     cfg: &ModelConfig,
@@ -274,62 +217,15 @@ pub fn jpeg_forward_exploded_sparse(
     threads: usize,
 ) -> Tensor {
     assert_eq!(f0.dims().1, cfg.in_channels);
-    let stem = em.conv_sparse(0, f0, threads);
-    exploded_tail(p, stem, qvec, num_freqs, method, &|i, t| em.conv(i, t, threads))
+    let ctx = PlanCtx { params: p, exploded: Some(em), qvec, num_freqs, method };
+    RESNET_PLAN.run(&SparseKernel { threads }, &ctx, &Act::Sparse(f0.clone()), None)
 }
 
-/// One residual block of the sparse-resident forward: every activation
-/// stays in [`SparseBlocks`] form (conv -> run-rewrite BN -> run ReLU,
-/// shortcut merged as a run addition).  `points` are the two
-/// [`RESIDENCY_POINTS`] indices this block records into `tr`.
-#[allow(clippy::too_many_arguments)]
-fn res_block_resident(
-    p: &ParamSet,
-    prefix: &str,
-    convs: (usize, usize, Option<usize>),
-    f: &SparseBlocks,
-    em: &ExplodedModel,
-    q: &[f32; 64],
-    nf: usize,
-    method: Method,
-    threads: usize,
-    tr: &mut ResidencyTrace,
-    points: (usize, usize),
-) -> SparseBlocks {
-    let (c1, c2, proj) = convs;
-    let mut y = em.conv_resident(c1, f, threads);
-    bn_sparse(p, &format!("{prefix}.bn1"), &mut y, q);
-    let y = jpeg_relu_sparse(&y, q, nf, method);
-    tr.observe(points.0, &y);
-    let mut y = em.conv_resident(c2, &y, threads);
-    bn_sparse(p, &format!("{prefix}.bn2"), &mut y, q);
-    // the identity shortcut merges against a borrow of the block input
-    // — no activation copy on the stride-1 blocks
-    let sum = match proj {
-        Some(i) => {
-            let mut s = em.conv_resident(i, f, threads);
-            bn_sparse(p, &format!("{prefix}.projbn"), &mut s, q);
-            SparseBlocks::merge_add(&y, &s)
-        }
-        None => SparseBlocks::merge_add(&y, f),
-    };
-    let out = jpeg_relu_sparse(&sum, q, nf, method);
-    tr.observe(points.1, &out);
-    out
-}
-
-/// Eval forward with end-to-end sparse activation residency: every
-/// interior activation stays in [`SparseBlocks`] form — ASM/ReLU and
-/// BN consume and produce runs, the residual shortcut is a run merge —
-/// and the network only densifies at the global-average-pool /
-/// fully-connected tail, where the representation is `(N, C)` anyway.
-///
-/// Performs the identical float operations on the identical nonzeros
-/// as [`jpeg_forward_exploded_sparse`] (which densifies at every
-/// BN/ReLU boundary), so logits are **bit-identical**; what changes is
-/// the memory traffic: no dense `(N, C, Bh, Bw, 64)` intermediates are
-/// written or re-scanned between layers.  `trace`, when given,
-/// accumulates per-layer nonzero fractions ([`RESIDENCY_POINTS`]).
+/// Eval forward with end-to-end sparse activation residency
+/// (bit-identical logits to the dense-boundary path).  `trace`, when
+/// given, accumulates per-layer nonzero fractions
+/// ([`RESIDENCY_POINTS`]).
+#[deprecated(note = "run RESNET_PLAN with the plan::SparseResident executor instead")]
 #[allow(clippy::too_many_arguments)]
 pub fn jpeg_forward_exploded_resident(
     cfg: &ModelConfig,
@@ -343,43 +239,19 @@ pub fn jpeg_forward_exploded_resident(
     trace: Option<&mut ResidencyTrace>,
 ) -> Tensor {
     assert_eq!(f0.dims().1, cfg.in_channels);
-    let mut local = ResidencyTrace::new();
-    let tr: &mut ResidencyTrace = match trace {
-        Some(t) => t,
-        None => &mut local,
-    };
-    tr.observe(0, f0);
-    let mut f = em.conv_resident(0, f0, threads);
-    bn_sparse(p, "stem.bn", &mut f, qvec);
-    let mut f = jpeg_relu_sparse(&f, qvec, num_freqs, method);
-    tr.observe(1, &f);
-    let blocks = [
-        ("block1", (1, 2, None), (2, 3)),
-        ("block2", (3, 4, Some(5)), (4, 5)),
-        ("block3", (6, 7, Some(8)), (6, 7)),
-    ];
-    for (prefix, convs, points) in blocks {
-        f = res_block_resident(
-            p,
-            prefix,
-            convs,
-            &f,
-            em,
-            qvec,
-            num_freqs,
-            method,
-            threads,
-            tr,
-            points,
-        );
-    }
-    let g = jpeg_global_avg_pool_sparse(&f, qvec);
-    crate::nn::linear(&g, p.get("fc.w"), p.get("fc.b"))
+    let ctx = PlanCtx { params: p, exploded: Some(em), qvec, num_freqs, method };
+    let observer = trace.map(|t| t as &mut dyn PlanObserver);
+    RESNET_PLAN.run(
+        &SparseResident { threads, prune_epsilon: 0.0 },
+        &ctx,
+        &Act::Sparse(f0.clone()),
+        observer,
+    )
 }
 
 /// Eval forward through the precomputed exploded maps with the dense
-/// Algorithm-1 kernel at every conv — the measured dense baseline the
-/// serving bench compares the sparse pipeline against (`--mode dense`).
+/// Algorithm-1 kernel at every conv — the measured dense baseline.
+#[deprecated(note = "run RESNET_PLAN with the plan::DenseKernel executor instead")]
 #[allow(clippy::too_many_arguments)]
 pub fn jpeg_forward_exploded_dense_kernel(
     cfg: &ModelConfig,
@@ -391,12 +263,13 @@ pub fn jpeg_forward_exploded_dense_kernel(
     method: Method,
 ) -> Tensor {
     assert_eq!(coeffs.shape()[1], cfg.in_channels);
-    let stem = em.conv_dense(0, coeffs);
-    exploded_tail(p, stem, qvec, num_freqs, method, &|i, t| em.conv_dense(i, t))
+    let ctx = PlanCtx { params: p, exploded: Some(em), qvec, num_freqs, method };
+    RESNET_PLAN.run(&DenseKernel, &ctx, &Act::Dense(coeffs.clone()), None)
 }
 
-/// Dense-input convenience wrapper over
-/// [`jpeg_forward_exploded_sparse`].
+/// Dense-input convenience wrapper over the sparse-kernel executor
+/// (sparsifies the input, then runs the dense-boundary strategy).
+#[deprecated(note = "run RESNET_PLAN with the plan::SparseKernel executor instead")]
 #[allow(clippy::too_many_arguments)]
 pub fn jpeg_forward_exploded(
     cfg: &ModelConfig,
@@ -408,12 +281,16 @@ pub fn jpeg_forward_exploded(
     method: Method,
     threads: usize,
 ) -> Tensor {
+    assert_eq!(coeffs.shape()[1], cfg.in_channels);
+    let ctx = PlanCtx { params: p, exploded: Some(em), qvec, num_freqs, method };
     let f0 = SparseBlocks::from_dense(coeffs);
-    jpeg_forward_exploded_sparse(cfg, p, &f0, em, qvec, num_freqs, method, threads)
+    RESNET_PLAN.run(&SparseKernel { threads }, &ctx, &Act::Sparse(f0), None)
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the shims are exercised as the legacy regression surface
 mod tests {
+    use super::super::plan::LayerOp;
     use super::*;
     use crate::jpeg_domain::{encode_tensor, qvec_flat};
     use crate::nn::spatial_forward;
@@ -430,6 +307,37 @@ mod tests {
             &[n, c.in_channels, 32, 32],
             (0..len).map(|_| rng.uniform()).collect(),
         )
+    }
+
+    #[test]
+    fn resnet_plan_is_the_single_topology() {
+        let plan = resnet_plan();
+        // stem (3) + block1 (7) + block2 (9) + block3 (9) + tail (2)
+        assert_eq!(plan.len(), 30);
+        // every EXPLODE_PLAN entry appears exactly once, in order
+        let convs: Vec<(usize, usize)> = plan
+            .nodes()
+            .iter()
+            .filter_map(|n| match n.op {
+                LayerOp::Conv { xi, stride, .. } => Some((xi, stride)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(convs.len(), EXPLODE_PLAN.len());
+        for (pos, (xi, stride)) in convs.iter().enumerate() {
+            assert_eq!(*xi, pos, "conv order follows EXPLODE_PLAN");
+            assert_eq!(*stride, EXPLODE_PLAN[pos].1);
+        }
+        // the observed relu labels are exactly RESIDENCY_POINTS[1..]
+        let observed: Vec<&str> = plan
+            .nodes()
+            .iter()
+            .filter_map(|n| match n.op {
+                LayerOp::ReluAsm { observe: Some(l) } => Some(l),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(observed, &RESIDENCY_POINTS[1..]);
     }
 
     #[test]

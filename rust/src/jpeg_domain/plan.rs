@@ -1,0 +1,980 @@
+//! The execution-graph API: network topology as data, execution
+//! strategy as an [`Executor`].
+//!
+//! The paper's core claim is that every spatial-domain layer has a
+//! mathematically equivalent JPEG-domain twin (conv, BN, the ASM/APX
+//! ReLU approximations).  Before this module the repo encoded that
+//! equivalence once per execution mode — four hand-rolled forward
+//! functions in `network.rs`, each hard-coding the same ResNet layer
+//! sequencing.  Here the topology exists once, as a [`Plan`]: an
+//! ordered graph of typed [`LayerOp`]s whose residual-shortcut edges
+//! are explicit [`NodeRef`]s instead of inlined block helpers.  The
+//! *strategy* — which kernel runs each op, and what representation the
+//! activations take between ops — is an [`Executor`]:
+//!
+//! | executor | conv kernel | activations between layers |
+//! |---|---|---|
+//! | [`DccRef`] | decompress-convolve-compress (paper eq. 11) | dense |
+//! | [`DenseKernel`] | Algorithm-1 gather + tiled matmul | dense |
+//! | [`SparseKernel`] | gather-free over stored nonzeros | dense (the dense-boundary baseline) |
+//! | [`SparseResident`] | gather-free, runs in and out | [`SparseBlocks`] runs end to end |
+//!
+//! All executors perform the identical float operations on the
+//! identical nonzeros, so [`SparseKernel`] and [`SparseResident`]
+//! produce **bit-identical** logits (enforced at qualities 50/75/90 in
+//! `rust/tests/plan_equivalence.rs` and
+//! `rust/tests/sparse_equivalence.rs`); [`DenseKernel`] and [`DccRef`]
+//! agree to float tolerance.
+//!
+//! Per-layer instrumentation is a [`PlanObserver`] hook: residency
+//! fractions (`network::ResidencyTrace` implements the trait) and
+//! per-op timing ([`PlanTimings`]) attach to any run instead of living
+//! in ad-hoc globals.
+//!
+//! The canonical ResNet topology lives in
+//! [`super::network::resnet_plan`] — the single definition every
+//! execution mode consumes.
+
+use std::borrow::Cow;
+use std::time::{Duration, Instant};
+
+use crate::params::ParamSet;
+use crate::tensor::{SparseBlocks, Tensor};
+
+use super::batchnorm::{
+    jpeg_batch_norm_eval, jpeg_batch_norm_eval_sparse, jpeg_global_avg_pool,
+    jpeg_global_avg_pool_sparse,
+};
+use super::conv::{
+    jpeg_conv_dcc, jpeg_conv_exploded_dense, jpeg_conv_exploded_sparse,
+    jpeg_conv_exploded_sparse_resident,
+};
+use super::network::ExplodedModel;
+use super::relu::{jpeg_relu, jpeg_relu_sparse, Method};
+
+/// An edge source: the network input, or the output of an earlier node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeRef {
+    /// The activation the caller passed to [`Plan::run`].
+    Input,
+    /// The output of node `i` (must be `< ` the consuming node's index).
+    Node(usize),
+}
+
+/// One typed layer operation.  The op names *what* happens; the
+/// [`Executor`] decides *how* (which kernel, which representation).
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerOp {
+    /// Convolution.  `weight` is the `ParamSet` tensor name (used by
+    /// [`DccRef`]), `xi` the index into `ExplodedModel::xis` (used by
+    /// the exploded executors), `stride` the conv stride.
+    Conv {
+        /// Parameter name of the spatial conv weight.
+        weight: &'static str,
+        /// Index into the precomputed exploded maps.
+        xi: usize,
+        /// Convolution stride (1 or 2).
+        stride: usize,
+    },
+    /// Eval-mode batch norm by parameter prefix (`{prefix}.gamma` ...).
+    BatchNorm {
+        /// Parameter-name prefix, e.g. `"block1.bn1"`.
+        prefix: String,
+    },
+    /// ASM/APX ReLU (the method comes from the run's [`PlanCtx`]).
+    ReluAsm {
+        /// When set, [`Plan::run`] reports this activation to the
+        /// observer under the given label (a `RESIDENCY_POINTS` entry).
+        observe: Option<&'static str>,
+    },
+    /// Residual addition: `input + rhs` — the shortcut edge is explicit.
+    ShortcutAdd {
+        /// The shortcut source (must point backwards).
+        rhs: NodeRef,
+    },
+    /// Global average pooling to `(N, C)`.
+    GlobalAvgPool,
+    /// The fully-connected head (`fc.w`, `fc.b`); must be the last node.
+    Fc,
+}
+
+impl LayerOp {
+    /// Short human-readable label (used by timing observers and errors).
+    pub fn label(&self) -> String {
+        match self {
+            LayerOp::Conv { weight, stride, .. } => format!("conv {weight} /{stride}"),
+            LayerOp::BatchNorm { prefix } => format!("bn {prefix}"),
+            LayerOp::ReluAsm { observe: Some(l) } => format!("relu {l}"),
+            LayerOp::ReluAsm { observe: None } => "relu".to_string(),
+            LayerOp::ShortcutAdd { .. } => "shortcut-add".to_string(),
+            LayerOp::GlobalAvgPool => "global-avg-pool".to_string(),
+            LayerOp::Fc => "fc".to_string(),
+        }
+    }
+}
+
+/// One node of the graph: an op plus its (explicit) input edge.
+#[derive(Clone, Debug)]
+pub struct Node {
+    /// The operation this node performs.
+    pub op: LayerOp,
+    /// Where the op's (primary) input comes from.
+    pub input: NodeRef,
+}
+
+/// Why a [`Plan`] failed validation.
+#[derive(Clone, Debug)]
+pub struct PlanError {
+    /// Index of the offending node.
+    pub node: usize,
+    /// What is wrong with it.
+    pub message: String,
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid plan at node {}: {}", self.node, self.message)
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// An ordered, validated execution graph of [`LayerOp`]s.
+///
+/// ## Topology as data
+///
+/// ```
+/// use jpegdomain::jpeg_domain::plan::PlanBuilder;
+///
+/// // a miniature network: conv -> bn -> relu -> gap -> fc
+/// let mut b = PlanBuilder::new();
+/// b.conv("stem.conv.w", 0, 1);
+/// b.batch_norm("stem.bn");
+/// b.relu_observed("stem.relu");
+/// b.global_avg_pool();
+/// b.fc();
+/// let plan = b.finish().expect("valid topology");
+/// assert_eq!(plan.len(), 5);
+/// ```
+///
+/// Construction validates the graph: every edge — including residual
+/// shortcut edges — must point backwards to an already-computed node,
+/// and the graph must end in `GlobalAvgPool -> Fc`:
+///
+/// ```
+/// use jpegdomain::jpeg_domain::plan::{NodeRef, PlanBuilder};
+///
+/// let mut b = PlanBuilder::new();
+/// b.conv("stem.conv.w", 0, 1);
+/// let main = b.mark();
+/// b.shortcut_add(main, NodeRef::Node(9)); // node 9 is not computed yet
+/// b.global_avg_pool();
+/// b.fc();
+/// assert!(b.finish().is_err());
+/// ```
+#[derive(Clone, Debug)]
+pub struct Plan {
+    nodes: Vec<Node>,
+}
+
+fn edge_ok(i: usize, op: &LayerOp, what: &str, r: NodeRef) -> Result<(), PlanError> {
+    if let NodeRef::Node(j) = r {
+        if j >= i {
+            return Err(PlanError {
+                node: i,
+                message: format!(
+                    "{what} of node {i} ({}) references node {j}, which is not computed yet; \
+                     edges — including residual shortcut edges — must point backwards to an \
+                     earlier node",
+                    op.label()
+                ),
+            });
+        }
+    }
+    Ok(())
+}
+
+impl Plan {
+    /// Validate `nodes` into a runnable plan.
+    pub fn new(nodes: Vec<Node>) -> Result<Plan, PlanError> {
+        if nodes.is_empty() {
+            return Err(PlanError { node: 0, message: "a plan needs at least one node".into() });
+        }
+        let mut gap: Option<usize> = None;
+        let mut fc: Option<usize> = None;
+        for (i, node) in nodes.iter().enumerate() {
+            edge_ok(i, &node.op, "input edge", node.input)?;
+            if let LayerOp::ShortcutAdd { rhs } = &node.op {
+                edge_ok(i, &node.op, "shortcut edge", *rhs)?;
+            }
+            match &node.op {
+                LayerOp::GlobalAvgPool => {
+                    if gap.replace(i).is_some() {
+                        return Err(PlanError {
+                            node: i,
+                            message: "a plan must contain exactly one GlobalAvgPool".into(),
+                        });
+                    }
+                }
+                LayerOp::Fc => {
+                    if fc.replace(i).is_some() {
+                        return Err(PlanError {
+                            node: i,
+                            message: "a plan must contain exactly one Fc".into(),
+                        });
+                    }
+                }
+                _ => {}
+            }
+        }
+        let last = nodes.len() - 1;
+        if fc != Some(last) {
+            return Err(PlanError {
+                node: last,
+                message: "the last node must be the (single) Fc head".into(),
+            });
+        }
+        let Some(g) = gap else {
+            return Err(PlanError {
+                node: last,
+                message: "a plan must contain a GlobalAvgPool feeding the Fc head".into(),
+            });
+        };
+        if nodes[last].input != NodeRef::Node(g) {
+            return Err(PlanError {
+                node: last,
+                message: format!("Fc must consume the GlobalAvgPool output (node {g})"),
+            });
+        }
+        for (i, node) in nodes.iter().enumerate() {
+            if i == last {
+                continue;
+            }
+            let touches_gap = node.input == NodeRef::Node(g)
+                || matches!(&node.op, LayerOp::ShortcutAdd { rhs } if *rhs == NodeRef::Node(g));
+            if touches_gap {
+                return Err(PlanError {
+                    node: i,
+                    message: format!(
+                        "only the Fc head may consume the GlobalAvgPool output (node {g})"
+                    ),
+                });
+            }
+        }
+        Ok(Plan { nodes })
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True when the plan has no nodes (never, once validated).
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// The validated nodes, in execution order.
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    /// Execute the graph with `exec` over `input`, returning logits.
+    ///
+    /// Node outputs are reference-counted and freed after their last
+    /// consumer, so peak activation memory matches the hand-rolled
+    /// forwards (the residual shortcut merges against a *borrow* of
+    /// the block input — no activation copies).  When `observer` is
+    /// given, it receives the input occupancy, every `ReluAsm` node's
+    /// labelled occupancy, and per-op wall times.
+    pub fn run(
+        &self,
+        exec: &dyn Executor,
+        ctx: &PlanCtx,
+        input: &Act,
+        mut observer: Option<&mut dyn PlanObserver>,
+    ) -> Tensor {
+        let n = self.nodes.len();
+        let mut uses = vec![0usize; n];
+        for node in &self.nodes {
+            if let NodeRef::Node(i) = node.input {
+                uses[i] += 1;
+            }
+            if let LayerOp::ShortcutAdd { rhs: NodeRef::Node(i) } = &node.op {
+                uses[*i] += 1;
+            }
+        }
+        if let Some(obs) = observer.as_deref_mut() {
+            if obs.wants_activations() {
+                let (nnz, total) = input.occupancy();
+                obs.activation("input", nnz, total);
+            }
+        }
+        let mut store: Vec<Option<Act>> = std::iter::repeat_with(|| None).take(n).collect();
+        for (ni, node) in self.nodes.iter().enumerate() {
+            let t0 = observer.as_ref().map(|_| Instant::now());
+            let out = match &node.op {
+                LayerOp::Conv { weight, xi, stride } => {
+                    let x = resolve(&store, node.input, input);
+                    let y = exec.conv(ctx, weight, *xi, *stride, x);
+                    release(&mut store, &mut uses, node.input);
+                    y
+                }
+                LayerOp::BatchNorm { prefix } => {
+                    let x = take(&mut store, &mut uses, node.input, input);
+                    exec.batch_norm(ctx, prefix, x)
+                }
+                LayerOp::ReluAsm { .. } => {
+                    let x = resolve(&store, node.input, input);
+                    let y = exec.relu(ctx, x);
+                    release(&mut store, &mut uses, node.input);
+                    y
+                }
+                LayerOp::ShortcutAdd { rhs } => {
+                    let a = resolve(&store, node.input, input);
+                    let b = resolve(&store, *rhs, input);
+                    let y = exec.shortcut_add(a, b);
+                    release(&mut store, &mut uses, node.input);
+                    release(&mut store, &mut uses, *rhs);
+                    y
+                }
+                LayerOp::GlobalAvgPool => {
+                    let x = resolve(&store, node.input, input);
+                    let y = exec.global_avg_pool(ctx, x);
+                    release(&mut store, &mut uses, node.input);
+                    y
+                }
+                LayerOp::Fc => {
+                    let x = resolve(&store, node.input, input);
+                    let g = as_dense(x);
+                    let y = Act::Dense(crate::nn::linear(
+                        &g,
+                        ctx.params.get("fc.w"),
+                        ctx.params.get("fc.b"),
+                    ));
+                    release(&mut store, &mut uses, node.input);
+                    y
+                }
+            };
+            // time the op first, so occupancy scans are never charged
+            // to the op that produced the activation
+            if let (Some(obs), Some(t0)) = (observer.as_deref_mut(), t0) {
+                obs.op_done(ni, &node.op, t0.elapsed());
+            }
+            if let LayerOp::ReluAsm { observe: Some(label) } = &node.op {
+                let label: &'static str = *label;
+                if let Some(obs) = observer.as_deref_mut() {
+                    if obs.wants_activations() {
+                        let (nnz, total) = out.occupancy();
+                        obs.activation(label, nnz, total);
+                    }
+                }
+            }
+            store[ni] = Some(out);
+        }
+        match store[n - 1].take() {
+            Some(Act::Dense(t)) => t,
+            _ => unreachable!("a validated plan ends in Fc, which produces dense logits"),
+        }
+    }
+}
+
+fn resolve<'a>(store: &'a [Option<Act>], r: NodeRef, input: &'a Act) -> &'a Act {
+    match r {
+        NodeRef::Input => input,
+        NodeRef::Node(i) => {
+            store[i].as_ref().expect("plan liveness: node output already released")
+        }
+    }
+}
+
+fn release(store: &mut [Option<Act>], uses: &mut [usize], r: NodeRef) {
+    if let NodeRef::Node(i) = r {
+        uses[i] -= 1;
+        if uses[i] == 0 {
+            store[i] = None;
+        }
+    }
+}
+
+fn take(store: &mut [Option<Act>], uses: &mut [usize], r: NodeRef, input: &Act) -> Act {
+    match r {
+        NodeRef::Input => input.clone(),
+        NodeRef::Node(i) => {
+            uses[i] -= 1;
+            if uses[i] == 0 {
+                store[i].take().expect("plan liveness: node output already released")
+            } else {
+                store[i].clone().expect("plan liveness: node output already released")
+            }
+        }
+    }
+}
+
+/// Incremental [`Plan`] constructor.  Ops chain off an internal cursor
+/// (the previous node); [`PlanBuilder::mark`] taps the cursor for
+/// residual shortcuts, and the `*_from` variants start a side chain
+/// from an arbitrary tap.
+pub struct PlanBuilder {
+    nodes: Vec<Node>,
+    cursor: NodeRef,
+}
+
+impl Default for PlanBuilder {
+    fn default() -> Self {
+        PlanBuilder::new()
+    }
+}
+
+impl PlanBuilder {
+    /// An empty builder whose cursor is the network input.
+    pub fn new() -> PlanBuilder {
+        PlanBuilder { nodes: Vec::new(), cursor: NodeRef::Input }
+    }
+
+    /// The current cursor — tap it before a block to wire its shortcut.
+    pub fn mark(&self) -> NodeRef {
+        self.cursor
+    }
+
+    fn push(&mut self, input: NodeRef, op: LayerOp) -> NodeRef {
+        let id = self.nodes.len();
+        self.nodes.push(Node { op, input });
+        self.cursor = NodeRef::Node(id);
+        self.cursor
+    }
+
+    /// Conv off the cursor.
+    pub fn conv(&mut self, weight: &'static str, xi: usize, stride: usize) -> NodeRef {
+        let input = self.cursor;
+        self.push(input, LayerOp::Conv { weight, xi, stride })
+    }
+
+    /// Conv off an explicit tap (starts a projection side chain).
+    pub fn conv_from(
+        &mut self,
+        input: NodeRef,
+        weight: &'static str,
+        xi: usize,
+        stride: usize,
+    ) -> NodeRef {
+        self.push(input, LayerOp::Conv { weight, xi, stride })
+    }
+
+    /// Batch norm off the cursor.
+    pub fn batch_norm(&mut self, prefix: impl Into<String>) -> NodeRef {
+        let input = self.cursor;
+        self.push(input, LayerOp::BatchNorm { prefix: prefix.into() })
+    }
+
+    /// ReLU off the cursor, unobserved.
+    pub fn relu(&mut self) -> NodeRef {
+        let input = self.cursor;
+        self.push(input, LayerOp::ReluAsm { observe: None })
+    }
+
+    /// ReLU off the cursor, reporting its activation occupancy to the
+    /// run's observer under `label`.
+    pub fn relu_observed(&mut self, label: &'static str) -> NodeRef {
+        let input = self.cursor;
+        self.push(input, LayerOp::ReluAsm { observe: Some(label) })
+    }
+
+    /// Residual addition `main + rhs` (both edges explicit).
+    pub fn shortcut_add(&mut self, main: NodeRef, rhs: NodeRef) -> NodeRef {
+        self.push(main, LayerOp::ShortcutAdd { rhs })
+    }
+
+    /// Global average pool off the cursor.
+    pub fn global_avg_pool(&mut self) -> NodeRef {
+        let input = self.cursor;
+        self.push(input, LayerOp::GlobalAvgPool)
+    }
+
+    /// The fully-connected head off the cursor (must be last).
+    pub fn fc(&mut self) -> NodeRef {
+        let input = self.cursor;
+        self.push(input, LayerOp::Fc)
+    }
+
+    /// Validate into a [`Plan`].
+    pub fn finish(self) -> Result<Plan, PlanError> {
+        Plan::new(self.nodes)
+    }
+}
+
+/// An activation travelling between plan nodes: dense coefficient
+/// tensor or sparse block runs.  Conversions between the two are exact
+/// (builders drop exact zeros, consumers skip them), which is what lets
+/// executors differ in representation yet agree bit-for-bit.
+#[derive(Clone, Debug)]
+pub enum Act {
+    /// Dense `(N, C, Bh, Bw, 64)` coefficients (or `(N, C)` at the tail).
+    Dense(Tensor),
+    /// Per-block CSR runs.
+    Sparse(SparseBlocks),
+}
+
+impl Act {
+    /// `(stored nonzeros, dense element count)` of this activation.
+    pub fn occupancy(&self) -> (u64, u64) {
+        match self {
+            Act::Dense(t) => (
+                t.data().iter().filter(|&&v| v != 0.0).count() as u64,
+                t.len() as u64,
+            ),
+            Act::Sparse(s) => (s.nnz() as u64, (s.num_blocks() * 64) as u64),
+        }
+    }
+}
+
+fn as_dense(x: &Act) -> Cow<'_, Tensor> {
+    match x {
+        Act::Dense(t) => Cow::Borrowed(t),
+        Act::Sparse(s) => Cow::Owned(s.to_dense()),
+    }
+}
+
+fn as_sparse(x: &Act) -> Cow<'_, SparseBlocks> {
+    match x {
+        Act::Sparse(s) => Cow::Borrowed(s),
+        Act::Dense(t) => Cow::Owned(SparseBlocks::from_dense(t)),
+    }
+}
+
+/// Everything a run needs beyond the topology: parameters, the
+/// per-`(ParamSet, qvec)` exploded maps, and the ReLU setting.
+pub struct PlanCtx<'a> {
+    /// Model parameters (BN statistics, fc head, DCC conv weights).
+    pub params: &'a ParamSet,
+    /// Precomputed exploded maps; `None` is fine for [`DccRef`].
+    pub exploded: Option<&'a ExplodedModel>,
+    /// Quantization vector the activations are expressed over.
+    pub qvec: &'a [f32; 64],
+    /// ASM/APX spatial-frequency budget (15 = exact).
+    pub num_freqs: usize,
+    /// ReLU approximation method.
+    pub method: Method,
+}
+
+/// An execution strategy: one kernel choice per [`LayerOp`] kind.
+///
+/// Implementations must perform the same float operations on the same
+/// nonzeros regardless of representation, so that strategies are
+/// interchangeable without changing logits.
+pub trait Executor {
+    /// Stable strategy name (used in ablation rows and bench output).
+    fn name(&self) -> &'static str;
+    /// Convolution.
+    fn conv(&self, ctx: &PlanCtx, weight: &str, xi: usize, stride: usize, x: &Act) -> Act;
+    /// Eval-mode batch norm (takes ownership so sparse strategies can
+    /// rewrite runs in place).
+    fn batch_norm(&self, ctx: &PlanCtx, prefix: &str, x: Act) -> Act;
+    /// ASM/APX ReLU at the context's phi budget.
+    fn relu(&self, ctx: &PlanCtx, x: &Act) -> Act;
+    /// Residual addition `x + rhs`.
+    fn shortcut_add(&self, x: &Act, rhs: &Act) -> Act;
+    /// Global average pool to a dense `(N, C)` activation.
+    fn global_avg_pool(&self, ctx: &PlanCtx, x: &Act) -> Act;
+}
+
+fn bn_dense(p: &ParamSet, prefix: &str, f: &Tensor, q: &[f32; 64]) -> Tensor {
+    jpeg_batch_norm_eval(
+        f,
+        q,
+        p.get(&format!("{prefix}.gamma")),
+        p.get(&format!("{prefix}.beta")),
+        p.get(&format!("{prefix}.rmean")),
+        p.get(&format!("{prefix}.rvar")),
+    )
+}
+
+fn bn_sparse_inplace(p: &ParamSet, prefix: &str, f: &mut SparseBlocks, q: &[f32; 64]) {
+    jpeg_batch_norm_eval_sparse(
+        f,
+        q,
+        p.get(&format!("{prefix}.gamma")),
+        p.get(&format!("{prefix}.beta")),
+        p.get(&format!("{prefix}.rmean")),
+        p.get(&format!("{prefix}.rvar")),
+    );
+}
+
+fn dense_batch_norm(ctx: &PlanCtx, prefix: &str, x: Act) -> Act {
+    let f = as_dense(&x);
+    Act::Dense(bn_dense(ctx.params, prefix, &f, ctx.qvec))
+}
+
+fn dense_relu(ctx: &PlanCtx, x: &Act) -> Act {
+    let f = as_dense(x);
+    Act::Dense(jpeg_relu(&f, ctx.qvec, ctx.num_freqs, ctx.method))
+}
+
+fn dense_add(x: &Act, rhs: &Act) -> Act {
+    let a = as_dense(x);
+    let b = as_dense(rhs);
+    Act::Dense(a.add(&b))
+}
+
+fn dense_gap(ctx: &PlanCtx, x: &Act) -> Act {
+    let f = as_dense(x);
+    Act::Dense(jpeg_global_avg_pool(&f, ctx.qvec))
+}
+
+fn exploded<'a>(ctx: &PlanCtx<'a>, exec: &str) -> &'a ExplodedModel {
+    match ctx.exploded {
+        Some(em) => em,
+        None => panic!("{exec} executor needs PlanCtx::exploded (the precomputed maps)"),
+    }
+}
+
+/// Reference strategy: decompress-convolve-compress convolution (paper
+/// eq. 11), dense activations throughout — the non-exploded oracle the
+/// other strategies are validated against.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DccRef;
+
+impl Executor for DccRef {
+    fn name(&self) -> &'static str {
+        "dcc-reference"
+    }
+
+    fn conv(&self, ctx: &PlanCtx, weight: &str, _xi: usize, stride: usize, x: &Act) -> Act {
+        let f = as_dense(x);
+        Act::Dense(jpeg_conv_dcc(&f, ctx.params.get(weight), ctx.qvec, stride))
+    }
+
+    fn batch_norm(&self, ctx: &PlanCtx, prefix: &str, x: Act) -> Act {
+        dense_batch_norm(ctx, prefix, x)
+    }
+
+    fn relu(&self, ctx: &PlanCtx, x: &Act) -> Act {
+        dense_relu(ctx, x)
+    }
+
+    fn shortcut_add(&self, x: &Act, rhs: &Act) -> Act {
+        dense_add(x, rhs)
+    }
+
+    fn global_avg_pool(&self, ctx: &PlanCtx, x: &Act) -> Act {
+        dense_gap(ctx, x)
+    }
+}
+
+/// Algorithm-1 strategy: dense neighborhood gather + tiled matmul per
+/// conv, dense activations — the measured dense baseline.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DenseKernel;
+
+impl Executor for DenseKernel {
+    fn name(&self) -> &'static str {
+        "dense-kernel"
+    }
+
+    fn conv(&self, ctx: &PlanCtx, _weight: &str, xi: usize, stride: usize, x: &Act) -> Act {
+        let em = exploded(ctx, "DenseKernel");
+        debug_assert_eq!(em.strides[xi], stride, "topology stride disagrees with exploded map");
+        let f = as_dense(x);
+        Act::Dense(jpeg_conv_exploded_dense(&f, &em.xis[xi], em.couts[xi], em.strides[xi]))
+    }
+
+    fn batch_norm(&self, ctx: &PlanCtx, prefix: &str, x: Act) -> Act {
+        dense_batch_norm(ctx, prefix, x)
+    }
+
+    fn relu(&self, ctx: &PlanCtx, x: &Act) -> Act {
+        dense_relu(ctx, x)
+    }
+
+    fn shortcut_add(&self, x: &Act, rhs: &Act) -> Act {
+        dense_add(x, rhs)
+    }
+
+    fn global_avg_pool(&self, ctx: &PlanCtx, x: &Act) -> Act {
+        dense_gap(ctx, x)
+    }
+}
+
+/// Gather-free sparse conv kernel with dense activations between
+/// layers — the dense-boundary baseline the resident strategy is
+/// measured against.  `threads` fans conv output rows across scoped
+/// workers (1 = inline; bit-identical at any thread count).
+#[derive(Clone, Copy, Debug)]
+pub struct SparseKernel {
+    /// Row-parallel worker threads inside each conv.
+    pub threads: usize,
+}
+
+impl Executor for SparseKernel {
+    fn name(&self) -> &'static str {
+        "sparse-kernel"
+    }
+
+    fn conv(&self, ctx: &PlanCtx, _weight: &str, xi: usize, stride: usize, x: &Act) -> Act {
+        let em = exploded(ctx, "SparseKernel");
+        debug_assert_eq!(em.strides[xi], stride, "topology stride disagrees with exploded map");
+        let f = as_sparse(x);
+        Act::Dense(jpeg_conv_exploded_sparse(
+            &f,
+            &em.xis[xi],
+            em.couts[xi],
+            em.strides[xi],
+            self.threads,
+        ))
+    }
+
+    fn batch_norm(&self, ctx: &PlanCtx, prefix: &str, x: Act) -> Act {
+        dense_batch_norm(ctx, prefix, x)
+    }
+
+    fn relu(&self, ctx: &PlanCtx, x: &Act) -> Act {
+        dense_relu(ctx, x)
+    }
+
+    fn shortcut_add(&self, x: &Act, rhs: &Act) -> Act {
+        dense_add(x, rhs)
+    }
+
+    fn global_avg_pool(&self, ctx: &PlanCtx, x: &Act) -> Act {
+        dense_gap(ctx, x)
+    }
+}
+
+/// End-to-end sparse activation residency: conv emits runs directly,
+/// BN is an in-place affine run rewrite, ReLU consumes and produces
+/// runs (the phi mask is a run truncation), the residual shortcut is a
+/// run merge, and the network only densifies at the global-average-pool
+/// tail.  Bit-identical logits to [`SparseKernel`] when
+/// `prune_epsilon == 0.0`.
+///
+/// `prune_epsilon > 0.0` drops post-ReLU coefficients with
+/// `|value| <= epsilon` — the paper's "little to no penalty" knob,
+/// measured by `repro exp prune`.
+#[derive(Clone, Copy, Debug)]
+pub struct SparseResident {
+    /// Row-parallel worker threads inside each conv.
+    pub threads: usize,
+    /// Post-ReLU magnitude prune; `0.0` = exact (the default).
+    pub prune_epsilon: f32,
+}
+
+impl Executor for SparseResident {
+    fn name(&self) -> &'static str {
+        "sparse-resident"
+    }
+
+    fn conv(&self, ctx: &PlanCtx, _weight: &str, xi: usize, stride: usize, x: &Act) -> Act {
+        let em = exploded(ctx, "SparseResident");
+        debug_assert_eq!(em.strides[xi], stride, "topology stride disagrees with exploded map");
+        let f = as_sparse(x);
+        Act::Sparse(jpeg_conv_exploded_sparse_resident(
+            &f,
+            &em.xis[xi],
+            em.couts[xi],
+            em.strides[xi],
+            self.threads,
+        ))
+    }
+
+    fn batch_norm(&self, ctx: &PlanCtx, prefix: &str, x: Act) -> Act {
+        let mut s = match x {
+            Act::Sparse(s) => s,
+            Act::Dense(t) => SparseBlocks::from_dense(&t),
+        };
+        bn_sparse_inplace(ctx.params, prefix, &mut s, ctx.qvec);
+        Act::Sparse(s)
+    }
+
+    fn relu(&self, ctx: &PlanCtx, x: &Act) -> Act {
+        let f = as_sparse(x);
+        let mut y = jpeg_relu_sparse(&f, ctx.qvec, ctx.num_freqs, ctx.method);
+        if self.prune_epsilon > 0.0 {
+            y.prune_below_epsilon(self.prune_epsilon);
+        }
+        Act::Sparse(y)
+    }
+
+    fn shortcut_add(&self, x: &Act, rhs: &Act) -> Act {
+        let a = as_sparse(x);
+        let b = as_sparse(rhs);
+        Act::Sparse(SparseBlocks::merge_add(&a, &b))
+    }
+
+    fn global_avg_pool(&self, ctx: &PlanCtx, x: &Act) -> Act {
+        let f = as_sparse(x);
+        Act::Dense(jpeg_global_avg_pool_sparse(&f, ctx.qvec))
+    }
+}
+
+/// Instrumentation hook for [`Plan::run`]: labelled activation
+/// occupancy at the observed points, plus per-op wall time.
+pub trait PlanObserver {
+    /// An observed activation: the network input (label `"input"`) or
+    /// an observed ReLU output, as raw `(nnz, total)` counts so traces
+    /// aggregate exactly across batches.
+    fn activation(&mut self, label: &'static str, nnz: u64, total: u64);
+
+    /// Whether this observer consumes [`PlanObserver::activation`]
+    /// calls.  When `false`, [`Plan::run`] skips the occupancy scans
+    /// entirely — counting a dense activation's nonzeros is a full
+    /// O(elements) pass, which a timings-only observer never needs.
+    fn wants_activations(&self) -> bool {
+        true
+    }
+
+    /// Called after every node with its index, op, and wall time
+    /// (occupancy scans for [`PlanObserver::activation`] are not
+    /// included in the reported time).
+    fn op_done(&mut self, _node: usize, _op: &LayerOp, _elapsed: Duration) {}
+}
+
+/// A [`PlanObserver`] that records per-op wall times in execution
+/// order — the plan-level replacement for ad-hoc per-layer timers.
+#[derive(Debug, Default)]
+pub struct PlanTimings {
+    /// `(op label, wall time)` per executed node, in order.
+    pub ops: Vec<(String, Duration)>,
+}
+
+impl PlanTimings {
+    /// Sum of all recorded op times.
+    pub fn total(&self) -> Duration {
+        self.ops.iter().map(|(_, d)| *d).sum()
+    }
+}
+
+impl PlanObserver for PlanTimings {
+    fn activation(&mut self, _label: &'static str, _nnz: u64, _total: u64) {}
+
+    fn wants_activations(&self) -> bool {
+        false // timings only: don't pay the occupancy scans
+    }
+
+    fn op_done(&mut self, _node: usize, op: &LayerOp, elapsed: Duration) {
+        self.ops.push((op.label(), elapsed));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn valid_builder() -> PlanBuilder {
+        let mut b = PlanBuilder::new();
+        b.conv("stem.conv.w", 0, 1);
+        b.batch_norm("stem.bn");
+        b.relu_observed("stem.relu");
+        b
+    }
+
+    #[test]
+    fn builder_produces_valid_plan() {
+        let mut b = valid_builder();
+        b.global_avg_pool();
+        b.fc();
+        let plan = b.finish().unwrap();
+        assert_eq!(plan.len(), 5);
+        assert!(!plan.is_empty());
+        // edges chain: each node consumes its predecessor
+        for (i, node) in plan.nodes().iter().enumerate() {
+            let expect = if i == 0 { NodeRef::Input } else { NodeRef::Node(i - 1) };
+            assert_eq!(node.input, expect, "node {i}");
+        }
+    }
+
+    #[test]
+    fn forward_shortcut_edge_is_rejected_with_description() {
+        let mut b = valid_builder();
+        let main = b.mark();
+        b.shortcut_add(main, NodeRef::Node(42));
+        b.global_avg_pool();
+        b.fc();
+        let err = b.finish().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("shortcut edge"), "{msg}");
+        assert!(msg.contains("not computed yet"), "{msg}");
+        assert!(msg.contains("backwards"), "{msg}");
+    }
+
+    #[test]
+    fn self_referential_input_edge_is_rejected() {
+        // node 0 consuming node 0: not computed yet
+        let nodes = vec![
+            Node { op: LayerOp::GlobalAvgPool, input: NodeRef::Node(0) },
+            Node { op: LayerOp::Fc, input: NodeRef::Node(0) },
+        ];
+        let err = Plan::new(nodes).unwrap_err();
+        assert!(err.to_string().contains("not computed yet"), "{err}");
+    }
+
+    #[test]
+    fn plan_must_end_in_gap_then_fc() {
+        // missing fc
+        let mut b = valid_builder();
+        b.global_avg_pool();
+        assert!(b.finish().is_err());
+        // missing gap
+        let mut b = valid_builder();
+        b.fc();
+        let err = b.finish().unwrap_err();
+        assert!(err.to_string().contains("GlobalAvgPool"), "{err}");
+        // two fc heads
+        let mut b = valid_builder();
+        b.global_avg_pool();
+        b.fc();
+        b.fc();
+        assert!(b.finish().is_err());
+        // empty plan
+        assert!(Plan::new(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn only_fc_may_consume_gap() {
+        let mut b = valid_builder();
+        let g = b.global_avg_pool();
+        b.relu(); // consumes the gap output
+        let mut nodes_b = b;
+        nodes_b.fc();
+        let _ = g;
+        let err = nodes_b.finish().unwrap_err();
+        // either the "only Fc may consume" or the "Fc must consume" rule fires
+        let msg = err.to_string();
+        assert!(msg.contains("GlobalAvgPool"), "{msg}");
+    }
+
+    #[test]
+    fn op_labels_are_descriptive() {
+        assert_eq!(
+            LayerOp::Conv { weight: "stem.conv.w", xi: 0, stride: 2 }.label(),
+            "conv stem.conv.w /2"
+        );
+        assert_eq!(LayerOp::BatchNorm { prefix: "block1.bn1".into() }.label(), "bn block1.bn1");
+        assert_eq!(LayerOp::ReluAsm { observe: Some("stem.relu") }.label(), "relu stem.relu");
+        assert_eq!(LayerOp::ReluAsm { observe: None }.label(), "relu");
+        assert_eq!(LayerOp::ShortcutAdd { rhs: NodeRef::Input }.label(), "shortcut-add");
+        assert_eq!(LayerOp::GlobalAvgPool.label(), "global-avg-pool");
+        assert_eq!(LayerOp::Fc.label(), "fc");
+    }
+
+    #[test]
+    fn act_occupancy_counts_nonzeros() {
+        let t = Tensor::from_vec(&[1, 4], vec![0.0, 1.0, -2.0, 0.0]);
+        assert_eq!(Act::Dense(t).occupancy(), (2, 4));
+        let mut d = Tensor::zeros(&[1, 1, 1, 1, 64]);
+        d.set(&[0, 0, 0, 0, 3], 5.0);
+        let s = SparseBlocks::from_dense(&d);
+        assert_eq!(Act::Sparse(s).occupancy(), (1, 64));
+    }
+
+    #[test]
+    fn timings_observer_accumulates() {
+        let mut t = PlanTimings::default();
+        t.op_done(0, &LayerOp::GlobalAvgPool, Duration::from_millis(2));
+        t.op_done(1, &LayerOp::Fc, Duration::from_millis(3));
+        assert_eq!(t.ops.len(), 2);
+        assert_eq!(t.ops[0].0, "global-avg-pool");
+        assert_eq!(t.total(), Duration::from_millis(5));
+        // a timings-only observer opts out of the occupancy scans
+        assert!(!t.wants_activations());
+    }
+}

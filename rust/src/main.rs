@@ -9,8 +9,10 @@
 //!                              runs the closed-loop load generator
 //!   eval                       evaluate a checkpoint through either pipeline
 //!   convert                    spatial -> JPEG model conversion (paper §4.6)
-//!   exp <table1|fig4a|fig4b|fig4c|fig5|ablation|sparse|resident>
+//!   exp <table1|fig4a|fig4b|fig4c|fig5|ablation|sparse|resident|prune>
 //!                              regenerate paper results + perf ablations
+//!                              (`ablation` runs the plan-executor rows
+//!                              natively; PJRT rows only with artifacts)
 //!   codec <selftest>           JPEG codec round-trip demo
 //!
 //! Flags are `--key value`; `--config file.toml` loads defaults first.
@@ -92,6 +94,8 @@ fn usage() -> ! {
                   sparse-resident: activations stay sparse between layers)
                   --decode-workers N --compute-workers N
                   --queue-cap N --decoded-cap N --max-batch N --threads N
+                  --prune-epsilon F (post-ReLU magnitude prune of the
+                  sparse-resident executor; 0 = exact)
           pjrt:   --route spatial|jpeg --max-batch N --max-wait-ms N
   serve bench: closed-loop load generator -> BENCH_PR2.json
           --requests N --clients N --qualities 50,75,90 --skip-dense
@@ -99,11 +103,15 @@ fn usage() -> ! {
           native-dense vs pjrt-if-present)
   eval:   --ckpt PATH --route spatial|jpeg --nf K --method asm|apx
   convert: --ckpt-in PATH --ckpt-out PATH
-  exp:    table1|fig4a|fig4b|fig4c|fig5|ablation|sparse|resident
+  exp:    table1|fig4a|fig4b|fig4c|fig5|ablation|sparse|resident|prune
           --seeds N --steps N --blocks N --freqs 1,3,5 --quality Q
           sparse: --quality Q --batch N --cout N --threads N --iters N
           resident: --quality Q --batch N --threads N --iters N
-          (sparse and resident run natively, no artifacts required)"
+          prune: --quality Q --batch N --threads N --iters N
+                 --epsilons 0,1e-5,1e-4,1e-3,1e-2
+          ablation: plan-executor rows run natively; the PJRT rows are
+                 skipped when no artifacts are present
+          (sparse, resident, prune and the plan rows need no artifacts)"
     );
     std::process::exit(2);
 }
@@ -251,7 +259,10 @@ fn cmd_serve(args: &Args, cfg: &Config) -> anyhow::Result<()> {
                 args.get("method", "asm").parse().map_err(anyhow::Error::msg)?,
                 args.usize("threads", cfg.usize_or("run", "threads", 0)),
                 mode,
-            )?;
+            )?
+            .with_prune_epsilon(
+                args.f32("prune-epsilon", cfg.f32_or("run", "prune_epsilon", 0.0)),
+            );
             let server = Server::start_native(native, pipeline_config_from(args, &sc));
             // pay the exploded-map precompute before opening the doors
             if let Some(p) = server.pipeline() {
@@ -492,9 +503,38 @@ fn cmd_exp(args: &Args, cfg: &Config) -> anyhow::Result<()> {
             bh::throughput::print_fig5(&rows);
         }
         "ablation" => {
-            let session = session_from(args, cfg)?;
-            let r = bh::ablation_exploded(&session, args.usize("iters", 5))?;
-            bh::throughput::print_ablation(&r);
+            // plan-executor rows first: the three execution strategies
+            // over the single topology, natively (no artifacts needed)
+            let r = bh::plan_executor_ablation(
+                args.usize("quality", 50) as u8,
+                args.usize("batch", 16),
+                args.usize("iters", 3),
+                args.usize("threads", cfg.usize_or("run", "threads", 0)),
+            )?;
+            bh::throughput::print_plan_ablation(&r);
+            match session_from(args, cfg) {
+                Ok(session) => {
+                    let r = bh::ablation_exploded(&session, args.usize("iters", 5))?;
+                    bh::throughput::print_ablation(&r);
+                }
+                Err(e) => println!("pjrt ablation rows skipped (no artifacts): {e}"),
+            }
+        }
+        "prune" => {
+            // plan-level prune_epsilon knob: accuracy vs throughput
+            let epsilons: Vec<f32> = args
+                .get("epsilons", "0,1e-5,1e-4,1e-3,1e-2")
+                .split(',')
+                .filter_map(|t| t.trim().parse().ok())
+                .collect();
+            let r = bh::prune_epsilon_ablation(
+                args.usize("quality", 50) as u8,
+                args.usize("batch", 40),
+                args.usize("iters", 3),
+                args.usize("threads", cfg.usize_or("run", "threads", 0)),
+                &epsilons,
+            )?;
+            bh::throughput::print_prune(&r);
         }
         "sparse" => {
             // pure-rust sparsity ablation: no session / artifacts needed

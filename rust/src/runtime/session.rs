@@ -6,7 +6,8 @@ use std::sync::Arc;
 
 use crate::coordinator::router::Route;
 use crate::jpeg::zigzag::band_mask;
-use crate::jpeg_domain::network::{self, ExplodedModel};
+use crate::jpeg_domain::network::{ExplodedModel, ResidencyTrace, RESNET_PLAN};
+use crate::jpeg_domain::plan::{Act, Executor, PlanCtx, PlanObserver, SparseKernel, SparseResident};
 use crate::jpeg_domain::relu::Method;
 use crate::params::{ModelConfig, ParamSet};
 use crate::tensor::{SparseBlocks, Tensor};
@@ -187,7 +188,9 @@ impl Session {
     /// batch loop so both the pjrt worker and benches share one policy):
     /// spatial -> pixel graph; jpeg at the exact setting (phi = 15, ASM)
     /// -> the fused fast-path graph; otherwise the tunable domain-ops
-    /// graph.
+    /// graph.  These are the PJRT artifact routes; the artifact-free
+    /// native routes go through [`Session::forward_jpeg_plan`] (one
+    /// topology, executor-selected strategy) instead.
     pub fn forward_route(
         &self,
         params: &ParamSet,
@@ -261,9 +264,36 @@ impl Session {
         ExplodedModel::precompute(params, qvec)
     }
 
+    /// Native forward through the single topology
+    /// (`network::RESNET_PLAN`) under an explicit execution strategy —
+    /// the session-level entry of the plan API.  ASM semantics at
+    /// phi = `num_freqs`; the executor decides kernels and activation
+    /// representation.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_jpeg_plan(
+        &self,
+        params: &ParamSet,
+        em: &ExplodedModel,
+        input: &Act,
+        qvec: &[f32; 64],
+        num_freqs: usize,
+        executor: &dyn Executor,
+        observer: Option<&mut dyn PlanObserver>,
+    ) -> Tensor {
+        let ctx = PlanCtx {
+            params,
+            exploded: Some(em),
+            qvec,
+            num_freqs,
+            method: Method::Asm,
+        };
+        RESNET_PLAN.run(executor, &ctx, input, observer)
+    }
+
     /// Native sparse serving path: gather-free exploded forward on the
     /// engine's worker-thread budget.  Exact phi = `num_freqs`
     /// semantics, same logits as the PJRT exploded artifact.
+    #[deprecated(note = "use Session::forward_jpeg_plan with plan::SparseKernel")]
     pub fn forward_jpeg_exploded_native(
         &self,
         params: &ParamSet,
@@ -272,20 +302,20 @@ impl Session {
         qvec: &[f32; 64],
         num_freqs: usize,
     ) -> Tensor {
-        network::jpeg_forward_exploded(
-            &self.cfg,
+        self.forward_jpeg_plan(
             params,
-            coeffs,
             em,
+            &Act::Sparse(SparseBlocks::from_dense(coeffs)),
             qvec,
             num_freqs,
-            Method::Asm,
-            self.engine.threads,
+            &SparseKernel { threads: self.engine.threads },
+            None,
         )
     }
 
     /// [`Session::forward_jpeg_exploded_native`] on sparse block input
     /// straight from entropy decode (no dense intermediate).
+    #[deprecated(note = "use Session::forward_jpeg_plan with plan::SparseKernel")]
     pub fn forward_jpeg_exploded_native_sparse(
         &self,
         params: &ParamSet,
@@ -294,15 +324,14 @@ impl Session {
         qvec: &[f32; 64],
         num_freqs: usize,
     ) -> Tensor {
-        network::jpeg_forward_exploded_sparse(
-            &self.cfg,
+        self.forward_jpeg_plan(
             params,
-            f0,
             em,
+            &Act::Sparse(f0.clone()),
             qvec,
             num_freqs,
-            Method::Asm,
-            self.engine.threads,
+            &SparseKernel { threads: self.engine.threads },
+            None,
         )
     }
 
@@ -310,6 +339,7 @@ impl Session {
     /// sparse activation residency: activations stay in
     /// [`SparseBlocks`] form between layers (bit-identical logits).
     /// `trace`, when given, accumulates per-layer nonzero fractions.
+    #[deprecated(note = "use Session::forward_jpeg_plan with plan::SparseResident")]
     pub fn forward_jpeg_exploded_native_resident(
         &self,
         params: &ParamSet,
@@ -317,18 +347,17 @@ impl Session {
         f0: &SparseBlocks,
         qvec: &[f32; 64],
         num_freqs: usize,
-        trace: Option<&mut network::ResidencyTrace>,
+        trace: Option<&mut ResidencyTrace>,
     ) -> Tensor {
-        network::jpeg_forward_exploded_resident(
-            &self.cfg,
+        let observer = trace.map(|t| t as &mut dyn PlanObserver);
+        self.forward_jpeg_plan(
             params,
-            f0,
             em,
+            &Act::Sparse(f0.clone()),
             qvec,
             num_freqs,
-            Method::Asm,
-            self.engine.threads,
-            trace,
+            &SparseResident { threads: self.engine.threads, prune_epsilon: 0.0 },
+            observer,
         )
     }
 

@@ -12,9 +12,9 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::jpeg::QuantTable;
-use crate::jpeg_domain::network::{
-    self, jpeg_forward_exploded_dense_kernel, jpeg_forward_exploded_resident,
-    jpeg_forward_exploded_sparse, ExplodedModel, ResidencyTrace,
+use crate::jpeg_domain::network::{ExplodedModel, ResidencyTrace, RESNET_PLAN};
+use crate::jpeg_domain::plan::{
+    Act, DccRef, DenseKernel, PlanCtx, PlanObserver, SparseKernel, SparseResident,
 };
 use crate::jpeg_domain::relu::Method;
 use crate::params::{ModelConfig, ParamSet};
@@ -64,6 +64,9 @@ pub struct NativeEngine {
     /// Row-parallel worker threads inside one forward (1 = inline).
     pub threads: usize,
     pub mode: NativeMode,
+    /// Post-ReLU magnitude prune of the sparse-resident executor;
+    /// `0.0` (the default) is exact.  See `repro exp prune`.
+    pub prune_epsilon: f32,
     cache: Mutex<HashMap<QvecKey, Arc<ExplodedModel>>>,
 }
 
@@ -83,8 +86,16 @@ impl NativeEngine {
             method,
             threads: crate::config::resolve_threads(threads),
             mode,
+            prune_epsilon: 0.0,
             cache: Mutex::new(HashMap::new()),
         }
+    }
+
+    /// Set the sparse-resident prune epsilon (`[run] prune_epsilon` /
+    /// `--prune-epsilon`).  Negative values clamp to exact.
+    pub fn with_prune_epsilon(mut self, eps: f32) -> NativeEngine {
+        self.prune_epsilon = eps.max(0.0);
+        self
     }
 
     /// Build from a model preset + optional checkpoint — no artifacts
@@ -134,54 +145,71 @@ impl NativeEngine {
         self.forward_traced(f0, qvec, None)
     }
 
-    /// [`NativeEngine::forward`] with an optional residency trace: in
-    /// `SparseResident` mode the trace accumulates per-layer nonzero
-    /// fractions (the other kernels never densify-track and leave it
-    /// untouched).
+    /// [`NativeEngine::forward`] with an optional residency trace,
+    /// routed through the single topology (`network::RESNET_PLAN`) and
+    /// the executor matching [`NativeEngine::mode`].
     pub fn forward_traced(
         &self,
         f0: &SparseBlocks,
         qvec: &[f32; 64],
         trace: Option<&mut ResidencyTrace>,
     ) -> Tensor {
+        self.forward_traced_act(Act::Sparse(f0.clone()), qvec, trace)
+    }
+
+    /// [`NativeEngine::forward_traced`] taking ownership of the input
+    /// activation — the zero-copy entry the serving compute stage uses
+    /// (the decoded batch moves in instead of being cloned per
+    /// forward).  A sparse input under the dense-kernel mode densifies
+    /// once at the stem conv, exactly the one-time conversion the
+    /// pre-plan path performed up front.
+    pub fn forward_traced_act(
+        &self,
+        input: Act,
+        qvec: &[f32; 64],
+        trace: Option<&mut ResidencyTrace>,
+    ) -> Tensor {
+        let channels = match &input {
+            Act::Sparse(s) => s.dims().1,
+            Act::Dense(t) => t.shape()[1],
+        };
+        assert_eq!(channels, self.cfg.in_channels);
         let em = self.exploded_for(qvec);
+        let ctx = PlanCtx {
+            params: &self.params,
+            exploded: Some(&em),
+            qvec,
+            num_freqs: self.num_freqs,
+            method: self.method,
+        };
+        let observer = trace.map(|t| t as &mut dyn PlanObserver);
         match self.mode {
-            NativeMode::Sparse => jpeg_forward_exploded_sparse(
-                &self.cfg,
-                &self.params,
-                f0,
-                &em,
-                qvec,
-                self.num_freqs,
-                self.method,
-                self.threads,
+            NativeMode::Sparse => {
+                RESNET_PLAN.run(&SparseKernel { threads: self.threads }, &ctx, &input, observer)
+            }
+            NativeMode::SparseResident => RESNET_PLAN.run(
+                &SparseResident { threads: self.threads, prune_epsilon: self.prune_epsilon },
+                &ctx,
+                &input,
+                observer,
             ),
-            NativeMode::SparseResident => jpeg_forward_exploded_resident(
-                &self.cfg,
-                &self.params,
-                f0,
-                &em,
-                qvec,
-                self.num_freqs,
-                self.method,
-                self.threads,
-                trace,
-            ),
-            NativeMode::Dense => jpeg_forward_exploded_dense_kernel(
-                &self.cfg,
-                &self.params,
-                &f0.to_dense(),
-                &em,
-                qvec,
-                self.num_freqs,
-                self.method,
-            ),
+            NativeMode::Dense => RESNET_PLAN.run(&DenseKernel, &ctx, &input, observer),
         }
     }
 
-    /// Reference (non-exploded) forward for equivalence checks.
+    /// Reference (non-exploded, decompress-convolve-compress) forward
+    /// for equivalence checks — the same topology under the `DccRef`
+    /// executor.
     pub fn forward_reference(&self, coeffs: &Tensor, qvec: &[f32; 64]) -> Tensor {
-        network::jpeg_forward(&self.cfg, &self.params, coeffs, qvec, self.num_freqs, self.method)
+        assert_eq!(coeffs.shape()[1], self.cfg.in_channels);
+        let ctx = PlanCtx {
+            params: &self.params,
+            exploded: None,
+            qvec,
+            num_freqs: self.num_freqs,
+            method: self.method,
+        };
+        RESNET_PLAN.run(&DccRef, &ctx, &Act::Dense(coeffs.clone()), None)
     }
 }
 

@@ -16,6 +16,11 @@ pub enum ServeError {
     /// The pipeline is draining; no new requests are admitted.
     #[error("server is shutting down")]
     ShuttingDown,
+    /// The request's deadline passed before its forward pass ran; it
+    /// was dropped without compute (at admission, decode pickup, or
+    /// batch assembly).
+    #[error("request deadline exceeded before compute")]
+    DeadlineExceeded,
     /// The request bytes did not decode to a usable coefficient image.
     #[error("decode failed: {0}")]
     Decode(String),

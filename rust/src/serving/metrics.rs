@@ -153,6 +153,9 @@ impl SparsityMetrics {
 pub struct PipelineMetrics {
     pub admitted: AtomicU64,
     pub rejected: AtomicU64,
+    /// Requests dropped because their deadline passed before compute
+    /// (rejected at admission or shed at a stage pickup).
+    pub deadline_expired: AtomicU64,
     pub decode: StageMetrics,
     pub compute: StageMetrics,
     /// submit -> reply, over successfully answered requests.
@@ -173,6 +176,7 @@ impl PipelineMetrics {
         PipelineMetrics {
             admitted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            deadline_expired: AtomicU64::new(0),
             decode: StageMetrics::new(),
             compute: StageMetrics::new(),
             e2e: LatencyHistogram::new(),
@@ -209,6 +213,7 @@ impl PipelineMetrics {
         PipelineSnapshot {
             admitted: self.admitted.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
             decode: stage(&self.decode),
             compute: stage(&self.compute),
             e2e_p50_ms: self.e2e.quantile_us(0.50) / 1e3,
@@ -240,6 +245,8 @@ pub struct StageSnapshot {
 pub struct PipelineSnapshot {
     pub admitted: u64,
     pub rejected: u64,
+    /// Requests dropped for an expired deadline before compute.
+    pub deadline_expired: u64,
     pub decode: StageSnapshot,
     pub compute: StageSnapshot,
     pub e2e_p50_ms: f64,
@@ -256,8 +263,14 @@ impl std::fmt::Display for PipelineSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(
             f,
-            "admitted={} rejected={} e2e p50={:.2}ms p99={:.2}ms mean={:.2}ms",
-            self.admitted, self.rejected, self.e2e_p50_ms, self.e2e_p99_ms, self.e2e_mean_ms
+            "admitted={} rejected={} deadline_expired={} e2e p50={:.2}ms p99={:.2}ms \
+             mean={:.2}ms",
+            self.admitted,
+            self.rejected,
+            self.deadline_expired,
+            self.e2e_p50_ms,
+            self.e2e_p99_ms,
+            self.e2e_mean_ms
         )?;
         for (name, s) in [("decode", &self.decode), ("compute", &self.compute)] {
             writeln!(

@@ -4,8 +4,9 @@
 //! (§5) asks for: requests arrive as entropy-coded JPEG bytes and leave
 //! as class logits, never materializing the dense pixel image and never
 //! touching an AOT artifact — entropy decode feeds
-//! [`crate::tensor::SparseBlocks`] straight into the gather-free
-//! exploded-conv forward ([`crate::jpeg_domain::network::jpeg_forward_exploded_sparse`]).
+//! [`crate::tensor::SparseBlocks`] straight into the single network
+//! topology ([`crate::jpeg_domain::network::RESNET_PLAN`]) under a
+//! gather-free [`crate::jpeg_domain::plan::Executor`] strategy.
 //!
 //! ## Stage / channel topology
 //!
@@ -35,6 +36,11 @@
 //!      *blocking* bounded send; when the compute pool falls behind,
 //!      decoders stall, the admission queue fills, and new requests
 //!      are rejected.  No queue in the pipeline is unbounded.
+//! * **Deadlines are honored before compute.**  A request submitted
+//!   with [`pipeline::ServeRequest::with_deadline`] is dropped with the
+//!   typed [`ServeError::DeadlineExceeded`] the moment its deadline
+//!   passes — at admission, at decode pickup, or at compute batch
+//!   assembly — never after kernel time has been spent on it.
 //! * **Quant-table batching key.**  The exploded maps bake the
 //!   quantization vector into the conv kernels, so a micro-batch may
 //!   only coalesce requests whose `(quant table bits, block grid)`
@@ -71,7 +77,7 @@ pub mod queue;
 pub use engine::{NativeEngine, NativeMode};
 pub use error::ServeError;
 pub use metrics::{PipelineMetrics, QualityTag};
-pub use pipeline::{NativePipeline, PipelineConfig};
+pub use pipeline::{NativePipeline, PipelineConfig, ServeRequest};
 
 /// Which serving backend the `serve` CLI drives.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -50,8 +50,39 @@ impl Default for PipelineConfig {
 
 type Reply = Sender<anyhow::Result<InferResponse>>;
 
+/// One admission request: raw JPEG bytes plus an optional absolute
+/// deadline.  A request whose deadline passes before its forward pass
+/// runs is dropped with [`ServeError::DeadlineExceeded`] — at
+/// admission, at decode pickup, or at compute batch assembly — so an
+/// overloaded server never burns decode or kernel time on replies the
+/// client has already abandoned.
+pub struct ServeRequest {
+    /// Entropy-coded JPEG bytes.
+    pub bytes: Vec<u8>,
+    /// Latest instant at which starting compute is still useful.
+    pub deadline: Option<Instant>,
+}
+
+impl ServeRequest {
+    /// A request with no deadline.
+    pub fn new(bytes: Vec<u8>) -> ServeRequest {
+        ServeRequest { bytes, deadline: None }
+    }
+
+    /// Attach an absolute deadline.
+    pub fn with_deadline(mut self, deadline: Instant) -> ServeRequest {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
+fn expired(deadline: Option<Instant>) -> bool {
+    deadline.map_or(false, |d| Instant::now() >= d)
+}
+
 struct Job {
     bytes: Vec<u8>,
+    deadline: Option<Instant>,
     submitted: Instant,
     reply: Reply,
 }
@@ -61,6 +92,7 @@ struct DecodedJob {
     f0: SparseBlocks,
     qvec: [f32; 64],
     tag: QualityTag,
+    deadline: Option<Instant>,
     submitted: Instant,
     decoded_at: Instant,
     reply: Reply,
@@ -143,9 +175,27 @@ impl NativePipeline {
         &self,
         bytes: Vec<u8>,
     ) -> Result<Receiver<anyhow::Result<InferResponse>>, ServeError> {
+        self.try_submit_request(ServeRequest::new(bytes))
+    }
+
+    /// [`NativePipeline::try_submit`] with per-request options: an
+    /// already-expired deadline is rejected here with
+    /// [`ServeError::DeadlineExceeded`], before the request ever
+    /// occupies queue space.
+    pub fn try_submit_request(
+        &self,
+        req: ServeRequest,
+    ) -> Result<Receiver<anyhow::Result<InferResponse>>, ServeError> {
         let admit = self.admit.as_ref().ok_or(ServeError::ShuttingDown)?;
+        if expired(req.deadline) {
+            self.metrics
+                .deadline_expired
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            return Err(ServeError::DeadlineExceeded);
+        }
         let (reply, rx) = channel();
-        let job = Job { bytes, submitted: Instant::now(), reply };
+        let job =
+            Job { bytes: req.bytes, deadline: req.deadline, submitted: Instant::now(), reply };
         match admit.try_send(job) {
             Ok(()) => {
                 self.metrics.admitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -224,6 +274,14 @@ fn decode_worker(
             .decode
             .queue_wait
             .record(picked_up.saturating_duration_since(job.submitted));
+        // shed expired work before paying the entropy decode
+        if expired(job.deadline) {
+            metrics
+                .deadline_expired
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let _ = job.reply.send(Err(anyhow::Error::new(ServeError::DeadlineExceeded)));
+            continue;
+        }
         match decode_one(&job.bytes, in_channels) {
             Ok((f0, qvec)) => {
                 let decoded_at = Instant::now();
@@ -236,6 +294,7 @@ fn decode_worker(
                     f0,
                     qvec,
                     tag: QualityTag::from_qvec(&qvec),
+                    deadline: job.deadline,
                     submitted: job.submitted,
                     decoded_at,
                     reply: job.reply,
@@ -270,10 +329,23 @@ fn compute_worker(
         if jobs.is_empty() {
             return; // disconnected and drained
         }
+        // last deadline gate: expired jobs never join a batch, so no
+        // kernel time is spent on them
+        let mut live = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            if expired(job.deadline) {
+                metrics
+                    .deadline_expired
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let _ = job.reply.send(Err(anyhow::Error::new(ServeError::DeadlineExceeded)));
+            } else {
+                live.push(job);
+            }
+        }
         // group by (quant table, block grid): each group is one batched
         // forward through the matching exploded maps
         let mut groups: Vec<Vec<DecodedJob>> = Vec::new();
-        for job in jobs {
+        for job in live {
             let key = (job.qvec.map(f32::to_bits), job.f0.dims());
             match groups
                 .iter_mut()
@@ -304,11 +376,18 @@ fn serve_group(
     }
     let qvec = group[0].qvec;
     let batch = SparseBlocks::concat(group.iter().map(|j| &j.f0));
-    // the resident kernel reports per-layer nonzero fractions; fold
+    // the resident executor reports per-layer nonzero fractions; fold
     // them into the pipeline metrics so sparsity decay is observable
+    // (other executors skip the observer — no occupancy-scan cost).
+    // The concatenated batch MOVES into the forward — no per-batch copy
+    let resident = engine.mode == crate::serving::engine::NativeMode::SparseResident;
     let mut trace = crate::jpeg_domain::network::ResidencyTrace::new();
-    let logits = engine.forward_traced(&batch, &qvec, Some(&mut trace));
-    if engine.mode == crate::serving::engine::NativeMode::SparseResident {
+    let logits = engine.forward_traced_act(
+        crate::jpeg_domain::plan::Act::Sparse(batch),
+        &qvec,
+        resident.then_some(&mut trace),
+    );
+    if resident {
         metrics.sparsity.record(&trace);
     }
     metrics.compute.service.record(t0.elapsed());

@@ -51,8 +51,9 @@
 //! [`SparseBlocks::truncate_runs`] is the standalone in-place form of
 //! the same operation.  The gather-free convolution consumer lives in
 //! `crate::jpeg_domain::conv::jpeg_conv_exploded_sparse`; the
-//! sparse-resident network forward in
-//! `crate::jpeg_domain::network::jpeg_forward_exploded_resident`.
+//! sparse-resident network strategy is
+//! `crate::jpeg_domain::plan::SparseResident` over the single topology
+//! `crate::jpeg_domain::network::RESNET_PLAN`.
 
 use crate::jpeg::codec::CoeffImage;
 

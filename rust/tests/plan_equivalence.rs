@@ -1,0 +1,219 @@
+//! Plan/Executor equivalence: the execution-graph API must reproduce
+//! the legacy forward functions bit for bit at every tracked serving
+//! quality, and invalid topologies must fail construction with a
+//! descriptive error.
+//!
+//! Everything here runs without PJRT artifacts.
+
+#![allow(deprecated)] // the legacy shims are the regression oracle here
+
+use jpegdomain::data::{Dataset, Split, SynthKind};
+use jpegdomain::jpeg::codec;
+use jpegdomain::jpeg_domain::network::{
+    jpeg_forward, jpeg_forward_exploded_dense_kernel, jpeg_forward_exploded_resident,
+    jpeg_forward_exploded_sparse, ExplodedModel, ResidencyTrace, RESIDENCY_POINTS, RESNET_PLAN,
+};
+use jpegdomain::jpeg_domain::plan::{
+    Act, DccRef, DenseKernel, NodeRef, PlanBuilder, PlanCtx, PlanTimings, SparseKernel,
+    SparseResident,
+};
+use jpegdomain::jpeg_domain::relu::Method;
+use jpegdomain::params::{ModelConfig, ParamSet};
+use jpegdomain::tensor::SparseBlocks;
+
+/// A slim model keeps the per-quality exploded precomputes affordable
+/// in debug test runs (same recipe as `sparse_equivalence.rs`).
+fn slim() -> ModelConfig {
+    ModelConfig {
+        name: "slim".into(),
+        in_channels: 1,
+        num_classes: 10,
+        widths: [4, 4, 4],
+        image_size: 32,
+    }
+}
+
+struct Fixture {
+    qvec: [f32; 64],
+    f0: SparseBlocks,
+    em: ExplodedModel,
+}
+
+fn fixture(p: &ParamSet, quality: u8) -> Fixture {
+    let files = Dataset::synthetic(SynthKind::Mnist, 2, 2, 61).jpeg_bytes(Split::Test, quality);
+    let cis: Vec<_> = files
+        .iter()
+        .map(|(b, _)| codec::decode_to_coefficients(b).unwrap())
+        .collect();
+    let qvec = cis[0].qvec(0);
+    let f0 = SparseBlocks::from_coeff_images(&cis);
+    let em = ExplodedModel::precompute(p, &qvec);
+    Fixture { qvec, f0, em }
+}
+
+#[test]
+fn executors_match_legacy_forwards_bitwise_across_qualities() {
+    let cfg = slim();
+    let p = ParamSet::init(&cfg, 31);
+    for quality in [50u8, 75, 90] {
+        let fx = fixture(&p, quality);
+        let ctx = PlanCtx {
+            params: &p,
+            exploded: Some(&fx.em),
+            qvec: &fx.qvec,
+            num_freqs: 15,
+            method: Method::Asm,
+        };
+        let sparse_input = Act::Sparse(fx.f0.clone());
+        let dense = fx.f0.to_dense();
+        let dense_input = Act::Dense(dense.clone());
+
+        // each executor is bit-identical to its pre-refactor forward
+        let plan_sparse = RESNET_PLAN.run(&SparseKernel { threads: 1 }, &ctx, &sparse_input, None);
+        let shim_sparse =
+            jpeg_forward_exploded_sparse(&cfg, &p, &fx.f0, &fx.em, &fx.qvec, 15, Method::Asm, 1);
+        assert_eq!(plan_sparse, shim_sparse, "quality {quality}: sparse-kernel");
+
+        let plan_resident = RESNET_PLAN.run(
+            &SparseResident { threads: 1, prune_epsilon: 0.0 },
+            &ctx,
+            &sparse_input,
+            None,
+        );
+        let shim_resident = jpeg_forward_exploded_resident(
+            &cfg, &p, &fx.f0, &fx.em, &fx.qvec, 15, Method::Asm, 1, None,
+        );
+        assert_eq!(plan_resident, shim_resident, "quality {quality}: sparse-resident");
+
+        let plan_dense = RESNET_PLAN.run(&DenseKernel, &ctx, &dense_input, None);
+        let shim_dense = jpeg_forward_exploded_dense_kernel(
+            &cfg, &p, &dense, &fx.em, &fx.qvec, 15, Method::Asm,
+        );
+        assert_eq!(plan_dense, shim_dense, "quality {quality}: dense-kernel");
+
+        let plan_dcc = RESNET_PLAN.run(&DccRef, &ctx, &dense_input, None);
+        let shim_dcc = jpeg_forward(&cfg, &p, &dense, &fx.qvec, 15, Method::Asm);
+        assert_eq!(plan_dcc, shim_dcc, "quality {quality}: dcc-reference");
+
+        // strategy interchangeability: sparse-kernel and sparse-resident
+        // agree bitwise; the other two agree to float tolerance
+        assert_eq!(plan_resident, plan_sparse, "quality {quality}: residency is free");
+        assert!(
+            plan_dense.max_abs_diff(&plan_sparse) < 1e-2,
+            "quality {quality}: dense-kernel dev {}",
+            plan_dense.max_abs_diff(&plan_sparse)
+        );
+        assert!(
+            plan_dcc.max_abs_diff(&plan_sparse) < 1e-1,
+            "quality {quality}: dcc dev {}",
+            plan_dcc.max_abs_diff(&plan_sparse)
+        );
+    }
+}
+
+#[test]
+fn observer_trace_matches_legacy_trace() {
+    let cfg = slim();
+    let p = ParamSet::init(&cfg, 33);
+    let fx = fixture(&p, 50);
+    let ctx = PlanCtx {
+        params: &p,
+        exploded: Some(&fx.em),
+        qvec: &fx.qvec,
+        num_freqs: 15,
+        method: Method::Asm,
+    };
+    let mut plan_trace = ResidencyTrace::new();
+    RESNET_PLAN.run(
+        &SparseResident { threads: 1, prune_epsilon: 0.0 },
+        &ctx,
+        &Act::Sparse(fx.f0.clone()),
+        Some(&mut plan_trace),
+    );
+    let mut shim_trace = ResidencyTrace::new();
+    jpeg_forward_exploded_resident(
+        &cfg,
+        &p,
+        &fx.f0,
+        &fx.em,
+        &fx.qvec,
+        15,
+        Method::Asm,
+        1,
+        Some(&mut shim_trace),
+    );
+    assert_eq!(plan_trace.counts, shim_trace.counts, "observer hook == legacy trace");
+    for (i, label) in RESIDENCY_POINTS.iter().enumerate() {
+        assert!(plan_trace.density(i) > 0.0, "{label}: density 0");
+    }
+    // the timing observer sees one op per plan node
+    let mut timings = PlanTimings::default();
+    RESNET_PLAN.run(
+        &SparseResident { threads: 1, prune_epsilon: 0.0 },
+        &ctx,
+        &Act::Sparse(fx.f0.clone()),
+        Some(&mut timings),
+    );
+    assert_eq!(timings.ops.len(), RESNET_PLAN.len());
+    assert!(timings.total().as_nanos() > 0);
+}
+
+#[test]
+fn prune_epsilon_knob_prunes_and_stays_close() {
+    let cfg = slim();
+    let p = ParamSet::init(&cfg, 35);
+    let fx = fixture(&p, 50);
+    let ctx = PlanCtx {
+        params: &p,
+        exploded: Some(&fx.em),
+        qvec: &fx.qvec,
+        num_freqs: 15,
+        method: Method::Asm,
+    };
+    let input = Act::Sparse(fx.f0.clone());
+    let mut exact_trace = ResidencyTrace::new();
+    let exact = RESNET_PLAN.run(
+        &SparseResident { threads: 1, prune_epsilon: 0.0 },
+        &ctx,
+        &input,
+        Some(&mut exact_trace),
+    );
+    let mut pruned_trace = ResidencyTrace::new();
+    let pruned = RESNET_PLAN.run(
+        &SparseResident { threads: 1, prune_epsilon: 1e-4 },
+        &ctx,
+        &input,
+        Some(&mut pruned_trace),
+    );
+    // a tiny epsilon perturbs logits at most slightly
+    assert!(
+        pruned.max_abs_diff(&exact) < 1e-1,
+        "eps 1e-4 dev {}",
+        pruned.max_abs_diff(&exact)
+    );
+    // the first post-ReLU point can only lose entries to the prune
+    // (later points see different inputs, so only the stem is a
+    // guaranteed monotone comparison)
+    assert!(
+        pruned_trace.counts[1].0 <= exact_trace.counts[1].0,
+        "stem.relu nnz grew under pruning"
+    );
+}
+
+#[test]
+fn mis_ordered_shortcut_edge_fails_construction_with_description() {
+    let mut b = PlanBuilder::new();
+    b.conv("stem.conv.w", 0, 1);
+    b.batch_norm("stem.bn");
+    let main = b.mark();
+    // a shortcut pointing at a node that has not been computed yet
+    b.shortcut_add(main, NodeRef::Node(11));
+    b.global_avg_pool();
+    b.fc();
+    let err = b.finish().expect_err("forward shortcut edge must fail");
+    let msg = err.to_string();
+    assert!(msg.contains("shortcut edge"), "{msg}");
+    assert!(msg.contains("node 11"), "{msg}");
+    assert!(msg.contains("not computed yet"), "{msg}");
+    assert!(msg.contains("backwards"), "{msg}");
+}

@@ -1,9 +1,12 @@
 //! Native serving pipeline integration tests: admission backpressure,
-//! graceful drain, and logits equivalence across kernels — all without
-//! PJRT artifacts (same fixture recipe as `sparse_equivalence.rs`:
-//! synthetic images -> real encoder -> entropy decode).
+//! per-request deadlines, graceful drain, and logits equivalence across
+//! kernels — all without PJRT artifacts (same fixture recipe as
+//! `sparse_equivalence.rs`: synthetic images -> real encoder ->
+//! entropy decode).
 
-use std::time::Duration;
+#![allow(deprecated)] // jpeg_forward is the legacy oracle here
+
+use std::time::{Duration, Instant};
 
 use jpegdomain::coordinator::server::Server;
 use jpegdomain::data::{Dataset, Split, SynthKind};
@@ -12,7 +15,7 @@ use jpegdomain::jpeg_domain::network::jpeg_forward;
 use jpegdomain::jpeg_domain::relu::Method;
 use jpegdomain::params::{ModelConfig, ParamSet};
 use jpegdomain::serving::{
-    NativeEngine, NativeMode, NativePipeline, PipelineConfig, ServeError,
+    NativeEngine, NativeMode, NativePipeline, PipelineConfig, ServeError, ServeRequest,
 };
 use jpegdomain::tensor::{SparseBlocks, Tensor};
 
@@ -153,6 +156,43 @@ fn native_sparse_dense_and_reference_logits_agree() {
             srow.max_abs_diff(&wrow)
         );
     }
+}
+
+#[test]
+fn expired_deadline_rejected_with_typed_error_before_compute() {
+    let p = NativePipeline::start(engine(NativeMode::Sparse, 6), PipelineConfig::default());
+    let files = quality50_files(1);
+
+    // a deadline that already passed: typed rejection at admission,
+    // never enqueued, never decoded, never computed
+    let expired = ServeRequest::new(files[0].0.clone())
+        .with_deadline(Instant::now() - Duration::from_millis(1));
+    match p.try_submit_request(expired) {
+        Err(ServeError::DeadlineExceeded) => {}
+        Err(e) => panic!("expected DeadlineExceeded, got {e}"),
+        Ok(_) => panic!("expired request must not be admitted"),
+    }
+    let snap = p.metrics.snapshot();
+    assert_eq!(snap.deadline_expired, 1);
+    assert_eq!(snap.admitted, 0, "expired request never occupied the queue");
+    assert_eq!(snap.compute.processed, 0);
+
+    // the error is recoverable through the anyhow reply channel
+    // convention too
+    let any = anyhow::Error::new(ServeError::DeadlineExceeded);
+    assert_eq!(any.downcast_ref::<ServeError>(), Some(&ServeError::DeadlineExceeded));
+
+    // a generous deadline serves normally
+    let rx = p
+        .try_submit_request(
+            ServeRequest::new(files[0].0.clone())
+                .with_deadline(Instant::now() + Duration::from_secs(600)),
+        )
+        .expect("future deadline admits");
+    let resp = rx.recv().expect("served").expect("ok");
+    assert_eq!(resp.logits.len(), 4);
+    assert_eq!(p.metrics.snapshot().deadline_expired, 1, "served request not counted");
+    p.shutdown();
 }
 
 #[test]

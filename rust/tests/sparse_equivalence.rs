@@ -2,7 +2,12 @@
 //! claim rests on (paper §5: "the sparsity of the JPEG format allows
 //! for faster processing ... with little to no penalty").
 //!
-//! Everything here runs without PJRT artifacts.
+//! Everything here runs without PJRT artifacts.  The deprecated
+//! forward shims are exercised deliberately: they pin the pre-refactor
+//! behavior the `Plan`/`Executor` API must reproduce bit for bit (see
+//! `plan_equivalence.rs` for the executor-level assertions).
+
+#![allow(deprecated)]
 
 use jpegdomain::data::{Dataset, Split, SynthKind};
 use jpegdomain::jpeg::codec;
