@@ -50,6 +50,45 @@ done
 echo "$PLAN_OUT" | grep -q "bit-identical: yes" \
     || { echo "plan-smoke FAILED: sparse vs resident not bit-identical"; exit 1; }
 
+echo "== socket-smoke (streaming front end, wire-level round trip) =="
+# start the socket front end on an ephemeral port (slow-start gate
+# warmed by one in-process batch), drive a short closed-loop burst over
+# the wire with `serve bench --remote`, and require nonzero completed
+# requests with zero protocol errors; emits BENCH_PR5.json (remote vs
+# in-process throughput/latency at quality 50/75/90)
+SERVE_LOG=$(mktemp)
+./target/release/repro serve --listen 127.0.0.1:0 --listen-secs 120 \
+    --warmup-batches 1 --qualities 50,75,90 \
+    --decode-workers 2 --compute-workers 2 --max-batch 4 > "$SERVE_LOG" 2>&1 &
+SERVE_PID=$!
+ADDR=""
+# the server warms three quant tables + one in-process batch before
+# binding, so allow a generous window
+for _ in $(seq 1 300); do
+    ADDR=$(grep -m1 -oE 'listening on [0-9.:]+' "$SERVE_LOG" | awk '{print $3}' || true)
+    [ -n "$ADDR" ] && break
+    sleep 0.2
+done
+if [ -z "$ADDR" ]; then
+    echo "socket-smoke FAILED: server never bound"; cat "$SERVE_LOG"
+    kill "$SERVE_PID" 2>/dev/null || true
+    exit 1
+fi
+SOCKET_OUT=$(./target/release/repro serve bench --remote "$ADDR" \
+    --requests 30 --clients 3 --qualities 50,75,90 --out BENCH_PR5.json) \
+    || { echo "socket-smoke FAILED: remote bench errored"; cat "$SERVE_LOG"; \
+         kill "$SERVE_PID" 2>/dev/null || true; exit 1; }
+kill "$SERVE_PID" 2>/dev/null || true
+wait "$SERVE_PID" 2>/dev/null || true
+echo "$SOCKET_OUT"
+echo "$SOCKET_OUT" | grep -q "remote-socket" \
+    || { echo "socket-smoke FAILED: no remote row"; exit 1; }
+echo "$SOCKET_OUT" | grep -qE "remote completed requests: [1-9][0-9]* \(protocol errors: 0\)" \
+    || { echo "socket-smoke FAILED: incomplete requests or protocol errors"; exit 1; }
+[ -f BENCH_PR5.json ] \
+    || { echo "socket-smoke FAILED: BENCH_PR5.json not written"; exit 1; }
+rm -f "$SERVE_LOG"
+
 if cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check =="
     cargo fmt --check

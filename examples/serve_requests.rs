@@ -9,9 +9,16 @@
 //! `BENCH_PR2.json` — the live version of the Figure-5 inference
 //! comparison.
 //!
+//! With `SR_REMOTE=HOST:PORT` the same stream is driven over the
+//! streaming socket front end instead (the blocking
+//! `serving::frontend::Client`, one connection per client thread) next
+//! to the in-process sparse-resident baseline, and the report goes to
+//! `BENCH_PR5.json` — remote vs in-process, per-quality latency.
+//!
 //! Run: `cargo run --release --example serve_requests [n_requests]`
-//! Env: SR_CLIENTS (4), SR_QUALITIES (50,75,90), SR_OUT (BENCH_PR2.json),
-//!      SR_SKIP_DENSE (unset)
+//! Env: SR_CLIENTS (4), SR_QUALITIES (50,75,90), SR_OUT (BENCH_PR2.json
+//!      or BENCH_PR5.json when remote), SR_SKIP_DENSE (unset),
+//!      SR_REMOTE (unset; e.g. 127.0.0.1:7878 from `repro serve --listen`)
 
 use jpegdomain::bench_harness as bh;
 use jpegdomain::serving::bench::{print_rows, report_json, run, BenchOptions};
@@ -35,21 +42,31 @@ fn main() -> anyhow::Result<()> {
         clients,
         qualities,
         skip_dense: std::env::var("SR_SKIP_DENSE").is_ok(),
+        remote: std::env::var("SR_REMOTE").ok(),
         ..Default::default()
     };
     println!(
-        "serve_requests: {} requests, {} clients, qualities {:?}",
-        opts.requests, opts.clients, opts.qualities
+        "serve_requests: {} requests, {} clients, qualities {:?}{}",
+        opts.requests,
+        opts.clients,
+        opts.qualities,
+        match &opts.remote {
+            Some(addr) => format!(", remote {addr}"),
+            None => String::new(),
+        }
     );
 
     let (rows, skipped) = run(&opts)?;
     print_rows(&rows, &skipped);
 
-    let axpy = bh::axpy_tiling_ablation(50, 16, 16, 3);
-    bh::throughput::print_axpy(&axpy);
+    // the kernel ablation rides with the engine sweep only
+    let axpy = opts.wants_axpy().then(|| bh::axpy_tiling_ablation(50, 16, 16, 3));
+    if let Some(a) = &axpy {
+        bh::throughput::print_axpy(a);
+    }
 
-    let doc = report_json(&opts, &rows, &skipped, &axpy);
-    let out = std::env::var("SR_OUT").unwrap_or_else(|_| "BENCH_PR2.json".into());
+    let doc = report_json(&opts, &rows, &skipped, axpy.as_ref());
+    let out = std::env::var("SR_OUT").unwrap_or_else(|_| opts.default_out().into());
     std::fs::write(&out, format!("{doc}\n"))?;
     println!("\nwrote {out}");
     println!("serve_requests OK");

@@ -209,6 +209,13 @@ pub struct ServeConfig {
     pub decoded_capacity: usize,
     pub max_batch: usize,
     pub max_wait_ms: usize,
+    /// Socket front-end bind address (`--listen` overrides); empty =
+    /// in-process serving only, no listener.
+    pub listen_addr: String,
+    /// Slow-start gate: compute batches the pipeline must serve before
+    /// socket traffic is admitted (rejected with the typed `WarmingUp`
+    /// wire code until then); `0` disables the gate.
+    pub warmup_batches: usize,
 }
 
 impl Default for ServeConfig {
@@ -222,6 +229,8 @@ impl Default for ServeConfig {
             decoded_capacity: 64,
             max_batch: 8,
             max_wait_ms: 5,
+            listen_addr: String::new(),
+            warmup_batches: 0,
         }
     }
 }
@@ -238,6 +247,8 @@ impl ServeConfig {
             decoded_capacity: cfg.usize_or("serve", "decoded_capacity", d.decoded_capacity),
             max_batch: cfg.usize_or("serve", "max_batch", d.max_batch),
             max_wait_ms: cfg.usize_or("serve", "max_wait_ms", d.max_wait_ms),
+            listen_addr: cfg.str_or("serve", "listen_addr", &d.listen_addr),
+            warmup_batches: cfg.usize_or("serve", "warmup_batches", d.warmup_batches),
         }
     }
 }
@@ -317,6 +328,15 @@ verbose = true
         assert_eq!(s.queue_capacity, 8);
         assert_eq!(s.max_batch, 2);
         assert_eq!(s.decode_workers, 2, "untouched keys keep defaults");
+        assert_eq!(s.listen_addr, "", "no listener unless configured");
+        assert_eq!(s.warmup_batches, 0, "slow start off by default");
+        let c = Config::parse(
+            "[serve]\nlisten_addr = \"127.0.0.1:7878\"\nwarmup_batches = 3\n",
+        )
+        .unwrap();
+        let s = ServeConfig::from_config(&c);
+        assert_eq!(s.listen_addr, "127.0.0.1:7878");
+        assert_eq!(s.warmup_batches, 3);
     }
 
     #[test]

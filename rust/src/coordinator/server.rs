@@ -20,7 +20,9 @@ use std::time::{Duration, Instant};
 use crate::jpeg_domain::relu::Method;
 use crate::params::ParamSet;
 use crate::runtime::Session;
-use crate::serving::{NativeEngine, NativePipeline, PipelineConfig};
+use crate::serving::{
+    FrontendConfig, NativeEngine, NativePipeline, PipelineConfig, SocketFrontend,
+};
 use crate::tensor::Tensor;
 
 use super::batcher::{BatcherConfig, DynamicBatcher};
@@ -74,7 +76,9 @@ enum Inner {
         worker: Option<JoinHandle<()>>,
     },
     Native {
-        pipeline: Option<NativePipeline>,
+        // shared (not owned) so a socket front end can feed the same
+        // pipeline from its connection workers
+        pipeline: Option<Arc<NativePipeline>>,
     },
 }
 
@@ -109,7 +113,7 @@ impl Server {
     /// Start the native staged pipeline behind the same `Server` facade
     /// (`serve --engine native`): no artifacts, no PJRT.
     pub fn start_native(engine: NativeEngine, cfg: PipelineConfig) -> Server {
-        let pipeline = NativePipeline::start(engine, cfg);
+        let pipeline = Arc::new(NativePipeline::start(engine, cfg));
         let metrics = pipeline.aggregate().clone();
         Server { inner: Inner::Native { pipeline: Some(pipeline) }, metrics }
     }
@@ -118,8 +122,24 @@ impl Server {
     /// (per-stage metrics, warm-up).
     pub fn pipeline(&self) -> Option<&NativePipeline> {
         match &self.inner {
-            Inner::Native { pipeline } => pipeline.as_ref(),
+            Inner::Native { pipeline } => pipeline.as_deref(),
             Inner::Pjrt { .. } => None,
+        }
+    }
+
+    /// Attach a streaming socket front end to the native pipeline
+    /// (`serve --listen ADDR`).  The returned [`SocketFrontend`] owns
+    /// the acceptor and connection workers; shut it down *before* this
+    /// server so in-flight socket replies drain while the pipeline is
+    /// still answering.  Fails on the PJRT engine — the wire protocol
+    /// is defined over the native pipeline's typed errors.
+    pub fn listen(&self, cfg: FrontendConfig) -> anyhow::Result<SocketFrontend> {
+        match &self.inner {
+            Inner::Native { pipeline: Some(p) } => SocketFrontend::start(p.clone(), cfg),
+            Inner::Native { pipeline: None } => anyhow::bail!("server already shut down"),
+            Inner::Pjrt { .. } => {
+                anyhow::bail!("--listen requires the native engine (got pjrt)")
+            }
         }
     }
 
@@ -266,7 +286,14 @@ impl Server {
             }
             Inner::Native { pipeline } => {
                 if let Some(p) = pipeline.take() {
-                    p.shutdown();
+                    match Arc::try_unwrap(p) {
+                        // sole owner: explicit graceful drain
+                        Ok(p) => p.shutdown(),
+                        // a front end still holds a clone; the same
+                        // drain runs in NativePipeline::drop when the
+                        // last reference goes
+                        Err(shared) => drop(shared),
+                    }
                 }
             }
         }

@@ -4,8 +4,9 @@
 //! topology definition — [`resnet_plan`] / [`RESNET_PLAN`] — consumed
 //! by every execution mode, plus the per-`(ParamSet, qvec)` exploded
 //! precompute ([`ExplodedModel`]) and the residency accounting
-//! ([`ResidencyTrace`]).  The old per-mode forward functions remain as
-//! deprecated shims over [`Plan::run`].
+//! ([`ResidencyTrace`]).  The per-mode `jpeg_forward*` shims that
+//! carried callers across the PR-4 redesign are gone (one migration PR,
+//! as planned): run [`RESNET_PLAN`] under a `plan::Executor` instead.
 //!
 //! Consumes the SAME `ParamSet` as `nn::spatial_forward` — model
 //! conversion (paper §4.6) is the identity on parameters.  Eval mode
@@ -13,15 +14,11 @@
 
 use once_cell::sync::Lazy;
 
-use crate::params::{ModelConfig, ParamSet};
-use crate::tensor::{SparseBlocks, Tensor};
+use crate::params::ParamSet;
+use crate::tensor::Tensor;
 
 use super::conv::explode_conv;
-use super::plan::{
-    Act, DccRef, DenseKernel, Plan, PlanBuilder, PlanCtx, PlanObserver, SparseKernel,
-    SparseResident,
-};
-use super::relu::Method;
+use super::plan::{Plan, PlanBuilder, PlanObserver};
 
 /// Conv parameter names + strides in explode order (mirrors the L2
 /// `model.CONV_LAYOUT` and `runtime::Session::CONV_LAYOUT`).
@@ -184,120 +181,43 @@ impl PlanObserver for ResidencyTrace {
     }
 }
 
-/// Eval forward: domain coefficients (N, C, 4, 4, 64) -> logits.
-///
-/// `num_freqs` is the ASM/APX spatial-frequency budget (15 = exact).
-#[deprecated(note = "run RESNET_PLAN with the plan::DccRef executor instead")]
-pub fn jpeg_forward(
-    cfg: &ModelConfig,
-    p: &ParamSet,
-    coeffs: &Tensor,
-    qvec: &[f32; 64],
-    num_freqs: usize,
-    method: Method,
-) -> Tensor {
-    assert_eq!(coeffs.shape()[1], cfg.in_channels);
-    let ctx = PlanCtx { params: p, exploded: None, qvec, num_freqs, method };
-    RESNET_PLAN.run(&DccRef, &ctx, &Act::Dense(coeffs.clone()), None)
-}
-
-/// Eval forward through the precomputed exploded maps, consuming sparse
-/// block input straight from entropy decode — the dense-boundary
-/// serving baseline.
-#[deprecated(note = "run RESNET_PLAN with the plan::SparseKernel executor instead")]
-#[allow(clippy::too_many_arguments)]
-pub fn jpeg_forward_exploded_sparse(
-    cfg: &ModelConfig,
-    p: &ParamSet,
-    f0: &SparseBlocks,
-    em: &ExplodedModel,
-    qvec: &[f32; 64],
-    num_freqs: usize,
-    method: Method,
-    threads: usize,
-) -> Tensor {
-    assert_eq!(f0.dims().1, cfg.in_channels);
-    let ctx = PlanCtx { params: p, exploded: Some(em), qvec, num_freqs, method };
-    RESNET_PLAN.run(&SparseKernel { threads }, &ctx, &Act::Sparse(f0.clone()), None)
-}
-
-/// Eval forward with end-to-end sparse activation residency
-/// (bit-identical logits to the dense-boundary path).  `trace`, when
-/// given, accumulates per-layer nonzero fractions
-/// ([`RESIDENCY_POINTS`]).
-#[deprecated(note = "run RESNET_PLAN with the plan::SparseResident executor instead")]
-#[allow(clippy::too_many_arguments)]
-pub fn jpeg_forward_exploded_resident(
-    cfg: &ModelConfig,
-    p: &ParamSet,
-    f0: &SparseBlocks,
-    em: &ExplodedModel,
-    qvec: &[f32; 64],
-    num_freqs: usize,
-    method: Method,
-    threads: usize,
-    trace: Option<&mut ResidencyTrace>,
-) -> Tensor {
-    assert_eq!(f0.dims().1, cfg.in_channels);
-    let ctx = PlanCtx { params: p, exploded: Some(em), qvec, num_freqs, method };
-    let observer = trace.map(|t| t as &mut dyn PlanObserver);
-    RESNET_PLAN.run(
-        &SparseResident { threads, prune_epsilon: 0.0 },
-        &ctx,
-        &Act::Sparse(f0.clone()),
-        observer,
-    )
-}
-
-/// Eval forward through the precomputed exploded maps with the dense
-/// Algorithm-1 kernel at every conv — the measured dense baseline.
-#[deprecated(note = "run RESNET_PLAN with the plan::DenseKernel executor instead")]
-#[allow(clippy::too_many_arguments)]
-pub fn jpeg_forward_exploded_dense_kernel(
-    cfg: &ModelConfig,
-    p: &ParamSet,
-    coeffs: &Tensor,
-    em: &ExplodedModel,
-    qvec: &[f32; 64],
-    num_freqs: usize,
-    method: Method,
-) -> Tensor {
-    assert_eq!(coeffs.shape()[1], cfg.in_channels);
-    let ctx = PlanCtx { params: p, exploded: Some(em), qvec, num_freqs, method };
-    RESNET_PLAN.run(&DenseKernel, &ctx, &Act::Dense(coeffs.clone()), None)
-}
-
-/// Dense-input convenience wrapper over the sparse-kernel executor
-/// (sparsifies the input, then runs the dense-boundary strategy).
-#[deprecated(note = "run RESNET_PLAN with the plan::SparseKernel executor instead")]
-#[allow(clippy::too_many_arguments)]
-pub fn jpeg_forward_exploded(
-    cfg: &ModelConfig,
-    p: &ParamSet,
-    coeffs: &Tensor,
-    em: &ExplodedModel,
-    qvec: &[f32; 64],
-    num_freqs: usize,
-    method: Method,
-    threads: usize,
-) -> Tensor {
-    assert_eq!(coeffs.shape()[1], cfg.in_channels);
-    let ctx = PlanCtx { params: p, exploded: Some(em), qvec, num_freqs, method };
-    let f0 = SparseBlocks::from_dense(coeffs);
-    RESNET_PLAN.run(&SparseKernel { threads }, &ctx, &Act::Sparse(f0), None)
-}
-
 #[cfg(test)]
-#[allow(deprecated)] // the shims are exercised as the legacy regression surface
 mod tests {
-    use super::super::plan::LayerOp;
+    use super::super::plan::{
+        Act, DccRef, DenseKernel, Executor, LayerOp, PlanCtx, SparseKernel, SparseResident,
+    };
+    use super::super::relu::Method;
     use super::*;
     use crate::jpeg_domain::{encode_tensor, qvec_flat};
     use crate::nn::spatial_forward;
+    use crate::params::ModelConfig;
+    use crate::tensor::SparseBlocks;
     use crate::util::Rng;
 
     fn cfg() -> ModelConfig {
         ModelConfig::preset("mnist").unwrap()
+    }
+
+    /// Run the canonical topology under `exec` (ASM/APX per `method`,
+    /// phi = `num_freqs`) — what the removed shims used to wrap.
+    #[allow(clippy::too_many_arguments)]
+    fn run_plan(
+        exec: &dyn Executor,
+        p: &ParamSet,
+        em: Option<&ExplodedModel>,
+        input: &Act,
+        qvec: &[f32; 64],
+        num_freqs: usize,
+        method: Method,
+        trace: Option<&mut ResidencyTrace>,
+    ) -> Tensor {
+        let ctx = PlanCtx { params: p, exploded: em, qvec, num_freqs, method };
+        let observer = trace.map(|t| t as &mut dyn PlanObserver);
+        RESNET_PLAN.run(exec, &ctx, input, observer)
+    }
+
+    fn run_dcc(p: &ParamSet, f: &Tensor, q: &[f32; 64], nf: usize, method: Method) -> Tensor {
+        run_plan(&DccRef, p, None, &Act::Dense(f.clone()), q, nf, method, None)
     }
 
     fn rand_input(c: &ModelConfig, n: usize, seed: u64) -> Tensor {
@@ -348,7 +268,7 @@ mod tests {
         let x = rand_input(&c, 2, 1);
         let q = qvec_flat();
         let f = encode_tensor(&x, &q);
-        let lj = jpeg_forward(&c, &p, &f, &q, 15, Method::Asm);
+        let lj = run_dcc(&p, &f, &q, 15, Method::Asm);
         let ls = spatial_forward(&c, &p, &x);
         assert!(
             lj.max_abs_diff(&ls) < 1e-3,
@@ -364,7 +284,7 @@ mod tests {
         let x = rand_input(&c, 1, 3);
         let q = qvec_flat();
         let f = encode_tensor(&x, &q);
-        let lj = jpeg_forward(&c, &p, &f, &q, 15, Method::Asm);
+        let lj = run_dcc(&p, &f, &q, 15, Method::Asm);
         let ls = spatial_forward(&c, &p, &x);
         assert!(lj.max_abs_diff(&ls) < 1e-3);
     }
@@ -376,8 +296,8 @@ mod tests {
         let x = rand_input(&c, 1, 5);
         let q = qvec_flat();
         let f = encode_tensor(&x, &q);
-        let l15 = jpeg_forward(&c, &p, &f, &q, 15, Method::Asm);
-        let l3 = jpeg_forward(&c, &p, &f, &q, 3, Method::Asm);
+        let l15 = run_dcc(&p, &f, &q, 15, Method::Asm);
+        let l3 = run_dcc(&p, &f, &q, 3, Method::Asm);
         assert!(l15.max_abs_diff(&l3) > 1e-4);
     }
 
@@ -389,8 +309,18 @@ mod tests {
         let q = qvec_flat();
         let f = encode_tensor(&x, &q);
         let em = ExplodedModel::precompute(&p, &q);
-        let want = jpeg_forward(&c, &p, &f, &q, 15, Method::Asm);
-        let got = jpeg_forward_exploded(&c, &p, &f, &em, &q, 15, Method::Asm, 1);
+        let want = run_dcc(&p, &f, &q, 15, Method::Asm);
+        let input = Act::Sparse(SparseBlocks::from_dense(&f));
+        let got = run_plan(
+            &SparseKernel { threads: 1 },
+            &p,
+            Some(&em),
+            &input,
+            &q,
+            15,
+            Method::Asm,
+            None,
+        );
         assert!(
             got.max_abs_diff(&want) < 1e-3,
             "max diff {}",
@@ -406,8 +336,27 @@ mod tests {
         let q = qvec_flat();
         let f = encode_tensor(&x, &q);
         let em = ExplodedModel::precompute(&p, &q);
-        let one = jpeg_forward_exploded(&c, &p, &f, &em, &q, 15, Method::Asm, 1);
-        let four = jpeg_forward_exploded(&c, &p, &f, &em, &q, 15, Method::Asm, 4);
+        let input = Act::Sparse(SparseBlocks::from_dense(&f));
+        let one = run_plan(
+            &SparseKernel { threads: 1 },
+            &p,
+            Some(&em),
+            &input,
+            &q,
+            15,
+            Method::Asm,
+            None,
+        );
+        let four = run_plan(
+            &SparseKernel { threads: 4 },
+            &p,
+            Some(&em),
+            &input,
+            &q,
+            15,
+            Method::Asm,
+            None,
+        );
         assert_eq!(one, four);
     }
 
@@ -419,8 +368,27 @@ mod tests {
         let q = qvec_flat();
         let f = encode_tensor(&x, &q);
         let em = ExplodedModel::precompute(&p, &q);
-        let sparse = jpeg_forward_exploded(&c, &p, &f, &em, &q, 15, Method::Asm, 1);
-        let dense = jpeg_forward_exploded_dense_kernel(&c, &p, &f, &em, &q, 15, Method::Asm);
+        let sparse_in = Act::Sparse(SparseBlocks::from_dense(&f));
+        let sparse = run_plan(
+            &SparseKernel { threads: 1 },
+            &p,
+            Some(&em),
+            &sparse_in,
+            &q,
+            15,
+            Method::Asm,
+            None,
+        );
+        let dense = run_plan(
+            &DenseKernel,
+            &p,
+            Some(&em),
+            &Act::Dense(f.clone()),
+            &q,
+            15,
+            Method::Asm,
+            None,
+        );
         assert!(
             dense.max_abs_diff(&sparse) < 1e-3,
             "dense-kernel vs sparse logits: {}",
@@ -438,27 +406,49 @@ mod tests {
         let x = rand_input(&c, 2, 15);
         let q = qvec_flat();
         let f = encode_tensor(&x, &q);
-        let f0 = SparseBlocks::from_dense(&f);
+        let input = Act::Sparse(SparseBlocks::from_dense(&f));
         let em = ExplodedModel::precompute(&p, &q);
-        let boundary = jpeg_forward_exploded_sparse(&c, &p, &f0, &em, &q, 15, Method::Asm, 1);
+        let sparse = |threads: usize, nf: usize, method: Method| {
+            run_plan(&SparseKernel { threads }, &p, Some(&em), &input, &q, nf, method, None)
+        };
+        let resident = |threads: usize, nf: usize, method: Method| {
+            run_plan(
+                &SparseResident { threads, prune_epsilon: 0.0 },
+                &p,
+                Some(&em),
+                &input,
+                &q,
+                nf,
+                method,
+                None,
+            )
+        };
+        let boundary = sparse(1, 15, Method::Asm);
         let mut tr = ResidencyTrace::new();
-        let resident =
-            jpeg_forward_exploded_resident(&c, &p, &f0, &em, &q, 15, Method::Asm, 1, Some(&mut tr));
-        assert_eq!(resident, boundary, "resident path must be bit-identical");
+        let res = run_plan(
+            &SparseResident { threads: 1, prune_epsilon: 0.0 },
+            &p,
+            Some(&em),
+            &input,
+            &q,
+            15,
+            Method::Asm,
+            Some(&mut tr),
+        );
+        assert_eq!(res, boundary, "resident path must be bit-identical");
         // trace populated at every point, fractions in (0, 1]
         for (label, d) in tr.densities() {
             assert!(d > 0.0 && d <= 1.0, "{label}: density {d}");
         }
         // threaded resident is bit-identical too
-        let threaded =
-            jpeg_forward_exploded_resident(&c, &p, &f0, &em, &q, 15, Method::Asm, 4, None);
-        assert_eq!(resident, threaded);
+        let threaded = resident(4, 15, Method::Asm);
+        assert_eq!(res, threaded);
         // the resident run-truncation must agree with the dense band
         // mask at lossy phi budgets, for both relu approximations
         for nf in [4usize, 8] {
-            for method in [Method::Asm, Method::Apx] {
-                let b = jpeg_forward_exploded_sparse(&c, &p, &f0, &em, &q, nf, method, 1);
-                let r = jpeg_forward_exploded_resident(&c, &p, &f0, &em, &q, nf, method, 1, None);
+            for method in [Method::Apx, Method::Asm] {
+                let b = sparse(1, nf, method);
+                let r = resident(1, nf, method);
                 assert_eq!(r, b, "nf={nf} method={method:?}");
             }
         }
@@ -475,8 +465,8 @@ mod tests {
         let mut asm_err = 0.0;
         let mut apx_err = 0.0;
         for nf in [4usize, 8, 12] {
-            asm_err += jpeg_forward(&c, &p, &f, &q, nf, Method::Asm).rmse(&exact);
-            apx_err += jpeg_forward(&c, &p, &f, &q, nf, Method::Apx).rmse(&exact);
+            asm_err += run_dcc(&p, &f, &q, nf, Method::Asm).rmse(&exact);
+            apx_err += run_dcc(&p, &f, &q, nf, Method::Apx).rmse(&exact);
         }
         assert!(asm_err < apx_err, "{asm_err} vs {apx_err}");
     }

@@ -6,7 +6,10 @@
 //!   serve                      start the serving loop on synthetic requests
 //!                              (--engine native = pure-rust sparse pipeline,
 //!                               --engine pjrt = AOT artifacts); `serve bench`
-//!                              runs the closed-loop load generator
+//!                              runs the closed-loop load generator;
+//!                              `--listen ADDR` attaches the streaming socket
+//!                              front end and `serve bench --remote ADDR`
+//!                              drives it over the wire
 //!   eval                       evaluate a checkpoint through either pipeline
 //!   convert                    spatial -> JPEG model conversion (paper §4.6)
 //!   exp <table1|fig4a|fig4b|fig4c|fig5|ablation|sparse|resident|prune>
@@ -97,10 +100,19 @@ fn usage() -> ! {
                   --prune-epsilon F (post-ReLU magnitude prune of the
                   sparse-resident executor; 0 = exact)
           pjrt:   --route spatial|jpeg --max-batch N --max-wait-ms N
+          --listen ADDR (native only): streaming socket front end; prints
+                  'listening on HOST:PORT' (resolves :0), serves until
+                  --listen-secs S elapse (0 = forever, the default);
+                  --warmup-batches N rejects socket traffic with the
+                  typed WarmingUp code until N in-process warm batches
+                  ran; --qualities Q,.. warms those quant tables
   serve bench: closed-loop load generator -> BENCH_PR2.json
           --requests N --clients N --qualities 50,75,90 --skip-dense
           --out FILE (native-sparse-resident vs native-sparse vs
           native-dense vs pjrt-if-present)
+          --remote ADDR: drive a running socket front end instead and
+          compare against the in-process sparse-resident baseline
+          -> BENCH_PR5.json
   eval:   --ckpt PATH --route spatial|jpeg --nf K --method asm|apx
   convert: --ckpt-in PATH --ckpt-out PATH
   exp:    table1|fig4a|fig4b|fig4c|fig5|ablation|sparse|resident|prune
@@ -214,6 +226,14 @@ fn cmd_serve(args: &Args, cfg: &Config) -> anyhow::Result<()> {
         return cmd_serve_bench(args, cfg);
     }
     let sc = ServeConfig::from_config(cfg);
+    let listen = args
+        .flags
+        .get("listen")
+        .cloned()
+        .or_else(|| (!sc.listen_addr.is_empty()).then(|| sc.listen_addr.clone()));
+    if let Some(addr) = listen {
+        return cmd_serve_listen(args, cfg, &sc, &addr);
+    }
     let dataset = args.get("dataset", &cfg.str_or("run", "dataset", "mnist"));
     let quality = args.usize("quality", 95) as u8;
     let n = args.usize("requests", 200);
@@ -327,6 +347,111 @@ fn cmd_serve(args: &Args, cfg: &Config) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `repro serve --listen ADDR`: native pipeline + streaming socket
+/// front end.  Warms the exploded-map cache for the expected quant
+/// tables, drives the configured number of in-process warm batches
+/// (the slow-start gate rejects socket traffic with the typed
+/// `WarmingUp` code until they finish), then accepts connections until
+/// `--listen-secs` elapse (0 = forever).
+fn cmd_serve_listen(
+    args: &Args,
+    cfg: &Config,
+    sc: &ServeConfig,
+    addr: &str,
+) -> anyhow::Result<()> {
+    let engine: EngineKind = args
+        .get("engine", &sc.engine)
+        .parse()
+        .map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(
+        engine == EngineKind::Native,
+        "--listen requires the native engine (the wire protocol is defined over its typed errors)"
+    );
+    let dataset = args.get("dataset", &cfg.str_or("run", "dataset", "mnist"));
+    let mode: NativeMode = args.get("mode", &sc.mode).parse().map_err(anyhow::Error::msg)?;
+    let native = NativeEngine::from_preset(
+        &dataset,
+        args.flags.get("ckpt").map(PathBuf::from),
+        args.usize("seed", 0) as u64,
+        args.usize("nf", 15),
+        args.get("method", "asm").parse().map_err(anyhow::Error::msg)?,
+        args.usize("threads", cfg.usize_or("run", "threads", 0)),
+        mode,
+    )?
+    .with_prune_epsilon(args.f32("prune-epsilon", cfg.f32_or("run", "prune_epsilon", 0.0)));
+    let pipeline_cfg = pipeline_config_from(args, sc);
+    let server = Server::start_native(native, pipeline_cfg);
+    let pipeline = server.pipeline().expect("native server has a pipeline");
+
+    let qualities: Vec<u8> = args
+        .get("qualities", "50,75,90")
+        .split(',')
+        .filter_map(|t| t.trim().parse().ok())
+        .collect();
+    anyhow::ensure!(!qualities.is_empty(), "--qualities must name at least one quality");
+    // pay every expected exploded-map precompute before the doors open
+    for &q in &qualities {
+        pipeline.warm(q);
+    }
+
+    let warmup_batches = args.usize("warmup-batches", sc.warmup_batches) as u64;
+    if warmup_batches > 0 {
+        // in-process warm traffic opens the slow-start gate: enough
+        // requests to guarantee >= warmup_batches compute batches
+        let n = warmup_batches as usize * pipeline_cfg.max_batch.max(1);
+        let kind = SynthKind::parse(&dataset).ok_or_else(|| anyhow::anyhow!("dataset"))?;
+        let data = Dataset::synthetic(kind, 2, n, 23);
+        let per_quality: Vec<Vec<(Vec<u8>, u32)>> = qualities
+            .iter()
+            .map(|&q| data.jpeg_bytes(Split::Test, q))
+            .collect();
+        // bounded in-flight window: any warmup volume stays under the
+        // admission capacity instead of tripping QueueFull on itself
+        let window = pipeline_cfg.queue_capacity.clamp(1, 32);
+        let mut pending = std::collections::VecDeque::new();
+        let settle = |rx: std::sync::mpsc::Receiver<anyhow::Result<InferResponse>>| {
+            rx.recv()
+                .map_err(|_| anyhow::anyhow!("warmup reply lost"))?
+                .map(|_| ())
+                .map_err(|e| anyhow::anyhow!("warmup request failed: {e}"))
+        };
+        for i in 0..n {
+            if pending.len() >= window {
+                settle(pending.pop_front().expect("non-empty window"))?;
+            }
+            let files = &per_quality[i % per_quality.len()];
+            pending.push_back(server.submit(files[i % files.len()].0.clone()));
+        }
+        for rx in pending {
+            settle(rx)?;
+        }
+        println!("warmup: {n} in-process requests served (gate needs {warmup_batches} batches)");
+    }
+
+    let frontend = server.listen(serving::FrontendConfig {
+        listen_addr: addr.to_string(),
+        warmup_batches,
+        max_inflight: args.usize("max-inflight", 64),
+    })?;
+    // single greppable line: scripts parse the resolved port out of it
+    println!("listening on {}", frontend.local_addr());
+
+    let listen_secs = args.usize("listen-secs", 0);
+    let started = std::time::Instant::now();
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        if listen_secs > 0 && started.elapsed().as_secs() >= listen_secs as u64 {
+            break;
+        }
+    }
+
+    println!("{}", frontend.metrics.snapshot());
+    println!("{}", pipeline.metrics.snapshot());
+    frontend.shutdown();
+    server.shutdown();
+    Ok(())
+}
+
 fn cmd_serve_bench(args: &Args, cfg: &Config) -> anyhow::Result<()> {
     let sc = ServeConfig::from_config(cfg);
     let qualities: Vec<u8> = args
@@ -347,25 +472,37 @@ fn cmd_serve_bench(args: &Args, cfg: &Config) -> anyhow::Result<()> {
             &cfg.str_or("run", "artifacts_dir", "artifacts"),
         )),
         skip_dense: args.has("skip-dense"),
+        remote: args.flags.get("remote").cloned(),
     };
-    println!(
-        "serve bench: {} requests x {} engines, {} clients, qualities {:?}",
-        opts.requests,
-        if opts.skip_dense { 2 } else { 3 },
-        opts.clients,
-        opts.qualities
-    );
+    if let Some(addr) = &opts.remote {
+        println!(
+            "serve bench: {} requests over socket {} vs in-process, {} clients, qualities {:?}",
+            opts.requests, addr, opts.clients, opts.qualities
+        );
+    } else {
+        println!(
+            "serve bench: {} requests x {} engines, {} clients, qualities {:?}",
+            opts.requests,
+            if opts.skip_dense { 2 } else { 3 },
+            opts.clients,
+            opts.qualities
+        );
+    }
     let (rows, skipped) = serving::bench::run(&opts)?;
     serving::bench::print_rows(&rows, &skipped);
-    let axpy = bh::axpy_tiling_ablation(
-        args.usize("axpy-quality", 50) as u8,
-        args.usize("axpy-batch", 16),
-        args.usize("axpy-cout", 16),
-        args.usize("axpy-iters", 3),
-    );
-    bh::throughput::print_axpy(&axpy);
-    let doc = serving::bench::report_json(&opts, &rows, &skipped, &axpy);
-    let out = args.get("out", "BENCH_PR2.json");
+    let axpy = opts.wants_axpy().then(|| {
+        bh::axpy_tiling_ablation(
+            args.usize("axpy-quality", 50) as u8,
+            args.usize("axpy-batch", 16),
+            args.usize("axpy-cout", 16),
+            args.usize("axpy-iters", 3),
+        )
+    });
+    if let Some(a) = &axpy {
+        bh::throughput::print_axpy(a);
+    }
+    let doc = serving::bench::report_json(&opts, &rows, &skipped, axpy.as_ref());
+    let out = args.get("out", opts.default_out());
     std::fs::write(&out, format!("{doc}\n"))?;
     println!("wrote {out}");
     Ok(())

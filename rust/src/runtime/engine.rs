@@ -64,8 +64,8 @@ pub struct Engine {
     client: xla::PjRtClient,
     cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
     /// Worker threads for the native sparse execution paths
-    /// (`Session::forward_jpeg_plan` and its wrappers); resolved at
-    /// construction, see `config::resolve_threads`.
+    /// (`Session::forward_jpeg_plan`); resolved at construction, see
+    /// `config::resolve_threads`.
     pub threads: usize,
 }
 

@@ -6,11 +6,11 @@ use std::sync::Arc;
 
 use crate::coordinator::router::Route;
 use crate::jpeg::zigzag::band_mask;
-use crate::jpeg_domain::network::{ExplodedModel, ResidencyTrace, RESNET_PLAN};
-use crate::jpeg_domain::plan::{Act, Executor, PlanCtx, PlanObserver, SparseKernel, SparseResident};
+use crate::jpeg_domain::network::{ExplodedModel, RESNET_PLAN};
+use crate::jpeg_domain::plan::{Act, Executor, PlanCtx, PlanObserver};
 use crate::jpeg_domain::relu::Method;
 use crate::params::{ModelConfig, ParamSet};
-use crate::tensor::{SparseBlocks, Tensor};
+use crate::tensor::Tensor;
 
 use super::{Engine, Value};
 
@@ -288,77 +288,6 @@ impl Session {
             method: Method::Asm,
         };
         RESNET_PLAN.run(executor, &ctx, input, observer)
-    }
-
-    /// Native sparse serving path: gather-free exploded forward on the
-    /// engine's worker-thread budget.  Exact phi = `num_freqs`
-    /// semantics, same logits as the PJRT exploded artifact.
-    #[deprecated(note = "use Session::forward_jpeg_plan with plan::SparseKernel")]
-    pub fn forward_jpeg_exploded_native(
-        &self,
-        params: &ParamSet,
-        em: &ExplodedModel,
-        coeffs: &Tensor,
-        qvec: &[f32; 64],
-        num_freqs: usize,
-    ) -> Tensor {
-        self.forward_jpeg_plan(
-            params,
-            em,
-            &Act::Sparse(SparseBlocks::from_dense(coeffs)),
-            qvec,
-            num_freqs,
-            &SparseKernel { threads: self.engine.threads },
-            None,
-        )
-    }
-
-    /// [`Session::forward_jpeg_exploded_native`] on sparse block input
-    /// straight from entropy decode (no dense intermediate).
-    #[deprecated(note = "use Session::forward_jpeg_plan with plan::SparseKernel")]
-    pub fn forward_jpeg_exploded_native_sparse(
-        &self,
-        params: &ParamSet,
-        em: &ExplodedModel,
-        f0: &SparseBlocks,
-        qvec: &[f32; 64],
-        num_freqs: usize,
-    ) -> Tensor {
-        self.forward_jpeg_plan(
-            params,
-            em,
-            &Act::Sparse(f0.clone()),
-            qvec,
-            num_freqs,
-            &SparseKernel { threads: self.engine.threads },
-            None,
-        )
-    }
-
-    /// [`Session::forward_jpeg_exploded_native_sparse`] with end-to-end
-    /// sparse activation residency: activations stay in
-    /// [`SparseBlocks`] form between layers (bit-identical logits).
-    /// `trace`, when given, accumulates per-layer nonzero fractions.
-    #[deprecated(note = "use Session::forward_jpeg_plan with plan::SparseResident")]
-    pub fn forward_jpeg_exploded_native_resident(
-        &self,
-        params: &ParamSet,
-        em: &ExplodedModel,
-        f0: &SparseBlocks,
-        qvec: &[f32; 64],
-        num_freqs: usize,
-        trace: Option<&mut ResidencyTrace>,
-    ) -> Tensor {
-        let observer = trace.map(|t| t as &mut dyn PlanObserver);
-        self.forward_jpeg_plan(
-            params,
-            em,
-            &Act::Sparse(f0.clone()),
-            qvec,
-            num_freqs,
-            &SparseResident { threads: self.engine.threads, prune_epsilon: 0.0 },
-            observer,
-        )
     }
 
     /// Inference through the precomputed exploded maps (ablation path).

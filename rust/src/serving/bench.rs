@@ -8,6 +8,13 @@
 //! artifacts are present — the pjrt worker loop.  Emits a JSON report
 //! (rows + the axpy-tiling kernel ablation) so successive PRs keep a
 //! serving-perf trajectory.
+//!
+//! With [`BenchOptions::remote`] set (`serve bench --remote ADDR`), the
+//! same request stream is driven over the socket front end through the
+//! blocking [`crate::serving::frontend::Client`] — one connection per
+//! client thread, latency measured wire to wire and attributed per
+//! encoded quality — next to one in-process sparse-resident row, so the
+//! report (`BENCH_PR5.json`) prices the network boundary itself.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -36,6 +43,10 @@ pub struct BenchOptions {
     pub artifacts: PathBuf,
     /// Skip the dense-kernel baseline (it is much slower).
     pub skip_dense: bool,
+    /// Drive a running socket front end at this address instead of the
+    /// full engine sweep (one in-process sparse-resident row stays as
+    /// the baseline the socket row is compared against).
+    pub remote: Option<String>,
 }
 
 impl Default for BenchOptions {
@@ -50,7 +61,23 @@ impl Default for BenchOptions {
             pipeline: PipelineConfig::default(),
             artifacts: PathBuf::from("artifacts"),
             skip_dense: false,
+            remote: None,
         }
+    }
+}
+
+impl BenchOptions {
+    /// Default report filename for this run's mode (shared by the CLI
+    /// and `examples/serve_requests.rs` so the artifact names cannot
+    /// drift apart).
+    pub fn default_out(&self) -> &'static str {
+        if self.remote.is_some() { "BENCH_PR5.json" } else { "BENCH_PR2.json" }
+    }
+
+    /// Whether the axpy kernel ablation belongs to this run: it
+    /// measures the in-process kernel sweep, not the wire comparison.
+    pub fn wants_axpy(&self) -> bool {
+        self.remote.is_none()
     }
 }
 
@@ -59,8 +86,16 @@ impl Default for BenchOptions {
 pub struct BenchRow {
     pub engine: String,
     pub requests: u64,
+    /// Requests actually answered with logits.  Not derivable from
+    /// `requests - errors`: a remote client thread that loses its
+    /// connection stops attempting, so its tail is neither served nor
+    /// errored.
+    pub completed: u64,
     pub errors: u64,
     pub rejected: u64,
+    /// Framing violations seen by the client (remote row only; a
+    /// healthy server keeps this at zero).
+    pub protocol_errors: u64,
     pub throughput: f64,
     pub p50_ms: f64,
     pub p99_ms: f64,
@@ -136,8 +171,12 @@ fn measure(server: &Server, name: &str, files: &[Vec<u8>], clients: usize) -> Be
     BenchRow {
         engine: name.to_string(),
         requests: files.len() as u64,
+        // the closed loop attempts every request, so here (unlike the
+        // remote row) completed really is total minus errors
+        completed: (files.len() as u64).saturating_sub(errors),
         errors,
         rejected,
+        protocol_errors: 0,
         // served requests only: rejected/errored ones cost ~no wall
         // time and would inflate req/s exactly when shedding load
         throughput: (files.len() as u64).saturating_sub(errors) as f64 / wall,
@@ -179,12 +218,131 @@ fn native_row(
     Ok(row)
 }
 
+/// Sorted-sample quantile in milliseconds (client-side latencies; the
+/// in-process rows read the server's log-bucketed histograms instead).
+fn quantile_ms(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let i = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[i]
+}
+
+/// Drive a running socket front end closed-loop: one connection per
+/// client thread, wire-to-wire latency attributed per encoded quality.
+fn remote_row(opts: &BenchOptions, files: &[Vec<u8>], addr: &str) -> anyhow::Result<BenchRow> {
+    use crate::serving::frontend::{Client, ClientError, WireCode};
+    let clients = opts.clients.max(1);
+    let nq = opts.qualities.len().max(1);
+    let t0 = Instant::now();
+    // per thread: (latency ms, quality index) samples + error tallies
+    type ThreadOut = (Vec<(f64, usize)>, u64, u64, u64); // samples, errors, rejected, protocol
+    let outs: Vec<ThreadOut> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|t| {
+                s.spawn(move || -> anyhow::Result<ThreadOut> {
+                    let mut client = Client::connect(addr)
+                        .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+                    let mut samples = Vec::new();
+                    let (mut errors, mut rejected, mut protocol) = (0u64, 0u64, 0u64);
+                    for i in (t..files.len()).step_by(clients) {
+                        let w0 = Instant::now();
+                        match client.infer(&files[i]) {
+                            Ok(_) => {
+                                samples.push((w0.elapsed().as_secs_f64() * 1e3, i % nq));
+                            }
+                            Err(ClientError::Serve { code, .. }) => {
+                                errors += 1;
+                                if code == WireCode::QueueFull {
+                                    rejected += 1;
+                                }
+                            }
+                            Err(ClientError::Protocol(_)) => {
+                                protocol += 1;
+                                errors += 1;
+                                break; // framing broke; this connection is done
+                            }
+                            Err(_) => {
+                                errors += 1;
+                                break; // transport gone
+                            }
+                        }
+                    }
+                    Ok((samples, errors, rejected, protocol))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("client thread"))
+            .collect::<anyhow::Result<Vec<_>>>()
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut all_ms: Vec<f64> = Vec::new();
+    let mut per_q: Vec<Vec<f64>> = vec![Vec::new(); nq];
+    let (mut errors, mut rejected, mut protocol_errors) = (0u64, 0u64, 0u64);
+    for (samples, e, r, p) in outs {
+        errors += e;
+        rejected += r;
+        protocol_errors += p;
+        for (ms, qi) in samples {
+            all_ms.push(ms);
+            per_q[qi].push(ms);
+        }
+    }
+    all_ms.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+    let completed = all_ms.len() as u64;
+    let mean_ms = if all_ms.is_empty() {
+        0.0
+    } else {
+        all_ms.iter().sum::<f64>() / all_ms.len() as f64
+    };
+    let per_tag = opts
+        .qualities
+        .iter()
+        .zip(&mut per_q)
+        .filter(|(_, v)| !v.is_empty())
+        .map(|(&q, v)| {
+            v.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+            (format!("q{q}"), v.len() as u64, quantile_ms(v, 0.50))
+        })
+        .collect();
+    Ok(BenchRow {
+        engine: "remote-socket".to_string(),
+        requests: files.len() as u64,
+        completed,
+        errors,
+        rejected,
+        protocol_errors,
+        throughput: completed as f64 / wall,
+        p50_ms: quantile_ms(&all_ms, 0.50),
+        p99_ms: quantile_ms(&all_ms, 0.99),
+        mean_ms,
+        per_tag,
+        layer_nonzero: Vec::new(),
+    })
+}
+
 /// Run the full comparison.  Returns the measured rows plus a note for
 /// every engine that was skipped (e.g. pjrt with no artifacts).
+///
+/// In `--remote` mode the sweep is the socket row plus the in-process
+/// sparse-resident baseline; the other engines are reported as skipped
+/// so the JSON shape stays stable.
 pub fn run(opts: &BenchOptions) -> anyhow::Result<(Vec<BenchRow>, Vec<(String, String)>)> {
     let files = request_stream(opts)?;
     let mut rows = Vec::new();
     let mut skipped = Vec::new();
+
+    if let Some(addr) = &opts.remote {
+        rows.push(remote_row(opts, &files, addr)?);
+        rows.push(native_row(opts, &files, NativeMode::SparseResident)?);
+        for engine in ["native-sparse", "native-dense", "pjrt"] {
+            skipped.push((engine.to_string(), "skipped in --remote mode".to_string()));
+        }
+        return Ok((rows, skipped));
+    }
 
     rows.push(native_row(opts, &files, NativeMode::SparseResident)?);
     rows.push(native_row(opts, &files, NativeMode::Sparse)?);
@@ -213,13 +371,15 @@ pub fn run(opts: &BenchOptions) -> anyhow::Result<(Vec<BenchRow>, Vec<(String, S
     Ok((rows, skipped))
 }
 
-/// Render rows + the axpy kernel ablation into the `BENCH_PR2.json`
-/// document.
+/// Render rows (+ optionally the axpy kernel ablation) into the bench
+/// JSON document — `BENCH_PR2.json` for the engine sweep,
+/// `BENCH_PR5.json` for the remote-vs-in-process comparison (which has
+/// no kernel ablation to attach).
 pub fn report_json(
     opts: &BenchOptions,
     rows: &[BenchRow],
     skipped: &[(String, String)],
-    axpy_report: &AxpyReport,
+    axpy_report: Option<&AxpyReport>,
 ) -> Json {
     let num = Json::Num;
     let mut doc = BTreeMap::new();
@@ -235,6 +395,9 @@ pub fn report_json(
     config.insert("max_batch".into(), num(opts.pipeline.max_batch as f64));
     config.insert("decode_workers".into(), num(opts.pipeline.decode_workers as f64));
     config.insert("compute_workers".into(), num(opts.pipeline.compute_workers as f64));
+    if let Some(addr) = &opts.remote {
+        config.insert("remote".into(), Json::Str(addr.clone()));
+    }
     doc.insert("config".into(), Json::Obj(config));
 
     let mut out_rows = Vec::new();
@@ -242,8 +405,10 @@ pub fn report_json(
         let mut o = BTreeMap::new();
         o.insert("engine".into(), Json::Str(r.engine.clone()));
         o.insert("requests".into(), num(r.requests as f64));
+        o.insert("completed".into(), num(r.completed as f64));
         o.insert("errors".into(), num(r.errors as f64));
         o.insert("rejected".into(), num(r.rejected as f64));
+        o.insert("protocol_errors".into(), num(r.protocol_errors as f64));
         o.insert("throughput".into(), num(r.throughput));
         o.insert("p50_ms".into(), num(r.p50_ms));
         o.insert("p99_ms".into(), num(r.p99_ms));
@@ -273,18 +438,20 @@ pub fn report_json(
     }
     doc.insert("rows".into(), Json::Arr(out_rows));
 
-    // satellite: the axpy inner-loop tiling before/after (unroll 4 vs 8)
-    let a = axpy_report;
-    let mut axpy = BTreeMap::new();
-    axpy.insert("quality".into(), num(a.quality as f64));
-    axpy.insert("batch".into(), num(a.batch as f64));
-    axpy.insert("cout".into(), num(a.cout as f64));
-    axpy.insert("density".into(), num(a.density));
-    axpy.insert("unroll4_blocks_per_sec".into(), num(a.unroll4_blocks_per_sec));
-    axpy.insert("unroll8_blocks_per_sec".into(), num(a.unroll8_blocks_per_sec));
-    axpy.insert("speedup_8_vs_4".into(), num(a.speedup));
-    axpy.insert("max_abs_diff".into(), num(a.max_abs_diff as f64));
-    doc.insert("axpy_tiling".into(), Json::Obj(axpy));
+    // the axpy inner-loop tiling before/after (unroll 4 vs 8), when the
+    // caller measured it (the engine sweep does; the remote run doesn't)
+    if let Some(a) = axpy_report {
+        let mut axpy = BTreeMap::new();
+        axpy.insert("quality".into(), num(a.quality as f64));
+        axpy.insert("batch".into(), num(a.batch as f64));
+        axpy.insert("cout".into(), num(a.cout as f64));
+        axpy.insert("density".into(), num(a.density));
+        axpy.insert("unroll4_blocks_per_sec".into(), num(a.unroll4_blocks_per_sec));
+        axpy.insert("unroll8_blocks_per_sec".into(), num(a.unroll8_blocks_per_sec));
+        axpy.insert("speedup_8_vs_4".into(), num(a.speedup));
+        axpy.insert("max_abs_diff".into(), num(a.max_abs_diff as f64));
+        doc.insert("axpy_tiling".into(), Json::Obj(axpy));
+    }
 
     Json::Obj(doc)
 }
@@ -326,6 +493,15 @@ pub fn print_rows(rows: &[BenchRow], skipped: &[(String, String)]) {
                 .collect();
             println!("  {} nonzero fraction: {}", r.engine, layers.join(" "));
         }
+        if r.engine == "remote-socket" {
+            // the one-line health check ci.sh's socket-smoke greps;
+            // `completed` counts replies actually received, so a crash
+            // that strands unattempted requests cannot fake health
+            println!(
+                "remote completed requests: {} (protocol errors: {})",
+                r.completed, r.protocol_errors
+            );
+        }
     }
     for (engine, why) in skipped {
         println!("  {engine}: skipped ({why})");
@@ -355,8 +531,10 @@ mod tests {
         let rows = vec![BenchRow {
             engine: "native-sparse".into(),
             requests: 10,
+            completed: 10,
             errors: 0,
             rejected: 0,
+            protocol_errors: 0,
             throughput: 100.0,
             p50_ms: 1.0,
             p99_ms: 2.0,
@@ -375,15 +553,58 @@ mod tests {
             speedup: 1.2,
             max_abs_diff: 1e-6,
         };
-        let doc = report_json(&opts, &rows, &skipped, &axpy);
+        let doc = report_json(&opts, &rows, &skipped, Some(&axpy));
         let rows_v = doc.get("rows").as_arr().unwrap();
         assert_eq!(rows_v.len(), 2);
         assert_eq!(rows_v[0].get("engine").as_str(), Some("native-sparse"));
         assert_eq!(rows_v[1].get("skipped").as_str(), Some("no artifacts"));
         assert!(rows_v[0].get("layer_nonzero").get("input").as_f64().is_some());
+        assert_eq!(rows_v[0].get("protocol_errors").as_f64(), Some(0.0));
         assert!(doc.get("axpy_tiling").get("unroll8_blocks_per_sec").as_f64().is_some());
         // round-trips through the parser
         let text = doc.to_string();
         assert!(crate::json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn report_json_remote_shape() {
+        let opts = BenchOptions {
+            remote: Some("127.0.0.1:7878".into()),
+            ..Default::default()
+        };
+        let rows = vec![BenchRow {
+            engine: "remote-socket".into(),
+            requests: 12,
+            completed: 11,
+            errors: 1,
+            rejected: 1,
+            protocol_errors: 0,
+            throughput: 40.0,
+            p50_ms: 2.0,
+            p99_ms: 5.0,
+            mean_ms: 2.5,
+            per_tag: vec![("q50".into(), 4, 2.0), ("q90".into(), 4, 2.2)],
+            layer_nonzero: vec![],
+        }];
+        let doc = report_json(&opts, &rows, &[], None);
+        assert_eq!(doc.get("config").get("remote").as_str(), Some("127.0.0.1:7878"));
+        let rows_v = doc.get("rows").as_arr().unwrap();
+        assert_eq!(rows_v[0].get("engine").as_str(), Some("remote-socket"));
+        assert_eq!(rows_v[0].get("completed").as_f64(), Some(11.0));
+        assert_eq!(
+            doc.get("axpy_tiling"),
+            &crate::json::Json::Null,
+            "no kernel ablation in remote mode"
+        );
+        assert!(crate::json::parse(&doc.to_string()).is_ok());
+    }
+
+    #[test]
+    fn quantile_ms_picks_sorted_samples() {
+        assert_eq!(quantile_ms(&[], 0.5), 0.0);
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile_ms(&v, 0.50), 2.0);
+        assert_eq!(quantile_ms(&v, 0.99), 4.0);
+        assert_eq!(quantile_ms(&v, 0.0), 1.0);
     }
 }

@@ -1,0 +1,170 @@
+//! Blocking client for the socket front end.
+//!
+//! One [`Client`] owns one TCP connection.  Requests may be pipelined:
+//! [`Client::submit`] returns immediately with the request id, and
+//! [`Client::recv`] returns whichever reply arrives next — the server
+//! answers **out of order**, so callers correlate by
+//! [`Reply::request_id`].  [`Client::infer`] is the submit-and-wait
+//! convenience used by the closed-loop bench
+//! (`repro serve bench --remote`) and `examples/serve_requests.rs`.
+//!
+//! A `Client` is deliberately not `Sync`: for concurrent load, open one
+//! connection per client thread (what the bench does).
+
+use std::io;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use super::protocol::{
+    encode_request, read_response, FrameError, ProtocolError, ResponseBody, WireCode,
+};
+
+/// A successful remote inference.
+#[derive(Clone, Debug)]
+pub struct RemoteResponse {
+    /// Echo of the request id.
+    pub request_id: u64,
+    /// Argmax class.
+    pub predicted: usize,
+    /// Full logit row.
+    pub logits: Vec<f32>,
+    /// Server-side submit-to-reply latency.
+    pub server_latency: Duration,
+}
+
+/// One reply frame, already matched to transport health: a typed server
+/// error (`QueueFull`, `WarmingUp`, ...) is a *delivered* reply, not a
+/// transport failure.
+#[derive(Clone, Debug)]
+pub enum Reply {
+    /// Logits came back.
+    Ok(RemoteResponse),
+    /// The server answered with a typed error code.
+    Err {
+        /// Echo of the request id.
+        request_id: u64,
+        /// The wire error code.
+        code: WireCode,
+        /// Human-readable detail from the server.
+        message: String,
+    },
+}
+
+impl Reply {
+    /// The request this reply answers.
+    pub fn request_id(&self) -> u64 {
+        match self {
+            Reply::Ok(r) => r.request_id,
+            Reply::Err { request_id, .. } => *request_id,
+        }
+    }
+}
+
+/// Transport-level client failure (typed server errors arrive as
+/// [`Reply::Err`] instead, except through [`Client::infer`] which folds
+/// them into [`ClientError::Serve`]).
+#[derive(Debug, thiserror::Error)]
+pub enum ClientError {
+    /// Socket failure.
+    #[error("io: {0}")]
+    Io(#[from] io::Error),
+    /// The server (or a middlebox) broke the framing.
+    #[error("protocol: {0}")]
+    Protocol(ProtocolError),
+    /// The server closed the connection.
+    #[error("connection closed by server")]
+    Closed,
+    /// A typed server error, folded in by [`Client::infer`].
+    #[error("server answered {}: {message}", code.label())]
+    Serve {
+        /// The wire error code.
+        code: WireCode,
+        /// Server-provided detail.
+        message: String,
+    },
+}
+
+impl From<FrameError> for ClientError {
+    fn from(e: FrameError) -> ClientError {
+        match e {
+            FrameError::Io(e) => ClientError::Io(e),
+            FrameError::Protocol { error, .. } => ClientError::Protocol(error),
+        }
+    }
+}
+
+/// A blocking connection to a socket front end.
+pub struct Client {
+    reader: TcpStream,
+    writer: TcpStream,
+    next_id: u64,
+}
+
+impl Client {
+    /// Connect to a front end (e.g. `"127.0.0.1:7878"`).
+    pub fn connect(addr: impl ToSocketAddrs) -> io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: stream, writer, next_id: 1 })
+    }
+
+    /// Send one request frame; returns its id without waiting.
+    pub fn submit(&mut self, jpeg: &[u8]) -> Result<u64, ClientError> {
+        self.submit_with(jpeg, None, 0)
+    }
+
+    /// [`Client::submit`] with a deadline budget (converted to µs on the
+    /// wire) and an advisory encoder-quality hint.
+    pub fn submit_with(
+        &mut self,
+        jpeg: &[u8],
+        deadline_budget: Option<Duration>,
+        quality_hint: u8,
+    ) -> Result<u64, ClientError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let budget_us = deadline_budget
+            .map(|d| d.as_micros().clamp(1, u64::MAX as u128) as u64)
+            .unwrap_or(0);
+        let frame =
+            encode_request(id, budget_us, quality_hint, jpeg).map_err(ClientError::Protocol)?;
+        use io::Write;
+        self.writer.write_all(&frame)?;
+        Ok(id)
+    }
+
+    /// Block for the next reply — for *any* outstanding request; match
+    /// it back with [`Reply::request_id`].
+    pub fn recv(&mut self) -> Result<Reply, ClientError> {
+        let frame = read_response(&mut self.reader)?.ok_or(ClientError::Closed)?;
+        Ok(match frame.body {
+            ResponseBody::Logits { predicted, logits } => Reply::Ok(RemoteResponse {
+                request_id: frame.request_id,
+                predicted: predicted as usize,
+                logits,
+                server_latency: Duration::from_micros(frame.latency_us),
+            }),
+            ResponseBody::Error { code, message } => {
+                Reply::Err { request_id: frame.request_id, code, message }
+            }
+        })
+    }
+
+    /// Submit and wait for that request's reply (single in-flight).
+    /// Replies to other pipelined requests arriving first are a protocol
+    /// violation under single-in-flight use and surface as an error.
+    pub fn infer(&mut self, jpeg: &[u8]) -> Result<RemoteResponse, ClientError> {
+        let id = self.submit(jpeg)?;
+        let reply = self.recv()?;
+        if reply.request_id() != id {
+            return Err(ClientError::Protocol(ProtocolError::Malformed(
+                "reply to a different request id under single-in-flight use",
+            )));
+        }
+        match reply {
+            Reply::Ok(r) => Ok(r),
+            Reply::Err { code, message, .. } => Err(ClientError::Serve { code, message }),
+        }
+    }
+}

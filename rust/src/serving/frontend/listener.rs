@@ -1,0 +1,437 @@
+//! The TCP acceptor + connection worker pool over the native pipeline.
+//!
+//! One thread accepts; each connection gets a worker thread that parses
+//! request frames and feeds [`NativePipeline::try_submit_request`].
+//! Replies are written by short-lived per-request waiter threads through
+//! a mutex-serialized write half, so responses stream back **out of
+//! order** — the request id in the frame header is the only correlation.
+//! Everything is `std::net` + `std::thread`; no async runtime.
+//!
+//! Per-connection flow control: at most `max_inflight` submitted
+//! requests may be awaiting replies; past that the reader stops pulling
+//! frames off the socket, which backpressures the client through TCP —
+//! on top of the pipeline's own bounded admission queue, whose overflow
+//! surfaces as the typed [`WireCode::QueueFull`] response.
+//!
+//! ## Slow start
+//!
+//! A freshly started server has an empty per-qvec `ExplodedModel` cache;
+//! the first batch of each quant table pays a seconds-long precompute.
+//! Until the pipeline has served `warmup_batches` compute batches,
+//! socket requests are rejected with the typed [`WireCode::WarmingUp`]
+//! code instead of being queued behind that cliff.  In-process callers
+//! (the warmup driver in `repro serve --listen`) bypass the gate, which
+//! is what lets the cache warm in the first place.  The gate is sticky:
+//! once open it never closes.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::serving::error::ServeError;
+use crate::serving::metrics::FrontendMetrics;
+use crate::serving::pipeline::{NativePipeline, ServeRequest};
+
+use super::protocol::{
+    encode_response, read_request, FrameError, ResponseBody, ResponseFrame, WireCode,
+};
+
+/// Socket front end settings (`[serve] listen_addr` / `warmup_batches`;
+/// CLI flags override).
+#[derive(Clone, Debug)]
+pub struct FrontendConfig {
+    /// Address to bind (`"127.0.0.1:0"` = loopback, ephemeral port).
+    pub listen_addr: String,
+    /// Compute batches the pipeline must have served before socket
+    /// traffic is admitted; `0` disables the slow-start gate.
+    pub warmup_batches: u64,
+    /// Per-connection cap on submitted-but-unanswered requests; past it
+    /// the reader stops pulling frames (TCP backpressure).
+    pub max_inflight: usize,
+}
+
+impl Default for FrontendConfig {
+    fn default() -> Self {
+        FrontendConfig {
+            listen_addr: "127.0.0.1:0".to_string(),
+            warmup_batches: 0,
+            max_inflight: 64,
+        }
+    }
+}
+
+/// Sticky slow-start gate over the pipeline's served-batch counter.
+///
+/// The counter is **global**, not per quant table: the gate shields
+/// the startup cliff, while the per-qvec precompute for *declared*
+/// tables is paid up front by `repro serve --listen`'s
+/// `pipeline.warm(q)` calls.  A request arriving with a quant table
+/// nobody warmed still pays its precompute in-request (admission
+/// cannot know the table without decoding); per-qvec gating is a
+/// ROADMAP follow-up.
+struct WarmupGate {
+    need: u64,
+    warmed: AtomicBool,
+}
+
+impl WarmupGate {
+    fn new(need: u64) -> WarmupGate {
+        WarmupGate { need, warmed: AtomicBool::new(need == 0) }
+    }
+
+    fn is_warm(&self, pipeline: &NativePipeline) -> bool {
+        if self.warmed.load(Ordering::Relaxed) {
+            return true;
+        }
+        if pipeline.aggregate().batches.load(Ordering::Relaxed) >= self.need {
+            self.warmed.store(true, Ordering::Relaxed);
+            return true;
+        }
+        false
+    }
+}
+
+/// Counting gauge with waiters: bounds per-connection in-flight
+/// requests and lets the connection worker drain before closing.
+#[derive(Default)]
+struct Inflight {
+    count: Mutex<usize>,
+    changed: Condvar,
+}
+
+impl Inflight {
+    fn inc_below(&self, cap: usize) {
+        let mut n = self.count.lock().unwrap();
+        while *n >= cap.max(1) {
+            n = self.changed.wait(n).unwrap();
+        }
+        *n += 1;
+    }
+
+    fn dec(&self) {
+        let mut n = self.count.lock().unwrap();
+        *n -= 1;
+        self.changed.notify_all();
+    }
+
+    fn wait_zero(&self) {
+        let mut n = self.count.lock().unwrap();
+        while *n > 0 {
+            n = self.changed.wait(n).unwrap();
+        }
+    }
+}
+
+/// A running socket front end.  Dropping (or [`SocketFrontend::shutdown`])
+/// stops the acceptor, closes every connection, and joins all workers;
+/// the pipeline itself is left running (shut it down after).
+pub struct SocketFrontend {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<(TcpStream, JoinHandle<()>)>>>,
+    /// Per-connection / per-wire-code counters.
+    pub metrics: Arc<FrontendMetrics>,
+}
+
+impl SocketFrontend {
+    /// Bind `cfg.listen_addr` and start accepting.  Fails fast when the
+    /// address cannot be bound (taken port, bad syntax).
+    pub fn start(
+        pipeline: Arc<NativePipeline>,
+        cfg: FrontendConfig,
+    ) -> anyhow::Result<SocketFrontend> {
+        let listener = TcpListener::bind(&cfg.listen_addr)
+            .map_err(|e| anyhow::anyhow!("bind {}: {e}", cfg.listen_addr))?;
+        let local_addr = listener.local_addr()?;
+        // non-blocking accept so the stop flag is honored promptly
+        listener.set_nonblocking(true)?;
+        let metrics = Arc::new(FrontendMetrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<(TcpStream, JoinHandle<()>)>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let gate = Arc::new(WarmupGate::new(cfg.warmup_batches));
+        let max_inflight = cfg.max_inflight.max(1);
+
+        let acceptor = {
+            let stop = stop.clone();
+            let conns = conns.clone();
+            let metrics = metrics.clone();
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let _ = stream.set_nodelay(true);
+                            let _ = stream.set_nonblocking(false);
+                            let Ok(track) = stream.try_clone() else { continue };
+                            let pipeline = pipeline.clone();
+                            let gate = gate.clone();
+                            let metrics = metrics.clone();
+                            let stop = stop.clone();
+                            let handle = std::thread::spawn(move || {
+                                handle_connection(
+                                    stream,
+                                    pipeline,
+                                    gate,
+                                    metrics,
+                                    max_inflight,
+                                    stop,
+                                )
+                            });
+                            let mut guard = conns.lock().unwrap();
+                            // reap finished workers so long-lived servers
+                            // don't accumulate dead handles
+                            let mut i = 0;
+                            while i < guard.len() {
+                                if guard[i].1.is_finished() {
+                                    let (_, h) = guard.swap_remove(i);
+                                    let _ = h.join();
+                                } else {
+                                    i += 1;
+                                }
+                            }
+                            guard.push((track, handle));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                        // a bad accept must never wedge the acceptor
+                        Err(_) => std::thread::sleep(Duration::from_millis(5)),
+                    }
+                }
+            })
+        };
+
+        Ok(SocketFrontend {
+            local_addr,
+            stop,
+            acceptor: Some(acceptor),
+            conns,
+            metrics,
+        })
+    }
+
+    /// The bound address (resolves the port when `:0` was requested).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting, close every connection, join all workers.
+    pub fn shutdown(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        for (stream, handle) in conns {
+            // unblock the reader but leave the write half open —
+            // shutdown applies socket-wide across the dup'd fds, and
+            // the worker still has in-flight replies to flush (the
+            // pipeline is still up); the worker FINs the write side
+            // itself once its waiters drain
+            let _ = stream.shutdown(std::net::Shutdown::Read);
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for SocketFrontend {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+/// How long a reply write may block before the connection is declared
+/// dead.  A client that stops reading fills its TCP receive window and
+/// would otherwise park a waiter thread in `write_all` forever —
+/// pinning the inflight count, the connection worker's drain, and
+/// ultimately [`SocketFrontend::shutdown`].
+const WRITE_STALL_LIMIT: Duration = Duration::from_secs(30);
+
+/// Serialize one response frame onto the shared write half.  A write
+/// error (peer gone, or stalled past [`WRITE_STALL_LIMIT`]) kills the
+/// whole connection: a partially written frame has already corrupted
+/// the stream, and the shutdown also unblocks the connection's reader.
+fn write_response(
+    writer: &Mutex<TcpStream>,
+    frame: &ResponseFrame,
+    metrics: &FrontendMetrics,
+) {
+    let code = match &frame.body {
+        ResponseBody::Logits { .. } => WireCode::Ok,
+        ResponseBody::Error { code, .. } => *code,
+    };
+    metrics.record_response(code);
+    let bytes = encode_response(frame);
+    use std::io::Write;
+    let mut w = writer.lock().unwrap();
+    if w.write_all(&bytes).is_err() {
+        let _ = w.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+fn error_frame(request_id: u64, code: WireCode, message: String) -> ResponseFrame {
+    ResponseFrame {
+        request_id,
+        latency_us: 0,
+        body: ResponseBody::Error { code, message },
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    pipeline: Arc<NativePipeline>,
+    gate: Arc<WarmupGate>,
+    metrics: Arc<FrontendMetrics>,
+    max_inflight: usize,
+    stop: Arc<AtomicBool>,
+) {
+    metrics.connection_opened();
+    // SO_SNDTIMEO is per socket (shared by the dup'd fds), so one call
+    // bounds every reply write on this connection
+    let _ = stream.set_write_timeout(Some(WRITE_STALL_LIMIT));
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => {
+            metrics.connection_closed();
+            return;
+        }
+    };
+    let mut reader = stream;
+    let inflight = Arc::new(Inflight::default());
+
+    loop {
+        let req = match read_request(&mut reader) {
+            Ok(Some(req)) => req,
+            Ok(None) => break, // clean close between frames
+            Err(FrameError::Protocol { error, request_id }) => {
+                // a truncated read during our own drain is the drain,
+                // not client abuse: report `shutdown`, leave the abuse
+                // counter alone
+                if stop.load(Ordering::Relaxed) {
+                    write_response(
+                        &writer,
+                        &error_frame(
+                            request_id.unwrap_or(0),
+                            WireCode::Shutdown,
+                            "server is shutting down".to_string(),
+                        ),
+                        &metrics,
+                    );
+                    break;
+                }
+                // a broken frame poisons the stream: answer (addressed
+                // to the offending id when the header got that far,
+                // else id 0) and close — but never panic or take the
+                // acceptor down with us
+                metrics.record_protocol_error();
+                write_response(
+                    &writer,
+                    &error_frame(request_id.unwrap_or(0), WireCode::Protocol, error.to_string()),
+                    &metrics,
+                );
+                break;
+            }
+            Err(FrameError::Io(_)) => break,
+        };
+        metrics.record_request();
+
+        if !gate.is_warm(&pipeline) {
+            write_response(
+                &writer,
+                &error_frame(
+                    req.request_id,
+                    WireCode::WarmingUp,
+                    "exploded-map cache warming up; retry shortly".to_string(),
+                ),
+                &metrics,
+            );
+            continue;
+        }
+
+        let deadline = (req.deadline_budget_us > 0)
+            .then(|| Instant::now() + Duration::from_micros(req.deadline_budget_us));
+        let mut serve_req = ServeRequest::new(req.payload);
+        serve_req.deadline = deadline;
+
+        // per-connection in-flight bound: stop reading frames (TCP
+        // backpressure) rather than buffering unbounded waiters
+        inflight.inc_below(max_inflight);
+        match pipeline.try_submit_request(serve_req) {
+            Ok(rx) => {
+                let writer = writer.clone();
+                let metrics = metrics.clone();
+                let inflight = inflight.clone();
+                let request_id = req.request_id;
+                std::thread::spawn(move || {
+                    let frame = match rx.recv() {
+                        Ok(Ok(resp)) => ResponseFrame {
+                            request_id,
+                            latency_us: resp.latency.as_micros().min(u64::MAX as u128) as u64,
+                            body: ResponseBody::Logits {
+                                predicted: resp.predicted.min(u32::MAX as usize) as u32,
+                                logits: resp.logits,
+                            },
+                        },
+                        Ok(Err(e)) => {
+                            let code = e
+                                .downcast_ref::<ServeError>()
+                                .map(WireCode::from_serve_error)
+                                .unwrap_or(WireCode::Internal);
+                            error_frame(request_id, code, e.to_string())
+                        }
+                        Err(_) => error_frame(
+                            request_id,
+                            WireCode::Internal,
+                            "serving worker lost before reply".to_string(),
+                        ),
+                    };
+                    write_response(&writer, &frame, &metrics);
+                    inflight.dec();
+                });
+            }
+            Err(e) => {
+                inflight.dec();
+                write_response(
+                    &writer,
+                    &error_frame(req.request_id, WireCode::from_serve_error(&e), e.to_string()),
+                    &metrics,
+                );
+            }
+        }
+    }
+
+    // let every in-flight reply land on the wire before closing
+    inflight.wait_zero();
+    close_connection(reader);
+    metrics.connection_closed();
+}
+
+/// Close a connection without racing the peer's final read: FIN the
+/// write side (the acceptor's tracking clone keeps the fd alive, so an
+/// explicit shutdown is what actually ends the stream), then drain a
+/// bounded amount of unread input — closing with bytes still queued
+/// would RST the socket and could discard the error response we just
+/// sent.
+fn close_connection(stream: TcpStream) {
+    use std::io::Read;
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    let mut stream = stream;
+    let mut buf = [0u8; 4096];
+    let mut budget: usize = 256 * 1024;
+    while budget > 0 {
+        match stream.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => budget = budget.saturating_sub(n),
+        }
+    }
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}

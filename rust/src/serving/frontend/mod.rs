@@ -1,0 +1,32 @@
+//! Streaming socket front end: the network edge of the native serving
+//! pipeline.
+//!
+//! Until this module, the PR-2 pipeline (bounded admission, decode
+//! pool, quant-table micro-batching, per-request deadlines) was only
+//! reachable by in-process callers.  Here it gets a wire:
+//!
+//! * [`protocol`] — the length-prefixed binary frame format (versioned
+//!   header, request id, optional deadline budget in µs, quality hint,
+//!   JPEG payload; responses carry logits or a typed [`WireCode`]
+//!   mirroring `ServeError` plus `WarmingUp` and `Protocol`).
+//! * [`listener`] — [`SocketFrontend`]: a `std::net` acceptor plus
+//!   connection worker pool (no async runtime) feeding
+//!   `NativePipeline::try_submit_request`, streaming responses back
+//!   **out of order** by request id, with a slow-start gate that
+//!   answers [`WireCode::WarmingUp`] until the per-qvec exploded-map
+//!   cache has served its warmup batches.
+//! * [`client`] — the blocking [`Client`] library, reused by
+//!   `repro serve bench --remote` and `examples/serve_requests.rs`.
+//!
+//! The load-bearing invariant carried across the network boundary: a
+//! logit row read off the socket is **bit-identical** to an in-process
+//! `Plan::run` under the same executor — enforced end to end by
+//! `rust/tests/serving_socket.rs` at qualities 50/75/90.
+
+pub mod client;
+pub mod listener;
+pub mod protocol;
+
+pub use client::{Client, ClientError, RemoteResponse, Reply};
+pub use listener::{FrontendConfig, SocketFrontend};
+pub use protocol::{ProtocolError, WireCode};

@@ -1,0 +1,631 @@
+//! The wire protocol: length-prefixed binary frames over TCP.
+//!
+//! Both directions share a fixed 28-byte header (magic, version, kind,
+//! request id) followed by a length-prefixed body, so a reader always
+//! knows exactly how many bytes the current frame still owes before the
+//! next one starts.  All integers are little-endian.
+//!
+//! ## Request frame (client -> server)
+//!
+//! | offset | size | field |
+//! |---|---|---|
+//! | 0  | 2 | magic `"JD"` |
+//! | 2  | 1 | version (currently 1) |
+//! | 3  | 1 | kind (1 = request) |
+//! | 4  | 8 | request id (echoed on the response; responses may arrive out of order; **0 is reserved** — servers address error frames to id 0 when a violation made the real id unrecoverable, so requests declaring id 0 are rejected) |
+//! | 12 | 8 | deadline budget in microseconds (0 = no deadline) |
+//! | 20 | 1 | quality hint (advisory encoder quality, 0 = unknown; the server derives the authoritative tag from the quant table) |
+//! | 21 | 3 | reserved (zero) |
+//! | 24 | 4 | payload length |
+//! | 28 | n | payload: entropy-coded JPEG bytes |
+//!
+//! ## Response frame (server -> client)
+//!
+//! | offset | size | field |
+//! |---|---|---|
+//! | 0  | 2 | magic `"JD"` |
+//! | 2  | 1 | version |
+//! | 3  | 1 | kind (2 = response) |
+//! | 4  | 8 | request id (copied from the request) |
+//! | 12 | 1 | status ([`WireCode`]; 0 = ok) |
+//! | 13 | 3 | reserved (zero) |
+//! | 16 | 8 | server-side latency in microseconds (0 on errors) |
+//! | 24 | 4 | body length |
+//! | 28 | n | body: ok -> predicted class `u32` + logits as `f32` words; error -> utf-8 message |
+//!
+//! ## Robustness contract
+//!
+//! Parsing never panics and never trusts a declared length: payloads
+//! above [`MAX_PAYLOAD`] are rejected before any allocation, bad
+//! magic/version/kind bytes and mid-frame disconnects surface as typed
+//! [`ProtocolError`]s, and a clean EOF *between* frames is a normal
+//! close (`Ok(None)`), not an error.
+
+use std::io::Read;
+
+use crate::serving::error::ServeError;
+
+/// First two bytes of every frame.
+pub const MAGIC: [u8; 2] = *b"JD";
+/// Protocol version this build speaks.
+pub const VERSION: u8 = 1;
+/// Frame kind byte: request.
+pub const KIND_REQUEST: u8 = 1;
+/// Frame kind byte: response.
+pub const KIND_RESPONSE: u8 = 2;
+/// Shared header size (both directions).
+pub const HEADER_LEN: usize = 28;
+/// Hard cap on a declared payload/body length.  A frame declaring more
+/// is rejected *before* any buffer is allocated, so a hostile length
+/// field cannot balloon server memory.
+pub const MAX_PAYLOAD: u32 = 32 * 1024 * 1024;
+
+/// Typed response status codes.  Mirrors [`ServeError`] plus the
+/// socket-layer-only conditions (`WarmingUp`, `Protocol`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum WireCode {
+    /// Logits follow in the body.
+    Ok = 0,
+    /// Admission queue at capacity ([`ServeError::QueueFull`]); retry later.
+    QueueFull = 1,
+    /// Deadline budget expired before compute ([`ServeError::DeadlineExceeded`]).
+    DeadlineExceeded = 2,
+    /// Payload did not decode to a usable coefficient image ([`ServeError::Decode`]).
+    Decode = 3,
+    /// Server is draining ([`ServeError::ShuttingDown`]).
+    Shutdown = 4,
+    /// Slow-start gate: the exploded-map cache has not served its
+    /// warmup batches yet; retry shortly.
+    WarmingUp = 5,
+    /// The client broke the framing ([`ProtocolError`]); the connection
+    /// closes after this response.
+    Protocol = 6,
+    /// A serving worker vanished before replying.
+    Internal = 7,
+}
+
+impl WireCode {
+    /// Number of distinct codes (sizes the per-code metric arrays).
+    pub const COUNT: usize = 8;
+
+    /// All codes, in `repr` order (index == `code as usize`).
+    pub const ALL: [WireCode; WireCode::COUNT] = [
+        WireCode::Ok,
+        WireCode::QueueFull,
+        WireCode::DeadlineExceeded,
+        WireCode::Decode,
+        WireCode::Shutdown,
+        WireCode::WarmingUp,
+        WireCode::Protocol,
+        WireCode::Internal,
+    ];
+
+    /// Decode a status byte.
+    pub fn from_u8(b: u8) -> Option<WireCode> {
+        WireCode::ALL.get(b as usize).copied()
+    }
+
+    /// Stable snake_case label (metrics keys, bench output).
+    pub fn label(self) -> &'static str {
+        match self {
+            WireCode::Ok => "ok",
+            WireCode::QueueFull => "queue_full",
+            WireCode::DeadlineExceeded => "deadline_exceeded",
+            WireCode::Decode => "decode",
+            WireCode::Shutdown => "shutdown",
+            WireCode::WarmingUp => "warming_up",
+            WireCode::Protocol => "protocol",
+            WireCode::Internal => "internal",
+        }
+    }
+
+    /// The wire code for a pipeline-side [`ServeError`].
+    pub fn from_serve_error(e: &ServeError) -> WireCode {
+        match e {
+            ServeError::QueueFull { .. } => WireCode::QueueFull,
+            ServeError::DeadlineExceeded => WireCode::DeadlineExceeded,
+            ServeError::Decode(_) => WireCode::Decode,
+            ServeError::ShuttingDown => WireCode::Shutdown,
+            ServeError::WorkerLost => WireCode::Internal,
+        }
+    }
+}
+
+/// Why a frame failed to parse.  Every variant is a client (or peer)
+/// fault the worker must survive: report, close the connection, keep
+/// the acceptor running.
+#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum ProtocolError {
+    /// The first two bytes were not `"JD"`.
+    #[error("bad magic {0:02x?} (expected \"JD\")")]
+    BadMagic([u8; 2]),
+    /// Unsupported protocol version byte.
+    #[error("unsupported protocol version {0} (this build speaks {VERSION})")]
+    BadVersion(u8),
+    /// Unexpected frame kind for this direction.
+    #[error("unexpected frame kind {got} (expected {want})")]
+    BadKind { got: u8, want: u8 },
+    /// Declared length exceeds [`MAX_PAYLOAD`].
+    #[error("declared length {declared} exceeds the {max}-byte cap")]
+    Oversized { declared: u32, max: u32 },
+    /// The stream ended (or the peer disconnected) mid-frame.
+    #[error("stream ended mid-frame while reading {context}")]
+    Truncated { context: &'static str },
+    /// The frame parsed but its body is inconsistent.
+    #[error("malformed frame body: {0}")]
+    Malformed(&'static str),
+}
+
+/// A frame-read failure: transport trouble or a typed protocol
+/// violation.  When the violation happened after the header parsed,
+/// `request_id` carries the id so the server can still address its
+/// error response.
+#[derive(Debug)]
+pub enum FrameError {
+    /// The socket itself failed (reset, timeout, ...).
+    Io(std::io::Error),
+    /// The peer broke the framing.
+    Protocol {
+        /// What was wrong.
+        error: ProtocolError,
+        /// The frame's request id, when the header got far enough.
+        request_id: Option<u64>,
+    },
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "io: {e}"),
+            FrameError::Protocol { error, .. } => write!(f, "protocol: {error}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> FrameError {
+        FrameError::Io(e)
+    }
+}
+
+impl FrameError {
+    fn protocol(error: ProtocolError) -> FrameError {
+        FrameError::Protocol { error, request_id: None }
+    }
+
+    fn protocol_for(error: ProtocolError, request_id: u64) -> FrameError {
+        FrameError::Protocol { error, request_id: Some(request_id) }
+    }
+}
+
+/// A parsed request frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RequestFrame {
+    /// Client-chosen id; the response echoes it (responses may be
+    /// reordered relative to requests).
+    pub request_id: u64,
+    /// Deadline budget in microseconds from server receipt; 0 = none.
+    pub deadline_budget_us: u64,
+    /// Advisory encoder quality (0 = unknown).
+    pub quality_hint: u8,
+    /// Entropy-coded JPEG bytes.
+    pub payload: Vec<u8>,
+}
+
+/// A parsed response frame's body.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ResponseBody {
+    /// Successful inference.
+    Logits {
+        /// Argmax class.
+        predicted: u32,
+        /// Full logit row.
+        logits: Vec<f32>,
+    },
+    /// Typed failure.
+    Error {
+        /// What went wrong.
+        code: WireCode,
+        /// Human-readable detail.
+        message: String,
+    },
+}
+
+/// A parsed response frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResponseFrame {
+    /// Echo of the request id.
+    pub request_id: u64,
+    /// Server-side submit-to-reply latency in microseconds (0 on errors).
+    pub latency_us: u64,
+    /// Logits or a typed error.
+    pub body: ResponseBody,
+}
+
+/// Serialize a request frame.  Fails (without allocating the frame)
+/// when the payload exceeds [`MAX_PAYLOAD`].
+pub fn encode_request(
+    request_id: u64,
+    deadline_budget_us: u64,
+    quality_hint: u8,
+    payload: &[u8],
+) -> Result<Vec<u8>, ProtocolError> {
+    if payload.len() as u64 > MAX_PAYLOAD as u64 {
+        return Err(ProtocolError::Oversized {
+            declared: payload.len().min(u32::MAX as usize) as u32,
+            max: MAX_PAYLOAD,
+        });
+    }
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(KIND_REQUEST);
+    out.extend_from_slice(&request_id.to_le_bytes());
+    out.extend_from_slice(&deadline_budget_us.to_le_bytes());
+    out.push(quality_hint);
+    out.extend_from_slice(&[0u8; 3]);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    Ok(out)
+}
+
+/// Serialize a response frame.
+pub fn encode_response(frame: &ResponseFrame) -> Vec<u8> {
+    let (status, body): (u8, Vec<u8>) = match &frame.body {
+        ResponseBody::Logits { predicted, logits } => {
+            let mut b = Vec::with_capacity(4 + 4 * logits.len());
+            b.extend_from_slice(&predicted.to_le_bytes());
+            for v in logits {
+                b.extend_from_slice(&v.to_le_bytes());
+            }
+            (WireCode::Ok as u8, b)
+        }
+        ResponseBody::Error { code, message } => {
+            // an error message above the cap would deadlock framing;
+            // truncate defensively (messages are short in practice)
+            let mut b = message.as_bytes().to_vec();
+            b.truncate(MAX_PAYLOAD as usize);
+            (*code as u8, b)
+        }
+    };
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(KIND_RESPONSE);
+    out.extend_from_slice(&frame.request_id.to_le_bytes());
+    out.push(status);
+    out.extend_from_slice(&[0u8; 3]);
+    out.extend_from_slice(&frame.latency_us.to_le_bytes());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Fill `buf` from `r`.  `Ok(false)` = the stream closed cleanly before
+/// the first byte (only legal when `clean_eof_ok`); a close after any
+/// byte arrived is a typed [`ProtocolError::Truncated`].
+fn read_full(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    context: &'static str,
+    clean_eof_ok: bool,
+) -> Result<bool, FrameError> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 && clean_eof_ok {
+                    return Ok(false);
+                }
+                return Err(FrameError::protocol(ProtocolError::Truncated { context }));
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                return Err(FrameError::protocol(ProtocolError::Truncated { context }));
+            }
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    Ok(true)
+}
+
+fn u32_at(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes(b[at..at + 4].try_into().expect("4-byte slice"))
+}
+
+fn u64_at(b: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(b[at..at + 8].try_into().expect("8-byte slice"))
+}
+
+/// Validate the shared header prefix; returns the request id.
+fn check_header(h: &[u8; HEADER_LEN], want_kind: u8) -> Result<u64, FrameError> {
+    if h[0..2] != MAGIC {
+        return Err(FrameError::protocol(ProtocolError::BadMagic([h[0], h[1]])));
+    }
+    if h[2] != VERSION {
+        return Err(FrameError::protocol(ProtocolError::BadVersion(h[2])));
+    }
+    let request_id = u64_at(h, 4);
+    if h[3] != want_kind {
+        return Err(FrameError::protocol_for(
+            ProtocolError::BadKind { got: h[3], want: want_kind },
+            request_id,
+        ));
+    }
+    Ok(request_id)
+}
+
+/// Read the length-checked body that follows a validated header.
+fn read_body(
+    r: &mut impl Read,
+    declared: u32,
+    request_id: u64,
+    context: &'static str,
+) -> Result<Vec<u8>, FrameError> {
+    if declared > MAX_PAYLOAD {
+        return Err(FrameError::protocol_for(
+            ProtocolError::Oversized { declared, max: MAX_PAYLOAD },
+            request_id,
+        ));
+    }
+    let mut body = vec![0u8; declared as usize];
+    match read_full(r, &mut body, context, false) {
+        Ok(_) => Ok(body),
+        // attribute the truncation to the frame we were mid-way through
+        Err(FrameError::Protocol { error, .. }) => {
+            Err(FrameError::protocol_for(error, request_id))
+        }
+        Err(e) => Err(e),
+    }
+}
+
+/// Read one request frame.  `Ok(None)` = the client closed cleanly
+/// between frames.
+pub fn read_request(r: &mut impl Read) -> Result<Option<RequestFrame>, FrameError> {
+    let mut h = [0u8; HEADER_LEN];
+    if !read_full(r, &mut h, "request header", true)? {
+        return Ok(None);
+    }
+    let request_id = check_header(&h, KIND_REQUEST)?;
+    if request_id == 0 {
+        // id 0 is the server's sentinel for errors that cannot be
+        // attributed to a frame; a request claiming it would be
+        // ambiguous with that sentinel
+        return Err(FrameError::protocol_for(
+            ProtocolError::Malformed("request id 0 is reserved for unattributable errors"),
+            0,
+        ));
+    }
+    let payload = read_body(r, u32_at(&h, 24), request_id, "request payload")?;
+    Ok(Some(RequestFrame {
+        request_id,
+        deadline_budget_us: u64_at(&h, 12),
+        quality_hint: h[20],
+        payload,
+    }))
+}
+
+/// Read one response frame.  `Ok(None)` = the server closed cleanly
+/// between frames.
+pub fn read_response(r: &mut impl Read) -> Result<Option<ResponseFrame>, FrameError> {
+    let mut h = [0u8; HEADER_LEN];
+    if !read_full(r, &mut h, "response header", true)? {
+        return Ok(None);
+    }
+    let request_id = check_header(&h, KIND_RESPONSE)?;
+    let status = h[12];
+    let latency_us = u64_at(&h, 16);
+    let body = read_body(r, u32_at(&h, 24), request_id, "response body")?;
+    let Some(code) = WireCode::from_u8(status) else {
+        return Err(FrameError::protocol_for(
+            ProtocolError::Malformed("unknown status code"),
+            request_id,
+        ));
+    };
+    let body = match code {
+        WireCode::Ok => {
+            if body.len() < 4 || (body.len() - 4) % 4 != 0 {
+                return Err(FrameError::protocol_for(
+                    ProtocolError::Malformed("ok body must be predicted u32 + f32 logits"),
+                    request_id,
+                ));
+            }
+            let predicted = u32_at(&body, 0);
+            let logits = body[4..]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().expect("4-byte chunk")))
+                .collect();
+            ResponseBody::Logits { predicted, logits }
+        }
+        code => ResponseBody::Error {
+            code,
+            message: String::from_utf8_lossy(&body).into_owned(),
+        },
+    };
+    Ok(Some(ResponseFrame { request_id, latency_us, body }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn request_roundtrip() {
+        let bytes = encode_request(42, 1_000_000, 75, b"jpegjpeg").unwrap();
+        assert_eq!(bytes.len(), HEADER_LEN + 8);
+        let got = read_request(&mut Cursor::new(&bytes)).unwrap().unwrap();
+        assert_eq!(
+            got,
+            RequestFrame {
+                request_id: 42,
+                deadline_budget_us: 1_000_000,
+                quality_hint: 75,
+                payload: b"jpegjpeg".to_vec(),
+            }
+        );
+        // two frames back to back parse independently
+        let mut both = bytes.clone();
+        both.extend_from_slice(&encode_request(43, 0, 0, b"x").unwrap());
+        let mut cur = Cursor::new(&both);
+        assert_eq!(read_request(&mut cur).unwrap().unwrap().request_id, 42);
+        assert_eq!(read_request(&mut cur).unwrap().unwrap().request_id, 43);
+        assert!(read_request(&mut cur).unwrap().is_none(), "clean EOF between frames");
+    }
+
+    #[test]
+    fn response_roundtrip_ok_and_error() {
+        let ok = ResponseFrame {
+            request_id: 7,
+            latency_us: 1234,
+            body: ResponseBody::Logits { predicted: 2, logits: vec![0.1, -0.5, 3.25, 0.0] },
+        };
+        let got = read_response(&mut Cursor::new(encode_response(&ok))).unwrap().unwrap();
+        assert_eq!(got, ok);
+
+        let err = ResponseFrame {
+            request_id: 9,
+            latency_us: 0,
+            body: ResponseBody::Error {
+                code: WireCode::QueueFull,
+                message: "admission queue full (capacity 8)".into(),
+            },
+        };
+        let got = read_response(&mut Cursor::new(encode_response(&err))).unwrap().unwrap();
+        assert_eq!(got, err);
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_typed() {
+        let mut bytes = encode_request(1, 0, 0, b"p").unwrap();
+        bytes[0] = b'X';
+        match read_request(&mut Cursor::new(&bytes)) {
+            Err(FrameError::Protocol { error: ProtocolError::BadMagic(m), request_id }) => {
+                assert_eq!(m, [b'X', b'D']);
+                assert_eq!(request_id, None, "id is untrusted once the magic is wrong");
+            }
+            other => panic!("expected BadMagic, got {other:?}"),
+        }
+        let mut bytes = encode_request(1, 0, 0, b"p").unwrap();
+        bytes[2] = 99;
+        assert!(matches!(
+            read_request(&mut Cursor::new(&bytes)),
+            Err(FrameError::Protocol { error: ProtocolError::BadVersion(99), .. })
+        ));
+    }
+
+    #[test]
+    fn wrong_kind_is_typed_and_carries_id() {
+        // a response frame sent where a request belongs
+        let bytes = encode_response(&ResponseFrame {
+            request_id: 5,
+            latency_us: 0,
+            body: ResponseBody::Error { code: WireCode::Internal, message: "x".into() },
+        });
+        match read_request(&mut Cursor::new(&bytes)) {
+            Err(FrameError::Protocol {
+                error: ProtocolError::BadKind { got, want },
+                request_id,
+            }) => {
+                assert_eq!((got, want), (KIND_RESPONSE, KIND_REQUEST));
+                assert_eq!(request_id, Some(5), "header parsed far enough to address a reply");
+            }
+            other => panic!("expected BadKind, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_declared_length_rejected_before_allocation() {
+        let mut bytes = encode_request(11, 0, 0, b"p").unwrap();
+        bytes[24..28].copy_from_slice(&u32::MAX.to_le_bytes());
+        match read_request(&mut Cursor::new(&bytes)) {
+            Err(FrameError::Protocol {
+                error: ProtocolError::Oversized { declared, max },
+                request_id,
+            }) => {
+                assert_eq!(declared, u32::MAX);
+                assert_eq!(max, MAX_PAYLOAD);
+                assert_eq!(request_id, Some(11));
+            }
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+        // the encoder refuses to build such a frame in the first place
+        let big = vec![0u8; MAX_PAYLOAD as usize + 1];
+        assert!(matches!(
+            encode_request(1, 0, 0, &big),
+            Err(ProtocolError::Oversized { .. })
+        ));
+    }
+
+    #[test]
+    fn truncation_is_typed_at_every_cut_point() {
+        let full = encode_request(3, 0, 50, b"payload-bytes").unwrap();
+        // mid-header cut: no id recoverable
+        match read_request(&mut Cursor::new(&full[..10])) {
+            Err(FrameError::Protocol { error: ProtocolError::Truncated { .. }, request_id }) => {
+                assert_eq!(request_id, None);
+            }
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+        // mid-payload cut: header parsed, id known
+        match read_request(&mut Cursor::new(&full[..HEADER_LEN + 4])) {
+            Err(FrameError::Protocol { error: ProtocolError::Truncated { .. }, request_id }) => {
+                assert_eq!(request_id, Some(3));
+            }
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn request_id_zero_is_reserved() {
+        let bytes = encode_request(0, 0, 0, b"p").unwrap();
+        assert!(matches!(
+            read_request(&mut Cursor::new(&bytes)),
+            Err(FrameError::Protocol { error: ProtocolError::Malformed(_), .. })
+        ));
+    }
+
+    #[test]
+    fn malformed_ok_body_rejected() {
+        let mut bytes = encode_response(&ResponseFrame {
+            request_id: 8,
+            latency_us: 1,
+            body: ResponseBody::Logits { predicted: 0, logits: vec![1.0] },
+        });
+        // corrupt the body length to a non-multiple of 4 remainder
+        let bad_len = 7u32;
+        bytes[24..28].copy_from_slice(&bad_len.to_le_bytes());
+        bytes.truncate(HEADER_LEN + bad_len as usize);
+        assert!(matches!(
+            read_response(&mut Cursor::new(&bytes)),
+            Err(FrameError::Protocol { error: ProtocolError::Malformed(_), request_id: Some(8) })
+        ));
+    }
+
+    #[test]
+    fn wire_codes_roundtrip_and_map_serve_errors() {
+        for code in WireCode::ALL {
+            assert_eq!(WireCode::from_u8(code as u8), Some(code));
+            assert!(!code.label().is_empty());
+        }
+        assert_eq!(WireCode::from_u8(200), None);
+        assert_eq!(
+            WireCode::from_serve_error(&ServeError::QueueFull { capacity: 4 }),
+            WireCode::QueueFull
+        );
+        assert_eq!(
+            WireCode::from_serve_error(&ServeError::DeadlineExceeded),
+            WireCode::DeadlineExceeded
+        );
+        assert_eq!(
+            WireCode::from_serve_error(&ServeError::Decode("x".into())),
+            WireCode::Decode
+        );
+        assert_eq!(WireCode::from_serve_error(&ServeError::ShuttingDown), WireCode::Shutdown);
+        assert_eq!(WireCode::from_serve_error(&ServeError::WorkerLost), WireCode::Internal);
+    }
+}

@@ -17,6 +17,7 @@ use std::time::Duration;
 use crate::coordinator::metrics::LatencyHistogram;
 use crate::jpeg::quant::QuantTable;
 use crate::jpeg_domain::network::{ResidencyTrace, RESIDENCY_POINTS};
+use crate::serving::frontend::protocol::WireCode;
 
 /// Traffic class of one request, derived from its luma quant table.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -228,6 +229,106 @@ impl PipelineMetrics {
     }
 }
 
+/// Socket front-end counters: connection lifecycle, well-formed vs
+/// malformed frames, and one counter per wire response code — so load
+/// shedding (`queue_full`), slow start (`warming_up`) and client abuse
+/// (`protocol`) are each separately observable.
+pub struct FrontendMetrics {
+    /// Connections accepted.
+    pub connections_opened: AtomicU64,
+    /// Connections fully drained and closed.
+    pub connections_closed: AtomicU64,
+    /// Well-formed request frames read off sockets.
+    pub requests: AtomicU64,
+    /// Frames that violated the protocol (each also closes its
+    /// connection after a typed `protocol` response).
+    pub protocol_errors: AtomicU64,
+    /// Responses written, indexed by `WireCode as usize` (incl. `ok`).
+    responses: [AtomicU64; WireCode::COUNT],
+}
+
+impl Default for FrontendMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FrontendMetrics {
+    pub fn new() -> FrontendMetrics {
+        FrontendMetrics {
+            connections_opened: AtomicU64::new(0),
+            connections_closed: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            protocol_errors: AtomicU64::new(0),
+            responses: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    pub fn connection_opened(&self) {
+        self.connections_opened.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn connection_closed(&self) {
+        self.connections_closed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_protocol_error(&self) {
+        self.protocol_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one written response under its wire code.
+    pub fn record_response(&self, code: WireCode) {
+        self.responses[code as usize].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Responses written so far under `code`.
+    pub fn responses_with(&self, code: WireCode) -> u64 {
+        self.responses[code as usize].load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> FrontendSnapshot {
+        FrontendSnapshot {
+            connections_opened: self.connections_opened.load(Ordering::Relaxed),
+            connections_closed: self.connections_closed.load(Ordering::Relaxed),
+            requests: self.requests.load(Ordering::Relaxed),
+            protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
+            responses: WireCode::ALL.map(|c| (c.label(), self.responses_with(c))),
+        }
+    }
+}
+
+/// Point-in-time view of the socket front end.
+#[derive(Clone, Debug)]
+pub struct FrontendSnapshot {
+    pub connections_opened: u64,
+    pub connections_closed: u64,
+    pub requests: u64,
+    pub protocol_errors: u64,
+    /// `(wire code label, responses written)` in code order.
+    pub responses: [(&'static str, u64); WireCode::COUNT],
+}
+
+impl std::fmt::Display for FrontendSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "frontend: connections opened={} closed={} requests={} protocol_errors={}",
+            self.connections_opened, self.connections_closed, self.requests, self.protocol_errors
+        )?;
+        let codes: Vec<String> = self
+            .responses
+            .iter()
+            .filter(|(label, n)| *n > 0 || *label == "ok")
+            .map(|(label, n)| format!("{label}={n}"))
+            .collect();
+        write!(f, "\n  responses: {}", codes.join(" "))
+    }
+}
+
 /// Point-in-time view of one stage.
 #[derive(Clone, Copy, Debug)]
 pub struct StageSnapshot {
@@ -343,6 +444,32 @@ mod tests {
         assert!((s.layer_nonzero[0].1 - 0.5).abs() < 1e-12);
         assert!((s.layer_nonzero[1].1 - 0.125).abs() < 1e-12);
         assert!(s.to_string().contains("nonzero fraction"));
+    }
+
+    #[test]
+    fn frontend_counters_by_code() {
+        let m = FrontendMetrics::new();
+        m.connection_opened();
+        m.record_request();
+        m.record_request();
+        m.record_response(WireCode::Ok);
+        m.record_response(WireCode::QueueFull);
+        m.record_protocol_error();
+        m.record_response(WireCode::Protocol);
+        m.connection_closed();
+        let s = m.snapshot();
+        assert_eq!(s.connections_opened, 1);
+        assert_eq!(s.connections_closed, 1);
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.protocol_errors, 1);
+        assert_eq!(m.responses_with(WireCode::Ok), 1);
+        assert_eq!(m.responses_with(WireCode::QueueFull), 1);
+        assert_eq!(m.responses_with(WireCode::Protocol), 1);
+        assert_eq!(m.responses_with(WireCode::WarmingUp), 0);
+        let text = s.to_string();
+        assert!(text.contains("queue_full=1"), "{text}");
+        assert!(text.contains("protocol_errors=1"), "{text}");
+        assert!(!text.contains("warming_up"), "zero codes are elided: {text}");
     }
 
     #[test]

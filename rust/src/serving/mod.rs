@@ -66,17 +66,27 @@
 //! [`crate::coordinator::metrics::LatencyHistogram`]); every request
 //! also carries a quality tag ([`metrics::QualityTag`], recovered from
 //! the quant table) so quality-50/75/90 traffic is tracked separately.
+//!
+//! Network callers reach the same pipeline through the [`frontend`]
+//! socket layer: a length-prefixed binary protocol whose typed response
+//! codes mirror [`ServeError`] (plus `WarmingUp` for the slow-start
+//! gate and `Protocol` for framing violations), with per-connection and
+//! per-error-code counters in [`metrics::FrontendMetrics`].  Socket
+//! logits are bit-identical to the in-process forward — the network
+//! boundary adds framing, never arithmetic.
 
 pub mod bench;
 pub mod engine;
 pub mod error;
+pub mod frontend;
 pub mod metrics;
 pub mod pipeline;
 pub mod queue;
 
 pub use engine::{NativeEngine, NativeMode};
 pub use error::ServeError;
-pub use metrics::{PipelineMetrics, QualityTag};
+pub use frontend::{FrontendConfig, SocketFrontend};
+pub use metrics::{FrontendMetrics, PipelineMetrics, QualityTag};
 pub use pipeline::{NativePipeline, PipelineConfig, ServeRequest};
 
 /// Which serving backend the `serve` CLI drives.

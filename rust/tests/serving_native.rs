@@ -4,14 +4,13 @@
 //! `sparse_equivalence.rs`: synthetic images -> real encoder ->
 //! entropy decode).
 
-#![allow(deprecated)] // jpeg_forward is the legacy oracle here
-
 use std::time::{Duration, Instant};
 
 use jpegdomain::coordinator::server::Server;
 use jpegdomain::data::{Dataset, Split, SynthKind};
 use jpegdomain::jpeg::codec;
-use jpegdomain::jpeg_domain::network::jpeg_forward;
+use jpegdomain::jpeg_domain::network::RESNET_PLAN;
+use jpegdomain::jpeg_domain::plan::{Act, DccRef, PlanCtx};
 use jpegdomain::jpeg_domain::relu::Method;
 use jpegdomain::params::{ModelConfig, ParamSet};
 use jpegdomain::serving::{
@@ -123,7 +122,14 @@ fn native_sparse_dense_and_reference_logits_agree() {
     let f0 = SparseBlocks::from_coeff_images(&cis);
     let cfg = tiny_cfg();
     let params = ParamSet::init(&cfg, 3);
-    let want = jpeg_forward(&cfg, &params, &f0.to_dense(), &qvec, 15, Method::Asm);
+    let ctx = PlanCtx {
+        params: &params,
+        exploded: None,
+        qvec: &qvec,
+        num_freqs: 15,
+        method: Method::Asm,
+    };
+    let want = RESNET_PLAN.run(&DccRef, &ctx, &Act::Dense(f0.to_dense()), None);
 
     let mut got = Vec::new();
     for mode in [NativeMode::Sparse, NativeMode::Dense, NativeMode::SparseResident] {

@@ -1,0 +1,353 @@
+//! End-to-end wire-level tests for the streaming socket front end: the
+//! paper's bit-identity claim pinned *across a network boundary*, plus
+//! the protocol-robustness and overload paths production traffic will
+//! hit.  Everything runs on loopback with ephemeral ports and no PJRT
+//! artifacts.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use jpegdomain::coordinator::server::Server;
+use jpegdomain::data::{Dataset, Split, SynthKind};
+use jpegdomain::jpeg::codec;
+use jpegdomain::jpeg_domain::network::{ExplodedModel, RESNET_PLAN};
+use jpegdomain::jpeg_domain::plan::{Act, PlanCtx, SparseResident};
+use jpegdomain::jpeg_domain::relu::Method;
+use jpegdomain::params::{ModelConfig, ParamSet};
+use jpegdomain::serving::frontend::protocol::{
+    encode_request, read_response, ResponseBody, HEADER_LEN,
+};
+use jpegdomain::serving::frontend::{Client, FrontendConfig, Reply, SocketFrontend, WireCode};
+use jpegdomain::serving::{NativeEngine, NativeMode, NativePipeline, PipelineConfig};
+use jpegdomain::tensor::SparseBlocks;
+
+/// Same deliberately tiny model as `serving_native.rs`: every layer of
+/// the stack exercised, exploded precompute cheap in debug runs.
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "tiny".into(),
+        in_channels: 1,
+        num_classes: 4,
+        widths: [2, 2, 2],
+        image_size: 32,
+    }
+}
+
+fn engine(params: &ParamSet, mode: NativeMode) -> NativeEngine {
+    NativeEngine::new(tiny_cfg(), params.clone(), 15, Method::Asm, 1, mode)
+}
+
+fn files(n: usize, quality: u8) -> Vec<(Vec<u8>, u32)> {
+    Dataset::synthetic(SynthKind::Mnist, 2, n, 16).jpeg_bytes(Split::Test, quality)
+}
+
+/// In-process oracle: `Plan::run` under the `SparseResident` executor
+/// on the same decoded bytes — the logits the socket must reproduce
+/// bit for bit.
+fn expected_logits(params: &ParamSet, bytes: &[u8]) -> Vec<f32> {
+    let ci = codec::decode_to_coefficients(bytes).unwrap();
+    let qvec = ci.qvec(0);
+    let f0 = SparseBlocks::from_coeff_images(std::slice::from_ref(&ci));
+    let em = ExplodedModel::precompute(params, &qvec);
+    let ctx = PlanCtx {
+        params,
+        exploded: Some(&em),
+        qvec: &qvec,
+        num_freqs: 15,
+        method: Method::Asm,
+    };
+    RESNET_PLAN
+        .run(&SparseResident { threads: 1, prune_epsilon: 0.0 }, &ctx, &Act::Sparse(f0), None)
+        .data()
+        .to_vec()
+}
+
+fn listen(server: &Server, warmup_batches: u64, max_inflight: usize) -> SocketFrontend {
+    server
+        .listen(FrontendConfig {
+            listen_addr: "127.0.0.1:0".into(),
+            warmup_batches,
+            max_inflight,
+        })
+        .expect("bind ephemeral loopback port")
+}
+
+#[test]
+fn socket_logits_bit_identical_across_qualities_and_concurrent_clients() {
+    let params = ParamSet::init(&tiny_cfg(), 3);
+    let server = Server::start_native(
+        engine(&params, NativeMode::SparseResident),
+        PipelineConfig {
+            decode_workers: 2,
+            compute_workers: 2,
+            max_batch: 4,
+            ..PipelineConfig::default()
+        },
+    );
+    let frontend = listen(&server, 0, 64);
+    let addr = frontend.local_addr();
+
+    // q50/75/90 traffic: per file, socket logits must equal the
+    // in-process Plan::run (SparseResident) logits bit for bit —
+    // micro-batching composes rows, it never changes their arithmetic
+    let work: Vec<(Vec<u8>, Vec<f32>)> = [50u8, 75, 90]
+        .iter()
+        .flat_map(|&q| files(2, q))
+        .map(|(bytes, _)| {
+            let want = expected_logits(&params, &bytes);
+            (bytes, want)
+        })
+        .collect();
+    let work = Arc::new(work);
+
+    // one client thread per quality class, each on its own connection
+    std::thread::scope(|s| {
+        for t in 0..3 {
+            let work = work.clone();
+            s.spawn(move || {
+                let mut client = Client::connect(addr).expect("connect");
+                for (bytes, want) in work.iter().skip(t * 2).take(2) {
+                    let resp = client.infer(bytes).expect("served");
+                    assert_eq!(
+                        &resp.logits, want,
+                        "socket logits must be bit-identical to in-process Plan::run"
+                    );
+                    assert!(resp.server_latency > Duration::ZERO);
+                }
+            });
+        }
+    });
+
+    // pipelined on ONE connection: submit everything up front, then
+    // collect replies in whatever order they arrive and map them back
+    // by request id
+    let mut client = Client::connect(addr).expect("connect");
+    let mut by_id = std::collections::HashMap::new();
+    for (bytes, want) in work.iter() {
+        let id = client.submit(bytes).expect("submit");
+        by_id.insert(id, want.clone());
+    }
+    for _ in 0..by_id.len() {
+        match client.recv().expect("reply") {
+            Reply::Ok(resp) => {
+                let want = by_id.remove(&resp.request_id).expect("unclaimed request id");
+                assert_eq!(resp.logits, want, "request id {} mapped wrong", resp.request_id);
+            }
+            Reply::Err { request_id, code, message } => {
+                panic!("request {request_id} failed: {} {message}", code.label());
+            }
+        }
+    }
+    assert!(by_id.is_empty(), "every submitted request answered exactly once");
+
+    let snap = frontend.metrics.snapshot();
+    assert_eq!(snap.protocol_errors, 0, "{snap}");
+    assert_eq!(frontend.metrics.responses_with(WireCode::Ok), 12, "{snap}");
+    frontend.shutdown();
+    server.shutdown();
+}
+
+/// Drive one raw byte blob at the server and return the typed replies
+/// received before the connection closes.
+fn raw_exchange(addr: std::net::SocketAddr, bytes: &[u8], cut_write: bool) -> Vec<(u64, WireCode)> {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.write_all(bytes).expect("write");
+    if cut_write {
+        // mid-frame disconnect: the peer sees EOF inside a frame
+        stream.shutdown(std::net::Shutdown::Write).expect("half-close");
+    }
+    let mut out = Vec::new();
+    while let Ok(Some(frame)) = read_response(&mut stream) {
+        let code = match frame.body {
+            ResponseBody::Logits { .. } => WireCode::Ok,
+            ResponseBody::Error { code, .. } => code,
+        };
+        out.push((frame.request_id, code));
+    }
+    out
+}
+
+#[test]
+fn protocol_violations_get_typed_errors_and_never_wedge_the_server() {
+    let params = ParamSet::init(&tiny_cfg(), 5);
+    let server = Server::start_native(engine(&params, NativeMode::Sparse), PipelineConfig::default());
+    let frontend = listen(&server, 0, 64);
+    let addr = frontend.local_addr();
+    let good = files(1, 75).remove(0).0;
+
+    // bad magic: framing untrusted, error addressed to the sentinel id 0
+    let mut garbage = vec![b'X'; HEADER_LEN + 4];
+    garbage[2] = 1;
+    let replies = raw_exchange(addr, &garbage, false);
+    assert_eq!(replies, vec![(0, WireCode::Protocol)], "bad magic");
+
+    // bad version: rejected before the id is trusted
+    let mut bad_version = encode_request(21, 0, 75, &good).unwrap();
+    bad_version[2] = 99;
+    let replies = raw_exchange(addr, &bad_version, false);
+    assert_eq!(replies, vec![(0, WireCode::Protocol)], "bad version");
+
+    // oversized declared length: header parsed, so the reply carries
+    // the offending request id — and no payload-sized buffer was built
+    let mut oversized = encode_request(22, 0, 75, &good).unwrap();
+    oversized[24..28].copy_from_slice(&u32::MAX.to_le_bytes());
+    let replies = raw_exchange(addr, &oversized[..HEADER_LEN], true);
+    assert_eq!(replies, vec![(22, WireCode::Protocol)], "oversized length");
+
+    // truncated header (cut before the id): sentinel id 0
+    let full = encode_request(23, 0, 75, &good).unwrap();
+    let replies = raw_exchange(addr, &full[..7], true);
+    assert_eq!(replies, vec![(0, WireCode::Protocol)], "mid-header disconnect");
+
+    // mid-payload disconnect: header parsed, id recoverable
+    let replies = raw_exchange(addr, &full[..HEADER_LEN + 3], true);
+    assert_eq!(replies, vec![(23, WireCode::Protocol)], "mid-payload disconnect");
+
+    // the acceptor survived all of it: a well-formed client still gets
+    // logits on a fresh connection, and the workers never panicked
+    let mut client = Client::connect(addr).expect("connect after abuse");
+    let resp = client.infer(&good).expect("served after abuse");
+    assert_eq!(resp.logits.len(), 4);
+
+    // a well-FRAMED request whose payload is not a JPEG is not a
+    // protocol violation: it travels the pipeline and comes back as
+    // the typed `decode` wire code, connection intact
+    client.submit(b"definitely not a jpeg").expect("submit");
+    match client.recv().expect("reply") {
+        Reply::Err { code: WireCode::Decode, .. } => {}
+        other => panic!("expected decode error, got {other:?}"),
+    }
+    let resp = client.infer(&good).expect("connection survives a decode error");
+    assert_eq!(resp.logits.len(), 4);
+
+    let snap = frontend.metrics.snapshot();
+    assert_eq!(snap.protocol_errors, 5, "{snap}");
+    assert_eq!(frontend.metrics.responses_with(WireCode::Protocol), 5, "{snap}");
+    assert_eq!(frontend.metrics.responses_with(WireCode::Decode), 1, "{snap}");
+    assert_eq!(frontend.metrics.responses_with(WireCode::Ok), 2, "{snap}");
+    frontend.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn queue_full_arrives_as_its_wire_error_code() {
+    let params = ParamSet::init(&tiny_cfg(), 7);
+    // tiny queues + a cold engine (first batch pays the exploded
+    // precompute): flooding must shed load with the typed wire code
+    let server = Server::start_native(
+        engine(&params, NativeMode::Sparse),
+        PipelineConfig {
+            decode_workers: 1,
+            compute_workers: 1,
+            queue_capacity: 2,
+            decoded_capacity: 1,
+            max_batch: 1,
+        },
+    );
+    let frontend = listen(&server, 0, 128);
+    let bytes = files(1, 50).remove(0).0;
+
+    let mut client = Client::connect(frontend.local_addr()).expect("connect");
+    let total = 64usize;
+    for _ in 0..total {
+        client.submit(&bytes).expect("submit");
+    }
+    let (mut ok, mut queue_full) = (0usize, 0usize);
+    for _ in 0..total {
+        match client.recv().expect("reply") {
+            Reply::Ok(resp) => {
+                assert_eq!(resp.logits.len(), 4);
+                ok += 1;
+            }
+            Reply::Err { code: WireCode::QueueFull, .. } => queue_full += 1,
+            Reply::Err { code, message, .. } => {
+                panic!("unexpected error {}: {message}", code.label());
+            }
+        }
+    }
+    assert!(queue_full > 0, "flooding a capacity-2 queue must reject over the wire");
+    assert!(ok > 0, "admitted requests still serve");
+    assert_eq!(ok + queue_full, total);
+    assert_eq!(
+        frontend.metrics.responses_with(WireCode::QueueFull),
+        queue_full as u64
+    );
+    frontend.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn expired_deadline_budget_rejected_without_compute() {
+    let params = ParamSet::init(&tiny_cfg(), 9);
+    let server = Server::start_native(engine(&params, NativeMode::Sparse), PipelineConfig::default());
+    let frontend = listen(&server, 0, 8);
+    let bytes = files(1, 75).remove(0).0;
+
+    let mut client = Client::connect(frontend.local_addr()).expect("connect");
+    // a 1 µs budget is spent before the request clears admission (or at
+    // the latest before decode pickup) — never reaching a forward pass
+    client
+        .submit_with(&bytes, Some(Duration::from_micros(1)), 75)
+        .expect("submit");
+    match client.recv().expect("reply") {
+        Reply::Err { code: WireCode::DeadlineExceeded, .. } => {}
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    let pm = server.pipeline().unwrap().metrics.snapshot();
+    assert_eq!(pm.compute.processed, 0, "no kernel time spent on the dead request");
+    assert_eq!(pm.deadline_expired, 1, "{pm}");
+
+    // sanity: the same bytes with a generous budget serve fine
+    client
+        .submit_with(&bytes, Some(Duration::from_secs(600)), 75)
+        .expect("submit");
+    match client.recv().expect("reply") {
+        Reply::Ok(resp) => assert_eq!(resp.logits.len(), 4),
+        other => panic!("expected logits, got {other:?}"),
+    }
+    frontend.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn slow_start_gate_rejects_then_admits_after_warm_batches() {
+    let params = ParamSet::init(&tiny_cfg(), 11);
+    let pipeline = Arc::new(NativePipeline::start(
+        engine(&params, NativeMode::SparseResident),
+        PipelineConfig::default(),
+    ));
+    // standalone front end over a shared pipeline, gate needs 1 batch
+    let frontend = SocketFrontend::start(
+        pipeline.clone(),
+        FrontendConfig {
+            listen_addr: "127.0.0.1:0".into(),
+            warmup_batches: 1,
+            max_inflight: 8,
+        },
+    )
+    .expect("bind");
+    let bytes = files(1, 75).remove(0).0;
+
+    let mut client = Client::connect(frontend.local_addr()).expect("connect");
+    client.submit(&bytes).expect("submit");
+    match client.recv().expect("reply") {
+        Reply::Err { code: WireCode::WarmingUp, .. } => {}
+        other => panic!("cold cache must answer WarmingUp, got {other:?}"),
+    }
+
+    // in-process warm traffic bypasses the gate and serves one batch
+    pipeline.infer(bytes.clone()).expect("in-process warmup");
+
+    // the gate is open (and sticky) now
+    client.submit(&bytes).expect("submit");
+    match client.recv().expect("reply") {
+        Reply::Ok(resp) => assert_eq!(resp.logits.len(), 4),
+        other => panic!("warm cache must serve, got {other:?}"),
+    }
+    assert_eq!(frontend.metrics.responses_with(WireCode::WarmingUp), 1);
+    assert_eq!(frontend.metrics.responses_with(WireCode::Ok), 1);
+    frontend.shutdown();
+    drop(pipeline); // graceful drain via Drop
+}

@@ -2,12 +2,11 @@
 //! claim rests on (paper §5: "the sparsity of the JPEG format allows
 //! for faster processing ... with little to no penalty").
 //!
-//! Everything here runs without PJRT artifacts.  The deprecated
-//! forward shims are exercised deliberately: they pin the pre-refactor
-//! behavior the `Plan`/`Executor` API must reproduce bit for bit (see
-//! `plan_equivalence.rs` for the executor-level assertions).
-
-#![allow(deprecated)]
+//! Everything here runs without PJRT artifacts.  Network-level forwards
+//! run the single topology (`RESNET_PLAN`) under explicit executors —
+//! the deprecated shims this file used to pin were dropped one PR after
+//! the `Plan`/`Executor` redesign, per that PR's migration plan (see
+//! `plan_equivalence.rs` for the golden-logit regression anchor).
 
 use jpegdomain::data::{Dataset, Split, SynthKind};
 use jpegdomain::jpeg::codec;
@@ -16,14 +15,22 @@ use jpegdomain::jpeg_domain::conv::{
     jpeg_conv_exploded_sparse,
 };
 use jpegdomain::jpeg_domain::network::{
-    jpeg_forward, jpeg_forward_exploded_resident, jpeg_forward_exploded_sparse, ExplodedModel,
-    ResidencyTrace, RESIDENCY_POINTS,
+    ExplodedModel, ResidencyTrace, RESIDENCY_POINTS, RESNET_PLAN,
+};
+use jpegdomain::jpeg_domain::plan::{
+    Act, DccRef, PlanCtx, PlanObserver, SparseKernel, SparseResident,
 };
 use jpegdomain::jpeg_domain::relu::Method;
 use jpegdomain::jpeg_domain::{encode_tensor, qvec_flat};
 use jpegdomain::params::{ModelConfig, ParamSet};
 use jpegdomain::tensor::{SparseBlocks, Tensor};
 use jpegdomain::util::Rng;
+
+/// The canonical topology under an executor — the network-level entry
+/// the removed shims used to wrap.
+fn plan_ctx<'a>(p: &'a ParamSet, em: Option<&'a ExplodedModel>, qvec: &'a [f32; 64]) -> PlanCtx<'a> {
+    PlanCtx { params: p, exploded: em, qvec, num_freqs: 15, method: Method::Asm }
+}
 
 fn rand(shape: &[usize], seed: u64) -> Tensor {
     let mut rng = Rng::new(seed);
@@ -194,26 +201,27 @@ fn resident_logits_bit_identical_across_qualities() {
         let qvec = cis[0].qvec(0);
         let f0 = SparseBlocks::from_coeff_images(&cis);
         let em = ExplodedModel::precompute(&p, &qvec);
-        let boundary = jpeg_forward_exploded_sparse(&cfg, &p, &f0, &em, &qvec, 15, Method::Asm, 1);
+        let ctx = plan_ctx(&p, Some(&em), &qvec);
+        let input = Act::Sparse(f0.clone());
+        let boundary = RESNET_PLAN.run(&SparseKernel { threads: 1 }, &ctx, &input, None);
         let mut tr = ResidencyTrace::new();
-        let resident = jpeg_forward_exploded_resident(
-            &cfg,
-            &p,
-            &f0,
-            &em,
-            &qvec,
-            15,
-            Method::Asm,
-            1,
-            Some(&mut tr),
+        let resident = RESNET_PLAN.run(
+            &SparseResident { threads: 1, prune_epsilon: 0.0 },
+            &ctx,
+            &input,
+            Some(&mut tr as &mut dyn PlanObserver),
         );
         assert_eq!(
             resident, boundary,
             "quality {quality}: resident logits must be bit-identical"
         );
         // threading must not perturb the resident path either
-        let threaded =
-            jpeg_forward_exploded_resident(&cfg, &p, &f0, &em, &qvec, 15, Method::Asm, 3, None);
+        let threaded = RESNET_PLAN.run(
+            &SparseResident { threads: 3, prune_epsilon: 0.0 },
+            &ctx,
+            &input,
+            None,
+        );
         assert_eq!(resident, threaded, "quality {quality}: threaded resident");
         // the trace saw every observation point
         for (i, label) in RESIDENCY_POINTS.iter().enumerate() {
@@ -276,8 +284,18 @@ fn exploded_network_forward_matches_dcc_network() {
     let f0 = SparseBlocks::from_coeff_images(&cis);
     let em = ExplodedModel::precompute(&p, &qvec);
 
-    let want = jpeg_forward(&cfg, &p, &f0.to_dense(), &qvec, 15, Method::Asm);
-    let got = jpeg_forward_exploded_sparse(&cfg, &p, &f0, &em, &qvec, 15, Method::Asm, 2);
+    let want = RESNET_PLAN.run(
+        &DccRef,
+        &plan_ctx(&p, None, &qvec),
+        &Act::Dense(f0.to_dense()),
+        None,
+    );
+    let got = RESNET_PLAN.run(
+        &SparseKernel { threads: 2 },
+        &plan_ctx(&p, Some(&em), &qvec),
+        &Act::Sparse(f0.clone()),
+        None,
+    );
     assert_eq!(got.shape(), &[2, 10]);
     assert!(
         got.max_abs_diff(&want) < 1e-2,
