@@ -50,6 +50,35 @@ done
 echo "$PLAN_OUT" | grep -q "bit-identical: yes" \
     || { echo "plan-smoke FAILED: sparse vs resident not bit-identical"; exit 1; }
 
+echo "== axpy-smoke (kernel x Xi band grid, guard on the simd path) =="
+# tiny `repro exp axpy` run: every kernel variant must produce a row at
+# every measured band, predictions must never drift, and the guard line
+# fails the build if the resolved SIMD kernel loses to scalar8 at
+# quality 50 by more than 1.5x
+AXPY_OUT=$(./target/release/repro exp axpy --qualities 50 --batch 6 --iters 1 \
+    --out BENCH_AXPY_SMOKE.json)
+echo "$AXPY_OUT"
+for kernel in scalar4 scalar8 simd; do
+    for band in full limited; do
+        echo "$AXPY_OUT" | grep -qE "\| *50 *\| *$kernel *\| *$band *\|" \
+            || { echo "axpy-smoke FAILED: missing row $kernel/$band"; exit 1; }
+    done
+done
+if echo "$AXPY_OUT" | grep -q "DRIFTED"; then
+    echo "axpy-smoke FAILED: a kernel changed predictions"; exit 1
+fi
+echo "$AXPY_OUT" | grep -q "axpy-guard: ok" \
+    || { echo "axpy-smoke FAILED: simd kernel lost to scalar8 (see axpy-guard line)"; exit 1; }
+[ -f BENCH_AXPY_SMOKE.json ] \
+    || { echo "axpy-smoke FAILED: report not written"; exit 1; }
+rm -f BENCH_AXPY_SMOKE.json
+
+echo "== scalar-fallback build (--features no-simd compiles the vector paths out) =="
+# the portable path must stay green on hosts with no usable SIMD; a
+# build is enough — the runtime behavior is covered by the test suite's
+# fallback assertions
+cargo build --release --features no-simd
+
 echo "== socket-smoke (streaming front end, wire-level round trip) =="
 # start the socket front end on an ephemeral port (slow-start gate
 # warmed by one in-process batch), drive a short closed-loop burst over

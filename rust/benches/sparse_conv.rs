@@ -1,10 +1,12 @@
 //! Bench: the sparsity-aware exploded-conv engine — dense Algorithm-1
 //! gather+matmul vs the gather-free sparse kernel vs the threaded
-//! sparse kernel, on a real entropy-decoded quality-50 batch.
+//! sparse kernel, on a real entropy-decoded quality-50 batch; then the
+//! axpy kernel grid (scalar4 / scalar8 / simd) crossed with the Xi band
+//! policy (full / limited) over full sparse-resident forwards.
 //! Pure rust: runs without PJRT artifacts.
 //! `cargo bench --bench sparse_conv`
 //! Env: SC_QUALITY (50), SC_BATCH (40), SC_COUT (16), SC_THREADS (0 =
-//! auto), SC_ITERS (5).
+//! auto), SC_ITERS (5), SC_NF (8, phi budget of the axpy grid).
 
 use jpegdomain::bench_harness as bh;
 
@@ -13,13 +15,13 @@ fn env_usize(key: &str, default: usize) -> usize {
 }
 
 fn main() {
-    let r = bh::sparse_conv_ablation(
-        env_usize("SC_QUALITY", 50) as u8,
-        env_usize("SC_BATCH", 40),
-        env_usize("SC_COUT", 16),
-        env_usize("SC_THREADS", 0),
-        env_usize("SC_ITERS", 5),
-    );
+    let quality = env_usize("SC_QUALITY", 50) as u8;
+    let batch = env_usize("SC_BATCH", 40);
+    let threads = env_usize("SC_THREADS", 0);
+    let iters = env_usize("SC_ITERS", 5);
+
+    // group 1: dense vs sparse vs threaded-sparse single conv
+    let r = bh::sparse_conv_ablation(quality, batch, env_usize("SC_COUT", 16), threads, iters);
     bh::throughput::print_sparse_conv(&r);
     assert!(
         r.max_abs_diff_vs_dcc < 1e-3,
@@ -36,5 +38,37 @@ fn main() {
     println!(
         "\nsparse_conv bench OK (sparse {:.2}x dense, {:.2}x thread scaling at {} threads)",
         r.sparse_speedup, r.thread_scaling, r.threads
+    );
+
+    // group 2: axpy kernel x Xi band grid over full forwards (the PR-6
+    // tentpole measurement; same driver as `repro exp axpy`)
+    let k = bh::axpy_kernel_ablation(
+        &[quality],
+        batch,
+        iters,
+        threads,
+        env_usize("SC_NF", 8),
+    )
+    .expect("axpy kernel grid");
+    bh::print_axpy_kernels(&k);
+    for row in &k.rows {
+        assert!(
+            row.argmax_identical,
+            "{}/{} changed predictions vs scalar4/full",
+            row.kernel, row.band
+        );
+    }
+    assert!(
+        k.guard_speedup >= bh::AXPY_GUARD_MIN_RATIO,
+        "simd+band kernel lost to scalar8 by more than the guard \
+         ({:.2}x < {:.2}x)",
+        k.guard_speedup,
+        bh::AXPY_GUARD_MIN_RATIO
+    );
+    println!(
+        "\naxpy kernel bench OK (simd/scalar8 {:.2}x at quality {}, simd {})",
+        k.guard_speedup,
+        k.guard_quality,
+        if k.simd_available { "available" } else { "unavailable" }
     );
 }

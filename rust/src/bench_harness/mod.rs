@@ -11,10 +11,11 @@ pub mod throughput;
 pub use blocks::{fig4a, Fig4aRow};
 pub use model_exps::{fig4b, fig4c, table1, Fig4Row, Table1Row};
 pub use throughput::{
-    ablation_exploded, axpy_tiling_ablation, fig5, native_sparse_inference_throughput,
-    plan_executor_ablation, prune_epsilon_ablation, resident_forward_ablation,
-    sparse_conv_ablation, AblationReport, AxpyReport, Fig5Row, PlanAblationReport, PruneReport,
-    ResidentReport, SparseConvReport,
+    ablation_exploded, axpy_kernel_ablation, axpy_kernel_report_json, axpy_tiling_ablation, fig5,
+    native_sparse_inference_throughput, plan_executor_ablation, print_axpy_kernels,
+    prune_epsilon_ablation, resident_forward_ablation, sparse_conv_ablation, AblationReport,
+    AxpyKernelReport, AxpyKernelRow, AxpyReport, Fig5Row, PlanAblationReport, PruneReport,
+    ResidentReport, SparseConvReport, AXPY_GUARD_MIN_RATIO,
 };
 
 /// Markdown-ish row printing helper.

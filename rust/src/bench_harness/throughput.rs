@@ -15,7 +15,7 @@ use crate::data::{Dataset, Split, SynthKind};
 use crate::jpeg::codec;
 use crate::jpeg_domain::conv::{
     explode_conv, jpeg_conv_dcc, jpeg_conv_exploded_dense, jpeg_conv_exploded_sparse,
-    jpeg_conv_exploded_sparse_tiled, AxpyTiling,
+    jpeg_conv_exploded_sparse_with, simd_axpy_available, AxpyKernel,
 };
 use crate::jpeg_domain::network::{ExplodedModel, ResidencyTrace, RESNET_PLAN};
 use crate::jpeg_domain::plan::{
@@ -144,7 +144,7 @@ pub fn native_sparse_inference_throughput(
             };
             assert_eq!(f0.dims().1, cfg.in_channels);
             std::hint::black_box(RESNET_PLAN.run(
-                &SparseKernel { threads },
+                &SparseKernel::new(threads),
                 &ctx,
                 &Act::Sparse(f0),
                 None,
@@ -396,7 +396,7 @@ pub fn ablation_exploded(session: &Session, iters: usize) -> anyhow::Result<Abla
         let t0 = Instant::now();
         for _ in 0..iters {
             std::hint::black_box(RESNET_PLAN.run(
-                &SparseKernel { threads },
+                &SparseKernel::new(threads),
                 &ctx,
                 &sparse_input,
                 None,
@@ -410,7 +410,7 @@ pub fn ablation_exploded(session: &Session, iters: usize) -> anyhow::Result<Abla
     // -- sparse-resident: activations stay in SparseBlocks between layers --
     let mut tr = ResidencyTrace::new();
     RESNET_PLAN.run(
-        &SparseResident { threads: 1, prune_epsilon: 0.0 },
+        &SparseResident::new(1, 0.0),
         &ctx,
         &sparse_input,
         Some(&mut tr),
@@ -420,7 +420,7 @@ pub fn ablation_exploded(session: &Session, iters: usize) -> anyhow::Result<Abla
         let t0 = Instant::now();
         for _ in 0..iters {
             std::hint::black_box(RESNET_PLAN.run(
-                &SparseResident { threads, prune_epsilon: 0.0 },
+                &SparseResident::new(threads, 0.0),
                 &ctx,
                 &sparse_input,
                 None,
@@ -593,8 +593,10 @@ pub fn sparse_conv_ablation(
     }
 }
 
-/// The axpy inner-loop tiling before/after: PR-1's 4-wide unroll vs the
-/// 8-wide SIMD-width tiling, on a real entropy-decoded batch.
+/// The axpy inner-loop unroll before/after: PR-1's 4-wide unroll vs the
+/// 8-wide scalar unroll, on a real entropy-decoded batch.  Kept as the
+/// single-conv microbench behind `repro serve --bench` reports; the full
+/// kernel x band grid lives in [`axpy_kernel_ablation`].
 #[derive(Clone, Debug)]
 pub struct AxpyReport {
     pub quality: u8,
@@ -609,7 +611,7 @@ pub struct AxpyReport {
     pub max_abs_diff: f32,
 }
 
-/// Measure the 4-wide vs 8-wide sparse axpy kernels (single thread, so
+/// Measure the 4-wide vs 8-wide scalar axpy kernels (single thread, so
 /// the inner loop is the only variable).
 pub fn axpy_tiling_ablation(quality: u8, batch: usize, cout: usize, iters: usize) -> AxpyReport {
     let iters = iters.max(1);
@@ -630,20 +632,21 @@ pub fn axpy_tiling_ablation(quality: u8, batch: usize, cout: usize, iters: usize
     );
     let xi = explode_conv(&w, &qvec, 1);
 
-    let u4 = jpeg_conv_exploded_sparse_tiled(&f0, &xi, cout, 1, 1, AxpyTiling::Unroll4);
-    let u8w = jpeg_conv_exploded_sparse_tiled(&f0, &xi, cout, 1, 1, AxpyTiling::Unroll8);
+    let conv = |kernel: AxpyKernel| jpeg_conv_exploded_sparse_with(&f0, &xi, cout, 1, 1, kernel, 64);
+    let u4 = conv(AxpyKernel::Scalar4);
+    let u8w = conv(AxpyKernel::Scalar8);
     let max_abs_diff = u8w.max_abs_diff(&u4);
 
     let blocks = (n * c * bh * bw * iters) as f64;
-    let time = |tiling: AxpyTiling| {
+    let time = |kernel: AxpyKernel| {
         let t0 = Instant::now();
         for _ in 0..iters {
-            std::hint::black_box(jpeg_conv_exploded_sparse_tiled(&f0, &xi, cout, 1, 1, tiling));
+            std::hint::black_box(conv(kernel));
         }
         t0.elapsed().as_secs_f64()
     };
-    let s4 = time(AxpyTiling::Unroll4);
-    let s8 = time(AxpyTiling::Unroll8);
+    let s4 = time(AxpyKernel::Scalar4);
+    let s8 = time(AxpyKernel::Scalar8);
 
     AxpyReport {
         quality,
@@ -724,8 +727,8 @@ pub fn resident_forward_ablation(
         method: Method::Asm,
     };
     let input = Act::Sparse(f0.clone());
-    let boundary_exec = SparseKernel { threads };
-    let resident_exec = SparseResident { threads, prune_epsilon: 0.0 };
+    let boundary_exec = SparseKernel::new(threads);
+    let resident_exec = SparseResident::new(threads, 0.0);
 
     // correctness + layer densities first
     let boundary = RESNET_PLAN.run(&boundary_exec, &ctx, &input, None);
@@ -843,8 +846,8 @@ pub fn plan_executor_ablation(
     };
     let sparse_input = Act::Sparse(f0.clone());
     let dense_input = Act::Dense(f0.to_dense());
-    let sparse_exec = SparseKernel { threads };
-    let resident_exec = SparseResident { threads, prune_epsilon: 0.0 };
+    let sparse_exec = SparseKernel::new(threads);
+    let resident_exec = SparseResident::new(threads, 0.0);
 
     // correctness before throughput
     let l_sparse = RESNET_PLAN.run(&sparse_exec, &ctx, &sparse_input, None);
@@ -972,7 +975,7 @@ pub fn prune_epsilon_ablation(
 
     // the exact forward is the accuracy baseline
     let exact = RESNET_PLAN.run(
-        &SparseResident { threads, prune_epsilon: 0.0 },
+        &SparseResident::new(threads, 0.0),
         &ctx,
         &input,
         None,
@@ -982,7 +985,7 @@ pub fn prune_epsilon_ablation(
     let images = (batch * iters) as f64;
     let mut rows = Vec::new();
     for &eps in epsilons {
-        let exec = SparseResident { threads, prune_epsilon: eps.max(0.0) };
+        let exec = SparseResident::new(threads, eps.max(0.0));
         let mut tr = ResidencyTrace::new();
         let logits = RESNET_PLAN.run(&exec, &ctx, &input, Some(&mut tr));
         let preds = logits.argmax_last();
@@ -1055,6 +1058,190 @@ pub fn print_axpy(r: &AxpyReport) {
         ],
     );
     println!("max |unroll8 - unroll4| = {:.2e}", r.max_abs_diff);
+}
+
+/// One cell of the kernel x band grid: a full sparse-resident forward
+/// under one axpy kernel and one Xi column policy.
+#[derive(Clone, Debug)]
+pub struct AxpyKernelRow {
+    pub quality: u8,
+    /// `AxpyKernel::label()` of the requested kernel ("simd" is the
+    /// request; it resolves to scalar8 where SIMD is unavailable).
+    pub kernel: &'static str,
+    /// `"full"` (64 Xi columns) or `"limited"` (phi-truncated columns).
+    pub band: &'static str,
+    pub images_per_sec: f64,
+    /// Max |logits - scalar4/full logits| at the same quality.  Exactly
+    /// 0.0 for scalar rows (band limiting is bit-exact); bounded by the
+    /// documented reassociation epsilon for SIMD rows.
+    pub max_abs_diff: f32,
+    /// Predictions match the scalar4/full forward exactly.
+    pub argmax_identical: bool,
+}
+
+/// The PR-6 tentpole measurement: the axpy kernel grid
+/// (scalar4 / scalar8 / simd) crossed with the Xi band policy
+/// (full / limited) over full sparse-resident forwards, per quality.
+/// This is what `repro exp axpy` prints and writes to `BENCH_PR6.json`.
+#[derive(Clone, Debug)]
+pub struct AxpyKernelReport {
+    pub batch: usize,
+    pub threads: usize,
+    /// phi budget of the forward; the column trim is
+    /// `band_cutoff(num_freqs)` wide (identity at 15).
+    pub num_freqs: usize,
+    /// Whether `AxpyKernel::Simd` resolves to a real vector path here.
+    pub simd_available: bool,
+    /// 3 kernels x 2 bands rows per quality, qualities in input order.
+    pub rows: Vec<AxpyKernelRow>,
+    /// simd/limited images/s over scalar8/full images/s at
+    /// [`AxpyKernelReport::guard_quality`] — the ci smoke guard ratio.
+    pub guard_speedup: f64,
+    /// Quality the guard ratio is computed at (50 when measured).
+    pub guard_quality: u8,
+}
+
+/// The ci guard's floor on `guard_speedup`: the resolved SIMD + band
+/// kernel may not lose to the scalar8 baseline by more than 1.5x (where
+/// SIMD is unavailable both sides run scalar8 and the ratio sits near
+/// 1.0, so the guard stays meaningful on any host).
+pub const AXPY_GUARD_MIN_RATIO: f64 = 1.0 / 1.5;
+
+/// Run the kernel x band grid on quality-`qualities` synthetic mnist
+/// batches.  `threads = 0` resolves to the hardware parallelism;
+/// correctness of every cell is checked against the scalar4/full
+/// forward before anything is timed.
+pub fn axpy_kernel_ablation(
+    qualities: &[u8],
+    batch: usize,
+    iters: usize,
+    threads: usize,
+    num_freqs: usize,
+) -> anyhow::Result<AxpyKernelReport> {
+    let threads = crate::config::resolve_threads(threads);
+    let iters = iters.max(1);
+    let batch = batch.max(1);
+    anyhow::ensure!(!qualities.is_empty(), "need at least one quality");
+    anyhow::ensure!((1..=15).contains(&num_freqs), "num_freqs must be in 1..=15");
+    let kernels = [AxpyKernel::Scalar4, AxpyKernel::Scalar8, AxpyKernel::Simd];
+    let mut rows = Vec::new();
+    for &quality in qualities {
+        let (params, qvec, f0, em) = native_forward_fixture(quality, batch, 59)?;
+        let ctx = PlanCtx {
+            params: &params,
+            exploded: Some(&em),
+            qvec: &qvec,
+            num_freqs,
+            method: Method::Asm,
+        };
+        let input = Act::Sparse(f0.clone());
+        let exec = |axpy: AxpyKernel, band_limited: bool| SparseResident {
+            threads,
+            prune_epsilon: 0.0,
+            axpy,
+            band_limited,
+        };
+        // the correctness anchor of the whole grid
+        let baseline = RESNET_PLAN.run(&exec(AxpyKernel::Scalar4, false), &ctx, &input, None);
+        let base_preds = baseline.argmax_last();
+        let images = (batch * iters) as f64;
+        for kernel in kernels {
+            for (band, band_limited) in [("full", false), ("limited", true)] {
+                let e = exec(kernel, band_limited);
+                let logits = RESNET_PLAN.run(&e, &ctx, &input, None);
+                let t0 = Instant::now();
+                for _ in 0..iters {
+                    std::hint::black_box(RESNET_PLAN.run(&e, &ctx, &input, None));
+                }
+                rows.push(AxpyKernelRow {
+                    quality,
+                    kernel: kernel.label(),
+                    band,
+                    images_per_sec: images / t0.elapsed().as_secs_f64(),
+                    max_abs_diff: logits.max_abs_diff(&baseline),
+                    argmax_identical: logits.argmax_last() == base_preds,
+                });
+            }
+        }
+    }
+    let guard_quality = if qualities.contains(&50) { 50 } else { qualities[0] };
+    let ips = |kernel: &str, band: &str| {
+        rows.iter()
+            .find(|r| r.quality == guard_quality && r.kernel == kernel && r.band == band)
+            .map_or(0.0, |r| r.images_per_sec)
+    };
+    let scalar8 = ips("scalar8", "full");
+    let guard_speedup = if scalar8 > 0.0 { ips("simd", "limited") / scalar8 } else { 0.0 };
+    Ok(AxpyKernelReport {
+        batch,
+        threads,
+        num_freqs,
+        simd_available: simd_axpy_available(),
+        rows,
+        guard_speedup,
+        guard_quality,
+    })
+}
+
+pub fn print_axpy_kernels(r: &AxpyKernelReport) {
+    super::print_table(
+        &format!(
+            "Axpy kernel x Xi band ablation (batch {}, {} threads, phi {}, simd {})",
+            r.batch,
+            r.threads,
+            r.num_freqs,
+            if r.simd_available { "available" } else { "unavailable" }
+        ),
+        &["quality", "kernel", "xi band", "images/s", "max logit dev", "argmax"],
+        &r.rows
+            .iter()
+            .map(|row| {
+                vec![
+                    format!("{}", row.quality),
+                    row.kernel.to_string(),
+                    row.band.to_string(),
+                    format!("{:.1}", row.images_per_sec),
+                    format!("{:.2e}", row.max_abs_diff),
+                    if row.argmax_identical { "identical".into() } else { "DRIFTED".into() },
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    let status = if r.guard_speedup >= AXPY_GUARD_MIN_RATIO { "ok" } else { "FAIL" };
+    println!(
+        "axpy-guard: {status} simd/scalar8 = {:.2}x at quality {}",
+        r.guard_speedup, r.guard_quality
+    );
+}
+
+/// `BENCH_PR6.json` document for an [`AxpyKernelReport`].
+pub fn axpy_kernel_report_json(r: &AxpyKernelReport) -> crate::json::Json {
+    use crate::json::Json;
+    use std::collections::BTreeMap;
+    let rows: Vec<Json> = r
+        .rows
+        .iter()
+        .map(|row| {
+            let mut o = BTreeMap::new();
+            o.insert("quality".into(), Json::Num(row.quality as f64));
+            o.insert("kernel".into(), Json::Str(row.kernel.into()));
+            o.insert("band".into(), Json::Str(row.band.into()));
+            o.insert("images_per_sec".into(), Json::Num(row.images_per_sec));
+            o.insert("max_abs_diff".into(), Json::Num(row.max_abs_diff as f64));
+            o.insert("argmax_identical".into(), Json::Bool(row.argmax_identical));
+            Json::Obj(o)
+        })
+        .collect();
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("axpy_kernel_ablation".into()));
+    doc.insert("batch".into(), Json::Num(r.batch as f64));
+    doc.insert("threads".into(), Json::Num(r.threads as f64));
+    doc.insert("num_freqs".into(), Json::Num(r.num_freqs as f64));
+    doc.insert("simd_available".into(), Json::Bool(r.simd_available));
+    doc.insert("guard_speedup".into(), Json::Num(r.guard_speedup));
+    doc.insert("guard_quality".into(), Json::Num(r.guard_quality as f64));
+    doc.insert("rows".into(), Json::Arr(rows));
+    Json::Obj(doc)
 }
 
 pub fn print_sparse_conv(r: &SparseConvReport) {
@@ -1174,6 +1361,43 @@ mod tests {
         // one timing per plan node, via the observer hook
         assert_eq!(r.op_timings_ms.len(), RESNET_PLAN.len());
         print_plan_ablation(&r); // smoke the printer
+    }
+
+    #[test]
+    fn axpy_kernel_grid_is_correct_before_fast() {
+        let r = axpy_kernel_ablation(&[50], 2, 1, 1, 8).unwrap();
+        assert_eq!(r.guard_quality, 50);
+        assert_eq!(r.rows.len(), 6, "3 kernels x 2 bands");
+        assert_eq!(r.simd_available, simd_axpy_available());
+        for row in &r.rows {
+            assert!(row.images_per_sec > 0.0, "{} {}", row.kernel, row.band);
+            assert!(
+                row.argmax_identical,
+                "{} {} changed predictions",
+                row.kernel, row.band
+            );
+        }
+        // band limiting is bit-exact: the scalar4 rows ARE the baseline
+        // arithmetic, full and limited alike
+        for row in r.rows.iter().filter(|row| row.kernel == "scalar4") {
+            assert_eq!(row.max_abs_diff, 0.0, "scalar4/{} must be exact", row.band);
+        }
+        // wider kernels reassociate the sum: bounded drift only
+        for row in r.rows.iter().filter(|row| row.kernel != "scalar4") {
+            assert!(
+                row.max_abs_diff < 1e-2,
+                "{}/{} dev {}",
+                row.kernel,
+                row.band,
+                row.max_abs_diff
+            );
+        }
+        assert!(r.guard_speedup > 0.0);
+        print_axpy_kernels(&r); // smoke the printer + guard line
+        let doc = axpy_kernel_report_json(&r);
+        assert_eq!(doc.get("bench").as_str(), Some("axpy_kernel_ablation"));
+        assert_eq!(doc.get("rows").as_arr().map(|a| a.len()), Some(6));
+        assert_eq!(doc.get("simd_available").as_bool(), Some(r.simd_available));
     }
 
     #[test]

@@ -154,6 +154,11 @@ pub struct RunConfig {
     /// (`0.0` = exact; the paper's "little to no penalty" knob,
     /// measured by `repro exp prune`).
     pub prune_epsilon: f32,
+    /// Inner-loop axpy kernel of the sparse conv paths:
+    /// "scalar4" | "scalar8" | "simd" | "auto" (parsed into
+    /// `jpeg_domain::conv::AxpyKernel` at use sites; "auto" picks SIMD
+    /// when the CPU supports it).  Measured by `repro exp axpy`.
+    pub axpy: String,
 }
 
 impl Default for RunConfig {
@@ -165,6 +170,7 @@ impl Default for RunConfig {
             seed: 0,
             threads: 0,
             prune_epsilon: 0.0,
+            axpy: "auto".to_string(),
         }
     }
 }
@@ -183,6 +189,7 @@ impl RunConfig {
             seed: cfg.usize_or("run", "seed", d.seed as usize) as u64,
             threads: cfg.usize_or("run", "threads", d.threads),
             prune_epsilon: cfg.f32_or("run", "prune_epsilon", d.prune_epsilon),
+            axpy: cfg.str_or("run", "axpy", &d.axpy),
         }
     }
 
@@ -308,9 +315,12 @@ verbose = true
         assert_eq!(r.seed, 3);
         assert_eq!(r.threads, 0, "threads defaults to auto");
         assert_eq!(r.prune_epsilon, 0.0, "prune defaults to exact");
-        let c2 = Config::parse("[run]\nprune_epsilon = 0.001\n").unwrap();
+        assert_eq!(r.axpy, "auto", "axpy kernel defaults to auto");
+        let c2 = Config::parse("[run]\nprune_epsilon = 0.001\naxpy = \"scalar8\"\n").unwrap();
         let r2 = RunConfig::from_config(&c2);
         assert!((r2.prune_epsilon - 0.001).abs() < 1e-9);
+        assert_eq!(r2.axpy, "scalar8");
+        assert!(r2.axpy.parse::<crate::jpeg_domain::conv::AxpyKernel>().is_ok());
     }
 
     #[test]

@@ -46,19 +46,33 @@ pub fn band_mask(num_freqs: usize) -> [f32; 64] {
     m
 }
 
+/// `BAND_CUTOFF[num_freqs]` = leading zigzag coefficients kept by a
+/// `num_freqs`-band phi mask; index 0 is unused (a zero-band mask is
+/// rejected by [`band_mask`]).  Precomputed because the band-limited
+/// conv kernel consults the cutoff on every conv call.
+pub const BAND_CUTOFF: [usize; 16] = {
+    let mut t = [0usize; 16];
+    let mut nf = 1;
+    while nf < 16 {
+        // coefficients of bands < nf: band b holds min(b+1, 8, 15-b)
+        let mut k = 0;
+        while k < 64 && band(k) < nf {
+            k += 1;
+        }
+        t[nf] = k;
+        nf += 1;
+    }
+    t
+};
+
 /// Number of leading zigzag coefficients kept by
 /// [`band_mask`]`(num_freqs)`.  Zigzag order enumerates anti-diagonals
 /// in ascending band order, so the band mask is always a zigzag
 /// *prefix*: masking a sparse run is a truncation at this cutoff
 /// (`SparseBlocks::truncate_runs`), never a scatter.
 pub fn band_cutoff(num_freqs: usize) -> usize {
-    let m = band_mask(num_freqs);
-    let cut = m.iter().position(|&v| v == 0.0).unwrap_or(64);
-    debug_assert!(
-        m[cut..].iter().all(|&v| v == 0.0),
-        "band mask must be a zigzag prefix"
-    );
-    cut
+    assert!((1..=15).contains(&num_freqs), "num_freqs in 1..=15");
+    BAND_CUTOFF[num_freqs]
 }
 
 /// Reorder a raster block into zigzag order.

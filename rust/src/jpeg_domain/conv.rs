@@ -159,18 +159,28 @@ fn neighbor(
     }
 }
 
-/// Reorder row-major conv output rows `(N*Bho*Bwo, Cout*64)` into the
-/// coefficient layout `(N, Cout, Bho, Bwo, 64)` with block-slice copies.
-fn rows_to_coeff_tensor(rows: &[f32], n: usize, cout: usize, bho: usize, bwo: usize) -> Tensor {
-    let xw = cout * 64;
-    let mut res = vec![0.0f32; n * xw * bho * bwo];
+/// Reorder row-major conv output rows `(N*Bho*Bwo, Cout*out_cut)` into
+/// the coefficient layout `(N, Cout, Bho, Bwo, 64)` with block-slice
+/// copies.  `out_cut < 64` means the rows came from a column-trimmed Xi
+/// (see [`band_limit_xi`]); the untouched high-band coefficients stay
+/// exactly zero.
+fn rows_to_coeff_tensor(
+    rows: &[f32],
+    n: usize,
+    cout: usize,
+    bho: usize,
+    bwo: usize,
+    out_cut: usize,
+) -> Tensor {
+    let xw = cout * out_cut;
+    let mut res = vec![0.0f32; n * cout * bho * bwo * 64];
     for b in 0..n {
         for oy in 0..bho {
             for ox in 0..bwo {
                 let src = &rows[((b * bho + oy) * bwo + ox) * xw..][..xw];
                 for co in 0..cout {
                     let dst = ((((b * cout + co) * bho) + oy) * bwo + ox) * 64;
-                    res[dst..dst + 64].copy_from_slice(&src[co * 64..(co + 1) * 64]);
+                    res[dst..dst + out_cut].copy_from_slice(&src[co * out_cut..][..out_cut]);
                 }
             }
         }
@@ -178,18 +188,117 @@ fn rows_to_coeff_tensor(rows: &[f32], n: usize, cout: usize, bho: usize, bwo: us
     Tensor::from_vec(&[n, cout, bho, bwo, 64], res)
 }
 
-/// Inner-loop tiling width of the sparse axpy kernel.
+/// Inner-loop kernel of the sparse axpy accumulation
+/// `y_row += sum_t v_t * Xi[k_t, :]`.
 ///
-/// The accumulation `y_row += sum_t v_t * Xi[k_t, :]` is tiled so each
-/// pass over the output row consumes several nonzeros at once (more ILP
-/// / SIMD lanes per memory traversal of `orow`).  `Unroll8` is the
-/// default; `Unroll4` (the PR-1 kernel) is kept so before/after stays a
-/// measured ablation (`bench_harness::throughput::axpy_tiling_ablation`,
-/// recorded in `BENCH_PR2.json`).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum AxpyTiling {
-    Unroll4,
-    Unroll8,
+/// `Scalar4` / `Scalar8` are the portable unrolled-scalar kernels (the
+/// PR-1 and PR-2 tilings, kept so before/after stays a measured
+/// ablation).  `Simd` is the explicit `std::arch` path — AVX2+FMA on
+/// x86-64 (runtime-detected), NEON on aarch64 — and falls back to
+/// `Scalar8` when the running CPU lacks the features or the crate was
+/// built with the `no-simd` feature.  `Auto` (the default everywhere)
+/// picks `Simd` when available, else `Scalar8`.
+///
+/// Numerics: the scalar kernels and the band-limited Xi trim are
+/// bit-exact with respect to each kernel's own baseline ordering; the
+/// SIMD path uses FMA and a different accumulation association, so it
+/// is only guaranteed to match within a small reassociation epsilon
+/// (see `tests/sparse_equivalence.rs::SIMD_LOGIT_EPSILON`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum AxpyKernel {
+    /// 4-wide scalar unroll (one pass over `orow` per 4 nonzeros).
+    Scalar4,
+    /// 8-wide scalar unroll.
+    Scalar8,
+    /// `std::arch` vector path (AVX2/FMA or NEON); `Scalar8` fallback.
+    Simd,
+    /// Runtime pick: `Simd` when available, else `Scalar8`.
+    #[default]
+    Auto,
+}
+
+impl AxpyKernel {
+    /// The kernel that will actually run: `Auto` resolves to `Simd`
+    /// when the CPU path is available, and a `Simd` request downgrades
+    /// to `Scalar8` when it is not.  Never returns `Auto`.
+    pub fn effective(self) -> AxpyKernel {
+        match self {
+            AxpyKernel::Scalar4 => AxpyKernel::Scalar4,
+            AxpyKernel::Scalar8 => AxpyKernel::Scalar8,
+            AxpyKernel::Simd | AxpyKernel::Auto => {
+                if simd_axpy_available() {
+                    AxpyKernel::Simd
+                } else {
+                    AxpyKernel::Scalar8
+                }
+            }
+        }
+    }
+
+    /// Stable lowercase name (CLI / config / bench-row spelling).
+    pub fn label(self) -> &'static str {
+        match self {
+            AxpyKernel::Scalar4 => "scalar4",
+            AxpyKernel::Scalar8 => "scalar8",
+            AxpyKernel::Simd => "simd",
+            AxpyKernel::Auto => "auto",
+        }
+    }
+}
+
+impl std::str::FromStr for AxpyKernel {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "scalar4" | "unroll4" => Ok(AxpyKernel::Scalar4),
+            "scalar8" | "unroll8" => Ok(AxpyKernel::Scalar8),
+            "simd" => Ok(AxpyKernel::Simd),
+            "auto" => Ok(AxpyKernel::Auto),
+            other => Err(format!(
+                "unknown axpy kernel {other:?} (scalar4|scalar8|simd|auto)"
+            )),
+        }
+    }
+}
+
+/// Whether the explicit SIMD axpy path can run on this CPU.  x86-64
+/// requires AVX2 and FMA (checked at runtime — compile-time `-C
+/// target-feature` is not assumed); NEON is baseline on aarch64.
+/// Building with `--features no-simd` compiles the vector paths out
+/// entirely, which keeps the portable scalar fallback honest in CI.
+pub fn simd_axpy_available() -> bool {
+    #[cfg(all(target_arch = "x86_64", not(feature = "no-simd")))]
+    {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+    #[cfg(all(target_arch = "aarch64", not(feature = "no-simd")))]
+    {
+        true
+    }
+    #[cfg(not(any(
+        all(target_arch = "x86_64", not(feature = "no-simd")),
+        all(target_arch = "aarch64", not(feature = "no-simd"))
+    )))]
+    {
+        false
+    }
+}
+
+/// One 4-wide pass at nonzero offset `t` (consumes exactly nonzeros
+/// `t..t+4`); the shared building block of both scalar unrolls.
+#[inline]
+fn axpy_pass4(orow: &mut [f32], xd: &[f32], xw: usize, base: usize, ks: &[u8], vs: &[f32], t: usize) {
+    let x0 = &xd[(base + ks[t] as usize) * xw..][..xw];
+    let x1 = &xd[(base + ks[t + 1] as usize) * xw..][..xw];
+    let x2 = &xd[(base + ks[t + 2] as usize) * xw..][..xw];
+    let x3 = &xd[(base + ks[t + 3] as usize) * xw..][..xw];
+    let (v0, v1, v2, v3) = (vs[t], vs[t + 1], vs[t + 2], vs[t + 3]);
+    for (o, (((&a0, &a1), &a2), &a3)) in orow
+        .iter_mut()
+        .zip(x0.iter().zip(x1).zip(x2).zip(x3))
+    {
+        *o += v0 * a0 + v1 * a1 + v2 * a2 + v3 * a3;
+    }
 }
 
 /// 4-wide accumulation: one pass over `orow` per 4 nonzeros.
@@ -197,25 +306,16 @@ pub enum AxpyTiling {
 fn axpy_unroll4(orow: &mut [f32], xd: &[f32], xw: usize, base: usize, ks: &[u8], vs: &[f32]) {
     let mut t = 0;
     while t + 4 <= ks.len() {
-        let x0 = &xd[(base + ks[t] as usize) * xw..][..xw];
-        let x1 = &xd[(base + ks[t + 1] as usize) * xw..][..xw];
-        let x2 = &xd[(base + ks[t + 2] as usize) * xw..][..xw];
-        let x3 = &xd[(base + ks[t + 3] as usize) * xw..][..xw];
-        let (v0, v1, v2, v3) = (vs[t], vs[t + 1], vs[t + 2], vs[t + 3]);
-        for (o, (((&a0, &a1), &a2), &a3)) in orow
-            .iter_mut()
-            .zip(x0.iter().zip(x1).zip(x2).zip(x3))
-        {
-            *o += v0 * a0 + v1 * a1 + v2 * a2 + v3 * a3;
-        }
+        axpy_pass4(orow, xd, xw, base, ks, vs, t);
         t += 4;
     }
     axpy_tail(orow, xd, xw, base, ks, vs, t);
 }
 
-/// 8-wide accumulation: one pass over `orow` per 8 nonzeros (SIMD-width
-/// tiling of the axpy inner loop; at quality 50 most blocks store 4-16
-/// nonzeros, so a block is usually one or two passes).
+/// 8-wide accumulation: one pass over `orow` per 8 nonzeros (at quality
+/// 50 most blocks store 4-16 nonzeros, so a block is usually one or two
+/// passes).  The remainder takes at most one 4-wide pass, then the one
+/// shared scalar tail — a single delegation, no re-slicing.
 #[inline]
 fn axpy_unroll8(orow: &mut [f32], xd: &[f32], xw: usize, base: usize, ks: &[u8], vs: &[f32]) {
     let mut t = 0;
@@ -236,11 +336,14 @@ fn axpy_unroll8(orow: &mut [f32], xd: &[f32], xw: usize, base: usize, ks: &[u8],
         }
         t += 8;
     }
-    // remainder (< 8 nonzeros): the 4-wide kernel handles its own tail
-    axpy_unroll4(orow, xd, xw, base, &ks[t..], &vs[t..]);
+    if t + 4 <= ks.len() {
+        axpy_pass4(orow, xd, xw, base, ks, vs, t);
+        t += 4;
+    }
+    axpy_tail(orow, xd, xw, base, ks, vs, t);
 }
 
-/// Scalar tail shared by both tilings.
+/// Scalar tail shared by every kernel: nonzeros `t..` one at a time.
 #[inline]
 fn axpy_tail(
     orow: &mut [f32],
@@ -261,12 +364,217 @@ fn axpy_tail(
     }
 }
 
+/// Vector axpy front door: dispatches to the per-arch `std::arch`
+/// kernel.  Callers must have routed through [`AxpyKernel::effective`],
+/// which only selects `Simd` after [`simd_axpy_available`] says yes —
+/// that runtime check is what makes the `unsafe` feature-gated calls
+/// sound.
+#[inline]
+fn axpy_simd(orow: &mut [f32], xd: &[f32], xw: usize, base: usize, ks: &[u8], vs: &[f32]) {
+    #[cfg(all(target_arch = "x86_64", not(feature = "no-simd")))]
+    unsafe {
+        axpy_avx2(orow, xd, xw, base, ks, vs)
+    }
+    #[cfg(all(target_arch = "aarch64", not(feature = "no-simd")))]
+    unsafe {
+        axpy_neon(orow, xd, xw, base, ks, vs)
+    }
+    #[cfg(not(any(
+        all(target_arch = "x86_64", not(feature = "no-simd")),
+        all(target_arch = "aarch64", not(feature = "no-simd"))
+    )))]
+    axpy_unroll8(orow, xd, xw, base, ks, vs)
+}
+
+/// AVX2+FMA axpy: 4 nonzeros per pass, 8 f32 lanes per step, FMA
+/// accumulation.  `orow` (the output buffer) and `xd` (the Xi data)
+/// are disjoint slices, so the raw-pointer loop bodies never alias;
+/// every offset stays inside the bounds-checked row slices taken up
+/// front.
+#[cfg(all(target_arch = "x86_64", not(feature = "no-simd")))]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn axpy_avx2(orow: &mut [f32], xd: &[f32], xw: usize, base: usize, ks: &[u8], vs: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = orow.len();
+    let op = orow.as_mut_ptr();
+    let mut t = 0;
+    while t + 4 <= ks.len() {
+        let x0 = xd[(base + ks[t] as usize) * xw..][..n].as_ptr();
+        let x1 = xd[(base + ks[t + 1] as usize) * xw..][..n].as_ptr();
+        let x2 = xd[(base + ks[t + 2] as usize) * xw..][..n].as_ptr();
+        let x3 = xd[(base + ks[t + 3] as usize) * xw..][..n].as_ptr();
+        let v0 = _mm256_set1_ps(vs[t]);
+        let v1 = _mm256_set1_ps(vs[t + 1]);
+        let v2 = _mm256_set1_ps(vs[t + 2]);
+        let v3 = _mm256_set1_ps(vs[t + 3]);
+        let mut j = 0;
+        while j + 8 <= n {
+            let mut acc = _mm256_loadu_ps(op.add(j));
+            acc = _mm256_fmadd_ps(v0, _mm256_loadu_ps(x0.add(j)), acc);
+            acc = _mm256_fmadd_ps(v1, _mm256_loadu_ps(x1.add(j)), acc);
+            acc = _mm256_fmadd_ps(v2, _mm256_loadu_ps(x2.add(j)), acc);
+            acc = _mm256_fmadd_ps(v3, _mm256_loadu_ps(x3.add(j)), acc);
+            _mm256_storeu_ps(op.add(j), acc);
+            j += 8;
+        }
+        while j < n {
+            *op.add(j) += vs[t] * *x0.add(j)
+                + vs[t + 1] * *x1.add(j)
+                + vs[t + 2] * *x2.add(j)
+                + vs[t + 3] * *x3.add(j);
+            j += 1;
+        }
+        t += 4;
+    }
+    while t < ks.len() {
+        let x = xd[(base + ks[t] as usize) * xw..][..n].as_ptr();
+        let v = _mm256_set1_ps(vs[t]);
+        let vv = vs[t];
+        let mut j = 0;
+        while j + 8 <= n {
+            let acc = _mm256_fmadd_ps(v, _mm256_loadu_ps(x.add(j)), _mm256_loadu_ps(op.add(j)));
+            _mm256_storeu_ps(op.add(j), acc);
+            j += 8;
+        }
+        while j < n {
+            *op.add(j) += vv * *x.add(j);
+            j += 1;
+        }
+        t += 1;
+    }
+}
+
+/// NEON axpy: 4 nonzeros per pass, 4 f32 lanes per step, fused
+/// multiply-add via `vfmaq_n_f32`.  Same aliasing argument as the AVX2
+/// kernel.
+#[cfg(all(target_arch = "aarch64", not(feature = "no-simd")))]
+#[target_feature(enable = "neon")]
+unsafe fn axpy_neon(orow: &mut [f32], xd: &[f32], xw: usize, base: usize, ks: &[u8], vs: &[f32]) {
+    use std::arch::aarch64::*;
+    let n = orow.len();
+    let op = orow.as_mut_ptr();
+    let mut t = 0;
+    while t + 4 <= ks.len() {
+        let x0 = xd[(base + ks[t] as usize) * xw..][..n].as_ptr();
+        let x1 = xd[(base + ks[t + 1] as usize) * xw..][..n].as_ptr();
+        let x2 = xd[(base + ks[t + 2] as usize) * xw..][..n].as_ptr();
+        let x3 = xd[(base + ks[t + 3] as usize) * xw..][..n].as_ptr();
+        let (v0, v1, v2, v3) = (vs[t], vs[t + 1], vs[t + 2], vs[t + 3]);
+        let mut j = 0;
+        while j + 4 <= n {
+            let mut acc = vld1q_f32(op.add(j));
+            acc = vfmaq_n_f32(acc, vld1q_f32(x0.add(j)), v0);
+            acc = vfmaq_n_f32(acc, vld1q_f32(x1.add(j)), v1);
+            acc = vfmaq_n_f32(acc, vld1q_f32(x2.add(j)), v2);
+            acc = vfmaq_n_f32(acc, vld1q_f32(x3.add(j)), v3);
+            vst1q_f32(op.add(j), acc);
+            j += 4;
+        }
+        while j < n {
+            *op.add(j) += v0 * *x0.add(j) + v1 * *x1.add(j) + v2 * *x2.add(j) + v3 * *x3.add(j);
+            j += 1;
+        }
+        t += 4;
+    }
+    while t < ks.len() {
+        let x = xd[(base + ks[t] as usize) * xw..][..n].as_ptr();
+        let v = vs[t];
+        let mut j = 0;
+        while j + 4 <= n {
+            let acc = vfmaq_n_f32(vld1q_f32(op.add(j)), vld1q_f32(x.add(j)), v);
+            vst1q_f32(op.add(j), acc);
+            j += 4;
+        }
+        while j < n {
+            *op.add(j) += v * *x.add(j);
+            j += 1;
+        }
+        t += 1;
+    }
+}
+
+/// Geometry of a (possibly band-trimmed) exploded map.
+///
+/// A full map is `(9*Cin*64, Cout*64)`.  Band limiting shrinks both
+/// axes: `in_cut` keeps only the first `in_cut` zigzag rows of each
+/// `(delta, ci)` 64-row segment (sound whenever every stored input
+/// coefficient has zigzag index `< in_cut` — the batch-wide EOB cursor,
+/// [`SparseBlocks::band_cursor`], guarantees that by construction), and
+/// `out_cut` keeps only the first `out_cut` zigzag columns of each
+/// cout 64-column segment (sound whenever the downstream phi mask
+/// discards the rest — `jpeg::zigzag::band_cutoff`).  The surviving
+/// panel is contiguous, so the axpy kernels run on it unchanged and
+/// the live working set shrinks toward L1/L2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct XiBand {
+    /// Live zigzag rows per `(delta, ci)` input segment (1..=64).
+    pub in_cut: usize,
+    /// Live zigzag columns per cout output segment (1..=64).
+    pub out_cut: usize,
+}
+
+impl XiBand {
+    /// The untrimmed layout.
+    pub const FULL: XiBand = XiBand { in_cut: 64, out_cut: 64 };
+
+    /// Whether this is the untrimmed `(9*Cin*64, Cout*64)` layout.
+    pub fn is_full(self) -> bool {
+        self.in_cut == 64 && self.out_cut == 64
+    }
+}
+
+/// Trim an exploded map to its live band panel: rows bounded by the
+/// input's EOB cursor, columns by the downstream phi cutoff.  Returns
+/// the map to feed the kernel (borrowed untouched when no trim
+/// applies — the full-band path pays nothing) plus the resulting
+/// geometry.
+///
+/// Dropping row `(delta*c + ci)*64 + k` with `k >= in_cut` is exact
+/// because no stored input coefficient can select it; dropping column
+/// `co*64 + k` with `k >= out_cut` is exact *for the caller's
+/// pipeline* only when everything downstream provably ignores those
+/// coefficients (the executors gate this on their `band_limited`
+/// flag — see `plan::SparseKernel`).
+fn band_limit_xi<'a>(
+    f: &SparseBlocks,
+    xi: &'a Tensor,
+    cout: usize,
+    out_cut: usize,
+) -> (std::borrow::Cow<'a, Tensor>, XiBand) {
+    let (_, c, _, _) = f.dims();
+    let in_cut = f.band_cursor().max(1);
+    let band = XiBand { in_cut, out_cut };
+    if band.is_full() {
+        return (std::borrow::Cow::Borrowed(xi), band);
+    }
+    let xd = xi.data();
+    let full_w = cout * 64;
+    let xw = cout * out_cut;
+    let mut trimmed = vec![0.0f32; 9 * c * in_cut * xw];
+    for seg in 0..9 * c {
+        for k in 0..in_cut {
+            let src = &xd[(seg * 64 + k) * full_w..][..full_w];
+            let dst = &mut trimmed[(seg * in_cut + k) * xw..][..xw];
+            for co in 0..cout {
+                dst[co * out_cut..][..out_cut].copy_from_slice(&src[co * 64..][..out_cut]);
+            }
+        }
+    }
+    (
+        std::borrow::Cow::Owned(Tensor::from_vec(&[9 * c * in_cut, xw], trimmed)),
+        band,
+    )
+}
+
 /// Gather-free kernel core: compute output rows `[r0, r0 + out.len() /
-/// (cout*64))` into `out`, walking only stored nonzeros of each 3x3
-/// block neighborhood.  `out` must be zeroed, row-major `(rows,
-/// cout*64)`.  `occupied`, when given, marks the rows whose input
-/// neighborhood stores at least one coefficient — the others are
-/// provably zero and skipped outright (see [`occupied_output_rows`]).
+/// (cout*band.out_cut))` into `out`, walking only stored nonzeros of
+/// each 3x3 block neighborhood.  `out` must be zeroed, row-major
+/// `(rows, cout*band.out_cut)`; `xi` must already have the `band`
+/// layout (see [`band_limit_xi`]).  `kernel` must be resolved
+/// ([`AxpyKernel::effective`]).  `occupied`, when given, marks the rows
+/// whose input neighborhood stores at least one coefficient — the
+/// others are provably zero and skipped outright (see
+/// [`occupied_output_rows`]).
 fn sparse_rows_into(
     f: &SparseBlocks,
     xi: &Tensor,
@@ -274,13 +582,14 @@ fn sparse_rows_into(
     stride: usize,
     r0: usize,
     out: &mut [f32],
-    tiling: AxpyTiling,
+    kernel: AxpyKernel,
+    band: XiBand,
     occupied: Option<&[bool]>,
 ) {
     let (_, c, bh, bw) = f.dims();
     let (bho, bwo) = out_blocks(bh, bw, stride);
-    let xw = cout * 64;
-    assert_eq!(xi.shape(), &[9 * c * 64, xw], "xi shape mismatch");
+    let xw = cout * band.out_cut;
+    assert_eq!(xi.shape(), &[9 * c * band.in_cut, xw], "xi shape mismatch");
     let xd = xi.data();
     let nrows = out.len() / xw;
     for rloc in 0..nrows {
@@ -301,10 +610,19 @@ fn sparse_rows_into(
             for ci in 0..c {
                 let bid = ((b * c + ci) * bh + iy) * bw + ix;
                 let (ks, vs) = f.block(bid);
-                let base = (delta * c + ci) * 64;
-                match tiling {
-                    AxpyTiling::Unroll4 => axpy_unroll4(orow, xd, xw, base, ks, vs),
-                    AxpyTiling::Unroll8 => axpy_unroll8(orow, xd, xw, base, ks, vs),
+                if ks.is_empty() {
+                    continue; // EOB-empty block: skip the base math too
+                }
+                debug_assert!(
+                    (*ks.last().unwrap() as usize) < band.in_cut,
+                    "stored index past the row band cut"
+                );
+                let base = (delta * c + ci) * band.in_cut;
+                match kernel {
+                    AxpyKernel::Scalar4 => axpy_unroll4(orow, xd, xw, base, ks, vs),
+                    AxpyKernel::Scalar8 => axpy_unroll8(orow, xd, xw, base, ks, vs),
+                    AxpyKernel::Simd => axpy_simd(orow, xd, xw, base, ks, vs),
+                    AxpyKernel::Auto => unreachable!("Auto resolves before dispatch"),
                 }
             }
         }
@@ -324,9 +642,10 @@ fn rows_to_sparse_blocks(
     cout: usize,
     bho: usize,
     bwo: usize,
+    out_cut: usize,
     occupied: Option<&[bool]>,
 ) -> SparseBlocks {
-    let xw = cout * 64;
+    let xw = cout * out_cut;
     let mut out = SparseBlocks::with_capacity(n, cout, bho, bwo, rows.len() / 2);
     for b in 0..n {
         for co in 0..cout {
@@ -337,7 +656,17 @@ fn rows_to_sparse_blocks(
                         out.push_block(std::iter::empty());
                         continue;
                     }
-                    out.push_dense_block(&rows[row * xw + co * 64..][..64]);
+                    let src = &rows[row * xw + co * out_cut..][..out_cut];
+                    // band-trimmed rows scan only `out_cut` slots: the
+                    // coefficients past the cut were never computed and
+                    // are exactly zero, so the stored runs are
+                    // identical to a 64-wide scan of the full rows
+                    out.push_block(
+                        src.iter()
+                            .enumerate()
+                            .filter(|(_, &v)| v != 0.0)
+                            .map(|(k, &v)| (k as u8, v)),
+                    );
                 }
             }
         }
@@ -385,38 +714,58 @@ pub fn jpeg_conv_exploded_sparse_resident(
     stride: usize,
     threads: usize,
 ) -> SparseBlocks {
+    jpeg_conv_exploded_sparse_resident_with(f, xi, cout, stride, threads, AxpyKernel::Auto, 64)
+}
+
+/// [`jpeg_conv_exploded_sparse_resident`] with an explicit axpy kernel
+/// and output band cutoff (`out_cut = 64` disables column trimming;
+/// see [`band_limit_xi`] for when a smaller cutoff is sound).
+pub fn jpeg_conv_exploded_sparse_resident_with(
+    f: &SparseBlocks,
+    xi: &Tensor,
+    cout: usize,
+    stride: usize,
+    threads: usize,
+    kernel: AxpyKernel,
+    out_cut: usize,
+) -> SparseBlocks {
     let (n, _, bh, bw) = f.dims();
     let (bho, bwo) = out_blocks(bh, bw, stride);
     let occ = occupied_output_rows(f, stride);
-    let rows = compute_sparse_rows(f, xi, cout, stride, threads, AxpyTiling::Unroll8, Some(&occ));
-    rows_to_sparse_blocks(&rows, n, cout, bho, bwo, Some(&occ))
+    let (xiv, band) = band_limit_xi(f, xi, cout, out_cut);
+    let rows = compute_sparse_rows(f, &xiv, cout, stride, threads, kernel, band, Some(&occ));
+    rows_to_sparse_blocks(&rows, n, cout, bho, bwo, band.out_cut, Some(&occ))
 }
 
 /// Shared driver of the gather-free kernel: produce the row-major
-/// `(N*Bho*Bwo, cout*64)` output rows, inline or threaded.
+/// `(N*Bho*Bwo, cout*band.out_cut)` output rows, inline or threaded.
+/// Resolves `Auto`/unavailable-`Simd` once, so every worker runs the
+/// same concrete kernel.
 fn compute_sparse_rows(
     f: &SparseBlocks,
     xi: &Tensor,
     cout: usize,
     stride: usize,
     threads: usize,
-    tiling: AxpyTiling,
+    kernel: AxpyKernel,
+    band: XiBand,
     occupied: Option<&[bool]>,
 ) -> Vec<f32> {
+    let kernel = kernel.effective();
     let (n, _, bh, bw) = f.dims();
     let (bho, bwo) = out_blocks(bh, bw, stride);
     let rows = n * bho * bwo;
-    let xw = cout * 64;
+    let xw = cout * band.out_cut;
     let mut out = vec![0.0f32; rows * xw];
     let threads = threads.max(1).min(rows.max(1));
     if threads <= 1 {
-        sparse_rows_into(f, xi, cout, stride, 0, &mut out, tiling, occupied);
+        sparse_rows_into(f, xi, cout, stride, 0, &mut out, kernel, band, occupied);
     } else {
         let chunk = rows.div_ceil(threads);
         std::thread::scope(|s| {
             for (i, buf) in out.chunks_mut(chunk * xw).enumerate() {
                 s.spawn(move || {
-                    sparse_rows_into(f, xi, cout, stride, i * chunk, buf, tiling, occupied)
+                    sparse_rows_into(f, xi, cout, stride, i * chunk, buf, kernel, band, occupied)
                 });
             }
         });
@@ -430,7 +779,7 @@ fn compute_sparse_rows(
 /// `threads <= 1` runs inline; otherwise output rows are split into
 /// contiguous ranges across `threads` scoped workers (each writes a
 /// disjoint slice, so results are bit-identical to the single-thread
-/// path).
+/// path).  Runs the `Auto` kernel (SIMD when available).
 pub fn jpeg_conv_exploded_sparse(
     f: &SparseBlocks,
     xi: &Tensor,
@@ -438,23 +787,28 @@ pub fn jpeg_conv_exploded_sparse(
     stride: usize,
     threads: usize,
 ) -> Tensor {
-    jpeg_conv_exploded_sparse_tiled(f, xi, cout, stride, threads, AxpyTiling::Unroll8)
+    jpeg_conv_exploded_sparse_with(f, xi, cout, stride, threads, AxpyKernel::Auto, 64)
 }
 
-/// [`jpeg_conv_exploded_sparse`] with an explicit inner-loop tiling —
-/// the bench knob behind the unroll-4 vs unroll-8 ablation.
-pub fn jpeg_conv_exploded_sparse_tiled(
+/// [`jpeg_conv_exploded_sparse`] with an explicit axpy kernel and
+/// output band cutoff — the knobs behind the `repro exp axpy` ablation.
+/// The input-row band is always bounded by the batch's EOB cursor
+/// (exact; see [`band_limit_xi`]); `out_cut < 64` additionally trims
+/// output columns the caller's downstream phi mask will discard.
+pub fn jpeg_conv_exploded_sparse_with(
     f: &SparseBlocks,
     xi: &Tensor,
     cout: usize,
     stride: usize,
     threads: usize,
-    tiling: AxpyTiling,
+    kernel: AxpyKernel,
+    out_cut: usize,
 ) -> Tensor {
     let (n, _, bh, bw) = f.dims();
     let (bho, bwo) = out_blocks(bh, bw, stride);
-    let out = compute_sparse_rows(f, xi, cout, stride, threads, tiling, None);
-    rows_to_coeff_tensor(&out, n, cout, bho, bwo)
+    let (xiv, band) = band_limit_xi(f, xi, cout, out_cut);
+    let out = compute_sparse_rows(f, &xiv, cout, stride, threads, kernel, band, None);
+    rows_to_coeff_tensor(&out, n, cout, bho, bwo, band.out_cut)
 }
 
 /// Apply a materialized exploded map — default (sparse, gather-free)
@@ -493,7 +847,7 @@ pub fn jpeg_conv_exploded_dense(f: &Tensor, xi: &Tensor, cout: usize, stride: us
         }
     }
     let out = matmul_tiled(&Tensor::from_vec(&[rows, kwidth], a), xi);
-    rows_to_coeff_tensor(out.data(), n, cout, bho, bwo)
+    rows_to_coeff_tensor(out.data(), n, cout, bho, bwo, 64)
 }
 
 #[cfg(test)]
@@ -607,7 +961,7 @@ mod tests {
     }
 
     #[test]
-    fn unroll8_matches_unroll4() {
+    fn scalar8_matches_scalar4() {
         // tiling only reorders the per-pass accumulation; results must
         // agree to float tolerance on a real lossy-table input
         let q = crate::jpeg::QuantTable::luma(50).as_f32();
@@ -616,12 +970,185 @@ mod tests {
         let f = encode_tensor(&x, &q);
         let xi = explode_conv(&w, &q, 1);
         let fs = SparseBlocks::from_dense(&f);
-        let u4 = jpeg_conv_exploded_sparse_tiled(&fs, &xi, 3, 1, 1, AxpyTiling::Unroll4);
-        let u8w = jpeg_conv_exploded_sparse_tiled(&fs, &xi, 3, 1, 1, AxpyTiling::Unroll8);
+        let u4 = jpeg_conv_exploded_sparse_with(&fs, &xi, 3, 1, 1, AxpyKernel::Scalar4, 64);
+        let u8w = jpeg_conv_exploded_sparse_with(&fs, &xi, 3, 1, 1, AxpyKernel::Scalar8, 64);
         assert_eq!(u4.shape(), u8w.shape());
         assert!(u4.max_abs_diff(&u8w) < 1e-4, "{}", u4.max_abs_diff(&u8w));
-        // and the default path is the 8-wide kernel
-        assert_eq!(jpeg_conv_exploded_sparse(&fs, &xi, 3, 1, 1), u8w);
+        // and the default path is the resolved Auto kernel
+        let auto = jpeg_conv_exploded_sparse(&fs, &xi, 3, 1, 1);
+        let resolved =
+            jpeg_conv_exploded_sparse_with(&fs, &xi, 3, 1, 1, AxpyKernel::Auto.effective(), 64);
+        assert_eq!(auto, resolved);
+    }
+
+    #[test]
+    fn kernel_parse_and_resolution() {
+        use std::str::FromStr;
+        assert_eq!(AxpyKernel::from_str("scalar4").unwrap(), AxpyKernel::Scalar4);
+        assert_eq!(AxpyKernel::from_str("unroll8").unwrap(), AxpyKernel::Scalar8);
+        assert_eq!(AxpyKernel::from_str("simd").unwrap(), AxpyKernel::Simd);
+        assert_eq!(AxpyKernel::from_str("auto").unwrap(), AxpyKernel::Auto);
+        assert!(AxpyKernel::from_str("avx512").is_err());
+        assert_eq!(AxpyKernel::default(), AxpyKernel::Auto);
+        // resolution never yields Auto, and Simd resolves per detection
+        for k in [AxpyKernel::Scalar4, AxpyKernel::Scalar8, AxpyKernel::Simd, AxpyKernel::Auto] {
+            assert_ne!(k.effective(), AxpyKernel::Auto, "{k:?}");
+        }
+        let want = if simd_axpy_available() { AxpyKernel::Simd } else { AxpyKernel::Scalar8 };
+        assert_eq!(AxpyKernel::Simd.effective(), want);
+        assert_eq!(AxpyKernel::Auto.effective(), want);
+    }
+
+    /// Naive reference axpy: one nonzero at a time, no unrolling — the
+    /// arithmetic every kernel's remainder path must reproduce.
+    fn axpy_reference(orow: &mut [f32], xd: &[f32], xw: usize, base: usize, ks: &[u8], vs: &[f32]) {
+        axpy_tail(orow, xd, xw, base, ks, vs, 0);
+    }
+
+    #[test]
+    fn remainder_path_covers_run_lengths_0_to_17() {
+        // every kernel, every run length 0..=17: the unroll bodies plus
+        // the one shared tail must cover each remainder class (8-wide
+        // passes, the single 4-wide pass, and 0..3 scalar tail steps)
+        let mut rng = Rng::new(40);
+        let xw = 48; // not a multiple of the 8-lane SIMD step
+        let xd: Vec<f32> = (0..64 * xw).map(|_| rng.normal()).collect();
+        for len in 0..=17usize {
+            // `len` ascending zigzag indices drawn from 0..64
+            let mut picks: Vec<u8> = (0..64u8).collect();
+            for i in 0..picks.len() {
+                let j = i + (rng.normal().abs() * 1e4) as usize % (picks.len() - i);
+                picks.swap(i, j);
+            }
+            let mut ks: Vec<u8> = picks[..len].to_vec();
+            ks.sort_unstable();
+            let vs: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+            let mut want = vec![0.1f32; xw];
+            axpy_reference(&mut want, &xd, xw, 0, &ks, &vs);
+            for (name, kernel) in [
+                ("scalar4", AxpyKernel::Scalar4),
+                ("scalar8", AxpyKernel::Scalar8),
+                ("simd", AxpyKernel::Simd.effective()),
+            ] {
+                let mut got = vec![0.1f32; xw];
+                match kernel {
+                    AxpyKernel::Scalar4 => axpy_unroll4(&mut got, &xd, xw, 0, &ks, &vs),
+                    AxpyKernel::Scalar8 => axpy_unroll8(&mut got, &xd, xw, 0, &ks, &vs),
+                    AxpyKernel::Simd => axpy_simd(&mut got, &xd, xw, 0, &ks, &vs),
+                    AxpyKernel::Auto => unreachable!(),
+                }
+                let diff = got
+                    .iter()
+                    .zip(&want)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(diff < 1e-4, "kernel {name} len {len}: diff {diff}");
+            }
+        }
+    }
+
+    /// Randomized `SparseBlocks` with empty blocks, full 64-coefficient
+    /// blocks, and everything between.
+    fn random_sparse(n: usize, c: usize, bh: usize, bw: usize, seed: u64) -> SparseBlocks {
+        let mut rng = Rng::new(seed);
+        let mut s = SparseBlocks::with_capacity(n, c, bh, bw, n * c * bh * bw * 8);
+        for bid in 0..n * c * bh * bw {
+            let nnz = match bid % 5 {
+                0 => 0,                                       // empty block
+                1 => 64,                                      // full block
+                _ => (rng.normal().abs() * 10.0) as usize % 17, // typical EOB run
+            };
+            let mut picks: Vec<u8> = (0..64u8).collect();
+            for i in 0..picks.len() {
+                let j = i + (rng.normal().abs() * 1e4) as usize % (picks.len() - i);
+                picks.swap(i, j);
+            }
+            let mut ks = picks[..nnz].to_vec();
+            ks.sort_unstable();
+            s.push_block(ks.iter().map(|&k| (k, rng.normal())));
+        }
+        s
+    }
+
+    #[test]
+    fn every_kernel_matches_scalar4_on_random_blocks() {
+        // property check over randomized inputs, both strides: Scalar4
+        // is the reference; Scalar8 and (resolved) Simd must agree to
+        // reassociation tolerance, and each kernel must be
+        // bit-identical across thread counts
+        let q = qvec_flat();
+        let w = rand(&[3, 2, 3, 3], 33);
+        for (stride, seed) in [(1usize, 50u64), (2, 51)] {
+            let xi = explode_conv(&w, &q, stride);
+            let fs = random_sparse(2, 2, 4, 4, seed);
+            let reference = jpeg_conv_exploded_sparse_with(&fs, &xi, 3, stride, 1, AxpyKernel::Scalar4, 64);
+            for kernel in [AxpyKernel::Scalar8, AxpyKernel::Simd.effective()] {
+                let got = jpeg_conv_exploded_sparse_with(&fs, &xi, 3, stride, 1, kernel, 64);
+                let diff = got.max_abs_diff(&reference);
+                assert!(diff < 1e-3, "{kernel:?} stride {stride}: diff {diff}");
+                for threads in [2, 5] {
+                    let many =
+                        jpeg_conv_exploded_sparse_with(&fs, &xi, 3, stride, threads, kernel, 64);
+                    assert_eq!(got, many, "{kernel:?} threads {threads} diverged");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_band_trim_is_bit_identical() {
+        // inputs whose EOB cursor sits well below 64: the trimmed-row
+        // Xi panel must reproduce the full-panel result bit for bit
+        let q = qvec_flat();
+        let w = rand(&[3, 2, 3, 3], 34);
+        let xi = explode_conv(&w, &q, 1);
+        let mut s = SparseBlocks::with_capacity(1, 2, 4, 4, 64);
+        let mut rng = Rng::new(60);
+        for bid in 0..32 {
+            if bid % 3 == 0 {
+                s.push_block(std::iter::empty());
+            } else {
+                // all indices below 11: band_cursor() == 11
+                s.push_block((0..=10u8).filter(|k| k % 2 == 0).map(|k| (k, rng.normal())));
+            }
+        }
+        assert_eq!(s.band_cursor(), 11);
+        let full = compute_sparse_rows(&s, &xi, 3, 1, 1, AxpyKernel::Scalar8, XiBand::FULL, None);
+        let (xiv, band) = band_limit_xi(&s, &xi, 3, 64);
+        assert_eq!(band, XiBand { in_cut: 11, out_cut: 64 });
+        let trimmed = compute_sparse_rows(&s, &xiv, 3, 1, 1, AxpyKernel::Scalar8, band, None);
+        assert_eq!(full, trimmed, "row trim must not change a single bit");
+    }
+
+    #[test]
+    fn column_band_trim_zeroes_exactly_the_high_band() {
+        // out_cut trims computed columns; the kept prefix must be
+        // bit-identical to the full result and the rest exactly zero
+        let q = crate::jpeg::QuantTable::luma(50).as_f32();
+        let x = rand(&[2, 2, 32, 32], 35);
+        let w = rand(&[3, 2, 3, 3], 36);
+        let f = encode_tensor(&x, &q);
+        let fs = SparseBlocks::from_dense(&f);
+        for stride in [1usize, 2] {
+            let xi = explode_conv(&w, &q, stride);
+            let full = jpeg_conv_exploded_sparse_with(&fs, &xi, 3, stride, 1, AxpyKernel::Scalar8, 64);
+            for out_cut in [1usize, 15, 33] {
+                let cut = jpeg_conv_exploded_sparse_with(&fs, &xi, 3, stride, 1, AxpyKernel::Scalar8, out_cut);
+                assert_eq!(cut.shape(), full.shape());
+                for (blk, (cd, fd)) in
+                    cut.data().chunks(64).zip(full.data().chunks(64)).enumerate()
+                {
+                    assert_eq!(&cd[..out_cut], &fd[..out_cut], "block {blk} prefix");
+                    assert!(cd[out_cut..].iter().all(|&v| v == 0.0), "block {blk} tail");
+                }
+            }
+            // resident twin: sparsified column-trimmed dense output
+            let cut = 15;
+            let dense_cut = jpeg_conv_exploded_sparse_with(&fs, &xi, 3, stride, 1, AxpyKernel::Scalar8, cut);
+            let resident =
+                jpeg_conv_exploded_sparse_resident_with(&fs, &xi, 3, stride, 1, AxpyKernel::Scalar8, cut);
+            assert_eq!(resident, SparseBlocks::from_dense(&dense_cut), "stride {stride}");
+        }
     }
 
     #[test]

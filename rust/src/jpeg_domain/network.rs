@@ -184,7 +184,8 @@ impl PlanObserver for ResidencyTrace {
 #[cfg(test)]
 mod tests {
     use super::super::plan::{
-        Act, DccRef, DenseKernel, Executor, LayerOp, PlanCtx, SparseKernel, SparseResident,
+        Act, DccRef, DenseKernel, Executor, LayerOp, NodeRef, PlanCtx, SparseKernel,
+        SparseResident,
     };
     use super::super::relu::Method;
     use super::*;
@@ -260,6 +261,50 @@ mod tests {
         assert_eq!(observed, &RESIDENCY_POINTS[1..]);
     }
 
+    /// Pins the topology property that makes executor-side column band
+    /// limiting (`plan::conv_out_cut`) sound: every conv output reaches
+    /// the classifier head only through per-frequency ops (BN, shortcut
+    /// add) terminated by a ReLU, whose ASM/APX gate keeps exactly the
+    /// `band_cutoff(num_freqs)` prefix.  If a future edit routes a conv
+    /// around its ReLU, this fails before any numeric test can go
+    /// silently band-truncated.
+    #[test]
+    fn every_conv_feeds_a_relu_before_the_head() {
+        let plan = resnet_plan();
+        let nodes = plan.nodes();
+        for (start, node) in nodes.iter().enumerate() {
+            if !matches!(node.op, LayerOp::Conv { .. }) {
+                continue;
+            }
+            // BFS forward through every consumer of this conv's output
+            let mut frontier = vec![start];
+            let mut seen = vec![false; nodes.len()];
+            while let Some(cur) = frontier.pop() {
+                for (i, m) in nodes.iter().enumerate().skip(cur + 1) {
+                    let consumes = m.input == NodeRef::Node(cur)
+                        || matches!(&m.op, LayerOp::ShortcutAdd { rhs } if *rhs == NodeRef::Node(cur));
+                    if !consumes || seen[i] {
+                        continue;
+                    }
+                    seen[i] = true;
+                    match &m.op {
+                        // per-frequency: column k depends only on column k
+                        LayerOp::BatchNorm { .. } | LayerOp::ShortcutAdd { .. } => {
+                            frontier.push(i);
+                        }
+                        // the band gate — this path is safe, stop here
+                        LayerOp::ReluAsm { .. } => {}
+                        other => panic!(
+                            "conv at node {start} reaches {other:?} at node {i} without \
+                             an intervening ReLU — band-limited Xi is unsound for this \
+                             topology (see plan::conv_out_cut)"
+                        ),
+                    }
+                }
+            }
+        }
+    }
+
     #[test]
     fn equivalent_to_spatial_at_15() {
         // the paper's central claim, end to end in pure rust
@@ -312,7 +357,7 @@ mod tests {
         let want = run_dcc(&p, &f, &q, 15, Method::Asm);
         let input = Act::Sparse(SparseBlocks::from_dense(&f));
         let got = run_plan(
-            &SparseKernel { threads: 1 },
+            &SparseKernel::new(1),
             &p,
             Some(&em),
             &input,
@@ -338,7 +383,7 @@ mod tests {
         let em = ExplodedModel::precompute(&p, &q);
         let input = Act::Sparse(SparseBlocks::from_dense(&f));
         let one = run_plan(
-            &SparseKernel { threads: 1 },
+            &SparseKernel::new(1),
             &p,
             Some(&em),
             &input,
@@ -348,7 +393,7 @@ mod tests {
             None,
         );
         let four = run_plan(
-            &SparseKernel { threads: 4 },
+            &SparseKernel::new(4),
             &p,
             Some(&em),
             &input,
@@ -370,7 +415,7 @@ mod tests {
         let em = ExplodedModel::precompute(&p, &q);
         let sparse_in = Act::Sparse(SparseBlocks::from_dense(&f));
         let sparse = run_plan(
-            &SparseKernel { threads: 1 },
+            &SparseKernel::new(1),
             &p,
             Some(&em),
             &sparse_in,
@@ -409,11 +454,11 @@ mod tests {
         let input = Act::Sparse(SparseBlocks::from_dense(&f));
         let em = ExplodedModel::precompute(&p, &q);
         let sparse = |threads: usize, nf: usize, method: Method| {
-            run_plan(&SparseKernel { threads }, &p, Some(&em), &input, &q, nf, method, None)
+            run_plan(&SparseKernel::new(threads), &p, Some(&em), &input, &q, nf, method, None)
         };
         let resident = |threads: usize, nf: usize, method: Method| {
             run_plan(
-                &SparseResident { threads, prune_epsilon: 0.0 },
+                &SparseResident::new(threads, 0.0),
                 &p,
                 Some(&em),
                 &input,
@@ -426,7 +471,7 @@ mod tests {
         let boundary = sparse(1, 15, Method::Asm);
         let mut tr = ResidencyTrace::new();
         let res = run_plan(
-            &SparseResident { threads: 1, prune_epsilon: 0.0 },
+            &SparseResident::new(1, 0.0),
             &p,
             Some(&em),
             &input,

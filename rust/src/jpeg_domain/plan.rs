@@ -46,8 +46,8 @@ use super::batchnorm::{
     jpeg_global_avg_pool_sparse,
 };
 use super::conv::{
-    jpeg_conv_dcc, jpeg_conv_exploded_dense, jpeg_conv_exploded_sparse,
-    jpeg_conv_exploded_sparse_resident,
+    jpeg_conv_dcc, jpeg_conv_exploded_dense, jpeg_conv_exploded_sparse_resident_with,
+    jpeg_conv_exploded_sparse_with, AxpyKernel,
 };
 use super::network::ExplodedModel;
 use super::relu::{jpeg_relu, jpeg_relu_sparse, Method};
@@ -695,14 +695,59 @@ impl Executor for DenseKernel {
     }
 }
 
+/// The conv output-column cutoff an executor may apply: the full 64
+/// when band limiting is off, else the phi prefix
+/// `jpeg::zigzag::band_cutoff(num_freqs)`.
+///
+/// Column trimming is sound only when everything downstream of every
+/// conv provably ignores the trimmed coefficients.  That holds for the
+/// canonical `network::RESNET_PLAN`: each conv output reaches the
+/// logits exclusively through per-frequency ops (BN scales column k
+/// from column k; its DC bias lands on column 0, which no phi mask
+/// drops; the residual add is elementwise) followed by a ReLU whose
+/// ASM/APX gate both reads and keeps only the `band_cutoff(num_freqs)`
+/// zigzag prefix, and the global-average-pool head consumes a ReLU
+/// output.  A custom plan routing a conv output around its ReLU must
+/// leave `band_limited` off.  At the default budget
+/// (`num_freqs == 15`) the cutoff is 64 and band limiting is the
+/// identity.
+fn conv_out_cut(band_limited: bool, ctx: &PlanCtx) -> usize {
+    if band_limited {
+        crate::jpeg::zigzag::band_cutoff(ctx.num_freqs)
+    } else {
+        64
+    }
+}
+
 /// Gather-free sparse conv kernel with dense activations between
 /// layers — the dense-boundary baseline the resident strategy is
 /// measured against.  `threads` fans conv output rows across scoped
-/// workers (1 = inline; bit-identical at any thread count).
+/// workers (1 = inline; bit-identical at any thread count).  `axpy`
+/// picks the inner-loop kernel (`Auto` = SIMD when available);
+/// `band_limited` additionally trims conv output columns to the phi
+/// prefix — see [`conv_out_cut`] for when that is sound.
 #[derive(Clone, Copy, Debug)]
 pub struct SparseKernel {
     /// Row-parallel worker threads inside each conv.
     pub threads: usize,
+    /// Inner-loop axpy kernel selection.
+    pub axpy: AxpyKernel,
+    /// Trim conv output columns to `band_cutoff(num_freqs)`.
+    pub band_limited: bool,
+}
+
+impl SparseKernel {
+    /// Default strategy at a given thread count: `Auto` kernel, no
+    /// column trimming.
+    pub fn new(threads: usize) -> SparseKernel {
+        SparseKernel { threads, axpy: AxpyKernel::Auto, band_limited: false }
+    }
+}
+
+impl Default for SparseKernel {
+    fn default() -> SparseKernel {
+        SparseKernel::new(1)
+    }
 }
 
 impl Executor for SparseKernel {
@@ -714,12 +759,14 @@ impl Executor for SparseKernel {
         let em = exploded(ctx, "SparseKernel");
         debug_assert_eq!(em.strides[xi], stride, "topology stride disagrees with exploded map");
         let f = as_sparse(x);
-        Act::Dense(jpeg_conv_exploded_sparse(
+        Act::Dense(jpeg_conv_exploded_sparse_with(
             &f,
             &em.xis[xi],
             em.couts[xi],
             em.strides[xi],
             self.threads,
+            self.axpy,
+            conv_out_cut(self.band_limited, ctx),
         ))
     }
 
@@ -756,6 +803,29 @@ pub struct SparseResident {
     pub threads: usize,
     /// Post-ReLU magnitude prune; `0.0` = exact (the default).
     pub prune_epsilon: f32,
+    /// Inner-loop axpy kernel selection.
+    pub axpy: AxpyKernel,
+    /// Trim conv output columns to `band_cutoff(num_freqs)` (see
+    /// [`conv_out_cut`] for the soundness argument).
+    pub band_limited: bool,
+}
+
+impl SparseResident {
+    /// Default strategy: `Auto` kernel, no prune, no column trimming.
+    pub fn new(threads: usize, prune_epsilon: f32) -> SparseResident {
+        SparseResident {
+            threads,
+            prune_epsilon,
+            axpy: AxpyKernel::Auto,
+            band_limited: false,
+        }
+    }
+}
+
+impl Default for SparseResident {
+    fn default() -> SparseResident {
+        SparseResident::new(1, 0.0)
+    }
 }
 
 impl Executor for SparseResident {
@@ -767,12 +837,14 @@ impl Executor for SparseResident {
         let em = exploded(ctx, "SparseResident");
         debug_assert_eq!(em.strides[xi], stride, "topology stride disagrees with exploded map");
         let f = as_sparse(x);
-        Act::Sparse(jpeg_conv_exploded_sparse_resident(
+        Act::Sparse(jpeg_conv_exploded_sparse_resident_with(
             &f,
             &em.xis[xi],
             em.couts[xi],
             em.strides[xi],
             self.threads,
+            self.axpy,
+            conv_out_cut(self.band_limited, ctx),
         ))
     }
 

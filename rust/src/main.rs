@@ -99,6 +99,8 @@ fn usage() -> ! {
                   --queue-cap N --decoded-cap N --max-batch N --threads N
                   --prune-epsilon F (post-ReLU magnitude prune of the
                   sparse-resident executor; 0 = exact)
+                  --axpy auto|simd|scalar8|scalar4 (inner-loop kernel of
+                  the sparse executors; auto picks SIMD when available)
           pjrt:   --route spatial|jpeg --max-batch N --max-wait-ms N
           --listen ADDR (native only): streaming socket front end; prints
                   'listening on HOST:PORT' (resolves :0), serves until
@@ -115,15 +117,18 @@ fn usage() -> ! {
           -> BENCH_PR5.json
   eval:   --ckpt PATH --route spatial|jpeg --nf K --method asm|apx
   convert: --ckpt-in PATH --ckpt-out PATH
-  exp:    table1|fig4a|fig4b|fig4c|fig5|ablation|sparse|resident|prune
+  exp:    table1|fig4a|fig4b|fig4c|fig5|ablation|sparse|resident|prune|axpy
           --seeds N --steps N --blocks N --freqs 1,3,5 --quality Q
           sparse: --quality Q --batch N --cout N --threads N --iters N
           resident: --quality Q --batch N --threads N --iters N
           prune: --quality Q --batch N --threads N --iters N
                  --epsilons 0,1e-5,1e-4,1e-3,1e-2
+          axpy: kernel (scalar4|scalar8|simd) x Xi band (full|limited)
+                 grid -> BENCH_PR6.json; --qualities 50,75,90 --batch N
+                 --iters N --threads N --nf K --out FILE
           ablation: plan-executor rows run natively; the PJRT rows are
                  skipped when no artifacts are present
-          (sparse, resident, prune and the plan rows need no artifacts)"
+          (sparse, resident, prune, axpy and the plan rows need no artifacts)"
     );
     std::process::exit(2);
 }
@@ -282,6 +287,11 @@ fn cmd_serve(args: &Args, cfg: &Config) -> anyhow::Result<()> {
             )?
             .with_prune_epsilon(
                 args.f32("prune-epsilon", cfg.f32_or("run", "prune_epsilon", 0.0)),
+            )
+            .with_axpy(
+                args.get("axpy", &cfg.str_or("run", "axpy", "auto"))
+                    .parse()
+                    .map_err(anyhow::Error::msg)?,
             );
             let server = Server::start_native(native, pipeline_config_from(args, &sc));
             // pay the exploded-map precompute before opening the doors
@@ -378,7 +388,12 @@ fn cmd_serve_listen(
         args.usize("threads", cfg.usize_or("run", "threads", 0)),
         mode,
     )?
-    .with_prune_epsilon(args.f32("prune-epsilon", cfg.f32_or("run", "prune_epsilon", 0.0)));
+    .with_prune_epsilon(args.f32("prune-epsilon", cfg.f32_or("run", "prune_epsilon", 0.0)))
+    .with_axpy(
+        args.get("axpy", &cfg.str_or("run", "axpy", "auto"))
+            .parse()
+            .map_err(anyhow::Error::msg)?,
+    );
     let pipeline_cfg = pipeline_config_from(args, sc);
     let server = Server::start_native(native, pipeline_cfg);
     let pipeline = server.pipeline().expect("native server has a pipeline");
@@ -693,6 +708,25 @@ fn cmd_exp(args: &Args, cfg: &Config) -> anyhow::Result<()> {
                 args.usize("threads", cfg.usize_or("run", "threads", 0)),
             )?;
             bh::throughput::print_resident(&r);
+        }
+        "axpy" => {
+            // axpy kernel x Xi band grid over full forwards -> BENCH_PR6.json
+            let qualities: Vec<u8> = args
+                .get("qualities", "50,75,90")
+                .split(',')
+                .filter_map(|t| t.trim().parse().ok())
+                .collect();
+            let r = bh::axpy_kernel_ablation(
+                &qualities,
+                args.usize("batch", 40),
+                args.usize("iters", 3),
+                args.usize("threads", cfg.usize_or("run", "threads", 0)),
+                args.usize("nf", 8),
+            )?;
+            bh::print_axpy_kernels(&r);
+            let out = args.get("out", "BENCH_PR6.json");
+            std::fs::write(&out, format!("{}\n", bh::axpy_kernel_report_json(&r)))?;
+            println!("wrote {out}");
         }
         _ => usage(),
     }

@@ -12,6 +12,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::jpeg::QuantTable;
+use crate::jpeg_domain::conv::AxpyKernel;
 use crate::jpeg_domain::network::{ExplodedModel, ResidencyTrace, RESNET_PLAN};
 use crate::jpeg_domain::plan::{
     Act, DccRef, DenseKernel, PlanCtx, PlanObserver, SparseKernel, SparseResident,
@@ -67,6 +68,9 @@ pub struct NativeEngine {
     /// Post-ReLU magnitude prune of the sparse-resident executor;
     /// `0.0` (the default) is exact.  See `repro exp prune`.
     pub prune_epsilon: f32,
+    /// Inner-loop axpy kernel of the sparse executors (`[run] axpy` /
+    /// `--axpy`); `Auto` (the default) picks SIMD when available.
+    pub axpy: AxpyKernel,
     cache: Mutex<HashMap<QvecKey, Arc<ExplodedModel>>>,
 }
 
@@ -87,6 +91,7 @@ impl NativeEngine {
             threads: crate::config::resolve_threads(threads),
             mode,
             prune_epsilon: 0.0,
+            axpy: AxpyKernel::Auto,
             cache: Mutex::new(HashMap::new()),
         }
     }
@@ -95,6 +100,12 @@ impl NativeEngine {
     /// `--prune-epsilon`).  Negative values clamp to exact.
     pub fn with_prune_epsilon(mut self, eps: f32) -> NativeEngine {
         self.prune_epsilon = eps.max(0.0);
+        self
+    }
+
+    /// Set the inner-loop axpy kernel (`[run] axpy` / `--axpy`).
+    pub fn with_axpy(mut self, axpy: AxpyKernel) -> NativeEngine {
+        self.axpy = axpy;
         self
     }
 
@@ -183,12 +194,24 @@ impl NativeEngine {
             method: self.method,
         };
         let observer = trace.map(|t| t as &mut dyn PlanObserver);
+        // band_limited is sound here because the engine only ever runs
+        // RESNET_PLAN, where every conv output reaches the logits
+        // through a ReLU at the engine's phi budget (see
+        // `plan::conv_out_cut`); at num_freqs == 15 it is the identity
         match self.mode {
-            NativeMode::Sparse => {
-                RESNET_PLAN.run(&SparseKernel { threads: self.threads }, &ctx, &input, observer)
-            }
+            NativeMode::Sparse => RESNET_PLAN.run(
+                &SparseKernel { threads: self.threads, axpy: self.axpy, band_limited: true },
+                &ctx,
+                &input,
+                observer,
+            ),
             NativeMode::SparseResident => RESNET_PLAN.run(
-                &SparseResident { threads: self.threads, prune_epsilon: self.prune_epsilon },
+                &SparseResident {
+                    threads: self.threads,
+                    prune_epsilon: self.prune_epsilon,
+                    axpy: self.axpy,
+                    band_limited: true,
+                },
                 &ctx,
                 &input,
                 observer,

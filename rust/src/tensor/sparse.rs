@@ -162,6 +162,20 @@ impl SparseBlocks {
         idx.last().copied()
     }
 
+    /// One past the highest stored zigzag index across *all* blocks —
+    /// the batch-wide EOB cursor (`0` for an all-zero batch).  Because
+    /// runs keep indices ascending, this is the per-block cursor
+    /// [`SparseBlocks::block_last_nonzero`] folded over the batch in
+    /// O(num_blocks), and it bounds the live Xi row panel of the
+    /// band-limited conv kernel (`jpeg_domain::conv::XiBand`): every
+    /// stored coefficient selects an Xi row strictly below it.
+    pub fn band_cursor(&self) -> usize {
+        (0..self.num_blocks())
+            .filter_map(|bid| self.block_last_nonzero(bid))
+            .max()
+            .map_or(0, |k| k as usize + 1)
+    }
+
     /// Append a block from parallel `(indices, values)` slices — the
     /// slice-based twin of [`SparseBlocks::push_block`] for builders
     /// that already hold a run in slice form.
@@ -467,6 +481,18 @@ mod tests {
         // block 1 = (0,0,0,1): empty
         assert_eq!(s.block_nnz(1), 0);
         assert_eq!(s.block_last_nonzero(1), None);
+    }
+
+    #[test]
+    fn band_cursor_is_batch_wide_eob() {
+        let s = SparseBlocks::from_dense(&sample_dense());
+        assert_eq!(s.band_cursor(), 64, "index 63 stored -> cursor one past it");
+        let mut low = Tensor::zeros(&[1, 1, 1, 2, 64]);
+        low.set(&[0, 0, 0, 0, 9], 1.0);
+        low.set(&[0, 0, 0, 1, 4], -1.0);
+        assert_eq!(SparseBlocks::from_dense(&low).band_cursor(), 10);
+        let empty = SparseBlocks::from_dense(&Tensor::zeros(&[1, 1, 1, 1, 64]));
+        assert_eq!(empty.band_cursor(), 0, "all-zero batch has an empty band");
     }
 
     #[test]

@@ -117,7 +117,7 @@ fn golden_logits_pinned_across_qualities() {
     for quality in [50u8, 75, 90] {
         let fx = fixture(&p, quality);
         let logits = RESNET_PLAN.run(
-            &SparseResident { threads: 1, prune_epsilon: 0.0 },
+            &SparseResident::new(1, 0.0),
             &ctx(&p, &fx),
             &Act::Sparse(fx.f0.clone()),
             None,
@@ -164,9 +164,9 @@ fn executors_agree_across_qualities() {
         let sparse_input = Act::Sparse(fx.f0.clone());
         let dense_input = Act::Dense(fx.f0.to_dense());
 
-        let plan_sparse = RESNET_PLAN.run(&SparseKernel { threads: 1 }, &ctx, &sparse_input, None);
+        let plan_sparse = RESNET_PLAN.run(&SparseKernel::new(1), &ctx, &sparse_input, None);
         let plan_resident = RESNET_PLAN.run(
-            &SparseResident { threads: 1, prune_epsilon: 0.0 },
+            &SparseResident::new(1, 0.0),
             &ctx,
             &sparse_input,
             None,
@@ -178,10 +178,10 @@ fn executors_agree_across_qualities() {
         // residency is free, bit for bit — at any thread count
         assert_eq!(plan_resident, plan_sparse, "quality {quality}: residency is free");
         for threads in [2usize, 4] {
-            let t = RESNET_PLAN.run(&SparseKernel { threads }, &ctx, &sparse_input, None);
+            let t = RESNET_PLAN.run(&SparseKernel::new(threads), &ctx, &sparse_input, None);
             assert_eq!(t, plan_sparse, "quality {quality}: sparse-kernel threads={threads}");
             let t = RESNET_PLAN.run(
-                &SparseResident { threads, prune_epsilon: 0.0 },
+                &SparseResident::new(threads, 0.0),
                 &ctx,
                 &sparse_input,
                 None,
@@ -190,7 +190,7 @@ fn executors_agree_across_qualities() {
         }
         // a dense input sparsifies exactly (builders drop exact zeros)
         let from_dense =
-            RESNET_PLAN.run(&SparseKernel { threads: 1 }, &ctx, &dense_input, None);
+            RESNET_PLAN.run(&SparseKernel::new(1), &ctx, &dense_input, None);
         assert_eq!(from_dense, plan_sparse, "quality {quality}: input representation");
 
         // the other two strategies use different kernels (gather+matmul,
@@ -217,7 +217,7 @@ fn observer_trace_is_deterministic_and_complete() {
     let run_traced = || {
         let mut trace = ResidencyTrace::new();
         RESNET_PLAN.run(
-            &SparseResident { threads: 1, prune_epsilon: 0.0 },
+            &SparseResident::new(1, 0.0),
             &ctx,
             &Act::Sparse(fx.f0.clone()),
             Some(&mut trace),
@@ -234,7 +234,7 @@ fn observer_trace_is_deterministic_and_complete() {
     // the timing observer sees one op per plan node
     let mut timings = PlanTimings::default();
     RESNET_PLAN.run(
-        &SparseResident { threads: 1, prune_epsilon: 0.0 },
+        &SparseResident::new(1, 0.0),
         &ctx,
         &Act::Sparse(fx.f0.clone()),
         Some(&mut timings),
@@ -252,14 +252,14 @@ fn prune_epsilon_knob_prunes_and_stays_close() {
     let input = Act::Sparse(fx.f0.clone());
     let mut exact_trace = ResidencyTrace::new();
     let exact = RESNET_PLAN.run(
-        &SparseResident { threads: 1, prune_epsilon: 0.0 },
+        &SparseResident::new(1, 0.0),
         &ctx,
         &input,
         Some(&mut exact_trace),
     );
     let mut pruned_trace = ResidencyTrace::new();
     let pruned = RESNET_PLAN.run(
-        &SparseResident { threads: 1, prune_epsilon: 1e-4 },
+        &SparseResident::new(1, 1e-4),
         &ctx,
         &input,
         Some(&mut pruned_trace),

@@ -59,7 +59,7 @@ fn expected_logits(params: &ParamSet, bytes: &[u8]) -> Vec<f32> {
         method: Method::Asm,
     };
     RESNET_PLAN
-        .run(&SparseResident { threads: 1, prune_epsilon: 0.0 }, &ctx, &Act::Sparse(f0), None)
+        .run(&SparseResident::new(1, 0.0), &ctx, &Act::Sparse(f0), None)
         .data()
         .to_vec()
 }
