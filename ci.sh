@@ -83,8 +83,9 @@ echo "== socket-smoke (streaming front end, wire-level round trip) =="
 # start the socket front end on an ephemeral port (slow-start gate
 # warmed by one in-process batch), drive a short closed-loop burst over
 # the wire with `serve bench --remote`, and require nonzero completed
-# requests with zero protocol errors; emits BENCH_PR5.json (remote vs
-# in-process throughput/latency at quality 50/75/90)
+# requests with zero protocol errors; emits BENCH_PR7.json (remote vs
+# in-process throughput/latency at quality 50/75/90, client- and
+# server-side percentiles)
 SERVE_LOG=$(mktemp)
 ./target/release/repro serve --listen 127.0.0.1:0 --listen-secs 120 \
     --warmup-batches 1 --qualities 50,75,90 \
@@ -104,7 +105,7 @@ if [ -z "$ADDR" ]; then
     exit 1
 fi
 SOCKET_OUT=$(./target/release/repro serve bench --remote "$ADDR" \
-    --requests 30 --clients 3 --qualities 50,75,90 --out BENCH_PR5.json) \
+    --requests 30 --clients 3 --qualities 50,75,90 --out BENCH_PR7.json) \
     || { echo "socket-smoke FAILED: remote bench errored"; cat "$SERVE_LOG"; \
          kill "$SERVE_PID" 2>/dev/null || true; exit 1; }
 kill "$SERVE_PID" 2>/dev/null || true
@@ -114,9 +115,73 @@ echo "$SOCKET_OUT" | grep -q "remote-socket" \
     || { echo "socket-smoke FAILED: no remote row"; exit 1; }
 echo "$SOCKET_OUT" | grep -qE "remote completed requests: [1-9][0-9]* \(protocol errors: 0\)" \
     || { echo "socket-smoke FAILED: incomplete requests or protocol errors"; exit 1; }
-[ -f BENCH_PR5.json ] \
-    || { echo "socket-smoke FAILED: BENCH_PR5.json not written"; exit 1; }
+[ -f BENCH_PR7.json ] \
+    || { echo "socket-smoke FAILED: BENCH_PR7.json not written"; exit 1; }
 rm -f "$SERVE_LOG"
+
+echo "== metrics-smoke (stats scrape + request tracing over a live server) =="
+# start a traced server (every request sampled) with a periodic metrics
+# dump, drive a burst over the wire, scrape it with `serve stats
+# --remote`, and require: the key metric families are present, the
+# frontend counters cross-check (requests_total == sum of per-code
+# responses_total), all six trace stages appeared as spans, and the
+# dump file landed on disk
+SERVE_LOG=$(mktemp)
+METRICS_DUMP=$(mktemp)
+TRACE_FILE=$(mktemp)
+./target/release/repro serve --listen 127.0.0.1:0 --listen-secs 120 \
+    --warmup-batches 1 --qualities 50,75,90 \
+    --decode-workers 2 --compute-workers 2 --max-batch 4 \
+    --trace-sample 1 --trace-file "$TRACE_FILE" \
+    --metrics-dump "$METRICS_DUMP" > "$SERVE_LOG" 2>&1 &
+SERVE_PID=$!
+ADDR=""
+for _ in $(seq 1 300); do
+    ADDR=$(grep -m1 -oE 'listening on [0-9.:]+' "$SERVE_LOG" | awk '{print $3}' || true)
+    [ -n "$ADDR" ] && break
+    sleep 0.2
+done
+if [ -z "$ADDR" ]; then
+    echo "metrics-smoke FAILED: server never bound"; cat "$SERVE_LOG"
+    kill "$SERVE_PID" 2>/dev/null || true
+    exit 1
+fi
+./target/release/repro serve bench --remote "$ADDR" \
+    --requests 18 --clients 3 --qualities 50,75,90 --out BENCH_METRICS_SMOKE.json \
+    > /dev/null \
+    || { echo "metrics-smoke FAILED: remote burst errored"; cat "$SERVE_LOG"; \
+         kill "$SERVE_PID" 2>/dev/null || true; exit 1; }
+SCRAPE=$(./target/release/repro serve stats --remote "$ADDR") \
+    || { echo "metrics-smoke FAILED: stats scrape errored"; cat "$SERVE_LOG"; \
+         kill "$SERVE_PID" 2>/dev/null || true; exit 1; }
+# give the periodic dump (~5 s cadence) time to fire at least once
+sleep 6
+kill "$SERVE_PID" 2>/dev/null || true
+wait "$SERVE_PID" 2>/dev/null || true
+for family in jd_frontend_requests_total jd_frontend_responses_total \
+    jd_pipeline_admitted_total jd_stage_service_us jd_requests_by_quality_total \
+    jd_request_e2e_us jd_plan_op_us jd_queue_depth; do
+    echo "$SCRAPE" | grep -q "$family" \
+        || { echo "metrics-smoke FAILED: family $family missing from scrape"; \
+             echo "$SCRAPE"; exit 1; }
+done
+# counter cross-check: every infer frame answered exactly once
+echo "$SCRAPE" | awk '
+    /^jd_frontend_requests_total / { req = $2 }
+    /^jd_frontend_responses_total\{/ { resp += $2 }
+    END { if (req == "" || req + 0 != resp + 0) {
+              printf "metrics-smoke FAILED: requests_total %s != response sum %s\n", req, resp
+              exit 1 } }' \
+    || { echo "$SCRAPE"; exit 1; }
+# every stage of a sampled request shows up as a trace span
+for stage in admission decode handoff batch-assembly compute socket-write; do
+    grep -q "\"stage\":\"$stage\"" "$TRACE_FILE" \
+        || { echo "metrics-smoke FAILED: no $stage span traced"; \
+             cat "$TRACE_FILE"; exit 1; }
+done
+grep -q "jd_frontend_requests_total" "$METRICS_DUMP" \
+    || { echo "metrics-smoke FAILED: metrics dump never written"; exit 1; }
+rm -f "$SERVE_LOG" "$METRICS_DUMP" "$TRACE_FILE" BENCH_METRICS_SMOKE.json
 
 if cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check =="

@@ -223,6 +223,10 @@ pub struct ServeConfig {
     /// socket traffic is admitted (rejected with the typed `WarmingUp`
     /// wire code until then); `0` disables the gate.
     pub warmup_batches: usize,
+    /// Request tracing: emit per-stage JSONL spans for every Nth
+    /// admitted request (`--trace-sample` overrides); `0` disables
+    /// tracing entirely (no sampling cost on the hot path).
+    pub trace_sample: usize,
 }
 
 impl Default for ServeConfig {
@@ -238,6 +242,7 @@ impl Default for ServeConfig {
             max_wait_ms: 5,
             listen_addr: String::new(),
             warmup_batches: 0,
+            trace_sample: 0,
         }
     }
 }
@@ -256,6 +261,7 @@ impl ServeConfig {
             max_wait_ms: cfg.usize_or("serve", "max_wait_ms", d.max_wait_ms),
             listen_addr: cfg.str_or("serve", "listen_addr", &d.listen_addr),
             warmup_batches: cfg.usize_or("serve", "warmup_batches", d.warmup_batches),
+            trace_sample: cfg.usize_or("serve", "trace_sample", d.trace_sample),
         }
     }
 }
@@ -340,13 +346,15 @@ verbose = true
         assert_eq!(s.decode_workers, 2, "untouched keys keep defaults");
         assert_eq!(s.listen_addr, "", "no listener unless configured");
         assert_eq!(s.warmup_batches, 0, "slow start off by default");
+        assert_eq!(s.trace_sample, 0, "tracing off by default");
         let c = Config::parse(
-            "[serve]\nlisten_addr = \"127.0.0.1:7878\"\nwarmup_batches = 3\n",
+            "[serve]\nlisten_addr = \"127.0.0.1:7878\"\nwarmup_batches = 3\ntrace_sample = 10\n",
         )
         .unwrap();
         let s = ServeConfig::from_config(&c);
         assert_eq!(s.listen_addr, "127.0.0.1:7878");
         assert_eq!(s.warmup_batches, 3);
+        assert_eq!(s.trace_sample, 10);
     }
 
     #[test]

@@ -1,89 +1,26 @@
-//! Serving metrics: latency histogram + throughput counters.
+//! Aggregate serving metrics (batches, requests, end-to-end latency)
+//! as views over the shared telemetry registry.
 //!
-//! Log-bucketed histogram (1us .. ~100s, 10 buckets/decade) so p50/p95/
-//! p99 are O(1) to read and the recording path is lock-cheap.
+//! The lock-free log-bucketed latency histogram that used to be
+//! defined here is now [`crate::telemetry::Histogram`] — re-exported
+//! as [`LatencyHistogram`] so existing call sites keep reading — and
+//! the counters are registry instruments, so the same numbers the
+//! in-process `snapshot()` prints are scrapeable over the wire
+//! (`jd_batches_total`, `jd_server_requests_total`, ...).
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Duration;
+use std::sync::Arc;
 
-const BUCKETS_PER_DECADE: usize = 10;
-const DECADES: usize = 8; // 1us .. 100s
-const NBUCKETS: usize = BUCKETS_PER_DECADE * DECADES;
+use crate::telemetry::{Counter, Histogram, Registry};
 
-/// Lock-free log-bucketed latency histogram.
-pub struct LatencyHistogram {
-    buckets: Vec<AtomicU64>,
-    count: AtomicU64,
-    sum_us: AtomicU64,
-}
-
-impl Default for LatencyHistogram {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl LatencyHistogram {
-    pub fn new() -> Self {
-        LatencyHistogram {
-            buckets: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
-            count: AtomicU64::new(0),
-            sum_us: AtomicU64::new(0),
-        }
-    }
-
-    fn bucket_of(us: f64) -> usize {
-        if us <= 1.0 {
-            return 0;
-        }
-        let b = (us.log10() * BUCKETS_PER_DECADE as f64) as usize;
-        b.min(NBUCKETS - 1)
-    }
-
-    pub fn record(&self, d: Duration) {
-        let us = d.as_secs_f64() * 1e6;
-        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us as u64, Ordering::Relaxed);
-    }
-
-    pub fn count(&self) -> u64 {
-        self.count.load(Ordering::Relaxed)
-    }
-
-    /// Upper edge (us) of the bucket containing quantile `q` in [0,1].
-    pub fn quantile_us(&self, q: f64) -> f64 {
-        let total = self.count();
-        if total == 0 {
-            return 0.0;
-        }
-        let target = (q * total as f64).ceil() as u64;
-        let mut seen = 0u64;
-        for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                return 10f64.powf((i + 1) as f64 / BUCKETS_PER_DECADE as f64);
-            }
-        }
-        10f64.powf(NBUCKETS as f64 / BUCKETS_PER_DECADE as f64)
-    }
-
-    pub fn mean_us(&self) -> f64 {
-        let c = self.count();
-        if c == 0 {
-            0.0
-        } else {
-            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
-        }
-    }
-}
+/// The shared log-bucketed histogram under its historical name.
+pub use crate::telemetry::Histogram as LatencyHistogram;
 
 /// Aggregate serving metrics.
 pub struct Metrics {
-    pub request_latency: LatencyHistogram,
-    pub batch_sizes: AtomicU64,
-    pub batches: AtomicU64,
-    pub requests: AtomicU64,
+    pub request_latency: Arc<Histogram>,
+    pub batch_sizes: Arc<Counter>,
+    pub batches: Arc<Counter>,
+    pub requests: Arc<Counter>,
     pub started: std::time::Instant,
 }
 
@@ -94,32 +31,58 @@ impl Default for Metrics {
 }
 
 impl Metrics {
+    /// Standalone metrics over a private registry — the PJRT worker
+    /// path, which has no scrape endpoint.  The handles work the same;
+    /// only the registry is unshared.
     pub fn new() -> Self {
+        Self::register(&Arc::new(Registry::new()))
+    }
+
+    /// Register the aggregate instruments in `registry` (the native
+    /// pipeline passes its process registry so these families show up
+    /// in every scrape).
+    pub fn register(registry: &Arc<Registry>) -> Metrics {
         Metrics {
-            request_latency: LatencyHistogram::new(),
-            batch_sizes: AtomicU64::new(0),
-            batches: AtomicU64::new(0),
-            requests: AtomicU64::new(0),
+            request_latency: registry.histogram(
+                "jd_server_request_latency_us",
+                "end-to-end request latency as recorded by the serving loop",
+                &[],
+            ),
+            batch_sizes: registry.counter(
+                "jd_batched_requests_total",
+                "requests folded into compute batches",
+                &[],
+            ),
+            batches: registry.counter(
+                "jd_batches_total",
+                "compute batches executed",
+                &[],
+            ),
+            requests: registry.counter(
+                "jd_server_requests_total",
+                "requests served through the batcher",
+                &[],
+            ),
             started: std::time::Instant::now(),
         }
     }
 
     pub fn record_batch(&self, size: usize) {
-        self.batch_sizes.fetch_add(size as u64, Ordering::Relaxed);
-        self.batches.fetch_add(1, Ordering::Relaxed);
-        self.requests.fetch_add(size as u64, Ordering::Relaxed);
+        self.batch_sizes.add(size as u64);
+        self.batches.inc();
+        self.requests.add(size as u64);
     }
 
     pub fn snapshot(&self) -> Snapshot {
-        let requests = self.requests.load(Ordering::Relaxed);
-        let batches = self.batches.load(Ordering::Relaxed);
+        let requests = self.requests.get();
+        let batches = self.batches.get();
         Snapshot {
             requests,
             batches,
             mean_batch: if batches == 0 {
                 0.0
             } else {
-                self.batch_sizes.load(Ordering::Relaxed) as f64 / batches as f64
+                self.batch_sizes.get() as f64 / batches as f64
             },
             p50_ms: self.request_latency.quantile_us(0.50) / 1e3,
             p95_ms: self.request_latency.quantile_us(0.95) / 1e3,
@@ -157,35 +120,7 @@ impl std::fmt::Display for Snapshot {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn empty_histogram() {
-        let h = LatencyHistogram::new();
-        assert_eq!(h.count(), 0);
-        assert_eq!(h.quantile_us(0.5), 0.0);
-        assert_eq!(h.mean_us(), 0.0);
-    }
-
-    #[test]
-    fn quantiles_ordered() {
-        let h = LatencyHistogram::new();
-        for ms in [1u64, 2, 3, 5, 8, 13, 100] {
-            h.record(Duration::from_millis(ms));
-        }
-        let p50 = h.quantile_us(0.5);
-        let p99 = h.quantile_us(0.99);
-        assert!(p50 <= p99);
-        assert!(p50 >= 1_000.0 && p50 <= 20_000.0, "{p50}");
-        assert!(p99 >= 50_000.0, "{p99}");
-    }
-
-    #[test]
-    fn mean_tracks() {
-        let h = LatencyHistogram::new();
-        h.record(Duration::from_millis(10));
-        h.record(Duration::from_millis(30));
-        assert!((h.mean_us() - 20_000.0).abs() < 1_500.0);
-    }
+    use std::time::Duration;
 
     #[test]
     fn metrics_snapshot() {
@@ -202,9 +137,22 @@ mod tests {
     }
 
     #[test]
-    fn bucket_monotone() {
-        assert!(LatencyHistogram::bucket_of(1.0) <= LatencyHistogram::bucket_of(10.0));
-        assert!(LatencyHistogram::bucket_of(10.0) < LatencyHistogram::bucket_of(1e6));
-        assert_eq!(LatencyHistogram::bucket_of(1e20), NBUCKETS - 1);
+    fn registered_metrics_show_up_in_a_scrape() {
+        let registry = Arc::new(Registry::new());
+        let m = Metrics::register(&registry);
+        m.record_batch(3);
+        m.request_latency.record(Duration::from_millis(2));
+        let text = registry.render();
+        assert!(text.contains("jd_batches_total 1"), "{text}");
+        assert!(text.contains("jd_server_requests_total 3"), "{text}");
+        assert!(text.contains("jd_server_request_latency_us_count 1"), "{text}");
+    }
+
+    #[test]
+    fn latency_histogram_alias_still_works() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_millis(3));
+        assert_eq!(h.count(), 1);
+        assert!(h.quantile_us(0.5) > 0.0);
     }
 }

@@ -42,6 +42,9 @@ pub struct InferResponse {
     pub logits: Vec<f32>,
     pub predicted: usize,
     pub latency: Duration,
+    /// Whether this request was selected for span tracing (the socket
+    /// front end emits the `socket-write` span for marked replies).
+    pub traced: bool,
 }
 
 /// Server configuration.
@@ -113,7 +116,17 @@ impl Server {
     /// Start the native staged pipeline behind the same `Server` facade
     /// (`serve --engine native`): no artifacts, no PJRT.
     pub fn start_native(engine: NativeEngine, cfg: PipelineConfig) -> Server {
-        let pipeline = Arc::new(NativePipeline::start(engine, cfg));
+        Self::start_native_traced(engine, cfg, None)
+    }
+
+    /// [`Server::start_native`] with a span tracer attached to the
+    /// pipeline (`serve --trace-sample N`).
+    pub fn start_native_traced(
+        engine: NativeEngine,
+        cfg: PipelineConfig,
+        tracer: Option<Arc<crate::telemetry::Tracer>>,
+    ) -> Server {
+        let pipeline = Arc::new(NativePipeline::start_traced(engine, cfg, tracer));
         let metrics = pipeline.aggregate().clone();
         Server { inner: Inner::Native { pipeline: Some(pipeline) }, metrics }
     }
@@ -225,6 +238,7 @@ impl Server {
                         logits: row,
                         predicted: preds[i],
                         latency,
+                        traced: false, // the pjrt path has no tracer
                     }));
                 }
             }

@@ -900,6 +900,33 @@ pub trait PlanObserver {
     fn op_done(&mut self, _node: usize, _op: &LayerOp, _elapsed: Duration) {}
 }
 
+/// Fan one run's observations out to two observers — e.g. a residency
+/// trace *and* the registry's per-op histograms on the same forward.
+/// Activations go only to children that want them, and the combined
+/// `wants_activations` is the OR, so a timings-only child never forces
+/// occupancy scans on its own.
+pub struct Tee<'a>(pub &'a mut dyn PlanObserver, pub &'a mut dyn PlanObserver);
+
+impl PlanObserver for Tee<'_> {
+    fn activation(&mut self, label: &'static str, nnz: u64, total: u64) {
+        if self.0.wants_activations() {
+            self.0.activation(label, nnz, total);
+        }
+        if self.1.wants_activations() {
+            self.1.activation(label, nnz, total);
+        }
+    }
+
+    fn wants_activations(&self) -> bool {
+        self.0.wants_activations() || self.1.wants_activations()
+    }
+
+    fn op_done(&mut self, node: usize, op: &LayerOp, elapsed: Duration) {
+        self.0.op_done(node, op, elapsed);
+        self.1.op_done(node, op, elapsed);
+    }
+}
+
 /// A [`PlanObserver`] that records per-op wall times in execution
 /// order — the plan-level replacement for ad-hoc per-layer timers.
 #[derive(Debug, Default)]
@@ -1048,5 +1075,31 @@ mod tests {
         assert_eq!(t.total(), Duration::from_millis(5));
         // a timings-only observer opts out of the occupancy scans
         assert!(!t.wants_activations());
+    }
+
+    #[test]
+    fn tee_forwards_selectively() {
+        struct Wants(Vec<&'static str>);
+        impl PlanObserver for Wants {
+            fn activation(&mut self, label: &'static str, _nnz: u64, _total: u64) {
+                self.0.push(label);
+            }
+        }
+        let mut wants = Wants(Vec::new());
+        let mut timings = PlanTimings::default();
+        {
+            let mut tee = Tee(&mut wants, &mut timings);
+            // one child wants activations => the tee wants them
+            assert!(tee.wants_activations());
+            tee.activation("input", 3, 64);
+            tee.op_done(0, &LayerOp::Fc, Duration::from_millis(1));
+        }
+        assert_eq!(wants.0, ["input"]);
+        assert_eq!(timings.ops.len(), 1, "op times reach both children");
+
+        let mut a = PlanTimings::default();
+        let mut b = PlanTimings::default();
+        let tee = Tee(&mut a, &mut b);
+        assert!(!tee.wants_activations(), "two timings-only children stay scan-free");
     }
 }

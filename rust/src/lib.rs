@@ -38,6 +38,7 @@ pub mod nn;
 pub mod params;
 pub mod runtime;
 pub mod serving;
+pub mod telemetry;
 pub mod tensor;
 pub mod util;
 

@@ -36,6 +36,7 @@ use jpegdomain::jpeg_domain::relu::Method;
 use jpegdomain::params::ParamSet;
 use jpegdomain::runtime::{Engine, Session};
 use jpegdomain::serving::{self, EngineKind, NativeEngine, NativeMode, PipelineConfig};
+use jpegdomain::telemetry::Tracer;
 
 struct Args {
     positional: Vec<String>,
@@ -107,14 +108,22 @@ fn usage() -> ! {
                   --listen-secs S elapse (0 = forever, the default);
                   --warmup-batches N rejects socket traffic with the
                   typed WarmingUp code until N in-process warm batches
-                  ran; --qualities Q,.. warms those quant tables
+                  ran; --qualities Q,.. warms those quant tables;
+                  --metrics-dump PATH writes the metrics exposition
+                  there every ~5s (and once at shutdown)
+          --trace-sample N (native only): emit per-stage JSONL trace
+                  spans for every Nth admitted request (0 = off);
+                  --trace-file PATH appends spans there (default stderr)
+  serve stats: --remote ADDR scrape a running front end's metrics
+          registry; prints the Prometheus-style exposition text
   serve bench: closed-loop load generator -> BENCH_PR2.json
           --requests N --clients N --qualities 50,75,90 --skip-dense
           --out FILE (native-sparse-resident vs native-sparse vs
           native-dense vs pjrt-if-present)
           --remote ADDR: drive a running socket front end instead and
           compare against the in-process sparse-resident baseline
-          -> BENCH_PR5.json
+          -> BENCH_PR7.json (rows carry client- and server-side
+          histogram percentiles)
   eval:   --ckpt PATH --route spatial|jpeg --nf K --method asm|apx
   convert: --ckpt-in PATH --ckpt-out PATH
   exp:    table1|fig4a|fig4b|fig4c|fig5|ablation|sparse|resident|prune|axpy
@@ -226,9 +235,41 @@ fn pipeline_config_from(args: &Args, sc: &ServeConfig) -> PipelineConfig {
     }
 }
 
+/// `--trace-sample N` / `[serve] trace_sample` -> an optional tracer;
+/// `--trace-file PATH` redirects the JSONL spans from stderr to a file.
+fn tracer_from(args: &Args, sc: &ServeConfig) -> anyhow::Result<Option<Arc<Tracer>>> {
+    let sample = args.usize("trace-sample", sc.trace_sample) as u64;
+    if sample == 0 {
+        return Ok(None);
+    }
+    let tracer = match args.flags.get("trace-file") {
+        Some(p) => Tracer::to_file(sample, std::path::Path::new(p))
+            .map_err(|e| anyhow::anyhow!("--trace-file {p}: {e}"))?,
+        None => Tracer::stderr(sample),
+    };
+    Ok(Some(Arc::new(tracer)))
+}
+
+/// `repro serve stats --remote ADDR`: scrape a running socket front
+/// end's metrics registry and print the exposition text.
+fn cmd_serve_stats(args: &Args) -> anyhow::Result<()> {
+    let addr = args
+        .flags
+        .get("remote")
+        .ok_or_else(|| anyhow::anyhow!("serve stats requires --remote ADDR"))?;
+    let mut client = serving::frontend::Client::connect(addr.as_str())
+        .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+    let text = client.stats().map_err(|e| anyhow::anyhow!("stats scrape failed: {e}"))?;
+    print!("{text}");
+    Ok(())
+}
+
 fn cmd_serve(args: &Args, cfg: &Config) -> anyhow::Result<()> {
     if args.positional.get(1).map(String::as_str) == Some("bench") {
         return cmd_serve_bench(args, cfg);
+    }
+    if args.positional.get(1).map(String::as_str) == Some("stats") {
+        return cmd_serve_stats(args);
     }
     let sc = ServeConfig::from_config(cfg);
     let listen = args
@@ -293,7 +334,11 @@ fn cmd_serve(args: &Args, cfg: &Config) -> anyhow::Result<()> {
                     .parse()
                     .map_err(anyhow::Error::msg)?,
             );
-            let server = Server::start_native(native, pipeline_config_from(args, &sc));
+            let server = Server::start_native_traced(
+                native,
+                pipeline_config_from(args, &sc),
+                tracer_from(args, &sc)?,
+            );
             // pay the exploded-map precompute before opening the doors
             if let Some(p) = server.pipeline() {
                 p.warm(quality);
@@ -395,7 +440,7 @@ fn cmd_serve_listen(
             .map_err(anyhow::Error::msg)?,
     );
     let pipeline_cfg = pipeline_config_from(args, sc);
-    let server = Server::start_native(native, pipeline_cfg);
+    let server = Server::start_native_traced(native, pipeline_cfg, tracer_from(args, sc)?);
     let pipeline = server.pipeline().expect("native server has a pipeline");
 
     let qualities: Vec<u8> = args
@@ -451,14 +496,31 @@ fn cmd_serve_listen(
     // single greppable line: scripts parse the resolved port out of it
     println!("listening on {}", frontend.local_addr());
 
+    // --metrics-dump PATH: periodically write the full exposition text
+    // so operators without a scraper still get a liveness file
+    let metrics_dump = args.flags.get("metrics-dump").map(PathBuf::from);
+    let dump = |label: &str| {
+        if let Some(path) = &metrics_dump {
+            if let Err(e) = std::fs::write(path, pipeline.registry().render()) {
+                eprintln!("metrics dump ({label}) to {} failed: {e}", path.display());
+            }
+        }
+    };
+
     let listen_secs = args.usize("listen-secs", 0);
     let started = std::time::Instant::now();
+    let mut ticks = 0u64;
     loop {
         std::thread::sleep(std::time::Duration::from_millis(200));
+        ticks += 1;
+        if ticks % 25 == 0 {
+            dump("periodic"); // every ~5s
+        }
         if listen_secs > 0 && started.elapsed().as_secs() >= listen_secs as u64 {
             break;
         }
     }
+    dump("final");
 
     println!("{}", frontend.metrics.snapshot());
     println!("{}", pipeline.metrics.snapshot());

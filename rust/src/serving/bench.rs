@@ -14,7 +14,14 @@
 //! blocking [`crate::serving::frontend::Client`] — one connection per
 //! client thread, latency measured wire to wire and attributed per
 //! encoded quality — next to one in-process sparse-resident row, so the
-//! report (`BENCH_PR5.json`) prices the network boundary itself.
+//! report (`BENCH_PR7.json`) prices the network boundary itself.
+//!
+//! Every row also carries **server-side** percentiles read from the
+//! serving process's log-bucketed latency histograms: in-process rows
+//! straight off the aggregate registry, the remote row via a stats
+//! scrape ([`crate::serving::frontend::Client::stats`]) of the
+//! `jd_request_e2e_us` family.  Client-side minus server-side is the
+//! wire + framing overhead, now visible per run.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -71,7 +78,7 @@ impl BenchOptions {
     /// and `examples/serve_requests.rs` so the artifact names cannot
     /// drift apart).
     pub fn default_out(&self) -> &'static str {
-        if self.remote.is_some() { "BENCH_PR5.json" } else { "BENCH_PR2.json" }
+        if self.remote.is_some() { "BENCH_PR7.json" } else { "BENCH_PR2.json" }
     }
 
     /// Whether the axpy kernel ablation belongs to this run: it
@@ -100,6 +107,12 @@ pub struct BenchRow {
     pub p50_ms: f64,
     pub p99_ms: f64,
     pub mean_ms: f64,
+    /// Server-side percentiles from the serving process's log-bucketed
+    /// latency histogram (`jd_request_e2e_us` over the wire, the
+    /// aggregate registry in process); `0.0` when the scrape failed.
+    pub server_p50_ms: f64,
+    pub server_p90_ms: f64,
+    pub server_p99_ms: f64,
     /// (tag label, requests, p50 ms) — native engines only.
     pub per_tag: Vec<(String, u64, f64)>,
     /// (layer label, nonzero fraction) — sparse-resident engine only.
@@ -168,6 +181,9 @@ fn measure(server: &Server, name: &str, files: &[Vec<u8>], clients: usize) -> Be
         }
         None => (0, Vec::new(), Vec::new()),
     };
+    // server-side view of the same traffic, straight off the
+    // log-bucketed histogram the registry scrape exposes
+    let h = &server.metrics.request_latency;
     BenchRow {
         engine: name.to_string(),
         requests: files.len() as u64,
@@ -183,6 +199,9 @@ fn measure(server: &Server, name: &str, files: &[Vec<u8>], clients: usize) -> Be
         p50_ms: snap.p50_ms,
         p99_ms: snap.p99_ms,
         mean_ms: snap.mean_ms,
+        server_p50_ms: h.quantile_us(0.50) / 1e3,
+        server_p90_ms: h.quantile_us(0.90) / 1e3,
+        server_p99_ms: h.quantile_us(0.99) / 1e3,
         per_tag,
         layer_nonzero,
     }
@@ -308,6 +327,24 @@ fn remote_row(opts: &BenchOptions, files: &[Vec<u8>], addr: &str) -> anyhow::Res
             (format!("q{q}"), v.len() as u64, quantile_ms(v, 0.50))
         })
         .collect();
+
+    // server-side view of the same traffic: one stats scrape over a
+    // fresh connection, after the load has drained
+    let (server_p50_ms, server_p90_ms, server_p99_ms) = match Client::connect(addr)
+        .map_err(ClientError::Io)
+        .and_then(|mut c| c.stats())
+    {
+        Ok(text) => {
+            let scrape = crate::telemetry::Scrape::parse(&text);
+            let q = |p| scrape.histogram_quantile("jd_request_e2e_us", &[], p) / 1e3;
+            (q(0.50), q(0.90), q(0.99))
+        }
+        Err(e) => {
+            eprintln!("serve bench: stats scrape failed ({e}); server percentiles read 0");
+            (0.0, 0.0, 0.0)
+        }
+    };
+
     Ok(BenchRow {
         engine: "remote-socket".to_string(),
         requests: files.len() as u64,
@@ -319,6 +356,9 @@ fn remote_row(opts: &BenchOptions, files: &[Vec<u8>], addr: &str) -> anyhow::Res
         p50_ms: quantile_ms(&all_ms, 0.50),
         p99_ms: quantile_ms(&all_ms, 0.99),
         mean_ms,
+        server_p50_ms,
+        server_p90_ms,
+        server_p99_ms,
         per_tag,
         layer_nonzero: Vec::new(),
     })
@@ -373,7 +413,7 @@ pub fn run(opts: &BenchOptions) -> anyhow::Result<(Vec<BenchRow>, Vec<(String, S
 
 /// Render rows (+ optionally the axpy kernel ablation) into the bench
 /// JSON document — `BENCH_PR2.json` for the engine sweep,
-/// `BENCH_PR5.json` for the remote-vs-in-process comparison (which has
+/// `BENCH_PR7.json` for the remote-vs-in-process comparison (which has
 /// no kernel ablation to attach).
 pub fn report_json(
     opts: &BenchOptions,
@@ -413,6 +453,9 @@ pub fn report_json(
         o.insert("p50_ms".into(), num(r.p50_ms));
         o.insert("p99_ms".into(), num(r.p99_ms));
         o.insert("mean_ms".into(), num(r.mean_ms));
+        o.insert("server_p50_ms".into(), num(r.server_p50_ms));
+        o.insert("server_p90_ms".into(), num(r.server_p90_ms));
+        o.insert("server_p99_ms".into(), num(r.server_p99_ms));
         let mut tags = BTreeMap::new();
         for (label, n, p50) in &r.per_tag {
             let mut t = BTreeMap::new();
@@ -460,7 +503,10 @@ pub fn report_json(
 pub fn print_rows(rows: &[BenchRow], skipped: &[(String, String)]) {
     crate::bench_harness::print_table(
         "Serving bench — closed-loop throughput + latency",
-        &["engine", "req/s", "p50 ms", "p99 ms", "mean ms", "errors", "rejected"],
+        &[
+            "engine", "req/s", "p50 ms", "p99 ms", "mean ms", "srv p50", "srv p90", "srv p99",
+            "errors", "rejected",
+        ],
         &rows
             .iter()
             .map(|r| {
@@ -470,6 +516,9 @@ pub fn print_rows(rows: &[BenchRow], skipped: &[(String, String)]) {
                     format!("{:.2}", r.p50_ms),
                     format!("{:.2}", r.p99_ms),
                     format!("{:.2}", r.mean_ms),
+                    format!("{:.2}", r.server_p50_ms),
+                    format!("{:.2}", r.server_p90_ms),
+                    format!("{:.2}", r.server_p99_ms),
                     r.errors.to_string(),
                     r.rejected.to_string(),
                 ]
@@ -539,6 +588,9 @@ mod tests {
             p50_ms: 1.0,
             p99_ms: 2.0,
             mean_ms: 1.2,
+            server_p50_ms: 0.9,
+            server_p90_ms: 1.5,
+            server_p99_ms: 1.8,
             per_tag: vec![("q50".into(), 10, 1.0)],
             layer_nonzero: vec![("input".into(), 0.25), ("stem.relu".into(), 0.5)],
         }];
@@ -560,6 +612,8 @@ mod tests {
         assert_eq!(rows_v[1].get("skipped").as_str(), Some("no artifacts"));
         assert!(rows_v[0].get("layer_nonzero").get("input").as_f64().is_some());
         assert_eq!(rows_v[0].get("protocol_errors").as_f64(), Some(0.0));
+        assert_eq!(rows_v[0].get("server_p50_ms").as_f64(), Some(0.9));
+        assert_eq!(rows_v[0].get("server_p99_ms").as_f64(), Some(1.8));
         assert!(doc.get("axpy_tiling").get("unroll8_blocks_per_sec").as_f64().is_some());
         // round-trips through the parser
         let text = doc.to_string();
@@ -583,6 +637,9 @@ mod tests {
             p50_ms: 2.0,
             p99_ms: 5.0,
             mean_ms: 2.5,
+            server_p50_ms: 1.4,
+            server_p90_ms: 3.0,
+            server_p99_ms: 4.1,
             per_tag: vec![("q50".into(), 4, 2.0), ("q90".into(), 4, 2.2)],
             layer_nonzero: vec![],
         }];
@@ -591,6 +648,7 @@ mod tests {
         let rows_v = doc.get("rows").as_arr().unwrap();
         assert_eq!(rows_v[0].get("engine").as_str(), Some("remote-socket"));
         assert_eq!(rows_v[0].get("completed").as_f64(), Some(11.0));
+        assert_eq!(rows_v[0].get("server_p90_ms").as_f64(), Some(3.0));
         assert_eq!(
             doc.get("axpy_tiling"),
             &crate::json::Json::Null,

@@ -180,6 +180,18 @@ impl NativeEngine {
         qvec: &[f32; 64],
         trace: Option<&mut ResidencyTrace>,
     ) -> Tensor {
+        self.forward_with_observer(input, qvec, trace.map(|t| t as &mut dyn PlanObserver))
+    }
+
+    /// The fully general forward: any [`PlanObserver`] attaches to the
+    /// run — a residency trace, the telemetry registry's per-op
+    /// histogram recorder, or a `plan::Tee` of both.
+    pub fn forward_with_observer(
+        &self,
+        input: Act,
+        qvec: &[f32; 64],
+        observer: Option<&mut dyn PlanObserver>,
+    ) -> Tensor {
         let channels = match &input {
             Act::Sparse(s) => s.dims().1,
             Act::Dense(t) => t.shape()[1],
@@ -193,7 +205,6 @@ impl NativeEngine {
             num_freqs: self.num_freqs,
             method: self.method,
         };
-        let observer = trace.map(|t| t as &mut dyn PlanObserver);
         // band_limited is sound here because the engine only ever runs
         // RESNET_PLAN, where every conv output reaches the logits
         // through a ReLU at the engine's phi budget (see

@@ -16,7 +16,8 @@ use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use super::protocol::{
-    encode_request, read_response, FrameError, ProtocolError, ResponseBody, WireCode,
+    encode_request, encode_stats_request, read_response, read_stats_response, FrameError,
+    ProtocolError, ResponseBody, WireCode,
 };
 
 /// A successful remote inference.
@@ -149,6 +150,26 @@ impl Client {
                 Reply::Err { request_id: frame.request_id, code, message }
             }
         })
+    }
+
+    /// Scrape the server's metrics registry: send one stats-request
+    /// frame and block for the exposition text.  Single-in-flight like
+    /// [`Client::infer`] — don't interleave with pipelined inference on
+    /// the same connection (the stats reply would race the logits).
+    pub fn stats(&mut self) -> Result<String, ClientError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let frame = encode_stats_request(id).map_err(ClientError::Protocol)?;
+        use io::Write;
+        self.writer.write_all(&frame)?;
+        let (got_id, text) =
+            read_stats_response(&mut self.reader)?.ok_or(ClientError::Closed)?;
+        if got_id != id {
+            return Err(ClientError::Protocol(ProtocolError::Malformed(
+                "stats reply to a different request id",
+            )));
+        }
+        Ok(text)
     }
 
     /// Submit and wait for that request's reply (single in-flight).

@@ -35,7 +35,8 @@ use crate::serving::metrics::FrontendMetrics;
 use crate::serving::pipeline::{NativePipeline, ServeRequest};
 
 use super::protocol::{
-    encode_response, read_request, FrameError, ResponseBody, ResponseFrame, WireCode,
+    encode_response, encode_stats_response, read_incoming, FrameError, IncomingFrame,
+    ResponseBody, ResponseFrame, WireCode,
 };
 
 /// Socket front end settings (`[serve] listen_addr` / `warmup_batches`;
@@ -85,7 +86,7 @@ impl WarmupGate {
         if self.warmed.load(Ordering::Relaxed) {
             return true;
         }
-        if pipeline.aggregate().batches.load(Ordering::Relaxed) >= self.need {
+        if pipeline.aggregate().batches.get() >= self.need {
             self.warmed.store(true, Ordering::Relaxed);
             return true;
         }
@@ -148,7 +149,9 @@ impl SocketFrontend {
         let local_addr = listener.local_addr()?;
         // non-blocking accept so the stop flag is honored promptly
         listener.set_nonblocking(true)?;
-        let metrics = Arc::new(FrontendMetrics::new());
+        // frontend counters live in the pipeline's registry, so one
+        // Stats scrape covers both layers
+        let metrics = Arc::new(FrontendMetrics::register(pipeline.registry()));
         let stop = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<(TcpStream, JoinHandle<()>)>>> =
             Arc::new(Mutex::new(Vec::new()));
@@ -277,6 +280,19 @@ fn write_response(
     }
 }
 
+/// Serialize one stats (metrics-scrape) response.  Deliberately does
+/// NOT go through [`FrontendMetrics::record_response`]: stats replies
+/// are observability traffic, and keeping them out of the per-code
+/// counters preserves `sum(responses) == requests + protocol_errors`.
+fn write_stats(writer: &Mutex<TcpStream>, request_id: u64, text: &str) {
+    let bytes = encode_stats_response(request_id, text);
+    use std::io::Write;
+    let mut w = writer.lock().unwrap();
+    if w.write_all(&bytes).is_err() {
+        let _ = w.shutdown(std::net::Shutdown::Both);
+    }
+}
+
 fn error_frame(request_id: u64, code: WireCode, message: String) -> ResponseFrame {
     ResponseFrame {
         request_id,
@@ -306,10 +322,22 @@ fn handle_connection(
     };
     let mut reader = stream;
     let inflight = Arc::new(Inflight::default());
+    let tracer = pipeline.tracer().cloned();
 
     loop {
-        let req = match read_request(&mut reader) {
-            Ok(Some(req)) => req,
+        let req = match read_incoming(&mut reader) {
+            Ok(Some(IncomingFrame::Infer(req))) => req,
+            Ok(Some(IncomingFrame::Stats { request_id })) => {
+                // a scrape must work while the server warms up or
+                // saturates: stats frames bypass the slow-start gate
+                // and the inflight cap, and stay out of the traffic
+                // counters they report (requests == infer frames;
+                // per-code responses count only infer replies)
+                metrics.record_stats_request();
+                let text = pipeline.registry().render();
+                write_stats(&writer, request_id, &text);
+                continue;
+            }
             Ok(None) => break, // clean close between frames
             Err(FrameError::Protocol { error, request_id }) => {
                 // a truncated read during our own drain is the drain,
@@ -358,7 +386,7 @@ fn handle_connection(
 
         let deadline = (req.deadline_budget_us > 0)
             .then(|| Instant::now() + Duration::from_micros(req.deadline_budget_us));
-        let mut serve_req = ServeRequest::new(req.payload);
+        let mut serve_req = ServeRequest::new(req.payload).with_request_id(req.request_id);
         serve_req.deadline = deadline;
 
         // per-connection in-flight bound: stop reading frames (TCP
@@ -369,17 +397,22 @@ fn handle_connection(
                 let writer = writer.clone();
                 let metrics = metrics.clone();
                 let inflight = inflight.clone();
+                let tracer = tracer.clone();
                 let request_id = req.request_id;
                 std::thread::spawn(move || {
+                    let mut traced = false;
                     let frame = match rx.recv() {
-                        Ok(Ok(resp)) => ResponseFrame {
-                            request_id,
-                            latency_us: resp.latency.as_micros().min(u64::MAX as u128) as u64,
-                            body: ResponseBody::Logits {
-                                predicted: resp.predicted.min(u32::MAX as usize) as u32,
-                                logits: resp.logits,
-                            },
-                        },
+                        Ok(Ok(resp)) => {
+                            traced = resp.traced;
+                            ResponseFrame {
+                                request_id,
+                                latency_us: resp.latency.as_micros().min(u64::MAX as u128) as u64,
+                                body: ResponseBody::Logits {
+                                    predicted: resp.predicted.min(u32::MAX as usize) as u32,
+                                    logits: resp.logits,
+                                },
+                            }
+                        }
                         Ok(Err(e)) => {
                             let code = e
                                 .downcast_ref::<ServeError>()
@@ -393,7 +426,14 @@ fn handle_connection(
                             "serving worker lost before reply".to_string(),
                         ),
                     };
+                    let write_started = Instant::now();
                     write_response(&writer, &frame, &metrics);
+                    // the sixth (and last) span of a sampled request
+                    if traced {
+                        if let Some(t) = &tracer {
+                            t.span(request_id, "socket-write", write_started, Instant::now());
+                        }
+                    }
                     inflight.dec();
                 });
             }

@@ -8,7 +8,12 @@
 //! * [`protocol`] — the length-prefixed binary frame format (versioned
 //!   header, request id, optional deadline budget in µs, quality hint,
 //!   JPEG payload; responses carry logits or a typed [`WireCode`]
-//!   mirroring `ServeError` plus `WarmingUp` and `Protocol`).
+//!   mirroring `ServeError` plus `WarmingUp` and `Protocol`).  Since
+//!   the telemetry PR it also carries **stats frames**: a payload-less
+//!   scrape request answered with the server's metrics registry
+//!   rendered as Prometheus-style exposition text (see
+//!   [`crate::telemetry`]); peers predating the extension answer the
+//!   unknown kind with a typed `Protocol` error, never a hang.
 //! * [`listener`] — [`SocketFrontend`]: a `std::net` acceptor plus
 //!   connection worker pool (no async runtime) feeding
 //!   `NativePipeline::try_submit_request`, streaming responses back

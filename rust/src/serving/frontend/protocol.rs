@@ -33,6 +33,18 @@
 //! | 24 | 4 | body length |
 //! | 28 | n | body: ok -> predicted class `u32` + logits as `f32` words; error -> utf-8 message |
 //!
+//! ## Stats frames (metrics scrape)
+//!
+//! Kind 3 (stats request) reuses the request header with a **zero**
+//! payload length — any payload is a typed `Malformed` violation.  The
+//! server answers with kind 4 (stats response): the response header
+//! with status 0 and the rendered Prometheus-style exposition text as
+//! a utf-8 body.  Old peers that predate these kinds keep their exact
+//! behavior: a server reading with [`read_request`] sees kind 3 as a
+//! typed [`ProtocolError::BadKind`] and answers with a normal
+//! `protocol` error response — the versioned framing makes the new
+//! kinds invisible rather than corrupting.
+//!
 //! ## Robustness contract
 //!
 //! Parsing never panics and never trusts a declared length: payloads
@@ -53,6 +65,10 @@ pub const VERSION: u8 = 1;
 pub const KIND_REQUEST: u8 = 1;
 /// Frame kind byte: response.
 pub const KIND_RESPONSE: u8 = 2;
+/// Frame kind byte: metrics scrape request (empty payload).
+pub const KIND_STATS_REQUEST: u8 = 3;
+/// Frame kind byte: metrics scrape response (utf-8 exposition body).
+pub const KIND_STATS_RESPONSE: u8 = 4;
 /// Shared header size (both directions).
 pub const HEADER_LEN: usize = 28;
 /// Hard cap on a declared payload/body length.  A frame declaring more
@@ -383,30 +399,151 @@ fn read_body(
     }
 }
 
+/// Reject the reserved id 0: it is the server's sentinel for errors
+/// that cannot be attributed to a frame, so a frame claiming it would
+/// be ambiguous with that sentinel.
+fn reject_id_zero(request_id: u64) -> Result<(), FrameError> {
+    if request_id == 0 {
+        return Err(FrameError::protocol_for(
+            ProtocolError::Malformed("request id 0 is reserved for unattributable errors"),
+            0,
+        ));
+    }
+    Ok(())
+}
+
+/// Parse a request frame's remainder once its header validated.
+fn finish_request(
+    r: &mut impl Read,
+    h: &[u8; HEADER_LEN],
+    request_id: u64,
+) -> Result<RequestFrame, FrameError> {
+    reject_id_zero(request_id)?;
+    let payload = read_body(r, u32_at(h, 24), request_id, "request payload")?;
+    Ok(RequestFrame {
+        request_id,
+        deadline_budget_us: u64_at(h, 12),
+        quality_hint: h[20],
+        payload,
+    })
+}
+
 /// Read one request frame.  `Ok(None)` = the client closed cleanly
-/// between frames.
+/// between frames.  Unchanged by the stats extension on purpose: a
+/// peer reading with this function treats `Stats` frames as a typed
+/// [`ProtocolError::BadKind`] — the documented old-peer behavior.
 pub fn read_request(r: &mut impl Read) -> Result<Option<RequestFrame>, FrameError> {
     let mut h = [0u8; HEADER_LEN];
     if !read_full(r, &mut h, "request header", true)? {
         return Ok(None);
     }
     let request_id = check_header(&h, KIND_REQUEST)?;
+    Ok(Some(finish_request(r, &h, request_id)?))
+}
+
+/// Any frame a server may legally receive.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum IncomingFrame {
+    /// An inference request.
+    Infer(RequestFrame),
+    /// A metrics scrape; the server answers with the rendered
+    /// exposition text under the echoed id.
+    Stats {
+        /// Echoed on the stats response.
+        request_id: u64,
+    },
+}
+
+/// Read one incoming frame of either accepted kind.  `Ok(None)` = the
+/// client closed cleanly between frames; an unknown kind byte is a
+/// typed [`ProtocolError::BadKind`] carrying the frame's id.
+pub fn read_incoming(r: &mut impl Read) -> Result<Option<IncomingFrame>, FrameError> {
+    let mut h = [0u8; HEADER_LEN];
+    if !read_full(r, &mut h, "request header", true)? {
+        return Ok(None);
+    }
+    if h[0..2] != MAGIC {
+        return Err(FrameError::protocol(ProtocolError::BadMagic([h[0], h[1]])));
+    }
+    if h[2] != VERSION {
+        return Err(FrameError::protocol(ProtocolError::BadVersion(h[2])));
+    }
+    let request_id = u64_at(&h, 4);
+    match h[3] {
+        KIND_REQUEST => Ok(Some(IncomingFrame::Infer(finish_request(r, &h, request_id)?))),
+        KIND_STATS_REQUEST => {
+            reject_id_zero(request_id)?;
+            if u32_at(&h, 24) != 0 {
+                return Err(FrameError::protocol_for(
+                    ProtocolError::Malformed("a stats request carries no payload"),
+                    request_id,
+                ));
+            }
+            Ok(Some(IncomingFrame::Stats { request_id }))
+        }
+        got => Err(FrameError::protocol_for(
+            ProtocolError::BadKind { got, want: KIND_REQUEST },
+            request_id,
+        )),
+    }
+}
+
+/// Serialize a stats (metrics scrape) request: a bare header, no
+/// payload.  Id 0 is reserved, as for inference requests.
+pub fn encode_stats_request(request_id: u64) -> Result<Vec<u8>, ProtocolError> {
     if request_id == 0 {
-        // id 0 is the server's sentinel for errors that cannot be
-        // attributed to a frame; a request claiming it would be
-        // ambiguous with that sentinel
-        return Err(FrameError::protocol_for(
-            ProtocolError::Malformed("request id 0 is reserved for unattributable errors"),
-            0,
+        return Err(ProtocolError::Malformed(
+            "request id 0 is reserved for unattributable errors",
         ));
     }
-    let payload = read_body(r, u32_at(&h, 24), request_id, "request payload")?;
-    Ok(Some(RequestFrame {
-        request_id,
-        deadline_budget_us: u64_at(&h, 12),
-        quality_hint: h[20],
-        payload,
-    }))
+    let mut out = Vec::with_capacity(HEADER_LEN);
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(KIND_STATS_REQUEST);
+    out.extend_from_slice(&request_id.to_le_bytes());
+    out.extend_from_slice(&[0u8; 12]); // deadline/hint/reserved unused
+    out.extend_from_slice(&0u32.to_le_bytes());
+    Ok(out)
+}
+
+/// Serialize a stats response carrying the rendered exposition text.
+/// A body above [`MAX_PAYLOAD`] is truncated at a char boundary (a
+/// real scrape is kilobytes, nowhere near the cap).
+pub fn encode_stats_response(request_id: u64, text: &str) -> Vec<u8> {
+    let mut cut = text.len().min(MAX_PAYLOAD as usize);
+    while cut > 0 && !text.is_char_boundary(cut) {
+        cut -= 1;
+    }
+    let body = &text.as_bytes()[..cut];
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(KIND_STATS_RESPONSE);
+    out.extend_from_slice(&request_id.to_le_bytes());
+    out.push(WireCode::Ok as u8);
+    out.extend_from_slice(&[0u8; 3]);
+    out.extend_from_slice(&0u64.to_le_bytes());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(body);
+    out
+}
+
+/// Read one stats response: `(request id, exposition text)`.
+/// `Ok(None)` = the server closed cleanly between frames.
+pub fn read_stats_response(r: &mut impl Read) -> Result<Option<(u64, String)>, FrameError> {
+    let mut h = [0u8; HEADER_LEN];
+    if !read_full(r, &mut h, "stats response header", true)? {
+        return Ok(None);
+    }
+    let request_id = check_header(&h, KIND_STATS_RESPONSE)?;
+    let body = read_body(r, u32_at(&h, 24), request_id, "stats response body")?;
+    match String::from_utf8(body) {
+        Ok(text) => Ok(Some((request_id, text))),
+        Err(_) => Err(FrameError::protocol_for(
+            ProtocolError::Malformed("stats body must be utf-8 text"),
+            request_id,
+        )),
+    }
 }
 
 /// Read one response frame.  `Ok(None)` = the server closed cleanly
@@ -603,6 +740,93 @@ mod tests {
         assert!(matches!(
             read_response(&mut Cursor::new(&bytes)),
             Err(FrameError::Protocol { error: ProtocolError::Malformed(_), request_id: Some(8) })
+        ));
+    }
+
+    #[test]
+    fn stats_request_roundtrips_through_read_incoming() {
+        let bytes = encode_stats_request(17).unwrap();
+        assert_eq!(bytes.len(), HEADER_LEN, "a stats request is a bare header");
+        let got = read_incoming(&mut Cursor::new(&bytes)).unwrap().unwrap();
+        assert_eq!(got, IncomingFrame::Stats { request_id: 17 });
+        // infer frames pass through the same reader untouched
+        let req = encode_request(42, 5, 75, b"jj").unwrap();
+        match read_incoming(&mut Cursor::new(&req)).unwrap().unwrap() {
+            IncomingFrame::Infer(f) => assert_eq!(f.request_id, 42),
+            other => panic!("expected Infer, got {other:?}"),
+        }
+        let mut cur = Cursor::new(&[][..]);
+        assert!(read_incoming(&mut cur).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn stats_request_id_zero_is_reserved() {
+        assert!(matches!(encode_stats_request(0), Err(ProtocolError::Malformed(_))));
+        let mut bytes = encode_stats_request(1).unwrap();
+        bytes[4..12].copy_from_slice(&0u64.to_le_bytes());
+        assert!(matches!(
+            read_incoming(&mut Cursor::new(&bytes)),
+            Err(FrameError::Protocol { error: ProtocolError::Malformed(_), .. })
+        ));
+    }
+
+    #[test]
+    fn stats_request_with_payload_is_malformed() {
+        let mut bytes = encode_stats_request(6).unwrap();
+        bytes[24..28].copy_from_slice(&4u32.to_le_bytes());
+        bytes.extend_from_slice(b"junk");
+        match read_incoming(&mut Cursor::new(&bytes)) {
+            Err(FrameError::Protocol { error: ProtocolError::Malformed(_), request_id }) => {
+                assert_eq!(request_id, Some(6), "violation attributed to the frame");
+            }
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn old_peers_see_stats_as_typed_bad_kind() {
+        // a server still reading with read_request (pre-stats build)
+        let bytes = encode_stats_request(9).unwrap();
+        match read_request(&mut Cursor::new(&bytes)) {
+            Err(FrameError::Protocol {
+                error: ProtocolError::BadKind { got, want },
+                request_id,
+            }) => {
+                assert_eq!((got, want), (KIND_STATS_REQUEST, KIND_REQUEST));
+                assert_eq!(request_id, Some(9), "the error response stays addressable");
+            }
+            other => panic!("expected BadKind, got {other:?}"),
+        }
+        // read_incoming rejects kinds NEITHER side knows the same way
+        let mut bytes = encode_stats_request(9).unwrap();
+        bytes[3] = 250;
+        assert!(matches!(
+            read_incoming(&mut Cursor::new(&bytes)),
+            Err(FrameError::Protocol {
+                error: ProtocolError::BadKind { got: 250, .. },
+                request_id: Some(9),
+            })
+        ));
+    }
+
+    #[test]
+    fn stats_response_roundtrip() {
+        let text = "# HELP jd_x total\n# TYPE jd_x counter\njd_x 3\n";
+        let bytes = encode_stats_response(17, text);
+        let (id, got) = read_stats_response(&mut Cursor::new(&bytes)).unwrap().unwrap();
+        assert_eq!(id, 17);
+        assert_eq!(got, text);
+        // empty exposition is legal
+        let bytes = encode_stats_response(2, "");
+        let (_, got) = read_stats_response(&mut Cursor::new(&bytes)).unwrap().unwrap();
+        assert!(got.is_empty());
+        // non-utf8 body is a typed violation
+        let mut bytes = encode_stats_response(3, "abcd");
+        let at = bytes.len() - 4;
+        bytes[at..].copy_from_slice(&[0xff, 0xfe, 0xff, 0xfe]);
+        assert!(matches!(
+            read_stats_response(&mut Cursor::new(&bytes)),
+            Err(FrameError::Protocol { error: ProtocolError::Malformed(_), request_id: Some(3) })
         ));
     }
 

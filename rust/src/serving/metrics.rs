@@ -1,23 +1,31 @@
-//! Per-stage pipeline metrics + per-quality traffic tags.
+//! Per-stage pipeline metrics + per-quality traffic tags, as views
+//! over the shared telemetry registry.
 //!
-//! Histograms reuse the coordinator's lock-free
-//! [`LatencyHistogram`]; each stage tracks queue wait (enqueue ->
-//! pickup), service time, processed/error counts and the inbound
-//! queue's high-water mark.  Requests additionally carry a
-//! [`QualityTag`] recovered from the image's quantization table so
-//! quality-50/75/90 traffic can be read out separately.  When the
-//! compute stage runs the sparse-resident kernel, [`SparsityMetrics`]
-//! additionally accumulates per-layer nonzero fractions
-//! ([`crate::jpeg_domain::network::RESIDENCY_POINTS`]) so the sparsity
-//! decay through the network is observable in production.
+//! Every instrument here is registered in a [`Registry`]
+//! (`PipelineMetrics::register`, `FrontendMetrics::register`), so the
+//! same counters the in-process `snapshot()`/`Display` views print are
+//! scrapeable as Prometheus-style exposition text — over the wire via
+//! the `Stats` frame or locally via `--metrics-dump`.  Histograms are
+//! the registry's lock-free log-bucketed [`Histogram`]; each stage
+//! tracks queue wait (enqueue -> pickup), service time,
+//! processed/error counts and the inbound queue's high-water mark.
+//! Requests additionally carry a [`QualityTag`] recovered from the
+//! image's quantization table so quality-50/75/90 traffic can be read
+//! out separately.  When the compute stage runs the sparse-resident
+//! kernel, [`SparsityMetrics`] accumulates per-layer nonzero counts
+//! ([`crate::jpeg_domain::network::RESIDENCY_POINTS`]), and
+//! [`OpHistograms`] keeps one live latency histogram per
+//! [`LayerOp`] kind — including the axpy-kernel conv hot loop.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::coordinator::metrics::LatencyHistogram;
 use crate::jpeg::quant::QuantTable;
 use crate::jpeg_domain::network::{ResidencyTrace, RESIDENCY_POINTS};
+use crate::jpeg_domain::plan::{LayerOp, PlanObserver};
 use crate::serving::frontend::protocol::WireCode;
+use crate::telemetry::{Counter, Gauge, Histogram, Registry};
 
 /// Traffic class of one request, derived from its luma quant table.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -62,43 +70,54 @@ impl QualityTag {
     }
 }
 
-/// One stage's counters: wait in the inbound queue, service time,
+/// One stage's instruments: wait in the inbound queue, service time,
 /// inbound queue high-water mark.
 pub struct StageMetrics {
-    pub queue_wait: LatencyHistogram,
-    pub service: LatencyHistogram,
-    pub processed: AtomicU64,
-    pub errors: AtomicU64,
-    pub queue_peak: AtomicU64,
-}
-
-impl Default for StageMetrics {
-    fn default() -> Self {
-        Self::new()
-    }
+    pub queue_wait: Arc<Histogram>,
+    pub service: Arc<Histogram>,
+    pub processed: Arc<Counter>,
+    pub errors: Arc<Counter>,
+    pub queue_peak: Arc<Gauge>,
 }
 
 impl StageMetrics {
-    pub fn new() -> StageMetrics {
+    fn register(registry: &Arc<Registry>, stage: &str) -> StageMetrics {
+        let l = [("stage", stage)];
         StageMetrics {
-            queue_wait: LatencyHistogram::new(),
-            service: LatencyHistogram::new(),
-            processed: AtomicU64::new(0),
-            errors: AtomicU64::new(0),
-            queue_peak: AtomicU64::new(0),
+            queue_wait: registry.histogram(
+                "jd_stage_queue_wait_us",
+                "enqueue-to-pickup wait per pipeline stage",
+                &l,
+            ),
+            service: registry.histogram(
+                "jd_stage_service_us",
+                "service time per pipeline stage",
+                &l,
+            ),
+            processed: registry.counter(
+                "jd_stage_processed_total",
+                "items a stage completed",
+                &l,
+            ),
+            errors: registry.counter("jd_stage_errors_total", "items a stage failed", &l),
+            queue_peak: registry.gauge(
+                "jd_stage_queue_peak",
+                "high-water mark of a stage's inbound queue",
+                &l,
+            ),
         }
     }
 
     /// Record an observed inbound queue depth.
     pub fn note_depth(&self, depth: usize) {
-        self.queue_peak.fetch_max(depth as u64, Ordering::Relaxed);
+        self.queue_peak.max(depth as u64);
     }
 }
 
 /// Per-tag request counter + end-to-end latency histogram.
 pub struct TagMetrics {
-    pub requests: AtomicU64,
-    pub latency: LatencyHistogram,
+    pub requests: Arc<Counter>,
+    pub latency: Arc<Histogram>,
 }
 
 /// Per-layer nonzero accounting of the sparse-resident kernel: one
@@ -106,63 +125,136 @@ pub struct TagMetrics {
 /// counts (not fractions) so aggregation across batches and workers is
 /// exact; only populated when the compute stage runs `sparse-resident`.
 pub struct SparsityMetrics {
-    nnz: [AtomicU64; RESIDENCY_POINTS.len()],
-    total: [AtomicU64; RESIDENCY_POINTS.len()],
-}
-
-impl Default for SparsityMetrics {
-    fn default() -> Self {
-        Self::new()
-    }
+    nnz: [Arc<Counter>; RESIDENCY_POINTS.len()],
+    total: [Arc<Counter>; RESIDENCY_POINTS.len()],
 }
 
 impl SparsityMetrics {
-    pub fn new() -> SparsityMetrics {
+    fn register(registry: &Arc<Registry>) -> SparsityMetrics {
         SparsityMetrics {
-            nnz: std::array::from_fn(|_| AtomicU64::new(0)),
-            total: std::array::from_fn(|_| AtomicU64::new(0)),
+            nnz: std::array::from_fn(|i| {
+                registry.counter(
+                    "jd_layer_nnz_total",
+                    "nonzero coefficients observed at a residency point",
+                    &[("layer", RESIDENCY_POINTS[i])],
+                )
+            }),
+            total: std::array::from_fn(|i| {
+                registry.counter(
+                    "jd_layer_coeffs_total",
+                    "total coefficients observed at a residency point",
+                    &[("layer", RESIDENCY_POINTS[i])],
+                )
+            }),
         }
     }
 
     /// Fold one forward's residency trace into the counters.
     pub fn record(&self, trace: &ResidencyTrace) {
         for (i, &(nnz, total)) in trace.counts.iter().enumerate() {
-            self.nnz[i].fetch_add(nnz, Ordering::Relaxed);
-            self.total[i].fetch_add(total, Ordering::Relaxed);
+            self.nnz[i].add(nnz);
+            self.total[i].add(total);
         }
     }
 
     /// `(layer label, nonzero fraction)` per observation point;
     /// empty when no resident traffic has been recorded.
     pub fn fractions(&self) -> Vec<(&'static str, f64)> {
-        if self.total[0].load(Ordering::Relaxed) == 0 {
+        if self.total[0].get() == 0 {
             return Vec::new();
         }
         RESIDENCY_POINTS
             .iter()
             .enumerate()
             .map(|(i, &label)| {
-                let t = self.total[i].load(Ordering::Relaxed);
-                let n = self.nnz[i].load(Ordering::Relaxed);
+                let t = self.total[i].get();
+                let n = self.nnz[i].get();
                 (label, if t == 0 { 0.0 } else { n as f64 / t as f64 })
             })
             .collect()
     }
 }
 
+/// Live wall-time histograms keyed by [`LayerOp`] label
+/// (`jd_plan_op_us{op="conv conv1.w /1"}`, ...).  Series register
+/// lazily on first sight of an op label; recording after that is one
+/// mutex-guarded map lookup plus a lock-free histogram record.
+pub struct OpHistograms {
+    registry: Arc<Registry>,
+    by_label: Mutex<HashMap<String, Arc<Histogram>>>,
+}
+
+impl OpHistograms {
+    fn register(registry: &Arc<Registry>) -> OpHistograms {
+        OpHistograms { registry: registry.clone(), by_label: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn record(&self, label: &str, elapsed: Duration) {
+        let h = {
+            let mut map = self.by_label.lock().unwrap();
+            match map.get(label) {
+                Some(h) => h.clone(),
+                None => {
+                    let h = self.registry.histogram(
+                        "jd_plan_op_us",
+                        "wall time per plan LayerOp in the compute stage",
+                        &[("op", label)],
+                    );
+                    map.insert(label.to_string(), h.clone());
+                    h
+                }
+            }
+        };
+        h.record(elapsed);
+    }
+
+    /// Op labels observed so far (testing / introspection).
+    pub fn labels(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.by_label.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+/// A [`PlanObserver`] that clocks every op into [`OpHistograms`].
+/// Declines activations (`wants_activations` = false), so attaching it
+/// never triggers occupancy scans — per-op timing costs two `Instant`
+/// reads per op and nothing on the arithmetic itself.
+pub struct OpRecorder<'a>(&'a OpHistograms);
+
+impl<'a> OpRecorder<'a> {
+    pub fn new(ops: &'a OpHistograms) -> OpRecorder<'a> {
+        OpRecorder(ops)
+    }
+}
+
+impl PlanObserver for OpRecorder<'_> {
+    fn activation(&mut self, _label: &'static str, _nnz: u64, _total: u64) {}
+
+    fn wants_activations(&self) -> bool {
+        false
+    }
+
+    fn op_done(&mut self, _node: usize, op: &LayerOp, elapsed: Duration) {
+        self.0.record(&op.label(), elapsed);
+    }
+}
+
 /// Aggregate view over the whole native pipeline.
 pub struct PipelineMetrics {
-    pub admitted: AtomicU64,
-    pub rejected: AtomicU64,
+    pub admitted: Arc<Counter>,
+    pub rejected: Arc<Counter>,
     /// Requests dropped because their deadline passed before compute
     /// (rejected at admission or shed at a stage pickup).
-    pub deadline_expired: AtomicU64,
+    pub deadline_expired: Arc<Counter>,
     pub decode: StageMetrics,
     pub compute: StageMetrics,
     /// submit -> reply, over successfully answered requests.
-    pub e2e: LatencyHistogram,
+    pub e2e: Arc<Histogram>,
     /// Per-layer nonzero fractions (sparse-resident kernel only).
     pub sparsity: SparsityMetrics,
+    /// Per-LayerOp wall-time histograms (compute stage).
+    pub plan_ops: OpHistograms,
     tags: [TagMetrics; 4],
 }
 
@@ -173,18 +265,52 @@ impl Default for PipelineMetrics {
 }
 
 impl PipelineMetrics {
+    /// Standalone metrics over a private registry (tests, ad-hoc use).
     pub fn new() -> PipelineMetrics {
+        Self::register(&Arc::new(Registry::new()))
+    }
+
+    /// Register every pipeline instrument in `registry`.
+    pub fn register(registry: &Arc<Registry>) -> PipelineMetrics {
         PipelineMetrics {
-            admitted: AtomicU64::new(0),
-            rejected: AtomicU64::new(0),
-            deadline_expired: AtomicU64::new(0),
-            decode: StageMetrics::new(),
-            compute: StageMetrics::new(),
-            e2e: LatencyHistogram::new(),
-            sparsity: SparsityMetrics::new(),
-            tags: std::array::from_fn(|_| TagMetrics {
-                requests: AtomicU64::new(0),
-                latency: LatencyHistogram::new(),
+            admitted: registry.counter(
+                "jd_pipeline_admitted_total",
+                "requests admitted past the bounded admission queue",
+                &[],
+            ),
+            rejected: registry.counter(
+                "jd_pipeline_rejected_total",
+                "requests shed at admission (queue full)",
+                &[],
+            ),
+            deadline_expired: registry.counter(
+                "jd_pipeline_deadline_expired_total",
+                "requests dropped for an expired deadline before compute",
+                &[],
+            ),
+            decode: StageMetrics::register(registry, "decode"),
+            compute: StageMetrics::register(registry, "compute"),
+            e2e: registry.histogram(
+                "jd_request_e2e_us",
+                "submit-to-reply latency of successfully answered requests",
+                &[],
+            ),
+            sparsity: SparsityMetrics::register(registry),
+            plan_ops: OpHistograms::register(registry),
+            tags: std::array::from_fn(|i| {
+                let l = [("quality", QualityTag::ALL[i].label())];
+                TagMetrics {
+                    requests: registry.counter(
+                        "jd_requests_by_quality_total",
+                        "served requests per quality traffic class",
+                        &l,
+                    ),
+                    latency: registry.histogram(
+                        "jd_request_latency_us",
+                        "end-to-end latency per quality traffic class",
+                        &l,
+                    ),
+                }
             }),
         }
     }
@@ -197,7 +323,7 @@ impl PipelineMetrics {
     pub fn record_done(&self, tag: QualityTag, latency: Duration) {
         self.e2e.record(latency);
         let tm = self.tag(tag);
-        tm.requests.fetch_add(1, Ordering::Relaxed);
+        tm.requests.inc();
         tm.latency.record(latency);
     }
 
@@ -207,14 +333,14 @@ impl PipelineMetrics {
             queue_wait_p99_ms: s.queue_wait.quantile_us(0.99) / 1e3,
             service_p50_ms: s.service.quantile_us(0.50) / 1e3,
             service_p99_ms: s.service.quantile_us(0.99) / 1e3,
-            processed: s.processed.load(Ordering::Relaxed),
-            errors: s.errors.load(Ordering::Relaxed),
-            queue_peak: s.queue_peak.load(Ordering::Relaxed),
+            processed: s.processed.get(),
+            errors: s.errors.get(),
+            queue_peak: s.queue_peak.get(),
         };
         PipelineSnapshot {
-            admitted: self.admitted.load(Ordering::Relaxed),
-            rejected: self.rejected.load(Ordering::Relaxed),
-            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
+            admitted: self.admitted.get(),
+            rejected: self.rejected.get(),
+            deadline_expired: self.deadline_expired.get(),
             decode: stage(&self.decode),
             compute: stage(&self.compute),
             e2e_p50_ms: self.e2e.quantile_us(0.50) / 1e3,
@@ -222,7 +348,7 @@ impl PipelineMetrics {
             e2e_mean_ms: self.e2e.mean_us() / 1e3,
             per_tag: QualityTag::ALL.map(|t| {
                 let tm = self.tag(t);
-                (t, tm.requests.load(Ordering::Relaxed), tm.latency.quantile_us(0.50) / 1e3)
+                (t, tm.requests.get(), tm.latency.quantile_us(0.50) / 1e3)
             }),
             layer_nonzero: self.sparsity.fractions(),
         }
@@ -235,16 +361,20 @@ impl PipelineMetrics {
 /// (`protocol`) are each separately observable.
 pub struct FrontendMetrics {
     /// Connections accepted.
-    pub connections_opened: AtomicU64,
+    pub connections_opened: Arc<Counter>,
     /// Connections fully drained and closed.
-    pub connections_closed: AtomicU64,
-    /// Well-formed request frames read off sockets.
-    pub requests: AtomicU64,
+    pub connections_closed: Arc<Counter>,
+    /// Well-formed inference request frames read off sockets.
+    pub requests: Arc<Counter>,
     /// Frames that violated the protocol (each also closes its
     /// connection after a typed `protocol` response).
-    pub protocol_errors: AtomicU64,
+    pub protocol_errors: Arc<Counter>,
+    /// `Stats` (metrics scrape) frames served.  Counted apart from
+    /// `requests` so scraping never perturbs the traffic counters it
+    /// reports (`requests == sum of per-code responses` stays exact).
+    pub stats_requests: Arc<Counter>,
     /// Responses written, indexed by `WireCode as usize` (incl. `ok`).
-    responses: [AtomicU64; WireCode::COUNT],
+    responses: [Arc<Counter>; WireCode::COUNT],
 }
 
 impl Default for FrontendMetrics {
@@ -254,48 +384,85 @@ impl Default for FrontendMetrics {
 }
 
 impl FrontendMetrics {
+    /// Standalone metrics over a private registry (tests, ad-hoc use).
     pub fn new() -> FrontendMetrics {
+        Self::register(&Arc::new(Registry::new()))
+    }
+
+    /// Register every front-end instrument in `registry`.
+    pub fn register(registry: &Arc<Registry>) -> FrontendMetrics {
         FrontendMetrics {
-            connections_opened: AtomicU64::new(0),
-            connections_closed: AtomicU64::new(0),
-            requests: AtomicU64::new(0),
-            protocol_errors: AtomicU64::new(0),
-            responses: std::array::from_fn(|_| AtomicU64::new(0)),
+            connections_opened: registry.counter(
+                "jd_frontend_connections_opened_total",
+                "socket connections accepted",
+                &[],
+            ),
+            connections_closed: registry.counter(
+                "jd_frontend_connections_closed_total",
+                "socket connections fully drained and closed",
+                &[],
+            ),
+            requests: registry.counter(
+                "jd_frontend_requests_total",
+                "well-formed inference request frames read off sockets",
+                &[],
+            ),
+            protocol_errors: registry.counter(
+                "jd_frontend_protocol_errors_total",
+                "frames that violated the wire protocol",
+                &[],
+            ),
+            stats_requests: registry.counter(
+                "jd_frontend_stats_requests_total",
+                "Stats (metrics scrape) frames served",
+                &[],
+            ),
+            responses: std::array::from_fn(|i| {
+                registry.counter(
+                    "jd_frontend_responses_total",
+                    "responses written per wire code",
+                    &[("code", WireCode::ALL[i].label())],
+                )
+            }),
         }
     }
 
     pub fn connection_opened(&self) {
-        self.connections_opened.fetch_add(1, Ordering::Relaxed);
+        self.connections_opened.inc();
     }
 
     pub fn connection_closed(&self) {
-        self.connections_closed.fetch_add(1, Ordering::Relaxed);
+        self.connections_closed.inc();
     }
 
     pub fn record_request(&self) {
-        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.requests.inc();
     }
 
     pub fn record_protocol_error(&self) {
-        self.protocol_errors.fetch_add(1, Ordering::Relaxed);
+        self.protocol_errors.inc();
+    }
+
+    pub fn record_stats_request(&self) {
+        self.stats_requests.inc();
     }
 
     /// Count one written response under its wire code.
     pub fn record_response(&self, code: WireCode) {
-        self.responses[code as usize].fetch_add(1, Ordering::Relaxed);
+        self.responses[code as usize].inc();
     }
 
     /// Responses written so far under `code`.
     pub fn responses_with(&self, code: WireCode) -> u64 {
-        self.responses[code as usize].load(Ordering::Relaxed)
+        self.responses[code as usize].get()
     }
 
     pub fn snapshot(&self) -> FrontendSnapshot {
         FrontendSnapshot {
-            connections_opened: self.connections_opened.load(Ordering::Relaxed),
-            connections_closed: self.connections_closed.load(Ordering::Relaxed),
-            requests: self.requests.load(Ordering::Relaxed),
-            protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
+            connections_opened: self.connections_opened.get(),
+            connections_closed: self.connections_closed.get(),
+            requests: self.requests.get(),
+            protocol_errors: self.protocol_errors.get(),
             responses: WireCode::ALL.map(|c| (c.label(), self.responses_with(c))),
         }
     }
@@ -475,8 +642,8 @@ mod tests {
     #[test]
     fn record_and_snapshot() {
         let m = PipelineMetrics::new();
-        m.admitted.fetch_add(3, Ordering::Relaxed);
-        m.rejected.fetch_add(1, Ordering::Relaxed);
+        m.admitted.add(3);
+        m.rejected.inc();
         m.decode.note_depth(5);
         m.decode.note_depth(2);
         m.record_done(QualityTag::Q50, Duration::from_millis(4));
@@ -490,5 +657,43 @@ mod tests {
         assert_eq!(s.per_tag[3].1, 1, "other count");
         assert!(s.e2e_p50_ms > 0.0);
         assert!(!s.to_string().is_empty());
+    }
+
+    #[test]
+    fn registered_families_render_in_exposition() {
+        let registry = Arc::new(Registry::new());
+        let m = PipelineMetrics::register(&registry);
+        let f = FrontendMetrics::register(&registry);
+        m.admitted.add(2);
+        m.record_done(QualityTag::Q75, Duration::from_millis(3));
+        m.compute.service.record(Duration::from_millis(1));
+        m.plan_ops.record("conv stem /1", Duration::from_micros(400));
+        f.record_request();
+        f.record_response(WireCode::Ok);
+        let text = registry.render();
+        for family in [
+            "jd_pipeline_admitted_total 2",
+            "jd_requests_by_quality_total{quality=\"q75\"} 1",
+            "jd_stage_service_us_count{stage=\"compute\"} 1",
+            "jd_request_e2e_us_count 1",
+            "jd_plan_op_us_count{op=\"conv stem /1\"} 1",
+            "jd_frontend_requests_total 1",
+            "jd_frontend_responses_total{code=\"ok\"} 1",
+            "jd_layer_nnz_total{layer=\"input\"} 0",
+        ] {
+            assert!(text.contains(family), "missing {family:?} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn op_histograms_key_by_label() {
+        let m = PipelineMetrics::new();
+        let mut rec = OpRecorder::new(&m.plan_ops);
+        assert!(!rec.wants_activations(), "timing must not trigger occupancy scans");
+        rec.op_done(0, &LayerOp::GlobalAvgPool, Duration::from_micros(80));
+        rec.op_done(1, &LayerOp::Fc, Duration::from_micros(120));
+        rec.op_done(2, &LayerOp::Fc, Duration::from_micros(90));
+        let labels = m.plan_ops.labels();
+        assert_eq!(labels, ["fc", "global-avg-pool"]);
     }
 }

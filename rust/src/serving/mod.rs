@@ -62,10 +62,16 @@
 //! admitted request receives a reply.
 //!
 //! Per-stage latency and queue-depth metrics live in
-//! [`metrics::PipelineMetrics`] (histograms reuse
-//! [`crate::coordinator::metrics::LatencyHistogram`]); every request
-//! also carries a quality tag ([`metrics::QualityTag`], recovered from
-//! the quant table) so quality-50/75/90 traffic is tracked separately.
+//! [`metrics::PipelineMetrics`]; since the telemetry PR every
+//! instrument is a handle into the pipeline's
+//! [`crate::telemetry::Registry`], so one scrape (in process via
+//! `registry().render()`, or over the wire via the stats frame) sees
+//! frontend, pipeline, per-quality, and per-`LayerOp` families
+//! together.  Every request also carries a quality tag
+//! ([`metrics::QualityTag`], recovered from the quant table) so
+//! quality-50/75/90 traffic is tracked separately, and a sampled
+//! request (`--trace-sample N`) emits per-stage JSONL spans through
+//! [`crate::telemetry::Tracer`].
 //!
 //! Network callers reach the same pipeline through the [`frontend`]
 //! socket layer: a length-prefixed binary protocol whose typed response

@@ -4,7 +4,22 @@
 //! backpressure applies.  Replies travel over per-request oneshot-style
 //! channels as `anyhow::Result<InferResponse>`; typed failures are
 //! [`ServeError`]s recoverable via `downcast_ref`.
+//!
+//! ## Telemetry
+//!
+//! Every pipeline owns one telemetry [`Registry`] holding all of its
+//! instruments — per-stage metrics, the coordinator-compatible
+//! aggregate, live queue-depth gauges (`jd_queue_depth{queue=...}`),
+//! and per-`LayerOp` wall-time histograms recorded on every forward.
+//! The socket front end renders it for `Stats` scrapes
+//! ([`NativePipeline::registry`]).  With a [`Tracer`] attached
+//! ([`NativePipeline::start_traced`]), every sampled request emits one
+//! JSONL span per stage: `admission`, `decode`, `handoff`,
+//! `batch-assembly`, `compute` here, and `socket-write` in the
+//! listener.  Tracing is wall-clock bookkeeping only — logits stay
+//! bit-identical with tracing on or off.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -13,12 +28,14 @@ use std::time::Instant;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::server::InferResponse;
 use crate::jpeg::codec;
+use crate::jpeg_domain::plan::Tee;
+use crate::telemetry::{Registry, Tracer};
 use crate::tensor::SparseBlocks;
 
 use super::engine::NativeEngine;
 use super::error::ServeError;
-use super::metrics::{PipelineMetrics, QualityTag};
-use super::queue::{bounded, BoundedReceiver, BoundedSender, SendRejected};
+use super::metrics::{OpRecorder, PipelineMetrics, QualityTag};
+use super::queue::{bounded_with_gauge, BoundedReceiver, BoundedSender, SendRejected};
 
 /// Pipeline sizing.  Capacities bound every queue in the system; worker
 /// counts size the two pools.
@@ -61,17 +78,27 @@ pub struct ServeRequest {
     pub bytes: Vec<u8>,
     /// Latest instant at which starting compute is still useful.
     pub deadline: Option<Instant>,
+    /// Caller-supplied id carried into trace spans (the socket front
+    /// end passes the wire request id).  0 = unassigned; the pipeline
+    /// assigns an internal id to sampled requests so spans correlate.
+    pub request_id: u64,
 }
 
 impl ServeRequest {
     /// A request with no deadline.
     pub fn new(bytes: Vec<u8>) -> ServeRequest {
-        ServeRequest { bytes, deadline: None }
+        ServeRequest { bytes, deadline: None, request_id: 0 }
     }
 
     /// Attach an absolute deadline.
     pub fn with_deadline(mut self, deadline: Instant) -> ServeRequest {
         self.deadline = Some(deadline);
+        self
+    }
+
+    /// Attach an external request id (trace-span correlation).
+    pub fn with_request_id(mut self, id: u64) -> ServeRequest {
+        self.request_id = id;
         self
     }
 }
@@ -84,6 +111,8 @@ struct Job {
     bytes: Vec<u8>,
     deadline: Option<Instant>,
     submitted: Instant,
+    request_id: u64,
+    traced: bool,
     reply: Reply,
 }
 
@@ -95,6 +124,10 @@ struct DecodedJob {
     deadline: Option<Instant>,
     submitted: Instant,
     decoded_at: Instant,
+    /// Just before the handoff send; batch-assembly spans start here.
+    enqueued_at: Instant,
+    request_id: u64,
+    traced: bool,
     reply: Reply,
 }
 
@@ -108,16 +141,44 @@ pub struct NativePipeline {
     /// Coordinator-compatible aggregate (requests/batches/latency), so
     /// the `Server` facade exposes one metrics surface for both engines.
     aggregate: Arc<Metrics>,
+    /// The registry every instrument above lives in (scrape source).
+    registry: Arc<Registry>,
+    tracer: Option<Arc<Tracer>>,
+    /// Internal ids for requests submitted without one (high bit set to
+    /// keep them visually distinct from typical wire ids).
+    seq: AtomicU64,
     engine: Arc<NativeEngine>,
 }
 
 impl NativePipeline {
     pub fn start(engine: NativeEngine, cfg: PipelineConfig) -> NativePipeline {
+        Self::start_traced(engine, cfg, None)
+    }
+
+    /// [`NativePipeline::start`] with an optional span tracer attached
+    /// to the whole pipeline (`--trace-sample`).
+    pub fn start_traced(
+        engine: NativeEngine,
+        cfg: PipelineConfig,
+        tracer: Option<Arc<Tracer>>,
+    ) -> NativePipeline {
         let engine = Arc::new(engine);
-        let metrics = Arc::new(PipelineMetrics::new());
-        let aggregate = Arc::new(Metrics::new());
-        let (admit_tx, admit_rx) = bounded::<Job>(cfg.queue_capacity.max(1));
-        let (dec_tx, dec_rx) = bounded::<DecodedJob>(cfg.decoded_capacity.max(1));
+        let registry = Arc::new(Registry::new());
+        let metrics = Arc::new(PipelineMetrics::register(&registry));
+        let aggregate = Arc::new(Metrics::register(&registry));
+        let admit_gauge = registry.gauge(
+            "jd_queue_depth",
+            "live items in a pipeline queue",
+            &[("queue", "admission")],
+        );
+        let decoded_gauge = registry.gauge(
+            "jd_queue_depth",
+            "live items in a pipeline queue",
+            &[("queue", "decoded")],
+        );
+        let (admit_tx, admit_rx) = bounded_with_gauge::<Job>(cfg.queue_capacity.max(1), admit_gauge);
+        let (dec_tx, dec_rx) =
+            bounded_with_gauge::<DecodedJob>(cfg.decoded_capacity.max(1), decoded_gauge);
 
         let in_channels = engine.cfg.in_channels;
         let decode_handles: Vec<JoinHandle<()>> = (0..cfg.decode_workers.max(1))
@@ -125,7 +186,8 @@ impl NativePipeline {
                 let rx = admit_rx.clone();
                 let tx = dec_tx.clone();
                 let m = metrics.clone();
-                std::thread::spawn(move || decode_worker(rx, tx, m, in_channels))
+                let tr = tracer.clone();
+                std::thread::spawn(move || decode_worker(rx, tx, m, tr, in_channels))
             })
             .collect();
         // decode workers hold the only senders into stage 2: when they
@@ -139,8 +201,9 @@ impl NativePipeline {
                 let e = engine.clone();
                 let m = metrics.clone();
                 let a = aggregate.clone();
+                let tr = tracer.clone();
                 let max_batch = cfg.max_batch.max(1);
-                std::thread::spawn(move || compute_worker(rx, e, m, a, max_batch))
+                std::thread::spawn(move || compute_worker(rx, e, m, a, tr, max_batch))
             })
             .collect();
 
@@ -150,6 +213,9 @@ impl NativePipeline {
             compute_handles,
             metrics,
             aggregate,
+            registry,
+            tracer,
+            seq: AtomicU64::new(1),
             engine,
         }
     }
@@ -162,6 +228,17 @@ impl NativePipeline {
     /// Coordinator-compatible aggregate metrics.
     pub fn aggregate(&self) -> &Arc<Metrics> {
         &self.aggregate
+    }
+
+    /// The registry holding every instrument of this pipeline (the
+    /// scrape source for `Stats` frames and `--metrics-dump`).
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// The span tracer, when one is attached.
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.tracer.as_ref()
     }
 
     /// Precompute exploded maps for an encoder quality before traffic.
@@ -186,24 +263,44 @@ impl NativePipeline {
         &self,
         req: ServeRequest,
     ) -> Result<Receiver<anyhow::Result<InferResponse>>, ServeError> {
+        let entered = Instant::now();
         let admit = self.admit.as_ref().ok_or(ServeError::ShuttingDown)?;
         if expired(req.deadline) {
-            self.metrics
-                .deadline_expired
-                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            self.metrics.deadline_expired.inc();
             return Err(ServeError::DeadlineExceeded);
         }
+        // sampling decision happens here, at admission
+        let traced = self.tracer.as_ref().map_or(false, |t| t.sample_next());
+        let request_id = if req.request_id != 0 {
+            req.request_id
+        } else {
+            // the high bit keeps internal ids distinct from typical
+            // client-assigned wire ids; ids only label trace spans, so
+            // a determined collision is harmless
+            0x8000_0000_0000_0000 | self.seq.fetch_add(1, Ordering::Relaxed)
+        };
         let (reply, rx) = channel();
-        let job =
-            Job { bytes: req.bytes, deadline: req.deadline, submitted: Instant::now(), reply };
+        let job = Job {
+            bytes: req.bytes,
+            deadline: req.deadline,
+            submitted: entered,
+            request_id,
+            traced,
+            reply,
+        };
         match admit.try_send(job) {
             Ok(()) => {
-                self.metrics.admitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                self.metrics.admitted.inc();
                 self.metrics.decode.note_depth(admit.depth());
+                if traced {
+                    if let Some(t) = &self.tracer {
+                        t.span(request_id, "admission", entered, Instant::now());
+                    }
+                }
                 Ok(rx)
             }
             Err(SendRejected::Full(_)) => {
-                self.metrics.rejected.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                self.metrics.rejected.inc();
                 Err(ServeError::QueueFull { capacity: admit.capacity() })
             }
             Err(SendRejected::Disconnected(_)) => Err(ServeError::ShuttingDown),
@@ -266,6 +363,7 @@ fn decode_worker(
     rx: Arc<BoundedReceiver<Job>>,
     tx: BoundedSender<DecodedJob>,
     metrics: Arc<PipelineMetrics>,
+    tracer: Option<Arc<Tracer>>,
     in_channels: usize,
 ) {
     while let Some(job) = rx.recv() {
@@ -276,9 +374,7 @@ fn decode_worker(
             .record(picked_up.saturating_duration_since(job.submitted));
         // shed expired work before paying the entropy decode
         if expired(job.deadline) {
-            metrics
-                .deadline_expired
-                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            metrics.deadline_expired.inc();
             let _ = job.reply.send(Err(anyhow::Error::new(ServeError::DeadlineExceeded)));
             continue;
         }
@@ -286,10 +382,13 @@ fn decode_worker(
             Ok((f0, qvec)) => {
                 let decoded_at = Instant::now();
                 metrics.decode.service.record(decoded_at.saturating_duration_since(picked_up));
-                metrics
-                    .decode
-                    .processed
-                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                metrics.decode.processed.inc();
+                if job.traced {
+                    if let Some(t) = &tracer {
+                        t.span(job.request_id, "decode", picked_up, decoded_at);
+                    }
+                }
+                let (request_id, traced) = (job.request_id, job.traced);
                 let dj = DecodedJob {
                     f0,
                     qvec,
@@ -297,10 +396,23 @@ fn decode_worker(
                     deadline: job.deadline,
                     submitted: job.submitted,
                     decoded_at,
+                    enqueued_at: Instant::now(),
+                    request_id,
+                    traced,
                     reply: job.reply,
                 };
                 match tx.send(dj) {
-                    Ok(()) => metrics.compute.note_depth(tx.depth()),
+                    Ok(()) => {
+                        metrics.compute.note_depth(tx.depth());
+                        // the blocking send IS the handoff: when the
+                        // decoded queue is full this span shows the
+                        // backpressure stall
+                        if traced {
+                            if let Some(t) = &tracer {
+                                t.span(request_id, "handoff", decoded_at, Instant::now());
+                            }
+                        }
+                    }
                     // compute pool is gone: fail the request, keep draining
                     Err(dj) => {
                         let _ = dj
@@ -310,7 +422,7 @@ fn decode_worker(
                 }
             }
             Err(e) => {
-                metrics.decode.errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                metrics.decode.errors.inc();
                 let _ = job.reply.send(Err(anyhow::Error::new(e)));
             }
         }
@@ -322,6 +434,7 @@ fn compute_worker(
     engine: Arc<NativeEngine>,
     metrics: Arc<PipelineMetrics>,
     aggregate: Arc<Metrics>,
+    tracer: Option<Arc<Tracer>>,
     max_batch: usize,
 ) {
     loop {
@@ -334,9 +447,7 @@ fn compute_worker(
         let mut live = Vec::with_capacity(jobs.len());
         for job in jobs {
             if expired(job.deadline) {
-                metrics
-                    .deadline_expired
-                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                metrics.deadline_expired.inc();
                 let _ = job.reply.send(Err(anyhow::Error::new(ServeError::DeadlineExceeded)));
             } else {
                 live.push(job);
@@ -356,7 +467,7 @@ fn compute_worker(
             }
         }
         for group in groups {
-            serve_group(&engine, &metrics, &aggregate, group);
+            serve_group(&engine, &metrics, &aggregate, &tracer, group);
         }
     }
 }
@@ -365,6 +476,7 @@ fn serve_group(
     engine: &NativeEngine,
     metrics: &PipelineMetrics,
     aggregate: &Metrics,
+    tracer: &Option<Arc<Tracer>>,
     group: Vec<DecodedJob>,
 ) {
     let t0 = Instant::now();
@@ -373,33 +485,47 @@ fn serve_group(
             .compute
             .queue_wait
             .record(t0.saturating_duration_since(job.decoded_at));
+        // batch-assembly: from the handoff enqueue to the batch
+        // actually forming (queue residence + micro-batch coalescing)
+        if job.traced {
+            if let Some(t) = tracer {
+                t.span(job.request_id, "batch-assembly", job.enqueued_at, t0);
+            }
+        }
     }
     let qvec = group[0].qvec;
     let batch = SparseBlocks::concat(group.iter().map(|j| &j.f0));
-    // the resident executor reports per-layer nonzero fractions; fold
-    // them into the pipeline metrics so sparsity decay is observable
-    // (other executors skip the observer — no occupancy-scan cost).
-    // The concatenated batch MOVES into the forward — no per-batch copy
+    // every forward feeds the per-op histograms; the resident executor
+    // additionally reports per-layer nonzero fractions through a Tee
+    // (the op recorder declines activations, so non-resident runs pay
+    // no occupancy scans).  The concatenated batch MOVES into the
+    // forward — no per-batch copy
     let resident = engine.mode == crate::serving::engine::NativeMode::SparseResident;
+    let mut rec = OpRecorder::new(&metrics.plan_ops);
     let mut trace = crate::jpeg_domain::network::ResidencyTrace::new();
-    let logits = engine.forward_traced_act(
-        crate::jpeg_domain::plan::Act::Sparse(batch),
-        &qvec,
-        resident.then_some(&mut trace),
-    );
+    let input = crate::jpeg_domain::plan::Act::Sparse(batch);
+    let logits = if resident {
+        let mut tee = Tee(&mut trace, &mut rec);
+        engine.forward_with_observer(input, &qvec, Some(&mut tee))
+    } else {
+        engine.forward_with_observer(input, &qvec, Some(&mut rec))
+    };
     if resident {
         metrics.sparsity.record(&trace);
     }
-    metrics.compute.service.record(t0.elapsed());
-    metrics
-        .compute
-        .processed
-        .fetch_add(group.len() as u64, std::sync::atomic::Ordering::Relaxed);
+    let done = Instant::now();
+    metrics.compute.service.record(done.saturating_duration_since(t0));
+    metrics.compute.processed.add(group.len() as u64);
     aggregate.record_batch(group.len());
 
     let classes = logits.shape()[1];
     let preds = logits.argmax_last();
     for (i, job) in group.into_iter().enumerate() {
+        if job.traced {
+            if let Some(t) = tracer {
+                t.span(job.request_id, "compute", t0, done);
+            }
+        }
         let latency = job.submitted.elapsed();
         metrics.record_done(job.tag, latency);
         aggregate.request_latency.record(latency);
@@ -408,6 +534,7 @@ fn serve_group(
             logits: row,
             predicted: preds[i],
             latency,
+            traced: job.traced,
         }));
     }
 }
@@ -493,5 +620,71 @@ mod tests {
         // shutdown consumes the pipeline; this test just verifies a
         // clean second shutdown path doesn't hang via Drop
         drop(p);
+    }
+
+    #[test]
+    fn registry_scrape_covers_pipeline_queue_and_op_families() {
+        let p = NativePipeline::start(tiny_engine(NativeMode::Sparse), PipelineConfig::default());
+        p.warm(75);
+        for (bytes, _) in files(2, 75) {
+            p.infer(bytes).unwrap();
+        }
+        let text = p.registry().render();
+        for needle in [
+            "jd_pipeline_admitted_total 2",
+            "jd_queue_depth{queue=\"admission\"} 0",
+            "jd_queue_depth{queue=\"decoded\"} 0",
+            "jd_stage_processed_total{stage=\"decode\"} 2",
+            "jd_plan_op_us_count{op=\"fc\"} 2",
+            "jd_requests_by_quality_total{quality=\"q75\"} 2",
+            // the coordinator-compatible aggregate registers here too
+            "jd_batches_total 2",
+            "jd_server_requests_total 2",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        p.shutdown();
+    }
+
+    #[test]
+    fn sampled_requests_emit_stage_spans() {
+        let (tracer, buf) = Tracer::to_buffer(1);
+        let p = NativePipeline::start_traced(
+            tiny_engine(NativeMode::SparseResident),
+            PipelineConfig::default(),
+            Some(Arc::new(tracer)),
+        );
+        p.warm(75);
+        for (bytes, _) in files(2, 75) {
+            let resp = p.infer(bytes).unwrap();
+            assert!(resp.traced, "sample 1 traces every request");
+        }
+        p.shutdown();
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        for stage in ["admission", "decode", "handoff", "batch-assembly", "compute"] {
+            assert!(
+                text.contains(&format!("\"stage\":\"{stage}\"")),
+                "missing {stage} span in:\n{text}"
+            );
+        }
+        assert!(
+            !text.contains("socket-write"),
+            "in-process requests never reach the socket stage"
+        );
+        // every line is parseable JSONL with an internal (high-bit) id
+        for line in text.lines() {
+            let v = crate::json::parse(line).expect("span lines are JSON");
+            assert!(v.get("request_id").as_f64().unwrap() >= 0x8000_0000_0000_0000u64 as f64);
+        }
+    }
+
+    #[test]
+    fn disabled_tracer_marks_nothing_traced() {
+        let p = NativePipeline::start(tiny_engine(NativeMode::Sparse), PipelineConfig::default());
+        p.warm(75);
+        let (bytes, _) = files(1, 75).remove(0);
+        let resp = p.infer(bytes).unwrap();
+        assert!(!resp.traced);
+        p.shutdown();
     }
 }

@@ -2,19 +2,22 @@
 //!
 //! Thin wrapper over `std::sync::mpsc::sync_channel` adding the two
 //! things the pipeline needs: a live queue-depth gauge (for the
-//! per-stage metrics) and a worker-pool receiving side (multiple
-//! workers pull from one queue through a mutex; std's `Receiver` is
-//! single-consumer).
+//! per-stage metrics — and, via [`bounded_with_gauge`], for the
+//! telemetry registry, so `jd_queue_depth` scrapes read the queue's
+//! own counter rather than a copy) and a worker-pool receiving side
+//! (multiple workers pull from one queue through a mutex; std's
+//! `Receiver` is single-consumer).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
 use std::sync::{Arc, Mutex};
+
+use crate::telemetry::Gauge;
 
 /// Sending half: `try_send` for the admission edge, blocking `send` for
 /// the interior edges (that block *is* the backpressure).
 pub struct BoundedSender<T> {
     tx: SyncSender<T>,
-    depth: Arc<AtomicUsize>,
+    depth: Arc<Gauge>,
     capacity: usize,
 }
 
@@ -42,15 +45,15 @@ impl<T> BoundedSender<T> {
     /// incrementing afterwards would let the counter dip below zero
     /// and wrap.
     pub fn try_send(&self, v: T) -> Result<(), SendRejected<T>> {
-        self.depth.fetch_add(1, Ordering::Relaxed);
+        self.depth.add(1);
         match self.tx.try_send(v) {
             Ok(()) => Ok(()),
             Err(TrySendError::Full(v)) => {
-                self.depth.fetch_sub(1, Ordering::Relaxed);
+                self.depth.sub(1);
                 Err(SendRejected::Full(v))
             }
             Err(TrySendError::Disconnected(v)) => {
-                self.depth.fetch_sub(1, Ordering::Relaxed);
+                self.depth.sub(1);
                 Err(SendRejected::Disconnected(v))
             }
         }
@@ -59,11 +62,11 @@ impl<T> BoundedSender<T> {
     /// Blocking enqueue; `Err` returns the value when all receivers are
     /// gone.  (Same increment-before-send ordering as [`Self::try_send`].)
     pub fn send(&self, v: T) -> Result<(), T> {
-        self.depth.fetch_add(1, Ordering::Relaxed);
+        self.depth.add(1);
         match self.tx.send(v) {
             Ok(()) => Ok(()),
             Err(e) => {
-                self.depth.fetch_sub(1, Ordering::Relaxed);
+                self.depth.sub(1);
                 Err(e.0)
             }
         }
@@ -75,14 +78,14 @@ impl<T> BoundedSender<T> {
 
     /// Approximate number of queued items (gauge, racy by nature).
     pub fn depth(&self) -> usize {
-        self.depth.load(Ordering::Relaxed)
+        self.depth.get() as usize
     }
 }
 
 /// Receiving half, shareable across a worker pool.
 pub struct BoundedReceiver<T> {
     rx: Mutex<Receiver<T>>,
-    depth: Arc<AtomicUsize>,
+    depth: Arc<Gauge>,
 }
 
 impl<T> BoundedReceiver<T> {
@@ -90,7 +93,7 @@ impl<T> BoundedReceiver<T> {
     /// queue is drained.
     pub fn recv(&self) -> Option<T> {
         let v = self.rx.lock().unwrap().recv().ok()?;
-        self.depth.fetch_sub(1, Ordering::Relaxed);
+        self.depth.sub(1);
         Some(v)
     }
 
@@ -110,24 +113,33 @@ impl<T> BoundedReceiver<T> {
                 Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
             }
         }
-        self.depth.fetch_sub(out.len(), Ordering::Relaxed);
+        self.depth.sub(out.len() as u64);
         out
     }
 
     /// Approximate number of queued items (gauge, racy by nature).
     pub fn depth(&self) -> usize {
-        self.depth.load(Ordering::Relaxed)
+        self.depth.get() as usize
     }
 }
 
-/// A bounded queue of `capacity` items.
+/// A bounded queue of `capacity` items over a private depth gauge.
 pub fn bounded<T>(capacity: usize) -> (BoundedSender<T>, Arc<BoundedReceiver<T>>) {
+    bounded_with_gauge(capacity, Arc::new(Gauge::new()))
+}
+
+/// A bounded queue whose live depth *is* `gauge` — pass a
+/// registry-owned gauge (`jd_queue_depth{queue="..."}`) and scrapes
+/// read the same counter the queue maintains, no sampling loop needed.
+pub fn bounded_with_gauge<T>(
+    capacity: usize,
+    gauge: Arc<Gauge>,
+) -> (BoundedSender<T>, Arc<BoundedReceiver<T>>) {
     let capacity = capacity.max(1);
     let (tx, rx) = sync_channel(capacity);
-    let depth = Arc::new(AtomicUsize::new(0));
     (
-        BoundedSender { tx, depth: depth.clone(), capacity },
-        Arc::new(BoundedReceiver { rx: Mutex::new(rx), depth }),
+        BoundedSender { tx, depth: gauge.clone(), capacity },
+        Arc::new(BoundedReceiver { rx: Mutex::new(rx), depth: gauge }),
     )
 }
 
@@ -203,5 +215,18 @@ mod tests {
         drop(tx);
         let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
         assert_eq!(total, 40);
+    }
+
+    #[test]
+    fn external_gauge_tracks_live_depth() {
+        let g = Arc::new(Gauge::new());
+        let (tx, rx) = bounded_with_gauge(4, g.clone());
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        assert_eq!(g.get(), 2);
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(g.get(), 1);
+        assert_eq!(rx.recv_up_to(4), vec![2]);
+        assert_eq!(g.get(), 0);
     }
 }

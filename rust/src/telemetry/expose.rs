@@ -1,0 +1,209 @@
+//! Consuming side of the exposition format: a small parser for the
+//! text [`crate::telemetry::Registry::render`] emits.
+//!
+//! `serve bench --remote` uses it to derive server-side percentiles
+//! from a scraped `Stats` frame, the wire tests use it to cross-check
+//! scraped counters against in-process snapshots, and load tests can
+//! use it to make any scrape analyzable without a real Prometheus.
+
+/// One exposition line: `name{labels} value`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+/// A parsed exposition payload.
+#[derive(Clone, Debug, Default)]
+pub struct Scrape {
+    pub samples: Vec<Sample>,
+}
+
+impl Scrape {
+    /// Parse exposition text; comment (`#`) and blank lines are
+    /// skipped, unparsable lines are dropped (a scraper must not fall
+    /// over on families it does not know).
+    pub fn parse(text: &str) -> Scrape {
+        let samples = text
+            .lines()
+            .filter(|l| !l.trim().is_empty() && !l.trim_start().starts_with('#'))
+            .filter_map(parse_line)
+            .collect();
+        Scrape { samples }
+    }
+
+    /// Do `sample`'s labels contain every requested `(key, value)` pair?
+    fn matches(sample: &Sample, labels: &[(&str, &str)]) -> bool {
+        labels
+            .iter()
+            .all(|(k, v)| sample.labels.iter().any(|(sk, sv)| sk == k && sv == v))
+    }
+
+    /// Value of the first series named `name` carrying all of `labels`.
+    pub fn value(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        self.samples
+            .iter()
+            .find(|s| s.name == name && Self::matches(s, labels))
+            .map(|s| s.value)
+    }
+
+    /// Sum over every series of family `name` (e.g. a counter summed
+    /// across its label values).
+    pub fn sum_by(&self, name: &str) -> f64 {
+        self.samples.iter().filter(|s| s.name == name).map(|s| s.value).sum()
+    }
+
+    /// Number of series named `name`.
+    pub fn series_count(&self, name: &str) -> usize {
+        self.samples.iter().filter(|s| s.name == name).count()
+    }
+
+    /// Quantile (µs) of the histogram family `name` restricted to
+    /// series carrying `labels`, from its cumulative `_bucket` lines —
+    /// the same upper-edge estimate `Histogram::quantile_us` reports
+    /// in-process (modulo the 3-decimal rendering of edges).
+    pub fn histogram_quantile(&self, name: &str, labels: &[(&str, &str)], q: f64) -> f64 {
+        let count = self.value(&format!("{name}_count"), labels).unwrap_or(0.0);
+        if count <= 0.0 {
+            return 0.0;
+        }
+        let bucket = format!("{name}_bucket");
+        let mut edges: Vec<(f64, f64)> = self
+            .samples
+            .iter()
+            .filter(|s| s.name == bucket && Self::matches(s, labels))
+            .filter_map(|s| {
+                let le = &s.labels.iter().find(|(k, _)| k == "le")?.1;
+                // drop the +Inf bucket (f64 parsing accepts "+Inf"!)
+                let le: f64 = le.parse().ok().filter(|v: &f64| v.is_finite())?;
+                Some((le, s.value))
+            })
+            .collect();
+        edges.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite bucket edges"));
+        let target = (q * count).ceil();
+        for (le, cum) in &edges {
+            if *cum >= target {
+                return *le;
+            }
+        }
+        edges.last().map(|(le, _)| *le).unwrap_or(0.0)
+    }
+}
+
+/// Parse one `name{labels} value` line.
+fn parse_line(line: &str) -> Option<Sample> {
+    let line = line.trim();
+    let (name_labels, value) = match line.rfind(' ') {
+        Some(i) => (&line[..i], line[i + 1..].parse::<f64>().ok()?),
+        None => return None,
+    };
+    let (name, labels) = match name_labels.find('{') {
+        Some(i) => {
+            let body = name_labels[i..].strip_prefix('{')?.strip_suffix('}')?;
+            (&name_labels[..i], parse_labels(body)?)
+        }
+        None => (name_labels, Vec::new()),
+    };
+    if name.is_empty() {
+        return None;
+    }
+    Some(Sample { name: name.to_string(), labels, value })
+}
+
+/// Parse `k="v",k2="v2"`, honoring `\"`, `\\` and `\n` escapes inside
+/// values (label values like axpy op labels contain spaces; commas and
+/// quotes must not break the split).
+fn parse_labels(body: &str) -> Option<Vec<(String, String)>> {
+    let mut labels = Vec::new();
+    let mut chars = body.chars().peekable();
+    loop {
+        if chars.peek().is_none() {
+            return Some(labels);
+        }
+        let mut key = String::new();
+        for c in chars.by_ref() {
+            if c == '=' {
+                break;
+            }
+            key.push(c);
+        }
+        if chars.next() != Some('"') {
+            return None;
+        }
+        let mut value = String::new();
+        loop {
+            match chars.next()? {
+                '\\' => match chars.next()? {
+                    'n' => value.push('\n'),
+                    c => value.push(c),
+                },
+                '"' => break,
+                c => value.push(c),
+            }
+        }
+        labels.push((key.trim().to_string(), value));
+        match chars.next() {
+            None => return Some(labels),
+            Some(',') => continue,
+            Some(_) => return None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::registry::{Histogram, Registry};
+    use std::time::Duration;
+
+    #[test]
+    fn parses_plain_and_labeled_lines() {
+        let s = Scrape::parse(
+            "# HELP x_total help\n# TYPE x_total counter\nx_total 4\n\
+             y_total{code=\"ok\"} 2\ny_total{code=\"queue_full\"} 1\nnot a line\n",
+        );
+        assert_eq!(s.value("x_total", &[]), Some(4.0));
+        assert_eq!(s.value("y_total", &[("code", "ok")]), Some(2.0));
+        assert_eq!(s.value("y_total", &[("code", "nope")]), None);
+        assert_eq!(s.sum_by("y_total"), 3.0);
+        assert_eq!(s.series_count("y_total"), 2);
+    }
+
+    #[test]
+    fn labels_with_spaces_commas_and_escapes_round_trip() {
+        let r = Registry::new();
+        r.counter("op_total", "per-op", &[("op", "conv conv1.w /2")]).add(5);
+        r.counter("op_total", "per-op", &[("op", "weird\"quote\\and,comma")]).inc();
+        let s = Scrape::parse(&r.render());
+        assert_eq!(s.value("op_total", &[("op", "conv conv1.w /2")]), Some(5.0));
+        assert_eq!(s.value("op_total", &[("op", "weird\"quote\\and,comma")]), Some(1.0));
+    }
+
+    #[test]
+    fn histogram_quantile_matches_in_process_estimate() {
+        let r = Registry::new();
+        let h = r.histogram("lat_us", "latency", &[("stage", "decode")]);
+        for ms in [1u64, 2, 3, 5, 8, 13, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        let s = Scrape::parse(&r.render());
+        for q in [0.5, 0.9, 0.99] {
+            let scraped = s.histogram_quantile("lat_us", &[("stage", "decode")], q);
+            let direct = h.quantile_us(q);
+            // edges render at 3 decimals; the estimates agree to that
+            assert!(
+                (scraped - direct).abs() <= 0.001 + direct * 1e-6,
+                "q={q}: scraped {scraped} vs direct {direct}"
+            );
+        }
+        assert_eq!(s.value("lat_us_count", &[("stage", "decode")]), Some(7.0));
+        assert_eq!(s.histogram_quantile("lat_us", &[("stage", "other")], 0.5), 0.0);
+    }
+
+    #[test]
+    fn empty_histogram_quantile_is_zero() {
+        let s = Scrape::parse("lat_us_count 0\n");
+        assert_eq!(s.histogram_quantile("lat_us", &[], 0.9), 0.0);
+    }
+}

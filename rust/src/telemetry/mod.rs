@@ -1,0 +1,19 @@
+//! Unified telemetry for the serving stack: a central metrics
+//! [`Registry`] of lock-free instruments, Prometheus-style text
+//! exposition (rendered by [`Registry::render`], parsed back by
+//! [`Scrape`]), and sampled per-request [`Tracer`] spans.
+//!
+//! Producers (pipeline, socket front end, coordinator, plan executor)
+//! register instruments at construction and record through `Arc`
+//! handles; consumers scrape one of three ways — the wire protocol's
+//! `Stats` frame (`repro serve stats --remote`), the periodic
+//! `--metrics-dump` file, or in-process `snapshot()` views that are
+//! now read-only projections of the same registry.
+
+pub mod expose;
+pub mod registry;
+pub mod trace;
+
+pub use expose::Scrape;
+pub use registry::{Counter, Gauge, Histogram, Registry};
+pub use trace::Tracer;

@@ -1,0 +1,552 @@
+//! Lock-free metric instruments + the central registry that renders
+//! them in Prometheus-style text exposition format.
+//!
+//! Instruments are plain `AtomicU64`s — the hot recording paths
+//! ([`Counter::inc`], [`Histogram::record`]) never take a lock; the
+//! registry's mutex guards only registration and rendering.  Handles
+//! are `Arc`s: a metric struct registers once at construction and
+//! keeps its handles, while the registry holds a second reference so
+//! [`Registry::render`] sees every instrument in the process.
+//!
+//! Histograms are fixed log-scaled buckets (1 µs .. ~100 s, 10 per
+//! decade), so p50/p90/p99/p999 are O(buckets) to read without ever
+//! storing samples — the scheme the coordinator pioneered, now shared
+//! by every stage (`coordinator::metrics::LatencyHistogram` is an
+//! alias of [`Histogram`]).
+
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Buckets per factor-of-10 of latency.
+pub const BUCKETS_PER_DECADE: usize = 10;
+/// Decades covered: 1 µs .. 100 s.
+pub const DECADES: usize = 8;
+/// Total histogram buckets.
+pub const NBUCKETS: usize = BUCKETS_PER_DECADE * DECADES;
+
+/// Monotonically increasing counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous value: queue depths, high-water marks.
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Decrement.  Callers keep the gauge non-negative by construction
+    /// (see `serving::queue`'s increment-before-send ordering).
+    pub fn sub(&self, n: u64) {
+        self.0.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    /// Raise to `v` when above the current value (high-water marks).
+    pub fn max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Lock-free log-bucketed latency histogram.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(us: f64) -> usize {
+        if us <= 1.0 {
+            return 0;
+        }
+        let b = (us.log10() * BUCKETS_PER_DECADE as f64) as usize;
+        b.min(NBUCKETS - 1)
+    }
+
+    /// Upper edge (µs) of bucket `i`; every recorded duration `d` lands
+    /// in the unique bucket with `bucket_upper_us(i-1) < d.as_micros()
+    /// <= bucket_upper_us(i)` (sub-µs durations land in bucket 0).
+    pub fn bucket_upper_us(i: usize) -> f64 {
+        10f64.powf((i + 1) as f64 / BUCKETS_PER_DECADE as f64)
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_secs_f64() * 1e6;
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Observations in bucket `i` (not cumulative).
+    pub fn bucket_count(&self, i: usize) -> u64 {
+        self.buckets[i].load(Ordering::Relaxed)
+    }
+
+    /// Upper edge (µs) of the bucket containing quantile `q` in [0,1].
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::bucket_upper_us(i);
+            }
+        }
+        Self::bucket_upper_us(NBUCKETS - 1)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us() as f64 / c as f64
+        }
+    }
+}
+
+/// What a family's series are.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    fn exposition(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+enum Instrument {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+struct Series {
+    labels: Vec<(String, String)>,
+    instrument: Instrument,
+}
+
+struct Family {
+    name: String,
+    help: String,
+    kind: Kind,
+    series: Vec<Series>,
+}
+
+/// Central metric registry.  Registration is idempotent: asking for an
+/// existing `(name, labels)` series returns the same handle, so views
+/// and the owning struct can both hold it.  Families render in
+/// registration order, series in creation order — deterministic output
+/// for a fixed call sequence (pinned by the exposition golden test).
+#[derive(Default)]
+pub struct Registry {
+    families: Mutex<Vec<Family>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry { families: Mutex::new(Vec::new()) }
+    }
+
+    fn series<T, F: FnOnce() -> Instrument, G: Fn(&Instrument) -> Option<T>>(
+        &self,
+        name: &str,
+        help: &str,
+        kind: Kind,
+        labels: &[(&str, &str)],
+        make: F,
+        get: G,
+    ) -> T {
+        let mut families = self.families.lock().unwrap();
+        let family = match families.iter_mut().find(|f| f.name == name) {
+            Some(f) => {
+                assert_eq!(
+                    f.kind, kind,
+                    "metric family {name:?} registered with conflicting kinds"
+                );
+                f
+            }
+            None => {
+                families.push(Family {
+                    name: name.to_string(),
+                    help: help.to_string(),
+                    kind,
+                    series: Vec::new(),
+                });
+                families.last_mut().expect("just pushed")
+            }
+        };
+        let wanted: Vec<(String, String)> = labels
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        if let Some(s) = family.series.iter().find(|s| s.labels == wanted) {
+            return get(&s.instrument).expect("series kind matches family kind");
+        }
+        let instrument = make();
+        let out = get(&instrument).expect("freshly made instrument matches");
+        family.series.push(Series { labels: wanted, instrument });
+        out
+    }
+
+    /// Register (or look up) a counter series.
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        self.series(
+            name,
+            help,
+            Kind::Counter,
+            labels,
+            || Instrument::Counter(Arc::new(Counter::new())),
+            |i| match i {
+                Instrument::Counter(c) => Some(c.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    /// Register (or look up) a gauge series.
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        self.series(
+            name,
+            help,
+            Kind::Gauge,
+            labels,
+            || Instrument::Gauge(Arc::new(Gauge::new())),
+            |i| match i {
+                Instrument::Gauge(g) => Some(g.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    /// Register (or look up) a histogram series.
+    pub fn histogram(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Histogram> {
+        self.series(
+            name,
+            help,
+            Kind::Histogram,
+            labels,
+            || Instrument::Histogram(Arc::new(Histogram::new())),
+            |i| match i {
+                Instrument::Histogram(h) => Some(h.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    /// Render every family in Prometheus text exposition format.
+    ///
+    /// Histograms emit cumulative `_bucket{le=...}` lines, eliding
+    /// edges whose cumulative count did not change (valid for
+    /// cumulative buckets and keeps 80-bucket series readable), always
+    /// ending with the `+Inf` bucket, `_sum` (µs) and `_count`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in self.families.lock().unwrap().iter() {
+            let _ = writeln!(out, "# HELP {} {}", f.name, f.help);
+            let _ = writeln!(out, "# TYPE {} {}", f.name, f.kind.exposition());
+            for s in &f.series {
+                match &s.instrument {
+                    Instrument::Counter(c) => {
+                        let _ =
+                            writeln!(out, "{}{} {}", f.name, label_set(&s.labels, None), c.get());
+                    }
+                    Instrument::Gauge(g) => {
+                        let _ =
+                            writeln!(out, "{}{} {}", f.name, label_set(&s.labels, None), g.get());
+                    }
+                    Instrument::Histogram(h) => {
+                        let mut cum = 0u64;
+                        for i in 0..NBUCKETS {
+                            let n = h.bucket_count(i);
+                            if n == 0 {
+                                continue;
+                            }
+                            cum += n;
+                            let le = format!("{:.3}", Histogram::bucket_upper_us(i));
+                            let _ = writeln!(
+                                out,
+                                "{}_bucket{} {}",
+                                f.name,
+                                label_set(&s.labels, Some(&le)),
+                                cum
+                            );
+                        }
+                        let _ = writeln!(
+                            out,
+                            "{}_bucket{} {}",
+                            f.name,
+                            label_set(&s.labels, Some("+Inf")),
+                            h.count()
+                        );
+                        let _ = writeln!(
+                            out,
+                            "{}_sum{} {}",
+                            f.name,
+                            label_set(&s.labels, None),
+                            h.sum_us()
+                        );
+                        let _ = writeln!(
+                            out,
+                            "{}_count{} {}",
+                            f.name,
+                            label_set(&s.labels, None),
+                            h.count()
+                        );
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Escape a label value per the exposition format.
+fn escape(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// `{k="v",...}` (with optional `le`), or the empty string.
+fn label_set(labels: &[(String, String)], le: Option<&str>) -> String {
+    let mut parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape(v))).collect();
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.set(9);
+        g.max(3);
+        assert_eq!(g.get(), 9, "max below current is a no-op");
+        g.max(12);
+        assert_eq!(g.get(), 12);
+        g.add(2);
+        g.sub(4);
+        assert_eq!(g.get(), 10);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_us(0.5), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn quantiles_ordered() {
+        let h = Histogram::new();
+        for ms in [1u64, 2, 3, 5, 8, 13, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        let p50 = h.quantile_us(0.5);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 >= 1_000.0 && p50 <= 20_000.0, "{p50}");
+        assert!(p99 >= 50_000.0, "{p99}");
+    }
+
+    #[test]
+    fn mean_tracks() {
+        let h = Histogram::new();
+        h.record(Duration::from_millis(10));
+        h.record(Duration::from_millis(30));
+        assert!((h.mean_us() - 20_000.0).abs() < 1_500.0);
+    }
+
+    #[test]
+    fn bucket_monotone() {
+        assert!(Histogram::bucket_of(1.0) <= Histogram::bucket_of(10.0));
+        assert!(Histogram::bucket_of(10.0) < Histogram::bucket_of(1e6));
+        assert_eq!(Histogram::bucket_of(1e20), NBUCKETS - 1);
+    }
+
+    #[test]
+    fn every_duration_maps_to_exactly_one_bucket() {
+        // sweep ~9 decades around the covered range, including sub-µs
+        // and beyond-100s extremes: bucket_of must stay in range and
+        // the per-bucket counts must account for every observation
+        let h = Histogram::new();
+        let mut recorded = 0u64;
+        let mut ns = 1u64; // 1 ns
+        while ns < 1_000_000_000_000 {
+            // 1000 s
+            let d = Duration::from_nanos(ns);
+            let b = Histogram::bucket_of(d.as_secs_f64() * 1e6);
+            assert!(b < NBUCKETS, "duration {d:?} mapped out of range: {b}");
+            h.record(d);
+            recorded += 1;
+            ns = ns * 17 / 10 + 1;
+        }
+        assert_eq!(h.count(), recorded);
+        let in_buckets: u64 = (0..NBUCKETS).map(|i| h.bucket_count(i)).sum();
+        assert_eq!(in_buckets, recorded, "each observation lands in exactly one bucket");
+    }
+
+    #[test]
+    fn quantile_bounded_by_bucket_edges() {
+        // all mass in one bucket: every quantile reports that bucket's
+        // upper edge, and the true value sits within the bucket span
+        let decade = 10f64.powf(1.0 / BUCKETS_PER_DECADE as f64);
+        for us in [1u64, 3, 10, 99, 1_000, 45_000, 2_000_000] {
+            let h = Histogram::new();
+            for _ in 0..7 {
+                h.record(Duration::from_micros(us));
+            }
+            let edge = Histogram::bucket_upper_us(Histogram::bucket_of(us as f64));
+            for q in [0.01, 0.5, 0.9, 0.99, 0.999] {
+                assert_eq!(h.quantile_us(q), edge, "us={us} q={q}");
+            }
+            assert!(us as f64 <= edge * (1.0 + 1e-12), "value below its bucket's upper edge");
+            assert!(
+                us as f64 >= edge / decade * (1.0 - 1e-12) || us <= 1,
+                "value above its bucket's lower edge (us={us}, edge={edge})"
+            );
+        }
+    }
+
+    #[test]
+    fn registry_handles_are_idempotent() {
+        let r = Registry::new();
+        let a = r.counter("x_total", "a counter", &[("code", "ok")]);
+        let b = r.counter("x_total", "a counter", &[("code", "ok")]);
+        assert!(Arc::ptr_eq(&a, &b), "same (name, labels) returns the same handle");
+        let c = r.counter("x_total", "a counter", &[("code", "err")]);
+        assert!(!Arc::ptr_eq(&a, &c), "new labels make a new series");
+        a.add(2);
+        c.inc();
+        let text = r.render();
+        assert!(text.contains("x_total{code=\"ok\"} 2"), "{text}");
+        assert!(text.contains("x_total{code=\"err\"} 1"), "{text}");
+        assert_eq!(text.matches("# TYPE x_total counter").count(), 1, "one family header");
+    }
+
+    #[test]
+    #[should_panic(expected = "conflicting kinds")]
+    fn registry_rejects_kind_conflicts() {
+        let r = Registry::new();
+        let _ = r.counter("y_total", "a counter", &[]);
+        let _ = r.gauge("y_total", "now a gauge?", &[]);
+    }
+
+    #[test]
+    fn exposition_golden() {
+        let r = Registry::new();
+        let c = r.counter("test_requests_total", "requests served", &[("code", "ok")]);
+        c.add(3);
+        let g = r.gauge("test_depth", "current queue depth", &[]);
+        g.set(7);
+        let h = r.histogram("test_latency_us", "request latency", &[]);
+        h.record(Duration::from_micros(10)); // bucket upper edge 10^1.1
+        h.record(Duration::from_millis(2)); // bucket upper edge 10^3.4
+        let want = "\
+# HELP test_requests_total requests served
+# TYPE test_requests_total counter
+test_requests_total{code=\"ok\"} 3
+# HELP test_depth current queue depth
+# TYPE test_depth gauge
+test_depth 7
+# HELP test_latency_us request latency
+# TYPE test_latency_us histogram
+test_latency_us_bucket{le=\"12.589\"} 1
+test_latency_us_bucket{le=\"2511.886\"} 2
+test_latency_us_bucket{le=\"+Inf\"} 2
+test_latency_us_sum 2010
+test_latency_us_count 2
+";
+        assert_eq!(r.render(), want);
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let r = Registry::new();
+        let c = r.counter("esc_total", "escaping", &[("op", "conv \"w\" \\ x")]);
+        c.inc();
+        let text = r.render();
+        assert!(text.contains(r#"esc_total{op="conv \"w\" \\ x"} 1"#), "{text}");
+    }
+}

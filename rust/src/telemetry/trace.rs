@@ -1,0 +1,136 @@
+//! Sampled per-request tracing: timestamped spans emitted as JSONL.
+//!
+//! Every Nth admitted request (`--trace-sample N` / `[serve]
+//! trace_sample`) is marked traced at admission; the mark rides the
+//! job through the pipeline and each stage emits one span line as it
+//! finishes.  Span output is best-effort — write errors are swallowed,
+//! and a disabled tracer (sample 0, or no tracer at all) costs one
+//! branch per request and touches no clock.
+//!
+//! Spans never observe activations or logits: tracing is pure
+//! wall-clock bookkeeping, so the bit-identity invariants of the
+//! serving stack hold with tracing on or off.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// The span names of the serving pipeline, in flow order.  A sampled
+/// socket request emits all six; an in-process request stops at
+/// `compute` (there is no socket write).
+pub const STAGES: [&str; 6] =
+    ["admission", "decode", "handoff", "batch-assembly", "compute", "socket-write"];
+
+/// Sampled JSONL span writer shared by every pipeline stage.
+pub struct Tracer {
+    /// Trace every `sample`-th request; 0 disables sampling.
+    sample: u64,
+    seq: AtomicU64,
+    started: Instant,
+    out: Mutex<Box<dyn Write + Send>>,
+}
+
+impl Tracer {
+    pub fn new(sample: u64, out: Box<dyn Write + Send>) -> Tracer {
+        Tracer { sample, seq: AtomicU64::new(0), started: Instant::now(), out: Mutex::new(out) }
+    }
+
+    /// Spans to stderr — the default sink, so `2>&1` server logs carry
+    /// them (ci's metrics-smoke greps spans out of exactly that).
+    pub fn stderr(sample: u64) -> Tracer {
+        Tracer::new(sample, Box::new(std::io::stderr()))
+    }
+
+    /// Spans appended to `path` (`--trace-file`).
+    pub fn to_file(sample: u64, path: &std::path::Path) -> std::io::Result<Tracer> {
+        let f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(Tracer::new(sample, Box::new(f)))
+    }
+
+    /// Spans into a shared in-memory buffer (tests).
+    pub fn to_buffer(sample: u64) -> (Tracer, Arc<Mutex<Vec<u8>>>) {
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        (Tracer::new(sample, Box::new(BufSink(buf.clone()))), buf)
+    }
+
+    /// Admission-time sampling decision for the next request.
+    pub fn sample_next(&self) -> bool {
+        self.sample > 0 && self.seq.fetch_add(1, Ordering::Relaxed) % self.sample == 0
+    }
+
+    /// Emit one span.  `start_us` is relative to tracer creation so
+    /// spans from different stages/threads order on one timeline.
+    pub fn span(&self, request_id: u64, stage: &str, start: Instant, end: Instant) {
+        let start_us = start.saturating_duration_since(self.started).as_micros() as u64;
+        let dur_us = end.saturating_duration_since(start).as_micros() as u64;
+        let line = format!(
+            "{{\"request_id\":{request_id},\"stage\":\"{stage}\",\
+             \"start_us\":{start_us},\"dur_us\":{dur_us}}}\n"
+        );
+        if let Ok(mut w) = self.out.lock() {
+            let _ = w.write_all(line.as_bytes());
+            let _ = w.flush();
+        }
+    }
+}
+
+/// `Write` into an `Arc<Mutex<Vec<u8>>>` so tests can read spans back.
+struct BufSink(Arc<Mutex<Vec<u8>>>);
+
+impl Write for BufSink {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_picks_every_nth() {
+        let (t, _) = Tracer::to_buffer(3);
+        let picks: Vec<bool> = (0..7).map(|_| t.sample_next()).collect();
+        assert_eq!(picks, [true, false, false, true, false, false, true]);
+        let (t0, _) = Tracer::to_buffer(0);
+        assert!((0..5).all(|_| !t0.sample_next()), "sample 0 disables tracing");
+        let (t1, _) = Tracer::to_buffer(1);
+        assert!((0..5).all(|_| t1.sample_next()), "sample 1 traces everything");
+    }
+
+    #[test]
+    fn spans_are_parseable_jsonl() {
+        let (t, buf) = Tracer::to_buffer(1);
+        let a = Instant::now();
+        t.span(42, "decode", a, a + std::time::Duration::from_micros(250));
+        t.span(42, "compute", a, a);
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in &lines {
+            let v = crate::json::parse(line).expect("valid json");
+            assert_eq!(v.get("request_id").as_f64(), Some(42.0));
+            assert!(v.get("stage").as_str().is_some());
+            assert!(v.get("dur_us").as_f64().is_some());
+            assert!(v.get("start_us").as_f64().is_some());
+        }
+        assert!(lines[0].contains("\"stage\":\"decode\""));
+        assert_eq!(
+            crate::json::parse(lines[0]).unwrap().get("dur_us").as_f64(),
+            Some(250.0)
+        );
+    }
+
+    #[test]
+    fn stage_names_cover_the_pipeline() {
+        assert_eq!(STAGES.len(), 6);
+        assert_eq!(STAGES[0], "admission");
+        assert_eq!(STAGES[5], "socket-write");
+    }
+}

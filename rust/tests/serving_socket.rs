@@ -17,10 +17,11 @@ use jpegdomain::jpeg_domain::plan::{Act, PlanCtx, SparseResident};
 use jpegdomain::jpeg_domain::relu::Method;
 use jpegdomain::params::{ModelConfig, ParamSet};
 use jpegdomain::serving::frontend::protocol::{
-    encode_request, read_response, ResponseBody, HEADER_LEN,
+    encode_request, encode_stats_request, read_response, ResponseBody, HEADER_LEN,
 };
 use jpegdomain::serving::frontend::{Client, FrontendConfig, Reply, SocketFrontend, WireCode};
 use jpegdomain::serving::{NativeEngine, NativeMode, NativePipeline, PipelineConfig};
+use jpegdomain::telemetry::Scrape;
 use jpegdomain::tensor::SparseBlocks;
 
 /// Same deliberately tiny model as `serving_native.rs`: every layer of
@@ -227,6 +228,107 @@ fn protocol_violations_get_typed_errors_and_never_wedge_the_server() {
     assert_eq!(frontend.metrics.responses_with(WireCode::Protocol), 5, "{snap}");
     assert_eq!(frontend.metrics.responses_with(WireCode::Decode), 1, "{snap}");
     assert_eq!(frontend.metrics.responses_with(WireCode::Ok), 2, "{snap}");
+    frontend.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn stats_frame_scrape_is_consistent_with_served_traffic() {
+    let params = ParamSet::init(&tiny_cfg(), 13);
+    let server = Server::start_native(
+        engine(&params, NativeMode::SparseResident),
+        PipelineConfig::default(),
+    );
+    let frontend = listen(&server, 0, 64);
+    let mut client = Client::connect(frontend.local_addr()).expect("connect");
+
+    // mixed-quality traffic so the per-quality families populate
+    for &q in &[50u8, 75, 90] {
+        for (bytes, _) in files(2, q) {
+            let resp = client.infer(&bytes).expect("served");
+            assert_eq!(resp.logits.len(), 4);
+        }
+    }
+
+    let text = client.stats().expect("stats scrape");
+    let scrape = Scrape::parse(&text);
+
+    // the wire scrape agrees exactly with the traffic that was served:
+    // every infer frame is counted once, and the per-code response
+    // counters partition the requests (no protocol errors here)
+    assert_eq!(scrape.value("jd_frontend_requests_total", &[]), Some(6.0), "{text}");
+    assert_eq!(
+        scrape.sum_by("jd_frontend_responses_total"),
+        6.0,
+        "requests_total must equal the per-code response sum:\n{text}"
+    );
+    assert_eq!(
+        scrape.value("jd_frontend_responses_total", &[("code", "ok")]),
+        Some(6.0)
+    );
+    assert_eq!(scrape.value("jd_pipeline_admitted_total", &[]), Some(6.0));
+    assert_eq!(scrape.value("jd_request_e2e_us_count", &[]), Some(6.0));
+    assert_eq!(
+        scrape.value("jd_requests_by_quality_total", &[("quality", "q50")]),
+        Some(2.0)
+    );
+    assert!(
+        scrape.series_count("jd_plan_op_us_count") > 0,
+        "per-LayerOp histograms must be live:\n{text}"
+    );
+    // the scrape itself is counted as observability traffic, never as
+    // an infer request (that would break the equality above)
+    assert_eq!(scrape.value("jd_frontend_stats_requests_total", &[]), Some(1.0));
+
+    // the wire scrape is a point-in-time render of the same registry
+    // the process reads locally
+    let live = Scrape::parse(&server.pipeline().unwrap().registry().render());
+    assert_eq!(live.value("jd_frontend_requests_total", &[]), Some(6.0));
+    assert_eq!(live.value("jd_frontend_stats_requests_total", &[]), Some(1.0));
+
+    frontend.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn stats_abuse_gets_typed_errors_and_never_wedges_the_acceptor() {
+    let params = ParamSet::init(&tiny_cfg(), 15);
+    let server =
+        Server::start_native(engine(&params, NativeMode::Sparse), PipelineConfig::default());
+    let frontend = listen(&server, 0, 64);
+    let addr = frontend.local_addr();
+    let good = files(1, 75).remove(0).0;
+
+    // a stats request declaring a payload is malformed: typed reply
+    // addressed to the offending id, connection closed
+    let mut with_payload = encode_stats_request(31).unwrap();
+    with_payload[24..28].copy_from_slice(&4u32.to_le_bytes());
+    with_payload.extend_from_slice(b"junk");
+    let replies = raw_exchange(addr, &with_payload, false);
+    assert_eq!(replies, vec![(31, WireCode::Protocol)], "stats with payload");
+
+    // a frame kind neither side defines: the same typed rejection an
+    // old peer gives the stats kind itself
+    let mut unknown_kind = encode_stats_request(32).unwrap();
+    unknown_kind[3] = 9;
+    let replies = raw_exchange(addr, &unknown_kind, false);
+    assert_eq!(replies, vec![(32, WireCode::Protocol)], "unknown kind");
+
+    // the acceptor survived: a fresh client gets logits AND a scrape,
+    // and the abuse shows up in the scrape's own counters
+    let mut client = Client::connect(addr).expect("connect after abuse");
+    let resp = client.infer(&good).expect("served after abuse");
+    assert_eq!(resp.logits.len(), 4);
+    let scrape = Scrape::parse(&client.stats().expect("scrape after abuse"));
+    assert_eq!(scrape.value("jd_frontend_protocol_errors_total", &[]), Some(2.0));
+    assert_eq!(
+        scrape.value("jd_frontend_responses_total", &[("code", "protocol")]),
+        Some(2.0)
+    );
+    assert_eq!(
+        scrape.value("jd_frontend_responses_total", &[("code", "ok")]),
+        Some(1.0)
+    );
     frontend.shutdown();
     server.shutdown();
 }
