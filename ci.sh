@@ -119,6 +119,24 @@ echo "$SOCKET_OUT" | grep -qE "remote completed requests: [1-9][0-9]* \(protocol
     || { echo "socket-smoke FAILED: BENCH_PR7.json not written"; exit 1; }
 rm -f "$SERVE_LOG"
 
+echo "== decode-fuzz-smoke (hostile-input contract at a fixed budget) =="
+# seeded mutation fuzz over the JPEG decoder and the wire frame parser:
+# every input must decode or return a typed error — the binary exits
+# non-zero on any caught panic.  --verify-corpus additionally proves the
+# committed fixture JPEGs regenerate byte-identical from the encoder
+# (blessing them on the first toolchain-equipped run).
+FUZZ_OUT=$(./target/release/repro fuzz --iters 2500 --seed 7 \
+    --verify-corpus tests/fixtures/corpus) \
+    || { echo "decode-fuzz-smoke FAILED: fuzzer caught panics or corpus drifted"; \
+         echo "$FUZZ_OUT"; exit 1; }
+echo "$FUZZ_OUT"
+for target in decoder wire; do
+    echo "$FUZZ_OUT" | grep -qE "fuzz $target: iters=2500 .* panics=0" \
+        || { echo "decode-fuzz-smoke FAILED: $target target missing or panicked"; exit 1; }
+done
+echo "$FUZZ_OUT" | grep -qE "corpus (ok|blessed):" \
+    || { echo "decode-fuzz-smoke FAILED: corpus not verified"; exit 1; }
+
 echo "== metrics-smoke (stats scrape + request tracing over a live server) =="
 # start a traced server (every request sampled) with a periodic metrics
 # dump, drive a burst over the wire, scrape it with `serve stats

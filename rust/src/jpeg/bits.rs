@@ -2,7 +2,10 @@
 //!
 //! JPEG entropy-coded segments escape every 0xFF data byte with a 0x00
 //! stuffing byte so decoders can find markers; the reader strips them and
-//! stops cleanly at any non-stuffed marker.
+//! stops cleanly at any non-stuffed marker.  Restart markers (RSTn) sit
+//! byte-aligned *inside* the entropy segment: the writer emits them with
+//! [`BitWriter::restart_marker`], and the reader realigns across them
+//! with [`BitReader::read_restart_marker`].
 
 use super::{JpegError, Result};
 
@@ -35,12 +38,26 @@ impl BitWriter {
         }
     }
 
-    /// Pad with 1-bits to a byte boundary (JPEG convention) and return.
-    pub fn finish(mut self) -> Vec<u8> {
+    /// Pad with 1-bits to the next byte boundary (JPEG convention).
+    pub fn align(&mut self) {
         if self.nbits > 0 {
             let pad = 8 - self.nbits;
             self.put((1u32 << pad) - 1, pad);
         }
+    }
+
+    /// Emit RSTn (n in 0..8): align to a byte boundary, then write the
+    /// two marker bytes raw — markers are never stuffed.
+    pub fn restart_marker(&mut self, n: u8) {
+        debug_assert!(n < 8);
+        self.align();
+        self.out.push(0xFF);
+        self.out.push(0xD0 + n);
+    }
+
+    /// Pad with 1-bits to a byte boundary (JPEG convention) and return.
+    pub fn finish(mut self) -> Vec<u8> {
+        self.align();
         self.out
     }
 
@@ -55,11 +72,19 @@ pub struct BitReader<'a> {
     pos: usize,
     acc: u32,
     nbits: u32,
+    /// How many of the buffered `nbits` are synthesized 1-padding (fed at
+    /// end-of-data or at a marker boundary) rather than real stream bits.
+    /// Padding occupies the *low* end of `acc` — real bits are always
+    /// consumed first.
+    pad: u32,
+    /// Set once any synthesized padding bit has actually been consumed:
+    /// the entropy data ran out before decoding finished.
+    pad_consumed: bool,
 }
 
 impl<'a> BitReader<'a> {
     pub fn new(data: &'a [u8]) -> Self {
-        BitReader { data, pos: 0, acc: 0, nbits: 0 }
+        BitReader { data, pos: 0, acc: 0, nbits: 0, pad: 0, pad_consumed: false }
     }
 
     fn fill(&mut self) -> Result<()> {
@@ -68,6 +93,7 @@ impl<'a> BitReader<'a> {
                 // feed 1-padding past the end (decoder tolerance)
                 self.acc = (self.acc << 8) | 0xFF;
                 self.nbits += 8;
+                self.pad += 8;
                 continue;
             }
             let byte = self.data[self.pos];
@@ -80,6 +106,7 @@ impl<'a> BitReader<'a> {
                         // a real marker: stop consuming, pad with ones
                         self.acc = (self.acc << 8) | 0xFF;
                         self.nbits += 8;
+                        self.pad += 8;
                         continue;
                     }
                 }
@@ -90,6 +117,16 @@ impl<'a> BitReader<'a> {
             self.nbits += 8;
         }
         Ok(())
+    }
+
+    /// Bookkeeping after consuming bits: real bits drain before padding,
+    /// so consumption only touches padding once `nbits` dips below `pad`.
+    #[inline]
+    fn consumed(&mut self) {
+        if self.nbits < self.pad {
+            self.pad_consumed = true;
+            self.pad = self.nbits;
+        }
     }
 
     /// Peek the next 16 bits without consuming.
@@ -105,6 +142,7 @@ impl<'a> BitReader<'a> {
             return Err(JpegError::Invalid("bit underrun".into()));
         }
         self.nbits -= n;
+        self.consumed();
         Ok(())
     }
 
@@ -116,7 +154,45 @@ impl<'a> BitReader<'a> {
         self.fill()?;
         let v = (self.acc >> (self.nbits - n)) & ((1u32 << n) - 1);
         self.nbits -= n;
+        self.consumed();
         Ok(v)
+    }
+
+    /// True once decoding has consumed synthesized padding — i.e. the
+    /// entropy-coded data ended before the decoder was done with it.
+    pub fn hit_padding(&self) -> bool {
+        self.pad_consumed
+    }
+
+    /// Realign at a restart boundary and read the marker that follows.
+    ///
+    /// At a valid boundary every real entropy bit has been consumed
+    /// except the encoder's <8 alignment bits, so at most 7 real bits
+    /// (plus any synthesized padding) remain buffered.  Drop them and
+    /// read the two marker bytes directly from the byte stream — `fill`
+    /// never consumes marker bytes, so `pos` sits exactly at the 0xFF.
+    /// Returns the marker's second byte (0xD0..=0xD7 when well-formed).
+    pub fn read_restart_marker(&mut self) -> Result<u8> {
+        let real = self.nbits.saturating_sub(self.pad);
+        if real >= 8 {
+            return Err(JpegError::Invalid(
+                "entropy data continues past expected restart boundary".into(),
+            ));
+        }
+        self.acc = 0;
+        self.nbits = 0;
+        self.pad = 0;
+        if self.pos + 2 > self.data.len() {
+            return Err(JpegError::Truncated { what: "restart marker" });
+        }
+        if self.data[self.pos] != 0xFF {
+            return Err(JpegError::Invalid(
+                "expected restart marker at byte boundary".into(),
+            ));
+        }
+        let m = self.data[self.pos + 1];
+        self.pos += 2;
+        Ok(m)
     }
 
     /// Bytes consumed from the underlying segment (approximate, for EOS).
@@ -194,6 +270,87 @@ mod tests {
         // past the marker we read 1-padding
         assert_eq!(r.get(8).unwrap(), 0xFF);
         assert_eq!(r.byte_pos(), 1);
+        assert!(r.hit_padding());
+    }
+
+    #[test]
+    fn clean_reads_never_hit_padding() {
+        let data = [0xAB, 0xCD];
+        let mut r = BitReader::new(&data);
+        assert_eq!(r.get(16).unwrap(), 0xABCD);
+        assert!(!r.hit_padding());
+    }
+
+    #[test]
+    fn restart_marker_roundtrip() {
+        // 5 bits, RST0, 11 bits, RST1, 3 bits
+        let mut w = BitWriter::new();
+        w.put(0b10110, 5);
+        w.restart_marker(0);
+        w.put(0b101_0101_0101, 11);
+        w.restart_marker(1);
+        w.put(0b011, 3);
+        let bytes = w.finish();
+
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get(5).unwrap(), 0b10110);
+        assert_eq!(r.read_restart_marker().unwrap(), 0xD0);
+        assert_eq!(r.get(11).unwrap(), 0b101_0101_0101);
+        assert_eq!(r.read_restart_marker().unwrap(), 0xD1);
+        assert_eq!(r.get(3).unwrap(), 0b011);
+        assert!(!r.hit_padding());
+    }
+
+    #[test]
+    fn restart_marker_after_aligned_data() {
+        // exactly byte-aligned entropy data before the marker
+        let mut w = BitWriter::new();
+        w.put(0xAB, 8);
+        w.restart_marker(7);
+        w.put(0x12, 8);
+        let bytes = w.finish();
+        assert_eq!(bytes, vec![0xAB, 0xFF, 0xD7, 0x12]);
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get(8).unwrap(), 0xAB);
+        assert_eq!(r.read_restart_marker().unwrap(), 0xD7);
+        assert_eq!(r.get(8).unwrap(), 0x12);
+    }
+
+    #[test]
+    fn restart_with_unconsumed_data_rejected() {
+        let mut w = BitWriter::new();
+        w.put(0xABCD, 16);
+        w.restart_marker(0);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get(4).unwrap(), 0xA); // 12 real bits still buffered
+        assert!(r.read_restart_marker().is_err());
+    }
+
+    #[test]
+    fn restart_marker_truncated() {
+        let mut w = BitWriter::new();
+        w.put(0xAB, 8);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get(8).unwrap(), 0xAB);
+        match r.read_restart_marker() {
+            Err(JpegError::Truncated { .. }) => {}
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn restart_marker_stuffed_ff_before() {
+        // entropy byte 0xFF (stuffed) directly before the marker
+        let mut w = BitWriter::new();
+        w.put(0xFF, 8);
+        w.restart_marker(0);
+        let bytes = w.finish();
+        assert_eq!(bytes, vec![0xFF, 0x00, 0xFF, 0xD0]);
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get(8).unwrap(), 0xFF);
+        assert_eq!(r.read_restart_marker().unwrap(), 0xD0);
     }
 
     #[test]
@@ -222,5 +379,6 @@ mod tests {
         let p2 = r.peek16().unwrap();
         assert_eq!(p1, p2);
         assert_eq!(r.get(8).unwrap(), 0b1010_1010);
+        assert!(!r.hit_padding());
     }
 }

@@ -8,6 +8,13 @@
 //! * [`decode_to_coefficients`] — stops at the paper's JPEG transform
 //!   domain (output of encoder step 4): entropy decode only.  This is the
 //!   input to the JPEG-domain network and the source of the Fig-5 gap.
+//!
+//! The decoder accepts real-world baseline geometry: each component is
+//! entropy-decoded at its native MCU sampling (4:4:4, 4:2:0, 4:2:2,
+//! 4:4:0), with restart-marker resynchronization, and subsampled chroma
+//! is then lifted onto the luma block grid by [`upsample`] without ever
+//! leaving the DCT domain — so `CoeffImage` stays uniform and everything
+//! downstream (`SparseBlocks`, `ExplodedModel`) is untouched.
 
 use super::bits::{BitReader, BitWriter};
 use super::color;
@@ -19,8 +26,9 @@ use super::huffman::{
 };
 use super::jfif::{self, FrameComponent};
 use super::quant::QuantTable;
+use super::upsample;
 use super::zigzag;
-use super::{JpegError, Result, BLK, NCOEF};
+use super::{JpegError, Result, BLK, MAX_DECODE_PIXELS, NCOEF};
 use crate::tensor::Tensor;
 
 /// Planar pixel image, values in [0, 255].
@@ -115,6 +123,29 @@ impl CoeffImage {
     }
 }
 
+/// Chroma subsampling layout for the encoder (3-channel input only;
+/// grayscale always encodes 1x1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Subsampling {
+    /// Every component at full resolution (luma 1x1).
+    S444,
+    /// Chroma halved on both axes (luma 2x2, chroma 1x1).
+    S420,
+    /// Chroma halved horizontally (luma 2x1, chroma 1x1).
+    S422,
+}
+
+impl Subsampling {
+    /// Luma (h, v) sampling factors; chroma is always 1x1.
+    fn luma_factors(self) -> (usize, usize) {
+        match self {
+            Subsampling::S444 => (1, 1),
+            Subsampling::S420 => (2, 2),
+            Subsampling::S422 => (2, 1),
+        }
+    }
+}
+
 /// Encoder options.
 #[derive(Clone, Copy, Debug)]
 pub struct EncodeOptions {
@@ -125,17 +156,36 @@ pub struct EncodeOptions {
     /// network artifacts take one qvec per image).  Decoding supports
     /// either layout.
     pub separate_chroma_table: bool,
+    /// Chroma subsampling for 3-channel input (ignored for grayscale).
+    pub subsampling: Subsampling,
+    /// Restart interval in MCUs (0 = no restart markers).
+    pub restart_interval: u16,
 }
 
 impl Default for EncodeOptions {
     fn default() -> Self {
-        EncodeOptions { quality: 90, separate_chroma_table: false }
+        EncodeOptions {
+            quality: 90,
+            separate_chroma_table: false,
+            subsampling: Subsampling::S444,
+            restart_interval: 0,
+        }
     }
 }
 
 impl EncodeOptions {
     pub fn quality(quality: u8) -> Self {
         EncodeOptions { quality, ..Default::default() }
+    }
+
+    pub fn with_subsampling(mut self, s: Subsampling) -> Self {
+        self.subsampling = s;
+        self
+    }
+
+    pub fn with_restart_interval(mut self, interval: u16) -> Self {
+        self.restart_interval = interval;
+        self
     }
 }
 
@@ -166,8 +216,49 @@ fn extract_block(plane: &[f32], h: usize, w: usize, by: usize, bx: usize) -> [f3
     out
 }
 
+/// One component's encode-side state: its (possibly downsampled) plane
+/// and sampling factors.
+struct EncComp {
+    plane: Vec<f32>,
+    ph: usize,
+    pw: usize,
+    sh: usize,
+    sv: usize,
+}
+
+/// Box-average downsample of a full-resolution plane by (fh, fv),
+/// clamping partial windows at the right/bottom edges.
+fn downsample(full: &[f32], h: usize, w: usize, fh: usize, fv: usize) -> EncComp {
+    let (dh, dw) = (ceil_div(h, fv), ceil_div(w, fh));
+    let mut plane = vec![0.0f32; dh * dw];
+    for y in 0..dh {
+        for x in 0..dw {
+            let mut sum = 0.0f32;
+            let mut n = 0.0f32;
+            for dy in 0..fv {
+                let sy = y * fv + dy;
+                if sy >= h {
+                    continue;
+                }
+                for dx in 0..fh {
+                    let sx = x * fh + dx;
+                    if sx >= w {
+                        continue;
+                    }
+                    sum += full[sy * w + sx];
+                    n += 1.0;
+                }
+            }
+            plane[y * dw + x] = sum / n;
+        }
+    }
+    EncComp { plane, ph: dh, pw: dw, sh: 1, sv: 1 }
+}
+
 /// Encode a planar image (values [0,255]; 1 = grayscale, 3 = RGB) to
-/// baseline JFIF bytes.  3-channel input is converted to YCbCr 4:4:4.
+/// baseline JFIF bytes.  3-channel input is converted to YCbCr; chroma
+/// is box-downsampled when `opts.subsampling` asks for it, and restart
+/// markers are emitted every `opts.restart_interval` MCUs.
 pub fn encode(img: &PixelImage, opts: EncodeOptions) -> Result<Vec<u8>> {
     if img.channels != 1 && img.channels != 3 {
         return Err(JpegError::Unsupported(format!(
@@ -188,7 +279,31 @@ pub fn encode(img: &PixelImage, opts: EncodeOptions) -> Result<Vec<u8>> {
     } else {
         q_luma.clone()
     };
-    let (bh, bw) = (ceil_div(h, BLK), ceil_div(w, BLK));
+
+    let (lh, lv) = if img.channels == 3 {
+        opts.subsampling.luma_factors()
+    } else {
+        (1, 1)
+    };
+    let (mcus_x, mcus_y) = (ceil_div(w, BLK * lh), ceil_div(h, BLK * lv));
+
+    let mut enc_comps: Vec<EncComp> = Vec::with_capacity(img.channels);
+    for ci in 0..img.channels {
+        let full = &planes[ci * h * w..(ci + 1) * h * w];
+        if ci == 0 {
+            enc_comps.push(EncComp {
+                plane: full.to_vec(),
+                ph: h,
+                pw: w,
+                sh: lh,
+                sv: lv,
+            });
+        } else if (lh, lv) == (1, 1) {
+            enc_comps.push(EncComp { plane: full.to_vec(), ph: h, pw: w, sh: 1, sv: 1 });
+        } else {
+            enc_comps.push(downsample(full, h, w, lh, lv));
+        }
+    }
 
     let mut writer = jfif::Writer::new();
     writer.app0_jfif();
@@ -199,6 +314,8 @@ pub fn encode(img: &PixelImage, opts: EncodeOptions) -> Result<Vec<u8>> {
     let comps: Vec<FrameComponent> = (0..img.channels)
         .map(|i| FrameComponent {
             id: i as u8 + 1,
+            h: enc_comps[i].sh as u8,
+            v: enc_comps[i].sv as u8,
             qtable: usize::from(i > 0 && opts.separate_chroma_table),
             dc_table: usize::from(i > 0),
             ac_table: usize::from(i > 0),
@@ -211,6 +328,9 @@ pub fn encode(img: &PixelImage, opts: EncodeOptions) -> Result<Vec<u8>> {
         writer.dht(0, 1, &dc_chroma_spec());
         writer.dht(1, 1, &ac_chroma_spec());
     }
+    if opts.restart_interval > 0 {
+        writer.dri(opts.restart_interval);
+    }
     writer.sos(&comps);
 
     let dc_encs = [HuffEncoder::new(&dc_luma_spec()), HuffEncoder::new(&dc_chroma_spec())];
@@ -219,35 +339,108 @@ pub fn encode(img: &PixelImage, opts: EncodeOptions) -> Result<Vec<u8>> {
 
     let mut bitw = BitWriter::new();
     let mut preds = vec![0i32; img.channels];
-    // interleaved MCU order: for 4:4:4 an MCU is one block per component
-    for by in 0..bh {
-        for bx in 0..bw {
-            for (ci, pred) in preds.iter_mut().enumerate() {
-                let plane = &planes[ci * h * w..(ci + 1) * h * w];
-                let mut block = extract_block(plane, h, w, by, bx);
-                for v in &mut block {
-                    *v -= 128.0; // level shift
-                }
-                let f = dct::forward(&block);
-                let zz = zigzag::to_zigzag(&f);
-                let t = usize::from(ci > 0);
-                let qz = QuantTable::round(&qts[t].quantize(&zz));
-                *pred = entropy::encode_block(
-                    &mut bitw, &qz, *pred, &dc_encs[t], &ac_encs[t],
-                );
+    let ri = opts.restart_interval as usize;
+    let mut rst_n = 0u8;
+    let mut since_restart = 0usize;
+    for my in 0..mcus_y {
+        for mx in 0..mcus_x {
+            if ri > 0 && since_restart == ri {
+                bitw.restart_marker(rst_n);
+                rst_n = (rst_n + 1) % 8;
+                preds.iter_mut().for_each(|p| *p = 0);
+                since_restart = 0;
             }
+            for ci in 0..img.channels {
+                let ec = &enc_comps[ci];
+                let t = usize::from(ci > 0);
+                for dy in 0..ec.sv {
+                    for dx in 0..ec.sh {
+                        let mut block = extract_block(
+                            &ec.plane,
+                            ec.ph,
+                            ec.pw,
+                            my * ec.sv + dy,
+                            mx * ec.sh + dx,
+                        );
+                        for v in &mut block {
+                            *v -= 128.0; // level shift
+                        }
+                        let f = dct::forward(&block);
+                        let zz = zigzag::to_zigzag(&f);
+                        let qz = QuantTable::round(&qts[t].quantize(&zz));
+                        preds[ci] = entropy::encode_block(
+                            &mut bitw, &qz, preds[ci], &dc_encs[t], &ac_encs[t],
+                        );
+                    }
+                }
+            }
+            since_restart += 1;
         }
     }
     writer.scan_data(&bitw.finish());
     Ok(writer.finish())
 }
 
+/// Per-component decode geometry: sampling factors, upsample ratios and
+/// the MCU-padded native block grid.
+struct CompGeom {
+    sh: usize,
+    sv: usize,
+    rh: usize,
+    rv: usize,
+    pbh: usize,
+    pbw: usize,
+}
+
 /// Entropy-decode only: bytes -> the paper's JPEG transform domain.
+///
+/// Each component is decoded at its native MCU geometry (with restart
+/// resynchronization when DRI declares an interval), then subsampled
+/// chroma is lifted onto the luma block grid in the DCT domain.
 pub fn decode_to_coefficients(data: &[u8]) -> Result<CoeffImage> {
     let parsed = jfif::parse(data)?;
     let (h, w) = (parsed.height, parsed.width);
-    let (bh, bw) = (ceil_div(h, BLK), ceil_div(w, BLK));
+    if h * w > MAX_DECODE_PIXELS {
+        return Err(JpegError::TooLarge { height: h, width: w, limit: MAX_DECODE_PIXELS });
+    }
     let nc = parsed.components.len();
+
+    // sampling geometry: the max factors define the MCU; every component
+    // must divide them by 1 or 2 per axis (4:4:4 / 4:2:0 / 4:2:2 / 4:4:0)
+    let (hmax, vmax) = if nc == 1 {
+        (1usize, 1usize) // single-component scans are never interleaved
+    } else {
+        parsed.components.iter().fold((1, 1), |(a, b), c| {
+            (a.max(c.h as usize), b.max(c.v as usize))
+        })
+    };
+    let blocks_per_mcu: usize = if nc == 1 {
+        1
+    } else {
+        parsed.components.iter().map(|c| c.h as usize * c.v as usize).sum()
+    };
+    if blocks_per_mcu > 10 {
+        return Err(JpegError::Invalid(
+            "more than 10 blocks per MCU (T.81 B.2.3)".into(),
+        ));
+    }
+    let (mcus_x, mcus_y) = (ceil_div(w, BLK * hmax), ceil_div(h, BLK * vmax));
+
+    let mut geom = Vec::with_capacity(nc);
+    for comp in &parsed.components {
+        let (sh, sv) = if nc == 1 {
+            (1, 1)
+        } else {
+            (comp.h as usize, comp.v as usize)
+        };
+        let (rh, rv) = (hmax / sh, vmax / sv);
+        if rh * sh != hmax || rv * sv != vmax || rh > 2 || rv > 2 {
+            return Err(JpegError::Unsupported(format!(
+                "sampling layout {sh}x{sv} against {hmax}x{vmax} MCUs"
+            )));
+        }
+        geom.push(CompGeom { sh, sv, rh, rv, pbh: mcus_y * sv, pbw: mcus_x * sh });
+    }
 
     let mut qtables = Vec::with_capacity(nc);
     let mut dc_decs = Vec::with_capacity(nc);
@@ -270,18 +463,87 @@ pub fn decode_to_coefficients(data: &[u8]) -> Result<CoeffImage> {
         ));
     }
 
-    let mut coeffs = vec![0i32; nc * bh * bw * NCOEF];
-    let mut preds = vec![0i32; nc];
+    // native-geometry coefficient planes, one per component
+    let mut native: Vec<Vec<i32>> = geom
+        .iter()
+        .map(|g| vec![0i32; g.pbh * g.pbw * NCOEF])
+        .collect();
+
+    let ri = parsed.restart_interval as usize;
     let mut reader = BitReader::new(&parsed.scan_data);
+    let mut preds = vec![0i32; nc];
     let mut block = [0i32; 64];
-    for by in 0..bh {
-        for bx in 0..bw {
+    let mut rst_n = 0u8;
+    let mut since_restart = 0usize;
+    for my in 0..mcus_y {
+        for mx in 0..mcus_x {
+            if ri > 0 && since_restart == ri {
+                let expected = 0xD0 + rst_n;
+                let found = reader.read_restart_marker()?;
+                if found != expected {
+                    return Err(JpegError::RestartMismatch { expected, found });
+                }
+                rst_n = (rst_n + 1) % 8;
+                preds.iter_mut().for_each(|p| *p = 0);
+                since_restart = 0;
+            }
             for ci in 0..nc {
-                preds[ci] = entropy::decode_block(
-                    &mut reader, &mut block, preds[ci], &dc_decs[ci], &ac_decs[ci],
-                )?;
-                let off = (((ci * bh) + by) * bw + bx) * NCOEF;
-                coeffs[off..off + NCOEF].copy_from_slice(&block);
+                let g = &geom[ci];
+                for dy in 0..g.sv {
+                    for dx in 0..g.sh {
+                        preds[ci] = entropy::decode_block(
+                            &mut reader, &mut block, preds[ci], &dc_decs[ci], &ac_decs[ci],
+                        )?;
+                        let off = ((my * g.sv + dy) * g.pbw + mx * g.sh + dx) * NCOEF;
+                        native[ci][off..off + NCOEF].copy_from_slice(&block);
+                    }
+                }
+            }
+            since_restart += 1;
+        }
+    }
+    if reader.hit_padding() {
+        return Err(JpegError::Truncated { what: "entropy-coded segment" });
+    }
+
+    // assemble the uniform luma-grid CoeffImage, upsampling subsampled
+    // components in the DCT domain
+    let (bh, bw) = (ceil_div(h, BLK), ceil_div(w, BLK));
+    let mut coeffs = vec![0i32; nc * bh * bw * NCOEF];
+    for ci in 0..nc {
+        let g = &geom[ci];
+        if (g.rh, g.rv) == (1, 1) {
+            for by in 0..bh {
+                for bx in 0..bw {
+                    let src = (by * g.pbw + bx) * NCOEF;
+                    let dst = (((ci * bh) + by) * bw + bx) * NCOEF;
+                    coeffs[dst..dst + NCOEF]
+                        .copy_from_slice(&native[ci][src..src + NCOEF]);
+                }
+            }
+        } else {
+            let maps = upsample::quadrant_maps(g.rv, g.rh);
+            let qt = &qtables[ci];
+            let mut zz = [0.0f32; 64];
+            for cy in 0..g.pbh {
+                for cx in 0..g.pbw {
+                    let src = (cy * g.pbw + cx) * NCOEF;
+                    for k in 0..NCOEF {
+                        zz[k] = native[ci][src + k] as f32;
+                    }
+                    let raster = zigzag::from_zigzag(&qt.dequantize(&zz));
+                    for map in maps {
+                        let by = cy * g.rv + map.qy;
+                        let bx = cx * g.rh + map.qx;
+                        if by >= bh || bx >= bw {
+                            continue;
+                        }
+                        let up = zigzag::to_zigzag(&map.apply(&raster));
+                        let q = QuantTable::round(&qt.quantize(&up));
+                        let dst = (((ci * bh) + by) * bw + bx) * NCOEF;
+                        coeffs[dst..dst + NCOEF].copy_from_slice(&q);
+                    }
+                }
             }
         }
     }
@@ -407,22 +669,23 @@ mod tests {
         img
     }
 
+    fn rmse(a: &PixelImage, b: &PixelImage) -> f32 {
+        let se: f32 = a
+            .data
+            .iter()
+            .zip(&b.data)
+            .map(|(x, y)| (x - y) * (x - y))
+            .sum();
+        (se / a.data.len() as f32).sqrt()
+    }
+
     #[test]
     fn gray_roundtrip_high_quality() {
         let img = test_image(1, 32, 32, 1);
         let bytes = encode(&img, EncodeOptions::quality(95)).unwrap();
         let dec = decode(&bytes).unwrap();
         assert_eq!((dec.channels, dec.height, dec.width), (1, 32, 32));
-        let rmse: f32 = {
-            let se: f32 = img
-                .data
-                .iter()
-                .zip(&dec.data)
-                .map(|(a, b)| (a - b) * (a - b))
-                .sum();
-            (se / img.data.len() as f32).sqrt()
-        };
-        assert!(rmse < 4.0, "rmse {rmse}");
+        assert!(rmse(&img, &dec) < 4.0, "rmse {}", rmse(&img, &dec));
     }
 
     #[test]
@@ -431,16 +694,98 @@ mod tests {
         let bytes = encode(&img, EncodeOptions::quality(90)).unwrap();
         let dec = decode(&bytes).unwrap();
         assert_eq!(dec.channels, 3);
-        let rmse: f32 = {
-            let se: f32 = img
-                .data
-                .iter()
-                .zip(&dec.data)
-                .map(|(a, b)| (a - b) * (a - b))
-                .sum();
-            (se / img.data.len() as f32).sqrt()
-        };
-        assert!(rmse < 8.0, "rmse {rmse}");
+        assert!(rmse(&img, &dec) < 8.0, "rmse {}", rmse(&img, &dec));
+    }
+
+    #[test]
+    fn restart_interval_does_not_change_coefficients() {
+        // restart markers only resynchronize the bit stream and reset the
+        // DC predictors — the quantized coefficients must be identical
+        for (channels, seed) in [(1usize, 11u64), (3, 12)] {
+            let img = test_image(channels, 48, 40, seed);
+            let plain = encode(&img, EncodeOptions::quality(75)).unwrap();
+            for interval in [1u16, 3, 7] {
+                let with_rst = encode(
+                    &img,
+                    EncodeOptions::quality(75).with_restart_interval(interval),
+                )
+                .unwrap();
+                assert!(with_rst.len() > plain.len(), "restarts add bytes");
+                let a = decode_to_coefficients(&plain).unwrap();
+                let b = decode_to_coefficients(&with_rst).unwrap();
+                assert_eq!(a.coeffs, b.coeffs, "ri={interval} ch={channels}");
+            }
+        }
+    }
+
+    #[test]
+    fn subsampled_roundtrip_within_tolerance() {
+        let img = test_image(3, 32, 32, 13);
+        for (s, tol) in [(Subsampling::S420, 14.0f32), (Subsampling::S422, 12.0)] {
+            let bytes =
+                encode(&img, EncodeOptions::quality(90).with_subsampling(s)).unwrap();
+            let dec = decode(&bytes).unwrap();
+            assert_eq!((dec.height, dec.width), (32, 32));
+            let e = rmse(&img, &dec);
+            assert!(e < tol, "{s:?} rmse {e}");
+            // subsampled files are smaller than 4:4:4 of the same image
+            let full = encode(&img, EncodeOptions::quality(90)).unwrap();
+            assert!(bytes.len() < full.len(), "{s:?} not smaller");
+        }
+    }
+
+    #[test]
+    fn subsampled_coeff_grid_is_luma_grid() {
+        let img = test_image(3, 36, 20, 14); // non-multiple-of-16 dims
+        for s in [Subsampling::S420, Subsampling::S422] {
+            let bytes = encode(
+                &img,
+                EncodeOptions::quality(75).with_subsampling(s).with_restart_interval(2),
+            )
+            .unwrap();
+            let ci = decode_to_coefficients(&bytes).unwrap();
+            assert_eq!(
+                (ci.channels, ci.blocks_h, ci.blocks_w),
+                (3, ceil_div(36, 8), ceil_div(20, 8)),
+                "{s:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn subsampled_chroma_dc_preserved() {
+        // gray image (R=G=B): Cb/Cr are flat, NN upsampling of a constant
+        // plane is exact, so upsampled chroma must match the 4:4:4 encode
+        let mut img = PixelImage::new(3, 16, 16);
+        let mut rng = crate::util::Rng::new(15);
+        for y in 0..16 {
+            for x in 0..16 {
+                let v = 100.0 + 50.0 * (x as f32 / 16.0) + rng.uniform_in(-2.0, 2.0);
+                for c in 0..3 {
+                    img.set(c, y, x, v);
+                }
+            }
+        }
+        let sub = encode(
+            &img,
+            EncodeOptions::quality(90).with_subsampling(Subsampling::S420),
+        )
+        .unwrap();
+        let full = encode(&img, EncodeOptions::quality(90)).unwrap();
+        let a = decode_to_coefficients(&sub).unwrap();
+        let b = decode_to_coefficients(&full).unwrap();
+        // chroma channels: DC coefficients should agree closely
+        for c in 1..3 {
+            for by in 0..2 {
+                for bx in 0..2 {
+                    let (da, db) = (a.block(c, by, bx)[0], b.block(c, by, bx)[0]);
+                    assert!(
+                        (da - db).abs() <= 1,
+                        "c={c} ({by},{bx}): {da} vs {db}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]
@@ -451,13 +796,7 @@ mod tests {
         assert!(lo.len() < hi.len());
         let rm = |bytes: &[u8]| {
             let d = decode(bytes).unwrap();
-            let se: f32 = img
-                .data
-                .iter()
-                .zip(&d.data)
-                .map(|(a, b)| (a - b) * (a - b))
-                .sum();
-            (se / img.data.len() as f32).sqrt()
+            rmse(&img, &d)
         };
         assert!(rm(&lo) > rm(&hi));
     }

@@ -1,0 +1,262 @@
+//! Deterministic mutation fuzzer for the decode and wire layers.
+//!
+//! std-only and fully seeded: the same `(iters, seed)` pair visits the
+//! same mutated inputs on every platform, so a CI smoke run is
+//! reproducible and a reported failure replays exactly.  Seeds come from
+//! the [`super::corpus`] fixtures; mutators are the classic byte-level
+//! set — bit flips, byte sets, truncation, junk extension, cross-seed
+//! splices, chunk deletion/duplication, marker nudges and length-field
+//! tweaks — stacked 1..=4 deep per iteration.
+//!
+//! The contract under test: **every** input either decodes or returns a
+//! typed error.  A panic anywhere in `jpeg::decode_to_coefficients` or
+//! `protocol::read_incoming` is a bug, and the harness catches and
+//! reports it (with the seed/iteration needed to replay) instead of
+//! taking the process down.
+
+use super::codec::decode_to_coefficients;
+use super::corpus;
+use crate::serving::frontend::protocol;
+use crate::util::Rng;
+use std::io::Cursor;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Aggregate result of one fuzz run.
+pub struct FuzzReport {
+    pub target: &'static str,
+    pub iters: usize,
+    /// inputs that decoded / parsed successfully despite mutation
+    pub ok: usize,
+    /// inputs rejected with a typed error (the expected common case)
+    pub typed_err: usize,
+    /// replay coordinates of every panic: `(iteration, description)`
+    pub panics: Vec<(usize, String)>,
+}
+
+impl std::fmt::Display for FuzzReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "fuzz {}: iters={} decoded_ok={} typed_errors={} panics={}",
+            self.target,
+            self.iters,
+            self.ok,
+            self.typed_err,
+            self.panics.len()
+        )
+    }
+}
+
+/// Apply 1..=4 stacked mutations of `base`, splicing from `donors` when
+/// the splice mutator is drawn.
+fn mutate(rng: &mut Rng, base: &[u8], donors: &[Vec<u8>]) -> Vec<u8> {
+    let mut data = base.to_vec();
+    let n_ops = 1 + rng.below(4);
+    for _ in 0..n_ops {
+        if data.is_empty() {
+            data = vec![0u8; 4];
+        }
+        match rng.below(9) {
+            // single bit flip
+            0 => {
+                let i = rng.below(data.len());
+                data[i] ^= 1 << rng.below(8);
+            }
+            // byte set
+            1 => {
+                let i = rng.below(data.len());
+                data[i] = rng.below(256) as u8;
+            }
+            // truncate to a prefix
+            2 => {
+                let keep = rng.below(data.len());
+                data.truncate(keep.max(1));
+            }
+            // extend with junk
+            3 => {
+                let n = 1 + rng.below(64);
+                for _ in 0..n {
+                    data.push(rng.below(256) as u8);
+                }
+            }
+            // splice a chunk from another seed input
+            4 => {
+                let donor = &donors[rng.below(donors.len())];
+                if donor.is_empty() {
+                    continue;
+                }
+                let src = rng.below(donor.len());
+                let len = (1 + rng.below(48)).min(donor.len() - src);
+                let dst = rng.below(data.len());
+                let end = (dst + len).min(data.len());
+                data.splice(dst..end, donor[src..src + len].iter().copied());
+            }
+            // delete a chunk
+            5 => {
+                let start = rng.below(data.len());
+                let len = (1 + rng.below(32)).min(data.len() - start);
+                data.drain(start..start + len);
+            }
+            // duplicate a chunk in place
+            6 => {
+                let start = rng.below(data.len());
+                let len = (1 + rng.below(32)).min(data.len() - start);
+                let chunk: Vec<u8> = data[start..start + len].to_vec();
+                let at = rng.below(data.len() + 1);
+                data.splice(at..at, chunk);
+            }
+            // nudge a 0xFF marker prefix: mutate the byte after some 0xFF
+            7 => {
+                let ffs: Vec<usize> = data
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &b)| b == 0xFF)
+                    .map(|(i, _)| i)
+                    .collect();
+                if let Some(&i) = ffs.get(rng.below(ffs.len().max(1))) {
+                    if i + 1 < data.len() {
+                        data[i + 1] = rng.below(256) as u8;
+                    }
+                }
+            }
+            // tweak a plausible big-endian length field (the two bytes
+            // after a marker) to lie about segment size
+            _ => {
+                let i = rng.below(data.len());
+                if i + 3 < data.len() && data[i] == 0xFF {
+                    let lie = rng.below(0x10000) as u16;
+                    data[i + 2] = (lie >> 8) as u8;
+                    data[i + 3] = (lie & 0xFF) as u8;
+                } else {
+                    let j = rng.below(data.len());
+                    data[j] = data[j].wrapping_add(0x80);
+                }
+            }
+        }
+    }
+    data
+}
+
+/// Fuzz `decode_to_coefficients` with mutated corpus JPEGs.
+pub fn fuzz_decoder(iters: usize, seed: u64) -> FuzzReport {
+    let seeds: Vec<Vec<u8>> = corpus::corpus().into_iter().map(|e| e.bytes).collect();
+    let mut rng = Rng::new(seed);
+    let mut report = FuzzReport {
+        target: "decoder",
+        iters,
+        ok: 0,
+        typed_err: 0,
+        panics: Vec::new(),
+    };
+    for it in 0..iters {
+        let base = &seeds[rng.below(seeds.len())];
+        let input = mutate(&mut rng, base, &seeds);
+        match catch_unwind(AssertUnwindSafe(|| decode_to_coefficients(&input))) {
+            Ok(Ok(_)) => report.ok += 1,
+            Ok(Err(_)) => report.typed_err += 1,
+            Err(payload) => report.panics.push((it, panic_message(payload))),
+        }
+    }
+    report
+}
+
+/// Fuzz the wire frame parser with mutated valid frames (requests, stats
+/// requests, and multi-frame concatenations), draining each stream the
+/// way the listener does.
+pub fn fuzz_wire(iters: usize, seed: u64) -> FuzzReport {
+    let jpegs: Vec<Vec<u8>> = corpus::corpus().into_iter().map(|e| e.bytes).collect();
+    // valid frame seeds: single requests, a stats scrape, a pipelined pair
+    let mut seeds: Vec<Vec<u8>> = Vec::new();
+    for (i, j) in jpegs.iter().take(4).enumerate() {
+        seeds.push(
+            protocol::encode_request(i as u64 + 1, 50_000, 75, j)
+                .expect("valid request encodes"),
+        );
+    }
+    seeds.push(protocol::encode_stats_request(99).expect("valid stats encodes"));
+    let mut pair = seeds[0].clone();
+    pair.extend_from_slice(&seeds[4]);
+    seeds.push(pair);
+
+    let mut rng = Rng::new(seed);
+    let mut report = FuzzReport {
+        target: "wire",
+        iters,
+        ok: 0,
+        typed_err: 0,
+        panics: Vec::new(),
+    };
+    for it in 0..iters {
+        let base = &seeds[rng.below(seeds.len())];
+        let input = mutate(&mut rng, base, &seeds);
+        let drained = catch_unwind(AssertUnwindSafe(|| {
+            let mut cur = Cursor::new(input.as_slice());
+            let mut frames = 0usize;
+            loop {
+                match protocol::read_incoming(&mut cur) {
+                    Ok(Some(_)) => frames += 1,
+                    Ok(None) => return Ok(frames),
+                    Err(e) => return Err(e),
+                }
+            }
+        }));
+        match drained {
+            Ok(Ok(_)) => report.ok += 1,
+            Ok(Err(_)) => report.typed_err += 1,
+            Err(payload) => report.panics.push((it, panic_message(payload))),
+        }
+    }
+    report
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mutation_is_deterministic() {
+        let seeds: Vec<Vec<u8>> =
+            corpus::corpus().into_iter().take(3).map(|e| e.bytes).collect();
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..50 {
+            assert_eq!(
+                mutate(&mut a, &seeds[0], &seeds),
+                mutate(&mut b, &seeds[0], &seeds)
+            );
+        }
+    }
+
+    #[test]
+    fn decoder_smoke_no_panics() {
+        let r = fuzz_decoder(150, 1);
+        assert_eq!(r.iters, 150);
+        assert!(r.panics.is_empty(), "panics: {:?}", r.panics);
+        assert!(r.typed_err > 0, "mutations should trip typed errors");
+    }
+
+    #[test]
+    fn wire_smoke_no_panics() {
+        let r = fuzz_wire(150, 2);
+        assert!(r.panics.is_empty(), "panics: {:?}", r.panics);
+        assert!(r.ok + r.typed_err == 150);
+    }
+
+    #[test]
+    fn report_line_is_greppable() {
+        let r = fuzz_decoder(10, 3);
+        let line = r.to_string();
+        assert!(line.starts_with("fuzz decoder: iters=10 "));
+        assert!(line.contains("panics=0"), "{line}");
+    }
+}

@@ -1,9 +1,16 @@
 //! JFIF container: marker segment writing and parsing (baseline SOF0).
 //!
-//! Supports what the paper's pipeline needs: 8-bit baseline, 1 or 3
-//! components, 4:4:4 (no chroma subsampling), interleaved single scan,
-//! standard or custom Huffman/quant tables.  Progressive, arithmetic
-//! coding and restart intervals are rejected with clear errors.
+//! The parser accepts what real-world baseline encoders emit: 8-bit
+//! baseline SOF0, 1..=4 components, 4:4:4 / 4:2:0 / 4:2:2 / 4:4:0
+//! sampling factors, restart intervals (DRI), and arbitrary APPn / COM /
+//! unknown variable-length segments (skipped after length validation).
+//! Progressive (SOF2), arithmetic coding, 16-bit quant tables and
+//! multi-scan streams are rejected with precise typed errors.
+//!
+//! Hostile-input contract: every byte read is bounds-checked, segment
+//! lengths are validated before any allocation, Huffman code counts are
+//! checked for canonical validity (so `HuffDecoder::new` cannot index
+//! out of bounds), and no input causes a panic — only `JpegError`.
 
 use super::huffman::HuffSpec;
 use super::quant::QuantTable;
@@ -12,18 +19,26 @@ use super::{JpegError, Result};
 
 pub const SOI: u16 = 0xFFD8;
 pub const EOI: u16 = 0xFFD9;
+pub const TEM: u16 = 0xFF01;
 pub const APP0: u16 = 0xFFE0;
+pub const APP1: u16 = 0xFFE1;
+pub const APP2: u16 = 0xFFE2;
 pub const DQT: u16 = 0xFFDB;
 pub const SOF0: u16 = 0xFFC0;
+pub const SOF2: u16 = 0xFFC2;
 pub const DHT: u16 = 0xFFC4;
 pub const SOS: u16 = 0xFFDA;
 pub const DRI: u16 = 0xFFDD;
+pub const DNL: u16 = 0xFFDC;
 pub const COM: u16 = 0xFFFE;
 
 /// One frame component as declared in SOF0/SOS.
 #[derive(Clone, Debug)]
 pub struct FrameComponent {
     pub id: u8,
+    /// Horizontal / vertical sampling factors (1..=4; 1x1 = no subsampling).
+    pub h: u8,
+    pub v: u8,
     pub qtable: usize,
     pub dc_table: usize,
     pub ac_table: usize,
@@ -38,6 +53,8 @@ pub struct ParsedJpeg {
     pub qtables: Vec<Option<QuantTable>>,
     pub dc_specs: Vec<Option<HuffSpec>>,
     pub ac_specs: Vec<Option<HuffSpec>>,
+    /// Restart interval in MCUs (0 = no restart markers).
+    pub restart_interval: u16,
     pub scan_data: Vec<u8>,
 }
 
@@ -64,6 +81,12 @@ impl Writer {
         let len = (payload.len() + 2) as u16;
         self.out.extend_from_slice(&len.to_be_bytes());
         self.out.extend_from_slice(payload);
+    }
+
+    /// Emit an arbitrary variable-length segment (APPn metadata, corpus
+    /// fixtures exercising the parser's unknown-segment tolerance).
+    pub fn segment_raw(&mut self, m: u16, payload: &[u8]) {
+        self.segment(m, payload);
     }
 
     pub fn app0_jfif(&mut self) {
@@ -96,7 +119,7 @@ impl Writer {
         p.push(comps.len() as u8);
         for c in comps {
             p.push(c.id);
-            p.push(0x11); // 1x1 sampling (4:4:4)
+            p.push((c.h << 4) | (c.v & 0x0F));
             p.push(c.qtable as u8);
         }
         self.segment(SOF0, &p);
@@ -108,6 +131,11 @@ impl Writer {
         p.extend_from_slice(&spec.counts);
         p.extend_from_slice(&spec.values);
         self.segment(DHT, &p);
+    }
+
+    /// DRI: restart interval in MCUs.
+    pub fn dri(&mut self, interval: u16) {
+        self.segment(DRI, &interval.to_be_bytes());
     }
 
     pub fn sos(&mut self, comps: &[FrameComponent]) {
@@ -145,56 +173,121 @@ struct Cursor<'a> {
 }
 
 impl<'a> Cursor<'a> {
-    fn u8(&mut self) -> Result<u8> {
+    fn u8(&mut self, what: &'static str) -> Result<u8> {
         let v = *self
             .data
             .get(self.pos)
-            .ok_or_else(|| JpegError::Invalid("truncated".into()))?;
+            .ok_or(JpegError::Truncated { what })?;
         self.pos += 1;
         Ok(v)
     }
 
-    fn u16(&mut self) -> Result<u16> {
-        Ok(((self.u8()? as u16) << 8) | self.u8()? as u16)
+    fn u16(&mut self, what: &'static str) -> Result<u16> {
+        Ok(((self.u8(what)? as u16) << 8) | self.u8(what)? as u16)
     }
 
-    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+    fn bytes(&mut self, n: usize, what: &'static str) -> Result<&'a [u8]> {
         if self.pos + n > self.data.len() {
-            return Err(JpegError::Invalid("truncated segment".into()));
+            return Err(JpegError::Truncated { what });
         }
         let s = &self.data[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
     }
+
+    /// Read a variable-length segment body after `marker`, validating the
+    /// declared length against what actually remains before touching it.
+    fn segment(&mut self, marker: u16) -> Result<&'a [u8]> {
+        let declared = self.u16("segment length")? as usize;
+        if declared < 2 {
+            return Err(JpegError::BadLength { marker, declared });
+        }
+        let available = self.data.len() - self.pos;
+        if declared - 2 > available {
+            return Err(JpegError::SegmentOverrun { marker, declared, available });
+        }
+        self.bytes(declared - 2, "segment body")
+    }
+}
+
+fn be16(p: &[u8], off: usize) -> usize {
+    ((p[off] as usize) << 8) | p[off + 1] as usize
+}
+
+/// Canonical-code validity of DHT counts (T.81 C.2): at each length the
+/// assigned code range must fit.  This is what makes `HuffDecoder::new`
+/// safe on attacker-controlled tables — without it the fast-lookup build
+/// indexes out of bounds.
+fn validate_huff_counts(counts: &[u8; 16]) -> Result<()> {
+    let mut code = 0i64;
+    for (l, &n) in counts.iter().enumerate() {
+        code += n as i64;
+        if code > 1i64 << (l + 1) {
+            return Err(JpegError::Invalid(
+                "DHT code counts exceed canonical code space".into(),
+            ));
+        }
+        code <<= 1;
+    }
+    Ok(())
+}
+
+struct SofComp {
+    id: u8,
+    h: u8,
+    v: u8,
+    qtable: usize,
 }
 
 /// Parse headers and locate the entropy-coded segment.
+///
+/// Marker state machine: SOI, then any interleaving of DQT / DHT / DRI /
+/// SOF0 / skippable segments (APPn, COM, DNL, unknown-with-length; TEM is
+/// standalone), then SOS followed by entropy data (RSTn allowed inside
+/// when a restart interval is declared) terminated by EOI.
 pub fn parse(data: &[u8]) -> Result<ParsedJpeg> {
-    let mut c = Cursor { data, pos: 0 };
-    if c.u16()? != SOI {
-        return Err(JpegError::Invalid("missing SOI".into()));
+    if data.len() < 2 || data[0] != 0xFF || data[1] != 0xD8 {
+        return Err(JpegError::BadMagic);
     }
+    let mut c = Cursor { data, pos: 2 };
     let mut qtables: Vec<Option<QuantTable>> = vec![None; 4];
     let mut dc_specs: Vec<Option<HuffSpec>> = vec![None; 4];
     let mut ac_specs: Vec<Option<HuffSpec>> = vec![None; 4];
-    let mut frame: Option<(usize, usize, Vec<(u8, usize)>)> = None;
+    let mut frame: Option<(usize, usize, Vec<SofComp>)> = None;
+    let mut restart_interval = 0u16;
 
     loop {
-        let marker = c.u16()?;
-        if marker == EOI {
-            return Err(JpegError::Invalid("EOI before SOS".into()));
-        }
-        if !(0xFF01..=0xFFFE).contains(&marker) {
+        let marker = c.u16("marker")?;
+        if marker >> 8 != 0xFF {
             return Err(JpegError::Invalid(format!("bad marker {marker:#06x}")));
         }
+        if marker == 0xFFFF {
+            // fill byte (T.81 B.1.1.2): the second 0xFF starts the marker
+            c.pos -= 1;
+            continue;
+        }
         match marker {
+            EOI => return Err(JpegError::Invalid("EOI before SOS".into())),
+            SOI => return Err(JpegError::Invalid("duplicate SOI".into())),
+            TEM => {} // standalone, no length
+            m if (0xFFD0..=0xFFD7).contains(&m) => {
+                return Err(JpegError::StrayRst {
+                    marker: m as u8,
+                    context: "between header segments",
+                });
+            }
             SOS => {
-                let len = c.u16()? as usize;
-                let payload = c.bytes(len - 2)?;
+                let p = c.segment(marker)?;
                 let (h, w, fcomps) = frame
                     .as_ref()
                     .ok_or_else(|| JpegError::Invalid("SOS before SOF0".into()))?;
-                let ns = payload[0] as usize;
+                if p.is_empty() {
+                    return Err(JpegError::Invalid("empty SOS header".into()));
+                }
+                let ns = p[0] as usize;
+                if p.len() != 1 + 2 * ns + 3 {
+                    return Err(JpegError::Invalid("SOS header length mismatch".into()));
+                }
                 if ns != fcomps.len() {
                     return Err(JpegError::Unsupported(
                         "non-interleaved scans".into(),
@@ -202,27 +295,70 @@ pub fn parse(data: &[u8]) -> Result<ParsedJpeg> {
                 }
                 let mut components = Vec::new();
                 for i in 0..ns {
-                    let id = payload[1 + 2 * i];
-                    let tables = payload[2 + 2 * i];
-                    let (fid, qt) = fcomps
+                    let id = p[1 + 2 * i];
+                    let tables = p[2 + 2 * i];
+                    let (dc_table, ac_table) =
+                        ((tables >> 4) as usize, (tables & 0x0F) as usize);
+                    if dc_table > 3 || ac_table > 3 {
+                        return Err(JpegError::Invalid(
+                            "scan Huffman table id > 3".into(),
+                        ));
+                    }
+                    let fc = fcomps
                         .iter()
-                        .find(|(cid, _)| *cid == id)
+                        .find(|fc| fc.id == id)
                         .ok_or_else(|| JpegError::Invalid("unknown scan comp".into()))?;
                     components.push(FrameComponent {
-                        id: *fid,
-                        qtable: *qt,
-                        dc_table: (tables >> 4) as usize,
-                        ac_table: (tables & 0x0F) as usize,
+                        id: fc.id,
+                        h: fc.h,
+                        v: fc.v,
+                        qtable: fc.qtable,
+                        dc_table,
+                        ac_table,
                     });
                 }
-                // entropy data runs until the next real marker (EOI)
+                // Entropy data runs to the next real marker; RSTn markers
+                // are part of the scan and skipped over here.
                 let scan_start = c.pos;
                 let mut end = scan_start;
+                let mut first_rst: Option<u8> = None;
+                let mut terminator: Option<u16> = None;
                 while end + 1 < data.len() {
-                    if data[end] == 0xFF && data[end + 1] != 0x00 {
+                    if data[end] == 0xFF {
+                        let b = data[end + 1];
+                        if b == 0x00 {
+                            end += 2; // stuffed data byte
+                            continue;
+                        }
+                        if (0xD0..=0xD7).contains(&b) {
+                            first_rst.get_or_insert(b);
+                            end += 2;
+                            continue;
+                        }
+                        terminator = Some(0xFF00 | b as u16);
                         break;
                     }
                     end += 1;
+                }
+                if let (Some(rst), 0) = (first_rst, restart_interval) {
+                    return Err(JpegError::StrayRst {
+                        marker: rst,
+                        context: "in a scan with no restart interval declared",
+                    });
+                }
+                match terminator {
+                    Some(EOI) | Some(DNL) => {}
+                    Some(m) if m == SOS || (0xFFC0..=0xFFCF).contains(&m) => {
+                        return Err(JpegError::Unsupported(
+                            "multi-scan stream (second SOS/SOF after scan data)".into(),
+                        ));
+                    }
+                    Some(m) => {
+                        return Err(JpegError::Invalid(format!(
+                            "unexpected marker {m:#06x} terminating scan"
+                        )));
+                    }
+                    None => return Err(JpegError::MissingEoi),
                 }
                 return Ok(ParsedJpeg {
                     height: *h,
@@ -231,39 +367,72 @@ pub fn parse(data: &[u8]) -> Result<ParsedJpeg> {
                     qtables,
                     dc_specs,
                     ac_specs,
+                    restart_interval,
                     scan_data: data[scan_start..end].to_vec(),
                 });
             }
             SOF0 => {
-                let len = c.u16()? as usize;
-                let p = c.bytes(len - 2)?;
+                if frame.is_some() {
+                    return Err(JpegError::Invalid("multiple SOF segments".into()));
+                }
+                let p = c.segment(marker)?;
+                if p.len() < 6 {
+                    return Err(JpegError::Invalid("SOF0 header too short".into()));
+                }
                 if p[0] != 8 {
                     return Err(JpegError::Unsupported("precision != 8".into()));
                 }
-                let h = ((p[1] as usize) << 8) | p[2] as usize;
-                let w = ((p[3] as usize) << 8) | p[4] as usize;
+                let h = be16(p, 1);
+                let w = be16(p, 3);
+                if h == 0 || w == 0 {
+                    return Err(JpegError::Invalid("zero image dimension".into()));
+                }
                 let nc = p[5] as usize;
+                if nc == 0 || nc > 4 {
+                    return Err(JpegError::BadComponentCount { count: nc });
+                }
+                if p.len() != 6 + 3 * nc {
+                    return Err(JpegError::Invalid("SOF0 length mismatch".into()));
+                }
                 let mut comps = Vec::new();
                 for i in 0..nc {
                     let id = p[6 + 3 * i];
-                    let sampling = p[7 + 3 * i];
-                    if sampling != 0x11 {
-                        return Err(JpegError::Unsupported(
-                            "chroma subsampling (only 4:4:4 supported)".into(),
-                        ));
+                    let s = p[7 + 3 * i];
+                    let (sh, sv) = (s >> 4, s & 0x0F);
+                    if sh == 0 || sv == 0 || sh > 4 || sv > 4 {
+                        return Err(JpegError::Invalid(format!(
+                            "sampling factors {s:#04x} out of range"
+                        )));
                     }
-                    comps.push((id, p[8 + 3 * i] as usize));
+                    let qtable = p[8 + 3 * i] as usize;
+                    if qtable > 3 {
+                        return Err(JpegError::Invalid("quant table id > 3".into()));
+                    }
+                    if comps.iter().any(|fc: &SofComp| fc.id == id) {
+                        return Err(JpegError::Invalid("duplicate component id".into()));
+                    }
+                    comps.push(SofComp { id, h: sh, v: sv, qtable });
                 }
                 frame = Some((h, w, comps));
             }
-            m if (0xFFC1..=0xFFCB).contains(&m) && m != DHT && m != 0xFFC8 => {
+            SOF2 => {
+                return Err(JpegError::Unsupported(
+                    "progressive JPEG (SOF2) — re-encode as baseline sequential"
+                        .into(),
+                ));
+            }
+            m if (0xFFC9..=0xFFCB).contains(&m) || m == 0xFFCC => {
+                return Err(JpegError::Unsupported(format!(
+                    "arithmetic coding ({m:#06x})"
+                )));
+            }
+            m if (0xFFC1..=0xFFCF).contains(&m) && m != DHT && m != 0xFFC8 => {
                 return Err(JpegError::Unsupported(format!(
                     "non-baseline frame {m:#06x}"
                 )));
             }
             DQT => {
-                let len = c.u16()? as usize;
-                let p = c.bytes(len - 2)?;
+                let p = c.segment(marker)?;
                 let mut off = 0;
                 while off < p.len() {
                     let pq = p[off] >> 4;
@@ -272,8 +441,25 @@ pub fn parse(data: &[u8]) -> Result<ParsedJpeg> {
                     if pq != 0 {
                         return Err(JpegError::Unsupported("16-bit DQT".into()));
                     }
+                    if tq > 3 {
+                        return Err(JpegError::Invalid("DQT table id > 3".into()));
+                    }
+                    if off + 64 > p.len() {
+                        return Err(JpegError::Invalid("truncated DQT table".into()));
+                    }
+                    if qtables[tq].is_some() {
+                        return Err(JpegError::DuplicateTable {
+                            kind: "quantization",
+                            id: tq as u8,
+                        });
+                    }
                     let mut values = [0u16; 64];
                     for (k, v) in values.iter_mut().enumerate() {
+                        if p[off + k] == 0 {
+                            return Err(JpegError::Invalid(
+                                "zero quantization value".into(),
+                            ));
+                        }
                         *v = p[off + k] as u16;
                     }
                     off += 64;
@@ -281,17 +467,26 @@ pub fn parse(data: &[u8]) -> Result<ParsedJpeg> {
                 }
             }
             DHT => {
-                let len = c.u16()? as usize;
-                let p = c.bytes(len - 2)?;
+                let p = c.segment(marker)?;
                 let mut off = 0;
                 while off < p.len() {
+                    if off + 17 > p.len() {
+                        return Err(JpegError::Invalid("truncated DHT table".into()));
+                    }
                     let class = p[off] >> 4;
                     let id = (p[off] & 0x0F) as usize;
+                    if id > 3 {
+                        return Err(JpegError::Invalid("DHT table id > 3".into()));
+                    }
                     off += 1;
                     let mut counts = [0u8; 16];
                     counts.copy_from_slice(&p[off..off + 16]);
                     off += 16;
+                    validate_huff_counts(&counts)?;
                     let total: usize = counts.iter().map(|&x| x as usize).sum();
+                    if off + total > p.len() {
+                        return Err(JpegError::Invalid("truncated DHT values".into()));
+                    }
                     let values = p[off..off + total].to_vec();
                     off += total;
                     let spec = HuffSpec { counts, values };
@@ -303,17 +498,20 @@ pub fn parse(data: &[u8]) -> Result<ParsedJpeg> {
                 }
             }
             DRI => {
-                let len = c.u16()? as usize;
-                let p = c.bytes(len - 2)?;
-                let interval = ((p[0] as u16) << 8) | p[1] as u16;
-                if interval != 0 {
-                    return Err(JpegError::Unsupported("restart intervals".into()));
+                let p = c.segment(marker)?;
+                if p.len() != 2 {
+                    return Err(JpegError::Invalid("DRI length mismatch".into()));
                 }
+                restart_interval = be16(p, 0) as u16;
+            }
+            m if m == 0xFF00 || (0xFF02..=0xFFBF).contains(&m) => {
+                // reserved marker range: no defined length, cannot skip safely
+                return Err(JpegError::Invalid(format!("bad marker {m:#06x}")));
             }
             _ => {
-                // skippable segment (APPn, COM, ...)
-                let len = c.u16()? as usize;
-                c.bytes(len - 2)?;
+                // skippable variable-length segment: APPn, COM, DNL, JPG,
+                // and anything else unknown that carries a length field
+                c.segment(marker)?;
             }
         }
     }
@@ -333,15 +531,19 @@ mod tests {
     use super::*;
     use crate::jpeg::huffman::{ac_luma_spec, dc_luma_spec};
 
+    fn fc(id: u8) -> FrameComponent {
+        FrameComponent { id, h: 1, v: 1, qtable: 0, dc_table: 0, ac_table: 0 }
+    }
+
     fn minimal_jpeg() -> Vec<u8> {
         let mut w = Writer::new();
         w.app0_jfif();
         w.comment("test");
         w.dqt(0, &QuantTable::luma(75));
-        w.sof0(8, 8, &[FrameComponent { id: 1, qtable: 0, dc_table: 0, ac_table: 0 }]);
+        w.sof0(8, 8, &[fc(1)]);
         w.dht(0, 0, &dc_luma_spec());
         w.dht(1, 0, &ac_luma_spec());
-        w.sos(&[FrameComponent { id: 1, qtable: 0, dc_table: 0, ac_table: 0 }]);
+        w.sos(&[fc(1)]);
         w.scan_data(&[0xAB, 0xCD]);
         w.finish()
     }
@@ -355,6 +557,7 @@ mod tests {
         assert_eq!((p.height, p.width), (8, 8));
         assert_eq!(p.components.len(), 1);
         assert_eq!(p.scan_data, vec![0xAB, 0xCD]);
+        assert_eq!(p.restart_interval, 0);
         assert!(p.qtables[0].is_some());
         assert!(p.dc_specs[0].is_some());
         assert!(p.ac_specs[0].is_some());
@@ -369,7 +572,73 @@ mod tests {
 
     #[test]
     fn missing_soi_rejected() {
-        assert!(parse(&[0x00, 0x01]).is_err());
+        match parse(&[0x00, 0x01]) {
+            Err(JpegError::BadMagic) => {}
+            other => panic!("expected BadMagic, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sampling_factors_roundtrip() {
+        let mut w = Writer::new();
+        w.dqt(0, &QuantTable::luma(75));
+        let comps = [
+            FrameComponent { id: 1, h: 2, v: 2, qtable: 0, dc_table: 0, ac_table: 0 },
+            FrameComponent { id: 2, h: 1, v: 1, qtable: 0, dc_table: 0, ac_table: 0 },
+            FrameComponent { id: 3, h: 1, v: 1, qtable: 0, dc_table: 0, ac_table: 0 },
+        ];
+        w.sof0(32, 32, &comps);
+        w.dht(0, 0, &dc_luma_spec());
+        w.dht(1, 0, &ac_luma_spec());
+        w.sos(&comps);
+        w.scan_data(&[0x12]);
+        let p = parse(&w.finish()).unwrap();
+        assert_eq!((p.components[0].h, p.components[0].v), (2, 2));
+        assert_eq!((p.components[1].h, p.components[1].v), (1, 1));
+    }
+
+    #[test]
+    fn dri_parsed() {
+        let mut w = Writer::new();
+        w.dqt(0, &QuantTable::luma(75));
+        w.sof0(8, 8, &[fc(1)]);
+        w.dht(0, 0, &dc_luma_spec());
+        w.dht(1, 0, &ac_luma_spec());
+        w.dri(5);
+        w.sos(&[fc(1)]);
+        w.scan_data(&[0xAB]);
+        let p = parse(&w.finish()).unwrap();
+        assert_eq!(p.restart_interval, 5);
+    }
+
+    #[test]
+    fn rst_markers_inside_scan_data_kept() {
+        let mut w = Writer::new();
+        w.dqt(0, &QuantTable::luma(75));
+        w.sof0(8, 8, &[fc(1)]);
+        w.dht(0, 0, &dc_luma_spec());
+        w.dht(1, 0, &ac_luma_spec());
+        w.dri(1);
+        w.sos(&[fc(1)]);
+        w.scan_data(&[0xAB, 0xFF, 0xD0, 0xCD]);
+        let p = parse(&w.finish()).unwrap();
+        assert_eq!(p.scan_data, vec![0xAB, 0xFF, 0xD0, 0xCD]);
+    }
+
+    #[test]
+    fn unknown_appn_and_com_skipped() {
+        let mut w = Writer::new();
+        w.segment_raw(APP1, b"Exif\0\0junkjunkjunk");
+        w.segment_raw(APP2, b"ICC_PROFILE\0 not a real profile");
+        w.segment_raw(0xFFED, &[0u8; 40]); // APP13 (Photoshop)
+        w.comment("weird but valid");
+        w.dqt(0, &QuantTable::luma(75));
+        w.sof0(8, 8, &[fc(1)]);
+        w.dht(0, 0, &dc_luma_spec());
+        w.dht(1, 0, &ac_luma_spec());
+        w.sos(&[fc(1)]);
+        w.scan_data(&[0xAB]);
+        assert!(parse(&w.finish()).is_ok());
     }
 
     #[test]
@@ -382,7 +651,9 @@ mod tests {
             .unwrap();
         bytes[pos + 1] = 0xC2;
         match parse(&bytes) {
-            Err(JpegError::Unsupported(_)) => {}
+            Err(JpegError::Unsupported(msg)) => {
+                assert!(msg.contains("progressive"), "msg: {msg}");
+            }
             other => panic!("expected Unsupported, got {other:?}"),
         }
     }

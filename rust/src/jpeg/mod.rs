@@ -5,32 +5,51 @@
 //! route stops after entropy decoding — the paper's JPEG transform domain
 //! (output of encoder step 4) — and feeds coefficients to the network.
 //!
+//! The decode layer accepts real-world baseline streams: restart
+//! intervals (DRI/RSTn), 4:2:0/4:2:2/4:4:0 chroma subsampling (decoded at
+//! native MCU geometry, then upsampled to the luma block grid *in the DCT
+//! domain* so downstream network geometry is unchanged), and tolerant
+//! skipping of EXIF/APPn/ICC/COM segments.  Hostile input never panics:
+//! every malformed stream maps to a typed [`JpegError`], allocation is
+//! bounded by [`MAX_DECODE_PIXELS`], and the contract is enforced by a
+//! committed fixture corpus ([`corpus`]) plus a deterministic mutation
+//! fuzzer ([`fuzz`]) run in CI.
+//!
 //! Components:
 //! * [`dct`] — forward/inverse 8x8 DCT (naive matrix form + separable
 //!   fast path, cross-checked against each other)
 //! * [`zigzag`] — the zigzag permutation and spatial-frequency bands
 //! * [`quant`] — Annex-K tables + libjpeg quality scaling
-//! * [`bits`] — MSB-first bit reader/writer with 0xFF byte stuffing
+//! * [`bits`] — MSB-first bit reader/writer with 0xFF byte stuffing and
+//!   RSTn realignment
 //! * [`huffman`] — baseline Huffman coding (Annex-K tables, canonical
 //!   code construction, fast lookup decode)
 //! * [`entropy`] — DC DPCM + AC run-length (ZRL/EOB) coefficient coding
 //! * [`color`] — RGB <-> YCbCr (BT.601 full range, JFIF convention)
-//! * [`jfif`] — the JFIF container: SOI/APP0/DQT/SOF0/DHT/SOS/EOI
+//! * [`jfif`] — the JFIF container: marker segment writing and the
+//!   tolerant, length-checked parser
+//! * [`upsample`] — DCT-domain chroma block upsampling (linear quadrant
+//!   maps, no pixel round trip)
 //! * [`codec`] — top-level encode/decode plus `decode_to_coefficients`
+//! * [`corpus`] — reproducible weird-but-valid fixture JPEGs
+//! * [`fuzz`] — std-only deterministic mutation fuzzer (decoder + wire)
 
 pub mod bits;
 pub mod codec;
 pub mod color;
+pub mod corpus;
 pub mod dct;
 pub mod entropy;
+pub mod fuzz;
 pub mod huffman;
 pub mod jfif;
 pub mod quant;
+pub mod upsample;
 pub mod zigzag;
 
 pub use codec::{
     decode, decode_to_coefficients, encode, CoeffImage, Component, DecodedImage,
-    EncodeOptions, PixelImage,
+    EncodeOptions, PixelImage, Subsampling,
 };
 pub use quant::QuantTable;
 
@@ -40,15 +59,69 @@ pub const NCOEF: usize = 64;
 /// Number of spatial-frequency bands of an 8x8 DCT (paper: 15).
 pub const NUM_BANDS: usize = 15;
 
+/// Decode allocation cap: declared height*width above this is rejected
+/// with [`JpegError::TooLarge`] before any coefficient buffer is sized.
+/// 2^22 pixels (2048x2048) bounds the worst-case decode buffer at
+/// ~48 MiB for 3 components — beyond anything the serving tier admits
+/// (the wire payload cap is 32 MiB) while still far above the paper's
+/// input resolutions.
+pub const MAX_DECODE_PIXELS: usize = 1 << 22;
+
 /// Errors across the codec.
+///
+/// Every hostile-input class the decoder recognizes gets its own variant
+/// so callers (and the fuzz harness) can assert on the failure mode, not
+/// just "it errored".  `Invalid` remains the catch-all for corruption
+/// inside an otherwise well-delimited structure.
 #[derive(Debug, thiserror::Error)]
 pub enum JpegError {
     #[error("invalid JPEG stream: {0}")]
     Invalid(String),
     #[error("unsupported JPEG feature: {0}")]
     Unsupported(String),
+    #[error("not a JPEG: missing SOI magic")]
+    BadMagic,
+    #[error("truncated JPEG stream: {what}")]
+    Truncated { what: &'static str },
+    #[error("segment {marker:#06x} declares {declared} bytes but only {available} remain")]
+    SegmentOverrun { marker: u16, declared: usize, available: usize },
+    #[error("segment {marker:#06x} declares impossible length {declared}")]
+    BadLength { marker: u16, declared: usize },
+    #[error("entropy-coded segment runs off the end of the stream (missing EOI)")]
+    MissingEoi,
+    #[error("stray restart marker {marker:#04x} {context}")]
+    StrayRst { marker: u8, context: &'static str },
+    #[error("restart marker mismatch: expected {expected:#04x}, found {found:#04x}")]
+    RestartMismatch { expected: u8, found: u8 },
+    #[error("SOF declares {count} components (supported: 1..=4)")]
+    BadComponentCount { count: usize },
+    #[error("duplicate {kind} table id {id}")]
+    DuplicateTable { kind: &'static str, id: u8 },
+    #[error("declared size {height}x{width} exceeds the decode cap of {limit} pixels")]
+    TooLarge { height: usize, width: usize, limit: usize },
     #[error("io error: {0}")]
     Io(#[from] std::io::Error),
+}
+
+impl JpegError {
+    /// Stable short label for metrics and wire error messages.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            JpegError::Invalid(_) => "invalid",
+            JpegError::Unsupported(_) => "unsupported",
+            JpegError::BadMagic => "bad-magic",
+            JpegError::Truncated { .. } => "truncated",
+            JpegError::SegmentOverrun { .. } => "segment-overrun",
+            JpegError::BadLength { .. } => "bad-length",
+            JpegError::MissingEoi => "missing-eoi",
+            JpegError::StrayRst { .. } => "stray-rst",
+            JpegError::RestartMismatch { .. } => "restart-mismatch",
+            JpegError::BadComponentCount { .. } => "bad-component-count",
+            JpegError::DuplicateTable { .. } => "duplicate-table",
+            JpegError::TooLarge { .. } => "too-large",
+            JpegError::Io(_) => "io",
+        }
+    }
 }
 
 pub type Result<T> = std::result::Result<T, JpegError>;

@@ -1,0 +1,171 @@
+//! DCT-domain chroma block upsampling.
+//!
+//! A subsampled chroma component decodes at its native MCU geometry: one
+//! 8x8 coefficient block covers 16x8, 8x16 or 16x16 luma-grid pixels.
+//! The serving pipeline's `CoeffImage` -> `SparseBlocks` path (and the
+//! `ExplodedModel` geometry behind it) assumes every channel lives on the
+//! *luma* block grid, so each native chroma block must become `ry * rx`
+//! output blocks (`ry`, `rx` in {1, 2}).
+//!
+//! The whole pixel-domain composition — IDCT, nearest-neighbor 2x
+//! replication, quadrant slice, forward DCT — is linear, so it collapses
+//! into one 64x64 matrix per output quadrant.  We precompute those
+//! matrices once by pushing the 64 coefficient basis vectors through the
+//! existing `dct` routines, then upsampling is 4 (or 2) dense 64x64
+//! mat-vecs per chroma block, never leaving the transform domain.
+
+use super::dct;
+use once_cell::sync::Lazy;
+
+/// One output quadrant: its offset in the upsampled block grid and the
+/// 64x64 map from a dequantized raster-order input block to the
+/// dequantized raster-order output block (`out[j] = sum_i m[j*64+i] * in[i]`).
+pub struct QuadMap {
+    pub qy: usize,
+    pub qx: usize,
+    m: Vec<f32>,
+}
+
+impl QuadMap {
+    /// Apply the map to one dequantized raster-order coefficient block.
+    pub fn apply(&self, input: &[f32; 64]) -> [f32; 64] {
+        let mut out = [0.0f32; 64];
+        for (j, o) in out.iter_mut().enumerate() {
+            let row = &self.m[j * 64..(j + 1) * 64];
+            let mut acc = 0.0f32;
+            for i in 0..64 {
+                acc += row[i] * input[i];
+            }
+            *o = acc;
+        }
+        out
+    }
+}
+
+/// Build the quadrant maps for vertical/horizontal replication factors
+/// `ry`, `rx` (each 1 or 2): quadrant (qy, qx) of the nearest-neighbor
+/// upsampled pixels, re-expressed as a DCT-coefficient map.
+fn build(ry: usize, rx: usize) -> Vec<QuadMap> {
+    let mut maps = Vec::with_capacity(ry * rx);
+    for qy in 0..ry {
+        for qx in 0..rx {
+            let mut m = vec![0.0f32; 64 * 64];
+            for i in 0..64 {
+                let mut basis = [0.0f32; 64];
+                basis[i] = 1.0;
+                let pix = dct::inverse(&basis);
+                let mut up = [0.0f32; 64];
+                for y in 0..8 {
+                    let sy = (qy * 8 + y) / ry;
+                    for x in 0..8 {
+                        let sx = (qx * 8 + x) / rx;
+                        up[y * 8 + x] = pix[sy * 8 + sx];
+                    }
+                }
+                let f = dct::forward(&up);
+                for j in 0..64 {
+                    m[j * 64 + i] = f[j];
+                }
+            }
+            maps.push(QuadMap { qy, qx, m });
+        }
+    }
+    maps
+}
+
+static UP_2X2: Lazy<Vec<QuadMap>> = Lazy::new(|| build(2, 2));
+static UP_1X2: Lazy<Vec<QuadMap>> = Lazy::new(|| build(1, 2));
+static UP_2X1: Lazy<Vec<QuadMap>> = Lazy::new(|| build(2, 1));
+
+/// Quadrant maps for replication factors (ry, rx).  Factors must each be
+/// 1 or 2 and not both 1 (a 1x1 "upsample" is the identity copy path in
+/// the decoder, not a matrix application).
+pub fn quadrant_maps(ry: usize, rx: usize) -> &'static [QuadMap] {
+    match (ry, rx) {
+        (2, 2) => &UP_2X2,
+        (1, 2) => &UP_1X2,
+        (2, 1) => &UP_2X1,
+        _ => panic!("unsupported upsample factors {ry}x{rx}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Direct pixel-domain oracle: IDCT, replicate, slice, FDCT.
+    fn oracle(block: &[f32; 64], ry: usize, rx: usize, qy: usize, qx: usize) -> [f32; 64] {
+        let pix = dct::inverse(block);
+        let mut up = [0.0f32; 64];
+        for y in 0..8 {
+            for x in 0..8 {
+                up[y * 8 + x] = pix[((qy * 8 + y) / ry) * 8 + (qx * 8 + x) / rx];
+            }
+        }
+        dct::forward(&up)
+    }
+
+    fn random_block(seed: u64) -> [f32; 64] {
+        let mut rng = Rng::new(seed);
+        let mut b = [0.0f32; 64];
+        for v in b.iter_mut() {
+            *v = rng.uniform_in(-300.0, 300.0);
+        }
+        b
+    }
+
+    #[test]
+    fn matrix_matches_pixel_domain_composition() {
+        for (ry, rx) in [(2, 2), (1, 2), (2, 1)] {
+            let maps = quadrant_maps(ry, rx);
+            assert_eq!(maps.len(), ry * rx);
+            for seed in 1..4 {
+                let block = random_block(seed);
+                for map in maps {
+                    let got = map.apply(&block);
+                    let want = oracle(&block, ry, rx, map.qy, map.qx);
+                    for k in 0..64 {
+                        assert!(
+                            (got[k] - want[k]).abs() < 1e-3,
+                            "({ry},{rx}) q=({},{}) k={k}: {} vs {}",
+                            map.qy, map.qx, got[k], want[k]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn constant_block_upsamples_to_same_constant() {
+        // NN upsampling of a flat block is the same flat block: only the
+        // DC coefficient survives, unchanged.
+        let mut block = [0.0f32; 64];
+        block[0] = 8.0 * 42.0; // DC of a constant-42 block
+        for map in quadrant_maps(2, 2) {
+            let up = map.apply(&block);
+            assert!((up[0] - block[0]).abs() < 1e-3, "DC {}", up[0]);
+            for k in 1..64 {
+                assert!(up[k].abs() < 1e-3, "AC leak at {k}: {}", up[k]);
+            }
+        }
+    }
+
+    #[test]
+    fn quadrants_tile_the_upsampled_plane() {
+        // reconstructing pixels from the four quadrant outputs must equal
+        // NN-upsampling the input pixels directly
+        let block = random_block(9);
+        let pix = dct::inverse(&block);
+        for map in quadrant_maps(2, 2) {
+            let out_pix = dct::inverse(&map.apply(&block));
+            for y in 0..8 {
+                for x in 0..8 {
+                    let want = pix[((map.qy * 8 + y) / 2) * 8 + (map.qx * 8 + x) / 2];
+                    assert!((out_pix[y * 8 + x] - want).abs() < 1e-2);
+                }
+            }
+        }
+    }
+}

@@ -17,6 +17,11 @@
 //!                              (`ablation` runs the plan-executor rows
 //!                              natively; PJRT rows only with artifacts)
 //!   codec <selftest>           JPEG codec round-trip demo
+//!   fuzz                       seeded mutation fuzz of the JPEG decoder
+//!                              and the wire frame parser; exits non-zero
+//!                              on any panic (--verify-corpus DIR also
+//!                              checks the fixture corpus regenerates
+//!                              byte-identical)
 //!
 //! Flags are `--key value`; `--config file.toml` loads defaults first.
 //! (No clap in this environment's vendored crate set — see DESIGN.md.)
@@ -88,7 +93,7 @@ impl Args {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: repro <info|train|serve|eval|convert|exp|codec> [--flags]
+        "usage: repro <info|train|serve|eval|convert|exp|codec|fuzz> [--flags]
   common: --artifacts DIR --dataset mnist|cifar10|cifar100 --config FILE
   train:  --domain spatial|jpeg --steps N --lr F --nf 1..15 --method asm|apx
           --ckpt PATH --train-size N --test-size N --verbose
@@ -137,7 +142,11 @@ fn usage() -> ! {
                  --iters N --threads N --nf K --out FILE
           ablation: plan-executor rows run natively; the PJRT rows are
                  skipped when no artifacts are present
-          (sparse, resident, prune, axpy and the plan rows need no artifacts)"
+          (sparse, resident, prune, axpy and the plan rows need no artifacts)
+  fuzz:   --iters N (default 2000) --seed S (default 7)
+          --target decoder|wire|all (default all)
+          --verify-corpus DIR: regenerate the fixture corpus and fail
+          unless it matches DIR byte-for-byte (blesses on first run)"
     );
     std::process::exit(2);
 }
@@ -828,6 +837,55 @@ fn cmd_codec(args: &Args) -> anyhow::Result<()> {
     }
 }
 
+/// `repro fuzz`: the CI decode-fuzz-smoke entry point.  Runs the seeded
+/// mutation fuzzer against the JPEG decoder and/or the wire frame parser
+/// and prints one greppable summary line per target.  Any caught panic
+/// is printed with its replay coordinates and fails the run.
+fn cmd_fuzz(args: &Args) -> anyhow::Result<()> {
+    use jpegdomain::jpeg::{corpus, fuzz};
+
+    let iters = args.usize("iters", 2000);
+    let seed = args.usize("seed", 7) as u64;
+    let target = args.get("target", "all");
+
+    // the fuzzer intentionally provokes panics inside catch_unwind; keep
+    // the default hook from spraying backtraces over the summary lines
+    let hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let mut reports = Vec::new();
+    if target == "decoder" || target == "all" {
+        reports.push(fuzz::fuzz_decoder(iters, seed));
+    }
+    if target == "wire" || target == "all" {
+        reports.push(fuzz::fuzz_wire(iters, seed));
+    }
+    std::panic::set_hook(hook);
+    anyhow::ensure!(!reports.is_empty(), "unknown --target {target} (decoder|wire|all)");
+
+    let mut failed = false;
+    for r in &reports {
+        println!("{r}");
+        for (it, msg) in &r.panics {
+            eprintln!("  panic at iter {it} (seed {seed}): {msg}");
+            failed = true;
+        }
+    }
+
+    if let Some(dir) = args.flags.get("verify-corpus") {
+        match corpus::verify_or_bless(std::path::Path::new(dir)) {
+            Ok(corpus::CorpusStatus::Blessed(n)) => {
+                println!("corpus blessed: {n} fixtures written to {dir}");
+            }
+            Ok(corpus::CorpusStatus::Verified(n)) => {
+                println!("corpus ok: {n} fixtures byte-identical");
+            }
+            Err(e) => anyhow::bail!("corpus verification failed: {e}"),
+        }
+    }
+    anyhow::ensure!(!failed, "fuzzer caught panics");
+    Ok(())
+}
+
 fn main() {
     let args = Args::parse();
     let cfg = match args.flags.get("config") {
@@ -845,6 +903,7 @@ fn main() {
         Some("convert") => cmd_convert(&args, &cfg),
         Some("exp") => cmd_exp(&args, &cfg),
         Some("codec") => cmd_codec(&args),
+        Some("fuzz") => cmd_fuzz(&args),
         _ => usage(),
     };
     if let Err(e) = result {

@@ -338,11 +338,15 @@ impl Drop for NativePipeline {
 }
 
 /// Decode one request's bytes to a single-image sparse batch + qvec.
+/// Decoder failures keep their stable `JpegError::kind` label in the
+/// message (`kind=truncated: ...`) so operators can bucket wire-visible
+/// `Decode` responses without parsing free-form text.
 fn decode_one(bytes: &[u8], in_channels: usize) -> Result<(SparseBlocks, [f32; 64]), ServeError> {
-    let ci = codec::decode_to_coefficients(bytes).map_err(|e| ServeError::Decode(e.to_string()))?;
+    let ci = codec::decode_to_coefficients(bytes)
+        .map_err(|e| ServeError::Decode(format!("kind={}: {e}", e.kind())))?;
     if ci.channels != in_channels {
         return Err(ServeError::Decode(format!(
-            "expected {in_channels} channels, got {}",
+            "kind=geometry: expected {in_channels} channels, got {}",
             ci.channels
         )));
     }
@@ -350,8 +354,8 @@ fn decode_one(bytes: &[u8], in_channels: usize) -> Result<(SparseBlocks, [f32; 6
     // exploded maps bake in); reject mixed-table files up front
     if ci.qtables[1..].iter().any(|t| *t != ci.qtables[0]) {
         return Err(ServeError::Decode(
-            "mixed quant tables across components (encode with \
-             separate_chroma_table=false)"
+            "kind=mixed-tables: mixed quant tables across components \
+             (encode with separate_chroma_table=false)"
                 .into(),
         ));
     }

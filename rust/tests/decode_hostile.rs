@@ -1,0 +1,413 @@
+//! The real-world decode contract, proven three ways:
+//!
+//! 1. **Hostile classes** — one surgically corrupted stream per failure
+//!    mode, each pinned to its specific [`JpegError`] variant (no
+//!    panics, no unbounded allocation).
+//! 2. **Corpus conformance** — every weird-but-valid fixture in
+//!    `jpeg::corpus` decodes, and the committed fixtures regenerate
+//!    byte-identical from the encoder (bless-on-first-run, like
+//!    `tests/golden/`).
+//! 3. **The acceptance criterion** — a 4:2:0 restart-interval JPEG from
+//!    the extended encoder decodes through the full serving pipeline to
+//!    logits bit-identical to the dense-boundary reference path on the
+//!    same coefficients.
+//!
+//! Plus a seeded mutation-fuzz smoke over both the decoder and the wire
+//! frame parser (the CI `decode-fuzz-smoke` step runs the same harness
+//! at a larger budget via `repro fuzz`).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::Path;
+
+use jpegdomain::jpeg::codec::{self, encode, EncodeOptions, PixelImage, Subsampling};
+use jpegdomain::jpeg::corpus::{self, CorpusStatus};
+use jpegdomain::jpeg::{fuzz, JpegError};
+use jpegdomain::jpeg_domain::network::{ExplodedModel, RESNET_PLAN};
+use jpegdomain::jpeg_domain::plan::{Act, PlanCtx, SparseKernel};
+use jpegdomain::jpeg_domain::relu::Method;
+use jpegdomain::params::{ModelConfig, ParamSet};
+use jpegdomain::serving::{NativeEngine, NativeMode, NativePipeline, PipelineConfig, ServeError};
+use jpegdomain::tensor::SparseBlocks;
+
+// ---------------------------------------------------------------------------
+// byte-surgery helpers
+// ---------------------------------------------------------------------------
+
+fn corpus_bytes(name: &str) -> Vec<u8> {
+    corpus::corpus()
+        .into_iter()
+        .find(|e| e.name == name)
+        .unwrap_or_else(|| panic!("corpus entry {name} missing"))
+        .bytes
+}
+
+/// Offset of the first `FF <m>` header segment, walking declared segment
+/// lengths from SOI (never enters entropy data).
+fn find_segment(bytes: &[u8], m: u8) -> usize {
+    let mut i = 2;
+    loop {
+        assert!(i + 4 <= bytes.len(), "marker {m:#04x} not found");
+        assert_eq!(bytes[i], 0xFF, "lost marker sync at offset {i}");
+        if bytes[i + 1] == m {
+            return i;
+        }
+        assert_ne!(bytes[i + 1], 0xDA, "hit SOS before marker {m:#04x}");
+        let len = u16::from_be_bytes([bytes[i + 2], bytes[i + 3]]) as usize;
+        i += 2 + len;
+    }
+}
+
+fn decode_err(bytes: &[u8]) -> JpegError {
+    match codec::decode_to_coefficients(bytes) {
+        Ok(_) => panic!("hostile stream decoded successfully"),
+        Err(e) => e,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// hostile classes, one specific JpegError variant each
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bad_magic_rejected() {
+    for bytes in [
+        &b""[..],
+        &[0xFF][..],
+        b"definitely not a jpeg",
+        b"\x89PNG\r\n\x1a\n",
+        &[0xD8, 0xFF][..], // SOI bytes swapped
+    ] {
+        match decode_err(bytes) {
+            JpegError::BadMagic => {}
+            other => panic!("{bytes:?}: expected BadMagic, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn truncated_segment_length_rejected() {
+    // cut the stream inside a segment's 2-byte length field
+    let bytes = corpus_bytes("color-q75-444");
+    let dqt = find_segment(&bytes, 0xDB);
+    match decode_err(&bytes[..dqt + 3]) {
+        JpegError::Truncated { .. } => {}
+        other => panic!("expected Truncated, got {other:?}"),
+    }
+}
+
+#[test]
+fn truncated_segment_body_is_an_overrun() {
+    // the length field survives but its declared body does not: the
+    // parser must notice before reading a single payload byte
+    let bytes = corpus_bytes("color-q75-444");
+    let dqt = find_segment(&bytes, 0xDB);
+    match decode_err(&bytes[..dqt + 10]) {
+        JpegError::SegmentOverrun { marker: 0xFFDB, declared, available } => {
+            assert_eq!(declared, 67, "one 8-bit table");
+            assert!(available < declared);
+        }
+        other => panic!("expected SegmentOverrun, got {other:?}"),
+    }
+}
+
+#[test]
+fn oversized_declared_length_rejected() {
+    // a segment lying about its size cannot trigger a 64 KiB read past
+    // the end — the declared length is checked against what remains
+    let mut bytes = corpus_bytes("color-q75-444");
+    let dqt = find_segment(&bytes, 0xDB);
+    bytes[dqt + 2] = 0xFF;
+    bytes[dqt + 3] = 0xFF;
+    match decode_err(&bytes) {
+        JpegError::SegmentOverrun { marker: 0xFFDB, declared: 0xFFFF, .. } => {}
+        other => panic!("expected SegmentOverrun, got {other:?}"),
+    }
+}
+
+#[test]
+fn impossible_segment_length_rejected() {
+    // declared < 2 is impossible (the length covers itself)
+    let mut bytes = corpus_bytes("color-q75-444");
+    let dqt = find_segment(&bytes, 0xDB);
+    bytes[dqt + 2] = 0x00;
+    bytes[dqt + 3] = 0x01;
+    match decode_err(&bytes) {
+        JpegError::BadLength { marker: 0xFFDB, declared: 1 } => {}
+        other => panic!("expected BadLength, got {other:?}"),
+    }
+}
+
+#[test]
+fn missing_eoi_rejected() {
+    let mut bytes = corpus_bytes("color-q75-444");
+    assert_eq!(&bytes[bytes.len() - 2..], &[0xFF, 0xD9], "fixture ends in EOI");
+    bytes.truncate(bytes.len() - 2);
+    match decode_err(&bytes) {
+        JpegError::MissingEoi => {}
+        other => panic!("expected MissingEoi, got {other:?}"),
+    }
+}
+
+#[test]
+fn stray_rst_between_header_segments_rejected() {
+    let mut bytes = corpus_bytes("color-q75-444");
+    bytes.splice(2..2, [0xFF, 0xD2]);
+    match decode_err(&bytes) {
+        JpegError::StrayRst { marker: 0xD2, context } => {
+            assert!(context.contains("between"), "{context}");
+        }
+        other => panic!("expected StrayRst, got {other:?}"),
+    }
+}
+
+#[test]
+fn stray_rst_in_scan_without_dri_rejected() {
+    // an RSTn inside the entropy data of a stream that never declared a
+    // restart interval (fixture has no DRI; splice just before EOI)
+    let mut bytes = corpus_bytes("color-q75-444");
+    let at = bytes.len() - 2;
+    bytes.splice(at..at, [0xFF, 0xD0]);
+    match decode_err(&bytes) {
+        JpegError::StrayRst { marker: 0xD0, context } => {
+            assert!(context.contains("no restart interval"), "{context}");
+        }
+        other => panic!("expected StrayRst, got {other:?}"),
+    }
+}
+
+#[test]
+fn restart_marker_mismatch_rejected() {
+    // RSTn indices must cycle 0..=7 from RST0; flip the first one
+    let mut bytes = corpus_bytes("color-q50-420-dri2");
+    let sos = find_segment(&bytes, 0xDA);
+    let mut i = sos + 2;
+    let pos = loop {
+        assert!(i + 1 < bytes.len(), "no RST marker in a DRI fixture?");
+        if bytes[i] == 0xFF && (0xD0..=0xD7).contains(&bytes[i + 1]) {
+            break i + 1;
+        }
+        i += 1;
+    };
+    assert_eq!(bytes[pos], 0xD0, "first restart must be RST0");
+    bytes[pos] = 0xD5;
+    match decode_err(&bytes) {
+        JpegError::RestartMismatch { expected: 0xD0, found: 0xD5 } => {}
+        other => panic!("expected RestartMismatch, got {other:?}"),
+    }
+}
+
+#[test]
+fn zero_component_sof_rejected() {
+    // hand-built: SOI + SOF0 declaring 16x16 with zero components
+    let bytes = [0xFF, 0xD8, 0xFF, 0xC0, 0x00, 0x08, 8, 0, 16, 0, 16, 0];
+    match decode_err(&bytes) {
+        JpegError::BadComponentCount { count: 0 } => {}
+        other => panic!("expected BadComponentCount, got {other:?}"),
+    }
+}
+
+#[test]
+fn duplicate_dqt_rejected() {
+    let mut bytes = corpus_bytes("color-q75-444");
+    let dqt = find_segment(&bytes, 0xDB);
+    let len = u16::from_be_bytes([bytes[dqt + 2], bytes[dqt + 3]]) as usize;
+    let copy: Vec<u8> = bytes[dqt..dqt + 2 + len].to_vec();
+    bytes.splice(dqt..dqt, copy);
+    match decode_err(&bytes) {
+        JpegError::DuplicateTable { kind: "quantization", id: 0 } => {}
+        other => panic!("expected DuplicateTable, got {other:?}"),
+    }
+}
+
+#[test]
+fn oversized_dimensions_rejected_before_allocation() {
+    // declared 65535x65535 (~12 GiB of coefficients) must be refused by
+    // the decode cap, not attempted
+    let mut bytes = corpus_bytes("color-q75-444");
+    let sof = find_segment(&bytes, 0xC0);
+    for b in &mut bytes[sof + 5..sof + 9] {
+        *b = 0xFF;
+    }
+    match decode_err(&bytes) {
+        JpegError::TooLarge { height: 65535, width: 65535, limit } => {
+            assert_eq!(limit, jpegdomain::jpeg::MAX_DECODE_PIXELS);
+        }
+        other => panic!("expected TooLarge, got {other:?}"),
+    }
+}
+
+#[test]
+fn progressive_rejected_with_precise_error() {
+    let mut bytes = corpus_bytes("color-q75-444");
+    let sof = find_segment(&bytes, 0xC0);
+    bytes[sof + 1] = 0xC2;
+    match decode_err(&bytes) {
+        JpegError::Unsupported(msg) => assert!(msg.contains("progressive"), "{msg}"),
+        other => panic!("expected Unsupported, got {other:?}"),
+    }
+}
+
+#[test]
+fn arithmetic_coding_rejected() {
+    let mut bytes = corpus_bytes("color-q75-444");
+    let sof = find_segment(&bytes, 0xC0);
+    bytes[sof + 1] = 0xC9;
+    match decode_err(&bytes) {
+        JpegError::Unsupported(msg) => assert!(msg.contains("arithmetic"), "{msg}"),
+        other => panic!("expected Unsupported, got {other:?}"),
+    }
+}
+
+#[test]
+fn entropy_truncation_is_typed_never_a_panic() {
+    // chop entropy bytes out but keep the EOI: whatever the decoder
+    // trips over (short stream, dangling Huffman code) must surface as
+    // a typed error with a stable kind label
+    let bytes = corpus_bytes("gray-q90-baseline");
+    for cut in [4usize, 8, 16, 32] {
+        let mut b = bytes.clone();
+        let at = b.len() - 2 - cut;
+        b.drain(at..at + cut);
+        let result = catch_unwind(AssertUnwindSafe(|| codec::decode_to_coefficients(&b)));
+        match result {
+            Ok(Ok(_)) => panic!("cut {cut}: truncated entropy data decoded"),
+            Ok(Err(e)) => assert!(!e.kind().is_empty()),
+            Err(_) => panic!("cut {cut}: decoder panicked"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// corpus conformance + reproducibility
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_corpus_fixture_decodes_into_sparse_blocks() {
+    for e in corpus::corpus() {
+        let ci = codec::decode_to_coefficients(&e.bytes)
+            .unwrap_or_else(|er| panic!("{}: {er}", e.name));
+        let s = SparseBlocks::from_coeff_images(std::slice::from_ref(&ci));
+        assert!(s.num_blocks() > 0, "{}: empty sparse batch", e.name);
+    }
+}
+
+#[test]
+fn corpus_regenerates_byte_identical() {
+    // bless-on-first-run: a toolchain-equipped checkout writes the
+    // fixtures; every later run proves the encoder still reproduces the
+    // committed bytes exactly (the CI fuzz step checks the same thing
+    // through `repro fuzz --verify-corpus`)
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/corpus");
+    match corpus::verify_or_bless(&dir) {
+        Ok(CorpusStatus::Blessed(n)) => {
+            eprintln!("corpus blessed: {n} fixtures written to {dir:?}");
+            assert_eq!(n, corpus::corpus().len());
+        }
+        Ok(CorpusStatus::Verified(n)) => assert_eq!(n, corpus::corpus().len()),
+        Err(e) => panic!("corpus drifted from committed fixtures: {e}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fuzz smoke (CI runs the larger budget via `repro fuzz`)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fuzz_decoder_smoke_holds_the_no_panic_contract() {
+    let r = fuzz::fuzz_decoder(300, 7);
+    assert_eq!(r.ok + r.typed_err, 300, "every input decodes or errors");
+    assert!(r.panics.is_empty(), "decoder panics: {:?}", r.panics);
+}
+
+#[test]
+fn fuzz_wire_smoke_holds_the_no_panic_contract() {
+    let r = fuzz::fuzz_wire(300, 7);
+    assert_eq!(r.ok + r.typed_err, 300);
+    assert!(r.panics.is_empty(), "wire parser panics: {:?}", r.panics);
+}
+
+// ---------------------------------------------------------------------------
+// the acceptance criterion, end to end
+// ---------------------------------------------------------------------------
+
+fn color_image() -> PixelImage {
+    let mut img = PixelImage::new(3, 32, 32);
+    for c in 0..3 {
+        for y in 0..32 {
+            for x in 0..32 {
+                let v = ((x * 7 + y * 5 + c * 31) % 256) as f32;
+                img.set(c, y, x, v);
+            }
+        }
+    }
+    img
+}
+
+#[test]
+fn subsampled_restart_jpeg_serves_bit_identical_logits() {
+    // a 4:2:0 restart-interval JPEG produced by the extended encoder,
+    // through the full serving pipeline (decode pool -> SparseBlocks ->
+    // micro-batching -> compute), against the dense-boundary reference
+    // executor on the same coefficients: bit-identical logits
+    let cfg = ModelConfig {
+        name: "tiny3".into(),
+        in_channels: 3,
+        num_classes: 4,
+        widths: [2, 2, 2],
+        image_size: 32,
+    };
+    let params = ParamSet::init(&cfg, 21);
+    let bytes = encode(
+        &color_image(),
+        EncodeOptions::quality(75)
+            .with_subsampling(Subsampling::S420)
+            .with_restart_interval(2),
+    )
+    .unwrap();
+
+    // reference: dense-boundary executor on the decoded coefficients
+    let ci = codec::decode_to_coefficients(&bytes).unwrap();
+    let qvec = ci.qvec(0);
+    let f0 = SparseBlocks::from_coeff_images(std::slice::from_ref(&ci));
+    let em = ExplodedModel::precompute(&params, &qvec);
+    let ctx = PlanCtx {
+        params: &params,
+        exploded: Some(&em),
+        qvec: &qvec,
+        num_freqs: 15,
+        method: Method::Asm,
+    };
+    let want = RESNET_PLAN.run(&SparseKernel::new(1), &ctx, &Act::Sparse(f0), None);
+
+    let engine = NativeEngine::new(cfg, params.clone(), 15, Method::Asm, 1, NativeMode::SparseResident);
+    let p = NativePipeline::start(engine, PipelineConfig::default());
+    let resp = p.infer(bytes).expect("4:2:0 + DRI serves end to end");
+    assert_eq!(
+        resp.logits.as_slice(),
+        want.data(),
+        "pipeline logits must be bit-identical to the reference executor"
+    );
+    p.shutdown();
+}
+
+#[test]
+fn pipeline_decode_errors_carry_the_stable_kind_label() {
+    let cfg = ModelConfig {
+        name: "tiny".into(),
+        in_channels: 1,
+        num_classes: 4,
+        widths: [2, 2, 2],
+        image_size: 32,
+    };
+    let params = ParamSet::init(&cfg, 22);
+    let engine = NativeEngine::new(cfg, params, 15, Method::Asm, 1, NativeMode::SparseResident);
+    let p = NativePipeline::start(engine, PipelineConfig::default());
+    let err = p.infer(b"not a jpeg".to_vec()).unwrap_err();
+    match err.downcast_ref::<ServeError>() {
+        Some(ServeError::Decode(msg)) => {
+            assert!(msg.contains("kind=bad-magic"), "{msg}");
+        }
+        other => panic!("expected Decode, got {other:?}"),
+    }
+    p.shutdown();
+}

@@ -334,6 +334,86 @@ fn stats_abuse_gets_typed_errors_and_never_wedges_the_acceptor() {
 }
 
 #[test]
+fn corrupt_jpeg_flood_gets_decode_codes_and_connection_keeps_serving() {
+    // a client can spray malformed-but-well-framed payloads down ONE
+    // connection: every reply is the typed Decode code carrying the
+    // decoder's stable kind= label, the decode-pool workers survive all
+    // of it, and the SAME connection then serves a valid request
+    let params = ParamSet::init(&tiny_cfg(), 17);
+    let server = Server::start_native(
+        engine(&params, NativeMode::SparseResident),
+        PipelineConfig::default(),
+    );
+    let frontend = listen(&server, 0, 64);
+    let good = files(1, 75).remove(0).0;
+
+    // hostile payload classes that must all fail in decode, not framing
+    let mut corrupt: Vec<Vec<u8>> = vec![
+        b"definitely not a jpeg at all".to_vec(),
+        vec![0u8; 64],
+        good[..10].to_vec(),              // truncated inside the headers
+        good[..good.len() - 6].to_vec(),  // entropy data cut before EOI
+        {
+            let mut b = good.clone();
+            b[0] = 0x00; // zapped SOI
+            b
+        },
+        {
+            let mut b = good.clone();
+            let n = b.len();
+            b.truncate(n / 2); // mid-scan truncation
+            b
+        },
+        vec![0xFF, 0xD8], // SOI alone
+    ];
+    // pad to a 21-payload flood with bit-flipped variants
+    let mut rng = jpegdomain::util::Rng::new(99);
+    while corrupt.len() < 21 {
+        let mut b = good.clone();
+        let i = 2 + rng.below(8.min(b.len() - 2)); // corrupt header bytes
+        b[i] ^= 0xFF;
+        if jpegdomain::jpeg::codec::decode_to_coefficients(&b).is_ok() {
+            // rare survivable flip — replace with guaranteed garbage
+            b = vec![rng.below(256) as u8; 32];
+        }
+        corrupt.push(b);
+    }
+
+    let mut client = Client::connect(frontend.local_addr()).expect("connect");
+    for b in &corrupt {
+        client.submit(b).expect("submit");
+    }
+    for i in 0..corrupt.len() {
+        match client.recv().expect("reply") {
+            Reply::Err { code: WireCode::Decode, message, .. } => {
+                assert!(
+                    message.contains("kind="),
+                    "payload {i}: decode reply missing stable kind label: {message}"
+                );
+            }
+            other => panic!("payload {i}: expected Decode, got {other:?}"),
+        }
+    }
+
+    // the very same connection still serves
+    let resp = client.infer(&good).expect("connection survives the flood");
+    assert_eq!(resp.logits.len(), 4);
+
+    let snap = frontend.metrics.snapshot();
+    assert_eq!(snap.protocol_errors, 0, "framing was valid throughout: {snap}");
+    assert_eq!(
+        frontend.metrics.responses_with(WireCode::Decode),
+        corrupt.len() as u64
+    );
+    assert_eq!(frontend.metrics.responses_with(WireCode::Ok), 1);
+    let pm = server.pipeline().unwrap().metrics.snapshot();
+    assert_eq!(pm.decode.errors, corrupt.len() as u64, "{pm}");
+    assert_eq!(pm.compute.processed, 1, "no compute spent on corrupt payloads");
+    frontend.shutdown();
+    server.shutdown();
+}
+
+#[test]
 fn queue_full_arrives_as_its_wire_error_code() {
     let params = ParamSet::init(&tiny_cfg(), 7);
     // tiny queues + a cold engine (first batch pays the exploded

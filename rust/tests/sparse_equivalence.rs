@@ -415,6 +415,87 @@ fn band_limited_executors_are_bit_identical() {
     }
 }
 
+/// Deterministic 3-channel test image for the real-encoder variants:
+/// smooth gradients plus small noise, enough detail that chroma
+/// subsampling and restart intervals both see non-trivial data.
+fn color_image(seed: u64) -> codec::PixelImage {
+    let mut rng = Rng::new(seed);
+    let mut img = codec::PixelImage::new(3, 32, 32);
+    for c in 0..3 {
+        for y in 0..32 {
+            for x in 0..32 {
+                let g = (x * 6 + y * 3 + c * 40) % 256;
+                let n = (rng.uniform() * 17.0) as i32 - 8;
+                img.set(c, y, x, (g as i32 + n).clamp(0, 255) as f32);
+            }
+        }
+    }
+    img
+}
+
+#[test]
+fn real_encoder_variants_bit_identical_across_sparse_executors() {
+    // real-world-decode satellite: 4:2:0 / 4:2:2 chroma and restart
+    // intervals flow encode -> decode -> SparseBlocks -> logits with
+    // both sparse executors agreeing bit for bit at every tracked
+    // serving quality.  The decoder upsamples chroma onto the luma
+    // block grid in the DCT domain, so network geometry (and the
+    // per-qvec exploded precompute) is identical to the 4:4:4 path.
+    use jpegdomain::jpeg::codec::{encode, EncodeOptions, Subsampling};
+    let cfg = ModelConfig {
+        name: "slim3".into(),
+        in_channels: 3,
+        num_classes: 10,
+        widths: [4, 4, 4],
+        image_size: 32,
+    };
+    let p = ParamSet::init(&cfg, 41);
+    let img = color_image(43);
+    let variants: [(Subsampling, u16); 4] = [
+        (Subsampling::S420, 0),
+        (Subsampling::S420, 2),
+        (Subsampling::S422, 1),
+        (Subsampling::S444, 3),
+    ];
+    for quality in [50u8, 75, 90] {
+        let cis: Vec<_> = variants
+            .iter()
+            .map(|&(s, ri)| {
+                let bytes = encode(
+                    &img,
+                    EncodeOptions::quality(quality)
+                        .with_subsampling(s)
+                        .with_restart_interval(ri),
+                )
+                .unwrap();
+                codec::decode_to_coefficients(&bytes).unwrap_or_else(|e| {
+                    panic!("quality {quality} {s:?} ri {ri}: {e}")
+                })
+            })
+            .collect();
+        for ci in &cis {
+            // geometry invariant: subsampled scans land on the full
+            // luma block grid, uniform quant tables across channels
+            assert_eq!((ci.channels, ci.blocks_h, ci.blocks_w), (3, 4, 4));
+            for qt in &ci.qtables {
+                assert_eq!(qt, &ci.qtables[0], "quality {quality}: mixed tables");
+            }
+        }
+        let qvec = cis[0].qvec(0);
+        let f0 = SparseBlocks::from_coeff_images(&cis);
+        let em = ExplodedModel::precompute(&p, &qvec);
+        let ctx = plan_ctx(&p, Some(&em), &qvec);
+        let input = Act::Sparse(f0.clone());
+        let kernel = RESNET_PLAN.run(&SparseKernel::new(1), &ctx, &input, None);
+        let resident = RESNET_PLAN.run(&SparseResident::new(1, 0.0), &ctx, &input, None);
+        assert_eq!(kernel.shape(), &[4, 10]);
+        assert_eq!(
+            resident, kernel,
+            "quality {quality}: executors diverged on real-encoder variants"
+        );
+    }
+}
+
 #[test]
 fn exploded_network_forward_matches_dcc_network() {
     let cfg = ModelConfig::preset("mnist").unwrap();
