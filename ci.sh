@@ -201,6 +201,54 @@ grep -q "jd_frontend_requests_total" "$METRICS_DUMP" \
     || { echo "metrics-smoke FAILED: metrics dump never written"; exit 1; }
 rm -f "$SERVE_LOG" "$METRICS_DUMP" "$TRACE_FILE" BENCH_METRICS_SMOKE.json
 
+echo "== shard-smoke (2 shards, multi-connection burst, graceful shedding) =="
+# start the sharded server (2 pipeline replicas behind consistent
+# hashing on the quant table) with deliberately tiny per-replica queues,
+# then overload it from 12 concurrent connections: the burst must
+# complete nonzero requests with zero protocol errors while shedding at
+# least one request with the typed queue_full code — graceful
+# degradation, not transport failure.  The stats scrape must show the
+# per-shard metric families the replicas label themselves.
+SERVE_LOG=$(mktemp)
+./target/release/repro serve --listen 127.0.0.1:0 --shards 2 --listen-secs 120 \
+    --warmup-batches 1 --qualities 50,75,90 \
+    --decode-workers 1 --compute-workers 1 --max-batch 1 \
+    --queue-cap 2 --decoded-cap 1 > "$SERVE_LOG" 2>&1 &
+SERVE_PID=$!
+ADDR=""
+for _ in $(seq 1 300); do
+    ADDR=$(grep -m1 -oE 'listening on [0-9.:]+' "$SERVE_LOG" | awk '{print $3}' || true)
+    [ -n "$ADDR" ] && break
+    sleep 0.2
+done
+if [ -z "$ADDR" ]; then
+    echo "shard-smoke FAILED: server never bound"; cat "$SERVE_LOG"
+    kill "$SERVE_PID" 2>/dev/null || true
+    exit 1
+fi
+SHARD_OUT=$(./target/release/repro serve bench --remote "$ADDR" \
+    --requests 96 --connections 12 --qualities 50,75,90 --out BENCH_PR9.json) \
+    || { echo "shard-smoke FAILED: remote bench errored"; cat "$SERVE_LOG"; \
+         kill "$SERVE_PID" 2>/dev/null || true; exit 1; }
+SHARD_SCRAPE=$(./target/release/repro serve stats --remote "$ADDR") \
+    || { echo "shard-smoke FAILED: stats scrape errored"; cat "$SERVE_LOG"; \
+         kill "$SERVE_PID" 2>/dev/null || true; exit 1; }
+kill "$SERVE_PID" 2>/dev/null || true
+wait "$SERVE_PID" 2>/dev/null || true
+echo "$SHARD_OUT"
+echo "$SHARD_OUT" | grep -qE "remote completed requests: [1-9][0-9]* \(protocol errors: 0\)" \
+    || { echo "shard-smoke FAILED: incomplete requests or protocol errors"; exit 1; }
+echo "$SHARD_OUT" | grep -qE "remote shed: queue_full=[1-9][0-9]*" \
+    || { echo "shard-smoke FAILED: overload never shed with the typed queue_full code"; exit 1; }
+for family in jd_shard_batch_size jd_shard_queue_depth; do
+    echo "$SHARD_SCRAPE" | grep -q "$family" \
+        || { echo "shard-smoke FAILED: per-shard family $family missing from scrape"; \
+             echo "$SHARD_SCRAPE"; exit 1; }
+done
+[ -f BENCH_PR9.json ] \
+    || { echo "shard-smoke FAILED: BENCH_PR9.json not written"; exit 1; }
+rm -f "$SERVE_LOG"
+
 if cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check =="
     cargo fmt --check

@@ -17,8 +17,9 @@
 //!
 //! Run: `cargo run --release --example serve_requests [n_requests]`
 //! Env: SR_CLIENTS (4), SR_QUALITIES (50,75,90), SR_OUT (BENCH_PR2.json
-//!      or BENCH_PR5.json when remote), SR_SKIP_DENSE (unset),
-//!      SR_REMOTE (unset; e.g. 127.0.0.1:7878 from `repro serve --listen`)
+//!      or BENCH_PR9.json when remote), SR_SKIP_DENSE (unset),
+//!      SR_REMOTE (unset; e.g. 127.0.0.1:7878 from `repro serve --listen`),
+//!      SR_CONNECTIONS (0 = same as SR_CLIENTS; remote connection count)
 
 use jpegdomain::bench_harness as bh;
 use jpegdomain::serving::bench::{print_rows, report_json, run, BenchOptions};
@@ -43,6 +44,10 @@ fn main() -> anyhow::Result<()> {
         qualities,
         skip_dense: std::env::var("SR_SKIP_DENSE").is_ok(),
         remote: std::env::var("SR_REMOTE").ok(),
+        connections: std::env::var("SR_CONNECTIONS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0),
         ..Default::default()
     };
     println!(

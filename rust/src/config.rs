@@ -227,6 +227,15 @@ pub struct ServeConfig {
     /// admitted request (`--trace-sample` overrides); `0` disables
     /// tracing entirely (no sampling cost on the hot path).
     pub trace_sample: usize,
+    /// Pipeline replicas behind consistent hashing on the quant table
+    /// (`--shards` overrides); `1` = the single unsharded pipeline.
+    pub shards: usize,
+    /// Per-connection token-bucket refill rate in tokens/second
+    /// (`--rate-limit` overrides); `0` disables rate limiting.
+    pub rate_limit: usize,
+    /// Token-bucket burst capacity (`--rate-burst` overrides); `0`
+    /// defaults to `rate_limit`.
+    pub rate_burst: usize,
 }
 
 impl Default for ServeConfig {
@@ -243,6 +252,9 @@ impl Default for ServeConfig {
             listen_addr: String::new(),
             warmup_batches: 0,
             trace_sample: 0,
+            shards: 1,
+            rate_limit: 0,
+            rate_burst: 0,
         }
     }
 }
@@ -262,6 +274,9 @@ impl ServeConfig {
             listen_addr: cfg.str_or("serve", "listen_addr", &d.listen_addr),
             warmup_batches: cfg.usize_or("serve", "warmup_batches", d.warmup_batches),
             trace_sample: cfg.usize_or("serve", "trace_sample", d.trace_sample),
+            shards: cfg.usize_or("serve", "shards", d.shards),
+            rate_limit: cfg.usize_or("serve", "rate_limit", d.rate_limit),
+            rate_burst: cfg.usize_or("serve", "rate_burst", d.rate_burst),
         }
     }
 }
@@ -355,6 +370,14 @@ verbose = true
         assert_eq!(s.listen_addr, "127.0.0.1:7878");
         assert_eq!(s.warmup_batches, 3);
         assert_eq!(s.trace_sample, 10);
+        assert_eq!(s.shards, 1, "unsharded by default");
+        assert_eq!(s.rate_limit, 0, "rate limiting off by default");
+        let c = Config::parse("[serve]\nshards = 4\nrate_limit = 100\nrate_burst = 200\n")
+            .unwrap();
+        let s = ServeConfig::from_config(&c);
+        assert_eq!(s.shards, 4);
+        assert_eq!(s.rate_limit, 100);
+        assert_eq!(s.rate_burst, 200);
     }
 
     #[test]

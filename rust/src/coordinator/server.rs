@@ -21,7 +21,8 @@ use crate::jpeg_domain::relu::Method;
 use crate::params::ParamSet;
 use crate::runtime::Session;
 use crate::serving::{
-    FrontendConfig, NativeEngine, NativePipeline, PipelineConfig, SocketFrontend,
+    FrontendConfig, NativeEngine, NativePipeline, PipelineConfig, ServeRequest,
+    ShardedCoordinator, SocketFrontend,
 };
 use crate::tensor::Tensor;
 
@@ -83,6 +84,10 @@ enum Inner {
         // pipeline from its connection workers
         pipeline: Option<Arc<NativePipeline>>,
     },
+    Sharded {
+        // N native pipeline replicas behind consistent hashing
+        coordinator: Option<Arc<ShardedCoordinator>>,
+    },
 }
 
 impl Server {
@@ -131,12 +136,38 @@ impl Server {
         Server { inner: Inner::Native { pipeline: Some(pipeline) }, metrics }
     }
 
+    /// Start `shards` native pipeline replicas behind consistent
+    /// hashing on the quant table (`serve --shards N`).  Each replica
+    /// shares the engine's parameters ([`NativeEngine::replica`]) but
+    /// owns its exploded-map cache; every instrument registers in one
+    /// shared telemetry registry.
+    pub fn start_sharded(
+        engine: NativeEngine,
+        shards: usize,
+        cfg: PipelineConfig,
+        tracer: Option<Arc<crate::telemetry::Tracer>>,
+    ) -> Server {
+        let coordinator =
+            Arc::new(ShardedCoordinator::start_traced(engine, shards, cfg, tracer));
+        let metrics = coordinator.aggregate().clone();
+        Server { inner: Inner::Sharded { coordinator: Some(coordinator) }, metrics }
+    }
+
     /// The native pipeline behind this server, when running natively
     /// (per-stage metrics, warm-up).
     pub fn pipeline(&self) -> Option<&NativePipeline> {
         match &self.inner {
             Inner::Native { pipeline } => pipeline.as_deref(),
-            Inner::Pjrt { .. } => None,
+            Inner::Pjrt { .. } | Inner::Sharded { .. } => None,
+        }
+    }
+
+    /// The shard coordinator behind this server, when sharded
+    /// (routing introspection, per-shard warm-up).
+    pub fn sharded(&self) -> Option<&ShardedCoordinator> {
+        match &self.inner {
+            Inner::Sharded { coordinator } => coordinator.as_deref(),
+            _ => None,
         }
     }
 
@@ -149,7 +180,10 @@ impl Server {
     pub fn listen(&self, cfg: FrontendConfig) -> anyhow::Result<SocketFrontend> {
         match &self.inner {
             Inner::Native { pipeline: Some(p) } => SocketFrontend::start(p.clone(), cfg),
-            Inner::Native { pipeline: None } => anyhow::bail!("server already shut down"),
+            Inner::Sharded { coordinator: Some(c) } => SocketFrontend::start(c.clone(), cfg),
+            Inner::Native { pipeline: None } | Inner::Sharded { coordinator: None } => {
+                anyhow::bail!("server already shut down")
+            }
             Inner::Pjrt { .. } => {
                 anyhow::bail!("--listen requires the native engine (got pjrt)")
             }
@@ -275,6 +309,17 @@ impl Server {
                     }
                 }
             }
+            Inner::Sharded { coordinator } => {
+                let c = coordinator.as_ref().expect("server running");
+                match c.try_submit_request(ServeRequest::new(jpeg_bytes)) {
+                    Ok(rx) => rx,
+                    Err(e) => {
+                        let (reply, rx) = channel();
+                        let _ = reply.send(Err(anyhow::Error::new(e)));
+                        rx
+                    }
+                }
+            }
         }
     }
 
@@ -306,6 +351,14 @@ impl Server {
                         // a front end still holds a clone; the same
                         // drain runs in NativePipeline::drop when the
                         // last reference goes
+                        Err(shared) => drop(shared),
+                    }
+                }
+            }
+            Inner::Sharded { coordinator } => {
+                if let Some(c) = coordinator.take() {
+                    match Arc::try_unwrap(c) {
+                        Ok(c) => c.shutdown(),
                         Err(shared) => drop(shared),
                     }
                 }

@@ -112,10 +112,15 @@ fn usage() -> ! {
                   'listening on HOST:PORT' (resolves :0), serves until
                   --listen-secs S elapse (0 = forever, the default);
                   --warmup-batches N rejects socket traffic with the
-                  typed WarmingUp code until N in-process warm batches
-                  ran; --qualities Q,.. warms those quant tables;
-                  --metrics-dump PATH writes the metrics exposition
-                  there every ~5s (and once at shutdown)
+                  typed WarmingUp code until the owning shard served N
+                  warm batches; --qualities Q,.. warms those quant
+                  tables; --metrics-dump PATH writes the metrics
+                  exposition there every ~5s (and once at shutdown);
+                  --shards N runs N pipeline replicas behind consistent
+                  hashing on the quant table (default 1);
+                  --rate-limit N tokens/s per connection (0 = off) and
+                  --rate-burst N burst capacity (0 = rate) answer the
+                  typed RateLimited code when a bucket runs dry
           --trace-sample N (native only): emit per-stage JSONL trace
                   spans for every Nth admitted request (0 = off);
                   --trace-file PATH appends spans there (default stderr)
@@ -127,8 +132,9 @@ fn usage() -> ! {
           native-dense vs pjrt-if-present)
           --remote ADDR: drive a running socket front end instead and
           compare against the in-process sparse-resident baseline
-          -> BENCH_PR7.json (rows carry client- and server-side
-          histogram percentiles)
+          -> BENCH_PR9.json (rows carry client- and server-side
+          histogram percentiles); --connections N opens N concurrent
+          client connections (default --clients)
   eval:   --ckpt PATH --route spatial|jpeg --nf K --method asm|apx
   convert: --ckpt-in PATH --ckpt-out PATH
   exp:    table1|fig4a|fig4b|fig4c|fig5|ablation|sparse|resident|prune|axpy
@@ -449,8 +455,19 @@ fn cmd_serve_listen(
             .map_err(anyhow::Error::msg)?,
     );
     let pipeline_cfg = pipeline_config_from(args, sc);
-    let server = Server::start_native_traced(native, pipeline_cfg, tracer_from(args, sc)?);
-    let pipeline = server.pipeline().expect("native server has a pipeline");
+    let shards = args.usize("shards", sc.shards).max(1);
+    let server = if shards > 1 {
+        Server::start_sharded(native, shards, pipeline_cfg, tracer_from(args, sc)?)
+    } else {
+        Server::start_native_traced(native, pipeline_cfg, tracer_from(args, sc)?)
+    };
+    // one registry either way: sharded replicas all register in the
+    // coordinator's shared registry, so a single handle scrapes the fleet
+    let registry = match (server.pipeline(), server.sharded()) {
+        (Some(p), _) => p.registry().clone(),
+        (_, Some(c)) => c.registry().clone(),
+        _ => unreachable!("a fresh server is native or sharded"),
+    };
 
     let qualities: Vec<u8> = args
         .get("qualities", "50,75,90")
@@ -458,16 +475,25 @@ fn cmd_serve_listen(
         .filter_map(|t| t.trim().parse().ok())
         .collect();
     anyhow::ensure!(!qualities.is_empty(), "--qualities must name at least one quality");
-    // pay every expected exploded-map precompute before the doors open
+    // pay every expected exploded-map precompute before the doors open;
+    // sharded, each quality warms (and gates) only its owning replica
     for &q in &qualities {
-        pipeline.warm(q);
+        match (server.pipeline(), server.sharded()) {
+            (Some(p), _) => p.warm(q),
+            (_, Some(c)) => c.warm(q),
+            _ => {}
+        }
     }
 
     let warmup_batches = args.usize("warmup-batches", sc.warmup_batches) as u64;
     if warmup_batches > 0 {
         // in-process warm traffic opens the slow-start gate: enough
-        // requests to guarantee >= warmup_batches compute batches
-        let n = warmup_batches as usize * pipeline_cfg.max_batch.max(1);
+        // requests to guarantee >= warmup_batches compute batches.
+        // Sharded, the gate is per replica and qualities spread across
+        // shards, so every quality needs its own full quota to be sure
+        // its owner served warmup_batches.
+        let per_quality_quota = warmup_batches as usize * pipeline_cfg.max_batch.max(1);
+        let n = if shards > 1 { per_quality_quota * qualities.len() } else { per_quality_quota };
         let kind = SynthKind::parse(&dataset).ok_or_else(|| anyhow::anyhow!("dataset"))?;
         let data = Dataset::synthetic(kind, 2, n, 23);
         let per_quality: Vec<Vec<(Vec<u8>, u32)>> = qualities
@@ -501,6 +527,8 @@ fn cmd_serve_listen(
         listen_addr: addr.to_string(),
         warmup_batches,
         max_inflight: args.usize("max-inflight", 64),
+        rate_limit: args.usize("rate-limit", sc.rate_limit),
+        rate_burst: args.usize("rate-burst", sc.rate_burst),
     })?;
     // single greppable line: scripts parse the resolved port out of it
     println!("listening on {}", frontend.local_addr());
@@ -510,7 +538,7 @@ fn cmd_serve_listen(
     let metrics_dump = args.flags.get("metrics-dump").map(PathBuf::from);
     let dump = |label: &str| {
         if let Some(path) = &metrics_dump {
-            if let Err(e) = std::fs::write(path, pipeline.registry().render()) {
+            if let Err(e) = std::fs::write(path, registry.render()) {
                 eprintln!("metrics dump ({label}) to {} failed: {e}", path.display());
             }
         }
@@ -532,7 +560,12 @@ fn cmd_serve_listen(
     dump("final");
 
     println!("{}", frontend.metrics.snapshot());
-    println!("{}", pipeline.metrics.snapshot());
+    match (server.pipeline(), server.sharded()) {
+        (Some(p), _) => println!("{}", p.metrics.snapshot()),
+        // sharded: the aggregate sums the fleet (shared instruments)
+        (_, Some(c)) => println!("{}", c.aggregate().snapshot()),
+        _ => {}
+    }
     frontend.shutdown();
     server.shutdown();
     Ok(())
@@ -559,11 +592,15 @@ fn cmd_serve_bench(args: &Args, cfg: &Config) -> anyhow::Result<()> {
         )),
         skip_dense: args.has("skip-dense"),
         remote: args.flags.get("remote").cloned(),
+        connections: args.usize("connections", 0),
     };
     if let Some(addr) = &opts.remote {
         println!(
-            "serve bench: {} requests over socket {} vs in-process, {} clients, qualities {:?}",
-            opts.requests, addr, opts.clients, opts.qualities
+            "serve bench: {} requests over socket {} vs in-process, {} connections, qualities {:?}",
+            opts.requests,
+            addr,
+            opts.remote_connections(),
+            opts.qualities
         );
     } else {
         println!(

@@ -12,9 +12,13 @@
 //! With [`BenchOptions::remote`] set (`serve bench --remote ADDR`), the
 //! same request stream is driven over the socket front end through the
 //! blocking [`crate::serving::frontend::Client`] — one connection per
-//! client thread, latency measured wire to wire and attributed per
-//! encoded quality — next to one in-process sparse-resident row, so the
-//! report (`BENCH_PR7.json`) prices the network boundary itself.
+//! thread, [`BenchOptions::connections`] threads (default `clients`),
+//! latency measured wire to wire and attributed per encoded quality —
+//! next to one in-process sparse-resident row, so the report
+//! (`BENCH_PR9.json`) prices the network boundary itself.  Typed sheds
+//! are tallied per code (`queue_full`, `deadline_exceeded`,
+//! `rate_limited`) and printed on one greppable line, so an overload
+//! run shows *graceful* degradation, not a mystery error count.
 //!
 //! Every row also carries **server-side** percentiles read from the
 //! serving process's log-bucketed latency histograms: in-process rows
@@ -54,6 +58,11 @@ pub struct BenchOptions {
     /// full engine sweep (one in-process sparse-resident row stays as
     /// the baseline the socket row is compared against).
     pub remote: Option<String>,
+    /// Concurrent connections for the remote row (one `Client` per
+    /// thread); 0 means "same as `clients`".  Raising it past the
+    /// server's capacity is the intended overload experiment: the extra
+    /// connections shed with typed codes instead of queueing unbounded.
+    pub connections: usize,
 }
 
 impl Default for BenchOptions {
@@ -69,6 +78,7 @@ impl Default for BenchOptions {
             artifacts: PathBuf::from("artifacts"),
             skip_dense: false,
             remote: None,
+            connections: 0,
         }
     }
 }
@@ -78,13 +88,19 @@ impl BenchOptions {
     /// and `examples/serve_requests.rs` so the artifact names cannot
     /// drift apart).
     pub fn default_out(&self) -> &'static str {
-        if self.remote.is_some() { "BENCH_PR7.json" } else { "BENCH_PR2.json" }
+        if self.remote.is_some() { "BENCH_PR9.json" } else { "BENCH_PR2.json" }
     }
 
     /// Whether the axpy kernel ablation belongs to this run: it
     /// measures the in-process kernel sweep, not the wire comparison.
     pub fn wants_axpy(&self) -> bool {
         self.remote.is_none()
+    }
+
+    /// Effective remote connection count (`connections`, falling back
+    /// to `clients`, never zero).
+    pub fn remote_connections(&self) -> usize {
+        if self.connections > 0 { self.connections } else { self.clients.max(1) }
     }
 }
 
@@ -100,6 +116,12 @@ pub struct BenchRow {
     pub completed: u64,
     pub errors: u64,
     pub rejected: u64,
+    /// Requests shed because their deadline budget ran out before
+    /// compute (remote row only; subset of `errors`).
+    pub deadline_exceeded: u64,
+    /// Requests refused by the per-connection token bucket (remote row
+    /// only; subset of `errors`).
+    pub rate_limited: u64,
     /// Framing violations seen by the client (remote row only; a
     /// healthy server keeps this at zero).
     pub protocol_errors: u64,
@@ -192,6 +214,8 @@ fn measure(server: &Server, name: &str, files: &[Vec<u8>], clients: usize) -> Be
         completed: (files.len() as u64).saturating_sub(errors),
         errors,
         rejected,
+        deadline_exceeded: 0,
+        rate_limited: 0,
         protocol_errors: 0,
         // served requests only: rejected/errored ones cost ~no wall
         // time and would inflate req/s exactly when shedding load
@@ -248,46 +272,58 @@ fn quantile_ms(sorted: &[f64], q: f64) -> f64 {
 }
 
 /// Drive a running socket front end closed-loop: one connection per
-/// client thread, wire-to-wire latency attributed per encoded quality.
+/// thread ([`BenchOptions::remote_connections`] of them), wire-to-wire
+/// latency attributed per encoded quality, typed sheds tallied per code.
 fn remote_row(opts: &BenchOptions, files: &[Vec<u8>], addr: &str) -> anyhow::Result<BenchRow> {
     use crate::serving::frontend::{Client, ClientError, WireCode};
-    let clients = opts.clients.max(1);
+    let clients = opts.remote_connections();
     let nq = opts.qualities.len().max(1);
     let t0 = Instant::now();
-    // per thread: (latency ms, quality index) samples + error tallies
-    type ThreadOut = (Vec<(f64, usize)>, u64, u64, u64); // samples, errors, rejected, protocol
+    /// Per-thread tally: latency samples plus the typed-shed breakdown.
+    #[derive(Default)]
+    struct ThreadOut {
+        /// (latency ms, quality index) per completed request.
+        samples: Vec<(f64, usize)>,
+        errors: u64,
+        rejected: u64,
+        deadline_exceeded: u64,
+        rate_limited: u64,
+        protocol: u64,
+    }
     let outs: Vec<ThreadOut> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..clients)
             .map(|t| {
                 s.spawn(move || -> anyhow::Result<ThreadOut> {
                     let mut client = Client::connect(addr)
                         .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
-                    let mut samples = Vec::new();
-                    let (mut errors, mut rejected, mut protocol) = (0u64, 0u64, 0u64);
+                    let mut out = ThreadOut::default();
                     for i in (t..files.len()).step_by(clients) {
                         let w0 = Instant::now();
                         match client.infer(&files[i]) {
                             Ok(_) => {
-                                samples.push((w0.elapsed().as_secs_f64() * 1e3, i % nq));
+                                out.samples.push((w0.elapsed().as_secs_f64() * 1e3, i % nq));
                             }
                             Err(ClientError::Serve { code, .. }) => {
-                                errors += 1;
-                                if code == WireCode::QueueFull {
-                                    rejected += 1;
+                                out.errors += 1;
+                                match code {
+                                    WireCode::QueueFull => out.rejected += 1,
+                                    WireCode::DeadlineExceeded => out.deadline_exceeded += 1,
+                                    WireCode::RateLimited => out.rate_limited += 1,
+                                    _ => {}
                                 }
                             }
                             Err(ClientError::Protocol(_)) => {
-                                protocol += 1;
-                                errors += 1;
+                                out.protocol += 1;
+                                out.errors += 1;
                                 break; // framing broke; this connection is done
                             }
                             Err(_) => {
-                                errors += 1;
+                                out.errors += 1;
                                 break; // transport gone
                             }
                         }
                     }
-                    Ok((samples, errors, rejected, protocol))
+                    Ok(out)
                 })
             })
             .collect();
@@ -301,11 +337,14 @@ fn remote_row(opts: &BenchOptions, files: &[Vec<u8>], addr: &str) -> anyhow::Res
     let mut all_ms: Vec<f64> = Vec::new();
     let mut per_q: Vec<Vec<f64>> = vec![Vec::new(); nq];
     let (mut errors, mut rejected, mut protocol_errors) = (0u64, 0u64, 0u64);
-    for (samples, e, r, p) in outs {
-        errors += e;
-        rejected += r;
-        protocol_errors += p;
-        for (ms, qi) in samples {
+    let (mut deadline_exceeded, mut rate_limited) = (0u64, 0u64);
+    for out in outs {
+        errors += out.errors;
+        rejected += out.rejected;
+        deadline_exceeded += out.deadline_exceeded;
+        rate_limited += out.rate_limited;
+        protocol_errors += out.protocol;
+        for (ms, qi) in out.samples {
             all_ms.push(ms);
             per_q[qi].push(ms);
         }
@@ -351,6 +390,8 @@ fn remote_row(opts: &BenchOptions, files: &[Vec<u8>], addr: &str) -> anyhow::Res
         completed,
         errors,
         rejected,
+        deadline_exceeded,
+        rate_limited,
         protocol_errors,
         throughput: completed as f64 / wall,
         p50_ms: quantile_ms(&all_ms, 0.50),
@@ -428,6 +469,7 @@ pub fn report_json(
     config.insert("dataset".into(), Json::Str(opts.dataset.clone()));
     config.insert("requests".into(), num(opts.requests as f64));
     config.insert("clients".into(), num(opts.clients as f64));
+    config.insert("connections".into(), num(opts.remote_connections() as f64));
     config.insert(
         "qualities".into(),
         Json::Arr(opts.qualities.iter().map(|&q| num(q as f64)).collect()),
@@ -448,6 +490,8 @@ pub fn report_json(
         o.insert("completed".into(), num(r.completed as f64));
         o.insert("errors".into(), num(r.errors as f64));
         o.insert("rejected".into(), num(r.rejected as f64));
+        o.insert("deadline_exceeded".into(), num(r.deadline_exceeded as f64));
+        o.insert("rate_limited".into(), num(r.rate_limited as f64));
         o.insert("protocol_errors".into(), num(r.protocol_errors as f64));
         o.insert("throughput".into(), num(r.throughput));
         o.insert("p50_ms".into(), num(r.p50_ms));
@@ -550,6 +594,12 @@ pub fn print_rows(rows: &[BenchRow], skipped: &[(String, String)]) {
                 "remote completed requests: {} (protocol errors: {})",
                 r.completed, r.protocol_errors
             );
+            // the shed breakdown ci.sh's shard-smoke greps: an overload
+            // run must shed with *typed* codes, not transport failures
+            println!(
+                "remote shed: queue_full={} deadline_exceeded={} rate_limited={}",
+                r.rejected, r.deadline_exceeded, r.rate_limited
+            );
         }
     }
     for (engine, why) in skipped {
@@ -583,6 +633,8 @@ mod tests {
             completed: 10,
             errors: 0,
             rejected: 0,
+            deadline_exceeded: 0,
+            rate_limited: 0,
             protocol_errors: 0,
             throughput: 100.0,
             p50_ms: 1.0,
@@ -632,6 +684,8 @@ mod tests {
             completed: 11,
             errors: 1,
             rejected: 1,
+            deadline_exceeded: 0,
+            rate_limited: 1,
             protocol_errors: 0,
             throughput: 40.0,
             p50_ms: 2.0,
@@ -648,7 +702,9 @@ mod tests {
         let rows_v = doc.get("rows").as_arr().unwrap();
         assert_eq!(rows_v[0].get("engine").as_str(), Some("remote-socket"));
         assert_eq!(rows_v[0].get("completed").as_f64(), Some(11.0));
+        assert_eq!(rows_v[0].get("rate_limited").as_f64(), Some(1.0));
         assert_eq!(rows_v[0].get("server_p90_ms").as_f64(), Some(3.0));
+        assert_eq!(doc.get("config").get("connections").as_f64(), Some(4.0));
         assert_eq!(
             doc.get("axpy_tiling"),
             &crate::json::Json::Null,

@@ -59,7 +59,9 @@ fn qvec_key(qvec: &[f32; 64]) -> QvecKey {
 /// workers (`Send + Sync`, interior mutability only in the cache).
 pub struct NativeEngine {
     pub cfg: ModelConfig,
-    pub params: ParamSet,
+    /// Shared across shard replicas ([`NativeEngine::replica`]): one
+    /// copy of the weights, N exploded-map caches.
+    pub params: Arc<ParamSet>,
     pub num_freqs: usize,
     pub method: Method,
     /// Row-parallel worker threads inside one forward (1 = inline).
@@ -85,13 +87,31 @@ impl NativeEngine {
     ) -> NativeEngine {
         NativeEngine {
             cfg,
-            params,
+            params: Arc::new(params),
             num_freqs,
             method,
             threads: crate::config::resolve_threads(threads),
             mode,
             prune_epsilon: 0.0,
             axpy: AxpyKernel::Auto,
+            cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// A shard replica of this engine: same configuration and the same
+    /// `Arc`-shared parameters, but a **fresh, empty** exploded-map
+    /// cache — maps are keyed by (replica, qvec), so each consistent-
+    /// hash owner precomputes only the tables it actually serves.
+    pub fn replica(&self) -> NativeEngine {
+        NativeEngine {
+            cfg: self.cfg.clone(),
+            params: self.params.clone(),
+            num_freqs: self.num_freqs,
+            method: self.method,
+            threads: self.threads,
+            mode: self.mode,
+            prune_epsilon: self.prune_epsilon,
+            axpy: self.axpy,
             cache: Mutex::new(HashMap::new()),
         }
     }
@@ -306,6 +326,18 @@ mod tests {
             NativeEngine::from_preset("nope", None, 0, 15, Method::Asm, 1, NativeMode::Sparse)
                 .is_err()
         );
+    }
+
+    #[test]
+    fn replica_shares_params_but_starts_cold() {
+        let e = engine(NativeMode::Sparse);
+        e.warm(75);
+        let r = e.replica();
+        assert!(Arc::ptr_eq(&e.params, &r.params), "one copy of the weights");
+        assert_eq!(r.cached_maps(), 0, "replica caches are per-replica");
+        assert_eq!(e.cached_maps(), 1, "source cache is untouched");
+        r.warm(75);
+        assert_eq!(r.cached_maps(), 1);
     }
 
     #[test]

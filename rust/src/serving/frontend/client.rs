@@ -16,8 +16,8 @@ use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use super::protocol::{
-    encode_request, encode_stats_request, read_response, read_stats_response, FrameError,
-    ProtocolError, ResponseBody, WireCode,
+    encode_request_with_cost, encode_stats_request, read_response, read_stats_response,
+    FrameError, ProtocolError, ResponseBody, WireCode,
 };
 
 /// A successful remote inference.
@@ -123,13 +123,25 @@ impl Client {
         deadline_budget: Option<Duration>,
         quality_hint: u8,
     ) -> Result<u64, ClientError> {
+        self.submit_costed(jpeg, deadline_budget, quality_hint, 0)
+    }
+
+    /// [`Client::submit_with`] declaring a rate-limit cost (header byte
+    /// 21; the server reads 0 as 1, so the default costs one token).
+    pub fn submit_costed(
+        &mut self,
+        jpeg: &[u8],
+        deadline_budget: Option<Duration>,
+        quality_hint: u8,
+        cost: u8,
+    ) -> Result<u64, ClientError> {
         let id = self.next_id;
         self.next_id += 1;
         let budget_us = deadline_budget
             .map(|d| d.as_micros().clamp(1, u64::MAX as u128) as u64)
             .unwrap_or(0);
-        let frame =
-            encode_request(id, budget_us, quality_hint, jpeg).map_err(ClientError::Protocol)?;
+        let frame = encode_request_with_cost(id, budget_us, quality_hint, cost, jpeg)
+            .map_err(ClientError::Protocol)?;
         use io::Write;
         self.writer.write_all(&frame)?;
         Ok(id)

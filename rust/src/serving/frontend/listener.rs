@@ -1,28 +1,47 @@
-//! The TCP acceptor + connection worker pool over the native pipeline.
+//! The TCP acceptor + connection worker pool over a serving backend.
 //!
 //! One thread accepts; each connection gets a worker thread that parses
-//! request frames and feeds [`NativePipeline::try_submit_request`].
-//! Replies are written by short-lived per-request waiter threads through
-//! a mutex-serialized write half, so responses stream back **out of
-//! order** — the request id in the frame header is the only correlation.
-//! Everything is `std::net` + `std::thread`; no async runtime.
+//! request frames and feeds [`ServeBackend::submit_with_sink`].  Replies
+//! flow through a fixed **reply-pump pool**: whichever pipeline worker
+//! finishes a request runs its completion sink, which encodes nothing
+//! and blocks on nothing — it stages a [`Completion`] onto one bounded
+//! queue, and a handful of pump threads drain that queue back to the
+//! mutex-serialized write halves.  Before this PR every in-flight
+//! request parked its own short-lived waiter thread; under a
+//! multi-connection burst that meant hundreds of concurrent threads
+//! doing nothing but blocking on `recv`.  Now thread count is fixed
+//! regardless of in-flight depth, and responses still stream back
+//! **out of order** — the request id in the frame header is the only
+//! correlation.  Everything is `std::net` + `std::thread`; no async
+//! runtime.
 //!
-//! Per-connection flow control: at most `max_inflight` submitted
-//! requests may be awaiting replies; past that the reader stops pulling
-//! frames off the socket, which backpressures the client through TCP —
-//! on top of the pipeline's own bounded admission queue, whose overflow
-//! surfaces as the typed [`WireCode::QueueFull`] response.
+//! Per-connection flow control, in the order a frame meets it:
 //!
-//! ## Slow start
+//! 1. **Token bucket** (`rate_limit`/`rate_burst`, off by default) —
+//!    each request spends `cost` tokens (header byte 21, 0 reads as 1);
+//!    an empty bucket answers the typed [`WireCode::RateLimited`]
+//!    without touching the pipeline.
+//! 2. **Warmup gate** — see below.
+//! 3. **In-flight cap** — at most `max_inflight` submitted requests may
+//!    be awaiting replies; past that the reader stops pulling frames
+//!    off the socket, which backpressures the client through TCP — on
+//!    top of the pipeline's own bounded admission queue, whose overflow
+//!    surfaces as the typed [`WireCode::QueueFull`] response.
+//!
+//! ## Slow start, per shard
 //!
 //! A freshly started server has an empty per-qvec `ExplodedModel` cache;
 //! the first batch of each quant table pays a seconds-long precompute.
-//! Until the pipeline has served `warmup_batches` compute batches,
-//! socket requests are rejected with the typed [`WireCode::WarmingUp`]
-//! code instead of being queued behind that cliff.  In-process callers
-//! (the warmup driver in `repro serve --listen`) bypass the gate, which
-//! is what lets the cache warm in the first place.  The gate is sticky:
-//! once open it never closes.
+//! The gate is **per shard**: a request is admitted once the shard that
+//! *owns its quant table* (via [`ServeBackend::warm_shard`], which peeks
+//! the DQT segment without decoding) has served `warmup_batches` compute
+//! batches; until then it is rejected with the typed
+//! [`WireCode::WarmingUp`] code instead of queueing behind the cliff.
+//! This fixes the PR-7 global gate, where one warm replica opened the
+//! door for qvecs whose owning replica was still cold.  In-process
+//! callers (the warmup driver in `repro serve --listen`) bypass the
+//! gate, which is what lets the caches warm in the first place.  Each
+//! shard's gate is sticky: once open it never closes.
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -32,25 +51,43 @@ use std::time::{Duration, Instant};
 
 use crate::serving::error::ServeError;
 use crate::serving::metrics::FrontendMetrics;
-use crate::serving::pipeline::{NativePipeline, ServeRequest};
+use crate::serving::pipeline::{ReplySink, ServeRequest};
+use crate::serving::queue::{bounded_with_gauge, BoundedReceiver, BoundedSender};
+use crate::serving::ServeBackend;
+use crate::telemetry::Tracer;
 
 use super::protocol::{
     encode_response, encode_stats_response, read_incoming, FrameError, IncomingFrame,
     ResponseBody, ResponseFrame, WireCode,
 };
 
-/// Socket front end settings (`[serve] listen_addr` / `warmup_batches`;
-/// CLI flags override).
+/// Threads draining the completion queue.  Writes are short (one frame
+/// onto a kernel send buffer) so a small fixed pool keeps up; a client
+/// that stops reading stalls one pump thread for at most
+/// [`WRITE_STALL_LIMIT`] before its connection is declared dead.
+const REPLY_PUMP_THREADS: usize = 4;
+/// Completion queue capacity.  Full is backpressure: a compute worker
+/// delivering a reply blocks until a pump drains — bounded, like every
+/// other queue in the pipeline.
+const COMPLETION_QUEUE_CAP: usize = 1024;
+
+/// Socket front end settings (`[serve] listen_addr` / `warmup_batches`
+/// / `rate_limit`; CLI flags override).
 #[derive(Clone, Debug)]
 pub struct FrontendConfig {
     /// Address to bind (`"127.0.0.1:0"` = loopback, ephemeral port).
     pub listen_addr: String,
-    /// Compute batches the pipeline must have served before socket
-    /// traffic is admitted; `0` disables the slow-start gate.
+    /// Compute batches a shard must have served before socket traffic
+    /// routed to it is admitted; `0` disables the slow-start gate.
     pub warmup_batches: u64,
     /// Per-connection cap on submitted-but-unanswered requests; past it
     /// the reader stops pulling frames (TCP backpressure).
     pub max_inflight: usize,
+    /// Per-connection token-bucket refill rate in tokens/second;
+    /// `0` disables rate limiting.
+    pub rate_limit: usize,
+    /// Token-bucket burst capacity; `0` defaults to `rate_limit`.
+    pub rate_burst: usize,
 }
 
 impl Default for FrontendConfig {
@@ -59,35 +96,81 @@ impl Default for FrontendConfig {
             listen_addr: "127.0.0.1:0".to_string(),
             warmup_batches: 0,
             max_inflight: 64,
+            rate_limit: 0,
+            rate_burst: 0,
         }
     }
 }
 
-/// Sticky slow-start gate over the pipeline's served-batch counter.
+/// Per-connection token bucket.  Owned by the connection's reader
+/// thread (no sharing, no locks): tokens refill continuously at `rate`
+/// per second up to `burst`, and each admitted request spends its
+/// declared cost (header byte 21, `0` reads as 1).
+struct TokenBucket {
+    rate: f64,
+    burst: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    /// `None` when `rate` is 0 (limiting disabled).
+    fn new(rate: usize, burst: usize) -> Option<TokenBucket> {
+        if rate == 0 {
+            return None;
+        }
+        let burst = if burst == 0 { rate } else { burst } as f64;
+        Some(TokenBucket {
+            rate: rate as f64,
+            burst,
+            // a fresh connection starts with a full bucket
+            tokens: burst,
+            last: Instant::now(),
+        })
+    }
+
+    fn admit(&mut self, cost: u8) -> bool {
+        let now = Instant::now();
+        let refill = self.rate * now.duration_since(self.last).as_secs_f64();
+        self.tokens = (self.tokens + refill).min(self.burst);
+        self.last = now;
+        let cost = cost.max(1) as f64;
+        if self.tokens >= cost {
+            self.tokens -= cost;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Sticky slow-start gate, one flag per shard.
 ///
-/// The counter is **global**, not per quant table: the gate shields
-/// the startup cliff, while the per-qvec precompute for *declared*
-/// tables is paid up front by `repro serve --listen`'s
-/// `pipeline.warm(q)` calls.  A request arriving with a quant table
-/// nobody warmed still pays its precompute in-request (admission
-/// cannot know the table without decoding); per-qvec gating is a
-/// ROADMAP follow-up.
+/// [`ServeBackend::warm_shard`] maps a payload to its owning shard and
+/// that shard's served-batch count by peeking the JPEG's DQT segment —
+/// no entropy decode, no admission.  Unsharded backends report shard 0
+/// for everything, reproducing the old global gate exactly.
 struct WarmupGate {
     need: u64,
-    warmed: AtomicBool,
+    warmed: Vec<AtomicBool>,
 }
 
 impl WarmupGate {
-    fn new(need: u64) -> WarmupGate {
-        WarmupGate { need, warmed: AtomicBool::new(need == 0) }
+    fn new(need: u64, shards: usize) -> WarmupGate {
+        WarmupGate {
+            need,
+            warmed: (0..shards.max(1)).map(|_| AtomicBool::new(need == 0)).collect(),
+        }
     }
 
-    fn is_warm(&self, pipeline: &NativePipeline) -> bool {
-        if self.warmed.load(Ordering::Relaxed) {
+    fn is_warm(&self, backend: &dyn ServeBackend, payload: &[u8]) -> bool {
+        let (shard, batches) = backend.warm_shard(payload);
+        let flag = &self.warmed[shard.min(self.warmed.len() - 1)];
+        if flag.load(Ordering::Relaxed) {
             return true;
         }
-        if pipeline.aggregate().batches.get() >= self.need {
-            self.warmed.store(true, Ordering::Relaxed);
+        if batches >= self.need {
+            flag.store(true, Ordering::Relaxed);
             return true;
         }
         false
@@ -125,23 +208,46 @@ impl Inflight {
     }
 }
 
+/// One finished request on its way back to the wire: the encoded-ready
+/// frame plus everything a pump thread needs to write it and settle the
+/// connection's in-flight accounting.
+struct Completion {
+    frame: ResponseFrame,
+    writer: Arc<Mutex<TcpStream>>,
+    inflight: Arc<Inflight>,
+    traced: bool,
+    request_id: u64,
+}
+
+/// The reply-pump pool: the frontend's half of the completion queue.
+struct ReplyPump {
+    /// Dropped during shutdown *after* connection workers join, so
+    /// every staged completion drains before the pumps exit.
+    tx: Option<BoundedSender<Completion>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
 /// A running socket front end.  Dropping (or [`SocketFrontend::shutdown`])
 /// stops the acceptor, closes every connection, and joins all workers;
-/// the pipeline itself is left running (shut it down after).
+/// the backend itself is left running (shut it down after).
 pub struct SocketFrontend {
     local_addr: SocketAddr,
     stop: Arc<AtomicBool>,
     acceptor: Option<JoinHandle<()>>,
     conns: Arc<Mutex<Vec<(TcpStream, JoinHandle<()>)>>>,
+    pump: Option<ReplyPump>,
     /// Per-connection / per-wire-code counters.
     pub metrics: Arc<FrontendMetrics>,
 }
 
 impl SocketFrontend {
     /// Bind `cfg.listen_addr` and start accepting.  Fails fast when the
-    /// address cannot be bound (taken port, bad syntax).
+    /// address cannot be bound (taken port, bad syntax).  The backend is
+    /// a single [`crate::serving::NativePipeline`] or a
+    /// [`crate::serving::ShardedCoordinator`] — the listener is
+    /// identical over both.
     pub fn start(
-        pipeline: Arc<NativePipeline>,
+        backend: Arc<dyn ServeBackend>,
         cfg: FrontendConfig,
     ) -> anyhow::Result<SocketFrontend> {
         let listener = TcpListener::bind(&cfg.listen_addr)
@@ -149,19 +255,41 @@ impl SocketFrontend {
         let local_addr = listener.local_addr()?;
         // non-blocking accept so the stop flag is honored promptly
         listener.set_nonblocking(true)?;
-        // frontend counters live in the pipeline's registry, so one
-        // Stats scrape covers both layers
-        let metrics = Arc::new(FrontendMetrics::register(pipeline.registry()));
+        // frontend counters live in the backend's registry, so one
+        // Stats scrape covers both layers (and every shard)
+        let metrics = Arc::new(FrontendMetrics::register(backend.registry()));
         let stop = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<(TcpStream, JoinHandle<()>)>>> =
             Arc::new(Mutex::new(Vec::new()));
-        let gate = Arc::new(WarmupGate::new(cfg.warmup_batches));
+        let gate = Arc::new(WarmupGate::new(cfg.warmup_batches, backend.shard_count()));
         let max_inflight = cfg.max_inflight.max(1);
+        let (rate_limit, rate_burst) = (cfg.rate_limit, cfg.rate_burst);
+
+        // the completion queue + pump pool; its depth gauge joins the
+        // admission/decoded families so a scrape sees write backlog too
+        let (pump_tx, pump_rx) = bounded_with_gauge::<Completion>(
+            COMPLETION_QUEUE_CAP,
+            backend.registry().gauge(
+                "jd_queue_depth",
+                "live items in a pipeline queue",
+                &[("queue", "completion")],
+            ),
+        );
+        let tracer = backend.tracer().cloned();
+        let pump_handles: Vec<JoinHandle<()>> = (0..REPLY_PUMP_THREADS)
+            .map(|_| {
+                let rx = pump_rx.clone();
+                let metrics = metrics.clone();
+                let tracer = tracer.clone();
+                std::thread::spawn(move || reply_pump(rx, metrics, tracer))
+            })
+            .collect();
 
         let acceptor = {
             let stop = stop.clone();
             let conns = conns.clone();
             let metrics = metrics.clone();
+            let pump_tx = pump_tx.clone();
             std::thread::spawn(move || {
                 while !stop.load(Ordering::Relaxed) {
                     match listener.accept() {
@@ -169,16 +297,19 @@ impl SocketFrontend {
                             let _ = stream.set_nodelay(true);
                             let _ = stream.set_nonblocking(false);
                             let Ok(track) = stream.try_clone() else { continue };
-                            let pipeline = pipeline.clone();
+                            let backend = backend.clone();
                             let gate = gate.clone();
                             let metrics = metrics.clone();
                             let stop = stop.clone();
+                            let pump_tx = pump_tx.clone();
                             let handle = std::thread::spawn(move || {
                                 handle_connection(
                                     stream,
-                                    pipeline,
+                                    backend,
                                     gate,
                                     metrics,
+                                    pump_tx,
+                                    (rate_limit, rate_burst),
                                     max_inflight,
                                     stop,
                                 )
@@ -213,6 +344,7 @@ impl SocketFrontend {
             stop,
             acceptor: Some(acceptor),
             conns,
+            pump: Some(ReplyPump { tx: Some(pump_tx), handles: pump_handles }),
             metrics,
         })
     }
@@ -236,11 +368,21 @@ impl SocketFrontend {
         for (stream, handle) in conns {
             // unblock the reader but leave the write half open —
             // shutdown applies socket-wide across the dup'd fds, and
-            // the worker still has in-flight replies to flush (the
-            // pipeline is still up); the worker FINs the write side
-            // itself once its waiters drain
+            // in-flight replies still have to flush (the backend is
+            // still up); the worker FINs the write side itself once
+            // its inflight count drains to zero
             let _ = stream.shutdown(std::net::Shutdown::Read);
             let _ = handle.join();
+        }
+        // connection workers joined => every submitted request's
+        // completion has been staged AND written (wait_zero held the
+        // worker until the pumps finished its replies).  Dropping the
+        // last sender ends the pump loops.
+        if let Some(mut pump) = self.pump.take() {
+            drop(pump.tx.take());
+            for h in pump.handles.drain(..) {
+                let _ = h.join();
+            }
         }
     }
 }
@@ -253,10 +395,33 @@ impl Drop for SocketFrontend {
 
 /// How long a reply write may block before the connection is declared
 /// dead.  A client that stops reading fills its TCP receive window and
-/// would otherwise park a waiter thread in `write_all` forever —
-/// pinning the inflight count, the connection worker's drain, and
-/// ultimately [`SocketFrontend::shutdown`].
+/// would otherwise park a pump thread in `write_all` forever — pinning
+/// the completion queue, the connection worker's drain, and ultimately
+/// [`SocketFrontend::shutdown`].
 const WRITE_STALL_LIMIT: Duration = Duration::from_secs(30);
+
+/// Drain the completion queue: write each staged frame onto its
+/// connection's shared write half, close sampled requests' trace with
+/// the `socket-write` span, and settle the in-flight count.  Exits when
+/// every sender is gone and the queue is drained — i.e. after the last
+/// connection worker has joined.
+fn reply_pump(
+    rx: Arc<BoundedReceiver<Completion>>,
+    metrics: Arc<FrontendMetrics>,
+    tracer: Option<Arc<Tracer>>,
+) {
+    while let Some(c) = rx.recv() {
+        let write_started = Instant::now();
+        write_response(&c.writer, &c.frame, &metrics);
+        // the sixth (and last) span of a sampled request
+        if c.traced {
+            if let Some(t) = &tracer {
+                t.span(c.request_id, "socket-write", write_started, Instant::now());
+            }
+        }
+        c.inflight.dec();
+    }
+}
 
 /// Serialize one response frame onto the shared write half.  A write
 /// error (peer gone, or stalled past [`WRITE_STALL_LIMIT`]) kills the
@@ -301,11 +466,45 @@ fn error_frame(request_id: u64, code: WireCode, message: String) -> ResponseFram
     }
 }
 
+/// Build the wire frame for a finished request (shared by the sink
+/// path and the submission-error path's `Ok` twin).
+fn response_frame(
+    request_id: u64,
+    result: anyhow::Result<crate::coordinator::server::InferResponse>,
+) -> (ResponseFrame, bool) {
+    match result {
+        Ok(resp) => {
+            let traced = resp.traced;
+            (
+                ResponseFrame {
+                    request_id,
+                    latency_us: resp.latency.as_micros().min(u64::MAX as u128) as u64,
+                    body: ResponseBody::Logits {
+                        predicted: resp.predicted.min(u32::MAX as usize) as u32,
+                        logits: resp.logits,
+                    },
+                },
+                traced,
+            )
+        }
+        Err(e) => {
+            let code = e
+                .downcast_ref::<ServeError>()
+                .map(WireCode::from_serve_error)
+                .unwrap_or(WireCode::Internal);
+            (error_frame(request_id, code, e.to_string()), false)
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn handle_connection(
     stream: TcpStream,
-    pipeline: Arc<NativePipeline>,
+    backend: Arc<dyn ServeBackend>,
     gate: Arc<WarmupGate>,
     metrics: Arc<FrontendMetrics>,
+    pump_tx: BoundedSender<Completion>,
+    (rate_limit, rate_burst): (usize, usize),
     max_inflight: usize,
     stop: Arc<AtomicBool>,
 ) {
@@ -322,19 +521,21 @@ fn handle_connection(
     };
     let mut reader = stream;
     let inflight = Arc::new(Inflight::default());
-    let tracer = pipeline.tracer().cloned();
+    let tracer = backend.tracer().cloned();
+    let mut bucket = TokenBucket::new(rate_limit, rate_burst);
 
     loop {
         let req = match read_incoming(&mut reader) {
             Ok(Some(IncomingFrame::Infer(req))) => req,
             Ok(Some(IncomingFrame::Stats { request_id })) => {
-                // a scrape must work while the server warms up or
-                // saturates: stats frames bypass the slow-start gate
-                // and the inflight cap, and stay out of the traffic
-                // counters they report (requests == infer frames;
-                // per-code responses count only infer replies)
+                // a scrape must work while the server warms up,
+                // saturates, or rate-limits: stats frames bypass the
+                // bucket, the slow-start gate and the inflight cap, and
+                // stay out of the traffic counters they report
+                // (requests == infer frames; per-code responses count
+                // only infer replies)
                 metrics.record_stats_request();
-                let text = pipeline.registry().render();
+                let text = backend.registry().render();
                 write_stats(&writer, request_id, &text);
                 continue;
             }
@@ -371,7 +572,26 @@ fn handle_connection(
         };
         metrics.record_request();
 
-        if !gate.is_warm(&pipeline) {
+        // the token bucket sits in front of the pipeline: a limited
+        // request costs the server one frame parse and one small write,
+        // never queue space or decode time
+        if let Some(b) = bucket.as_mut() {
+            if !b.admit(req.cost) {
+                metrics.rate_limited.inc();
+                write_response(
+                    &writer,
+                    &error_frame(
+                        req.request_id,
+                        WireCode::RateLimited,
+                        "connection token bucket empty; slow down and retry".to_string(),
+                    ),
+                    &metrics,
+                );
+                continue;
+            }
+        }
+
+        if !gate.is_warm(backend.as_ref(), &req.payload) {
             write_response(
                 &writer,
                 &error_frame(
@@ -386,69 +606,50 @@ fn handle_connection(
 
         let deadline = (req.deadline_budget_us > 0)
             .then(|| Instant::now() + Duration::from_micros(req.deadline_budget_us));
-        let mut serve_req = ServeRequest::new(req.payload).with_request_id(req.request_id);
+        let request_id = req.request_id;
+        let mut serve_req = ServeRequest::new(req.payload).with_request_id(request_id);
         serve_req.deadline = deadline;
 
         // per-connection in-flight bound: stop reading frames (TCP
-        // backpressure) rather than buffering unbounded waiters
+        // backpressure) rather than staging unbounded completions
         inflight.inc_below(max_inflight);
-        match pipeline.try_submit_request(serve_req) {
-            Ok(rx) => {
-                let writer = writer.clone();
-                let metrics = metrics.clone();
-                let inflight = inflight.clone();
-                let tracer = tracer.clone();
-                let request_id = req.request_id;
-                std::thread::spawn(move || {
-                    let mut traced = false;
-                    let frame = match rx.recv() {
-                        Ok(Ok(resp)) => {
-                            traced = resp.traced;
-                            ResponseFrame {
-                                request_id,
-                                latency_us: resp.latency.as_micros().min(u64::MAX as u128) as u64,
-                                body: ResponseBody::Logits {
-                                    predicted: resp.predicted.min(u32::MAX as usize) as u32,
-                                    logits: resp.logits,
-                                },
-                            }
-                        }
-                        Ok(Err(e)) => {
-                            let code = e
-                                .downcast_ref::<ServeError>()
-                                .map(WireCode::from_serve_error)
-                                .unwrap_or(WireCode::Internal);
-                            error_frame(request_id, code, e.to_string())
-                        }
-                        Err(_) => error_frame(
-                            request_id,
-                            WireCode::Internal,
-                            "serving worker lost before reply".to_string(),
-                        ),
-                    };
+        let sink = {
+            let writer = writer.clone();
+            let inflight = inflight.clone();
+            let pump_tx = pump_tx.clone();
+            let metrics = metrics.clone();
+            let tracer = tracer.clone();
+            ReplySink::new(move |result| {
+                let (frame, traced) = response_frame(request_id, result);
+                let completion =
+                    Completion { frame, writer, inflight, traced, request_id };
+                if let Err(c) = pump_tx.send(completion) {
+                    // pump already gone (shutdown tail): write inline so
+                    // the admitted request still gets its reply
                     let write_started = Instant::now();
-                    write_response(&writer, &frame, &metrics);
-                    // the sixth (and last) span of a sampled request
-                    if traced {
+                    write_response(&c.writer, &c.frame, &metrics);
+                    if c.traced {
                         if let Some(t) = &tracer {
-                            t.span(request_id, "socket-write", write_started, Instant::now());
+                            t.span(c.request_id, "socket-write", write_started, Instant::now());
                         }
                     }
-                    inflight.dec();
-                });
-            }
-            Err(e) => {
-                inflight.dec();
-                write_response(
-                    &writer,
-                    &error_frame(req.request_id, WireCode::from_serve_error(&e), e.to_string()),
-                    &metrics,
-                );
-            }
+                    c.inflight.dec();
+                }
+            })
+        };
+        if let Err(e) = backend.submit_with_sink(serve_req, sink) {
+            // the sink was disarmed by the rejection: the reply is ours
+            inflight.dec();
+            write_response(
+                &writer,
+                &error_frame(request_id, WireCode::from_serve_error(&e), e.to_string()),
+                &metrics,
+            );
         }
     }
 
-    // let every in-flight reply land on the wire before closing
+    // let every in-flight reply land on the wire before closing: the
+    // pump dec()s as it writes, so zero means written, not just staged
     inflight.wait_zero();
     close_connection(reader);
     metrics.connection_closed();
@@ -474,4 +675,91 @@ fn close_connection(stream: TcpStream) {
         }
     }
     let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_bucket_spends_refills_and_caps_at_burst() {
+        let mut b = TokenBucket::new(1000, 2).expect("rate > 0 builds a bucket");
+        assert!(b.admit(1), "fresh bucket starts full");
+        assert!(b.admit(0), "cost 0 reads as 1");
+        // burst 2 spent with (at most) a trivial refill in between:
+        // force the empty state deterministically, then verify refill
+        b.tokens = 0.0;
+        b.last = Instant::now();
+        assert!(!b.admit(1), "empty bucket rejects");
+        // 1000 tokens/s refills well past burst in 10ms — and is capped
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(b.admit(2), "refill reaches burst");
+        assert!(b.tokens < 1.0, "burst cap held: {}", b.tokens);
+    }
+
+    #[test]
+    fn rate_zero_disables_the_bucket() {
+        assert!(TokenBucket::new(0, 64).is_none());
+    }
+
+    #[test]
+    fn burst_zero_defaults_to_rate() {
+        let b = TokenBucket::new(7, 0).unwrap();
+        assert_eq!(b.burst, 7.0);
+        assert_eq!(b.tokens, 7.0);
+    }
+
+    #[test]
+    fn warmup_gate_tracks_shards_independently_and_sticks() {
+        struct TwoShards;
+        impl ServeBackend for TwoShards {
+            fn try_submit_request(
+                &self,
+                _req: ServeRequest,
+            ) -> Result<
+                std::sync::mpsc::Receiver<
+                    anyhow::Result<crate::coordinator::server::InferResponse>,
+                >,
+                ServeError,
+            > {
+                Err(ServeError::ShuttingDown)
+            }
+            fn submit_with_sink(
+                &self,
+                _req: ServeRequest,
+                _sink: ReplySink,
+            ) -> Result<(), ServeError> {
+                Err(ServeError::ShuttingDown)
+            }
+            fn registry(&self) -> &Arc<crate::telemetry::Registry> {
+                unreachable!("gate test never scrapes")
+            }
+            fn tracer(&self) -> Option<&Arc<Tracer>> {
+                None
+            }
+            fn shard_count(&self) -> usize {
+                2
+            }
+            fn warm_shard(&self, payload: &[u8]) -> (usize, u64) {
+                // payload[0] = shard, payload[1] = batches served
+                (payload[0] as usize, payload[1] as u64)
+            }
+            fn warm(&self, _quality: u8) {}
+        }
+        let be = TwoShards;
+        let gate = WarmupGate::new(2, be.shard_count());
+        assert!(!gate.is_warm(&be, &[0, 0]), "shard 0 cold");
+        assert!(gate.is_warm(&be, &[1, 5]), "shard 1 warm");
+        assert!(!gate.is_warm(&be, &[0, 1]), "shard 1's warmth must not open shard 0");
+        assert!(gate.is_warm(&be, &[0, 2]), "shard 0 crosses its own threshold");
+        assert!(gate.is_warm(&be, &[0, 0]), "sticky: once open, stays open");
+    }
+
+    #[test]
+    fn warmup_gate_zero_need_is_open_everywhere() {
+        let gate = WarmupGate::new(0, 3);
+        for flag in &gate.warmed {
+            assert!(flag.load(Ordering::Relaxed));
+        }
+    }
 }

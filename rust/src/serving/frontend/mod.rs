@@ -15,11 +15,15 @@
 //!   [`crate::telemetry`]); peers predating the extension answer the
 //!   unknown kind with a typed `Protocol` error, never a hang.
 //! * [`listener`] — [`SocketFrontend`]: a `std::net` acceptor plus
-//!   connection worker pool (no async runtime) feeding
-//!   `NativePipeline::try_submit_request`, streaming responses back
-//!   **out of order** by request id, with a slow-start gate that
-//!   answers [`WireCode::WarmingUp`] until the per-qvec exploded-map
-//!   cache has served its warmup batches.
+//!   connection worker pool (no async runtime) feeding any
+//!   [`crate::serving::ServeBackend`] (one pipeline or a sharded
+//!   coordinator) through completion sinks, with a fixed reply-pump
+//!   pool streaming responses back **out of order** by request id, a
+//!   per-connection token bucket (request cost in header byte 21,
+//!   empty bucket answers [`WireCode::RateLimited`]), and a per-shard
+//!   slow-start gate that answers [`WireCode::WarmingUp`] until the
+//!   shard owning the request's quant table has served its warmup
+//!   batches.
 //! * [`client`] — the blocking [`Client`] library, reused by
 //!   `repro serve bench --remote` and `examples/serve_requests.rs`.
 //!

@@ -15,7 +15,8 @@
 //! | 4  | 8 | request id (echoed on the response; responses may arrive out of order; **0 is reserved** — servers address error frames to id 0 when a violation made the real id unrecoverable, so requests declaring id 0 are rejected) |
 //! | 12 | 8 | deadline budget in microseconds (0 = no deadline) |
 //! | 20 | 1 | quality hint (advisory encoder quality, 0 = unknown; the server derives the authoritative tag from the quant table) |
-//! | 21 | 3 | reserved (zero) |
+//! | 21 | 1 | rate-limit cost (token-bucket tokens this request spends; 0 is read as 1 — old clients that zero the byte cost one token) |
+//! | 22 | 2 | reserved (zero) |
 //! | 24 | 4 | payload length |
 //! | 28 | n | payload: entropy-coded JPEG bytes |
 //!
@@ -99,11 +100,13 @@ pub enum WireCode {
     Protocol = 6,
     /// A serving worker vanished before replying.
     Internal = 7,
+    /// The connection's token bucket is empty; slow down and retry.
+    RateLimited = 8,
 }
 
 impl WireCode {
     /// Number of distinct codes (sizes the per-code metric arrays).
-    pub const COUNT: usize = 8;
+    pub const COUNT: usize = 9;
 
     /// All codes, in `repr` order (index == `code as usize`).
     pub const ALL: [WireCode; WireCode::COUNT] = [
@@ -115,6 +118,7 @@ impl WireCode {
         WireCode::WarmingUp,
         WireCode::Protocol,
         WireCode::Internal,
+        WireCode::RateLimited,
     ];
 
     /// Decode a status byte.
@@ -133,6 +137,7 @@ impl WireCode {
             WireCode::WarmingUp => "warming_up",
             WireCode::Protocol => "protocol",
             WireCode::Internal => "internal",
+            WireCode::RateLimited => "rate_limited",
         }
     }
 
@@ -227,6 +232,9 @@ pub struct RequestFrame {
     pub deadline_budget_us: u64,
     /// Advisory encoder quality (0 = unknown).
     pub quality_hint: u8,
+    /// Token-bucket tokens this request spends (header byte 21).  The
+    /// server reads 0 as 1 so pre-rate-limit clients cost one token.
+    pub cost: u8,
     /// Entropy-coded JPEG bytes.
     pub payload: Vec<u8>,
 }
@@ -269,6 +277,20 @@ pub fn encode_request(
     quality_hint: u8,
     payload: &[u8],
 ) -> Result<Vec<u8>, ProtocolError> {
+    encode_request_with_cost(request_id, deadline_budget_us, quality_hint, 0, payload)
+}
+
+/// Serialize a request frame declaring a rate-limit cost (header byte
+/// 21; the server reads 0 as 1).  [`encode_request`] delegates here
+/// with cost 0, so the two encoders produce identical frames for
+/// cost-oblivious clients.
+pub fn encode_request_with_cost(
+    request_id: u64,
+    deadline_budget_us: u64,
+    quality_hint: u8,
+    cost: u8,
+    payload: &[u8],
+) -> Result<Vec<u8>, ProtocolError> {
     if payload.len() as u64 > MAX_PAYLOAD as u64 {
         return Err(ProtocolError::Oversized {
             declared: payload.len().min(u32::MAX as usize) as u32,
@@ -282,7 +304,8 @@ pub fn encode_request(
     out.extend_from_slice(&request_id.to_le_bytes());
     out.extend_from_slice(&deadline_budget_us.to_le_bytes());
     out.push(quality_hint);
-    out.extend_from_slice(&[0u8; 3]);
+    out.push(cost);
+    out.extend_from_slice(&[0u8; 2]);
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     out.extend_from_slice(payload);
     Ok(out)
@@ -424,6 +447,7 @@ fn finish_request(
         request_id,
         deadline_budget_us: u64_at(h, 12),
         quality_hint: h[20],
+        cost: h[21],
         payload,
     })
 }
@@ -602,6 +626,7 @@ mod tests {
                 request_id: 42,
                 deadline_budget_us: 1_000_000,
                 quality_hint: 75,
+                cost: 0,
                 payload: b"jpegjpeg".to_vec(),
             }
         );
@@ -612,6 +637,20 @@ mod tests {
         assert_eq!(read_request(&mut cur).unwrap().unwrap().request_id, 42);
         assert_eq!(read_request(&mut cur).unwrap().unwrap().request_id, 43);
         assert!(read_request(&mut cur).unwrap().is_none(), "clean EOF between frames");
+    }
+
+    #[test]
+    fn cost_byte_roundtrips_and_plain_encoder_matches_cost_zero() {
+        let costed = encode_request_with_cost(42, 1_000_000, 75, 5, b"jpegjpeg").unwrap();
+        let got = read_request(&mut Cursor::new(&costed)).unwrap().unwrap();
+        assert_eq!(got.cost, 5);
+        assert_eq!(got.quality_hint, 75);
+        // the cost-oblivious encoder is byte-for-byte the cost-0 frame,
+        // so old clients interoperate unchanged
+        assert_eq!(
+            encode_request(42, 1_000_000, 75, b"jpegjpeg").unwrap(),
+            encode_request_with_cost(42, 1_000_000, 75, 0, b"jpegjpeg").unwrap(),
+        );
     }
 
     #[test]

@@ -373,6 +373,10 @@ pub struct FrontendMetrics {
     /// `requests` so scraping never perturbs the traffic counters it
     /// reports (`requests == sum of per-code responses` stays exact).
     pub stats_requests: Arc<Counter>,
+    /// Requests refused by a connection's token bucket.  Also counted
+    /// under `responses[RateLimited]`; this standalone family gives
+    /// dashboards a stable name independent of the code table.
+    pub rate_limited: Arc<Counter>,
     /// Responses written, indexed by `WireCode as usize` (incl. `ok`).
     responses: [Arc<Counter>; WireCode::COUNT],
 }
@@ -415,6 +419,11 @@ impl FrontendMetrics {
             stats_requests: registry.counter(
                 "jd_frontend_stats_requests_total",
                 "Stats (metrics scrape) frames served",
+                &[],
+            ),
+            rate_limited: registry.counter(
+                "jd_rate_limited_total",
+                "requests refused by a connection's token bucket",
                 &[],
             ),
             responses: std::array::from_fn(|i| {
@@ -679,6 +688,7 @@ mod tests {
             "jd_plan_op_us_count{op=\"conv stem /1\"} 1",
             "jd_frontend_requests_total 1",
             "jd_frontend_responses_total{code=\"ok\"} 1",
+            "jd_rate_limited_total 0",
             "jd_layer_nnz_total{layer=\"input\"} 0",
         ] {
             assert!(text.contains(family), "missing {family:?} in:\n{text}");

@@ -11,17 +11,24 @@
 //! ## Stage / channel topology
 //!
 //! ```text
-//!                 admission queue          decoded queue
-//!  clients --> [SyncSender, cap Qa] --> D decode workers --> [SyncSender, cap Qd]
-//!   try_send (typed reject when full)    entropy decode        blocking send
+//!                 admission queue            shared staging pool
+//!  clients --> [SyncSender, cap Qa] --> D decode workers --> [keyed batcher, cap Qd]
+//!   try_send (typed reject when full)    entropy decode        blocking push
 //!                                        -> SparseBlocks      (backpressure)
 //!                                                                  |
 //!                                            C compute workers <---+
-//!                                            micro-batch (<= max_batch, grouped
-//!                                            by quant table), ExplodedModel
-//!                                            cache per qvec, sparse or dense
-//!                                            kernel forward -> per-request reply
+//!                                            next_batch: one coherent single-qvec
+//!                                            micro-batch (<= max_batch) staged
+//!                                            across ALL decode workers and
+//!                                            connections, ExplodedModel cache per
+//!                                            qvec, sparse or dense kernel
+//!                                            forward -> per-request reply
 //! ```
+//!
+//! With `--shards N` the [`shard::ShardedCoordinator`] runs N of these
+//! pipelines as replicas behind consistent hashing on the quant table
+//! ([`shard::HashRing`] over [`shard::peek_qvec`]); the front end talks
+//! to either through [`ServeBackend`].
 //!
 //! ## Invariants
 //!
@@ -88,12 +95,128 @@ pub mod frontend;
 pub mod metrics;
 pub mod pipeline;
 pub mod queue;
+pub mod shard;
 
 pub use engine::{NativeEngine, NativeMode};
 pub use error::ServeError;
 pub use frontend::{FrontendConfig, SocketFrontend};
 pub use metrics::{FrontendMetrics, PipelineMetrics, QualityTag};
-pub use pipeline::{NativePipeline, PipelineConfig, ServeRequest};
+pub use pipeline::{NativePipeline, PipelineConfig, ReplySink, ServeRequest};
+pub use shard::ShardedCoordinator;
+
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+use crate::coordinator::server::InferResponse;
+use crate::telemetry::{Registry, Tracer};
+
+/// What the socket front end serves: one [`NativePipeline`]
+/// (`--shards 1`) or a [`ShardedCoordinator`] fleet (`--shards N`).
+/// The listener only needs submission, warmth, and the scrape surface —
+/// both backends expose them with identical semantics, so the
+/// connection handler is written once.
+///
+/// The trait methods shadow same-named inherent methods on both types;
+/// inherent methods win at direct call sites, so existing code keeps
+/// compiling unchanged and the trait costs nothing outside the
+/// `Arc<dyn ServeBackend>` the listener holds.
+pub trait ServeBackend: Send + Sync {
+    /// Admit one request; the reply arrives on the returned channel.
+    fn try_submit_request(
+        &self,
+        req: ServeRequest,
+    ) -> Result<Receiver<anyhow::Result<InferResponse>>, ServeError>;
+
+    /// Admit one request whose reply goes to a completion sink (the
+    /// reply-pump path).  On `Err` the sink was disarmed — the caller
+    /// still owns the reply.
+    fn submit_with_sink(&self, req: ServeRequest, sink: ReplySink) -> Result<(), ServeError>;
+
+    /// The registry `Stats` scrapes render from.
+    fn registry(&self) -> &Arc<Registry>;
+
+    /// The span tracer, when one is attached.
+    fn tracer(&self) -> Option<&Arc<Tracer>>;
+
+    /// Number of shards behind this backend (1 when unsharded).
+    fn shard_count(&self) -> usize;
+
+    /// Warmup state for the shard that would serve `payload`:
+    /// `(shard index, compute batches that shard has served)`.  The
+    /// per-shard counter lets the front end gate each replica's cache
+    /// warmth independently — a cold qvec must not ride a warm shard's
+    /// gate.
+    fn warm_shard(&self, payload: &[u8]) -> (usize, u64);
+
+    /// Precompute exploded maps for an encoder quality before traffic.
+    fn warm(&self, quality: u8);
+}
+
+impl ServeBackend for NativePipeline {
+    fn try_submit_request(
+        &self,
+        req: ServeRequest,
+    ) -> Result<Receiver<anyhow::Result<InferResponse>>, ServeError> {
+        NativePipeline::try_submit_request(self, req)
+    }
+
+    fn submit_with_sink(&self, req: ServeRequest, sink: ReplySink) -> Result<(), ServeError> {
+        NativePipeline::submit_with_sink(self, req, sink)
+    }
+
+    fn registry(&self) -> &Arc<Registry> {
+        NativePipeline::registry(self)
+    }
+
+    fn tracer(&self) -> Option<&Arc<Tracer>> {
+        NativePipeline::tracer(self)
+    }
+
+    fn shard_count(&self) -> usize {
+        1
+    }
+
+    fn warm_shard(&self, _payload: &[u8]) -> (usize, u64) {
+        (0, self.batches_served())
+    }
+
+    fn warm(&self, quality: u8) {
+        NativePipeline::warm(self, quality)
+    }
+}
+
+impl ServeBackend for ShardedCoordinator {
+    fn try_submit_request(
+        &self,
+        req: ServeRequest,
+    ) -> Result<Receiver<anyhow::Result<InferResponse>>, ServeError> {
+        ShardedCoordinator::try_submit_request(self, req)
+    }
+
+    fn submit_with_sink(&self, req: ServeRequest, sink: ReplySink) -> Result<(), ServeError> {
+        ShardedCoordinator::submit_with_sink(self, req, sink)
+    }
+
+    fn registry(&self) -> &Arc<Registry> {
+        ShardedCoordinator::registry(self)
+    }
+
+    fn tracer(&self) -> Option<&Arc<Tracer>> {
+        ShardedCoordinator::tracer(self)
+    }
+
+    fn shard_count(&self) -> usize {
+        ShardedCoordinator::shard_count(self)
+    }
+
+    fn warm_shard(&self, payload: &[u8]) -> (usize, u64) {
+        self.warm_state(payload)
+    }
+
+    fn warm(&self, quality: u8) {
+        ShardedCoordinator::warm(self, quality)
+    }
+}
 
 /// Which serving backend the `serve` CLI drives.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

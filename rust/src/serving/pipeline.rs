@@ -29,13 +29,14 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::server::InferResponse;
 use crate::jpeg::codec;
 use crate::jpeg_domain::plan::Tee;
-use crate::telemetry::{Registry, Tracer};
+use crate::telemetry::{Counter, Registry, Tracer};
 use crate::tensor::SparseBlocks;
 
 use super::engine::NativeEngine;
 use super::error::ServeError;
 use super::metrics::{OpRecorder, PipelineMetrics, QualityTag};
 use super::queue::{bounded_with_gauge, BoundedReceiver, BoundedSender, SendRejected};
+use super::shard::batcher::{shared_batcher, BatchReceiver, BatchSender};
 
 /// Pipeline sizing.  Capacities bound every queue in the system; worker
 /// counts size the two pools.
@@ -65,7 +66,68 @@ impl Default for PipelineConfig {
     }
 }
 
-type Reply = Sender<anyhow::Result<InferResponse>>;
+/// A completion sink: the reply-pump path of the socket front end.
+/// Instead of parking a waiter thread on a channel, the pipeline calls
+/// the closure from whichever worker finishes the request; the closure
+/// enqueues the encoded response onto the frontend's completion queue.
+///
+/// Delivery is guaranteed: a sink dropped unconsumed (a worker died
+/// mid-request) fires with [`ServeError::WorkerLost`], preserving the
+/// channel path's "receiver sees an error, never silence" contract.
+pub struct ReplySink(Option<Box<dyn FnOnce(anyhow::Result<InferResponse>) + Send>>);
+
+impl ReplySink {
+    pub fn new(f: impl FnOnce(anyhow::Result<InferResponse>) + Send + 'static) -> ReplySink {
+        ReplySink(Some(Box::new(f)))
+    }
+
+    fn deliver(mut self, result: anyhow::Result<InferResponse>) {
+        if let Some(f) = self.0.take() {
+            f(result);
+        }
+    }
+
+    /// Disarm without firing — for rejected submissions, where the
+    /// caller keeps responsibility for the reply.
+    fn defuse(&mut self) {
+        self.0.take();
+    }
+}
+
+impl Drop for ReplySink {
+    fn drop(&mut self) {
+        if let Some(f) = self.0.take() {
+            f(Err(anyhow::Error::new(ServeError::WorkerLost)));
+        }
+    }
+}
+
+/// How a finished request reaches its caller: the in-process channel
+/// (blocking `recv`) or a frontend completion sink.
+enum Reply {
+    Channel(Sender<anyhow::Result<InferResponse>>),
+    Sink(ReplySink),
+}
+
+impl Reply {
+    fn deliver(self, result: anyhow::Result<InferResponse>) {
+        match self {
+            // a gone receiver is fine: the caller abandoned the request
+            Reply::Channel(tx) => drop(tx.send(result)),
+            Reply::Sink(s) => s.deliver(result),
+        }
+    }
+
+    fn defuse(&mut self) {
+        if let Reply::Sink(s) = self {
+            s.defuse();
+        }
+    }
+}
+
+/// The decode→compute staging key: same quant table (bit patterns) +
+/// same block geometry ⇒ batchable into one forward.
+type BatchKey = ([u32; 64], (usize, usize, usize, usize));
 
 /// One admission request: raw JPEG bytes plus an optional absolute
 /// deadline.  A request whose deadline passes before its forward pass
@@ -148,6 +210,10 @@ pub struct NativePipeline {
     /// keep them visually distinct from typical wire ids).
     seq: AtomicU64,
     engine: Arc<NativeEngine>,
+    /// Batches served by THIS pipeline.  The registry aggregate is
+    /// shared across shard replicas, so per-shard warmup needs a
+    /// local counter (equal to the aggregate when unsharded).
+    local_batches: Arc<Counter>,
 }
 
 impl NativePipeline {
@@ -162,23 +228,80 @@ impl NativePipeline {
         cfg: PipelineConfig,
         tracer: Option<Arc<Tracer>>,
     ) -> NativePipeline {
+        Self::start_in(engine, cfg, tracer, Arc::new(Registry::new()), None)
+    }
+
+    /// Start as shard replica `shard` of a [`super::shard::ShardedCoordinator`]:
+    /// instruments register in the coordinator's shared `registry`
+    /// (aggregate families sum across replicas) and the queue-depth /
+    /// batch-size families carry a `shard` label.
+    pub fn start_sharded(
+        engine: NativeEngine,
+        cfg: PipelineConfig,
+        tracer: Option<Arc<Tracer>>,
+        registry: Arc<Registry>,
+        shard: usize,
+    ) -> NativePipeline {
+        Self::start_in(engine, cfg, tracer, registry, Some(shard))
+    }
+
+    fn start_in(
+        engine: NativeEngine,
+        cfg: PipelineConfig,
+        tracer: Option<Arc<Tracer>>,
+        registry: Arc<Registry>,
+        shard: Option<usize>,
+    ) -> NativePipeline {
         let engine = Arc::new(engine);
-        let registry = Arc::new(Registry::new());
         let metrics = Arc::new(PipelineMetrics::register(&registry));
         let aggregate = Arc::new(Metrics::register(&registry));
-        let admit_gauge = registry.gauge(
-            "jd_queue_depth",
-            "live items in a pipeline queue",
-            &[("queue", "admission")],
-        );
-        let decoded_gauge = registry.gauge(
-            "jd_queue_depth",
-            "live items in a pipeline queue",
-            &[("queue", "decoded")],
-        );
+        // unsharded pipelines keep the PR-7 `jd_queue_depth{queue=...}`
+        // families; shard replicas get per-shard families instead so
+        // one scrape shows every replica's backlog side by side
+        let (admit_gauge, staged_gauge, batch_hist) = match shard {
+            None => (
+                registry.gauge(
+                    "jd_queue_depth",
+                    "live items in a pipeline queue",
+                    &[("queue", "admission")],
+                ),
+                registry.gauge(
+                    "jd_queue_depth",
+                    "live items in a pipeline queue",
+                    &[("queue", "decoded")],
+                ),
+                None,
+            ),
+            Some(i) => {
+                let label = i.to_string();
+                (
+                    registry.gauge(
+                        "jd_shard_queue_depth",
+                        "live items in a shard replica's queue",
+                        &[("queue", "admission"), ("shard", label.as_str())],
+                    ),
+                    registry.gauge(
+                        "jd_shard_queue_depth",
+                        "live items in a shard replica's queue",
+                        &[("queue", "staged"), ("shard", label.as_str())],
+                    ),
+                    Some(registry.histogram(
+                        "jd_shard_batch_size",
+                        "images per compute micro-batch (size rides the µs axis)",
+                        &[("shard", label.as_str())],
+                    )),
+                )
+            }
+        };
         let (admit_tx, admit_rx) = bounded_with_gauge::<Job>(cfg.queue_capacity.max(1), admit_gauge);
-        let (dec_tx, dec_rx) =
-            bounded_with_gauge::<DecodedJob>(cfg.decoded_capacity.max(1), decoded_gauge);
+        // the shared cross-worker batcher: ALL decode workers stage
+        // into one keyed pool, each compute worker takes a coherent
+        // single-qvec batch — same-table requests coalesce process-wide
+        let (dec_tx, dec_rx) = shared_batcher::<BatchKey, DecodedJob>(
+            cfg.decoded_capacity.max(1),
+            staged_gauge,
+            batch_hist,
+        );
 
         let in_channels = engine.cfg.in_channels;
         let decode_handles: Vec<JoinHandle<()>> = (0..cfg.decode_workers.max(1))
@@ -195,6 +318,7 @@ impl NativePipeline {
         // and the compute pool drains out behind them
         drop(dec_tx);
 
+        let local_batches = Arc::new(Counter::new());
         let compute_handles: Vec<JoinHandle<()>> = (0..cfg.compute_workers.max(1))
             .map(|_| {
                 let rx = dec_rx.clone();
@@ -202,8 +326,9 @@ impl NativePipeline {
                 let m = metrics.clone();
                 let a = aggregate.clone();
                 let tr = tracer.clone();
+                let lb = local_batches.clone();
                 let max_batch = cfg.max_batch.max(1);
-                std::thread::spawn(move || compute_worker(rx, e, m, a, tr, max_batch))
+                std::thread::spawn(move || compute_worker(rx, e, m, a, tr, lb, max_batch))
             })
             .collect();
 
@@ -217,6 +342,7 @@ impl NativePipeline {
             tracer,
             seq: AtomicU64::new(1),
             engine,
+            local_batches,
         }
     }
 
@@ -246,6 +372,12 @@ impl NativePipeline {
         self.engine.warm(quality);
     }
 
+    /// Compute batches THIS pipeline has served (per-shard warmup
+    /// state; equals the aggregate `batches` counter when unsharded).
+    pub fn batches_served(&self) -> u64 {
+        self.local_batches.get()
+    }
+
     /// Admit one request, or reject immediately with a typed error when
     /// the admission queue is at capacity.
     pub fn try_submit(
@@ -263,10 +395,27 @@ impl NativePipeline {
         &self,
         req: ServeRequest,
     ) -> Result<Receiver<anyhow::Result<InferResponse>>, ServeError> {
+        let (tx, rx) = channel();
+        self.submit_reply(req, Reply::Channel(tx)).map(|()| rx)
+    }
+
+    /// Admit one request whose reply goes to a completion sink instead
+    /// of a channel — the reply-pump path of the socket front end.  On
+    /// rejection the sink is returned disarmed inside the `Err`: the
+    /// caller still owns the reply.
+    pub fn submit_with_sink(&self, req: ServeRequest, sink: ReplySink) -> Result<(), ServeError> {
+        self.submit_reply(req, Reply::Sink(sink))
+    }
+
+    fn submit_reply(&self, req: ServeRequest, mut reply: Reply) -> Result<(), ServeError> {
         let entered = Instant::now();
-        let admit = self.admit.as_ref().ok_or(ServeError::ShuttingDown)?;
+        let Some(admit) = self.admit.as_ref() else {
+            reply.defuse();
+            return Err(ServeError::ShuttingDown);
+        };
         if expired(req.deadline) {
             self.metrics.deadline_expired.inc();
+            reply.defuse();
             return Err(ServeError::DeadlineExceeded);
         }
         // sampling decision happens here, at admission
@@ -279,7 +428,6 @@ impl NativePipeline {
             // a determined collision is harmless
             0x8000_0000_0000_0000 | self.seq.fetch_add(1, Ordering::Relaxed)
         };
-        let (reply, rx) = channel();
         let job = Job {
             bytes: req.bytes,
             deadline: req.deadline,
@@ -297,13 +445,17 @@ impl NativePipeline {
                         t.span(request_id, "admission", entered, Instant::now());
                     }
                 }
-                Ok(rx)
+                Ok(())
             }
-            Err(SendRejected::Full(_)) => {
+            Err(SendRejected::Full(mut job)) => {
                 self.metrics.rejected.inc();
+                job.reply.defuse();
                 Err(ServeError::QueueFull { capacity: admit.capacity() })
             }
-            Err(SendRejected::Disconnected(_)) => Err(ServeError::ShuttingDown),
+            Err(SendRejected::Disconnected(mut job)) => {
+                job.reply.defuse();
+                Err(ServeError::ShuttingDown)
+            }
         }
     }
 
@@ -365,7 +517,7 @@ fn decode_one(bytes: &[u8], in_channels: usize) -> Result<(SparseBlocks, [f32; 6
 
 fn decode_worker(
     rx: Arc<BoundedReceiver<Job>>,
-    tx: BoundedSender<DecodedJob>,
+    tx: BatchSender<BatchKey, DecodedJob>,
     metrics: Arc<PipelineMetrics>,
     tracer: Option<Arc<Tracer>>,
     in_channels: usize,
@@ -379,7 +531,7 @@ fn decode_worker(
         // shed expired work before paying the entropy decode
         if expired(job.deadline) {
             metrics.deadline_expired.inc();
-            let _ = job.reply.send(Err(anyhow::Error::new(ServeError::DeadlineExceeded)));
+            job.reply.deliver(Err(anyhow::Error::new(ServeError::DeadlineExceeded)));
             continue;
         }
         match decode_one(&job.bytes, in_channels) {
@@ -393,6 +545,7 @@ fn decode_worker(
                     }
                 }
                 let (request_id, traced) = (job.request_id, job.traced);
+                let key = (qvec.map(f32::to_bits), f0.dims());
                 let dj = DecodedJob {
                     f0,
                     qvec,
@@ -405,11 +558,11 @@ fn decode_worker(
                     traced,
                     reply: job.reply,
                 };
-                match tx.send(dj) {
+                match tx.push(key, dj) {
                     Ok(()) => {
                         metrics.compute.note_depth(tx.depth());
-                        // the blocking send IS the handoff: when the
-                        // decoded queue is full this span shows the
+                        // the blocking push IS the handoff: when the
+                        // staging pool is full this span shows the
                         // backpressure stall
                         if traced {
                             if let Some(t) = &tracer {
@@ -419,59 +572,44 @@ fn decode_worker(
                     }
                     // compute pool is gone: fail the request, keep draining
                     Err(dj) => {
-                        let _ = dj
-                            .reply
-                            .send(Err(anyhow::Error::new(ServeError::ShuttingDown)));
+                        dj.reply.deliver(Err(anyhow::Error::new(ServeError::ShuttingDown)));
                     }
                 }
             }
             Err(e) => {
                 metrics.decode.errors.inc();
-                let _ = job.reply.send(Err(anyhow::Error::new(e)));
+                job.reply.deliver(Err(anyhow::Error::new(e)));
             }
         }
     }
 }
 
 fn compute_worker(
-    rx: Arc<BoundedReceiver<DecodedJob>>,
+    rx: Arc<BatchReceiver<BatchKey, DecodedJob>>,
     engine: Arc<NativeEngine>,
     metrics: Arc<PipelineMetrics>,
     aggregate: Arc<Metrics>,
     tracer: Option<Arc<Tracer>>,
+    local_batches: Arc<Counter>,
     max_batch: usize,
 ) {
-    loop {
-        let jobs = rx.recv_up_to(max_batch);
-        if jobs.is_empty() {
-            return; // disconnected and drained
-        }
+    // the staging pool already hands out coherent single-key batches
+    // (same quant table + block grid), coalesced across ALL decode
+    // workers — no per-worker regrouping left to do here
+    while let Some((_key, jobs)) = rx.next_batch(max_batch) {
         // last deadline gate: expired jobs never join a batch, so no
         // kernel time is spent on them
         let mut live = Vec::with_capacity(jobs.len());
         for job in jobs {
             if expired(job.deadline) {
                 metrics.deadline_expired.inc();
-                let _ = job.reply.send(Err(anyhow::Error::new(ServeError::DeadlineExceeded)));
+                job.reply.deliver(Err(anyhow::Error::new(ServeError::DeadlineExceeded)));
             } else {
                 live.push(job);
             }
         }
-        // group by (quant table, block grid): each group is one batched
-        // forward through the matching exploded maps
-        let mut groups: Vec<Vec<DecodedJob>> = Vec::new();
-        for job in live {
-            let key = (job.qvec.map(f32::to_bits), job.f0.dims());
-            match groups
-                .iter_mut()
-                .find(|g| (g[0].qvec.map(f32::to_bits), g[0].f0.dims()) == key)
-            {
-                Some(g) => g.push(job),
-                None => groups.push(vec![job]),
-            }
-        }
-        for group in groups {
-            serve_group(&engine, &metrics, &aggregate, &tracer, group);
+        if !live.is_empty() {
+            serve_group(&engine, &metrics, &aggregate, &tracer, &local_batches, live);
         }
     }
 }
@@ -481,6 +619,7 @@ fn serve_group(
     metrics: &PipelineMetrics,
     aggregate: &Metrics,
     tracer: &Option<Arc<Tracer>>,
+    local_batches: &Counter,
     group: Vec<DecodedJob>,
 ) {
     let t0 = Instant::now();
@@ -521,11 +660,13 @@ fn serve_group(
     metrics.compute.service.record(done.saturating_duration_since(t0));
     metrics.compute.processed.add(group.len() as u64);
     aggregate.record_batch(group.len());
+    local_batches.inc();
 
     let classes = logits.shape()[1];
     let preds = logits.argmax_last();
     for (i, job) in group.into_iter().enumerate() {
-        if job.traced {
+        let traced = job.traced;
+        if traced {
             if let Some(t) = tracer {
                 t.span(job.request_id, "compute", t0, done);
             }
@@ -534,11 +675,11 @@ fn serve_group(
         metrics.record_done(job.tag, latency);
         aggregate.request_latency.record(latency);
         let row = logits.data()[i * classes..(i + 1) * classes].to_vec();
-        let _ = job.reply.send(Ok(InferResponse {
+        job.reply.deliver(Ok(InferResponse {
             logits: row,
             predicted: preds[i],
             latency,
-            traced: job.traced,
+            traced,
         }));
     }
 }
@@ -680,6 +821,55 @@ mod tests {
             let v = crate::json::parse(line).expect("span lines are JSON");
             assert!(v.get("request_id").as_f64().unwrap() >= 0x8000_0000_0000_0000u64 as f64);
         }
+    }
+
+    #[test]
+    fn sink_submit_delivers_from_the_worker() {
+        let p = NativePipeline::start(
+            tiny_engine(NativeMode::SparseResident),
+            PipelineConfig::default(),
+        );
+        p.warm(75);
+        let (bytes, _) = files(1, 75).remove(0);
+        let (tx, rx) = channel();
+        let sink = ReplySink::new(move |r| drop(tx.send(r)));
+        p.submit_with_sink(ServeRequest::new(bytes), sink).unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.logits.len(), 4);
+        // bad bytes reach the sink as the typed decode error
+        let (tx, rx) = channel();
+        p.submit_with_sink(ServeRequest::new(vec![1, 2, 3]), ReplySink::new(move |r| drop(tx.send(r))))
+            .unwrap();
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(matches!(err.downcast_ref::<ServeError>(), Some(ServeError::Decode(_))));
+        p.shutdown();
+    }
+
+    #[test]
+    fn rejected_sink_is_defused_not_fired() {
+        let p = NativePipeline::start(tiny_engine(NativeMode::Sparse), PipelineConfig::default());
+        let (bytes, _) = files(1, 75).remove(0);
+        let (tx, rx) = channel::<anyhow::Result<InferResponse>>();
+        let sink = ReplySink::new(move |r| drop(tx.send(r)));
+        // a deadline of "now" is already expired by the time the
+        // admission check runs
+        let req = ServeRequest::new(bytes).with_deadline(Instant::now());
+        let err = p.submit_with_sink(req, sink).unwrap_err();
+        assert_eq!(err, ServeError::DeadlineExceeded);
+        // the sink must NOT fire (no WorkerLost ghost reply): the
+        // caller owns the rejection reply
+        assert!(rx.try_recv().is_err(), "defused sink must stay silent");
+        p.shutdown();
+    }
+
+    #[test]
+    fn dropped_sink_reports_worker_lost() {
+        // a sink dropped unconsumed fires WorkerLost — the guarantee
+        // that a dead worker can never strand a frontend completion
+        let (tx, rx) = channel::<anyhow::Result<InferResponse>>();
+        drop(ReplySink::new(move |r| drop(tx.send(r))));
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(matches!(err.downcast_ref::<ServeError>(), Some(ServeError::WorkerLost)));
     }
 
     #[test]

@@ -1,0 +1,324 @@
+//! The shared cross-worker batcher: one bounded staging pool between a
+//! replica's decode pool and its compute pool.
+//!
+//! Before this module every compute worker pulled its own slice of the
+//! decoded queue (`recv_up_to`) and grouped by quant table *within that
+//! slice* — two workers could each hold half of a same-qvec burst and
+//! run two small forwards where one large one was possible.  Here all
+//! decode workers stage into **one** keyed pool and each compute worker
+//! takes a coherent single-key batch, so same-qvec requests coalesce
+//! across every connection and every decode worker of the process.
+//!
+//! Semantics (mirroring [`crate::serving::queue`], which this replaces
+//! on the decode→compute edge):
+//!
+//! * `push` blocks while the pool is at capacity — the backpressure
+//!   edge that ultimately surfaces as admission `QueueFull`.
+//! * `next_batch(max)` blocks for the *first* item only, then takes up
+//!   to `max` already-staged items of one key: batching never adds
+//!   latency waiting for stragglers (the `max_wait = 0` policy the
+//!   PR-2 `DynamicBatcher` established).
+//! * Fairness is FIFO by arrival: the key containing the oldest staged
+//!   item is served first, so a hot quant table cannot starve a cold
+//!   one.
+//! * Disconnect matches channel semantics: `push` fails (returning the
+//!   item) once every receiver is gone; `next_batch` returns `None`
+//!   once every sender is gone *and* the pool is drained — shutdown
+//!   still serves everything that was admitted.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::telemetry::{Gauge, Histogram};
+
+struct Group<K, T> {
+    key: K,
+    /// (arrival seqno, item) — seqnos order groups for fairness.
+    items: VecDeque<(u64, T)>,
+}
+
+struct State<K, T> {
+    groups: Vec<Group<K, T>>,
+    len: usize,
+    next_seq: u64,
+    senders: usize,
+    receivers: usize,
+}
+
+struct Shared<K, T> {
+    state: Mutex<State<K, T>>,
+    /// Producers parked on a full pool.
+    space: Condvar,
+    /// Consumers parked on an empty pool.
+    items: Condvar,
+    capacity: usize,
+    depth: Arc<Gauge>,
+    /// Per-take batch sizes (`jd_shard_batch_size{shard=...}` when the
+    /// owning pipeline is a shard replica).
+    batch_size: Option<Arc<Histogram>>,
+}
+
+/// Producer half; `Clone` per decode worker.
+pub struct BatchSender<K, T> {
+    shared: Arc<Shared<K, T>>,
+}
+
+/// Consumer half; share via `Arc` per compute worker.
+pub struct BatchReceiver<K, T> {
+    shared: Arc<Shared<K, T>>,
+}
+
+/// Build a staging pool holding at most `capacity` items (clamped to
+/// ≥ 1).  `depth` tracks live staged items; `batch_size`, when given,
+/// records every batch this pool hands to a compute worker.
+pub fn shared_batcher<K: PartialEq + Clone, T>(
+    capacity: usize,
+    depth: Arc<Gauge>,
+    batch_size: Option<Arc<Histogram>>,
+) -> (BatchSender<K, T>, Arc<BatchReceiver<K, T>>) {
+    let shared = Arc::new(Shared {
+        state: Mutex::new(State {
+            groups: Vec::new(),
+            len: 0,
+            next_seq: 0,
+            senders: 1,
+            receivers: 1,
+        }),
+        space: Condvar::new(),
+        items: Condvar::new(),
+        capacity: capacity.max(1),
+        depth,
+        batch_size,
+    });
+    (
+        BatchSender { shared: shared.clone() },
+        Arc::new(BatchReceiver { shared }),
+    )
+}
+
+impl<K: PartialEq + Clone, T> BatchSender<K, T> {
+    /// Stage one item under `key`, blocking while the pool is full.
+    /// Fails (returning the item) only when every receiver is gone.
+    pub fn push(&self, key: K, item: T) -> Result<(), T> {
+        let mut st = self.shared.state.lock().unwrap();
+        while st.len >= self.shared.capacity {
+            if st.receivers == 0 {
+                return Err(item);
+            }
+            st = self.shared.space.wait(st).unwrap();
+        }
+        if st.receivers == 0 {
+            return Err(item);
+        }
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        match st.groups.iter_mut().find(|g| g.key == key) {
+            Some(g) => g.items.push_back((seq, item)),
+            None => st.groups.push(Group {
+                key,
+                items: VecDeque::from([(seq, item)]),
+            }),
+        }
+        st.len += 1;
+        self.shared.depth.add(1);
+        drop(st);
+        self.shared.items.notify_one();
+        Ok(())
+    }
+
+    /// Live staged items (approximate outside the lock).
+    pub fn depth(&self) -> usize {
+        self.shared.state.lock().unwrap().len
+    }
+}
+
+impl<K, T> Clone for BatchSender<K, T> {
+    fn clone(&self) -> Self {
+        self.shared.state.lock().unwrap().senders += 1;
+        BatchSender { shared: self.shared.clone() }
+    }
+}
+
+impl<K, T> Drop for BatchSender<K, T> {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.senders -= 1;
+        if st.senders == 0 {
+            drop(st);
+            // wake parked consumers so they can observe disconnect
+            self.shared.items.notify_all();
+        }
+    }
+}
+
+impl<K: PartialEq + Clone, T> BatchReceiver<K, T> {
+    /// Take one coherent batch: up to `max` staged items sharing one
+    /// key, the group holding the oldest item first.  Blocks only for
+    /// the first item; returns `None` when all senders are gone and
+    /// the pool is drained.
+    pub fn next_batch(&self, max: usize) -> Option<(K, Vec<T>)> {
+        let max = max.max(1);
+        let mut st = self.shared.state.lock().unwrap();
+        while st.len == 0 {
+            if st.senders == 0 {
+                return None;
+            }
+            st = self.shared.items.wait(st).unwrap();
+        }
+        // fairness: serve the group whose head arrived first
+        let gi = st
+            .groups
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, g)| g.items.front().map(|(s, _)| *s).unwrap_or(u64::MAX))
+            .map(|(i, _)| i)
+            .expect("len > 0 implies a nonempty group");
+        let take = st.groups[gi].items.len().min(max);
+        let key = st.groups[gi].key.clone();
+        let mut out = Vec::with_capacity(take);
+        for _ in 0..take {
+            let (_, item) = st.groups[gi].items.pop_front().expect("counted above");
+            out.push(item);
+        }
+        if st.groups[gi].items.is_empty() {
+            // leftover items (a burst bigger than max) stay staged for
+            // the next taker; an emptied group is removed
+            st.groups.swap_remove(gi);
+        }
+        st.len -= take;
+        self.shared.depth.sub(take as u64);
+        if let Some(h) = &self.shared.batch_size {
+            // the histogram's µs axis carries images-per-batch: a
+            // 3-image batch records as 3µs, so `quantile_us` reads
+            // directly as a batch-size quantile
+            h.record(Duration::from_micros(take as u64));
+        }
+        drop(st);
+        self.shared.space.notify_all();
+        Some((key, out))
+    }
+
+    /// Live staged items.
+    pub fn depth(&self) -> usize {
+        self.shared.state.lock().unwrap().len
+    }
+}
+
+impl<K, T> Drop for BatchReceiver<K, T> {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.receivers -= 1;
+        if st.receivers == 0 {
+            drop(st);
+            // wake blocked producers so push can fail over to replies
+            self.shared.space.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(cap: usize) -> (BatchSender<u32, u64>, Arc<BatchReceiver<u32, u64>>) {
+        shared_batcher(cap, Arc::new(Gauge::new()), None)
+    }
+
+    #[test]
+    fn same_key_items_coalesce_into_one_batch() {
+        let (tx, rx) = pool(16);
+        for i in 0..5u64 {
+            tx.push(7, i).unwrap();
+        }
+        let (key, batch) = rx.next_batch(8).unwrap();
+        assert_eq!(key, 7);
+        assert_eq!(batch, vec![0, 1, 2, 3, 4]);
+        assert_eq!(rx.depth(), 0);
+    }
+
+    #[test]
+    fn batches_never_mix_keys_and_max_is_honored() {
+        let (tx, rx) = pool(16);
+        for i in 0..4u64 {
+            tx.push(1, i).unwrap();
+        }
+        for i in 10..12u64 {
+            tx.push(2, i).unwrap();
+        }
+        let (k1, b1) = rx.next_batch(3).unwrap();
+        assert_eq!((k1, b1), (1, vec![0, 1, 2]), "max caps the take");
+        let (k2, b2) = rx.next_batch(3).unwrap();
+        assert_eq!((k2, b2), (1, vec![3]), "leftover of the oldest group goes first");
+        let (k3, b3) = rx.next_batch(3).unwrap();
+        assert_eq!((k3, b3), (2, vec![10, 11]));
+    }
+
+    #[test]
+    fn fairness_serves_the_oldest_head_first() {
+        let (tx, rx) = pool(16);
+        tx.push(5, 100).unwrap(); // oldest
+        tx.push(9, 200).unwrap();
+        tx.push(5, 101).unwrap();
+        let (k, b) = rx.next_batch(8).unwrap();
+        assert_eq!((k, b), (5, vec![100, 101]));
+        let (k, b) = rx.next_batch(8).unwrap();
+        assert_eq!((k, b), (9, vec![200]));
+    }
+
+    #[test]
+    fn push_blocks_at_capacity_until_a_batch_is_taken() {
+        let (tx, rx) = pool(2);
+        tx.push(1, 0).unwrap();
+        tx.push(1, 1).unwrap();
+        let t = {
+            let tx = tx.clone();
+            std::thread::spawn(move || tx.push(1, 2).unwrap())
+        };
+        // the producer is parked; taking a batch frees space
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(!t.is_finished(), "push must block at capacity");
+        let (_, b) = rx.next_batch(8).unwrap();
+        assert_eq!(b, vec![0, 1]);
+        t.join().unwrap();
+        let (_, b) = rx.next_batch(8).unwrap();
+        assert_eq!(b, vec![2]);
+    }
+
+    #[test]
+    fn disconnect_drains_then_ends() {
+        let (tx, rx) = pool(8);
+        tx.push(3, 30).unwrap();
+        tx.push(4, 40).unwrap();
+        drop(tx);
+        // staged work still comes out after the last sender is gone
+        assert_eq!(rx.next_batch(8).unwrap().1, vec![30]);
+        assert_eq!(rx.next_batch(8).unwrap().1, vec![40]);
+        assert!(rx.next_batch(8).is_none(), "drained + disconnected ends the pool");
+    }
+
+    #[test]
+    fn push_fails_once_receivers_are_gone() {
+        let (tx, rx) = pool(8);
+        drop(rx);
+        assert_eq!(tx.push(1, 9), Err(9));
+    }
+
+    #[test]
+    fn depth_gauge_and_batch_histogram_track_takes() {
+        let depth = Arc::new(Gauge::new());
+        let hist = Arc::new(Histogram::new());
+        let (tx, rx) =
+            shared_batcher::<u32, u64>(8, depth.clone(), Some(hist.clone()));
+        for i in 0..3 {
+            tx.push(1, i).unwrap();
+        }
+        assert_eq!(depth.get(), 3);
+        let (_, b) = rx.next_batch(8).unwrap();
+        assert_eq!(b.len(), 3);
+        assert_eq!(depth.get(), 0);
+        assert_eq!(hist.count(), 1);
+        assert_eq!(hist.sum_us(), 3, "batch size rides the µs axis");
+    }
+}
+

@@ -1,0 +1,375 @@
+//! The sharded coordinator: N pipeline replicas behind consistent
+//! hashing on the quant-table vector.
+//!
+//! Every request is routed by [`peek_qvec`] — a headers-only walk of
+//! the JPEG marker stream that extracts the quant table **without
+//! entropy-decoding anything** — through the [`HashRing`] to the one
+//! replica that owns that table.  Ownership is what fixes the PR-5
+//! global warmup gate: warmth is per shard, so an unwarmed quant
+//! table only gates (and only pays its exploded-map precompute on)
+//! the replica that will actually serve it, while traffic for warmed
+//! tables flows untouched on the other replicas.
+//!
+//! All replicas register their instruments in **one** shared
+//! [`Registry`] (registration is idempotent per name+labels, so
+//! aggregate families like `jd_request_e2e_us` sum across shards),
+//! plus per-shard families the replicas label themselves:
+//! `jd_shard_queue_depth{shard,queue}` and
+//! `jd_shard_batch_size{shard}`.
+//!
+//! Replica engines share one `Arc<ParamSet>` ([`NativeEngine::replica`])
+//! but keep **per-replica** exploded-map caches — the cache key is
+//! effectively (replica, qvec), and consistent hashing guarantees a
+//! given qvec only ever populates one replica's cache.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::server::InferResponse;
+use crate::jpeg::QuantTable;
+use crate::telemetry::{Registry, Tracer};
+
+use super::super::engine::NativeEngine;
+use super::super::error::ServeError;
+use super::super::pipeline::{NativePipeline, PipelineConfig, ReplySink, ServeRequest};
+use super::ring::HashRing;
+
+/// Headers-only quant-table peek: walk the marker stream from SOI to
+/// SOS collecting 8-bit DQT tables and the table id component 0
+/// declares in its SOF, and return that table as the same `[f32; 64]`
+/// (zigzag order, f32 bit-for-bit) the pipeline derives after a full
+/// decode — so routing on the peek and batching on the decode can
+/// never disagree.  Any malformed, truncated, or unsupported header
+/// yields `None`; the caller routes those to shard 0, where the full
+/// decoder produces the typed `Decode` error.
+pub fn peek_qvec(bytes: &[u8]) -> Option<[f32; 64]> {
+    if bytes.len() < 4 || bytes[0] != 0xFF || bytes[1] != 0xD8 {
+        return None;
+    }
+    let mut tables: [Option<[u8; 64]>; 4] = [None; 4];
+    let mut sof_tq: Option<u8> = None;
+    let mut i = 2usize;
+    loop {
+        // markers are 0xFF + code; 0xFF may repeat as fill
+        if i >= bytes.len() || bytes[i] != 0xFF {
+            return None;
+        }
+        let mut j = i + 1;
+        while j < bytes.len() && bytes[j] == 0xFF {
+            j += 1;
+        }
+        let marker = *bytes.get(j)?;
+        i = j + 1;
+        match marker {
+            // standalone markers carry no length field
+            0x01 | 0xD0..=0xD7 => continue,
+            // EOI (or stuffed 0x00) before any scan: not a servable file
+            0x00 | 0xD9 => return None,
+            // SOS ends the header section
+            0xDA => break,
+            _ => {
+                if i + 2 > bytes.len() {
+                    return None;
+                }
+                let len = u16::from_be_bytes([bytes[i], bytes[i + 1]]) as usize;
+                if len < 2 || i + len > bytes.len() {
+                    return None;
+                }
+                let seg = &bytes[i + 2..i + len];
+                match marker {
+                    // DQT: one or more (precision/id, values) tables
+                    0xDB => {
+                        let mut o = 0usize;
+                        while o < seg.len() {
+                            let (pq, tq) = (seg[o] >> 4, (seg[o] & 0x0F) as usize);
+                            o += 1;
+                            if pq == 0 {
+                                if o + 64 > seg.len() {
+                                    return None;
+                                }
+                                let mut t = [0u8; 64];
+                                t.copy_from_slice(&seg[o..o + 64]);
+                                if tq < tables.len() {
+                                    tables[tq] = Some(t);
+                                }
+                                o += 64;
+                            } else {
+                                // 16-bit tables: the decoder rejects
+                                // them anyway; skip so a later 8-bit
+                                // table in the same segment still lands
+                                o += 128;
+                            }
+                        }
+                    }
+                    // any SOFn frame header (C4/C8/CC are DHT/JPG/DAC):
+                    // component 0's quant-table id sits at byte 8
+                    0xC0..=0xCF if !matches!(marker, 0xC4 | 0xC8 | 0xCC) => {
+                        if seg.len() >= 9 {
+                            sof_tq = Some(seg[8]);
+                        }
+                    }
+                    _ => {}
+                }
+                i += len;
+            }
+        }
+    }
+    let tq = sof_tq.unwrap_or(0) as usize;
+    let t = tables
+        .get(tq)
+        .copied()
+        .flatten()
+        .or_else(|| tables.iter().copied().flatten().next())?;
+    Some(t.map(|v| v as f32))
+}
+
+/// N running pipeline replicas behind a consistent-hash ring.
+pub struct ShardedCoordinator {
+    replicas: Vec<Arc<NativePipeline>>,
+    ring: HashRing,
+    registry: Arc<Registry>,
+    tracer: Option<Arc<Tracer>>,
+    /// Coordinator-compatible aggregate — shared instruments across all
+    /// replicas (same registry, same names), so it sums the fleet.
+    aggregate: Arc<Metrics>,
+    /// Shards that own at least one *declared* (explicitly warmed)
+    /// quant table.  Only these gate on warmup: a shard nobody warmed
+    /// has no startup cliff to shield — its first undeclared table
+    /// pays precompute in-request exactly as before.
+    warm_targets: Vec<AtomicBool>,
+}
+
+impl ShardedCoordinator {
+    pub fn start(engine: NativeEngine, shards: usize, cfg: PipelineConfig) -> ShardedCoordinator {
+        Self::start_traced(engine, shards, cfg, None)
+    }
+
+    /// Start `shards` replicas of `engine` (each a [`NativeEngine::replica`]
+    /// sharing parameters, owning its cache) in one shared registry.
+    pub fn start_traced(
+        engine: NativeEngine,
+        shards: usize,
+        cfg: PipelineConfig,
+        tracer: Option<Arc<Tracer>>,
+    ) -> ShardedCoordinator {
+        let shards = shards.max(1);
+        let registry = Arc::new(Registry::new());
+        let replicas: Vec<Arc<NativePipeline>> = (0..shards)
+            .map(|i| {
+                Arc::new(NativePipeline::start_sharded(
+                    engine.replica(),
+                    cfg,
+                    tracer.clone(),
+                    registry.clone(),
+                    i,
+                ))
+            })
+            .collect();
+        let aggregate = replicas[0].aggregate().clone();
+        ShardedCoordinator {
+            replicas,
+            ring: HashRing::new(shards),
+            registry,
+            tracer,
+            aggregate,
+            warm_targets: (0..shards).map(|_| AtomicBool::new(false)).collect(),
+        }
+    }
+
+    /// Number of replicas.
+    pub fn shard_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// The shared registry (scrape source for the whole fleet).
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// The span tracer, when one is attached.
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.tracer.as_ref()
+    }
+
+    /// Fleet-wide aggregate metrics (sums across replicas).
+    pub fn aggregate(&self) -> &Arc<Metrics> {
+        &self.aggregate
+    }
+
+    /// The replica that owns a quant-table vector.
+    pub fn shard_for(&self, qvec: &[f32; 64]) -> usize {
+        self.ring.shard_for(qvec)
+    }
+
+    /// The replica a raw request payload routes to (peek failure →
+    /// shard 0, whose decoder will produce the typed error).
+    pub fn shard_for_payload(&self, bytes: &[u8]) -> usize {
+        peek_qvec(bytes).map_or(0, |qv| self.ring.shard_for(&qv))
+    }
+
+    /// Direct access to a replica (tests, warm drivers).
+    pub fn replica(&self, shard: usize) -> &Arc<NativePipeline> {
+        &self.replicas[shard]
+    }
+
+    /// Precompute exploded maps for an encoder quality — **only** on
+    /// the replica that owns the table — and mark that shard as
+    /// warmup-gated.
+    pub fn warm(&self, quality: u8) {
+        let qv = QuantTable::luma(quality).as_f32();
+        let s = self.ring.shard_for(&qv);
+        self.warm_targets[s].store(true, Ordering::Relaxed);
+        self.replicas[s].warm(quality);
+    }
+
+    /// Warmup view for a payload: `(owning shard, batches that shard
+    /// has served)`.  Shards that own no declared table report
+    /// `u64::MAX` batches — effectively warm — so a cold qvec is never
+    /// answered `WarmingUp` by a shard with no warmup in progress.
+    pub fn warm_state(&self, payload: &[u8]) -> (usize, u64) {
+        let s = self.shard_for_payload(payload);
+        if self.warm_targets[s].load(Ordering::Relaxed) {
+            (s, self.replicas[s].batches_served())
+        } else {
+            (s, u64::MAX)
+        }
+    }
+
+    /// Route and admit one request on its owning replica.
+    pub fn try_submit_request(
+        &self,
+        req: ServeRequest,
+    ) -> Result<Receiver<anyhow::Result<InferResponse>>, ServeError> {
+        let s = self.shard_for_payload(&req.bytes);
+        self.replicas[s].try_submit_request(req)
+    }
+
+    /// Route and admit with a completion sink instead of a channel.
+    pub fn submit_with_sink(&self, req: ServeRequest, sink: ReplySink) -> Result<(), ServeError> {
+        let s = self.shard_for_payload(&req.bytes);
+        self.replicas[s].submit_with_sink(req, sink)
+    }
+
+    /// Blocking convenience: route, submit, wait.
+    pub fn infer(&self, bytes: Vec<u8>) -> anyhow::Result<InferResponse> {
+        self.try_submit_request(ServeRequest::new(bytes))?
+            .recv()
+            .map_err(|_| anyhow::Error::new(ServeError::WorkerLost))?
+    }
+
+    /// Graceful drain: shut every replica down (each stops admitting,
+    /// serves everything queued, joins its workers).
+    pub fn shutdown(mut self) {
+        for p in self.replicas.drain(..) {
+            match Arc::try_unwrap(p) {
+                Ok(p) => p.shutdown(),
+                // someone still holds the replica; its Drop drains it
+                Err(p) => drop(p),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Dataset, Split, SynthKind};
+    use crate::jpeg::codec;
+    use crate::jpeg_domain::relu::Method;
+    use crate::params::{ModelConfig, ParamSet};
+    use crate::serving::engine::NativeMode;
+
+    fn tiny_engine() -> NativeEngine {
+        let cfg = ModelConfig {
+            name: "tiny".into(),
+            in_channels: 1,
+            num_classes: 4,
+            widths: [2, 2, 2],
+            image_size: 32,
+        };
+        let params = ParamSet::init(&cfg, 3);
+        NativeEngine::new(cfg, params, 15, Method::Asm, 1, NativeMode::SparseResident)
+    }
+
+    fn files(n: usize, quality: u8) -> Vec<Vec<u8>> {
+        Dataset::synthetic(SynthKind::Mnist, 2, n, 11)
+            .jpeg_bytes(Split::Test, quality)
+            .into_iter()
+            .map(|(b, _)| b)
+            .collect()
+    }
+
+    #[test]
+    fn peek_matches_full_decode_qvec() {
+        for q in [50u8, 75, 90] {
+            for bytes in files(2, q) {
+                let peeked = peek_qvec(&bytes).expect("valid encode peeks");
+                let ci = codec::decode_to_coefficients(&bytes).unwrap();
+                assert_eq!(
+                    peeked.map(f32::to_bits),
+                    ci.qvec(0).map(f32::to_bits),
+                    "q{q}: peek must agree bit-for-bit with the decoded qvec"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn peek_rejects_garbage_and_truncation() {
+        assert_eq!(peek_qvec(&[]), None);
+        assert_eq!(peek_qvec(&[0xFF, 0xD8]), None);
+        assert_eq!(peek_qvec(&[9, 9, 9, 9]), None);
+        let good = files(1, 75).remove(0);
+        // cutting the stream anywhere inside the headers must not panic
+        for cut in (2..good.len().min(200)).step_by(7) {
+            let _ = peek_qvec(&good[..cut]);
+        }
+        // headers end before SOS: no table is better than a wrong one
+        assert_eq!(peek_qvec(&good[..4]), None);
+    }
+
+    #[test]
+    fn sharded_serving_roundtrip_and_single_owner_cache() {
+        let coord = ShardedCoordinator::start(tiny_engine(), 2, PipelineConfig::default());
+        for q in [50u8, 75, 90] {
+            coord.warm(q);
+            for bytes in files(2, q) {
+                let resp = coord.infer(bytes).unwrap();
+                assert_eq!(resp.logits.len(), 4);
+            }
+        }
+        // each quality's exploded maps live on exactly one replica
+        let total: usize = (0..coord.shard_count())
+            .map(|s| coord.replica(s).engine().cached_maps())
+            .sum();
+        assert_eq!(total, 3, "3 qualities -> 3 cache entries fleet-wide, no duplication");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn warm_state_gates_only_targeted_shards() {
+        let coord = ShardedCoordinator::start(tiny_engine(), 2, PipelineConfig::default());
+        let sample = files(1, 75).remove(0);
+        let owner = coord.shard_for_payload(&sample);
+        // nothing declared yet: every shard reports effectively warm
+        assert_eq!(coord.warm_state(&sample), (owner, u64::MAX));
+        coord.warm(75);
+        // now the owner gates on its real (zero) batch count...
+        assert_eq!(coord.warm_state(&sample), (owner, 0));
+        // ...and serving one batch moves the count
+        coord.infer(files(1, 75).remove(0)).unwrap();
+        assert_eq!(coord.warm_state(&sample), (owner, 1));
+        // a quality owned by the OTHER shard (if any differs) is unaffected
+        for q in 1..=99u8 {
+            let qv = QuantTable::luma(q).as_f32();
+            if coord.shard_for(&qv) != owner {
+                let other = files(1, q).remove(0);
+                assert_eq!(coord.warm_state(&other).1, u64::MAX, "q{q} shard never targeted");
+                break;
+            }
+        }
+        coord.shutdown();
+    }
+}

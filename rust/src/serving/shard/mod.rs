@@ -1,0 +1,27 @@
+//! Scale-out serving: pipeline replicas behind consistent hashing.
+//!
+//! Three pieces, composed by [`ShardedCoordinator`]:
+//!
+//! * [`ring`] — a deterministic consistent-hash ring (FNV-1a, virtual
+//!   nodes) mapping quant-table vectors to shards, with the minimal-
+//!   rebalance property pinned by tests.
+//! * [`batcher`] — the shared cross-worker staging pool every replica
+//!   now batches through: all decode workers stage into one keyed
+//!   pool, each compute worker takes a coherent single-qvec batch.
+//! * [`coordinator`] — [`peek_qvec`] (headers-only quant-table
+//!   extraction for routing) and the replica fleet itself, one shared
+//!   telemetry registry across shards.
+//!
+//! The front end serves any [`crate::serving::ServeBackend`]: a single
+//! [`crate::serving::NativePipeline`] (`--shards 1`, the default) or a
+//! coordinator (`--shards N`).  Logits are bit-identical either way —
+//! sharding changes *where* a request computes, never *what* it
+//! computes, because batches still form per quant table.
+
+pub mod batcher;
+pub mod coordinator;
+pub mod ring;
+
+pub use batcher::{shared_batcher, BatchReceiver, BatchSender};
+pub use coordinator::{peek_qvec, ShardedCoordinator};
+pub use ring::HashRing;

@@ -1,0 +1,169 @@
+//! Consistent hashing over quant-table vectors.
+//!
+//! The sharded coordinator routes every request to one of N pipeline
+//! replicas by its quantization vector, so all traffic for a given
+//! quant table lands on the replica whose `ExplodedModel` cache (and
+//! warmup state) owns that table.  The ring uses classic virtual nodes:
+//! each shard owns [`VNODES`] points on a `u64` circle, a key maps to
+//! the first point clockwise from its hash.
+//!
+//! Two properties the rest of the subsystem leans on, both pinned by
+//! tests here:
+//!
+//! * **Stability** — the same qvec always maps to the same shard for a
+//!   fixed shard count (routing is a pure function of the ring).
+//! * **Minimal rebalance** — growing from N to N+1 shards only moves
+//!   keys *onto* the new shard: a key that changes owner under the
+//!   bigger ring is always claimed by shard N, never shuffled between
+//!   surviving shards.  This holds because a shard's vnode positions
+//!   are hashes of `(shard, vnode)` only — adding a shard adds points
+//!   without moving any existing ones.
+
+/// Virtual nodes per shard.  Enough to spread ownership at small shard
+/// counts (2–16 replicas, the realistic range for one process) without
+/// making ring construction or the binary search measurable.
+const VNODES: usize = 40;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over raw bytes — deterministic across platforms and runs
+/// (routing must never depend on `RandomState`-style per-process
+/// seeding: two processes serving the same fleet must agree).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// A fixed-size consistent-hash ring: sorted `(point, shard)` pairs on
+/// the `u64` circle.
+pub struct HashRing {
+    shards: usize,
+    points: Vec<(u64, usize)>,
+}
+
+impl HashRing {
+    /// Build the ring for `shards` replicas (0 is treated as 1).
+    pub fn new(shards: usize) -> HashRing {
+        let shards = shards.max(1);
+        let mut points = Vec::with_capacity(shards * VNODES);
+        for s in 0..shards {
+            for v in 0..VNODES {
+                let mut key = [0u8; 16];
+                key[..8].copy_from_slice(&(s as u64).to_le_bytes());
+                key[8..].copy_from_slice(&(v as u64).to_le_bytes());
+                points.push((fnv1a(&key), s));
+            }
+        }
+        // sorting by (point, shard) makes collisions (astronomically
+        // unlikely at 64 bits) resolve deterministically toward the
+        // lower shard index on every build
+        points.sort_unstable();
+        HashRing { shards, points }
+    }
+
+    /// Number of shards this ring routes across.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Hash a quantization vector to its position on the circle.  Keyed
+    /// on the f32 *bit patterns* — the same identity the pipeline's
+    /// micro-batcher and the engine's `ExplodedModel` cache use — so
+    /// "same shard" and "same cache entry" can never disagree.
+    pub fn route_key(qvec: &[f32; 64]) -> u64 {
+        let mut bytes = [0u8; 256];
+        for (i, v) in qvec.iter().enumerate() {
+            bytes[i * 4..i * 4 + 4].copy_from_slice(&v.to_bits().to_le_bytes());
+        }
+        fnv1a(&bytes)
+    }
+
+    /// The shard owning a raw ring position: first vnode clockwise.
+    pub fn shard_for_key(&self, key: u64) -> usize {
+        let i = self.points.partition_point(|p| p.0 < key);
+        self.points[i % self.points.len()].1
+    }
+
+    /// The shard owning a quantization vector.
+    pub fn shard_for(&self, qvec: &[f32; 64]) -> usize {
+        self.shard_for_key(Self::route_key(qvec))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jpeg::QuantTable;
+
+    fn qvecs() -> Vec<[f32; 64]> {
+        (1..=99).map(|q| QuantTable::luma(q).as_f32()).collect()
+    }
+
+    #[test]
+    fn routing_is_stable_and_deterministic() {
+        let a = HashRing::new(4);
+        let b = HashRing::new(4);
+        for qv in qvecs() {
+            let s = a.shard_for(&qv);
+            assert!(s < 4);
+            assert_eq!(s, a.shard_for(&qv), "same ring, same answer");
+            assert_eq!(s, b.shard_for(&qv), "fresh identical ring agrees");
+        }
+    }
+
+    #[test]
+    fn single_shard_takes_everything() {
+        let ring = HashRing::new(1);
+        for qv in qvecs() {
+            assert_eq!(ring.shard_for(&qv), 0);
+        }
+        // shards = 0 is clamped, not a panic
+        assert_eq!(HashRing::new(0).shards(), 1);
+    }
+
+    #[test]
+    fn growth_rebalances_minimally() {
+        // going N -> N+1 may only move keys onto the NEW shard; any
+        // key that keeps an old owner keeps the same old owner
+        for n in 1..8usize {
+            let small = HashRing::new(n);
+            let big = HashRing::new(n + 1);
+            let mut moved = 0usize;
+            for qv in qvecs() {
+                let (a, b) = (small.shard_for(&qv), big.shard_for(&qv));
+                if a != b {
+                    assert_eq!(b, n, "a rebalanced key must land on the new shard");
+                    moved += 1;
+                }
+            }
+            // and growth must not move everything (the point of
+            // consistent hashing over `hash % n`)
+            assert!(moved < qvecs().len(), "n={n}: every key moved");
+        }
+    }
+
+    #[test]
+    fn all_shards_get_traffic_at_small_counts() {
+        // 99 standard luma tables over 2..=4 shards: every shard owns
+        // at least one — vnode spreading is doing its job
+        for n in 2..=4usize {
+            let ring = HashRing::new(n);
+            let mut seen = vec![false; n];
+            for qv in qvecs() {
+                seen[ring.shard_for(&qv)] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "n={n}: a shard owns no standard table");
+        }
+    }
+
+    #[test]
+    fn distinct_qvecs_hash_apart() {
+        let (a, b) = (QuantTable::luma(50).as_f32(), QuantTable::luma(90).as_f32());
+        assert_ne!(HashRing::route_key(&a), HashRing::route_key(&b));
+    }
+}

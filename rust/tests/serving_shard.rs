@@ -1,0 +1,354 @@
+//! Wire-level tests for the sharded coordinator: the paper's
+//! bit-identity claim pinned across BOTH a network boundary and the
+//! consistent-hash routing layer, plus the per-shard slow-start gate,
+//! graceful overload shedding, and per-connection rate limiting.
+//! Everything runs on loopback with ephemeral ports.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+use std::time::Duration;
+
+use jpegdomain::coordinator::server::Server;
+use jpegdomain::data::{Dataset, Split, SynthKind};
+use jpegdomain::jpeg::codec;
+use jpegdomain::jpeg::QuantTable;
+use jpegdomain::jpeg_domain::network::{ExplodedModel, RESNET_PLAN};
+use jpegdomain::jpeg_domain::plan::{Act, PlanCtx, SparseResident};
+use jpegdomain::jpeg_domain::relu::Method;
+use jpegdomain::params::{ModelConfig, ParamSet};
+use jpegdomain::serving::frontend::{Client, FrontendConfig, Reply, SocketFrontend, WireCode};
+use jpegdomain::serving::shard::ShardedCoordinator;
+use jpegdomain::serving::{NativeEngine, NativeMode, PipelineConfig};
+use jpegdomain::telemetry::Scrape;
+use jpegdomain::tensor::SparseBlocks;
+
+/// Same deliberately tiny model as `serving_socket.rs`.
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "tiny".into(),
+        in_channels: 1,
+        num_classes: 4,
+        widths: [2, 2, 2],
+        image_size: 32,
+    }
+}
+
+fn engine(params: &ParamSet, mode: NativeMode) -> NativeEngine {
+    NativeEngine::new(tiny_cfg(), params.clone(), 15, Method::Asm, 1, mode)
+}
+
+fn files(n: usize, quality: u8) -> Vec<(Vec<u8>, u32)> {
+    Dataset::synthetic(SynthKind::Mnist, 2, n, 29).jpeg_bytes(Split::Test, quality)
+}
+
+/// In-process oracle: `Plan::run` under the `SparseResident` executor
+/// on the same decoded bytes — the logits any shard must reproduce bit
+/// for bit, no matter which replica the ring picked.
+fn expected_logits(params: &ParamSet, bytes: &[u8]) -> Vec<f32> {
+    let ci = codec::decode_to_coefficients(bytes).unwrap();
+    let qvec = ci.qvec(0);
+    let f0 = SparseBlocks::from_coeff_images(std::slice::from_ref(&ci));
+    let em = ExplodedModel::precompute(params, &qvec);
+    let ctx = PlanCtx {
+        params,
+        exploded: Some(&em),
+        qvec: &qvec,
+        num_freqs: 15,
+        method: Method::Asm,
+    };
+    RESNET_PLAN
+        .run(&SparseResident::new(1, 0.0), &ctx, &Act::Sparse(f0), None)
+        .data()
+        .to_vec()
+}
+
+#[test]
+fn sharded_socket_logits_bit_identical_across_shards_and_connections() {
+    let params = ParamSet::init(&tiny_cfg(), 3);
+    let server = Server::start_sharded(
+        engine(&params, NativeMode::SparseResident),
+        2,
+        PipelineConfig {
+            decode_workers: 2,
+            compute_workers: 2,
+            max_batch: 4,
+            ..PipelineConfig::default()
+        },
+        None,
+    );
+    let frontend = server
+        .listen(FrontendConfig {
+            listen_addr: "127.0.0.1:0".into(),
+            warmup_batches: 0,
+            max_inflight: 64,
+            ..FrontendConfig::default()
+        })
+        .expect("bind ephemeral loopback port");
+    let addr = frontend.local_addr();
+
+    // q50/75/90 traffic with per-file in-process oracle logits
+    let work: Vec<(Vec<u8>, Vec<f32>)> = [50u8, 75, 90]
+        .iter()
+        .flat_map(|&q| files(2, q))
+        .map(|(bytes, _)| {
+            let want = expected_logits(&params, &bytes);
+            (bytes, want)
+        })
+        .collect();
+    let work = Arc::new(work);
+
+    // 4 concurrent connections, each driving the FULL mixed-quality
+    // stream: requests from different connections for the same quant
+    // table coalesce in the shared batcher, and whichever replica the
+    // ring owns must stay bit-identical to the oracle
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let work = work.clone();
+            s.spawn(move || {
+                let mut client = Client::connect(addr).expect("connect");
+                for (bytes, want) in work.iter() {
+                    let resp = client.infer(bytes).expect("served");
+                    assert_eq!(
+                        &resp.logits, want,
+                        "sharded socket logits must be bit-identical to in-process Plan::run"
+                    );
+                }
+            });
+        }
+    });
+
+    // routing really did split the fleet: exactly the shards that own a
+    // quality saw compute batches, the others stayed idle
+    let coord = server.sharded().expect("sharded server");
+    let owners: BTreeSet<usize> =
+        work.iter().map(|(bytes, _)| coord.shard_for_payload(bytes)).collect();
+    for s in 0..coord.shard_count() {
+        let batches = coord.replica(s).batches_served();
+        assert_eq!(
+            owners.contains(&s),
+            batches > 0,
+            "shard {s}: served {batches} batches but owns {}",
+            if owners.contains(&s) { "traffic" } else { "nothing" }
+        );
+    }
+
+    let snap = frontend.metrics.snapshot();
+    assert_eq!(snap.protocol_errors, 0, "{snap}");
+    assert_eq!(
+        frontend.metrics.responses_with(WireCode::Ok),
+        4 * work.len() as u64,
+        "{snap}"
+    );
+    frontend.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn warmup_gate_is_per_shard_over_the_wire() {
+    let params = ParamSet::init(&tiny_cfg(), 5);
+    let coord = Arc::new(ShardedCoordinator::start(
+        engine(&params, NativeMode::SparseResident),
+        2,
+        PipelineConfig::default(),
+    ));
+    // declare (and gate) one quality; find another quality the OTHER
+    // shard owns, which nobody warms
+    let gated_q = 75u8;
+    coord.warm(gated_q);
+    let owner = coord.shard_for(&QuantTable::luma(gated_q).as_f32());
+    let other_q = (1..=99u8)
+        .find(|&q| coord.shard_for(&QuantTable::luma(q).as_f32()) != owner)
+        .expect("some quality routes to the other shard");
+
+    let frontend = SocketFrontend::start(
+        coord.clone(),
+        FrontendConfig {
+            listen_addr: "127.0.0.1:0".into(),
+            warmup_batches: 1,
+            max_inflight: 8,
+            ..FrontendConfig::default()
+        },
+    )
+    .expect("bind");
+    let gated_file = files(1, gated_q).remove(0).0;
+    let other_file = files(1, other_q).remove(0).0;
+
+    let mut client = Client::connect(frontend.local_addr()).expect("connect");
+
+    // the gated quality's owner is cold: typed WarmingUp
+    client.submit(&gated_file).expect("submit");
+    match client.recv().expect("reply") {
+        Reply::Err { code: WireCode::WarmingUp, .. } => {}
+        other => panic!("cold owner shard must answer WarmingUp, got {other:?}"),
+    }
+
+    // a quality owned by the other, never-warm-targeted shard serves
+    // immediately — a cold qvec never rides a warmed shard's gate
+    let resp = client.infer(&other_file).expect("untargeted shard serves cold");
+    assert_eq!(resp.logits.len(), 4);
+
+    // and that batch on the OTHER shard did not open the owner's gate
+    client.submit(&gated_file).expect("submit");
+    match client.recv().expect("reply") {
+        Reply::Err { code: WireCode::WarmingUp, .. } => {}
+        other => panic!("another shard's batch must not open this gate, got {other:?}"),
+    }
+
+    // in-process warm traffic on the owner replica opens it
+    coord.replica(owner).infer(gated_file.clone()).expect("in-process warmup");
+    let resp = client.infer(&gated_file).expect("warm owner serves");
+    assert_eq!(resp.logits.len(), 4);
+
+    assert_eq!(frontend.metrics.responses_with(WireCode::WarmingUp), 2);
+    assert_eq!(frontend.metrics.responses_with(WireCode::Ok), 2);
+    frontend.shutdown();
+    drop(coord); // replicas drain via Drop
+}
+
+#[test]
+fn overload_flood_sheds_typed_and_admitted_p99_stays_bounded() {
+    let params = ParamSet::init(&tiny_cfg(), 7);
+    // tiny per-replica queues: a multi-connection flood MUST shed
+    let server = Server::start_sharded(
+        engine(&params, NativeMode::Sparse),
+        2,
+        PipelineConfig {
+            decode_workers: 1,
+            compute_workers: 1,
+            queue_capacity: 2,
+            decoded_capacity: 1,
+            max_batch: 1,
+        },
+        None,
+    );
+    let frontend = server
+        .listen(FrontendConfig {
+            listen_addr: "127.0.0.1:0".into(),
+            warmup_batches: 0,
+            max_inflight: 256,
+            ..FrontendConfig::default()
+        })
+        .expect("bind");
+    let addr = frontend.local_addr();
+
+    // 4 connections × 32 pipelined mixed-quality requests
+    let per_conn = 32usize;
+    let stream: Vec<Vec<u8>> = [50u8, 75, 90]
+        .iter()
+        .flat_map(|&q| files(2, q))
+        .map(|(b, _)| b)
+        .collect();
+    let stream = Arc::new(stream);
+    let tallies: Vec<(usize, usize)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let stream = stream.clone();
+                s.spawn(move || {
+                    let mut client = Client::connect(addr).expect("connect");
+                    for i in 0..per_conn {
+                        client.submit(&stream[i % stream.len()]).expect("submit");
+                    }
+                    let (mut ok, mut shed) = (0usize, 0usize);
+                    for _ in 0..per_conn {
+                        match client.recv().expect("reply") {
+                            Reply::Ok(resp) => {
+                                assert_eq!(resp.logits.len(), 4);
+                                ok += 1;
+                            }
+                            Reply::Err { code: WireCode::QueueFull, .. } => shed += 1,
+                            Reply::Err { code, message, .. } => {
+                                panic!("untyped shed {}: {message}", code.label());
+                            }
+                        }
+                    }
+                    (ok, shed)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+
+    let ok: usize = tallies.iter().map(|(o, _)| o).sum();
+    let shed: usize = tallies.iter().map(|(_, r)| r).sum();
+    assert_eq!(ok + shed, 4 * per_conn, "every request answered exactly once");
+    assert!(shed > 0, "flooding capacity-2 queues must shed with the typed code");
+    assert!(ok > 0, "admitted requests still serve under flood");
+
+    // the scraped end-to-end histogram prices only ADMITTED requests:
+    // shedding keeps their p99 bounded instead of queueing unbounded
+    let scrape = Scrape::parse(
+        &Client::connect(addr).expect("connect").stats().expect("stats scrape"),
+    );
+    assert_eq!(scrape.value("jd_request_e2e_us_count", &[]), Some(ok as f64), "{scrape:?}");
+    let p99_us = scrape.histogram_quantile("jd_request_e2e_us", &[], 0.99);
+    assert!(
+        p99_us > 0.0 && p99_us < 60e6,
+        "admitted-request p99 must stay bounded under flood, got {p99_us}us"
+    );
+    // and zero protocol errors: overload degraded gracefully
+    assert_eq!(frontend.metrics.snapshot().protocol_errors, 0);
+
+    frontend.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn token_bucket_rate_limits_a_connection_deterministically() {
+    let params = ParamSet::init(&tiny_cfg(), 9);
+    let server = Server::start_sharded(
+        engine(&params, NativeMode::Sparse),
+        2,
+        PipelineConfig::default(),
+        None,
+    );
+    let frontend = server
+        .listen(FrontendConfig {
+            listen_addr: "127.0.0.1:0".into(),
+            warmup_batches: 0,
+            max_inflight: 64,
+            rate_limit: 1, // 1 token/s...
+            rate_burst: 2, // ...bursting to 2: a 10-burst sheds most
+        })
+        .expect("bind");
+
+    let bytes = files(1, 75).remove(0).0;
+    let mut client = Client::connect(frontend.local_addr()).expect("connect");
+    let total = 10usize;
+    for _ in 0..total {
+        client.submit(&bytes).expect("submit");
+    }
+    let (mut ok, mut limited) = (0usize, 0usize);
+    for _ in 0..total {
+        match client.recv().expect("reply") {
+            Reply::Ok(resp) => {
+                assert_eq!(resp.logits.len(), 4);
+                ok += 1;
+            }
+            Reply::Err { code: WireCode::RateLimited, message, .. } => {
+                assert!(!message.is_empty(), "rate-limit reply explains itself");
+                limited += 1;
+            }
+            Reply::Err { code, message, .. } => {
+                panic!("unexpected {}: {message}", code.label());
+            }
+        }
+    }
+    assert_eq!(ok + limited, total);
+    assert!(ok >= 2, "the burst allowance admits at least 2, got {ok}");
+    // 2 burst tokens + at most a refill or two while the burst drains
+    assert!(limited >= 6, "a 10-burst at 1 token/s must shed most, got {limited}");
+    assert_eq!(
+        frontend.metrics.responses_with(WireCode::RateLimited),
+        limited as u64
+    );
+    assert_eq!(frontend.metrics.rate_limited.get(), limited as u64);
+
+    // a SECOND connection gets its own fresh bucket: its first request
+    // serves even though the first connection's bucket is empty
+    let mut fresh = Client::connect(frontend.local_addr()).expect("connect");
+    let resp = fresh.infer(&bytes).expect("fresh connection has fresh tokens");
+    assert_eq!(resp.logits.len(), 4);
+
+    frontend.shutdown();
+    server.shutdown();
+}

@@ -71,6 +71,7 @@ fn listen(server: &Server, warmup_batches: u64, max_inflight: usize) -> SocketFr
             listen_addr: "127.0.0.1:0".into(),
             warmup_batches,
             max_inflight,
+            ..FrontendConfig::default()
         })
         .expect("bind ephemeral loopback port")
 }
@@ -494,6 +495,71 @@ fn expired_deadline_budget_rejected_without_compute() {
 }
 
 #[test]
+fn shutdown_flushes_the_completion_queue_before_sockets_close() {
+    let params = ParamSet::init(&tiny_cfg(), 19);
+    // single-lane pipeline: most of the burst is still in flight when
+    // shutdown starts, so the replies must travel the completion queue
+    // and reply-pump pool during the drain, not before it
+    let server = Server::start_native(
+        engine(&params, NativeMode::Sparse),
+        PipelineConfig {
+            decode_workers: 1,
+            compute_workers: 1,
+            queue_capacity: 32,
+            decoded_capacity: 1,
+            max_batch: 1,
+        },
+    );
+    let frontend = listen(&server, 0, 64);
+    let metrics = frontend.metrics.clone();
+    let bytes = files(1, 75).remove(0).0;
+
+    let mut client = Client::connect(frontend.local_addr()).expect("connect");
+    let total = 8usize;
+    for _ in 0..total {
+        client.submit(&bytes).expect("submit");
+    }
+    // make the race deterministic: the reader must have consumed the
+    // whole burst before shutdown half-closes the socket
+    for _ in 0..400 {
+        if metrics.snapshot().requests >= total as u64 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(metrics.snapshot().requests, total as u64, "reader consumed the burst");
+    // first reply proves the stream reached compute; the rest in flight
+    match client.recv().expect("first reply") {
+        Reply::Ok(resp) => assert_eq!(resp.logits.len(), 4),
+        Reply::Err { code, message, .. } => panic!("unexpected {}: {message}", code.label()),
+    }
+
+    // drain-on-shutdown: joins each connection only after its in-flight
+    // count hits zero, with the reply pumps still alive to flush the
+    // completion queue — then closes the sockets
+    frontend.shutdown();
+
+    let mut answered = 1u64;
+    while let Ok(reply) = client.recv() {
+        if let Reply::Err { code, message, .. } = &reply {
+            panic!("drained reply must be logits, got {}: {message}", code.label());
+        }
+        answered += 1;
+    }
+    let snap = metrics.snapshot();
+    let responded: u64 = snap.responses.iter().map(|(_, n)| n).sum();
+    assert_eq!(
+        answered, responded,
+        "every response written must be readable before the socket closed: {snap}"
+    );
+    assert_eq!(
+        snap.requests, responded,
+        "no request read off a socket may be stranded without a reply: {snap}"
+    );
+    server.shutdown();
+}
+
+#[test]
 fn slow_start_gate_rejects_then_admits_after_warm_batches() {
     let params = ParamSet::init(&tiny_cfg(), 11);
     let pipeline = Arc::new(NativePipeline::start(
@@ -507,6 +573,7 @@ fn slow_start_gate_rejects_then_admits_after_warm_batches() {
             listen_addr: "127.0.0.1:0".into(),
             warmup_batches: 1,
             max_inflight: 8,
+            ..FrontendConfig::default()
         },
     )
     .expect("bind");
