@@ -50,16 +50,18 @@ done
 echo "$PLAN_OUT" | grep -q "bit-identical: yes" \
     || { echo "plan-smoke FAILED: sparse vs resident not bit-identical"; exit 1; }
 
-echo "== axpy-smoke (kernel x Xi band grid, guard on the simd path) =="
+echo "== axpy-smoke (kernel x Xi band grid, guards on the simd + per-block paths) =="
 # tiny `repro exp axpy` run: every kernel variant must produce a row at
-# every measured band, predictions must never drift, and the guard line
-# fails the build if the resolved SIMD kernel loses to scalar8 at
-# quality 50 by more than 1.5x
+# every measured band (including the per-block and tiled Xi row-panel
+# modes), predictions must never drift, the axpy guard fails the build
+# if the resolved SIMD kernel loses to scalar8 at quality 50 by more
+# than 1.5x, and the band guard fails it if the per-block panels lose
+# to the batch-global trim on a mixed-sparsity batch by more than 1.1x
 AXPY_OUT=$(./target/release/repro exp axpy --qualities 50 --batch 6 --iters 1 \
     --out BENCH_AXPY_SMOKE.json)
 echo "$AXPY_OUT"
 for kernel in scalar4 scalar8 simd; do
-    for band in full limited; do
+    for band in full limited per-block tiled; do
         echo "$AXPY_OUT" | grep -qE "\| *50 *\| *$kernel *\| *$band *\|" \
             || { echo "axpy-smoke FAILED: missing row $kernel/$band"; exit 1; }
     done
@@ -69,6 +71,8 @@ if echo "$AXPY_OUT" | grep -q "DRIFTED"; then
 fi
 echo "$AXPY_OUT" | grep -q "axpy-guard: ok" \
     || { echo "axpy-smoke FAILED: simd kernel lost to scalar8 (see axpy-guard line)"; exit 1; }
+echo "$AXPY_OUT" | grep -q "band-guard: ok" \
+    || { echo "axpy-smoke FAILED: per-block panels lost to batch-global (see band-guard line)"; exit 1; }
 [ -f BENCH_AXPY_SMOKE.json ] \
     || { echo "axpy-smoke FAILED: report not written"; exit 1; }
 rm -f BENCH_AXPY_SMOKE.json

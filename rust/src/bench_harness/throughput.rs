@@ -15,7 +15,7 @@ use crate::data::{Dataset, Split, SynthKind};
 use crate::jpeg::codec;
 use crate::jpeg_domain::conv::{
     explode_conv, jpeg_conv_dcc, jpeg_conv_exploded_dense, jpeg_conv_exploded_sparse,
-    jpeg_conv_exploded_sparse_with, simd_axpy_available, AxpyKernel,
+    jpeg_conv_exploded_sparse_with, simd_axpy_available, AxpyKernel, RowBand,
 };
 use crate::jpeg_domain::network::{ExplodedModel, ResidencyTrace, RESNET_PLAN};
 use crate::jpeg_domain::plan::{
@@ -1068,7 +1068,10 @@ pub struct AxpyKernelRow {
     /// `AxpyKernel::label()` of the requested kernel ("simd" is the
     /// request; it resolves to scalar8 where SIMD is unavailable).
     pub kernel: &'static str,
-    /// `"full"` (64 Xi columns) or `"limited"` (phi-truncated columns).
+    /// Xi panel policy: `"full"` (64 columns, batch-global rows),
+    /// `"limited"` (phi-truncated columns, batch-global rows),
+    /// `"per-block"` (limited columns, per-block-cursor two-panel
+    /// rows), or `"tiled"` (per-block plus L1 column tiling).
     pub band: &'static str,
     pub images_per_sec: f64,
     /// Max |logits - scalar4/full logits| at the same quality.  Exactly
@@ -1079,10 +1082,10 @@ pub struct AxpyKernelRow {
     pub argmax_identical: bool,
 }
 
-/// The PR-6 tentpole measurement: the axpy kernel grid
-/// (scalar4 / scalar8 / simd) crossed with the Xi band policy
-/// (full / limited) over full sparse-resident forwards, per quality.
-/// This is what `repro exp axpy` prints and writes to `BENCH_PR6.json`.
+/// The axpy kernel grid (scalar4 / scalar8 / simd) crossed with the Xi
+/// panel policy (full / limited / per-block / tiled) over full
+/// sparse-resident forwards, per quality.  This is what
+/// `repro exp axpy` prints and writes to `BENCH_PR10.json`.
 #[derive(Clone, Debug)]
 pub struct AxpyKernelReport {
     pub batch: usize,
@@ -1092,13 +1095,19 @@ pub struct AxpyKernelReport {
     pub num_freqs: usize,
     /// Whether `AxpyKernel::Simd` resolves to a real vector path here.
     pub simd_available: bool,
-    /// 3 kernels x 2 bands rows per quality, qualities in input order.
+    /// 3 kernels x 4 bands rows per quality, qualities in input order.
     pub rows: Vec<AxpyKernelRow>,
     /// simd/limited images/s over scalar8/full images/s at
     /// [`AxpyKernelReport::guard_quality`] — the ci smoke guard ratio.
     pub guard_speedup: f64,
     /// Quality the guard ratio is computed at (50 when measured).
     pub guard_quality: u8,
+    /// per-block over batch-global images/s on the mixed-sparsity
+    /// fixture (one dense image dragging the batch cursor to 64, the
+    /// rest near-empty) at [`AxpyKernelReport::guard_quality`] — the
+    /// workload the per-block panels exist for.  The ci band guard
+    /// fails when this drops under [`BAND_GUARD_MIN_RATIO`].
+    pub band_guard_speedup: f64,
 }
 
 /// The ci guard's floor on `guard_speedup`: the resolved SIMD + band
@@ -1106,6 +1115,44 @@ pub struct AxpyKernelReport {
 /// SIMD is unavailable both sides run scalar8 and the ratio sits near
 /// 1.0, so the guard stays meaningful on any host).
 pub const AXPY_GUARD_MIN_RATIO: f64 = 1.0 / 1.5;
+
+/// The ci band guard's floor on
+/// [`AxpyKernelReport::band_guard_speedup`]: on a mixed-sparsity batch
+/// the per-block panels may not lose to the batch-global trim by more
+/// than 1.1x.  The two modes run the same kernel over the same
+/// nonzeros — per-block only shrinks the panel most blocks stream —
+/// so a real regression here means the panel routing itself broke.
+pub const BAND_GUARD_MIN_RATIO: f64 = 1.0 / 1.1;
+
+/// Mixed-sparsity band-guard fixture: the first image's blocks are
+/// rewritten as full 64-coefficient runs (the outliers that drag the
+/// batch-global cursor to 64), every other block keeps only its
+/// coefficients below zigzag index 6.  Batch-global trim must stream
+/// 64 Xi rows for every block of this batch; the per-block hot panel
+/// stays 6 rows tall for all but the first image.
+fn mixed_band_fixture(f0: &SparseBlocks) -> SparseBlocks {
+    let (n, c, bh, bw) = f0.dims();
+    let per_image = c * bh * bw;
+    let mut rng = Rng::new(17);
+    let mut out = SparseBlocks::with_capacity(n, c, bh, bw, f0.nnz() + per_image * 64);
+    for bid in 0..f0.num_blocks() {
+        let (ks, vs) = f0.block(bid);
+        if bid < per_image {
+            out.push_block((0..64u8).map(|k| {
+                let stored = ks.iter().position(|&i| i == k).map(|t| vs[t]);
+                (k, stored.unwrap_or_else(|| rng.normal() * 0.05))
+            }));
+        } else {
+            out.push_block(
+                ks.iter()
+                    .zip(vs)
+                    .take_while(|(&k, _)| k < 6)
+                    .map(|(&k, &v)| (k, v)),
+            );
+        }
+    }
+    out
+}
 
 /// Run the kernel x band grid on quality-`qualities` synthetic mnist
 /// batches.  `threads = 0` resolves to the hardware parallelism;
@@ -1135,19 +1182,31 @@ pub fn axpy_kernel_ablation(
             method: Method::Asm,
         };
         let input = Act::Sparse(f0.clone());
-        let exec = |axpy: AxpyKernel, band_limited: bool| SparseResident {
+        let exec = |axpy: AxpyKernel, band_limited: bool, row_band: RowBand| SparseResident {
             threads,
             prune_epsilon: 0.0,
             axpy,
             band_limited,
+            row_band,
         };
         // the correctness anchor of the whole grid
-        let baseline = RESNET_PLAN.run(&exec(AxpyKernel::Scalar4, false), &ctx, &input, None);
+        let baseline = RESNET_PLAN.run(
+            &exec(AxpyKernel::Scalar4, false, RowBand::Batch),
+            &ctx,
+            &input,
+            None,
+        );
         let base_preds = baseline.argmax_last();
         let images = (batch * iters) as f64;
+        let bands = [
+            ("full", false, RowBand::Batch),
+            ("limited", true, RowBand::Batch),
+            ("per-block", true, RowBand::PerBlock),
+            ("tiled", true, RowBand::Tiled),
+        ];
         for kernel in kernels {
-            for (band, band_limited) in [("full", false), ("limited", true)] {
-                let e = exec(kernel, band_limited);
+            for (band, band_limited, row_band) in bands {
+                let e = exec(kernel, band_limited, row_band);
                 let logits = RESNET_PLAN.run(&e, &ctx, &input, None);
                 let t0 = Instant::now();
                 for _ in 0..iters {
@@ -1172,6 +1231,37 @@ pub fn axpy_kernel_ablation(
     };
     let scalar8 = ips("scalar8", "full");
     let guard_speedup = if scalar8 > 0.0 { ips("simd", "limited") / scalar8 } else { 0.0 };
+
+    // band guard: per-block vs batch-global on the mixed-sparsity
+    // fixture.  Same kernel, same band limit — the only variable is
+    // the Xi row-panel policy, so the ratio isolates the panel win.
+    let (params, qvec, f0, em) = native_forward_fixture(guard_quality, batch, 59)?;
+    let ctx = PlanCtx {
+        params: &params,
+        exploded: Some(&em),
+        qvec: &qvec,
+        num_freqs,
+        method: Method::Asm,
+    };
+    let mixed = Act::Sparse(mixed_band_fixture(&f0));
+    let time_band = |row_band: RowBand| {
+        let e = SparseResident {
+            threads,
+            prune_epsilon: 0.0,
+            axpy: AxpyKernel::Simd,
+            band_limited: true,
+            row_band,
+        };
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(RESNET_PLAN.run(&e, &ctx, &mixed, None));
+        }
+        t0.elapsed().as_secs_f64()
+    };
+    let batch_global_s = time_band(RowBand::Batch);
+    let band_guard_speedup =
+        if batch_global_s > 0.0 { batch_global_s / time_band(RowBand::PerBlock) } else { 0.0 };
+
     Ok(AxpyKernelReport {
         batch,
         threads,
@@ -1180,6 +1270,7 @@ pub fn axpy_kernel_ablation(
         rows,
         guard_speedup,
         guard_quality,
+        band_guard_speedup,
     })
 }
 
@@ -1212,9 +1303,15 @@ pub fn print_axpy_kernels(r: &AxpyKernelReport) {
         "axpy-guard: {status} simd/scalar8 = {:.2}x at quality {}",
         r.guard_speedup, r.guard_quality
     );
+    let band_status =
+        if r.band_guard_speedup >= BAND_GUARD_MIN_RATIO { "ok" } else { "FAIL" };
+    println!(
+        "band-guard: {band_status} per-block/batch = {:.2}x on mixed batch at quality {}",
+        r.band_guard_speedup, r.guard_quality
+    );
 }
 
-/// `BENCH_PR6.json` document for an [`AxpyKernelReport`].
+/// `BENCH_PR10.json` document for an [`AxpyKernelReport`].
 pub fn axpy_kernel_report_json(r: &AxpyKernelReport) -> crate::json::Json {
     use crate::json::Json;
     use std::collections::BTreeMap;
@@ -1240,6 +1337,7 @@ pub fn axpy_kernel_report_json(r: &AxpyKernelReport) -> crate::json::Json {
     doc.insert("simd_available".into(), Json::Bool(r.simd_available));
     doc.insert("guard_speedup".into(), Json::Num(r.guard_speedup));
     doc.insert("guard_quality".into(), Json::Num(r.guard_quality as f64));
+    doc.insert("band_guard_speedup".into(), Json::Num(r.band_guard_speedup));
     doc.insert("rows".into(), Json::Arr(rows));
     Json::Obj(doc)
 }
@@ -1367,7 +1465,7 @@ mod tests {
     fn axpy_kernel_grid_is_correct_before_fast() {
         let r = axpy_kernel_ablation(&[50], 2, 1, 1, 8).unwrap();
         assert_eq!(r.guard_quality, 50);
-        assert_eq!(r.rows.len(), 6, "3 kernels x 2 bands");
+        assert_eq!(r.rows.len(), 12, "3 kernels x 4 bands");
         assert_eq!(r.simd_available, simd_axpy_available());
         for row in &r.rows {
             assert!(row.images_per_sec > 0.0, "{} {}", row.kernel, row.band);
@@ -1377,8 +1475,9 @@ mod tests {
                 row.kernel, row.band
             );
         }
-        // band limiting is bit-exact: the scalar4 rows ARE the baseline
-        // arithmetic, full and limited alike
+        // band limiting is bit-exact in every row-panel mode: the
+        // scalar4 rows ARE the baseline arithmetic, full / limited /
+        // per-block / tiled alike
         for row in r.rows.iter().filter(|row| row.kernel == "scalar4") {
             assert_eq!(row.max_abs_diff, 0.0, "scalar4/{} must be exact", row.band);
         }
@@ -1393,11 +1492,15 @@ mod tests {
             );
         }
         assert!(r.guard_speedup > 0.0);
-        print_axpy_kernels(&r); // smoke the printer + guard line
+        assert!(r.band_guard_speedup > 0.0);
+        let bands: Vec<_> = r.rows.iter().take(4).map(|row| row.band).collect();
+        assert_eq!(bands, ["full", "limited", "per-block", "tiled"]);
+        print_axpy_kernels(&r); // smoke the printer + both guard lines
         let doc = axpy_kernel_report_json(&r);
         assert_eq!(doc.get("bench").as_str(), Some("axpy_kernel_ablation"));
-        assert_eq!(doc.get("rows").as_arr().map(|a| a.len()), Some(6));
+        assert_eq!(doc.get("rows").as_arr().map(|a| a.len()), Some(12));
         assert_eq!(doc.get("simd_available").as_bool(), Some(r.simd_available));
+        assert!(doc.get("band_guard_speedup").as_f64().is_some());
     }
 
     #[test]

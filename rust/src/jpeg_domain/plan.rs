@@ -46,8 +46,8 @@ use super::batchnorm::{
     jpeg_global_avg_pool_sparse,
 };
 use super::conv::{
-    jpeg_conv_dcc, jpeg_conv_exploded_dense, jpeg_conv_exploded_sparse_resident_with,
-    jpeg_conv_exploded_sparse_with, AxpyKernel,
+    jpeg_conv_dcc, jpeg_conv_exploded_dense, jpeg_conv_exploded_sparse_banded,
+    jpeg_conv_exploded_sparse_resident_banded, AxpyKernel, RowBand,
 };
 use super::network::ExplodedModel;
 use super::relu::{jpeg_relu, jpeg_relu_sparse, Method};
@@ -734,13 +734,22 @@ pub struct SparseKernel {
     pub axpy: AxpyKernel,
     /// Trim conv output columns to `band_cutoff(num_freqs)`.
     pub band_limited: bool,
+    /// Xi row-panel mode: batch-global trim, per-block two-panel
+    /// trim, or per-block plus column tiling (always exact; see
+    /// `conv::RowBand`).
+    pub row_band: RowBand,
 }
 
 impl SparseKernel {
     /// Default strategy at a given thread count: `Auto` kernel, no
-    /// column trimming.
+    /// column trimming, default row-band mode.
     pub fn new(threads: usize) -> SparseKernel {
-        SparseKernel { threads, axpy: AxpyKernel::Auto, band_limited: false }
+        SparseKernel {
+            threads,
+            axpy: AxpyKernel::Auto,
+            band_limited: false,
+            row_band: RowBand::default(),
+        }
     }
 }
 
@@ -759,7 +768,7 @@ impl Executor for SparseKernel {
         let em = exploded(ctx, "SparseKernel");
         debug_assert_eq!(em.strides[xi], stride, "topology stride disagrees with exploded map");
         let f = as_sparse(x);
-        Act::Dense(jpeg_conv_exploded_sparse_with(
+        Act::Dense(jpeg_conv_exploded_sparse_banded(
             &f,
             &em.xis[xi],
             em.couts[xi],
@@ -767,6 +776,7 @@ impl Executor for SparseKernel {
             self.threads,
             self.axpy,
             conv_out_cut(self.band_limited, ctx),
+            self.row_band,
         ))
     }
 
@@ -808,16 +818,22 @@ pub struct SparseResident {
     /// Trim conv output columns to `band_cutoff(num_freqs)` (see
     /// [`conv_out_cut`] for the soundness argument).
     pub band_limited: bool,
+    /// Xi row-panel mode: batch-global trim, per-block two-panel
+    /// trim, or per-block plus column tiling (always exact; see
+    /// `conv::RowBand`).
+    pub row_band: RowBand,
 }
 
 impl SparseResident {
-    /// Default strategy: `Auto` kernel, no prune, no column trimming.
+    /// Default strategy: `Auto` kernel, no prune, no column trimming,
+    /// default row-band mode.
     pub fn new(threads: usize, prune_epsilon: f32) -> SparseResident {
         SparseResident {
             threads,
             prune_epsilon,
             axpy: AxpyKernel::Auto,
             band_limited: false,
+            row_band: RowBand::default(),
         }
     }
 }
@@ -837,7 +853,7 @@ impl Executor for SparseResident {
         let em = exploded(ctx, "SparseResident");
         debug_assert_eq!(em.strides[xi], stride, "topology stride disagrees with exploded map");
         let f = as_sparse(x);
-        Act::Sparse(jpeg_conv_exploded_sparse_resident_with(
+        Act::Sparse(jpeg_conv_exploded_sparse_resident_banded(
             &f,
             &em.xis[xi],
             em.couts[xi],
@@ -845,6 +861,7 @@ impl Executor for SparseResident {
             self.threads,
             self.axpy,
             conv_out_cut(self.band_limited, ctx),
+            self.row_band,
         ))
     }
 

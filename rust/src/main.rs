@@ -107,6 +107,9 @@ fn usage() -> ! {
                   sparse-resident executor; 0 = exact)
                   --axpy auto|simd|scalar8|scalar4 (inner-loop kernel of
                   the sparse executors; auto picks SIMD when available)
+                  --row-band tiled|per-block|batch (Xi row-panel policy
+                  of the sparse executors; all three are bit-exact,
+                  tiled is the default)
           pjrt:   --route spatial|jpeg --max-batch N --max-wait-ms N
           --listen ADDR (native only): streaming socket front end; prints
                   'listening on HOST:PORT' (resolves :0), serves until
@@ -143,9 +146,10 @@ fn usage() -> ! {
           resident: --quality Q --batch N --threads N --iters N
           prune: --quality Q --batch N --threads N --iters N
                  --epsilons 0,1e-5,1e-4,1e-3,1e-2
-          axpy: kernel (scalar4|scalar8|simd) x Xi band (full|limited)
-                 grid -> BENCH_PR6.json; --qualities 50,75,90 --batch N
-                 --iters N --threads N --nf K --out FILE
+          axpy: kernel (scalar4|scalar8|simd) x Xi band
+                 (full|limited|per-block|tiled) grid -> BENCH_PR10.json;
+                 --qualities 50,75,90 --batch N --iters N --threads N
+                 --nf K --out FILE
           ablation: plan-executor rows run natively; the PJRT rows are
                  skipped when no artifacts are present
           (sparse, resident, prune, axpy and the plan rows need no artifacts)
@@ -348,6 +352,11 @@ fn cmd_serve(args: &Args, cfg: &Config) -> anyhow::Result<()> {
                 args.get("axpy", &cfg.str_or("run", "axpy", "auto"))
                     .parse()
                     .map_err(anyhow::Error::msg)?,
+            )
+            .with_row_band(
+                args.get("row-band", &cfg.str_or("run", "row_band", "tiled"))
+                    .parse()
+                    .map_err(anyhow::Error::msg)?,
             );
             let server = Server::start_native_traced(
                 native,
@@ -451,6 +460,11 @@ fn cmd_serve_listen(
     .with_prune_epsilon(args.f32("prune-epsilon", cfg.f32_or("run", "prune_epsilon", 0.0)))
     .with_axpy(
         args.get("axpy", &cfg.str_or("run", "axpy", "auto"))
+            .parse()
+            .map_err(anyhow::Error::msg)?,
+    )
+    .with_row_band(
+        args.get("row-band", &cfg.str_or("run", "row_band", "tiled"))
             .parse()
             .map_err(anyhow::Error::msg)?,
     );
@@ -818,7 +832,7 @@ fn cmd_exp(args: &Args, cfg: &Config) -> anyhow::Result<()> {
             bh::throughput::print_resident(&r);
         }
         "axpy" => {
-            // axpy kernel x Xi band grid over full forwards -> BENCH_PR6.json
+            // axpy kernel x Xi band grid over full forwards -> BENCH_PR10.json
             let qualities: Vec<u8> = args
                 .get("qualities", "50,75,90")
                 .split(',')
@@ -832,7 +846,7 @@ fn cmd_exp(args: &Args, cfg: &Config) -> anyhow::Result<()> {
                 args.usize("nf", 8),
             )?;
             bh::print_axpy_kernels(&r);
-            let out = args.get("out", "BENCH_PR6.json");
+            let out = args.get("out", "BENCH_PR10.json");
             std::fs::write(&out, format!("{}\n", bh::axpy_kernel_report_json(&r)))?;
             println!("wrote {out}");
         }

@@ -12,7 +12,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::jpeg::QuantTable;
-use crate::jpeg_domain::conv::AxpyKernel;
+use crate::jpeg_domain::conv::{AxpyKernel, RowBand};
 use crate::jpeg_domain::network::{ExplodedModel, ResidencyTrace, RESNET_PLAN};
 use crate::jpeg_domain::plan::{
     Act, DccRef, DenseKernel, PlanCtx, PlanObserver, SparseKernel, SparseResident,
@@ -73,6 +73,10 @@ pub struct NativeEngine {
     /// Inner-loop axpy kernel of the sparse executors (`[run] axpy` /
     /// `--axpy`); `Auto` (the default) picks SIMD when available.
     pub axpy: AxpyKernel,
+    /// Xi row-panel mode of the sparse executors (`[run] row_band` /
+    /// `--row-band`); always exact — the default (`tiled`) runs
+    /// per-block cursors plus L1 column tiles.
+    pub row_band: RowBand,
     cache: Mutex<HashMap<QvecKey, Arc<ExplodedModel>>>,
 }
 
@@ -94,6 +98,7 @@ impl NativeEngine {
             mode,
             prune_epsilon: 0.0,
             axpy: AxpyKernel::Auto,
+            row_band: RowBand::default(),
             cache: Mutex::new(HashMap::new()),
         }
     }
@@ -112,6 +117,7 @@ impl NativeEngine {
             mode: self.mode,
             prune_epsilon: self.prune_epsilon,
             axpy: self.axpy,
+            row_band: self.row_band,
             cache: Mutex::new(HashMap::new()),
         }
     }
@@ -126,6 +132,12 @@ impl NativeEngine {
     /// Set the inner-loop axpy kernel (`[run] axpy` / `--axpy`).
     pub fn with_axpy(mut self, axpy: AxpyKernel) -> NativeEngine {
         self.axpy = axpy;
+        self
+    }
+
+    /// Set the Xi row-panel mode (`[run] row_band` / `--row-band`).
+    pub fn with_row_band(mut self, row_band: RowBand) -> NativeEngine {
+        self.row_band = row_band;
         self
     }
 
@@ -231,7 +243,12 @@ impl NativeEngine {
         // `plan::conv_out_cut`); at num_freqs == 15 it is the identity
         match self.mode {
             NativeMode::Sparse => RESNET_PLAN.run(
-                &SparseKernel { threads: self.threads, axpy: self.axpy, band_limited: true },
+                &SparseKernel {
+                    threads: self.threads,
+                    axpy: self.axpy,
+                    band_limited: true,
+                    row_band: self.row_band,
+                },
                 &ctx,
                 &input,
                 observer,
@@ -242,6 +259,7 @@ impl NativeEngine {
                     prune_epsilon: self.prune_epsilon,
                     axpy: self.axpy,
                     band_limited: true,
+                    row_band: self.row_band,
                 },
                 &ctx,
                 &input,

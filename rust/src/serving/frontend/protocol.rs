@@ -167,9 +167,12 @@ pub enum ProtocolError {
     /// Unexpected frame kind for this direction.
     #[error("unexpected frame kind {got} (expected {want})")]
     BadKind { got: u8, want: u8 },
-    /// Declared length exceeds [`MAX_PAYLOAD`].
+    /// Declared length exceeds [`MAX_PAYLOAD`].  `declared` is `u64`
+    /// so an over-4GiB body reports its *true* size instead of a
+    /// silently clamped one (the wire field itself stays `u32`: a
+    /// frame that large is rejected before any header is built).
     #[error("declared length {declared} exceeds the {max}-byte cap")]
-    Oversized { declared: u32, max: u32 },
+    Oversized { declared: u64, max: u32 },
     /// The stream ended (or the peer disconnected) mid-frame.
     #[error("stream ended mid-frame while reading {context}")]
     Truncated { context: &'static str },
@@ -293,7 +296,7 @@ pub fn encode_request_with_cost(
 ) -> Result<Vec<u8>, ProtocolError> {
     if payload.len() as u64 > MAX_PAYLOAD as u64 {
         return Err(ProtocolError::Oversized {
-            declared: payload.len().min(u32::MAX as usize) as u32,
+            declared: payload.len() as u64,
             max: MAX_PAYLOAD,
         });
     }
@@ -311,10 +314,18 @@ pub fn encode_request_with_cost(
     Ok(out)
 }
 
-/// Serialize a response frame.
-pub fn encode_response(frame: &ResponseFrame) -> Vec<u8> {
+/// Serialize a response frame, enforcing [`MAX_PAYLOAD`] at
+/// frame-build time: an ok body larger than the cap is a typed
+/// [`ProtocolError::Oversized`], never a header whose length field
+/// silently wrapped or clamped.  (The `u32` length write below is
+/// provably in range — the check precedes it.)
+pub fn try_encode_response(frame: &ResponseFrame) -> Result<Vec<u8>, ProtocolError> {
     let (status, body): (u8, Vec<u8>) = match &frame.body {
         ResponseBody::Logits { predicted, logits } => {
+            let need = 4u64 + 4 * logits.len() as u64;
+            if need > MAX_PAYLOAD as u64 {
+                return Err(ProtocolError::Oversized { declared: need, max: MAX_PAYLOAD });
+            }
             let mut b = Vec::with_capacity(4 + 4 * logits.len());
             b.extend_from_slice(&predicted.to_le_bytes());
             for v in logits {
@@ -324,7 +335,9 @@ pub fn encode_response(frame: &ResponseFrame) -> Vec<u8> {
         }
         ResponseBody::Error { code, message } => {
             // an error message above the cap would deadlock framing;
-            // truncate defensively (messages are short in practice)
+            // truncate defensively (messages are short in practice,
+            // and unlike logits a truncated message loses no data the
+            // client acts on programmatically)
             let mut b = message.as_bytes().to_vec();
             b.truncate(MAX_PAYLOAD as usize);
             (*code as u8, b)
@@ -340,7 +353,26 @@ pub fn encode_response(frame: &ResponseFrame) -> Vec<u8> {
     out.extend_from_slice(&frame.latency_us.to_le_bytes());
     out.extend_from_slice(&(body.len() as u32).to_le_bytes());
     out.extend_from_slice(&body);
-    out
+    Ok(out)
+}
+
+/// Serialize a response frame.  Infallible for the reply path: a body
+/// that trips the [`MAX_PAYLOAD`] cap degrades to a typed
+/// [`WireCode::Internal`] error frame carrying the [`ProtocolError`]
+/// text — the client gets an addressed, parseable failure instead of
+/// a frame whose declared length lied about its body.
+pub fn encode_response(frame: &ResponseFrame) -> Vec<u8> {
+    try_encode_response(frame).unwrap_or_else(|e| {
+        try_encode_response(&ResponseFrame {
+            request_id: frame.request_id,
+            latency_us: frame.latency_us,
+            body: ResponseBody::Error {
+                code: WireCode::Internal,
+                message: format!("response exceeds frame cap: {e}"),
+            },
+        })
+        .expect("error frames always fit under MAX_PAYLOAD")
+    })
 }
 
 /// Fill `buf` from `r`.  `Ok(false)` = the stream closed cleanly before
@@ -407,7 +439,7 @@ fn read_body(
 ) -> Result<Vec<u8>, FrameError> {
     if declared > MAX_PAYLOAD {
         return Err(FrameError::protocol_for(
-            ProtocolError::Oversized { declared, max: MAX_PAYLOAD },
+            ProtocolError::Oversized { declared: declared as u64, max: MAX_PAYLOAD },
             request_id,
         ));
     }
@@ -723,18 +755,62 @@ mod tests {
                 error: ProtocolError::Oversized { declared, max },
                 request_id,
             }) => {
-                assert_eq!(declared, u32::MAX);
+                assert_eq!(declared, u64::from(u32::MAX));
                 assert_eq!(max, MAX_PAYLOAD);
                 assert_eq!(request_id, Some(11));
             }
             other => panic!("expected Oversized, got {other:?}"),
         }
-        // the encoder refuses to build such a frame in the first place
+        // the encoder refuses to build such a frame in the first place,
+        // reporting the payload's true length (no u32 clamp)
         let big = vec![0u8; MAX_PAYLOAD as usize + 1];
-        assert!(matches!(
-            encode_request(1, 0, 0, &big),
-            Err(ProtocolError::Oversized { .. })
-        ));
+        match encode_request(1, 0, 0, &big) {
+            Err(ProtocolError::Oversized { declared, max }) => {
+                assert_eq!(declared, big.len() as u64);
+                assert_eq!(max, MAX_PAYLOAD);
+            }
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_response_body_is_typed_not_truncated() {
+        // a logits body past the cap: 8M+ f32s is 32 MiB + 4 bytes
+        let too_many = (MAX_PAYLOAD as usize) / 4;
+        let frame = ResponseFrame {
+            request_id: 21,
+            latency_us: 9,
+            body: ResponseBody::Logits { predicted: 0, logits: vec![0.5f32; too_many] },
+        };
+        match try_encode_response(&frame) {
+            Err(ProtocolError::Oversized { declared, max }) => {
+                assert_eq!(declared, 4 + 4 * too_many as u64);
+                assert_eq!(max, MAX_PAYLOAD);
+            }
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+        // the infallible encoder degrades to a typed Internal error
+        // frame the client can still parse and address
+        let bytes = encode_response(&frame);
+        let got = read_response(&mut Cursor::new(bytes)).unwrap().unwrap();
+        assert_eq!(got.request_id, 21);
+        match got.body {
+            ResponseBody::Error { code, message } => {
+                assert_eq!(code, WireCode::Internal);
+                assert!(message.contains("exceeds"), "carries the protocol error text: {message}");
+            }
+            other => panic!("expected a typed error body, got {other:?}"),
+        }
+        // a body at exactly the cap still encodes as Ok
+        let fits = ResponseFrame {
+            request_id: 22,
+            latency_us: 0,
+            body: ResponseBody::Logits {
+                predicted: 1,
+                logits: vec![0.0f32; (MAX_PAYLOAD as usize - 4) / 4],
+            },
+        };
+        assert!(try_encode_response(&fits).is_ok());
     }
 
     #[test]

@@ -29,7 +29,7 @@ use std::sync::Arc;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::server::InferResponse;
 use crate::jpeg::QuantTable;
-use crate::telemetry::{Registry, Tracer};
+use crate::telemetry::{Counter, Registry, Tracer};
 
 use super::super::engine::NativeEngine;
 use super::super::error::ServeError;
@@ -42,8 +42,9 @@ use super::ring::HashRing;
 /// (zigzag order, f32 bit-for-bit) the pipeline derives after a full
 /// decode — so routing on the peek and batching on the decode can
 /// never disagree.  Any malformed, truncated, or unsupported header
-/// yields `None`; the caller routes those to shard 0, where the full
-/// decoder produces the typed `Decode` error.
+/// yields `None`; the coordinator routes those by an FNV-1a hash of a
+/// byte prefix instead, spreading the decode-error work across the
+/// fleet (see [`ShardedCoordinator::shard_for_payload`]).
 pub fn peek_qvec(bytes: &[u8]) -> Option<[f32; 64]> {
     if bytes.len() < 4 || bytes[0] != 0xFF || bytes[1] != 0xD8 {
         return None;
@@ -125,12 +126,23 @@ pub fn peek_qvec(bytes: &[u8]) -> Option<[f32; 64]> {
     Some(t.map(|v| v as f32))
 }
 
+/// Byte-prefix length the fallback router hashes when [`peek_qvec`]
+/// fails.  Long enough that realistic garbage (random floods, corrupt
+/// headers, wrong-protocol bytes) differs within it; short enough
+/// that routing a multi-megabyte malformed payload stays O(1).
+const PEEK_FAIL_PREFIX: usize = 64;
+
 /// N running pipeline replicas behind a consistent-hash ring.
 pub struct ShardedCoordinator {
     replicas: Vec<Arc<NativePipeline>>,
     ring: HashRing,
     registry: Arc<Registry>,
     tracer: Option<Arc<Tracer>>,
+    /// Requests routed by byte-prefix hash because the headers-only
+    /// qvec peek failed (`jd_route_peek_fail_total`).  A spike here
+    /// under load means a malformed flood — spread across shards, not
+    /// concentrated on replica 0.
+    peek_fail_total: Arc<Counter>,
     /// Coordinator-compatible aggregate — shared instruments across all
     /// replicas (same registry, same names), so it sums the fleet.
     aggregate: Arc<Metrics>,
@@ -168,11 +180,17 @@ impl ShardedCoordinator {
             })
             .collect();
         let aggregate = replicas[0].aggregate().clone();
+        let peek_fail_total = registry.counter(
+            "jd_route_peek_fail_total",
+            "requests routed by byte-prefix hash because the headers-only qvec peek failed",
+            &[],
+        );
         ShardedCoordinator {
             replicas,
             ring: HashRing::new(shards),
             registry,
             tracer,
+            peek_fail_total,
             aggregate,
             warm_targets: (0..shards).map(|_| AtomicBool::new(false)).collect(),
         }
@@ -203,10 +221,27 @@ impl ShardedCoordinator {
         self.ring.shard_for(qvec)
     }
 
-    /// The replica a raw request payload routes to (peek failure →
-    /// shard 0, whose decoder will produce the typed error).
+    /// The replica a raw request payload routes to.  Peekable payloads
+    /// route by quant table (the cache-affinity invariant); payloads
+    /// whose headers don't parse route by an FNV-1a hash of the first
+    /// [`PEEK_FAIL_PREFIX`] bytes, so a malformed-JPEG flood spreads
+    /// its decode-error work across every replica instead of
+    /// concentrating on shard 0 (each one still gets its typed
+    /// `Decode` error from the owning replica's full decoder).
     pub fn shard_for_payload(&self, bytes: &[u8]) -> usize {
-        peek_qvec(bytes).map_or(0, |qv| self.ring.shard_for(&qv))
+        match peek_qvec(bytes) {
+            Some(qv) => self.ring.shard_for(&qv),
+            None => {
+                self.peek_fail_total.inc();
+                let prefix = &bytes[..bytes.len().min(PEEK_FAIL_PREFIX)];
+                self.ring.shard_for_key(HashRing::route_bytes(prefix))
+            }
+        }
+    }
+
+    /// Requests so far that routed through the peek-failure fallback.
+    pub fn peek_failures(&self) -> u64 {
+        self.peek_fail_total.get()
     }
 
     /// Direct access to a replica (tests, warm drivers).
@@ -328,6 +363,36 @@ mod tests {
         }
         // headers end before SOS: no table is better than a wrong one
         assert_eq!(peek_qvec(&good[..4]), None);
+    }
+
+    #[test]
+    fn garbage_payloads_spread_across_shards() {
+        let coord = ShardedCoordinator::start(tiny_engine(), 4, PipelineConfig::default());
+        assert_eq!(coord.peek_failures(), 0);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..64u32 {
+            // unparseable payloads: no SOI marker, distinct bodies
+            let payload = format!("not-a-jpeg-{i}-{}", "x".repeat(i as usize % 40));
+            let s = coord.shard_for_payload(payload.as_bytes());
+            assert!(s < 4);
+            seen.insert(s);
+        }
+        assert!(
+            seen.len() > 1,
+            "a malformed flood must spread, not concentrate on shard 0 (got {seen:?})"
+        );
+        assert_eq!(coord.peek_failures(), 64, "every fallback route is counted");
+        // routing is deterministic: the same garbage re-routes identically
+        let again = coord.shard_for_payload(b"not-a-jpeg-0-");
+        assert_eq!(again, coord.shard_for_payload(b"not-a-jpeg-0-"));
+        // valid payloads still route by quant table and do not count
+        let before = coord.peek_failures();
+        let good = files(1, 75).remove(0);
+        assert_eq!(coord.shard_for_payload(&good), coord.shard_for(&peek_qvec(&good).unwrap()));
+        assert_eq!(coord.peek_failures(), before);
+        // the counter is scrapeable under its wire name
+        assert!(coord.registry().render().contains("jd_route_peek_fail_total"));
+        coord.shutdown();
     }
 
     #[test]

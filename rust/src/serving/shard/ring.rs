@@ -83,6 +83,15 @@ impl HashRing {
         fnv1a(&bytes)
     }
 
+    /// Hash arbitrary bytes to a ring position — the fallback routing
+    /// key when no quant table can be extracted from a payload
+    /// (feed to [`HashRing::shard_for_key`]).  Same deterministic
+    /// FNV-1a as [`HashRing::route_key`], so two router processes
+    /// always agree on where a given garbage payload lands.
+    pub fn route_bytes(bytes: &[u8]) -> u64 {
+        fnv1a(bytes)
+    }
+
     /// The shard owning a raw ring position: first vnode clockwise.
     pub fn shard_for_key(&self, key: u64) -> usize {
         let i = self.points.partition_point(|p| p.0 < key);
@@ -165,5 +174,23 @@ mod tests {
     fn distinct_qvecs_hash_apart() {
         let (a, b) = (QuantTable::luma(50).as_f32(), QuantTable::luma(90).as_f32());
         assert_ne!(HashRing::route_key(&a), HashRing::route_key(&b));
+    }
+
+    #[test]
+    fn byte_routing_is_deterministic_and_spreads() {
+        let ring = HashRing::new(4);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..64 {
+            let payload = format!("garbage-payload-{i}");
+            let s = ring.shard_for_key(HashRing::route_bytes(payload.as_bytes()));
+            assert!(s < 4);
+            assert_eq!(
+                s,
+                ring.shard_for_key(HashRing::route_bytes(payload.as_bytes())),
+                "same bytes, same shard"
+            );
+            seen.insert(s);
+        }
+        assert!(seen.len() > 1, "64 distinct payloads must not pile onto one shard");
     }
 }

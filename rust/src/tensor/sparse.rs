@@ -123,6 +123,21 @@ impl SparseBlocks {
         (bid / (self.bh * self.bw)) % self.c
     }
 
+    /// Narrow a stored-entry count to the `u32` CSR offset space.  The
+    /// `ptr` array deliberately stays `u32` (half the offset-metadata
+    /// bandwidth of `usize` on the hot conv path), so every rebuild
+    /// that appends offsets must funnel through this check — a >4B-nnz
+    /// batch would otherwise wrap silently in release builds and make
+    /// `block()` return garbage slices.
+    #[inline]
+    fn csr_offset(len: usize) -> u32 {
+        assert!(
+            len <= u32::MAX as usize,
+            "SparseBlocks nnz {len} overflows the u32 CSR offset space; split the batch"
+        );
+        len as u32
+    }
+
     /// Append the next block's `(zigzag index, value)` entries.  Blocks
     /// must arrive in dense `(N, C, Bh, Bw)` row-major order; entries
     /// must be ascending in zigzag index.
@@ -136,7 +151,7 @@ impl SparseBlocks {
             self.idx.push(k);
             self.val.push(v);
         }
-        self.ptr.push(self.val.len() as u32);
+        self.ptr.push(Self::csr_offset(self.val.len()));
     }
 
     /// The `(zigzag indices, values)` run of block `bid` (dense block
@@ -162,18 +177,36 @@ impl SparseBlocks {
         idx.last().copied()
     }
 
+    /// Per-block EOB cursors in dense block order: one past the last
+    /// stored zigzag index of each block, `0` for an all-zero block.
+    /// Because runs keep indices ascending this is O(1) per block, and
+    /// every stored coefficient of block `bid` selects an Xi row
+    /// strictly below `block_cursors().nth(bid)` — the invariant the
+    /// per-block band-limited conv kernel
+    /// (`jpeg_domain::conv::XiPanels`) relies on.
+    pub fn block_cursors(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.num_blocks()).map(|bid| self.block_last_nonzero(bid).map_or(0, |k| k as usize + 1))
+    }
+
+    /// Histogram of per-block EOB cursors: `hist[c]` counts blocks
+    /// whose cursor is exactly `c` (cursors range over `0..=64`).
+    /// Lets panel builders pick a quantile cut in O(num_blocks + 64)
+    /// without materializing the cursor list.
+    pub fn cursor_histogram(&self) -> [u32; 65] {
+        let mut hist = [0u32; 65];
+        for cur in self.block_cursors() {
+            hist[cur] += 1;
+        }
+        hist
+    }
+
     /// One past the highest stored zigzag index across *all* blocks —
-    /// the batch-wide EOB cursor (`0` for an all-zero batch).  Because
-    /// runs keep indices ascending, this is the per-block cursor
-    /// [`SparseBlocks::block_last_nonzero`] folded over the batch in
-    /// O(num_blocks), and it bounds the live Xi row panel of the
-    /// band-limited conv kernel (`jpeg_domain::conv::XiBand`): every
-    /// stored coefficient selects an Xi row strictly below it.
+    /// the batch-wide EOB cursor (`0` for an all-zero batch).  This is
+    /// [`SparseBlocks::block_cursors`] folded with `max` over the
+    /// batch, and it bounds the live Xi row panel of the band-limited
+    /// conv kernel when a single batch-global trim is requested.
     pub fn band_cursor(&self) -> usize {
-        (0..self.num_blocks())
-            .filter_map(|bid| self.block_last_nonzero(bid))
-            .max()
-            .map_or(0, |k| k as usize + 1)
+        self.block_cursors().max().unwrap_or(0)
     }
 
     /// Append a block from parallel `(indices, values)` slices — the
@@ -255,7 +288,7 @@ impl SparseBlocks {
                 new_val.push(b[inj[j] as usize]);
                 j += 1;
             }
-            new_ptr.push(new_val.len() as u32);
+            new_ptr.push(Self::csr_offset(new_val.len()));
         }
         self.ptr = new_ptr;
         self.idx = new_idx;
@@ -352,7 +385,7 @@ impl SparseBlocks {
                     j += 1;
                 }
             }
-            out.ptr.push(out.val.len() as u32);
+            out.ptr.push(Self::csr_offset(out.val.len()));
         }
         out
     }
@@ -385,6 +418,9 @@ impl SparseBlocks {
         let mut out = SparseBlocks::with_capacity(n, c, bh, bw, nnz);
         for p in &parts {
             assert_eq!((p.c, p.bh, p.bw), (c, bh, bw), "ragged concat");
+            // Every shifted offset is bounded by the final total, so
+            // one check per part proves `o + base` cannot wrap.
+            Self::csr_offset(out.val.len() + p.nnz());
             let base = out.val.len() as u32;
             out.ptr.extend(p.ptr[1..].iter().map(|&o| o + base));
             out.idx.extend_from_slice(&p.idx);
@@ -493,6 +529,22 @@ mod tests {
         assert_eq!(SparseBlocks::from_dense(&low).band_cursor(), 10);
         let empty = SparseBlocks::from_dense(&Tensor::zeros(&[1, 1, 1, 1, 64]));
         assert_eq!(empty.band_cursor(), 0, "all-zero batch has an empty band");
+    }
+
+    #[test]
+    fn block_cursors_and_histogram_agree_with_per_block_eob() {
+        let s = SparseBlocks::from_dense(&sample_dense());
+        let cursors: Vec<usize> = s.block_cursors().collect();
+        // blocks in dense (N, C, Bh, Bw) order: (0,0,0,0) holds 0 and 5,
+        // (0,0,1,1) holds 63, (1,0,0,1) holds 7, everything else empty
+        assert_eq!(cursors, vec![6, 0, 0, 64, 0, 8, 0, 0]);
+        assert_eq!(s.band_cursor(), *cursors.iter().max().unwrap());
+        let hist = s.cursor_histogram();
+        assert_eq!(hist[0], 5, "five empty blocks");
+        assert_eq!((hist[6], hist[8], hist[64]), (1, 1, 1));
+        assert_eq!(hist.iter().sum::<u32>() as usize, s.num_blocks());
+        let empty = SparseBlocks::from_dense(&Tensor::zeros(&[1, 1, 1, 1, 64]));
+        assert_eq!(empty.block_cursors().collect::<Vec<_>>(), vec![0]);
     }
 
     #[test]

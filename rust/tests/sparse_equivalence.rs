@@ -12,7 +12,7 @@ use jpegdomain::data::{Dataset, Split, SynthKind};
 use jpegdomain::jpeg::codec;
 use jpegdomain::jpeg_domain::conv::{
     explode_conv, jpeg_conv_dcc, jpeg_conv_exploded, jpeg_conv_exploded_dense,
-    jpeg_conv_exploded_sparse, simd_axpy_available, AxpyKernel,
+    jpeg_conv_exploded_sparse, simd_axpy_available, AxpyKernel, RowBand,
 };
 use jpegdomain::jpeg_domain::network::{
     ExplodedModel, ResidencyTrace, RESIDENCY_POINTS, RESNET_PLAN,
@@ -327,7 +327,13 @@ fn simd_logits_within_epsilon_and_argmax_identical() {
         let input = Act::Sparse(f0.clone());
         let run = |axpy: AxpyKernel| {
             RESNET_PLAN.run(
-                &SparseResident { threads: 1, prune_epsilon: 0.0, axpy, band_limited: false },
+                &SparseResident {
+                    threads: 1,
+                    prune_epsilon: 0.0,
+                    axpy,
+                    band_limited: false,
+                    row_band: RowBand::Batch,
+                },
                 &ctx,
                 &input,
                 None,
@@ -380,13 +386,25 @@ fn band_limited_executors_are_bit_identical() {
             };
             let input = Act::Sparse(f0.clone());
             let full = RESNET_PLAN.run(
-                &SparseResident { threads: 1, prune_epsilon: 0.0, axpy: AxpyKernel::Scalar8, band_limited: false },
+                &SparseResident {
+                    threads: 1,
+                    prune_epsilon: 0.0,
+                    axpy: AxpyKernel::Scalar8,
+                    band_limited: false,
+                    row_band: RowBand::Batch,
+                },
                 &ctx,
                 &input,
                 None,
             );
             let limited = RESNET_PLAN.run(
-                &SparseResident { threads: 1, prune_epsilon: 0.0, axpy: AxpyKernel::Scalar8, band_limited: true },
+                &SparseResident {
+                    threads: 1,
+                    prune_epsilon: 0.0,
+                    axpy: AxpyKernel::Scalar8,
+                    band_limited: true,
+                    row_band: RowBand::Batch,
+                },
                 &ctx,
                 &input,
                 None,
@@ -396,13 +414,23 @@ fn band_limited_executors_are_bit_identical() {
                 "quality {quality} nf {num_freqs}: band-limited resident logits drifted"
             );
             let full_k = RESNET_PLAN.run(
-                &SparseKernel { threads: 1, axpy: AxpyKernel::Scalar8, band_limited: false },
+                &SparseKernel {
+                    threads: 1,
+                    axpy: AxpyKernel::Scalar8,
+                    band_limited: false,
+                    row_band: RowBand::Batch,
+                },
                 &ctx,
                 &input,
                 None,
             );
             let limited_k = RESNET_PLAN.run(
-                &SparseKernel { threads: 1, axpy: AxpyKernel::Scalar8, band_limited: true },
+                &SparseKernel {
+                    threads: 1,
+                    axpy: AxpyKernel::Scalar8,
+                    band_limited: true,
+                    row_band: RowBand::Batch,
+                },
                 &ctx,
                 &input,
                 None,
@@ -412,6 +440,137 @@ fn band_limited_executors_are_bit_identical() {
                 "quality {quality} nf {num_freqs}: band-limited sparse-kernel logits drifted"
             );
         }
+    }
+}
+
+/// Rebuild `f0` as the per-block-panel worst case: the first block
+/// carries a full 64-coefficient run (dragging the batch-global cursor
+/// to 64), every other block keeps only its coefficients below zigzag
+/// index 4.
+fn mixed_sparsity(f0: &SparseBlocks, seed: u64) -> SparseBlocks {
+    let (n, c, bh, bw) = f0.dims();
+    let mut rng = Rng::new(seed);
+    let mut out = SparseBlocks::with_capacity(n, c, bh, bw, f0.nnz() + 64);
+    for bid in 0..f0.num_blocks() {
+        let (ks, vs) = f0.block(bid);
+        if bid == 0 {
+            out.push_block((0..64u8).map(|k| {
+                let stored = ks.iter().position(|&i| i == k).map(|t| vs[t]);
+                (k, stored.unwrap_or_else(|| rng.normal() * 0.1))
+            }));
+        } else {
+            out.push_block(
+                ks.iter().zip(vs).take_while(|(&k, _)| k < 4).map(|(&k, &v)| (k, v)),
+            );
+        }
+    }
+    out
+}
+
+#[test]
+fn row_band_modes_bit_identical_on_mixed_sparsity_batches() {
+    // the per-block-cursor acceptance gate: on a batch where one dense
+    // block forces the batch-global Xi trim to all 64 rows while every
+    // other block stops below index 4 — exactly the shape the per-block
+    // panels exist for — full-network logits must agree bit for bit
+    // across all three row-panel modes, for both sparse executors, per
+    // kernel, at every tracked serving quality and at a real phi
+    // truncation.
+    let cfg = slim_cfg();
+    let p = ParamSet::init(&cfg, 31);
+    for quality in [50u8, 75, 90] {
+        let (cis, f0) = quality_fixture(quality, 38);
+        let qvec = cis[0].qvec(0);
+        let mixed = mixed_sparsity(&f0, 39);
+        assert_eq!(mixed.band_cursor(), 64, "outlier block must hit index 63");
+        let em = ExplodedModel::precompute(&p, &qvec);
+        for num_freqs in [15usize, 6] {
+            let ctx = PlanCtx {
+                params: &p,
+                exploded: Some(&em),
+                qvec: &qvec,
+                num_freqs,
+                method: Method::Asm,
+            };
+            let input = Act::Sparse(mixed.clone());
+            for axpy in [AxpyKernel::Scalar8, AxpyKernel::Simd] {
+                let resident = |row_band: RowBand| {
+                    RESNET_PLAN.run(
+                        &SparseResident {
+                            threads: 1,
+                            prune_epsilon: 0.0,
+                            axpy,
+                            band_limited: true,
+                            row_band,
+                        },
+                        &ctx,
+                        &input,
+                        None,
+                    )
+                };
+                let kernel = |row_band: RowBand| {
+                    RESNET_PLAN.run(
+                        &SparseKernel { threads: 1, axpy, band_limited: true, row_band },
+                        &ctx,
+                        &input,
+                        None,
+                    )
+                };
+                let base_r = resident(RowBand::Batch);
+                let base_k = kernel(RowBand::Batch);
+                for rb in [RowBand::PerBlock, RowBand::Tiled] {
+                    assert_eq!(
+                        resident(rb),
+                        base_r,
+                        "quality {quality} nf {num_freqs} {axpy:?} {rb:?}: resident drifted"
+                    );
+                    assert_eq!(
+                        kernel(rb),
+                        base_k,
+                        "quality {quality} nf {num_freqs} {axpy:?} {rb:?}: sparse-kernel drifted"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn row_band_modes_survive_an_all_zero_batch() {
+    // edge case: every block EOB-empty.  The hot panel degenerates to
+    // one row, no block ever touches it, and all three modes must agree
+    // on the (bias + BN only) logits.
+    let cfg = slim_cfg();
+    let p = ParamSet::init(&cfg, 31);
+    let (cis, f0) = quality_fixture(50, 40);
+    let qvec = cis[0].qvec(0);
+    let (n, c, bh, bw) = f0.dims();
+    let mut zero = SparseBlocks::with_capacity(n, c, bh, bw, 0);
+    for _ in 0..f0.num_blocks() {
+        zero.push_block(std::iter::empty());
+    }
+    assert_eq!(zero.band_cursor(), 0);
+    let em = ExplodedModel::precompute(&p, &qvec);
+    let ctx = plan_ctx(&p, Some(&em), &qvec);
+    let input = Act::Sparse(zero);
+    let run = |row_band: RowBand| {
+        RESNET_PLAN.run(
+            &SparseResident {
+                threads: 1,
+                prune_epsilon: 0.0,
+                axpy: AxpyKernel::Scalar8,
+                band_limited: true,
+                row_band,
+            },
+            &ctx,
+            &input,
+            None,
+        )
+    };
+    let base = run(RowBand::Batch);
+    assert_eq!(base.shape(), &[n, 10]);
+    for rb in [RowBand::PerBlock, RowBand::Tiled] {
+        assert_eq!(run(rb), base, "{rb:?} drifted on the all-zero batch");
     }
 }
 
